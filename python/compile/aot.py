@@ -1,0 +1,332 @@
+"""AOT exporter: lowers every model variant to HLO **text** +
+JSON manifest under ``artifacts/``.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+compiles and executes the artifacts via PJRT with no Python anywhere on
+the training/serving path.
+
+HLO text (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--only PREFIX] [--list]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import autoenc, model, optim
+from .specs import param_json, tensor_json
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+# PyTorch AdamW defaults (paper Appendix B.2, reconstruction/AE training).
+ADAMW_DEFAULT = {"lr": 1e-3, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.01}
+# GNN training settings (Appendix C.1, §5.3.2): lr=0.01, wd=0.
+ADAMW_GNN = {"lr": 1e-2, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0}
+
+# ---------------------------------------------------------------------------
+# Variant registry — every artifact the rust side references by name.
+# Scale notes (DESIGN.md §10): CPU-sized dims; relative orderings are the
+# reproduction target, paper dims are used for the analytic memory tables.
+# ---------------------------------------------------------------------------
+
+# (c, m) grid of Table 5 / Appendix B.3. All settings use 128-bit codes.
+CM_GRID = [(2, 128), (4, 64), (16, 32), (256, 16)]
+
+# Reconstruction decoder dims (paper: d_c=d_m=512; scaled to 256 for CPU).
+RECON = {"d_c": 256, "d_m": 256, "d_e": 128, "l": 3, "batch": 512}
+
+# Table-1 scale: n nodes per synthetic OGB analog, shared across datasets
+# so one artifact set serves all of them.
+T1 = {
+    "n": 1024,
+    "n_classes": 8,
+    "d_e": 64,
+    "hidden": 64,
+    "c": 16,
+    "m": 32,
+    "d_c": 128,
+    "d_m": 128,
+    "l": 3,
+    "variant": "full",
+    "e_train": 512,
+    "e_pred": 4096,
+}
+
+# Minibatch GraphSAGE (Figure 4 / e2e example) scale.
+MB = {
+    "n": 10000,
+    "n_classes": 8,
+    "d_e": 64,
+    "hidden": 128,
+    "batch": 256,
+    "k1": 10,
+    "k2": 10,
+    "c": 16,
+    "m": 32,
+    "d_c": 128,
+    "d_m": 128,
+    "l": 3,
+    "variant": "full",
+}
+
+# Merchant-category task (§5.3) scale: categories Zipf-imbalanced, SAGE
+# minibatch, paper hypers c=256, m=16, fanout 5.
+MERCHANT = {
+    "n": 60000,
+    "n_classes": 64,
+    "d_e": 64,
+    "hidden": 128,
+    "batch": 256,
+    "k1": 5,
+    "k2": 5,
+    "c": 256,
+    "m": 16,
+    "d_c": 128,
+    "d_m": 128,
+    "l": 3,
+    "variant": "full",
+}
+
+
+def build_registry():
+    builds = []
+    # §5.1 reconstruction decoders, one per (c, m) of Table 5.
+    for c, m in CM_GRID:
+        builds.append(
+            model.make_recon(
+                f"recon_c{c}_m{m}",
+                c,
+                m,
+                RECON["d_c"],
+                RECON["d_m"],
+                RECON["d_e"],
+                RECON["l"],
+                "full",
+                RECON["batch"],
+                ADAMW_DEFAULT,
+            )
+        )
+    # Light-variant ablation at the Fig-1 default setting.
+    builds.append(
+        model.make_recon(
+            "recon_light_c16_m32",
+            16,
+            32,
+            RECON["d_c"],
+            RECON["d_m"],
+            RECON["d_e"],
+            RECON["l"],
+            "light",
+            RECON["batch"],
+            ADAMW_DEFAULT,
+        )
+    )
+    # Learned-coding baseline (autoencoder) at the Fig-1 default setting.
+    builds.append(
+        autoenc.make_autoencoder(
+            "ae_c16_m32",
+            16,
+            32,
+            RECON["d_c"],
+            RECON["d_m"],
+            RECON["d_e"],
+            RECON["l"],
+            RECON["batch"],
+            ADAMW_DEFAULT,
+        )
+    )
+    # §5.2 Table 1: 4 GNNs × {coded, nc} × {nodeclf, linkpred}.
+    for kind in ("gcn", "sgc", "gin", "sage"):
+        for coded in (True, False):
+            tag = "coded" if coded else "nc"
+            builds.append(
+                model.make_nodeclf_fullbatch(
+                    f"node_fb_{kind}_{tag}",
+                    kind,
+                    coded,
+                    T1["n"],
+                    T1["n_classes"],
+                    T1["d_e"],
+                    T1["hidden"],
+                    T1["c"],
+                    T1["m"],
+                    T1["d_c"],
+                    T1["d_m"],
+                    T1["l"],
+                    T1["variant"],
+                    ADAMW_GNN,
+                )
+            )
+            builds.append(
+                model.make_linkpred_fullbatch(
+                    f"link_fb_{kind}_{tag}",
+                    kind,
+                    coded,
+                    T1["n"],
+                    T1["d_e"],
+                    T1["hidden"],
+                    T1["e_train"],
+                    T1["e_pred"],
+                    T1["c"],
+                    T1["m"],
+                    T1["d_c"],
+                    T1["d_m"],
+                    T1["l"],
+                    T1["variant"],
+                    ADAMW_GNN,
+                )
+            )
+    # §4 minibatch GraphSAGE (Table 1 SAGE rows at scale + e2e example).
+    for coded in (True, False):
+        tag = "coded" if coded else "nc"
+        builds.append(
+            model.make_sage_minibatch(
+                f"sage_mb_{tag}",
+                coded,
+                MB["n"],
+                MB["n_classes"],
+                MB["d_e"],
+                MB["hidden"],
+                MB["batch"],
+                MB["k1"],
+                MB["k2"],
+                MB["c"],
+                MB["m"],
+                MB["d_c"],
+                MB["d_m"],
+                MB["l"],
+                MB["variant"],
+                ADAMW_GNN,
+            )
+        )
+    # §5.3 merchant-category identification (coded only: the paper states
+    # the NC baseline cannot run at this scale).
+    builds.append(
+        model.make_sage_minibatch(
+            "merchant",
+            True,
+            MERCHANT["n"],
+            MERCHANT["n_classes"],
+            MERCHANT["d_e"],
+            MERCHANT["hidden"],
+            MERCHANT["batch"],
+            MERCHANT["k1"],
+            MERCHANT["k2"],
+            MERCHANT["c"],
+            MERCHANT["m"],
+            MERCHANT["d_c"],
+            MERCHANT["d_m"],
+            MERCHANT["l"],
+            MERCHANT["variant"],
+            ADAMW_GNN,
+        )
+    )
+    return builds
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def export_build(build, outdir):
+    specs = build["params"]
+    n_params = len(specs)
+    trainable = [s.trainable for s in specs]
+    hyper = build["hyper"]
+    train_step = optim.make_train_step(build["train_fn"], trainable, hyper["optim"])
+
+    def flat_train(*args):
+        params = args[:n_params]
+        ms = args[n_params : 2 * n_params]
+        vs = args[2 * n_params : 3 * n_params]
+        step = args[3 * n_params]
+        batch = args[3 * n_params + 1 :]
+        return train_step(params, ms, vs, step, *batch)
+
+    param_structs = [_struct(s.shape, "f32") for s in specs]
+    train_batch_structs = [_struct(t.shape, t.dtype) for t in build["train_inputs"]]
+    train_args = (
+        param_structs + param_structs + param_structs + [_struct((), "f32")] + train_batch_structs
+    )
+    # keep_unused: never let jit prune parameter arguments from the HLO
+    # signature (e.g. the AE's decoder params are unused by its encode-only
+    # pred fn) — the rust caller always supplies the full param list.
+    train_hlo = to_hlo_text(jax.jit(flat_train, keep_unused=True).lower(*train_args))
+
+    def flat_pred(*args):
+        params = args[:n_params]
+        batch = args[n_params:]
+        return (build["pred_fn"](list(params), list(batch)),)
+
+    pred_batch_structs = [_struct(t.shape, t.dtype) for t in build["pred_inputs"]]
+    pred_hlo = to_hlo_text(
+        jax.jit(flat_pred, keep_unused=True).lower(*(param_structs + pred_batch_structs))
+    )
+
+    name = build["name"]
+    with open(os.path.join(outdir, f"{name}_train.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(outdir, f"{name}_pred.hlo.txt"), "w") as f:
+        f.write(pred_hlo)
+    manifest = {
+        "name": name,
+        "params": [param_json(s) for s in specs],
+        "train_inputs": [tensor_json(t) for t in build["train_inputs"]],
+        "pred_inputs": [tensor_json(t) for t in build["pred_inputs"]],
+        "pred_output": tensor_json(build["pred_output"]),
+        "hyper": hyper,
+        "train_outputs": "params, ms, vs, loss",
+    }
+    with open(os.path.join(outdir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="export only variants whose name starts with this")
+    ap.add_argument("--list", action="store_true", help="list variant names and exit")
+    args = ap.parse_args()
+
+    builds = build_registry()
+    if args.list:
+        for b in builds:
+            print(b["name"])
+        return
+    os.makedirs(args.out, exist_ok=True)
+    names = []
+    for b in builds:
+        if args.only and not b["name"].startswith(args.only):
+            continue
+        print(f"[aot] lowering {b['name']} ...", flush=True)
+        names.append(export_build(b, args.out))
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"artifacts": sorted(names)}, f, indent=2)
+    print(f"[aot] exported {len(names)} variants to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Learning-based coding baseline (§5.1): a Gumbel-softmax compositional
+autoencoder in the style of Shu & Nakayama (2018).
+
+The encoder maps a pre-trained embedding to ``m`` categorical
+distributions over ``c`` codes; a straight-through Gumbel-softmax sample
+selects codebook rows; the decoder (same structure as the paper's decoder
+MLP) reconstructs the embedding. Gumbel noise arrives as a *uniform* input
+tensor (rust supplies it), keeping the exported HLO PRNG-free.
+
+After training, ``pred`` (= encode) emits hard integer codes via argmax —
+those feed the same reconstruction pipeline as random/hash codes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import decoder
+from .specs import Param, Tensor
+
+TAU = 1.0
+ENC_HIDDEN = 256
+
+
+def ae_param_specs(c, m, d_c, d_m, d_e, l):
+    enc = [
+        Param("enc.w1", (d_e, ENC_HIDDEN)),
+        Param("enc.b1", (ENC_HIDDEN,), init="zeros"),
+        Param("enc.w2", (ENC_HIDDEN, m * c)),
+        Param("enc.b2", (m * c,), init="zeros"),
+    ]
+    dec = decoder.decoder_param_specs(c, m, d_c, d_m, d_e, l, "full")
+    return enc + dec
+
+
+def encode_logits(p, emb, c, m):
+    h = jax.nn.relu(emb @ p["enc.w1"] + p["enc.b1"])
+    return (h @ p["enc.w2"] + p["enc.b2"]).reshape(emb.shape[0], m, c)
+
+
+def make_autoencoder(name, c, m, d_c, d_m, d_e, l, batch, optim):
+    specs = ae_param_specs(c, m, d_c, d_m, d_e, l)
+
+    def train_fn(params, batch_in):
+        p = {s.name: a for s, a in zip(specs, params)}
+        emb, uniform = batch_in
+        logits = encode_logits(p, emb, c, m)  # (B, m, c)
+        gumbel = -jnp.log(-jnp.log(jnp.clip(uniform, 1e-6, 1.0 - 1e-6)))
+        soft = jax.nn.softmax((logits + gumbel) / TAU, axis=-1)
+        hard = jax.nn.one_hot(jnp.argmax(soft, axis=-1), c, dtype=soft.dtype)
+        st = jax.lax.stop_gradient(hard - soft) + soft  # straight-through
+        # Soft codebook lookup: (B, m, c) × (m, c, d_c) -> (B, d_c).
+        gathered = jnp.einsum("bmc,mcd->bd", st, p["dec.books"])
+        h = gathered
+        for i in range(l):
+            w, b = p[f"dec.mlp{i}.w"], p[f"dec.mlp{i}.b"]
+            h = h @ w + b
+            if i < l - 1:
+                h = jax.nn.relu(h)
+        return jnp.mean((h - emb) ** 2)
+
+    def pred_fn(params, batch_in):
+        p = {s.name: a for s, a in zip(specs, params)}
+        (emb,) = batch_in
+        logits = encode_logits(p, emb, c, m)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, m)
+
+    return {
+        "name": name,
+        "params": specs,
+        "train_inputs": [
+            Tensor("emb", (batch, d_e), "f32"),
+            Tensor("uniform", (batch, m, c), "f32"),
+        ],
+        "train_fn": train_fn,
+        "pred_inputs": [Tensor("emb", (batch, d_e), "f32")],
+        "pred_fn": pred_fn,
+        "pred_output": Tensor("codes", (batch, m), "i32"),
+        "hyper": {
+            "task": "autoencoder",
+            "c": c,
+            "m": m,
+            "d_c": d_c,
+            "d_m": d_m,
+            "d_e": d_e,
+            "l": l,
+            "batch": batch,
+            "tau": TAU,
+            "optim": dict(optim),
+        },
+    }

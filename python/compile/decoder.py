@@ -1,0 +1,72 @@
+"""L2 decoder model (paper Section 3.2, Figure 2).
+
+Binary codes arrive already converted to integer vectors ``(B, m)`` (the
+rust coordinator owns the bit-packed store). The decoder is:
+
+    gather+sum over m codebooks (L1 Pallas kernel)
+      -> [light only] elementwise rescale by trainable W0
+      -> l-layer MLP with ReLU between linear layers (L1 Pallas kernels)
+      -> embedding (B, d_e)
+
+Variants (paper):
+  - *light*: codebooks frozen (``trainable=False`` — the optimizer masks
+    their update), W0 trainable;
+  - *full*:  codebooks trainable, no W0.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from .kernels import codebook, mlp
+from .specs import Param
+
+
+def decoder_param_specs(c, m, d_c, d_m, d_e, l, variant, prefix="dec."):
+    """Canonical parameter list. MLP layout: d_c -> d_m -> … -> d_e with
+    ``l`` linear layers (matches the paper's count
+    d_c·d_m + (l−2)·d_m² + d_m·d_e)."""
+    assert l >= 2, "paper assumes l >= 2"
+    assert variant in ("light", "full")
+    specs = [
+        Param(
+            name=prefix + "books",
+            shape=(m, c, d_c),
+            init="normal",
+            # Sum of m rows should land at unit scale.
+            std=1.0 / math.sqrt(m),
+            trainable=(variant == "full"),
+        )
+    ]
+    if variant == "light":
+        specs.append(Param(name=prefix + "w0", shape=(d_c,), init="ones"))
+    dims = [d_c] + [d_m] * (l - 1) + [d_e]
+    for i in range(l):
+        specs.append(Param(name=prefix + f"mlp{i}.w", shape=(dims[i], dims[i + 1])))
+        specs.append(Param(name=prefix + f"mlp{i}.b", shape=(dims[i + 1],), init="zeros"))
+    return specs
+
+
+def decode(p, codes, l, variant, prefix="dec."):
+    """Run the decoder. ``p`` maps param name -> array; ``codes`` is
+    (B, m) int32. Returns (B, d_e)."""
+    h = codebook.gather_sum(codes, p[prefix + "books"])
+    if variant == "light":
+        h = h * p[prefix + "w0"][None, :]
+    for i in range(l):
+        relu = i < l - 1  # ReLU *between* linear layers only
+        h = mlp.linear(h, p[prefix + f"mlp{i}.w"], p[prefix + f"mlp{i}.b"], relu)
+    return h
+
+
+def decode_ref(p, codes, l, variant, prefix="dec."):
+    """Pure-jnp decoder (oracle for python/tests)."""
+    from .kernels import ref
+
+    h = ref.codebook_gather_sum_ref(codes, p[prefix + "books"])
+    if variant == "light":
+        h = h * p[prefix + "w0"][None, :]
+    for i in range(l):
+        relu = i < l - 1
+        h = ref.linear_ref(h, p[prefix + f"mlp{i}.w"], p[prefix + f"mlp{i}.b"], relu)
+    return h

@@ -1,0 +1,196 @@
+"""L2 GNN architectures (paper Section 5.2): GraphSAGE (mean-pool),
+GCN (self-loops + skip connection), SGC (k=2), GIN (2 layers).
+
+Full-batch variants take the node feature matrix ``x (n, d)`` and a dense
+``adj (n, n)`` whose normalization is chosen by the rust driver
+(``sym_norm`` for GCN/SGC, ``row_norm`` for SAGE's mean aggregator,
+``raw`` 0/1 for GIN's sum aggregator — recorded per-artifact in the
+manifest). The minibatch GraphSAGE variant (Section 4 / Figure 4) takes
+fan-out-sampled neighbor features with static shapes.
+
+All parameters follow the specs.Param convention so rust can initialize
+them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .specs import Param
+
+# ---------------------------------------------------------------------------
+# Full-batch architectures
+# ---------------------------------------------------------------------------
+
+
+def gcn_param_specs(d_in, hidden, prefix="gnn."):
+    """2-layer GCN with self-loops (in Â) and linear skip connections."""
+    return [
+        Param(prefix + "w1", (d_in, hidden)),
+        Param(prefix + "s1", (d_in, hidden)),
+        Param(prefix + "b1", (hidden,), init="zeros"),
+        Param(prefix + "w2", (hidden, hidden)),
+        Param(prefix + "s2", (hidden, hidden)),
+        Param(prefix + "b2", (hidden,), init="zeros"),
+    ]
+
+
+def gcn_apply(p, x, adj, prefix="gnn."):
+    h = jax.nn.relu(adj @ (x @ p[prefix + "w1"]) + x @ p[prefix + "s1"] + p[prefix + "b1"])
+    h = jax.nn.relu(adj @ (h @ p[prefix + "w2"]) + h @ p[prefix + "s2"] + p[prefix + "b2"])
+    return h
+
+
+def sgc_param_specs(d_in, hidden, prefix="gnn."):
+    """SGC: logits come from a single linear map of Â²x (k=2, no
+    nonlinearity — Wu et al. 2019)."""
+    return [
+        Param(prefix + "w", (d_in, hidden)),
+        Param(prefix + "b", (hidden,), init="zeros"),
+    ]
+
+
+def sgc_apply(p, x, adj, prefix="gnn."):
+    return (adj @ (adj @ x)) @ p[prefix + "w"] + p[prefix + "b"]
+
+
+def gin_param_specs(d_in, hidden, prefix="gnn."):
+    """2 GIN layers; each layer is MLP((1+eps)·h + Σ_neighbors h) with a
+    2-layer MLP (Xu et al. 2018). eps is trainable."""
+    return [
+        Param(prefix + "eps1", (1,), init="zeros"),
+        Param(prefix + "m1a.w", (d_in, hidden)),
+        Param(prefix + "m1a.b", (hidden,), init="zeros"),
+        Param(prefix + "m1b.w", (hidden, hidden)),
+        Param(prefix + "m1b.b", (hidden,), init="zeros"),
+        Param(prefix + "eps2", (1,), init="zeros"),
+        Param(prefix + "m2a.w", (hidden, hidden)),
+        Param(prefix + "m2a.b", (hidden,), init="zeros"),
+        Param(prefix + "m2b.w", (hidden, hidden)),
+        Param(prefix + "m2b.b", (hidden,), init="zeros"),
+    ]
+
+
+def gin_apply(p, x, adj, prefix="gnn."):
+    def gin_layer(h, eps, wa, ba, wb, bb):
+        z = (1.0 + eps) * h + adj @ h
+        z = jax.nn.relu(z @ wa + ba)
+        return jax.nn.relu(z @ wb + bb)
+
+    h = gin_layer(
+        x,
+        p[prefix + "eps1"][0],
+        p[prefix + "m1a.w"],
+        p[prefix + "m1a.b"],
+        p[prefix + "m1b.w"],
+        p[prefix + "m1b.b"],
+    )
+    return gin_layer(
+        h,
+        p[prefix + "eps2"][0],
+        p[prefix + "m2a.w"],
+        p[prefix + "m2a.b"],
+        p[prefix + "m2b.w"],
+        p[prefix + "m2b.b"],
+    )
+
+
+def sage_fb_param_specs(d_in, hidden, prefix="gnn."):
+    """Full-batch GraphSAGE with mean aggregator:
+    h' = relu(W · concat(h, row_norm(A)·h))."""
+    return [
+        Param(prefix + "w1", (2 * d_in, hidden)),
+        Param(prefix + "b1", (hidden,), init="zeros"),
+        Param(prefix + "w2", (2 * hidden, hidden)),
+        Param(prefix + "b2", (hidden,), init="zeros"),
+    ]
+
+
+def sage_fb_apply(p, x, adj, prefix="gnn."):
+    h = jnp.concatenate([x, adj @ x], axis=-1)
+    h = jax.nn.relu(h @ p[prefix + "w1"] + p[prefix + "b1"])
+    h = jnp.concatenate([h, adj @ h], axis=-1)
+    return jax.nn.relu(h @ p[prefix + "w2"] + p[prefix + "b2"])
+
+
+FULLBATCH = {
+    "gcn": (gcn_param_specs, gcn_apply, "sym_norm"),
+    "sgc": (sgc_param_specs, sgc_apply, "sym_norm"),
+    "gin": (gin_param_specs, gin_apply, "raw"),
+    "sage": (sage_fb_param_specs, sage_fb_apply, "row_norm"),
+}
+
+# ---------------------------------------------------------------------------
+# Minibatch GraphSAGE (Section 4 / Figure 4)
+# ---------------------------------------------------------------------------
+
+
+def sage_mb_param_specs(d_in, hidden, prefix="gnn."):
+    """2-layer minibatch GraphSAGE with mean pooling over sampled
+    neighbors; layers follow Figure 4 (Aggregate → concat → linear →
+    ReLU)."""
+    return [
+        Param(prefix + "w1", (2 * d_in, hidden)),
+        Param(prefix + "b1", (hidden,), init="zeros"),
+        Param(prefix + "w2", (2 * hidden, hidden)),
+        Param(prefix + "b2", (hidden,), init="zeros"),
+    ]
+
+
+def sage_mb_apply(p, x_b, x_h1, x_h2, prefix="gnn."):
+    """x_b (B, d), x_h1 (B, K1, d), x_h2 (B, K1, K2, d) -> (B, hidden)."""
+
+    def layer1(node, nbrs):
+        # node (..., d); nbrs (..., K, d)
+        agg = jnp.mean(nbrs, axis=-2)
+        h = jnp.concatenate([node, agg], axis=-1)
+        return jax.nn.relu(h @ p[prefix + "w1"] + p[prefix + "b1"])
+
+    l1_h1 = layer1(x_h1, x_h2)  # (B, K1, hidden)
+    l1_b = layer1(x_b, x_h1)  # (B, hidden)
+    agg2 = jnp.mean(l1_h1, axis=1)
+    h = jnp.concatenate([l1_b, agg2], axis=-1)
+    return jax.nn.relu(h @ p[prefix + "w2"] + p[prefix + "b2"])
+
+
+# ---------------------------------------------------------------------------
+# Heads / losses
+# ---------------------------------------------------------------------------
+
+
+def head_param_specs(hidden, n_out, prefix="head."):
+    return [
+        Param(prefix + "w", (hidden, n_out)),
+        Param(prefix + "b", (n_out,), init="zeros"),
+    ]
+
+
+def head_apply(p, h, prefix="head."):
+    return h @ p[prefix + "w"] + p[prefix + "b"]
+
+
+def masked_cross_entropy(logits, labels, mask):
+    """Mean CE over mask (full-batch node classification)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def edge_scores(h, edges):
+    """Dot-product edge scorer: edges (E, 2) int32 -> (E,)."""
+    hu = jnp.take(h, edges[:, 0], axis=0)
+    hv = jnp.take(h, edges[:, 1], axis=0)
+    return jnp.sum(hu * hv, axis=-1)
+
+
+def bce_link_loss(h, pos_edges, neg_edges):
+    pos = edge_scores(h, pos_edges)
+    neg = edge_scores(h, neg_edges)
+    # Numerically-stable BCE-with-logits.
+    pos_loss = jnp.mean(jax.nn.softplus(-pos))
+    neg_loss = jnp.mean(jax.nn.softplus(neg))
+    return pos_loss + neg_loss

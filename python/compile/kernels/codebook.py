@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: codebook gather + sum (the decoder's front half,
+paper Fig. 2).
+
+Maps each row of integer codes ``(B, m)`` to the sum of the indexed rows of
+``m`` codebooks ``(m, c, d_c)``. Exposed as :func:`gather_sum`, a
+``jax.custom_vjp`` so the surrounding L2 model can be differentiated (the
+cotangent w.r.t. the codebooks is a scatter-add, also a Pallas kernel;
+codes are integral and get no gradient).
+
+TPU mapping (DESIGN.md §3): the grid tiles the batch (``block_b`` rows per
+step) while the codebooks stay VMEM-resident across grid steps —
+``m·c·d_c·4`` bytes, ≤8 MB for every configuration in the paper. Two
+in-kernel gather strategies:
+
+- ``onehot`` — one-hot matmul per codebook, MXU-friendly for small ``c``;
+- ``take``   — vector gather, better for large ``c`` (e.g. 256).
+
+Kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); structure, not interpret-mode wallclock, is what carries to
+TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows per grid step. 128 keeps the working set
+# (block_b·(m + d_c)·4B + codebooks) well under VMEM while filling the
+# 8×128 VPU lanes.
+DEFAULT_BLOCK_B = 128
+
+# Below this cardinality the one-hot matmul beats the gather on MXU.
+ONEHOT_MAX_C = 16
+
+
+def _fwd_kernel(codes_ref, books_ref, o_ref, *, use_onehot):
+    codes = codes_ref[...]  # (block_b, m)
+    books = books_ref[...]  # (m, c, d_c)
+    m, c, _d = books.shape
+    acc = jnp.zeros((codes.shape[0], books.shape[2]), jnp.float32)
+    for i in range(m):  # static unroll: m is a compile-time constant
+        if use_onehot:
+            onehot = jax.nn.one_hot(codes[:, i], c, dtype=jnp.float32)
+            acc = acc + onehot @ books[i]
+        else:
+            acc = acc + jnp.take(books[i], codes[:, i], axis=0)
+    o_ref[...] = acc
+
+
+def _bwd_kernel(codes_ref, g_ref, gbooks_ref):
+    codes = codes_ref[...]  # (B, m)
+    g = g_ref[...]  # (B, d_c)
+    m, c, d = gbooks_ref.shape
+    out = jnp.zeros((m, c, d), jnp.float32)
+    for i in range(m):
+        onehot = jax.nn.one_hot(codes[:, i], c, dtype=jnp.float32)  # (B, c)
+        out = out.at[i].add(onehot.T @ g)
+    gbooks_ref[...] = out
+
+
+def _pad_to_multiple(x, multiple):
+    b = x.shape[0]
+    rem = b % multiple
+    if rem == 0:
+        return x, b
+    pad = multiple - rem
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0), b
+
+
+def _gather_sum_fwd_impl(codes, books, block_b):
+    b, m = codes.shape
+    _m, c, d = books.shape
+    use_onehot = c <= ONEHOT_MAX_C
+    padded, orig_b = _pad_to_multiple(codes, block_b)
+    grid = padded.shape[0] // block_b
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, use_onehot=use_onehot),
+        grid=(grid,),
+        in_specs=[
+            # batch tile advances with the grid...
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            # ...codebooks are replicated (VMEM-resident across steps).
+            pl.BlockSpec((m, c, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[0], d), jnp.float32),
+        interpret=True,
+    )(padded, books)
+    return out[:orig_b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def gather_sum(codes, books, block_b=DEFAULT_BLOCK_B):
+    """``out[b] = Σ_i books[i, codes[b, i], :]`` — (B, d_c)."""
+    return _gather_sum_fwd_impl(codes, books, block_b)
+
+
+def _gather_sum_vjp_fwd(codes, books, block_b):
+    return _gather_sum_fwd_impl(codes, books, block_b), (codes, books.shape)
+
+
+def _gather_sum_vjp_bwd(block_b, res, g):
+    codes, books_shape = res
+    gbooks = pl.pallas_call(
+        _bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(books_shape, jnp.float32),
+        interpret=True,
+    )(codes, g)
+    return None, gbooks
+
+
+gather_sum.defvjp(_gather_sum_vjp_fwd, _gather_sum_vjp_bwd)
+
+
+def vmem_bytes(block_b, m, c, d_c):
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §9):
+    code tile + codebooks + accumulator/output tile, f32."""
+    return 4 * (block_b * m + m * c * d_c + 2 * block_b * d_c)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: blocked random projection ``U = A @ V`` (Algorithm 1
+lines 7-8) for the *dense* auxiliary path (pre-trained embeddings).
+
+The production encoder is the streaming rust implementation (DESIGN.md §8);
+this kernel demonstrates how the projection maps to a TPU tile schedule
+(rows of ``A`` stream HBM→VMEM block by block, the projection block ``V``
+stays resident) and backs the kernel-level benches. Encoding is a one-shot
+preprocessing step, so no VJP is needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _proj_kernel(a_ref, v_ref, o_ref):
+    o_ref[...] = a_ref[...] @ v_ref[...]
+
+
+def project(aux, vs, block_n=DEFAULT_BLOCK_N):
+    """``(n, d) @ (d, k) -> (n, k)`` with the row dimension tiled.
+
+    ``vs`` holds one random vector per *output bit* of Algorithm 1; a block
+    of bits shares a single pass over ``A`` (the paper's memory argument
+    bounds the live set to ``V`` and ``U`` — here ``k·d`` and ``block_n·k``
+    floats).
+    """
+    n, d = aux.shape
+    k = vs.shape[1]
+    rem = n % block_n
+    if rem:
+        pad = block_n - rem
+        aux = jnp.concatenate([aux, jnp.zeros((pad, d), aux.dtype)], axis=0)
+    grid = aux.shape[0] // block_n
+    out = pl.pallas_call(
+        _proj_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((aux.shape[0], k), jnp.float32),
+        interpret=True,
+    )(aux, vs)
+    return out[:n]
+
+
+def vmem_bytes(block_n, d, k):
+    """Per-grid-step VMEM estimate: A tile + V + U tile, f32."""
+    return 4 * (block_n * d + d * k + block_n * k)

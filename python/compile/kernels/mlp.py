@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: fused dense layer ``relu?(x @ w + b)`` — the decoder
+MLP's building block (paper Fig. 2, right half).
+
+The grid tiles the batch; ``w``/``b`` stay VMEM-resident across grid steps
+(d_c×d_m ≤ 512×512×4B = 1 MB per layer at paper dims). The matmul shape
+(block_b × d_in)·(d_in × d_out) is MXU-systolic-friendly at the chosen
+dims (multiples of 128 lanes).
+
+``linear`` is a ``jax.custom_vjp``: dx/dw/db are themselves Pallas matmul
+kernels, so the whole decoder fwd+bwd lowers through L1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    y = x @ w_ref[...] + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _pad_rows(x, multiple):
+    b = x.shape[0]
+    rem = b % multiple
+    if rem == 0:
+        return x, b
+    pad = multiple - rem
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0), b
+
+
+def _linear_impl(x, w, b, relu, block_b):
+    d_in, d_out = w.shape
+    padded, orig_b = _pad_rows(x, block_b)
+    grid = padded.shape[0] // block_b
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[0], d_out), jnp.float32),
+        interpret=True,
+    )(padded, w, b)
+    return out[:orig_b]
+
+
+def _matmul(a, b):
+    """Unblocked Pallas matmul used by the backward pass."""
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def linear(x, w, b, relu=False, block_b=DEFAULT_BLOCK_B):
+    """Fused dense layer: ``relu?(x @ w + b)``."""
+    return _linear_impl(x, w, b, relu, block_b)
+
+
+def _linear_vjp_fwd(x, w, b, relu, block_b):
+    y = _linear_impl(x, w, b, relu, block_b)
+    # For the ReLU backward we need the activation mask; y > 0 encodes it.
+    return y, (x, w, y if relu else None)
+
+
+def _linear_vjp_bwd(relu, block_b, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = _matmul(g, w.T)
+    dw = _matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_vjp_fwd, _linear_vjp_bwd)
+
+
+def vmem_bytes(block_b, d_in, d_out):
+    """Static per-grid-step VMEM estimate: x tile + weights + bias + out
+    tile, f32."""
+    return 4 * (block_b * d_in + d_in * d_out + d_out + block_b * d_out)

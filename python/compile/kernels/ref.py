@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+signal: ``pytest python/tests`` asserts kernel == ref to float tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def codebook_gather_sum_ref(codes, books):
+    """Decoder front-end (paper Fig. 2): sum of one codebook row per code
+    element.
+
+    codes: (B, m) int32 in [0, c)
+    books: (m, c, d_c) float32
+    returns (B, d_c) float32
+    """
+    m = books.shape[0]
+    return sum(jnp.take(books[i], codes[:, i], axis=0) for i in range(m))
+
+
+def codebook_gather_sum_grad_ref(codes, g, books_shape):
+    """VJP of the gather-sum w.r.t. the codebooks: scatter-add of the
+    output cotangent into the indexed rows."""
+    m, c, _d = books_shape
+    out = jnp.zeros(books_shape, jnp.float32)
+    for i in range(m):
+        onehot = jax.nn.one_hot(codes[:, i], c, dtype=jnp.float32)  # (B, c)
+        out = out.at[i].add(onehot.T @ g)
+    return out
+
+
+def linear_ref(x, w, b, relu):
+    """Dense layer: ``relu?(x @ w + b)``.
+
+    x: (B, d_in), w: (d_in, d_out), b: (d_out,)
+    """
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def lsh_project_ref(aux, vs):
+    """Random-projection block (Algorithm 1 lines 7-8, blocked over bits):
+    ``U = A @ V`` for a block of random vectors.
+
+    aux: (n, d), vs: (d, k) -> (n, k)
+    """
+    return aux @ vs
+
+
+def lsh_bits_ref(aux, vs):
+    """Full dense-aux encode reference: project then binarize at the
+    per-column median (paper's threshold choice)."""
+    u = lsh_project_ref(aux, vs)  # (n, k)
+    med = jnp.median(u, axis=0, keepdims=True)
+    return u > med

@@ -1,0 +1,296 @@
+"""L2 task assembly: every AOT-exported executable is built here.
+
+Each ``make_*`` function returns the build dict described in
+``specs.py``. ``aot.py`` turns a build into two artifacts:
+
+  <name>_train.hlo.txt   (params, ms, vs, step, *batch) ->
+                         (*params', *ms', *vs', loss)
+  <name>_pred.hlo.txt    (params, *pred_batch) -> prediction
+
+plus a JSON manifest with parameter specs (order = rust init order),
+input/output tensor specs, and hyper-parameters.
+"""
+
+import jax.numpy as jnp
+
+from . import decoder, gnn
+from .specs import Param, Tensor
+
+
+def pdict(specs, arrays):
+    """Zip canonical param specs with their arrays."""
+    return {s.name: a for s, a in zip(specs, arrays)}
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — pre-trained embedding reconstruction
+# ---------------------------------------------------------------------------
+
+
+def make_recon(name, c, m, d_c, d_m, d_e, l, variant, batch, optim):
+    """Decoder trained with MSE against pre-trained embeddings
+    (§5.1.2). Codes come from any coder (random / hash / learned) — they
+    are runtime inputs, so one executable serves all coding schemes."""
+    specs = decoder.decoder_param_specs(c, m, d_c, d_m, d_e, l, variant)
+
+    def train_fn(params, batch_in):
+        p = pdict(specs, params)
+        codes, target = batch_in
+        recon = decoder.decode(p, codes, l, variant)
+        return jnp.mean((recon - target) ** 2)
+
+    def pred_fn(params, batch_in):
+        p = pdict(specs, params)
+        (codes,) = batch_in
+        return decoder.decode(p, codes, l, variant)
+
+    return {
+        "name": name,
+        "params": specs,
+        "train_inputs": [
+            Tensor("codes", (batch, m), "i32"),
+            Tensor("target", (batch, d_e), "f32"),
+        ],
+        "train_fn": train_fn,
+        "pred_inputs": [Tensor("codes", (batch, m), "i32")],
+        "pred_fn": pred_fn,
+        "pred_output": Tensor("embedding", (batch, d_e), "f32"),
+        "hyper": {
+            "task": "recon",
+            "c": c,
+            "m": m,
+            "d_c": d_c,
+            "d_m": d_m,
+            "d_e": d_e,
+            "l": l,
+            "variant": variant,
+            "batch": batch,
+            "optim": dict(optim),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# §5.2 — full-batch node classification / link prediction
+# ---------------------------------------------------------------------------
+
+
+def _features(coded, specs, params, batch_in, l, variant):
+    """Shared feature front-end: decode codes (compressed path) or slice
+    the explicit embedding table (NC baseline)."""
+    p = pdict(specs, params)
+    if coded:
+        codes = batch_in[0]
+        x = decoder.decode(p, codes, l, variant)
+        rest = batch_in[1:]
+    else:
+        x = p["embed.table"]
+        rest = batch_in
+    return p, x, rest
+
+
+def _embed_specs(coded, n, d_e, c, m, d_c, d_m, l, variant):
+    if coded:
+        return decoder.decoder_param_specs(c, m, d_c, d_m, d_e, l, variant)
+    return [Param("embed.table", (n, d_e), init="normal", std=0.1)]
+
+
+def make_nodeclf_fullbatch(
+    name, kind, coded, n, n_classes, d_e, hidden, c, m, d_c, d_m, l, variant, optim
+):
+    """Full-batch node classification (ogbn-* analogs): GCN / SGC / GIN /
+    SAGE over dense adj, masked CE loss."""
+    gnn_specs_fn, gnn_apply, adj_kind = gnn.FULLBATCH[kind]
+    specs = (
+        _embed_specs(coded, n, d_e, c, m, d_c, d_m, l, variant)
+        + gnn_specs_fn(d_e, hidden)
+        + gnn.head_param_specs(hidden, n_classes)
+    )
+
+    def logits_fn(params, batch_in):
+        p, x, rest = _features(coded, specs, params, batch_in, l, variant)
+        adj = rest[0]
+        h = gnn_apply(p, x, adj)
+        return p, gnn.head_apply(p, h), rest
+
+    def train_fn(params, batch_in):
+        _p, logits, rest = logits_fn(params, batch_in)
+        _adj, labels, mask = rest
+        return gnn.masked_cross_entropy(logits, labels, mask)
+
+    def pred_fn(params, batch_in):
+        _p, logits, _rest = logits_fn(params, batch_in)
+        return logits
+
+    code_in = [Tensor("codes", (n, m), "i32")] if coded else []
+    return {
+        "name": name,
+        "params": specs,
+        "train_inputs": code_in
+        + [
+            Tensor("adj", (n, n), "f32"),
+            Tensor("labels", (n,), "i32"),
+            Tensor("mask", (n,), "f32"),
+        ],
+        "train_fn": train_fn,
+        "pred_inputs": code_in + [Tensor("adj", (n, n), "f32")],
+        "pred_fn": pred_fn,
+        "pred_output": Tensor("logits", (n, n_classes), "f32"),
+        "hyper": {
+            "task": "nodeclf_fullbatch",
+            "gnn": kind,
+            "adj": adj_kind,
+            "coded": coded,
+            "n": n,
+            "n_classes": n_classes,
+            "d_e": d_e,
+            "hidden": hidden,
+            "c": c,
+            "m": m,
+            "d_c": d_c,
+            "d_m": d_m,
+            "l": l,
+            "variant": variant,
+            "optim": dict(optim),
+        },
+    }
+
+
+def make_linkpred_fullbatch(
+    name, kind, coded, n, d_e, hidden, e_train, e_pred, c, m, d_c, d_m, l, variant, optim
+):
+    """Full-batch link prediction (ogbl-* analogs): encoder + dot-product
+    scorer, BCE over sampled positive/negative edge batches."""
+    gnn_specs_fn, gnn_apply, adj_kind = gnn.FULLBATCH[kind]
+    specs = _embed_specs(coded, n, d_e, c, m, d_c, d_m, l, variant) + gnn_specs_fn(d_e, hidden)
+
+    def encode_nodes(params, batch_in):
+        p, x, rest = _features(coded, specs, params, batch_in, l, variant)
+        adj = rest[0]
+        return gnn_apply(p, x, adj), rest
+
+    def train_fn(params, batch_in):
+        h, rest = encode_nodes(params, batch_in)
+        _adj, pos, neg = rest
+        return gnn.bce_link_loss(h, pos, neg)
+
+    def pred_fn(params, batch_in):
+        h, rest = encode_nodes(params, batch_in)
+        _adj, edges = rest
+        return gnn.edge_scores(h, edges)
+
+    code_in = [Tensor("codes", (n, m), "i32")] if coded else []
+    return {
+        "name": name,
+        "params": specs,
+        "train_inputs": code_in
+        + [
+            Tensor("adj", (n, n), "f32"),
+            Tensor("pos_edges", (e_train, 2), "i32"),
+            Tensor("neg_edges", (e_train, 2), "i32"),
+        ],
+        "train_fn": train_fn,
+        "pred_inputs": code_in
+        + [Tensor("adj", (n, n), "f32"), Tensor("edges", (e_pred, 2), "i32")],
+        "pred_fn": pred_fn,
+        "pred_output": Tensor("scores", (e_pred,), "f32"),
+        "hyper": {
+            "task": "linkpred_fullbatch",
+            "gnn": kind,
+            "adj": adj_kind,
+            "coded": coded,
+            "n": n,
+            "d_e": d_e,
+            "hidden": hidden,
+            "e_train": e_train,
+            "e_pred": e_pred,
+            "c": c,
+            "m": m,
+            "d_c": d_c,
+            "d_m": d_m,
+            "l": l,
+            "variant": variant,
+            "optim": dict(optim),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# §4 / §5.3 — minibatch GraphSAGE (industrial path)
+# ---------------------------------------------------------------------------
+
+
+def make_sage_minibatch(
+    name, coded, n, n_classes, d_e, hidden, batch, k1, k2, c, m, d_c, d_m, l, variant, optim
+):
+    """Minibatch GraphSAGE node classification (Figure 4): fan-out-sampled
+    two-hop neighborhoods, embeddings from the decoder (compressed) or an
+    explicit n×d_e table (NC). Serves Table 1's SAGE rows, the §5.3
+    merchant task, and the end-to-end example."""
+    specs = (
+        _embed_specs(coded, n, d_e, c, m, d_c, d_m, l, variant)
+        + gnn.sage_mb_param_specs(d_e, hidden)
+        + gnn.head_param_specs(hidden, n_classes)
+    )
+
+    def embed(p, ids_or_codes, count):
+        if coded:
+            return decoder.decode(p, ids_or_codes, l, variant)
+        return jnp.take(p["embed.table"], ids_or_codes, axis=0)
+
+    def logits_fn(params, batch_in):
+        p = pdict(specs, params)
+        xb = embed(p, batch_in[0], batch)  # (B, d_e)
+        xh1 = embed(p, batch_in[1], batch * k1).reshape(batch, k1, d_e)
+        xh2 = embed(p, batch_in[2], batch * k1 * k2).reshape(batch, k1, k2, d_e)
+        h = gnn.sage_mb_apply(p, xb, xh1, xh2)
+        return p, gnn.head_apply(p, h)
+
+    def train_fn(params, batch_in):
+        _p, logits = logits_fn(params, batch_in)
+        labels = batch_in[3]
+        return gnn.cross_entropy(logits, labels)
+
+    def pred_fn(params, batch_in):
+        _p, logits = logits_fn(params, batch_in)
+        return logits
+
+    if coded:
+        node_inputs = [
+            Tensor("codes_b", (batch, m), "i32"),
+            Tensor("codes_h1", (batch * k1, m), "i32"),
+            Tensor("codes_h2", (batch * k1 * k2, m), "i32"),
+        ]
+    else:
+        node_inputs = [
+            Tensor("ids_b", (batch,), "i32"),
+            Tensor("ids_h1", (batch * k1,), "i32"),
+            Tensor("ids_h2", (batch * k1 * k2,), "i32"),
+        ]
+    return {
+        "name": name,
+        "params": specs,
+        "train_inputs": node_inputs + [Tensor("labels", (batch,), "i32")],
+        "train_fn": train_fn,
+        "pred_inputs": list(node_inputs),
+        "pred_fn": pred_fn,
+        "pred_output": Tensor("logits", (batch, n_classes), "f32"),
+        "hyper": {
+            "task": "sage_minibatch",
+            "coded": coded,
+            "n": n,
+            "n_classes": n_classes,
+            "d_e": d_e,
+            "hidden": hidden,
+            "batch": batch,
+            "k1": k1,
+            "k2": k2,
+            "c": c,
+            "m": m,
+            "d_c": d_c,
+            "d_m": d_m,
+            "l": l,
+            "variant": variant,
+            "optim": dict(optim),
+        },
+    }

@@ -1,0 +1,58 @@
+"""Functional AdamW (Loshchilov & Hutter 2018), lowered *inside* every
+train-step executable so one PJRT call performs fwd + bwd + update.
+
+State (first/second moments) and the step counter live in rust and are
+threaded through each call; non-trainable params (light decoder codebooks,
+Table 2's off-GPU storage argument) are masked out of both the gradient
+update and the decoupled weight decay.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_update(params, grads, ms, vs, step, hyper, trainable):
+    """One AdamW step over aligned lists of arrays.
+
+    step: f32 scalar tensor holding the number of *completed* steps.
+    hyper: dict with lr, beta1, beta2, eps, weight_decay (python floats,
+    burned into the executable; recorded in the manifest).
+    trainable: list of python bools (static).
+    """
+    lr = hyper["lr"]
+    b1 = hyper["beta1"]
+    b2 = hyper["beta2"]
+    eps = hyper["eps"]
+    wd = hyper["weight_decay"]
+    t = step + 1.0
+    new_params, new_ms, new_vs = [], [], []
+    for p, g, m, v, trn in zip(params, grads, ms, vs, trainable):
+        if not trn:
+            new_params.append(p)
+            new_ms.append(m)
+            new_vs.append(v)
+            continue
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * (g * g)
+        mhat = m / (1.0 - jnp.power(b1, t))
+        vhat = v / (1.0 - jnp.power(b2, t))
+        update = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+        new_params.append(p - lr * update)
+        new_ms.append(m)
+        new_vs.append(v)
+    return new_params, new_ms, new_vs
+
+
+def make_train_step(loss_fn, trainable, hyper):
+    """Wrap ``loss_fn(params, batch) -> scalar`` into the executable's
+    signature: ``(params, ms, vs, step, *batch) ->
+    (*new_params, *new_ms, *new_vs, loss)``."""
+
+    def train_step(params, ms, vs, step, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), list(batch))
+        new_params, new_ms, new_vs = adamw_update(
+            list(params), grads, list(ms), list(vs), step, hyper, trainable
+        )
+        return tuple(new_params) + tuple(new_ms) + tuple(new_vs) + (loss,)
+
+    return train_step

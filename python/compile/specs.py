@@ -1,0 +1,63 @@
+"""Shared spec types for the AOT bridge.
+
+A *model build* is a plain dict the exporter understands:
+
+    {
+      "name":            str,
+      "params":          [Param, ...]           # canonical order
+      "train_inputs":    [Tensor, ...],         # batch inputs of train step
+      "train_fn":        f(param_arrays, batch_arrays) -> scalar loss,
+      "pred_inputs":     [Tensor, ...],
+      "pred_fn":         f(param_arrays, batch_arrays) -> array,
+      "pred_output":     Tensor,                # shape/dtype of pred_fn out
+      "hyper":           dict,                  # recorded in the manifest
+    }
+
+The rust side re-creates parameter buffers from the manifest (same order,
+same init rules), so ``Param.init`` must stay in sync with
+``rust/src/params``.
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Param:
+    """One parameter tensor.
+
+    init kinds (mirrored by rust/src/params):
+      - ``xavier_uniform``: U(-a, a), a = sqrt(6 / (fan_in + fan_out))
+        with fan_in/fan_out = first/last shape dims,
+      - ``normal``: N(0, std²),
+      - ``zeros`` / ``ones``.
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str = "xavier_uniform"
+    std: float = 0.0
+    trainable: bool = True
+
+
+@dataclass(frozen=True)
+class Tensor:
+    """One non-parameter input or output tensor."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = "f32"  # "f32" | "i32"
+
+
+def param_json(p: Param) -> dict:
+    return {
+        "name": p.name,
+        "shape": list(p.shape),
+        "init": p.init,
+        "std": p.std,
+        "trainable": p.trainable,
+    }
+
+
+def tensor_json(t: Tensor) -> dict:
+    return {"name": t.name, "shape": list(t.shape), "dtype": t.dtype}

@@ -1,0 +1,110 @@
+"""AOT exporter contract tests: registry coverage, manifest schema, and a
+real lowering round-trip (HLO text non-empty, parseable header, manifest
+consistent with the build)."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+def test_registry_covers_every_experiment_family():
+    names = [b["name"] for b in aot.build_registry()]
+    # §5.1 reconstruction decoders for the full Table-5 (c,m) grid.
+    for c, m in aot.CM_GRID:
+        assert f"recon_c{c}_m{m}" in names
+    # Baselines and ablations.
+    assert "ae_c16_m32" in names
+    assert "recon_light_c16_m32" in names
+    # §5.2 Table-1 grid: 4 GNNs × coded/nc × nodeclf/linkpred.
+    for kind in ("gcn", "sgc", "gin", "sage"):
+        for tag in ("coded", "nc"):
+            assert f"node_fb_{kind}_{tag}" in names
+            assert f"link_fb_{kind}_{tag}" in names
+    # §4 minibatch pipeline + §5.3 merchant task.
+    assert "sage_mb_coded" in names and "sage_mb_nc" in names
+    assert "merchant" in names
+    # No duplicate names (rust loads by name).
+    assert len(names) == len(set(names))
+
+
+def test_registry_shapes_are_consistent():
+    for b in aot.build_registry():
+        param_names = [p.name for p in b["params"]]
+        assert len(param_names) == len(set(param_names)), b["name"]
+        for p in b["params"]:
+            assert all(dim > 0 for dim in p.shape), (b["name"], p.name)
+            assert p.init in ("xavier_uniform", "normal", "zeros", "ones")
+        for t in b["train_inputs"] + b["pred_inputs"]:
+            assert t.dtype in ("f32", "i32"), (b["name"], t.name)
+        hyper = b["hyper"]
+        assert "optim" in hyper and "lr" in hyper["optim"], b["name"]
+
+
+def test_coded_variants_code_inputs_match_cm():
+    for b in aot.build_registry():
+        h = b["hyper"]
+        if h.get("task") == "recon":
+            codes = b["train_inputs"][0]
+            assert codes.shape == (h["batch"], h["m"])
+        if h.get("task") == "sage_minibatch" and h.get("coded"):
+            cb, ch1, ch2 = b["train_inputs"][:3]
+            assert cb.shape == (h["batch"], h["m"])
+            assert ch1.shape == (h["batch"] * h["k1"], h["m"])
+            assert ch2.shape == (h["batch"] * h["k1"] * h["k2"], h["m"])
+
+
+@pytest.mark.parametrize("prefix", ["recon_c16_m32", "ae_c16_m32"])
+def test_export_roundtrip(prefix):
+    builds = [b for b in aot.build_registry() if b["name"] == prefix]
+    assert len(builds) == 1
+    with tempfile.TemporaryDirectory() as tmp:
+        name = aot.export_build(builds[0], tmp)
+        train_path = os.path.join(tmp, f"{name}_train.hlo.txt")
+        pred_path = os.path.join(tmp, f"{name}_pred.hlo.txt")
+        with open(train_path) as f:
+            train_hlo = f.read()
+        with open(pred_path) as f:
+            pred_hlo = f.read()
+        # HLO text sanity: module header + entry computation present.
+        assert train_hlo.startswith("HloModule"), train_hlo[:40]
+        assert pred_hlo.startswith("HloModule")
+        assert "ENTRY" in train_hlo and "ENTRY" in pred_hlo
+        with open(os.path.join(tmp, f"{name}.json")) as f:
+            manifest = json.load(f)
+        assert manifest["name"] == name
+        assert len(manifest["params"]) == len(builds[0]["params"])
+        # Param order in the manifest must match the build order exactly
+        # (it defines the executable argument order for rust).
+        for spec, rec in zip(builds[0]["params"], manifest["params"]):
+            assert rec["name"] == spec.name
+            assert tuple(rec["shape"]) == tuple(spec.shape)
+
+
+def test_train_arg_count_matches_convention():
+    """The exported train step takes 3P+1+B args and returns 3P+1 values
+    — the contract rust/src/params relies on."""
+    import jax
+
+    builds = [b for b in aot.build_registry() if b["name"] == "recon_c16_m32"]
+    b = builds[0]
+    n_params = len(b["params"])
+    import jax.numpy as jnp
+
+    from compile import optim
+
+    step_fn = optim.make_train_step(
+        b["train_fn"], [s.trainable for s in b["params"]], b["hyper"]["optim"]
+    )
+    params = [jnp.zeros(s.shape, jnp.float32) for s in b["params"]]
+    zeros = [jnp.zeros(s.shape, jnp.float32) for s in b["params"]]
+    batch = [
+        jnp.zeros(t.shape, jnp.int32 if t.dtype == "i32" else jnp.float32)
+        for t in b["train_inputs"]
+    ]
+    out = step_fn(params, zeros, zeros, jnp.float32(0), *batch)
+    assert len(out) == 3 * n_params + 1
+    assert out[-1].shape == ()

@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the session testing contract; every
+assertion is kernel == ref to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import codebook, lshproj, mlp, ref
+
+
+def rand_codes(key, b, m, c):
+    return jax.random.randint(key, (b, m), 0, c, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# codebook gather+sum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c,m", [(2, 128), (4, 64), (16, 32), (256, 16)])
+def test_gather_sum_paper_cm_grid(c, m):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    b, d = 64, 32
+    codes = rand_codes(k1, b, m, c)
+    books = jax.random.normal(k2, (m, c, d), jnp.float32)
+    out = codebook.gather_sum(codes, books)
+    expect = ref.codebook_gather_sum_ref(codes, books)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    m=st.integers(1, 12),
+    log_c=st.integers(1, 6),
+    d=st.integers(1, 48),
+)
+def test_gather_sum_hypothesis_shapes(b, m, log_c, d):
+    c = 2**log_c
+    key = jax.random.PRNGKey(b * 1000 + m * 100 + log_c * 10 + d)
+    k1, k2 = jax.random.split(key)
+    codes = rand_codes(k1, b, m, c)
+    books = jax.random.normal(k2, (m, c, d), jnp.float32)
+    out = codebook.gather_sum(codes, books)
+    expect = ref.codebook_gather_sum_ref(codes, books)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_gather_sum_both_strategies_agree():
+    """one-hot (c<=16) and take (c>16) paths must agree with the oracle."""
+    key = jax.random.PRNGKey(7)
+    for c in (8, 64):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, c))
+        codes = rand_codes(k1, 32, 4, c)
+        books = jax.random.normal(k2, (4, c, 16), jnp.float32)
+        np.testing.assert_allclose(
+            codebook.gather_sum(codes, books),
+            ref.codebook_gather_sum_ref(codes, books),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_gather_sum_grad_matches_ref():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    b, m, c, d = 40, 6, 16, 24
+    codes = rand_codes(k1, b, m, c)
+    books = jax.random.normal(k2, (m, c, d), jnp.float32)
+
+    def loss(bk):
+        return jnp.sum(jnp.sin(codebook.gather_sum(codes, bk)))
+
+    def loss_ref(bk):
+        return jnp.sum(jnp.sin(ref.codebook_gather_sum_ref(codes, bk)))
+
+    g = jax.grad(loss)(books)
+    g_ref = jax.grad(loss_ref)(books)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_gather_sum_batch_not_multiple_of_block():
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    b = codebook.DEFAULT_BLOCK_B + 17
+    codes = rand_codes(k1, b, 4, 16)
+    books = jax.random.normal(k2, (4, 16, 8), jnp.float32)
+    out = codebook.gather_sum(codes, books)
+    assert out.shape == (b, 8)
+    np.testing.assert_allclose(out, ref.codebook_gather_sum_ref(codes, books), rtol=1e-5)
+
+
+def test_vmem_estimate_within_budget():
+    # Largest paper configuration must fit VMEM (~16 MB) comfortably.
+    assert codebook.vmem_bytes(128, 16, 256, 512) < 16 * 2**20
+    assert codebook.vmem_bytes(128, 128, 2, 512) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# fused linear
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_linear_matches_ref(relu):
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (200, 48), jnp.float32)
+    w = jax.random.normal(k2, (48, 32), jnp.float32)
+    b = jax.random.normal(k3, (32,), jnp.float32)
+    np.testing.assert_allclose(
+        mlp.linear(x, w, b, relu), ref.linear_ref(x, w, b, relu), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 260), d_in=st.integers(1, 64), d_out=st.integers(1, 64))
+def test_linear_hypothesis_shapes(b, d_in, d_out):
+    key = jax.random.PRNGKey(b * 10000 + d_in * 100 + d_out)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, d_in), jnp.float32)
+    w = jax.random.normal(k2, (d_in, d_out), jnp.float32)
+    bias = jax.random.normal(k3, (d_out,), jnp.float32)
+    np.testing.assert_allclose(
+        mlp.linear(x, w, bias, True), ref.linear_ref(x, w, bias, True), rtol=1e-3, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_linear_grads_match_jnp(relu):
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (50, 20), jnp.float32)
+    w = jax.random.normal(k2, (20, 12), jnp.float32)
+    b = jax.random.normal(k3, (12,), jnp.float32)
+
+    def loss(x, w, b):
+        return jnp.sum(mlp.linear(x, w, b, relu) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, relu) ** 2)
+
+    gx, gw, gb = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    rx, rw, rb = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb, rb, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LSH projection
+# ---------------------------------------------------------------------------
+
+
+def test_lsh_project_matches_ref():
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    aux = jax.random.normal(k1, (700, 40), jnp.float32)
+    vs = jax.random.normal(k2, (40, 24), jnp.float32)
+    np.testing.assert_allclose(
+        lshproj.project(aux, vs), ref.lsh_project_ref(aux, vs), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 600), d=st.integers(1, 50), k=st.integers(1, 33))
+def test_lsh_project_hypothesis(n, d, k):
+    key = jax.random.PRNGKey(n * 1000 + d * 50 + k)
+    k1, k2 = jax.random.split(key)
+    aux = jax.random.normal(k1, (n, d), jnp.float32)
+    vs = jax.random.normal(k2, (d, k), jnp.float32)
+    np.testing.assert_allclose(
+        lshproj.project(aux, vs), ref.lsh_project_ref(aux, vs), rtol=1e-3, atol=1e-3
+    )

@@ -1,0 +1,281 @@
+"""L2 model correctness: decoder vs oracle, GNN shapes/losses, AdamW
+behaviour, autoencoder training signal, and param-spec consistency with
+the paper's formulas."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import autoenc, decoder, gnn, model, optim
+from compile.specs import Param
+
+
+def init_params(specs, key):
+    arrays = []
+    for i, s in enumerate(specs):
+        k = jax.random.fold_in(key, i)
+        if s.init == "zeros":
+            arrays.append(jnp.zeros(s.shape, jnp.float32))
+        elif s.init == "ones":
+            arrays.append(jnp.ones(s.shape, jnp.float32))
+        elif s.init == "normal":
+            arrays.append(s.std * jax.random.normal(k, s.shape, jnp.float32))
+        else:  # xavier_uniform
+            fan_in, fan_out = s.shape[0], s.shape[-1]
+            a = np.sqrt(6.0 / (fan_in + fan_out))
+            arrays.append(jax.random.uniform(k, s.shape, jnp.float32, -a, a))
+    return arrays
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["light", "full"])
+def test_decode_matches_ref(variant):
+    c, m, d_c, d_m, d_e, l = 16, 8, 32, 24, 12, 3
+    specs = decoder.decoder_param_specs(c, m, d_c, d_m, d_e, l, variant)
+    arrays = init_params(specs, jax.random.PRNGKey(0))
+    p = {s.name: a for s, a in zip(specs, arrays)}
+    codes = jax.random.randint(jax.random.PRNGKey(1), (40, m), 0, c, jnp.int32)
+    out = decoder.decode(p, codes, l, variant)
+    expect = decoder.decode_ref(p, codes, l, variant)
+    assert out.shape == (40, d_e)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_decoder_param_count_matches_paper_formula():
+    # Section 3.2: full = m·c·d_c + d_c·d_m + (l-2)·d_m² + d_m·d_e (+biases).
+    c, m, d_c, d_m, d_e, l = 256, 16, 512, 512, 64, 3
+    specs = decoder.decoder_param_specs(c, m, d_c, d_m, d_e, l, "full")
+    weights = sum(
+        int(np.prod(s.shape)) for s in specs if s.name.endswith(".w") or s.name == "dec.books"
+    )
+    assert weights == m * c * d_c + d_c * d_m + (l - 2) * d_m * d_m + d_m * d_e
+
+
+def test_light_codebooks_frozen_full_trainable():
+    for variant, expect in (("light", False), ("full", True)):
+        specs = decoder.decoder_param_specs(4, 4, 8, 8, 4, 2, variant)
+        books = next(s for s in specs if s.name == "dec.books")
+        assert books.trainable is expect
+    light = decoder.decoder_param_specs(4, 4, 8, 8, 4, 2, "light")
+    assert any(s.name == "dec.w0" for s in light)
+    full = decoder.decoder_param_specs(4, 4, 8, 8, 4, 2, "full")
+    assert not any(s.name == "dec.w0" for s in full)
+
+
+# ---------------------------------------------------------------------------
+# GNN applies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sgc", "gin", "sage"])
+def test_fullbatch_gnn_shapes(kind):
+    n, d, h = 30, 8, 16
+    specs_fn, apply_fn, _adj = gnn.FULLBATCH[kind]
+    specs = specs_fn(d, h)
+    p = {s.name: a for s, a in zip(specs, init_params(specs, jax.random.PRNGKey(2)))}
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d), jnp.float32)
+    adj = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (n, n), jnp.float32))
+    out = apply_fn(p, x, adj)
+    assert out.shape == (n, h)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_sage_mb_shapes_and_permutation_invariance():
+    b, k1, k2, d, h = 6, 4, 3, 8, 16
+    specs = gnn.sage_mb_param_specs(d, h)
+    p = {s.name: a for s, a in zip(specs, init_params(specs, jax.random.PRNGKey(5)))}
+    key = jax.random.PRNGKey(6)
+    xb = jax.random.normal(key, (b, d))
+    xh1 = jax.random.normal(jax.random.fold_in(key, 1), (b, k1, d))
+    xh2 = jax.random.normal(jax.random.fold_in(key, 2), (b, k1, k2, d))
+    out = gnn.sage_mb_apply(p, xb, xh1, xh2)
+    assert out.shape == (b, h)
+    # Mean aggregation ⇒ permuting the second-hop neighbors changes nothing.
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), k2)
+    out_p = gnn.sage_mb_apply(p, xb, xh1, xh2[:, :, perm, :])
+    np.testing.assert_allclose(out, out_p, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_cross_entropy_ignores_masked_rows():
+    logits = jnp.array([[10.0, -10.0], [-10.0, 10.0], [0.0, 0.0]])
+    labels = jnp.array([0, 1, 0])
+    full = gnn.masked_cross_entropy(logits, labels, jnp.array([1.0, 1.0, 0.0]))
+    assert float(full) < 1e-3
+    # Masking in the bad row raises the loss.
+    with_bad = gnn.masked_cross_entropy(logits, labels, jnp.array([1.0, 1.0, 1.0]))
+    assert float(with_bad) > float(full)
+
+
+def test_bce_link_loss_prefers_separated_scores():
+    h_good = jnp.array([[1.0, 0.0], [1.0, 0.0], [-1.0, 0.0]])
+    pos = jnp.array([[0, 1]], dtype=jnp.int32)
+    neg = jnp.array([[0, 2]], dtype=jnp.int32)
+    good = gnn.bce_link_loss(h_good, pos, neg)
+    bad = gnn.bce_link_loss(h_good, neg, pos)  # swapped: pos scored low
+    assert float(good) < float(bad)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_descends_quadratic():
+    hyper = {"lr": 0.1, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0}
+    target = jnp.array([3.0, -2.0])
+
+    def loss_fn(params, batch):
+        return jnp.sum((params[0] - target) ** 2)
+
+    step_fn = optim.make_train_step(loss_fn, [True], hyper)
+    p = [jnp.zeros(2)]
+    m = [jnp.zeros(2)]
+    v = [jnp.zeros(2)]
+    for t in range(300):
+        out = step_fn(p, m, v, jnp.float32(t))
+        p, m, v = [out[0]], [out[1]], [out[2]]
+    np.testing.assert_allclose(p[0], target, atol=0.05)
+
+
+def test_adamw_mask_freezes_param():
+    hyper = {"lr": 0.1, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.01}
+
+    def loss_fn(params, batch):
+        return jnp.sum(params[0] ** 2) + jnp.sum(params[1] ** 2)
+
+    step_fn = optim.make_train_step(loss_fn, [False, True], hyper)
+    p = [jnp.ones(3), jnp.ones(3)]
+    m = [jnp.zeros(3)] * 2
+    v = [jnp.zeros(3)] * 2
+    out = step_fn(p, m, v, jnp.float32(0))
+    frozen, trained = out[0], out[1]
+    np.testing.assert_allclose(frozen, jnp.ones(3))  # untouched, incl. no wd
+    assert float(jnp.max(trained)) < 1.0
+
+
+def test_adamw_weight_decay_decoupled():
+    hyper = {"lr": 0.5, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.1}
+
+    def loss_fn(params, batch):
+        return jnp.sum(0.0 * params[0])  # zero gradient
+
+    step_fn = optim.make_train_step(loss_fn, [True], hyper)
+    p = [jnp.ones(2) * 4.0]
+    out = step_fn(p, [jnp.zeros(2)], [jnp.zeros(2)], jnp.float32(0))
+    # Pure decay: p' = p − lr·wd·p = 4 · (1 − 0.05).
+    np.testing.assert_allclose(out[0], jnp.ones(2) * 4.0 * 0.95, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end training signals (tiny versions of the exported variants)
+# ---------------------------------------------------------------------------
+
+
+def run_steps(build, batches, key, n_steps):
+    specs = build["params"]
+    params = init_params(specs, key)
+    ms = [jnp.zeros(s.shape, jnp.float32) for s in specs]
+    vs = [jnp.zeros(s.shape, jnp.float32) for s in specs]
+    step_fn = jax.jit(
+        optim.make_train_step(
+            build["train_fn"], [s.trainable for s in specs], build["hyper"]["optim"]
+        )
+    )
+    n = len(specs)
+    losses = []
+    for t in range(n_steps):
+        out = step_fn(params, ms, vs, jnp.float32(t), *batches)
+        params = list(out[:n])
+        ms = list(out[n : 2 * n])
+        vs = list(out[2 * n : 3 * n])
+        losses.append(float(out[-1]))
+    return losses, params
+
+
+def test_recon_build_trains():
+    build = model.make_recon(
+        "t", 8, 8, 16, 16, 12, 3, "full", 64,
+        {"lr": 3e-3, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0},
+    )
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (64, 8), 0, 8, jnp.int32)
+    target = jax.random.normal(jax.random.fold_in(key, 1), (64, 12))
+    losses, _ = run_steps(build, [codes, target], jax.random.PRNGKey(9), 60)
+    assert losses[-1] < losses[0] * 0.7, f"no training signal: {losses[0]} -> {losses[-1]}"
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sgc", "gin", "sage"])
+@pytest.mark.parametrize("coded", [True, False])
+def test_nodeclf_fullbatch_trains(kind, coded):
+    n, k = 48, 3
+    build = model.make_nodeclf_fullbatch(
+        "t", kind, coded, n, k, 8, 16, 4, 8, 16, 16, 2, "full",
+        {"lr": 1e-2, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0},
+    )
+    key = jax.random.PRNGKey(4)
+    labels = jax.random.randint(key, (n,), 0, k, jnp.int32)
+    # Block-diagonal-ish adjacency correlated with labels.
+    same = (labels[:, None] == labels[None, :]).astype(jnp.float32)
+    adj = same / jnp.maximum(same.sum(1, keepdims=True), 1.0)
+    mask = jnp.ones((n,), jnp.float32)
+    batch = [adj, labels, mask]
+    if coded:
+        codes = jax.random.randint(jax.random.fold_in(key, 2), (n, 8), 0, 4, jnp.int32)
+        batch = [codes] + batch
+    losses, _ = run_steps(build, batch, jax.random.PRNGKey(8), 40)
+    assert losses[-1] < losses[0], f"{kind}/coded={coded}: {losses[0]} -> {losses[-1]}"
+
+
+def test_linkpred_fullbatch_trains():
+    n = 40
+    build = model.make_linkpred_fullbatch(
+        "t", "gcn", True, n, 8, 16, 16, 8, 4, 8, 16, 16, 2, "full",
+        {"lr": 1e-2, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0},
+    )
+    key = jax.random.PRNGKey(5)
+    codes = jax.random.randint(key, (n, 8), 0, 4, jnp.int32)
+    adj = jnp.eye(n)
+    pos = jax.random.randint(jax.random.fold_in(key, 1), (16, 2), 0, n, jnp.int32)
+    neg = jax.random.randint(jax.random.fold_in(key, 2), (16, 2), 0, n, jnp.int32)
+    losses, _ = run_steps(build, [codes, adj, pos, neg], jax.random.PRNGKey(3), 40)
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("coded", [True, False])
+def test_sage_minibatch_trains(coded):
+    n, k, b, k1, k2 = 100, 3, 16, 3, 2
+    build = model.make_sage_minibatch(
+        "t", coded, n, k, 8, 16, b, k1, k2, 4, 8, 16, 16, 2, "full",
+        {"lr": 1e-2, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0},
+    )
+    key = jax.random.PRNGKey(6)
+    labels = jax.random.randint(key, (b,), 0, k, jnp.int32)
+    if coded:
+        mk = lambda i, rows: jax.random.randint(jax.random.fold_in(key, i), (rows, 8), 0, 4, jnp.int32)
+        batch = [mk(1, b), mk(2, b * k1), mk(3, b * k1 * k2), labels]
+    else:
+        mk = lambda i, rows: jax.random.randint(jax.random.fold_in(key, i), (rows,), 0, n, jnp.int32)
+        batch = [mk(1, b), mk(2, b * k1), mk(3, b * k1 * k2), labels]
+    losses, _ = run_steps(build, batch, jax.random.PRNGKey(2), 40)
+    assert losses[-1] < losses[0]
+
+
+def test_autoencoder_trains_and_encodes():
+    build = autoenc.make_autoencoder(
+        "t", 4, 6, 16, 16, 12, 2, 32,
+        {"lr": 3e-3, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0},
+    )
+    key = jax.random.PRNGKey(7)
+    emb = jax.random.normal(key, (32, 12))
+    uniform = jax.random.uniform(jax.random.fold_in(key, 1), (32, 6, 4))
+    losses, params = run_steps(build, [emb, uniform], jax.random.PRNGKey(1), 80)
+    assert losses[-1] < losses[0]
+    codes = build["pred_fn"](params, [emb])
+    assert codes.shape == (32, 6)
+    assert codes.dtype == jnp.int32
+    assert int(codes.min()) >= 0 and int(codes.max()) < 4

@@ -1,0 +1,70 @@
+//! Shared helpers for the bench harnesses (criterion is not available in
+//! the offline crate set; these binaries use `harness = false` and print
+//! the paper-shaped tables directly).
+//!
+//! `HASHGNN_QUICK=1` shrinks every sweep for smoke runs; the default
+//! settings regenerate the full table/figure shapes.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// True when `HASHGNN_QUICK=1` (CI / smoke mode).
+pub fn quick() -> bool {
+    std::env::var("HASHGNN_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick between a full and a quick value.
+pub fn pick<T>(full: T, q: T) -> T {
+    if quick() {
+        q
+    } else {
+        full
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple timing statistics over repeated runs (median/min reported,
+/// which is what criterion's point estimates approximate).
+pub struct Samples {
+    secs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn collect(reps: usize, mut f: impl FnMut()) -> Self {
+        let mut secs = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        Self { secs }
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.secs.iter().copied().fold(f64::MAX, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.secs.iter().sum::<f64>() / self.secs.len() as f64
+    }
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, what: &str) {
+    eprintln!("\n=== bench: {name} ===");
+    eprintln!("    regenerates: {what}");
+    eprintln!("    mode: {}", if quick() { "QUICK (HASHGNN_QUICK=1)" } else { "full" });
+}

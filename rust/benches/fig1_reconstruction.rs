@@ -1,0 +1,116 @@
+//! Figure 1 — reconstruction quality vs number of compressed entities.
+//!
+//! Series per panel: random (ALONE), hashing/pre-trained, hashing/graph
+//! (adjacency), learned (autoencoder), and the raw upper bound. Panels:
+//! GloVe analog (analogy accuracy + similarity ρ) and two
+//! metapath2vec-analog sets (k-means NMI).
+//!
+//! Expected shape (paper): all coders ≈ raw at small n; random degrades
+//! sharply as n grows; hashing tracks learned closely without any extra
+//! training stage.
+
+mod bench_util;
+
+use hashgnn::cfg::{Coder, CodingCfg};
+use hashgnn::embed::{analogy_embeddings, gaussian_mixture};
+use hashgnn::graph::generate::{sbm_with_labels, SbmCfg};
+use hashgnn::report::Table;
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::coding::{make_codes, Aux};
+use hashgnn::tasks::recon;
+
+fn main() -> anyhow::Result<()> {
+    bench_util::banner("fig1_reconstruction", "Figure 1 (all six panels' series)");
+    let engine = Engine::cpu("artifacts")?;
+    let model = engine.load("recon_c16_m32")?;
+    let ae = engine.load("ae_c16_m32")?;
+    let coding = CodingCfg::new(16, 32)?;
+    let counts: Vec<usize> = bench_util::pick(vec![2000, 5000, 10000, 20000], vec![1000, 3000]);
+    let epochs = bench_util::pick(8, 3);
+    let ae_epochs = bench_util::pick(6, 2);
+    let eval_k = 2000;
+    let seed = 5u64;
+
+    // ---------------- GloVe-analog panel --------------------------------
+    let glove = analogy_embeddings(*counts.last().unwrap(), 128, 14, 20, 400, 0.05, seed);
+    let mut t_glove = Table::new(
+        "Fig 1 (a,b) — GloVe* analogy accuracy / similarity rho vs #entities",
+        &["#entities", "coder", "analogy", "similarity"],
+    );
+    {
+        let (racc, rrho) = recon::eval_word(&glove.set.data[..eval_k * 128], eval_k, &glove);
+        t_glove.row(vec!["-".into(), "raw".into(), format!("{racc:.3}"), format!("{rrho:.3}")]);
+    }
+    for &n in &counts {
+        let set = glove.set.top(n);
+        for coder in [Coder::Random, Coder::Hash] {
+            let codes = make_codes(
+                &Aux::Dense { data: &set.data, n: set.n, d: set.d },
+                coder,
+                coding,
+                seed,
+            )?;
+            let (store, _) = recon::train_decoder(&model, &codes, &set, epochs, seed)?;
+            let emb = recon::reconstruct(&model, &store, &codes, eval_k.min(n))?;
+            let (acc, rho) = recon::eval_word(&emb, eval_k.min(n), &glove);
+            let label = match coder {
+                Coder::Hash => "hash/pre-trained",
+                _ => "random",
+            };
+            t_glove.row(vec![
+                n.to_string(),
+                label.into(),
+                format!("{acc:.3}"),
+                format!("{rho:.3}"),
+            ]);
+        }
+    }
+    println!("{}", t_glove.render());
+
+    // ------------- metapath2vec-analog panels ---------------------------
+    for (panel, mix_seed) in [("metapath2vec*", 9u64), ("metapath2vec++*", 10u64)] {
+        let full = gaussian_mixture(*counts.last().unwrap(), 128, 8, 0.25, mix_seed);
+        let labels = full.labels.clone().expect("labels");
+        let mut t = Table::new(
+            &format!("Fig 1 — {panel} clustering NMI vs #entities"),
+            &["#entities", "coder", "NMI"],
+        );
+        let raw_nmi =
+            recon::clustering_nmi(&full.data[..eval_k * 128], eval_k, 128, &labels, 8, 1);
+        t.row(vec!["-".into(), "raw".into(), format!("{raw_nmi:.3}")]);
+        for &n in &counts {
+            let set = full.top(n);
+            // Graph consistent with the clusters (for the hashing/graph
+            // arm): in the paper the graph *generated* the embeddings, so
+            // its communities must match the mixture's labels.
+            let graph = sbm_with_labels(
+                SbmCfg::new(n, 8, 10.0, 2.0),
+                labels[..n].to_vec(),
+                mix_seed ^ 0xF00,
+            )?;
+            let arms: Vec<(&str, Aux)> = vec![
+                ("random", Aux::None { n }),
+                ("hash/pre-trained", Aux::Dense { data: &set.data, n: set.n, d: set.d }),
+                ("hash/graph", Aux::Graph(&graph)),
+            ];
+            for (label, aux) in arms {
+                let coder = if label == "random" { Coder::Random } else { Coder::Hash };
+                let codes = make_codes(&aux, coder, coding, seed)?;
+                let (store, _) = recon::train_decoder(&model, &codes, &set, epochs, seed)?;
+                let emb = recon::reconstruct(&model, &store, &codes, eval_k.min(n))?;
+                let nmi = recon::clustering_nmi(&emb, eval_k.min(n), 128, &labels, 8, 1);
+                t.row(vec![n.to_string(), label.into(), format!("{nmi:.3}")]);
+            }
+            // Learned arm (autoencoder) on the first panel only (cost).
+            if panel == "metapath2vec*" {
+                let codes = recon::learned_codes(&ae, &set, n, ae_epochs, seed)?;
+                let (store, _) = recon::train_decoder(&model, &codes, &set, epochs, seed)?;
+                let emb = recon::reconstruct(&model, &store, &codes, eval_k.min(n))?;
+                let nmi = recon::clustering_nmi(&emb, eval_k.min(n), 128, &labels, 8, 1);
+                t.row(vec![n.to_string(), "learn".into(), format!("{nmi:.3}")]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Figures 3 & 6 — collision counts: median vs zero threshold, repeated
+//! trials, 24- and 32-bit codes, on all three embedding-set analogs.
+//!
+//! Expected shape: the median threshold's histogram sits strictly left of
+//! (fewer collisions than) the zero threshold's.
+
+mod bench_util;
+
+use hashgnn::embed::{analogy_embeddings, gaussian_mixture};
+use hashgnn::report::{histogram, Table};
+use hashgnn::tasks::collisions;
+
+fn main() {
+    bench_util::banner("fig3_collisions", "Figures 3 and 6 (collision histograms)");
+    let n = bench_util::pick(20000, 4000);
+    let trials = bench_util::pick(100, 10);
+
+    let m2v = gaussian_mixture(n, 128, 8, 0.25, 9);
+    let m2vpp = gaussian_mixture(n, 128, 8, 0.20, 10);
+    let glove = analogy_embeddings(n, 128, 14, 20, 100, 0.05, 5).set;
+
+    let mut summary = Table::new(
+        "Fig 3/6 summary — avg collisions over trials",
+        &["dataset", "bits", "median", "zero"],
+    );
+    for (name, set) in [("metapath2vec*", &m2v), ("metapath2vec++*", &m2vpp), ("GloVe*", &glove)]
+    {
+        for bits in [24usize, 32] {
+            // Figure 3 runs both bit settings for m2v; Figure 6 runs 24
+            // bits for the other two — we run both everywhere.
+            let r = collisions::run(name, set, bits, trials, 100);
+            println!("{}", histogram(&format!("{name} {bits}-bit, median threshold"), &r.median, 8));
+            println!("{}", histogram(&format!("{name} {bits}-bit, zero threshold"), &r.zero, 8));
+            summary.row(vec![
+                name.into(),
+                bits.to_string(),
+                format!("{:.1}", r.median_avg()),
+                format!("{:.1}", r.zero_avg()),
+            ]);
+        }
+    }
+    println!("{}", summary.render());
+}

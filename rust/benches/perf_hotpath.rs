@@ -1,0 +1,132 @@
+//! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf before/after
+//! numbers come from here).
+//!
+//! L3 paths: Algorithm-1 encode (bit-by-bit vs blocked), median
+//! (quickselect vs full sort), code gathering, neighbor sampling, and the
+//! end-to-end train step with the batch pipeline on vs off.
+
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::Samples;
+use hashgnn::cfg::CodingCfg;
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::graph::NeighborSampler;
+use hashgnn::lsh::{self, median_in_place, Threshold};
+use hashgnn::params::ParamStore;
+use hashgnn::report::Table;
+use hashgnn::rng::{Rng, Xoshiro256pp};
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::sage::{self, Features, SageTask};
+use hashgnn::train::{self, TrainOpts};
+
+fn main() -> anyhow::Result<()> {
+    bench_util::banner("perf_hotpath", "§Perf microbenches (EXPERIMENTS.md)");
+    let mut t = Table::new("hot-path microbenchmarks", &["path", "metric", "value"]);
+    let n = bench_util::pick(20000, 5000);
+    let reps = bench_util::pick(5, 2);
+
+    // ---- L3: LSH encode -------------------------------------------------
+    let g = sbm(SbmCfg::new(n, 8, 12.0, 2.0), 3)?;
+    let coding = CodingCfg::new(16, 32)?; // 128 bits
+    let s = Samples::collect(reps, || {
+        let _ = lsh::encode(g.adj(), coding, Threshold::Median, 7).unwrap();
+    });
+    t.row(vec![
+        "lsh::encode (bit-by-bit)".into(),
+        "nodes/s".into(),
+        format!("{:.0}", n as f64 / s.median()),
+    ]);
+    for block in [8usize, 32] {
+        let s = Samples::collect(reps, || {
+            let _ = lsh::encode_blocked(g.adj(), coding, Threshold::Median, 7, block).unwrap();
+        });
+        t.row(vec![
+            format!("lsh::encode_blocked (B={block})"),
+            "nodes/s".into(),
+            format!("{:.0}", n as f64 / s.median()),
+        ]);
+    }
+
+    // ---- L3: median selection -------------------------------------------
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let s_qs = Samples::collect(20, || {
+        let mut buf = base.clone();
+        let _ = median_in_place(&mut buf);
+    });
+    let s_sort = Samples::collect(20, || {
+        let mut buf = base.clone();
+        buf.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let _ = buf[(buf.len() - 1) / 2];
+    });
+    t.row(vec![
+        "median: quickselect".into(),
+        "Melem/s".into(),
+        format!("{:.1}", n as f64 / s_qs.median() / 1e6),
+    ]);
+    t.row(vec![
+        "median: full sort (baseline)".into(),
+        "Melem/s".into(),
+        format!("{:.1}", n as f64 / s_sort.median() / 1e6),
+    ]);
+
+    // ---- L3: code gather + neighbor sampling ----------------------------
+    let codes = lsh::encode(g.adj(), coding, Threshold::Median, 7)?;
+    let ids: Vec<u32> = (0..4096u32).map(|i| i % n as u32).collect();
+    let mut buf = Vec::new();
+    let s = Samples::collect(50, || {
+        codes.gather_int_codes(&ids, &mut buf);
+    });
+    t.row(vec![
+        "codes::gather_int_codes".into(),
+        "Mcodes/s".into(),
+        format!("{:.1}", ids.len() as f64 / s.median() / 1e6),
+    ]);
+    let sampler = NeighborSampler::new(&g, 10, 10);
+    let batch: Vec<u32> = (0..256u32).collect();
+    let mut srng = Xoshiro256pp::seed_from_u64(9);
+    let s = Samples::collect(50, || {
+        let _ = sampler.sample(&batch, &mut srng);
+    });
+    t.row(vec![
+        "sampler (B=256, 10x10 fanout)".into(),
+        "batches/s".into(),
+        format!("{:.0}", 1.0 / s.median()),
+    ]);
+
+    // ---- e2e: train step, pipeline on vs off ----------------------------
+    let engine = Engine::cpu("artifacts")?;
+    if let Ok(model) = engine.load("sage_mb_coded") {
+        let nn = model.manifest.hyper_usize("n")?;
+        let gg = Arc::new(sbm(SbmCfg::new(nn, 8, 12.0, 2.0), 3)?);
+        let labels = Arc::new(gg.labels().unwrap().to_vec());
+        let table = Arc::new(lsh::encode(gg.adj(), coding, Threshold::Median, 7)?);
+        let steps = bench_util::pick(20u64, 6);
+        for pipeline in [false, true] {
+            let task = SageTask {
+                graph: gg.clone(),
+                labels: labels.clone(),
+                features: Features::Codes(table.clone()),
+                train_nodes: Arc::new((0..nn as u32).collect()),
+            };
+            let batcher = sage::SageBatcher::new(task, &model, 9)?;
+            let mut store = ParamStore::init(&model.manifest, 1);
+            let mut opts = TrainOpts::new(steps);
+            opts.pipeline = pipeline;
+            let (log, secs) = bench_util::timed(|| train::train(&model, &mut store, batcher, opts));
+            let log = log?;
+            t.row(vec![
+                format!("sage_mb train step (pipeline={pipeline})"),
+                "steps/s".into(),
+                format!("{:.2}", log.losses.len() as f64 / secs),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts not built; e2e section skipped)");
+    }
+
+    println!("{}", t.render());
+    Ok(())
+}

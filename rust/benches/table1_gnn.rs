@@ -1,0 +1,90 @@
+//! Table 1 — NC / Rand / Hash across four GNNs on five OGB-analog
+//! datasets (3 node classification + 2 link prediction).
+//!
+//! Expected shape: Hash ≥ Rand almost everywhere; Hash close to (and
+//! occasionally above) NC.
+
+mod bench_util;
+
+use hashgnn::cfg::GnnKind;
+use hashgnn::report::Table;
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+use hashgnn::tasks::{linkpred, T1Dataset};
+
+fn main() -> anyhow::Result<()> {
+    bench_util::banner("table1_gnn", "Table 1 (full NC/Rand/Hash × GNN × dataset grid)");
+    let engine = Engine::cpu("artifacts")?;
+    let opts = RunOpts {
+        epochs: bench_util::pick(80, 8),
+        eval_every: bench_util::pick(10, 4),
+        seed: 7,
+    };
+    let gnns: Vec<GnnKind> = if bench_util::quick() {
+        vec![GnnKind::Gcn]
+    } else {
+        GnnKind::all().to_vec()
+    };
+
+    for gnn in &gnns {
+        let mut t = Table::new(
+            &format!("Table 1 — {} (test metric @ best val)", gnn.as_str().to_uppercase()),
+            &["task", "dataset", "NC", "Rand", "Hash"],
+        );
+        for ds in T1Dataset::nodeclf_all() {
+            let graph = ds.generate(11)?;
+            let mut cells = Vec::new();
+            for fe in Frontend::all() {
+                let (out, secs) =
+                    bench_util::timed(|| nodeclf::run_fullbatch(&engine, *gnn, fe, &graph, opts));
+                let out = out?;
+                eprintln!(
+                    "  [{:>4}] {} {} {}: val {:.4} test {:.4} ({secs:.1}s)",
+                    gnn.as_str(),
+                    ds.name(),
+                    fe.name(),
+                    "nodeclf",
+                    out.val,
+                    out.test
+                );
+                cells.push(format!("{:.4}", out.test));
+            }
+            t.row(vec![
+                "node classification".into(),
+                format!("{} (acc.)", ds.name()),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+        for ds in T1Dataset::linkpred_all() {
+            let graph = ds.generate(13)?;
+            let hits_k = if ds == T1Dataset::Collab { 50 } else { 20 };
+            let mut cells = Vec::new();
+            for fe in Frontend::all() {
+                let (out, secs) = bench_util::timed(|| {
+                    linkpred::run_fullbatch(&engine, *gnn, fe, &graph, hits_k, opts)
+                });
+                let out = out?;
+                eprintln!(
+                    "  [{:>4}] {} {} linkpred: val {:.4} test {:.4} ({secs:.1}s)",
+                    gnn.as_str(),
+                    ds.name(),
+                    fe.name(),
+                    out.val_hits,
+                    out.test_hits
+                );
+                cells.push(format!("{:.4}", out.test_hits));
+            }
+            t.row(vec![
+                "link prediction".into(),
+                format!("{} (hits@{hits_k})", ds.name()),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Tables 4 & 6 — compression ratios vs number of compressed entities and
+//! vs the (c, m) setting, at the paper's own dimensions. Analytic; the
+//! unit tests in tasks::memory pin these to the paper's printed values.
+
+mod bench_util;
+
+use hashgnn::cfg::CodingCfg;
+use hashgnn::report::Table;
+use hashgnn::tasks::memory::compression_ratio;
+
+fn main() -> anyhow::Result<()> {
+    bench_util::banner("table4_6_ratios", "Tables 4 and 6 (compression ratios)");
+    let counts = [5000usize, 10000, 25000, 50000, 100000, 200000];
+
+    // Table 4: (c=2, m=128), d_c=d_m=512.
+    let mut t4 = Table::new(
+        "Table 4 — compression ratio vs #entities (c=2, m=128)",
+        &["embedding", "5000", "10000", "25000", "50000", "100000", "200000"],
+    );
+    for (name, d_raw, d_e) in [("GloVe", 300usize, 300usize), ("metapath2vec", 128, 128)] {
+        let mut row = vec![name.to_string()];
+        for &n in &counts {
+            row.push(format!(
+                "{:.2}",
+                compression_ratio(n, d_raw, CodingCfg::new(2, 128)?, 512, 512, d_e)
+            ));
+        }
+        t4.row(row);
+    }
+    println!("{}", t4.render());
+
+    // Table 6: the (c, m) grid at four entity counts.
+    let grid = [(2usize, 128usize), (4, 64), (16, 32), (256, 16)];
+    let sub = [5000usize, 10000, 50000, 200000];
+    let mut t6 = Table::new(
+        "Table 6 — compression ratio vs (c, m)",
+        &["embedding", "c", "m", "5000", "10000", "50000", "200000"],
+    );
+    for (name, d_raw, d_e) in [("GloVe", 300usize, 300usize), ("metapath2vec", 128, 128)] {
+        for (c, m) in grid {
+            let mut row = vec![name.to_string(), c.to_string(), m.to_string()];
+            for &n in &sub {
+                row.push(format!(
+                    "{:.2}",
+                    compression_ratio(n, d_raw, CodingCfg::new(c, m)?, 512, 512, d_e)
+                ));
+            }
+            t6.row(row);
+        }
+    }
+    println!("{}", t6.render());
+    println!(
+        "note: reproduces the paper's printed numbers exactly (see tasks::memory tests);\n\
+         the paper's own §3.2 formula differs by the (l-2)·d_m² term — see DESIGN.md."
+    );
+    Ok(())
+}

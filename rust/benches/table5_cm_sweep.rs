@@ -1,0 +1,66 @@
+//! Table 5 — reconstruction quality under different (c, m) settings,
+//! random vs hashing coding, varying the number of compressed entities.
+//!
+//! Expected shape: hashing ≥ random in almost every cell, with the gap
+//! widening as entity count grows; larger decoders (c=256, m=16) score
+//! best overall.
+
+mod bench_util;
+
+use hashgnn::cfg::{Coder, CodingCfg};
+use hashgnn::embed::gaussian_mixture;
+use hashgnn::report::Table;
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::coding::{make_codes, Aux};
+use hashgnn::tasks::recon;
+
+fn main() -> anyhow::Result<()> {
+    bench_util::banner("table5_cm_sweep", "Table 5 ((c,m) grid on reconstruction)");
+    let engine = Engine::cpu("artifacts")?;
+    let grid = [(2usize, 128usize), (4, 64), (16, 32), (256, 16)];
+    let counts: Vec<usize> = bench_util::pick(vec![2000, 5000, 20000], vec![1500]);
+    let epochs = bench_util::pick(8, 3);
+    let eval_k = 1500;
+    let seed = 5u64;
+
+    let full = gaussian_mixture(*counts.last().unwrap(), 128, 8, 0.25, 9);
+    let labels = full.labels.clone().expect("labels");
+    let raw_nmi = recon::clustering_nmi(&full.data[..eval_k * 128], eval_k, 128, &labels, 8, 1);
+    println!("raw upper bound NMI: {raw_nmi:.3}\n");
+
+    let mut header = vec!["c".to_string(), "m".to_string(), "coder".to_string()];
+    header.extend(counts.iter().map(|n| n.to_string()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 5 — metapath2vec* NMI across (c, m)", &header_refs);
+
+    for (c, m) in grid {
+        let coding = CodingCfg::new(c, m)?;
+        let model = engine.load(&format!("recon_c{c}_m{m}"))?;
+        for coder in [Coder::Random, Coder::Hash] {
+            let mut row = vec![
+                c.to_string(),
+                m.to_string(),
+                match coder {
+                    Coder::Random => "random".to_string(),
+                    _ => "hashing".to_string(),
+                },
+            ];
+            for &n in &counts {
+                let set = full.top(n);
+                let aux = match coder {
+                    Coder::Random => Aux::None { n },
+                    _ => Aux::Dense { data: &set.data, n: set.n, d: set.d },
+                };
+                let codes = make_codes(&aux, coder, coding, seed)?;
+                let (store, _) = recon::train_decoder(&model, &codes, &set, epochs, seed)?;
+                let emb = recon::reconstruct(&model, &store, &codes, eval_k.min(n))?;
+                let nmi = recon::clustering_nmi(&emb, eval_k.min(n), 128, &labels, 8, 1);
+                eprintln!("  (c={c}, m={m}) {} n={n}: NMI {nmi:.3}", row[2]);
+                row.push(format!("{nmi:.3}"));
+            }
+            t.row(row);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

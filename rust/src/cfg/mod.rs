@@ -1,0 +1,362 @@
+//! Typed experiment configuration.
+//!
+//! Mirrors the paper's hyper-parameters: the coding scheme `(c, m)`
+//! (Section 3.1), the decoder `(l, d_c, d_m, d_e)` and light/full variant
+//! (Section 3.2), and per-task training settings (Appendix B.2 / C.1 /
+//! Section 5.3.2). All configs round-trip through [`crate::ser::Json`] so
+//! experiments are fully reproducible from a single file.
+
+use crate::ser::Json;
+use crate::{Error, Result};
+
+/// Compositional-code format: cardinality `c` (power of two) and length `m`.
+/// A code costs `m·log2(c)` bits per node (Section 3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodingCfg {
+    pub c: usize,
+    pub m: usize,
+}
+
+impl CodingCfg {
+    pub fn new(c: usize, m: usize) -> Result<Self> {
+        let cfg = Self { c, m };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.c < 2 || !self.c.is_power_of_two() {
+            return Err(Error::Config(format!("c must be a power of two ≥ 2, got {}", self.c)));
+        }
+        if self.m == 0 {
+            return Err(Error::Config("m must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Bits per element of the integer code (`log2 c`).
+    pub fn bits_per_element(&self) -> usize {
+        self.c.trailing_zeros() as usize
+    }
+
+    /// Total bits per node: `m·log2(c)`.
+    pub fn n_bits(&self) -> usize {
+        self.m * self.bits_per_element()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("c", Json::num(self.c as f64)), ("m", Json::num(self.m as f64))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Self::new(v.get("c")?.as_usize()?, v.get("m")?.as_usize()?)
+    }
+}
+
+/// Decoder variant (Section 3.2 / Figure 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecoderVariant {
+    /// Frozen random codebooks + trainable rescale vector `W0`.
+    Light,
+    /// Trainable codebooks (no `W0`).
+    Full,
+}
+
+impl DecoderVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecoderVariant::Light => "light",
+            DecoderVariant::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "light" => Ok(DecoderVariant::Light),
+            "full" => Ok(DecoderVariant::Full),
+            other => Err(Error::Config(format!("unknown decoder variant '{other}'"))),
+        }
+    }
+}
+
+/// Decoder model: `m` codebooks of shape `(c, d_c)`, then an `l`-layer MLP
+/// `d_c → d_m → … → d_e` with ReLU between linear layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecoderCfg {
+    pub coding: CodingCfg,
+    /// Codebook vector dimension.
+    pub d_c: usize,
+    /// MLP hidden width.
+    pub d_m: usize,
+    /// Output embedding dimension.
+    pub d_e: usize,
+    /// Number of MLP linear layers (`l ≥ 2` per the paper's accounting).
+    pub l: usize,
+    pub variant: DecoderVariant,
+}
+
+impl DecoderCfg {
+    /// Paper defaults for the OGB experiments (Appendix C.1):
+    /// `l=3, d_c=d_m=512, d_e=64`.
+    pub fn paper_ogb(coding: CodingCfg, variant: DecoderVariant) -> Self {
+        Self { coding, d_c: 512, d_m: 512, d_e: 64, l: 3, variant }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.coding.validate()?;
+        if self.l < 2 {
+            return Err(Error::Config(format!("decoder requires l ≥ 2, got {}", self.l)));
+        }
+        for (name, v) in [("d_c", self.d_c), ("d_m", self.d_m), ("d_e", self.d_e)] {
+            if v == 0 {
+                return Err(Error::Config(format!("{name} must be positive")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Codebook parameter count `m·c·d_c` (trainable for Full, frozen for
+    /// Light — Section 3.2).
+    pub fn codebook_params(&self) -> usize {
+        self.coding.m * self.coding.c * self.d_c
+    }
+
+    /// MLP parameter count `d_c·d_m + (l−2)·d_m² + d_m·d_e` (weights only,
+    /// matching the paper's formula; biases tracked separately).
+    pub fn mlp_weight_params(&self) -> usize {
+        self.d_c * self.d_m + (self.l - 2) * self.d_m * self.d_m + self.d_m * self.d_e
+    }
+
+    /// Bias parameter count for the MLP (`(l−1)·d_m + d_e`).
+    pub fn mlp_bias_params(&self) -> usize {
+        (self.l - 1) * self.d_m + self.d_e
+    }
+
+    /// Trainable parameters exactly as accounted in Section 3.2
+    /// (weights-only formula, as the paper writes it).
+    pub fn trainable_params_paper(&self) -> usize {
+        match self.variant {
+            DecoderVariant::Light => self.d_c + self.mlp_weight_params(),
+            DecoderVariant::Full => self.codebook_params() + self.mlp_weight_params(),
+        }
+    }
+
+    /// Non-trainable parameters (Light keeps `m·c·d_c` frozen codebooks,
+    /// storable off-GPU).
+    pub fn frozen_params(&self) -> usize {
+        match self.variant {
+            DecoderVariant::Light => self.codebook_params(),
+            DecoderVariant::Full => 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("coding", self.coding.to_json()),
+            ("d_c", Json::num(self.d_c as f64)),
+            ("d_m", Json::num(self.d_m as f64)),
+            ("d_e", Json::num(self.d_e as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("variant", Json::str(self.variant.as_str())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = Self {
+            coding: CodingCfg::from_json(v.get("coding")?)?,
+            d_c: v.get("d_c")?.as_usize()?,
+            d_m: v.get("d_m")?.as_usize()?,
+            d_e: v.get("d_e")?.as_usize()?,
+            l: v.get("l")?.as_usize()?,
+            variant: DecoderVariant::parse(v.get("variant")?.as_str()?)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Which coding scheme produces the compositional codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coder {
+    /// ALONE baseline: codes drawn uniformly at random.
+    Random,
+    /// The paper's contribution: random-projection LSH with median
+    /// threshold (Algorithm 1).
+    Hash,
+    /// Autoencoder baseline (Shu & Nakayama 2018) — needs pre-trained
+    /// embeddings, only valid for reconstruction experiments.
+    Learned,
+}
+
+impl Coder {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Coder::Random => "random",
+            Coder::Hash => "hash",
+            Coder::Learned => "learned",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "random" | "rand" | "alone" => Ok(Coder::Random),
+            "hash" | "hashing" | "lsh" => Ok(Coder::Hash),
+            "learned" | "learn" | "ae" => Ok(Coder::Learned),
+            other => Err(Error::Config(format!("unknown coder '{other}'"))),
+        }
+    }
+}
+
+/// GNN architecture selector (Section 5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GnnKind {
+    Sage,
+    Gcn,
+    Sgc,
+    Gin,
+}
+
+impl GnnKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GnnKind::Sage => "sage",
+            GnnKind::Gcn => "gcn",
+            GnnKind::Sgc => "sgc",
+            GnnKind::Gin => "gin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sage" | "graphsage" => Ok(GnnKind::Sage),
+            "gcn" => Ok(GnnKind::Gcn),
+            "sgc" => Ok(GnnKind::Sgc),
+            "gin" => Ok(GnnKind::Gin),
+            other => Err(Error::Config(format!("unknown gnn '{other}'"))),
+        }
+    }
+
+    pub fn all() -> [GnnKind; 4] {
+        [GnnKind::Sage, GnnKind::Gcn, GnnKind::Sgc, GnnKind::Gin]
+    }
+}
+
+/// Optimizer settings (AdamW; paper uses PyTorch defaults or lr=0.01).
+#[derive(Clone, Copy, Debug)]
+pub struct OptimCfg {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl OptimCfg {
+    /// PyTorch AdamW defaults (Appendix B.2).
+    pub fn adamw_default() -> Self {
+        Self { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
+    }
+
+    /// GNN training settings (Appendix C.1 / §5.3.2): lr=0.01, wd=0.
+    pub fn adamw_gnn() -> Self {
+        Self { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lr", Json::num(self.lr as f64)),
+            ("beta1", Json::num(self.beta1 as f64)),
+            ("beta2", Json::num(self.beta2 as f64)),
+            ("eps", Json::num(self.eps as f64)),
+            ("weight_decay", Json::num(self.weight_decay as f64)),
+        ])
+    }
+}
+
+/// Training-loop settings.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+    pub optim: OptimCfg,
+    /// Log every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl TrainCfg {
+    pub fn new(epochs: usize, batch_size: usize, seed: u64, optim: OptimCfg) -> Self {
+        Self { epochs, batch_size, seed, optim, log_every: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coding_bit_math_matches_paper_examples() {
+        // Paper §1: c=4, m=6 → 12 bits; c=64, m=8 → 48 bits.
+        assert_eq!(CodingCfg::new(4, 6).unwrap().n_bits(), 12);
+        assert_eq!(CodingCfg::new(64, 8).unwrap().n_bits(), 48);
+        // Appendix B.2: c=2, m=128 → 128 bits; c=256, m=16 → 128 bits.
+        assert_eq!(CodingCfg::new(2, 128).unwrap().n_bits(), 128);
+        assert_eq!(CodingCfg::new(256, 16).unwrap().n_bits(), 128);
+    }
+
+    #[test]
+    fn coding_rejects_non_power_of_two() {
+        assert!(CodingCfg::new(3, 8).is_err());
+        assert!(CodingCfg::new(0, 8).is_err());
+        assert!(CodingCfg::new(1, 8).is_err());
+        assert!(CodingCfg::new(2, 0).is_err());
+    }
+
+    #[test]
+    fn decoder_param_formulas() {
+        // §5.3.2 settings: l=3, d_c=d_m=512, d_e=64, c=256, m=16.
+        let cfg = DecoderCfg {
+            coding: CodingCfg::new(256, 16).unwrap(),
+            d_c: 512,
+            d_m: 512,
+            d_e: 64,
+            l: 3,
+            variant: DecoderVariant::Full,
+        };
+        assert_eq!(cfg.codebook_params(), 16 * 256 * 512);
+        assert_eq!(cfg.mlp_weight_params(), 512 * 512 + 512 * 512 + 512 * 64);
+        assert_eq!(
+            cfg.trainable_params_paper(),
+            16 * 256 * 512 + 512 * 512 + 512 * 512 + 512 * 64
+        );
+        assert_eq!(cfg.frozen_params(), 0);
+
+        let light = DecoderCfg { variant: DecoderVariant::Light, ..cfg };
+        assert_eq!(light.trainable_params_paper(), 512 + light.mlp_weight_params());
+        assert_eq!(light.frozen_params(), 16 * 256 * 512);
+    }
+
+    #[test]
+    fn decoder_validation() {
+        let mut cfg = DecoderCfg::paper_ogb(CodingCfg::new(16, 32).unwrap(), DecoderVariant::Full);
+        assert!(cfg.validate().is_ok());
+        cfg.l = 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn decoder_json_roundtrip() {
+        let cfg = DecoderCfg::paper_ogb(CodingCfg::new(16, 32).unwrap(), DecoderVariant::Light);
+        let j = cfg.to_json();
+        let back = DecoderCfg::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Coder::parse("alone").unwrap(), Coder::Random);
+        assert_eq!(Coder::parse("lsh").unwrap(), Coder::Hash);
+        assert_eq!(GnnKind::parse("graphsage").unwrap(), GnnKind::Sage);
+        assert!(GnnKind::parse("gat").is_err());
+    }
+}

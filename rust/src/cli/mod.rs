@@ -1,0 +1,209 @@
+//! Tiny declarative CLI argument parser (the offline crate set has no
+//! `clap`). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! positional subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// One option specification.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative parser: register options, then `parse` an argv tail.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Register a valued option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Register a required valued option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Register a boolean flag (false unless present).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some("false".to_string()), is_flag: true });
+        self
+    }
+
+    /// Render a --help string.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => "".to_string(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse an argv tail (e.g. `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(Error::Config(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Config(format!("unknown option --{name}\n{}", self.usage())))?
+                    .clone();
+                let value = if spec.is_flag {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| Error::Config(format!("option --{name} needs a value")))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(a);
+            }
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.default.is_none() && !self.values.contains_key(o.name) {
+                return Err(Error::Config(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be an unsigned integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be a u64")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be a float")))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name).as_str(), "true" | "1" | "yes")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = Args::new("t", "test")
+            .opt("nodes", "100", "node count")
+            .opt("seed", "42", "rng seed")
+            .flag("verbose", "chatty")
+            .parse(argv(&["--nodes", "5000", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("nodes").unwrap(), 5000);
+        assert_eq!(a.get_u64("seed").unwrap(), 42);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "test")
+            .opt("lr", "0.01", "learning rate")
+            .parse(argv(&["--lr=0.5"]))
+            .unwrap();
+        assert_eq!(a.get_f64("lr").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").opt("x", "1", "x").parse(argv(&["--bogus", "3"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let r = Args::new("t", "test").req("model", "model name").parse(argv(&[]));
+        assert!(r.is_err());
+        let ok = Args::new("t", "test")
+            .req("model", "model name")
+            .parse(argv(&["--model", "sage"]))
+            .unwrap();
+        assert_eq!(ok.get("model"), "sage");
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::new("t", "test")
+            .opt("x", "1", "x")
+            .parse(argv(&["cmd", "--x", "2", "sub"]))
+            .unwrap();
+        assert_eq!(a.positional(), &["cmd".to_string(), "sub".to_string()]);
+    }
+
+    #[test]
+    fn bad_numeric_value_reports_option() {
+        let a = Args::new("t", "test").opt("n", "1", "n").parse(argv(&["--n", "abc"])).unwrap();
+        let e = a.get_usize("n").unwrap_err();
+        assert!(format!("{e}").contains("--n"));
+    }
+}

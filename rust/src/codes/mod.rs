@@ -1,0 +1,330 @@
+//! Compositional-code storage (Section 3.1).
+//!
+//! Codes are stored **bit-packed** (`m·log2(c)` bits per node in `u64`
+//! words) "because the binary format is more space-efficient compared to
+//! the integer format", and converted back to integer vectors `(n, m)` with
+//! elements in `[0, c)` right before feeding the decoder (Figure 2's
+//! binary→integer step).
+//!
+//! Also provides the **random coding** generator — the ALONE baseline
+//! (Takase & Kobayashi 2020) the paper compares against.
+
+use crate::cfg::CodingCfg;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::{Error, Result};
+
+/// A dense `n × n_bits` bit matrix, rows packed into `u64` words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    n: usize,
+    n_bits: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-false matrix (Algorithm 1, line 3).
+    pub fn zeros(n: usize, n_bits: usize) -> Self {
+        let words_per_row = n_bits.div_ceil(64);
+        Self { n, n_bits, words_per_row, words: vec![0u64; n * words_per_row] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    /// Storage bytes (the quantity reported in Table 2).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, bit: usize, value: bool) {
+        debug_assert!(row < self.n && bit < self.n_bits);
+        let w = row * self.words_per_row + bit / 64;
+        let mask = 1u64 << (bit % 64);
+        if value {
+            self.words[w] |= mask;
+        } else {
+            self.words[w] &= !mask;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, bit: usize) -> bool {
+        debug_assert!(row < self.n && bit < self.n_bits);
+        let w = row * self.words_per_row + bit / 64;
+        (self.words[w] >> (bit % 64)) & 1 == 1
+    }
+
+    /// Raw words of one row.
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        &self.words[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    /// Number of rows that collide (i.e. `n − #distinct codes`) — the
+    /// quantity histogrammed in Figures 3 and 6.
+    pub fn n_collisions(&self) -> usize {
+        let mut seen = std::collections::HashMap::with_capacity(self.n);
+        for r in 0..self.n {
+            *seen.entry(self.row_words(r).to_vec()).or_insert(0usize) += 1;
+        }
+        self.n - seen.len()
+    }
+
+    /// Serialize to a compact binary file (little-endian header + words).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf =
+            Vec::with_capacity(24 + self.words.len() * 8);
+        buf.extend_from_slice(b"HGNC0001");
+        buf.extend_from_slice(&(self.n as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.n_bits as u64).to_le_bytes());
+        for w in &self.words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 24 || &buf[..8] != b"HGNC0001" {
+            return Err(Error::Config(format!("{}: not a code file", path.display())));
+        }
+        let n = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        let n_bits = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+        let words_per_row = n_bits.div_ceil(64);
+        let expect = 24 + n * words_per_row * 8;
+        if buf.len() != expect {
+            return Err(Error::Config(format!(
+                "{}: truncated code file ({} vs {expect} bytes)",
+                path.display(),
+                buf.len()
+            )));
+        }
+        let words = buf[24..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { n, n_bits, words_per_row, words })
+    }
+}
+
+/// A code table ready for the decoder: packed bits plus the `(c, m)` format
+/// needed to slice them into integer indices.
+#[derive(Clone, Debug)]
+pub struct CodeTable {
+    pub bits: BitMatrix,
+    pub coding: CodingCfg,
+}
+
+impl CodeTable {
+    pub fn new(bits: BitMatrix, coding: CodingCfg) -> Result<Self> {
+        if bits.n_bits() != coding.n_bits() {
+            return Err(Error::Shape(format!(
+                "bit matrix has {} bits/row but coding (c={}, m={}) needs {}",
+                bits.n_bits(),
+                coding.c,
+                coding.m,
+                coding.n_bits()
+            )));
+        }
+        Ok(Self { bits, coding })
+    }
+
+    pub fn n(&self) -> usize {
+        self.bits.n()
+    }
+
+    /// Integer code vector of one entity: `m` values in `[0, c)`.
+    /// Bit layout: element `e` occupies bits `[e·log2c, (e+1)·log2c)`,
+    /// most-significant bit first within the element (so the paper's
+    /// example `[10 00 11 01 00 01] ↔ [2,0,3,1,0,1]` holds).
+    pub fn int_code(&self, entity: usize) -> Vec<i32> {
+        let bpe = self.coding.bits_per_element();
+        let mut out = Vec::with_capacity(self.coding.m);
+        for e in 0..self.coding.m {
+            let mut v = 0i32;
+            for b in 0..bpe {
+                v = (v << 1) | i32::from(self.bits.get(entity, e * bpe + b));
+            }
+            out.push(v);
+        }
+        out
+    }
+
+    /// Gather integer codes for a slice of entity ids into a flat
+    /// `(ids.len(), m)` row-major buffer — the decoder's input tensor.
+    pub fn gather_int_codes(&self, ids: &[u32], out: &mut Vec<i32>) {
+        let bpe = self.coding.bits_per_element();
+        out.clear();
+        out.reserve(ids.len() * self.coding.m);
+        for &id in ids {
+            let entity = id as usize;
+            for e in 0..self.coding.m {
+                let mut v = 0i32;
+                for b in 0..bpe {
+                    v = (v << 1) | i32::from(self.bits.get(entity, e * bpe + b));
+                }
+                out.push(v);
+            }
+        }
+    }
+
+    /// Build from integer codes (inverse of [`Self::int_code`]).
+    pub fn from_int_codes(codes: &[i32], n: usize, coding: CodingCfg) -> Result<Self> {
+        if codes.len() != n * coding.m {
+            return Err(Error::Shape(format!(
+                "expected {} code values, got {}",
+                n * coding.m,
+                codes.len()
+            )));
+        }
+        let bpe = coding.bits_per_element();
+        let mut bits = BitMatrix::zeros(n, coding.n_bits());
+        for row in 0..n {
+            for e in 0..coding.m {
+                let v = codes[row * coding.m + e];
+                if v < 0 || v as usize >= coding.c {
+                    return Err(Error::Shape(format!("code value {v} out of [0, {})", coding.c)));
+                }
+                for b in 0..bpe {
+                    let bit = (v >> (bpe - 1 - b)) & 1 == 1;
+                    bits.set(row, e * bpe + b, bit);
+                }
+            }
+        }
+        Self::new(bits, coding)
+    }
+}
+
+/// ALONE baseline: uniformly random compositional codes (Takase &
+/// Kobayashi 2020 generate each code element uniformly in `[0, c)`).
+pub fn random_codes(n: usize, coding: CodingCfg, seed: u64) -> CodeTable {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut bits = BitMatrix::zeros(n, coding.n_bits());
+    for row in 0..n {
+        for bit in 0..coding.n_bits() {
+            bits.set(row, bit, rng.bool_with(0.5));
+        }
+    }
+    CodeTable::new(bits, coding).expect("format consistent by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coding(c: usize, m: usize) -> CodingCfg {
+        CodingCfg::new(c, m).unwrap()
+    }
+
+    #[test]
+    fn paper_example_roundtrip() {
+        // §1: code [2,0,3,1,0,1] with c=4, m=6 ↔ bits [10 00 11 01 00 01].
+        let codes = vec![2, 0, 3, 1, 0, 1];
+        let t = CodeTable::from_int_codes(&codes, 1, coding(4, 6)).unwrap();
+        let expect_bits = [true, false, false, false, true, true, false, true, false, false, false, true];
+        for (i, &e) in expect_bits.iter().enumerate() {
+            assert_eq!(t.bits.get(0, i), e, "bit {i}");
+        }
+        assert_eq!(t.int_code(0), codes);
+    }
+
+    #[test]
+    fn int_code_roundtrip_many() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for &(c, m) in &[(2usize, 128usize), (4, 64), (16, 32), (256, 16)] {
+            let cfg = coding(c, m);
+            let n = 20;
+            let codes: Vec<i32> = (0..n * m).map(|_| rng.index(c) as i32).collect();
+            let t = CodeTable::from_int_codes(&codes, n, cfg).unwrap();
+            for row in 0..n {
+                assert_eq!(t.int_code(row), codes[row * m..(row + 1) * m].to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_int_code() {
+        let t = random_codes(50, coding(16, 8), 7);
+        let ids = vec![3u32, 49, 0, 3];
+        let mut buf = Vec::new();
+        t.gather_int_codes(&ids, &mut buf);
+        assert_eq!(buf.len(), 4 * 8);
+        for (k, &id) in ids.iter().enumerate() {
+            assert_eq!(&buf[k * 8..(k + 1) * 8], t.int_code(id as usize).as_slice());
+        }
+    }
+
+    #[test]
+    fn bitmatrix_set_get() {
+        let mut b = BitMatrix::zeros(3, 100);
+        b.set(1, 63, true);
+        b.set(1, 64, true);
+        b.set(2, 99, true);
+        assert!(b.get(1, 63));
+        assert!(b.get(1, 64));
+        assert!(b.get(2, 99));
+        assert!(!b.get(0, 63));
+        b.set(1, 63, false);
+        assert!(!b.get(1, 63));
+    }
+
+    #[test]
+    fn collisions_counted() {
+        let mut b = BitMatrix::zeros(4, 8);
+        // rows 0 and 1 identical (all zero); row 2 distinct; row 3 = row 2.
+        b.set(2, 1, true);
+        b.set(3, 1, true);
+        assert_eq!(b.n_collisions(), 2);
+        b.set(3, 2, true);
+        assert_eq!(b.n_collisions(), 1);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = random_codes(17, coding(4, 10), 11);
+        let dir = std::env::temp_dir().join("hashgnn_test_codes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("codes.bin");
+        t.bits.save(&path).unwrap();
+        let back = BitMatrix::load(&path).unwrap();
+        assert_eq!(t.bits, back);
+    }
+
+    #[test]
+    fn load_rejects_corrupt() {
+        let dir = std::env::temp_dir().join("hashgnn_test_codes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a code file at all").unwrap();
+        assert!(BitMatrix::load(&path).is_err());
+    }
+
+    #[test]
+    fn random_codes_bit_balance() {
+        let t = random_codes(200, coding(2, 64), 5);
+        let ones: usize = (0..200)
+            .map(|r| (0..64).filter(|&b| t.bits.get(r, b)).count())
+            .sum();
+        let frac = ones as f64 / (200.0 * 64.0);
+        assert!((frac - 0.5).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn storage_bytes_matches_formula() {
+        let b = BitMatrix::zeros(1000, 128);
+        assert_eq!(b.storage_bytes(), 1000 * 2 * 8); // 128 bits = 2 words
+    }
+
+    #[test]
+    fn format_mismatch_rejected() {
+        let bits = BitMatrix::zeros(5, 100);
+        assert!(CodeTable::new(bits, coding(4, 64)).is_err()); // needs 128
+    }
+}

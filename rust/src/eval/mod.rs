@@ -1,0 +1,232 @@
+//! Evaluation metrics used across the paper's experiments:
+//! accuracy (§5.2/§5.3), hits@k (ogbl + merchant hit rate), NMI for node
+//! clustering (§5.1), Spearman's ρ for word similarity (§5.1), and Lloyd's
+//! k-means as the clustering substrate (paper cites Lloyd 1982).
+
+mod kmeans;
+
+pub use kmeans::kmeans;
+
+/// Classification accuracy from logits (row-major `n × k`) vs labels.
+pub fn accuracy_from_logits(logits: &[f32], n: usize, k: usize, labels: &[u32]) -> f64 {
+    assert_eq!(logits.len(), n * k);
+    assert_eq!(labels.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let pred = argmax(row);
+        if pred as u32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Hit@k from logits: fraction of rows whose true label ranks in the top-k.
+pub fn hits_at_k_from_logits(logits: &[f32], n: usize, c: usize, labels: &[u32], k: usize) -> f64 {
+    assert_eq!(logits.len(), n * c);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let true_score = row[labels[i] as usize];
+        // Rank = number of classes scoring strictly higher.
+        let higher = row.iter().filter(|&&s| s > true_score).count();
+        if higher < k {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// OGB-style link-prediction hits@k: fraction of positive edges whose score
+/// exceeds the (k-th highest) negative-edge score threshold.
+pub fn link_hits_at_k(pos_scores: &[f32], neg_scores: &[f32], k: usize) -> f64 {
+    if pos_scores.is_empty() {
+        return 0.0;
+    }
+    if neg_scores.len() < k {
+        return 1.0;
+    }
+    let mut negs = neg_scores.to_vec();
+    negs.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let threshold = negs[k - 1];
+    let hits = pos_scores.iter().filter(|&&s| s > threshold).count();
+    hits as f64 / pos_scores.len() as f64
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Spearman's rank correlation ρ (average-rank tie handling).
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let ra = ranks(a);
+    let rb = ranks(b);
+    pearson(&ra, &rb)
+}
+
+fn ranks(xs: &[f32]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut out = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        let da = a[i] - ma;
+        let db = b[i] - mb;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+/// Normalized mutual information between two labelings (arithmetic-mean
+/// normalization, the scikit-learn default the paper's protocol implies).
+pub fn nmi(a: &[u32], b: &[u32], ka: usize, kb: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut joint = vec![0.0f64; ka * kb];
+    let mut pa = vec![0.0f64; ka];
+    let mut pb = vec![0.0f64; kb];
+    for i in 0..n {
+        joint[a[i] as usize * kb + b[i] as usize] += 1.0;
+        pa[a[i] as usize] += 1.0;
+        pb[b[i] as usize] += 1.0;
+    }
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for i in 0..ka {
+        for j in 0..kb {
+            let pij = joint[i * kb + j] / nf;
+            if pij > 0.0 {
+                mi += pij * (pij / ((pa[i] / nf) * (pb[j] / nf))).ln();
+            }
+        }
+    }
+    let ha: f64 = -pa
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| (p / nf) * (p / nf).ln())
+        .sum::<f64>();
+    let hb: f64 = -pb
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| (p / nf) * (p / nf).ln())
+        .sum::<f64>();
+    if ha == 0.0 || hb == 0.0 {
+        return if ha == hb { 1.0 } else { 0.0 };
+    }
+    (mi / ((ha + hb) / 2.0)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        // 3 samples, 2 classes.
+        let logits = vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4];
+        assert_eq!(accuracy_from_logits(&logits, 3, 2, &[0, 1, 0]), 1.0);
+        assert!((accuracy_from_logits(&logits, 3, 2, &[1, 1, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hits_at_k_ordering() {
+        // 1 sample, 4 classes, true label ranked 2nd.
+        let logits = vec![0.4, 0.3, 0.2, 0.1];
+        assert_eq!(hits_at_k_from_logits(&logits, 1, 4, &[1], 1), 0.0);
+        assert_eq!(hits_at_k_from_logits(&logits, 1, 4, &[1], 2), 1.0);
+        assert_eq!(hits_at_k_from_logits(&logits, 1, 4, &[0], 1), 1.0);
+    }
+
+    #[test]
+    fn link_hits() {
+        let pos = vec![0.9, 0.5, 0.1];
+        let neg = vec![0.8, 0.6, 0.4, 0.2];
+        // k=2 → threshold is 0.6; only 0.9 exceeds.
+        assert!((link_hits_at_k(&pos, &neg, 2) - 1.0 / 3.0).abs() < 1e-12);
+        // k=4 → threshold 0.2; 0.9 and 0.5 exceed.
+        assert!((link_hits_at_k(&pos, &neg, 4) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverse() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let c = vec![40.0, 30.0, 20.0, 10.0];
+        assert!((spearman(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = vec![1.0, 1.0, 2.0];
+        let b = vec![3.0, 3.0, 5.0];
+        let rho = spearman(&a, &b);
+        assert!(rho > 0.99, "rho={rho}");
+    }
+
+    #[test]
+    fn nmi_identical_and_independent() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a, 3, 3) - 1.0).abs() < 1e-12);
+        // Permuted labels still perfect NMI.
+        let b = vec![2u32, 2, 0, 0, 1, 1];
+        assert!((nmi(&a, &b, 3, 3) - 1.0).abs() < 1e-12);
+        // Constant labeling → 0 against non-constant.
+        let c = vec![0u32; 6];
+        assert_eq!(nmi(&a, &c, 3, 1), 0.0);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

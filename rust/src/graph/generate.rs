@@ -1,0 +1,346 @@
+//! Seeded synthetic graph generators (OGB / transaction-graph analogs).
+//!
+//! | paper dataset | generator here | preserved property |
+//! |---|---|---|
+//! | ogbn-arxiv/mag/products | [`sbm`] (+ power-law via [`barabasi_albert`] mixing) | community structure ⇒ adjacency rows predict labels |
+//! | ogbl-collab/ddi | [`sbm`] without labels / [`erdos_renyi`] | link structure for edge splits |
+//! | Visa consumer–merchant graph (§5.3) | [`bipartite_transactions`] | bipartite wiring, Zipf-imbalanced categories & degrees |
+
+use super::Graph;
+use crate::rng::{Rng, Xoshiro256pp, Zipf};
+use crate::Result;
+
+/// Barabási–Albert preferential attachment: `n` nodes, `m_attach` edges per
+/// new node. Produces the heavy-tailed degree distribution of real graphs.
+pub fn barabasi_albert(n: usize, m_attach: usize, seed: u64) -> Result<Graph> {
+    assert!(n > m_attach && m_attach >= 1, "BA requires n > m_attach ≥ 1");
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_attach);
+    // Repeated-endpoint list implements preferential attachment in O(1).
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+    // Seed clique over the first m_attach+1 nodes.
+    for i in 0..=m_attach {
+        for j in 0..i {
+            edges.push((i as u32, j as u32));
+            endpoints.push(i as u32);
+            endpoints.push(j as u32);
+        }
+    }
+    for v in (m_attach + 1)..n {
+        let mut targets = std::collections::BTreeSet::new();
+        while targets.len() < m_attach {
+            let t = endpoints[rng.index(endpoints.len())];
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((v as u32, t));
+            endpoints.push(v as u32);
+            endpoints.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Stochastic-block-model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SbmCfg {
+    pub n: usize,
+    pub n_classes: usize,
+    /// Expected intra-community degree.
+    pub deg_in: f64,
+    /// Expected inter-community degree.
+    pub deg_out: f64,
+}
+
+impl SbmCfg {
+    pub fn new(n: usize, n_classes: usize, deg_in: f64, deg_out: f64) -> Self {
+        Self { n, n_classes, deg_in, deg_out }
+    }
+}
+
+/// Stochastic block model with power-law-ish degree heterogeneity
+/// (a degree-corrected SBM): nodes get a label, intra-class edges are more
+/// likely. Labels double as the node-classification target; adjacency rows
+/// carry the class signal the paper's LSH coding exploits.
+pub fn sbm(cfg: SbmCfg, seed: u64) -> Result<Graph> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    // Balanced-ish random labels.
+    let mut labels: Vec<u32> = (0..cfg.n).map(|i| (i % cfg.n_classes) as u32).collect();
+    rng.shuffle(&mut labels);
+    sbm_with_labels(cfg, labels, seed)
+}
+
+/// SBM wired around *given* community labels — used when another object
+/// (e.g. a pre-trained-embedding mixture) already fixed the communities
+/// and the graph must be consistent with them, as real graphs are with
+/// the embeddings trained on them (Figure 1's "hashing/graph" arm).
+pub fn sbm_with_labels(cfg: SbmCfg, labels: Vec<u32>, seed: u64) -> Result<Graph> {
+    let SbmCfg { n, n_classes, deg_in, deg_out } = cfg;
+    assert!(n_classes >= 2 && n >= n_classes);
+    assert_eq!(labels.len(), n);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x51B2);
+    // Degree-correction factors: Zipf-flavored weights normalized to mean 1.
+    let mut theta: Vec<f64> = (0..n).map(|_| 0.25 + rng.f64() * 1.5).collect();
+    let mean_t = theta.iter().sum::<f64>() / n as f64;
+    for t in theta.iter_mut() {
+        *t /= mean_t;
+    }
+    // Expected edges per node pair class: sample via per-node stubs to stay
+    // O(E). For each node draw ~deg_in intra and ~deg_out inter partners.
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    // Per-class node lists for partner sampling.
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i as u32);
+    }
+    for u in 0..n {
+        let l = labels[u] as usize;
+        let k_in = poisson_like(deg_in / 2.0 * theta[u], &mut rng);
+        let k_out = poisson_like(deg_out / 2.0 * theta[u], &mut rng);
+        for _ in 0..k_in {
+            let peers = &by_class[l];
+            let v = peers[rng.index(peers.len())];
+            if v as usize != u {
+                edges.push((u as u32, v));
+            }
+        }
+        for _ in 0..k_out {
+            let mut cls = rng.index(n_classes);
+            if cls == l {
+                cls = (cls + 1) % n_classes;
+            }
+            let peers = &by_class[cls];
+            let v = peers[rng.index(peers.len())];
+            edges.push((u as u32, v));
+        }
+    }
+    Graph::from_edges(n, &edges)?.with_labels(labels, n_classes)
+}
+
+/// Erdős–Rényi G(n, p) via expected-edge-count sampling.
+pub fn erdos_renyi(n: usize, avg_degree: f64, seed: u64) -> Result<Graph> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let target_edges = ((n as f64) * avg_degree / 2.0) as usize;
+    let mut edges = Vec::with_capacity(target_edges);
+    for _ in 0..target_edges {
+        let u = rng.index(n) as u32;
+        let v = rng.index(n) as u32;
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// A consumer–merchant bipartite transaction graph (§5.3 analog).
+///
+/// Node ids: consumers are `[0, n_consumers)`, merchants are
+/// `[n_consumers, n_consumers + n_merchants)`. Merchant categories are
+/// Zipf-imbalanced (restaurants ≫ ambulance services); consumers have
+/// Zipf-skewed activity and a category affinity so that a merchant's
+/// consumer neighborhood is predictive of its category.
+#[derive(Clone, Debug)]
+pub struct BipartiteGraph {
+    pub graph: Graph,
+    pub n_consumers: usize,
+    pub n_merchants: usize,
+    /// Category per merchant (index by merchant id − n_consumers).
+    pub merchant_category: Vec<u32>,
+    pub n_categories: usize,
+}
+
+pub fn bipartite_transactions(
+    n_consumers: usize,
+    n_merchants: usize,
+    n_categories: usize,
+    avg_tx_per_consumer: f64,
+    seed: u64,
+) -> Result<BipartiteGraph> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let n = n_consumers + n_merchants;
+    // Zipf-imbalanced category sizes.
+    let cat_dist = Zipf::new(n_categories, 1.05);
+    let merchant_category: Vec<u32> =
+        (0..n_merchants).map(|_| cat_dist.sample(&mut rng) as u32).collect();
+    // Merchant popularity: Zipf over merchants *within* category handled by
+    // plain Zipf rank over all merchants (some merchants see ~10⁶ consumers,
+    // some < 100 — §5.3.3).
+    let mut merchants_by_cat: Vec<Vec<u32>> = vec![Vec::new(); n_categories];
+    for (m, &c) in merchant_category.iter().enumerate() {
+        merchants_by_cat[c as usize].push(m as u32);
+    }
+    // Each consumer prefers a small set of categories (shopping habit).
+    let consumer_pref: Vec<(usize, usize)> = (0..n_consumers)
+        .map(|_| {
+            let a = cat_dist.sample(&mut rng);
+            let b = cat_dist.sample(&mut rng);
+            (a, b)
+        })
+        .collect();
+    let activity = Zipf::new(64, 1.1); // activity multiplier ranks
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for cu in 0..n_consumers {
+        let mult = 1 + activity.sample(&mut rng); // 1..=64
+        let k = ((avg_tx_per_consumer * mult as f64 / 8.0).ceil() as usize).max(1);
+        let (pa, pb) = consumer_pref[cu];
+        for _ in 0..k {
+            // 80% within preferred categories, 20% anywhere.
+            let cat = if rng.bool_with(0.8) {
+                if rng.bool_with(0.5) {
+                    pa
+                } else {
+                    pb
+                }
+            } else {
+                cat_dist.sample(&mut rng)
+            };
+            let pool = &merchants_by_cat[cat];
+            if pool.is_empty() {
+                continue;
+            }
+            // Zipf-ish within-pool popularity: square the uniform to bias
+            // toward the head.
+            let r = rng.f64();
+            let idx = ((r * r) * pool.len() as f64) as usize;
+            let m = pool[idx.min(pool.len() - 1)];
+            edges.push((cu as u32, n_consumers as u32 + m));
+        }
+    }
+    let graph = Graph::from_edges(n, &edges)?;
+    Ok(BipartiteGraph { graph, n_consumers, n_merchants, merchant_category, n_categories })
+}
+
+/// Integer draw with mean `lambda` (geometric-ish approximation of Poisson;
+/// exact distribution does not matter for the generators, the mean does).
+fn poisson_like<R: Rng>(lambda: f64, rng: &mut R) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let base = lambda.floor() as usize;
+    let frac = lambda - base as f64;
+    base + usize::from(rng.bool_with(frac))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ba_degree_heavy_tail() {
+        let g = barabasi_albert(500, 3, 1).unwrap();
+        assert_eq!(g.n_nodes(), 500);
+        let mut degs: Vec<usize> = (0..500).map(|v| g.degree(v)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // Hub exists: max degree well above attachment parameter.
+        assert!(degs[0] > 20, "max degree {}", degs[0]);
+        // Everyone connected.
+        assert!(degs[degs.len() - 1] >= 3);
+    }
+
+    #[test]
+    fn ba_deterministic() {
+        let g1 = barabasi_albert(100, 2, 7).unwrap();
+        let g2 = barabasi_albert(100, 2, 7).unwrap();
+        assert_eq!(g1.adj(), g2.adj());
+    }
+
+    #[test]
+    fn sbm_has_community_structure() {
+        let g = sbm(SbmCfg::new(600, 3, 12.0, 2.0), 42).unwrap();
+        let labels = g.labels().unwrap();
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for u in 0..g.n_nodes() {
+            for &v in g.neighbors(u) {
+                if labels[u] == labels[v as usize] {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        assert!(intra > inter * 2, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn sbm_label_balance() {
+        let g = sbm(SbmCfg::new(300, 3, 8.0, 2.0), 9).unwrap();
+        let mut counts = [0usize; 3];
+        for &l in g.labels().unwrap() {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 300);
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn er_edge_count_close() {
+        let g = erdos_renyi(1000, 10.0, 3).unwrap();
+        let e = g.undirected_edges().len();
+        assert!((4000..6000).contains(&e), "edges={e}");
+    }
+
+    #[test]
+    fn bipartite_structure_holds() {
+        let b = bipartite_transactions(400, 200, 8, 6.0, 5).unwrap();
+        let nc = b.n_consumers;
+        // No consumer-consumer or merchant-merchant edges.
+        for u in 0..b.graph.n_nodes() {
+            for &v in b.graph.neighbors(u) {
+                let u_is_c = u < nc;
+                let v_is_c = (v as usize) < nc;
+                assert_ne!(u_is_c, v_is_c, "edge within one side: {u}–{v}");
+            }
+        }
+        assert_eq!(b.merchant_category.len(), 200);
+        assert!(b.merchant_category.iter().all(|&c| (c as usize) < 8));
+    }
+
+    #[test]
+    fn bipartite_category_imbalance() {
+        let b = bipartite_transactions(100, 2000, 16, 4.0, 11).unwrap();
+        let mut counts = vec![0usize; 16];
+        for &c in &b.merchant_category {
+            counts[c as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > min * 4, "imbalance expected: max={max} min={min}");
+    }
+
+    #[test]
+    fn bipartite_neighborhood_predicts_category() {
+        // Merchants of the same category should share more consumers than
+        // merchants of different categories (this is what makes LSH coding
+        // of adjacency rows informative).
+        let b = bipartite_transactions(800, 100, 4, 12.0, 13).unwrap();
+        let nc = b.n_consumers;
+        let sets: Vec<std::collections::HashSet<u32>> = (0..b.n_merchants)
+            .map(|m| b.graph.neighbors(nc + m).iter().copied().collect())
+            .collect();
+        let mut same = 0.0;
+        let mut same_n = 0;
+        let mut diff = 0.0;
+        let mut diff_n = 0;
+        for i in 0..b.n_merchants {
+            for j in (i + 1)..b.n_merchants {
+                if sets[i].is_empty() || sets[j].is_empty() {
+                    continue;
+                }
+                let inter = sets[i].intersection(&sets[j]).count() as f64;
+                let uni = sets[i].union(&sets[j]).count() as f64;
+                let jac = inter / uni;
+                if b.merchant_category[i] == b.merchant_category[j] {
+                    same += jac;
+                    same_n += 1;
+                } else {
+                    diff += jac;
+                    diff_n += 1;
+                }
+            }
+        }
+        let same_avg = same / same_n.max(1) as f64;
+        let diff_avg = diff / diff_n.max(1) as f64;
+        assert!(same_avg > diff_avg, "same={same_avg:.4} diff={diff_avg:.4}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Graph substrate: the [`Graph`] type plus synthetic generators, fan-out
+//! neighbor sampling (GraphSAGE-style, Section 4), and train/val/test
+//! splitting.
+//!
+//! The OGB datasets and the in-house Visa transaction graph used by the
+//! paper are not available here; [`generate`] provides seeded synthetic
+//! analogs whose properties (community structure for labels, power-law
+//! degrees, bipartite consumer–merchant wiring, class imbalance) exercise
+//! the same code paths — see DESIGN.md §4.
+
+pub mod generate;
+pub mod sample;
+pub mod split;
+
+pub use generate::{barabasi_albert, bipartite_transactions, erdos_renyi, sbm, sbm_with_labels, BipartiteGraph, SbmCfg};
+pub use sample::NeighborSampler;
+pub use split::{split_nodes, Split};
+
+use crate::sparse::Csr;
+use crate::Result;
+
+/// An undirected graph stored as a symmetric CSR adjacency, with optional
+/// node labels (for node classification tasks).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    adj: Csr,
+    labels: Option<Vec<u32>>,
+    n_classes: usize,
+}
+
+impl Graph {
+    /// Build from an edge list; the adjacency is symmetrized (the paper
+    /// converts all directed graphs to undirected, §5.2.1).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Result<Self> {
+        let adj = Csr::from_edges(n, edges)?.symmetrize()?;
+        Ok(Self { adj, labels: None, n_classes: 0 })
+    }
+
+    /// Attach node labels in `[0, n_classes)`.
+    pub fn with_labels(mut self, labels: Vec<u32>, n_classes: usize) -> Result<Self> {
+        if labels.len() != self.n_nodes() {
+            return Err(crate::Error::Shape(format!(
+                "labels length {} != n_nodes {}",
+                labels.len(),
+                self.n_nodes()
+            )));
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= n_classes) {
+            return Err(crate::Error::Shape(format!("label {bad} ≥ n_classes {n_classes}")));
+        }
+        self.labels = Some(labels);
+        self.n_classes = n_classes;
+        Ok(self)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.adj.n_rows()
+    }
+
+    pub fn n_edges_directed(&self) -> usize {
+        self.adj.nnz()
+    }
+
+    pub fn adj(&self) -> &Csr {
+        &self.adj
+    }
+
+    pub fn labels(&self) -> Option<&[u32]> {
+        self.labels.as_deref()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        self.adj.row_indices(v)
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj.degree(v)
+    }
+
+    /// All undirected edges as (u, v) with u < v (for link-prediction
+    /// splits).
+    pub fn undirected_edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.adj.nnz() / 2);
+        for u in 0..self.n_nodes() {
+            for &v in self.adj.row_indices(u) {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// True if the edge (u, v) exists.
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj.row_indices(u).binary_search(&(v as u32)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_symmetrizes() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        assert!(g.has_edge(1, 0));
+        assert!(g.has_edge(2, 1));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn labels_validated() {
+        let g = Graph::from_edges(3, &[(0, 1)]).unwrap();
+        assert!(g.clone().with_labels(vec![0, 1, 2], 3).is_ok());
+        assert!(g.clone().with_labels(vec![0, 1], 3).is_err());
+        assert!(g.clone().with_labels(vec![0, 1, 5], 3).is_err());
+    }
+
+    #[test]
+    fn undirected_edges_unique() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 0), (2, 3)]).unwrap();
+        let e = g.undirected_edges();
+        assert_eq!(e, vec![(0, 1), (2, 3)]);
+    }
+}

@@ -1,0 +1,128 @@
+//! GraphSAGE-style fan-out neighbor sampling (Section 4, steps 1–2).
+//!
+//! For a batch of target nodes the sampler draws `k1` first neighbors per
+//! node and `k2` second neighbors per first neighbor, **with replacement**
+//! (matching the reference GraphSAGE implementation the paper uses), so the
+//! output tensors have static shapes `(B, k1)` and `(B, k1, k2)` — a
+//! requirement for the AOT-compiled executables.
+//!
+//! Isolated nodes self-loop: a node with no neighbors samples itself.
+
+use super::Graph;
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Two-hop fan-out sample for one batch.
+#[derive(Clone, Debug)]
+pub struct FanoutSample {
+    /// Target nodes, length `b`.
+    pub batch: Vec<u32>,
+    /// First neighbors, row-major `(b, k1)`.
+    pub hop1: Vec<u32>,
+    /// Second neighbors, row-major `(b, k1, k2)`.
+    pub hop2: Vec<u32>,
+    pub k1: usize,
+    pub k2: usize,
+}
+
+/// Reusable sampler over a graph.
+pub struct NeighborSampler<'g> {
+    graph: &'g Graph,
+    k1: usize,
+    k2: usize,
+}
+
+impl<'g> NeighborSampler<'g> {
+    pub fn new(graph: &'g Graph, k1: usize, k2: usize) -> Self {
+        Self { graph, k1, k2 }
+    }
+
+    #[inline]
+    fn sample_neighbor<R: Rng>(&self, v: u32, rng: &mut R) -> u32 {
+        let nbrs = self.graph.neighbors(v as usize);
+        if nbrs.is_empty() {
+            v // isolated node: self-loop
+        } else {
+            nbrs[rng.index(nbrs.len())]
+        }
+    }
+
+    /// Sample the two-hop neighborhood of `batch`.
+    pub fn sample<R: Rng>(&self, batch: &[u32], rng: &mut R) -> FanoutSample {
+        let b = batch.len();
+        let mut hop1 = Vec::with_capacity(b * self.k1);
+        let mut hop2 = Vec::with_capacity(b * self.k1 * self.k2);
+        for &u in batch {
+            for _ in 0..self.k1 {
+                let n1 = self.sample_neighbor(u, rng);
+                hop1.push(n1);
+                for _ in 0..self.k2 {
+                    hop2.push(self.sample_neighbor(n1, rng));
+                }
+            }
+        }
+        FanoutSample { batch: batch.to_vec(), hop1, hop2, k1: self.k1, k2: self.k2 }
+    }
+
+    /// Convenience: deterministic sample with an explicit seed.
+    pub fn sample_seeded(&self, batch: &[u32], seed: u64) -> FanoutSample {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        self.sample(batch, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{barabasi_albert, erdos_renyi};
+
+    #[test]
+    fn shapes_are_static() {
+        let g = barabasi_albert(200, 3, 1).unwrap();
+        let s = NeighborSampler::new(&g, 5, 3);
+        let sample = s.sample_seeded(&[0, 1, 2, 3], 9);
+        assert_eq!(sample.hop1.len(), 4 * 5);
+        assert_eq!(sample.hop2.len(), 4 * 5 * 3);
+    }
+
+    #[test]
+    fn sampled_nodes_are_neighbors() {
+        let g = erdos_renyi(100, 8.0, 2).unwrap();
+        let s = NeighborSampler::new(&g, 4, 2);
+        let batch: Vec<u32> = (0..10).collect();
+        let sample = s.sample_seeded(&batch, 3);
+        for (i, &u) in batch.iter().enumerate() {
+            for j in 0..4 {
+                let n1 = sample.hop1[i * 4 + j];
+                assert!(
+                    g.neighbors(u as usize).contains(&n1) || n1 == u,
+                    "{n1} not neighbor of {u}"
+                );
+                for l in 0..2 {
+                    let n2 = sample.hop2[(i * 4 + j) * 2 + l];
+                    assert!(g.neighbors(n1 as usize).contains(&n2) || n2 == n1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_node_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1)]).unwrap(); // node 2 isolated
+        let s = NeighborSampler::new(&g, 3, 2);
+        let sample = s.sample_seeded(&[2], 1);
+        assert!(sample.hop1.iter().all(|&v| v == 2));
+        assert!(sample.hop2.iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = barabasi_albert(100, 2, 5).unwrap();
+        let s = NeighborSampler::new(&g, 4, 4);
+        let a = s.sample_seeded(&[1, 2, 3], 7);
+        let b = s.sample_seeded(&[1, 2, 3], 7);
+        assert_eq!(a.hop1, b.hop1);
+        assert_eq!(a.hop2, b.hop2);
+        let c = s.sample_seeded(&[1, 2, 3], 8);
+        assert_ne!(a.hop1, c.hop1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Train/validation/test node and edge splitting.
+//!
+//! The paper uses 70/10/20 node splits for the merchant task (§5.3.1) and
+//! the OGB-provided splits for §5.2; here all splits are seeded random
+//! partitions with the same fractions.
+
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::{Error, Result};
+
+/// Index split into train/val/test.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Split {
+    pub fn total(&self) -> usize {
+        self.train.len() + self.val.len() + self.test.len()
+    }
+}
+
+/// Randomly split `items` with the given train/val fractions (test gets the
+/// remainder).
+pub fn split_items(items: &[u32], frac_train: f64, frac_val: f64, seed: u64) -> Result<Split> {
+    if !(0.0..=1.0).contains(&frac_train)
+        || !(0.0..=1.0).contains(&frac_val)
+        || frac_train + frac_val > 1.0
+    {
+        return Err(Error::Config(format!(
+            "invalid split fractions train={frac_train} val={frac_val}"
+        )));
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut perm: Vec<u32> = items.to_vec();
+    rng.shuffle(&mut perm);
+    let n = perm.len();
+    let n_train = (n as f64 * frac_train).round() as usize;
+    let n_val = (n as f64 * frac_val).round() as usize;
+    let n_val_end = (n_train + n_val).min(n);
+    Ok(Split {
+        train: perm[..n_train].to_vec(),
+        val: perm[n_train..n_val_end].to_vec(),
+        test: perm[n_val_end..].to_vec(),
+    })
+}
+
+/// Split all nodes `0..n`.
+pub fn split_nodes(n: usize, frac_train: f64, frac_val: f64, seed: u64) -> Result<Split> {
+    let items: Vec<u32> = (0..n as u32).collect();
+    split_items(&items, frac_train, frac_val, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_exact() {
+        let s = split_nodes(1000, 0.7, 0.1, 4).unwrap();
+        assert_eq!(s.total(), 1000);
+        assert_eq!(s.train.len(), 700);
+        assert_eq!(s.val.len(), 100);
+        assert_eq!(s.test.len(), 200);
+        let mut all: Vec<u32> = s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = split_nodes(100, 0.5, 0.25, 1).unwrap();
+        let b = split_nodes(100, 0.5, 0.25, 1).unwrap();
+        let c = split_nodes(100, 0.5, 0.25, 2).unwrap();
+        assert_eq!(a.train, b.train);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn bad_fractions_rejected() {
+        assert!(split_nodes(10, 0.9, 0.2, 1).is_err());
+        assert!(split_nodes(10, -0.1, 0.2, 1).is_err());
+    }
+
+    #[test]
+    fn subset_split() {
+        let items: Vec<u32> = vec![5, 9, 12, 40, 41, 42, 43, 44, 45, 46];
+        let s = split_items(&items, 0.6, 0.2, 7).unwrap();
+        assert_eq!(s.train.len(), 6);
+        assert_eq!(s.val.len(), 2);
+        assert_eq!(s.test.len(), 2);
+        for v in s.train.iter().chain(&s.val).chain(&s.test) {
+            assert!(items.contains(v));
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! # hashgnn
+//!
+//! Reproduction of *"Embedding Compression with Hashing for Efficient
+//! Representation Learning in Large-Scale Graph"* (Yeh et al., KDD 2022).
+//!
+//! The library replaces a GNN's `n × d_e` input-embedding table with:
+//!
+//! 1. an **encoding stage** ([`lsh`]) that assigns every node an
+//!    `m·log2(c)`-bit compositional code via random-projection LSH over
+//!    auxiliary information (adjacency rows or pre-trained embeddings),
+//!    binarized at the **median** to minimize collisions (Algorithm 1), and
+//! 2. a **decoding stage** (AOT-compiled JAX/Pallas, executed through
+//!    [`runtime`]) that maps codes through `m` codebooks + an MLP to dense
+//!    embeddings, trained end-to-end with the GNN.
+//!
+//! Layer 3 (this crate) owns the whole request/training path: graph
+//! substrates, code generation, batch pipelines, PJRT execution, parameter
+//! state, metrics, and the experiment drivers that regenerate every table
+//! and figure of the paper. Python/JAX runs only at build time
+//! (`make artifacts`).
+//!
+//! ## Module map
+//!
+//! | layer | modules |
+//! |---|---|
+//! | substrates | [`rng`], [`ser`], [`cli`], [`cfg`], [`sparse`], [`graph`], [`embed`] |
+//! | paper core | [`lsh`] (Algorithm 1), [`codes`] (compositional codes) |
+//! | runtime    | [`runtime`] (PJRT), [`params`], [`train`] |
+//! | evaluation | [`eval`], [`tasks`], [`report`] |
+//! | dev        | [`testing`] (property-test harness) |
+
+pub mod cfg;
+pub mod cli;
+pub mod codes;
+pub mod embed;
+pub mod eval;
+pub mod graph;
+pub mod lsh;
+pub mod params;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod ser;
+pub mod sparse;
+pub mod tasks;
+pub mod testing;
+pub mod train;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,126 @@
+//! O(n) median selection (Algorithm 1 line 9; the paper cites the Blum
+//! et al. 1973 selection bound). Implemented as in-place quickselect with
+//! median-of-three pivoting — O(n) expected, and the input is a fresh
+//! scratch buffer so in-place partitioning is free.
+
+/// Median of a slice, computed by quickselect. For even lengths returns the
+/// lower median (any split point with half the mass below is a valid LSH
+/// threshold; the lower median guarantees `> t` selects ≤ half the items).
+/// NaNs are not expected (projections of finite data) and will panic in
+/// debug builds.
+pub fn median_in_place(xs: &mut [f32]) -> f32 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let k = (xs.len() - 1) / 2;
+    quickselect(xs, k)
+}
+
+/// The k-th smallest element (0-based), partially sorting `xs`.
+fn quickselect(xs: &mut [f32], k: usize) -> f32 {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    let mut k = k;
+    loop {
+        if hi - lo <= 8 {
+            xs[lo..hi].sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN in median input"));
+            return xs[lo + k];
+        }
+        let pivot = median_of_three(xs[lo], xs[lo + (hi - lo) / 2], xs[hi - 1]);
+        // Three-way partition (Dutch national flag) to handle duplicates.
+        let (mut lt, mut i, mut gt) = (lo, lo, hi);
+        while i < gt {
+            if xs[i] < pivot {
+                xs.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if xs[i] > pivot {
+                gt -= 1;
+                xs.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        let n_lt = lt - lo;
+        let n_eq = gt - lt;
+        if k < n_lt {
+            hi = lt;
+        } else if k < n_lt + n_eq {
+            return pivot;
+        } else {
+            k -= n_lt + n_eq;
+            lo = gt;
+        }
+    }
+}
+
+#[inline]
+fn median_of_three(a: f32, b: f32, c: f32) -> f32 {
+    if (a <= b) == (b <= c) {
+        b
+    } else if (b <= a) == (a <= c) {
+        a
+    } else {
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn median_by_sort(xs: &[f32]) -> f32 {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[(v.len() - 1) / 2]
+    }
+
+    #[test]
+    fn matches_sort_based_median() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for trial in 0..200 {
+            let n = 1 + rng.index(500);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 10.0) as f32).collect();
+            let expect = median_by_sort(&xs);
+            let mut buf = xs.clone();
+            let got = median_in_place(&mut buf);
+            assert_eq!(got, expect, "trial {trial}, n={n}");
+        }
+    }
+
+    #[test]
+    fn handles_duplicates() {
+        let mut xs = vec![3.0f32; 100];
+        assert_eq!(median_in_place(&mut xs), 3.0);
+        let mut xs: Vec<f32> = (0..101).map(|i| if i < 60 { 1.0 } else { 2.0 }).collect();
+        assert_eq!(median_in_place(&mut xs), 1.0);
+    }
+
+    #[test]
+    fn single_and_pair() {
+        assert_eq!(median_in_place(&mut [5.0]), 5.0);
+        assert_eq!(median_in_place(&mut [2.0, 1.0]), 1.0); // lower median
+    }
+
+    #[test]
+    fn split_property_for_lsh() {
+        // Strictly-greater-than-median count must be ≤ n/2 — the property
+        // the LSH bit balance relies on.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for _ in 0..50 {
+            let n = 10 + rng.index(200);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut buf = xs.clone();
+            let t = median_in_place(&mut buf);
+            let above = xs.iter().filter(|&&x| x > t).count();
+            assert!(above <= n / 2, "n={n} above={above}");
+        }
+    }
+
+    #[test]
+    fn sorted_and_reversed_inputs() {
+        let mut asc: Vec<f32> = (0..999).map(|i| i as f32).collect();
+        assert_eq!(median_in_place(&mut asc), 499.0);
+        let mut desc: Vec<f32> = (0..999).rev().map(|i| i as f32).collect();
+        assert_eq!(median_in_place(&mut desc), 499.0);
+    }
+}

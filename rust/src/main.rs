@@ -1,0 +1,245 @@
+//! `hashgnn` — CLI for the embedding-compression GNN stack.
+//!
+//! Subcommands:
+//!   encode      generate a synthetic graph and produce compositional codes
+//!   train       end-to-end minibatch GraphSAGE training (coded or NC)
+//!   merchant    §5.3 merchant-category pipeline (Table 3)
+//!   collisions  Figure 3/6 median-vs-zero threshold experiment
+//!   memory      Tables 2/4/6 memory accounting
+//!   artifacts   list available AOT artifacts
+//!
+//! Every experiment is seeded and reproducible; benches that regenerate
+//! the paper's tables live under `cargo bench` (see DESIGN.md §6).
+
+use std::sync::Arc;
+
+use hashgnn::cfg::{Coder, CodingCfg};
+use hashgnn::cli::Args;
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::report::{self, Table};
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::{coding, collisions, memory, merchant, sage};
+use hashgnn::{embed, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = argv.into_iter().skip(1).collect();
+    let outcome = match cmd.as_str() {
+        "encode" => cmd_encode(rest),
+        "train" => cmd_train(rest),
+        "merchant" => cmd_merchant(rest),
+        "collisions" => cmd_collisions(rest),
+        "memory" => cmd_memory(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = outcome {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hashgnn — embedding compression with hashing for GNNs (KDD'22 reproduction)\n\n\
+         commands:\n\
+         \x20 encode      generate graph, run Algorithm 1, save/report codes\n\
+         \x20 train       end-to-end minibatch GraphSAGE training\n\
+         \x20 merchant    merchant-category identification pipeline (§5.3)\n\
+         \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
+         \x20 memory      memory accounting tables (Tables 2/4/6)\n\
+         \x20 artifacts   list AOT artifacts\n\n\
+         run `hashgnn <command> --help` for options"
+    );
+}
+
+fn cmd_encode(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn encode", "Algorithm 1 over a synthetic graph")
+        .opt("nodes", "10000", "number of nodes")
+        .opt("classes", "8", "SBM communities")
+        .opt("c", "16", "code cardinality (power of two)")
+        .opt("m", "32", "code length")
+        .opt("coder", "hash", "coding scheme: hash | random")
+        .opt("seed", "7", "rng seed")
+        .opt("out", "", "output file for the bit-packed codes (optional)")
+        .parse(argv)?;
+    let n = a.get_usize("nodes")?;
+    let coding_cfg = CodingCfg::new(a.get_usize("c")?, a.get_usize("m")?)?;
+    let coder = Coder::parse(&a.get("coder"))?;
+    let seed = a.get_u64("seed")?;
+    eprintln!("[encode] generating SBM graph n={n} ...");
+    let g = sbm(SbmCfg::new(n, a.get_usize("classes")?, 12.0, 2.0), seed)?;
+    let t0 = std::time::Instant::now();
+    let table = coding::make_codes(&coding::Aux::Graph(&g), coder, coding_cfg, seed)?;
+    let dt = t0.elapsed();
+    println!(
+        "encoded {n} nodes -> {} bits/node ({} KiB total) in {:.2}s ({:.0} nodes/s)",
+        coding_cfg.n_bits(),
+        table.bits.storage_bytes() / 1024,
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("collisions: {}", table.bits.n_collisions());
+    let out = a.get("out");
+    if !out.is_empty() {
+        table.bits.save(std::path::Path::new(&out))?;
+        println!("codes written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn train", "end-to-end minibatch GraphSAGE node classification")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("coder", "hash", "feature front-end: hash | random | nc")
+        .opt("epochs", "5", "training epochs")
+        .opt("seed", "7", "rng seed")
+        .opt("log-every", "10", "loss log interval (steps)")
+        .parse(argv)?;
+    let engine = Engine::cpu(a.get("artifacts"))?;
+    let coded = a.get("coder") != "nc";
+    let name = if coded { "sage_mb_coded" } else { "sage_mb_nc" };
+    let model = engine.load(name)?;
+    let n = model.manifest.hyper_usize("n")?;
+    let k = model.manifest.hyper_usize("n_classes")?;
+    let seed = a.get_u64("seed")?;
+    eprintln!("[train] generating SBM graph n={n}, {k} classes ...");
+    let g = Arc::new(sbm(SbmCfg::new(n, k, 12.0, 2.0), seed)?);
+    let labels = Arc::new(g.labels().expect("sbm labels").to_vec());
+    let make_features = || -> Result<sage::Features> {
+        if coded {
+            let coding_cfg = CodingCfg::new(
+                model.manifest.hyper_usize("c")?,
+                model.manifest.hyper_usize("m")?,
+            )?;
+            let coder = Coder::parse(&a.get("coder"))?;
+            let codes = coding::make_codes(&coding::Aux::Graph(&g), coder, coding_cfg, seed)?;
+            Ok(sage::Features::Codes(Arc::new(codes)))
+        } else {
+            Ok(sage::Features::Ids)
+        }
+    };
+    if coded {
+        eprintln!("[train] encoding ({}) ...", a.get("coder"));
+    }
+    let split = hashgnn::graph::split_nodes(n, 0.7, 0.1, seed ^ 0xA5)?;
+    let task = sage::SageTask {
+        graph: g.clone(),
+        labels: labels.clone(),
+        features: make_features()?,
+        train_nodes: Arc::new(split.train.clone()),
+    };
+    let epochs = a.get_usize("epochs")?;
+    eprintln!("[train] {epochs} epochs ...");
+    let run = sage::train_sage(&model, task, epochs, &split.val, seed, a.get_u64("log-every")?)?;
+    let batcher = sage::SageBatcher::new(
+        sage::SageTask {
+            graph: g.clone(),
+            labels,
+            features: make_features()?,
+            train_nodes: Arc::new(split.train),
+        },
+        &model,
+        seed,
+    )?;
+    let test = sage::evaluate(&model, &run.store, &batcher, &split.test, seed ^ 0x99)?;
+    println!(
+        "val acc {:.4} | test acc {:.4} | final loss {:.4}",
+        run.best_val.accuracy,
+        test.accuracy,
+        run.losses.last().copied().unwrap_or(f32::NAN)
+    );
+    Ok(())
+}
+
+fn cmd_merchant(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn merchant", "merchant-category identification (§5.3)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("coder", "hash", "coding scheme: hash | random")
+        .opt("epochs", "3", "training epochs")
+        .opt("seed", "11", "rng seed")
+        .parse(argv)?;
+    let engine = Engine::cpu(a.get("artifacts"))?;
+    let model = engine.load("merchant")?;
+    let seed = a.get_u64("seed")?;
+    eprintln!("[merchant] building transaction graph ...");
+    let bip = merchant::build_graph(&model, seed)?;
+    let coder = Coder::parse(&a.get("coder"))?;
+    let out = merchant::run(&engine, &bip, coder, a.get_usize("epochs")?, seed)?;
+    println!(
+        "{}: acc {:.4} | hit@5 {:.4} | hit@10 {:.4} | hit@20 {:.4}",
+        coder.as_str(),
+        out.metrics.accuracy,
+        out.metrics.hit5,
+        out.metrics.hit10,
+        out.metrics.hit20
+    );
+    Ok(())
+}
+
+fn cmd_collisions(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn collisions", "Fig. 3/6 median-vs-zero thresholds")
+        .opt("entities", "20000", "number of entities")
+        .opt("bits", "24", "code bits")
+        .opt("trials", "20", "number of trials")
+        .opt("seed", "3", "rng seed")
+        .parse(argv)?;
+    let n = a.get_usize("entities")?;
+    let set = embed::gaussian_mixture(n, 128, 8, 0.25, a.get_u64("seed")?);
+    let r =
+        collisions::run("metapath2vec*", &set, a.get_usize("bits")?, a.get_usize("trials")?, 100);
+    println!("{}", report::histogram("median threshold", &r.median, 8));
+    println!("{}", report::histogram("zero threshold", &r.zero, 8));
+    println!("avg collisions: median {:.1} | zero {:.1}", r.median_avg(), r.zero_avg());
+    Ok(())
+}
+
+fn cmd_memory(argv: Vec<String>) -> Result<()> {
+    let _a = Args::new("hashgnn memory", "Tables 2/4/6 memory accounting").parse(argv)?;
+    let coding_cfg = CodingCfg::new(256, 16)?;
+    let rows = memory::table2(1_871_031, 64, coding_cfg, 512, 512, (1.35 * memory::MIB) as usize);
+    let mut t = Table::new(
+        "Table 2 — memory cost (MiB) on ogbn-products (paper scale)",
+        &[
+            "Method", "CPU code", "CPU dec", "CPU tot", "GPU model", "GPU gnn", "GPU tot",
+            "GPU ratio", "Total", "Ratio",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            format!("{:.2}", r.cpu_code),
+            format!("{:.2}", r.cpu_decoder),
+            format!("{:.2}", r.cpu_total),
+            format!("{:.2}", r.gpu_model),
+            format!("{:.2}", r.gpu_gnn),
+            format!("{:.2}", r.gpu_total),
+            format!("{:.2}", r.gpu_ratio),
+            format!("{:.2}", r.total),
+            format!("{:.2}", r.total_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn artifacts", "list AOT artifacts")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(argv)?;
+    let idx = std::path::Path::new(&a.get("artifacts")).join("index.json");
+    let v = hashgnn::ser::from_file(&idx)?;
+    for name in v.get("artifacts")?.as_arr()? {
+        println!("{}", name.as_str()?);
+    }
+    Ok(())
+}

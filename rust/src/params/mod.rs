@@ -1,0 +1,258 @@
+//! Parameter state: initialization from manifest specs, AdamW moment
+//! buffers, checkpointing. The executables are pure functions — all state
+//! lives here, threaded through every call (DESIGN.md §8.1).
+
+use std::path::Path;
+
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{InitKind, Manifest, Tensor};
+use crate::{Error, Result};
+
+/// All state for one model: parameters + AdamW moments + step counter.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl ParamStore {
+    /// Initialize from manifest specs (rules mirror
+    /// `python/compile/specs.py`): xavier_uniform uses fan_in/fan_out =
+    /// first/last dims; normal uses the recorded std; zeros/ones as named.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            let n = spec.n_elements();
+            let mut data = vec![0.0f32; n];
+            match spec.init {
+                InitKind::Zeros => {}
+                InitKind::Ones => data.fill(1.0),
+                InitKind::Normal { std } => rng.fill_normal_f32(&mut data, 0.0, std),
+                InitKind::XavierUniform => {
+                    let fan_in = *spec.shape.first().unwrap_or(&1) as f64;
+                    let fan_out = *spec.shape.last().unwrap_or(&1) as f64;
+                    let a = (6.0 / (fan_in + fan_out)).sqrt() as f32;
+                    rng.fill_uniform_f32(&mut data, -a, a);
+                }
+            }
+            params.push(Tensor::F32 { shape: spec.shape.clone(), data });
+        }
+        let adam_m = manifest.params.iter().map(|s| Tensor::zeros_f32(&s.shape)).collect();
+        let adam_v = manifest.params.iter().map(|s| Tensor::zeros_f32(&s.shape)).collect();
+        Self { params, adam_m, adam_v, step: 0 }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Assemble the train-step input vector:
+    /// `[params…, m…, v…, step, batch…]`.
+    pub fn train_inputs(&self, batch: &[Tensor]) -> Vec<Tensor> {
+        let mut inputs = Vec::with_capacity(3 * self.params.len() + 1 + batch.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.adam_m.iter().cloned());
+        inputs.extend(self.adam_v.iter().cloned());
+        inputs.push(Tensor::scalar_f32(self.step as f32));
+        inputs.extend(batch.iter().cloned());
+        inputs
+    }
+
+    /// Assemble the predict input vector: `[params…, batch…]`.
+    pub fn pred_inputs(&self, batch: &[Tensor]) -> Vec<Tensor> {
+        let mut inputs = Vec::with_capacity(self.params.len() + batch.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(batch.iter().cloned());
+        inputs
+    }
+
+    /// Absorb a train-step output tuple `(params…, m…, v…, loss)`;
+    /// returns the loss.
+    pub fn absorb(&mut self, mut outputs: Vec<Tensor>) -> Result<f32> {
+        let p = self.params.len();
+        if outputs.len() != 3 * p + 1 {
+            return Err(Error::Runtime(format!(
+                "train step returned {} tensors, expected {}",
+                outputs.len(),
+                3 * p + 1
+            )));
+        }
+        let loss = outputs.pop().expect("checked length").scalar()?;
+        let vs = outputs.split_off(2 * p);
+        let ms = outputs.split_off(p);
+        self.params = outputs;
+        self.adam_m = ms;
+        self.adam_v = vs;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Parameter bytes (f32), the Table-2 accounting unit.
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|t| t.len() * 4).sum()
+    }
+
+    /// Save a checkpoint (params + moments + step) to a binary file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"HGNP0001");
+        buf.extend_from_slice(&(self.step).to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for group in [&self.params, &self.adam_m, &self.adam_v] {
+            for t in group.iter() {
+                let data = t.as_f32()?;
+                let shape = t.shape();
+                buf.extend_from_slice(&(shape.len() as u64).to_le_bytes());
+                for &d in shape {
+                    buf.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                for &x in data {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by [`Self::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 24 || &buf[..8] != b"HGNP0001" {
+            return Err(Error::Config(format!("{}: not a checkpoint", path.display())));
+        }
+        let mut pos = 8usize;
+        let read_u64 = |buf: &[u8], pos: &mut usize| -> Result<u64> {
+            if *pos + 8 > buf.len() {
+                return Err(Error::Config("truncated checkpoint".into()));
+            }
+            let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            Ok(v)
+        };
+        let step = read_u64(&buf, &mut pos)?;
+        let n = read_u64(&buf, &mut pos)? as usize;
+        let mut groups: Vec<Vec<Tensor>> = Vec::with_capacity(3);
+        for _ in 0..3 {
+            let mut group = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = read_u64(&buf, &mut pos)? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(read_u64(&buf, &mut pos)? as usize);
+                }
+                let count: usize = shape.iter().product();
+                if pos + count * 4 > buf.len() {
+                    return Err(Error::Config("truncated checkpoint data".into()));
+                }
+                let data: Vec<f32> = buf[pos..pos + count * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                pos += count * 4;
+                group.push(Tensor::F32 { shape, data });
+            }
+            groups.push(group);
+        }
+        let adam_v = groups.pop().expect("3 groups");
+        let adam_m = groups.pop().expect("2 groups");
+        let params = groups.pop().expect("1 group");
+        Ok(Self { params, adam_m, adam_v, step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    fn manifest() -> Manifest {
+        let j = parse(
+            r#"{
+          "name": "t",
+          "params": [
+            {"name": "a", "shape": [4, 6], "init": "xavier_uniform", "std": 0.0, "trainable": true},
+            {"name": "b", "shape": [6], "init": "zeros", "std": 0.0, "trainable": true},
+            {"name": "c", "shape": [2, 3], "init": "normal", "std": 2.0, "trainable": false},
+            {"name": "d", "shape": [3], "init": "ones", "std": 0.0, "trainable": true}
+          ],
+          "train_inputs": [],
+          "pred_inputs": [],
+          "pred_output": {"name": "x", "shape": [1], "dtype": "f32"},
+          "hyper": {}
+        }"#,
+        )
+        .unwrap();
+        Manifest::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let store = ParamStore::init(&manifest(), 1);
+        // xavier bounds: sqrt(6/10) ≈ 0.7746.
+        let a = store.params[0].as_f32().unwrap();
+        let bound = (6.0f32 / 10.0).sqrt() + 1e-6;
+        assert!(a.iter().all(|&x| x.abs() <= bound));
+        assert!(a.iter().any(|&x| x != 0.0));
+        assert!(store.params[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        let c = store.params[2].as_f32().unwrap();
+        assert!(c.iter().any(|&x| x.abs() > 0.5)); // std=2 normal
+        assert!(store.params[3].as_f32().unwrap().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ParamStore::init(&manifest(), 42);
+        let b = ParamStore::init(&manifest(), 42);
+        let c = ParamStore::init(&manifest(), 43);
+        assert_eq!(a.params, b.params);
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn train_inputs_layout() {
+        let store = ParamStore::init(&manifest(), 1);
+        let batch = vec![Tensor::scalar_f32(9.0)];
+        let inputs = store.train_inputs(&batch);
+        assert_eq!(inputs.len(), 3 * 4 + 1 + 1);
+        assert_eq!(inputs[12].scalar().unwrap(), 0.0); // step
+        assert_eq!(inputs[13].scalar().unwrap(), 9.0); // batch
+    }
+
+    #[test]
+    fn absorb_roundtrip() {
+        let mut store = ParamStore::init(&manifest(), 1);
+        let mut outs: Vec<Tensor> = Vec::new();
+        outs.extend(store.params.iter().cloned());
+        outs.extend(store.adam_m.iter().cloned());
+        outs.extend(store.adam_v.iter().cloned());
+        outs.push(Tensor::scalar_f32(0.5));
+        let loss = store.absorb(outs).unwrap();
+        assert_eq!(loss, 0.5);
+        assert_eq!(store.step, 1);
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_arity() {
+        let mut store = ParamStore::init(&manifest(), 1);
+        assert!(store.absorb(vec![Tensor::scalar_f32(0.0)]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut store = ParamStore::init(&manifest(), 7);
+        store.step = 123;
+        let dir = std::env::temp_dir().join("hashgnn_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        store.save(&path).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.params, store.params);
+        assert_eq!(back.adam_m, store.adam_m);
+        assert_eq!(back.adam_v, store.adam_v);
+    }
+}

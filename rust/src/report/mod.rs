@@ -1,0 +1,167 @@
+//! Report rendering: ASCII tables (matching the paper's row/column
+//! layout) and CSV output for the bench harnesses.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let sep_len = width.iter().sum::<usize>() + 3 * ncol + 1;
+        out.push_str(&"-".repeat(sep_len));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.header.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float metric the way the paper prints them (4 decimals).
+pub fn metric(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+/// Format megabytes with 2 decimals (Table 2 style).
+pub fn mb(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// A text histogram (Figures 3/6 are histograms of collision counts).
+pub fn histogram(title: &str, values: &[usize], n_bins: usize) -> String {
+    if values.is_empty() {
+        return format!("== {title} == (no data)\n");
+    }
+    let min = *values.iter().min().unwrap();
+    let max = *values.iter().max().unwrap();
+    let span = (max - min).max(1);
+    let bins = n_bins.max(1);
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let b = ((v - min) * (bins - 1) / span).min(bins - 1);
+        counts[b] += 1;
+    }
+    let peak = *counts.iter().max().unwrap().max(&1);
+    let mut out = format!("== {title} == (n={}, min={min}, max={max})\n", values.len());
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = min + i * span / bins;
+        let hi = min + (i + 1) * span / bins;
+        let bar = "#".repeat(c * 40 / peak);
+        out.push_str(&format!("  [{lo:>6}..{hi:>6}) {c:>4} {bar}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["dataset", "NC", "Hash"]);
+        t.row(vec!["ogbn-arxiv".into(), "0.6228".into(), "0.6259".into()]);
+        t.row(vec!["x".into(), "1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("ogbn-arxiv"));
+        // Alignment: both data lines have the same length.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn metric_and_mb() {
+        assert_eq!(metric(0.62340), "0.6234");
+        assert_eq!(mb(456_790_000), "435.63");
+    }
+
+    #[test]
+    fn histogram_shape() {
+        let h = histogram("coll", &[1, 2, 2, 3, 10], 3);
+        assert!(h.contains("n=5"));
+        assert!(h.contains('#'));
+        let empty = histogram("none", &[], 3);
+        assert!(empty.contains("no data"));
+    }
+}

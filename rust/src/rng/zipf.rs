@@ -1,0 +1,111 @@
+//! Zipf-distributed sampling over `{0, …, n−1}`.
+//!
+//! Used to give synthetic datasets the frequency skew the paper relies on:
+//! word frequencies for the GloVe analog, node visit counts for the
+//! metapath2vec analog, and merchant/category size imbalance for §5.3
+//! (restaurants ≫ ambulance services).
+
+use super::Rng;
+
+/// Zipf(s) sampler over ranks `0..n` via inverse-CDF on a precomputed
+/// cumulative table (O(n) setup, O(log n) sample). Rank 0 is the most
+/// frequent element.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `n` support size, `s` exponent (s=1.0 ≈ classic Zipf).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf support must be non-empty");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Probability mass of rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - lo
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw a rank in `[0, n)`.
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> usize {
+        let u = rng.f64();
+        // partition_point: first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// Expected counts for `total` draws (used by generators that want the
+    /// skew without sampling noise).
+    pub fn expected_counts(&self, total: usize) -> Vec<usize> {
+        (0..self.len())
+            .map(|k| ((self.pmf(k) * total as f64).round() as usize).max(1))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn cdf_monotone_and_normalized() {
+        let z = Zipf::new(100, 1.0);
+        for w in z.cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((z.cdf.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_zero_most_frequent() {
+        let z = Zipf::new(50, 1.1);
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[1] > counts[30]);
+        // Empirical head mass close to pmf.
+        let p0 = counts[0] as f64 / 20_000.0;
+        assert!((p0 - z.pmf(0)).abs() < 0.02, "p0={p0} pmf={}", z.pmf(0));
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(7, 0.8);
+        let mut r = Xoshiro256pp::seed_from_u64(2);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut r) < 7);
+        }
+    }
+
+    #[test]
+    fn expected_counts_sum_close_to_total() {
+        let z = Zipf::new(20, 1.0);
+        let c = z.expected_counts(10_000);
+        let sum: usize = c.iter().sum();
+        assert!((sum as i64 - 10_000).abs() < 100, "sum={sum}");
+        assert!(c.iter().all(|&x| x >= 1));
+    }
+}

@@ -1,0 +1,191 @@
+//! Artifact manifest model — the JSON contract written by
+//! `python/compile/aot.py`. Parameter order in the manifest *is* the
+//! executable's argument order; `rust/src/params` initializes buffers from
+//! these specs with the same rules the Python side documents.
+
+use std::path::Path;
+
+use crate::ser::Json;
+use crate::{Error, Result};
+
+/// Parameter initialization rule (mirrors `python/compile/specs.py`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitKind {
+    XavierUniform,
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+}
+
+/// One parameter tensor spec.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    pub trainable: bool,
+}
+
+impl ParamSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One input/output tensor spec.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.json` manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub train_inputs: Vec<TensorSpec>,
+    pub pred_inputs: Vec<TensorSpec>,
+    pub pred_output: TensorSpec,
+    /// Raw hyper-parameter object (task-specific fields).
+    pub hyper: Json,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let v = crate::ser::from_file(path)
+            .map_err(|e| Error::Json(format!("{}: {e}", path.display())))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(parse_param)
+            .collect::<Result<Vec<_>>>()?;
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(parse_tensor).collect()
+        };
+        Ok(Manifest {
+            name: v.get("name")?.as_str()?.to_string(),
+            params,
+            train_inputs: tensors("train_inputs")?,
+            pred_inputs: tensors("pred_inputs")?,
+            pred_output: parse_tensor(v.get("pred_output")?)?,
+            hyper: v.get("hyper")?.clone(),
+        })
+    }
+
+    /// Total parameter element count.
+    pub fn n_param_elements(&self) -> usize {
+        self.params.iter().map(ParamSpec::n_elements).sum()
+    }
+
+    /// Count of trainable parameter elements.
+    pub fn n_trainable_elements(&self) -> usize {
+        self.params.iter().filter(|p| p.trainable).map(ParamSpec::n_elements).sum()
+    }
+
+    /// Hyper field helpers.
+    pub fn hyper_usize(&self, key: &str) -> Result<usize> {
+        self.hyper.get(key)?.as_usize()
+    }
+
+    pub fn hyper_str(&self, key: &str) -> Result<&str> {
+        self.hyper.get(key)?.as_str()
+    }
+}
+
+fn parse_param(v: &Json) -> Result<ParamSpec> {
+    let init = match v.get("init")?.as_str()? {
+        "xavier_uniform" => InitKind::XavierUniform,
+        "normal" => InitKind::Normal { std: v.get("std")?.as_f64()? as f32 },
+        "zeros" => InitKind::Zeros,
+        "ones" => InitKind::Ones,
+        other => return Err(Error::Json(format!("unknown init kind '{other}'"))),
+    };
+    Ok(ParamSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v.get("shape")?.as_usize_vec()?,
+        init,
+        trainable: v.get("trainable")?.as_bool()?,
+    })
+}
+
+fn parse_tensor(v: &Json) -> Result<TensorSpec> {
+    let dtype = v.get("dtype")?.as_str()?.to_string();
+    if dtype != "f32" && dtype != "i32" {
+        return Err(Error::Json(format!("unsupported dtype '{dtype}'")));
+    }
+    Ok(TensorSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v.get("shape")?.as_usize_vec()?,
+        dtype,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    fn sample() -> Json {
+        parse(
+            r#"{
+          "name": "t",
+          "params": [
+            {"name": "dec.books", "shape": [4, 16, 8], "init": "normal", "std": 0.5, "trainable": false},
+            {"name": "dec.mlp0.w", "shape": [8, 8], "init": "xavier_uniform", "std": 0.0, "trainable": true},
+            {"name": "dec.mlp0.b", "shape": [8], "init": "zeros", "std": 0.0, "trainable": true}
+          ],
+          "train_inputs": [{"name": "codes", "shape": [32, 4], "dtype": "i32"}],
+          "pred_inputs": [{"name": "codes", "shape": [32, 4], "dtype": "i32"}],
+          "pred_output": {"name": "emb", "shape": [32, 8], "dtype": "f32"},
+          "hyper": {"task": "recon", "c": 16, "m": 4}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].init, InitKind::Normal { std: 0.5 });
+        assert!(!m.params[0].trainable);
+        assert_eq!(m.params[1].init, InitKind::XavierUniform);
+        assert_eq!(m.train_inputs[0].dtype, "i32");
+        assert_eq!(m.pred_output.shape, vec![32, 8]);
+        assert_eq!(m.hyper_usize("c").unwrap(), 16);
+        assert_eq!(m.hyper_str("task").unwrap(), "recon");
+    }
+
+    #[test]
+    fn element_counts() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.n_param_elements(), 4 * 16 * 8 + 64 + 8);
+        assert_eq!(m.n_trainable_elements(), 64 + 8);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let mut j = sample();
+        if let Json::Obj(o) = &mut j {
+            o.insert(
+                "pred_output".into(),
+                parse(r#"{"name": "x", "shape": [1], "dtype": "f64"}"#).unwrap(),
+            );
+        }
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

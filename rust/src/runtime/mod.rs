@@ -1,0 +1,108 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
+//! on the CPU PJRT client. This is the only module that touches the `xla`
+//! crate; everything above it works with [`Tensor`]s and artifact names.
+//!
+//! Lifecycle: [`Engine::cpu`] once per process → [`Engine::load`] per
+//! artifact (compiles HLO → executable) → [`Executable::run`] per step.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{InitKind, Manifest, ParamSpec, TensorSpec};
+pub use tensor::Tensor;
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// PJRT client wrapper. One per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Engine {
+    /// CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts_dir: artifacts_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load `<name>.json` (manifest) and compile `<name>_train.hlo.txt` /
+    /// `<name>_pred.hlo.txt` into executables.
+    pub fn load(&self, name: &str) -> Result<Model> {
+        let manifest = Manifest::load(&self.artifacts_dir.join(format!("{name}.json")))?;
+        let train = self.compile_file(&self.artifacts_dir.join(format!("{name}_train.hlo.txt")))?;
+        let pred = self.compile_file(&self.artifacts_dir.join(format!("{name}_pred.hlo.txt")))?;
+        Ok(Model { manifest, train, pred })
+    }
+
+    /// Compile a single HLO text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation. The exported HLO always returns a tuple
+/// (`return_tuple=True` at lowering), so `run` flattens it back into
+/// tensors.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// A train/pred executable pair plus its manifest.
+pub struct Model {
+    pub manifest: Manifest,
+    pub train: Executable,
+    pub pred: Executable,
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts` to have run). Unit tests here cover the
+    // error path only.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let engine = Engine::cpu("/nonexistent-artifacts-dir").unwrap();
+        let err = match engine.load("nope") {
+            Err(e) => e,
+            Ok(_) => panic!("loading a missing artifact must fail"),
+        };
+        let msg = format!("{err}");
+        assert!(msg.contains("nope") || msg.contains("artifacts"), "{msg}");
+    }
+}

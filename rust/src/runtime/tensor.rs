@@ -1,0 +1,161 @@
+//! Host-side tensors and the [`xla::Literal`] bridge.
+
+use crate::{Error, Result};
+
+/// A host tensor: shape + data. Only the two dtypes the artifacts use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "f32 tensor: shape {shape:?} needs {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "i32 tensor: shape {shape:?} needs {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(Error::Shape("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => Err(Error::Shape("expected i32 tensor, got f32".into())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(Error::Shape("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    /// Scalar extraction (loss values).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(Error::Shape(format!("expected scalar, got {} elements", d.len())));
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (host→device copy happens at execute).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => Err(Error::Runtime(format!("unsupported literal type {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![3], vec![7, -1, 0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(2.5);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::scalar_f32(1.0);
+        assert!(t.as_i32().is_err());
+        let t = Tensor::i32(vec![1], vec![1]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert!(t.scalar().is_err());
+    }
+}

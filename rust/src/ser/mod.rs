@@ -1,0 +1,171 @@
+//! Minimal JSON substrate (the offline crate set has no `serde`).
+//!
+//! Provides a [`Json`] value model, a recursive-descent parser, and a
+//! writer. Used for the AOT artifact manifests written by
+//! `python/compile/aot.py`, experiment configs, and report output.
+//!
+//! Scope: full JSON except that numbers are parsed as `f64` (the manifests
+//! only carry shapes, names and hyper-parameters — all exactly
+//! representable).
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed JSON value. Objects use `BTreeMap` so output ordering is
+/// deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+
+    pub fn arr_num<I: IntoIterator<Item = f64>>(it: I) -> Json {
+        Json::Arr(it.into_iter().map(Json::Num).collect())
+    }
+
+    pub fn arr_usize<'a, I: IntoIterator<Item = &'a usize>>(it: I) -> Json {
+        Json::Arr(it.into_iter().map(|&u| Json::Num(u as f64)).collect())
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => Err(Error::Json(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            return Err(Error::Json(format!("expected non-negative integer, got {f}")));
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(Error::Json(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(Error::Json(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => Err(Error::Json(format!("expected array, got {other:?}"))),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            other => Err(Error::Json(format!("expected object, got {other:?}"))),
+        }
+    }
+
+    /// Field lookup on an object.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| Error::Json(format!("missing field '{key}'")))
+    }
+
+    /// Optional field lookup.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    /// `[1,2,3]` → `vec![1,2,3]` of usize (shape lists in manifests).
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+}
+
+/// Read and parse a JSON file.
+pub fn from_file(path: &std::path::Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+/// Pretty-print to a file.
+pub fn to_file(path: &std::path::Path, v: &Json) -> Result<()> {
+    std::fs::write(path, to_string_pretty(v))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let v = Json::obj(vec![
+            ("name", Json::str("decoder")),
+            ("shapes", Json::Arr(vec![Json::arr_num([2.0, 3.0]), Json::arr_num([4.0])])),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("lr", Json::num(0.001)),
+        ]);
+        let s = to_string_pretty(&v);
+        let back = parse(&s).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": [1, 2, 3], "b": "x", "c": 4.5, "d": false}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_usize_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("c").unwrap().as_f64().unwrap(), 4.5);
+        assert!(!v.get("d").unwrap().as_bool().unwrap());
+        assert!(v.get("zzz").is_err());
+        assert!(v.opt("zzz").is_none());
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert!(Json::Num(1.5).as_usize().is_err());
+        assert!(Json::Num(-2.0).as_usize().is_err());
+        assert_eq!(Json::Num(7.0).as_usize().unwrap(), 7);
+    }
+}

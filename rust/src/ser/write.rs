@@ -1,0 +1,128 @@
+//! JSON writer (pretty, deterministic key order via BTreeMap).
+
+use super::Json;
+
+/// Serialize with 2-space indentation.
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out.push('\n');
+    out
+}
+
+fn write_value(v: &Json, indent: usize, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => write_num(*n, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            // Small all-scalar arrays inline (shape lists stay readable).
+            let scalar = a.iter().all(|x| matches!(x, Json::Num(_) | Json::Bool(_) | Json::Null));
+            if scalar && a.len() <= 16 {
+                out.push('[');
+                for (i, x) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    write_value(x, indent, out);
+                }
+                out.push(']');
+                return;
+            }
+            out.push_str("[\n");
+            for (i, x) in a.iter().enumerate() {
+                pad(indent + 1, out);
+                write_value(x, indent + 1, out);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(indent, out);
+            out.push(']');
+        }
+        Json::Obj(o) => {
+            if o.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, x)) in o.iter().enumerate() {
+                pad(indent + 1, out);
+                write_str(k, out);
+                out.push_str(": ");
+                write_value(x, indent + 1, out);
+                if i + 1 < o.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn pad(indent: usize, out: &mut String) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse;
+
+    #[test]
+    fn integers_render_without_decimal() {
+        assert_eq!(to_string_pretty(&Json::Num(5.0)).trim(), "5");
+        assert_eq!(to_string_pretty(&Json::Num(0.5)).trim(), "0.5");
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let v = Json::Str("line1\nline2\t\"q\" \\ \u{0001}".into());
+        let s = to_string_pretty(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let v = Json::obj(vec![("b", Json::num(1.0)), ("a", Json::num(2.0))]);
+        let s1 = to_string_pretty(&v);
+        let s2 = to_string_pretty(&v);
+        assert_eq!(s1, s2);
+        // BTreeMap: keys sorted.
+        assert!(s1.find("\"a\"").unwrap() < s1.find("\"b\"").unwrap());
+    }
+}

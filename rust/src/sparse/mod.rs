@@ -1,0 +1,388 @@
+//! Compressed sparse row (CSR) matrix substrate.
+//!
+//! The paper stores the auxiliary matrix `A` (typically the adjacency
+//! matrix) in "compressed row storage (CRS) format as all the operations on
+//! A are row-wise operations" (Section 3.1). This module is that substrate:
+//! a CSR builder from edge lists, row access, degree queries, SpMV against a
+//! dense vector (the per-bit random projection `U = A·V`), symmetrization,
+//! and the higher-order product used for the paper's future-work extension
+//! (higher-order adjacency as auxiliary information, Section 6.1).
+
+use crate::{Error, Result};
+
+/// CSR sparse matrix with `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    n_rows: usize,
+    n_cols: usize,
+    /// Row pointer array, length `n_rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    indices: Vec<u32>,
+    /// Values aligned with `indices`.
+    values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from COO triplets; duplicate entries are summed, columns
+    /// sorted within each row.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Result<Self> {
+        for &(r, c, _) in triplets {
+            if r as usize >= n_rows || c as usize >= n_cols {
+                return Err(Error::Shape(format!(
+                    "triplet ({r},{c}) out of bounds for {n_rows}×{n_cols}"
+                )));
+            }
+        }
+        // Counting sort by row.
+        let mut counts = vec![0usize; n_rows + 1];
+        for &(r, _, _) in triplets {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            counts[i + 1] += counts[i];
+        }
+        let mut order: Vec<usize> = vec![0; triplets.len()];
+        {
+            let mut next = counts.clone();
+            for (i, &(r, _, _)) in triplets.iter().enumerate() {
+                order[next[r as usize]] = i;
+                next[r as usize] += 1;
+            }
+        }
+        // Per-row: sort by column, merge duplicates.
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        indptr.push(0);
+        let mut rowbuf: Vec<(u32, f32)> = Vec::new();
+        for r in 0..n_rows {
+            rowbuf.clear();
+            for &i in &order[counts[r]..counts[r + 1]] {
+                rowbuf.push((triplets[i].1, triplets[i].2));
+            }
+            rowbuf.sort_unstable_by_key(|&(c, _)| c);
+            let mut j = 0;
+            while j < rowbuf.len() {
+                let col = rowbuf[j].0;
+                let mut v = 0.0;
+                while j < rowbuf.len() && rowbuf[j].0 == col {
+                    v += rowbuf[j].1;
+                    j += 1;
+                }
+                indices.push(col);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Ok(Self { n_rows, n_cols, indptr, indices, values })
+    }
+
+    /// Build an unweighted adjacency from an edge list (weight 1 per edge,
+    /// duplicates collapse to their multiplicity).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Result<Self> {
+        let triplets: Vec<(u32, u32, f32)> = edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        Self::from_triplets(n, n, &triplets)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Out-degree (stored entries) of row `r`.
+    #[inline]
+    pub fn degree(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Dot product of row `r` with a dense vector — the inner loop of
+    /// Algorithm 1 (`U[j] ← DotProduct(A[j,:], V)`).
+    #[inline]
+    pub fn row_dot(&self, r: usize, v: &[f32]) -> f32 {
+        debug_assert_eq!(v.len(), self.n_cols);
+        let idx = self.row_indices(r);
+        let val = self.row_values(r);
+        let mut acc = 0.0f32;
+        for k in 0..idx.len() {
+            acc += val[k] * unsafe { *v.get_unchecked(idx[k] as usize) };
+        }
+        acc
+    }
+
+    /// Sparse matrix × dense vector: `out = A·v`.
+    pub fn spmv(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.n_cols, "spmv: v length");
+        assert_eq!(out.len(), self.n_rows, "spmv: out length");
+        for r in 0..self.n_rows {
+            out[r] = self.row_dot(r, v);
+        }
+    }
+
+    /// Materialize row `r` into a dense buffer (zero-filled first).
+    pub fn densify_row(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_cols);
+        out.fill(0.0);
+        let idx = self.row_indices(r);
+        let val = self.row_values(r);
+        for k in 0..idx.len() {
+            out[idx[k] as usize] = val[k];
+        }
+    }
+
+    /// Symmetrize a square matrix: `A ← A + Aᵀ` structurally (values summed;
+    /// the paper makes all directed graphs undirected this way, §5.2.1).
+    pub fn symmetrize(&self) -> Result<Self> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("symmetrize requires a square matrix".into()));
+        }
+        let mut triplets = Vec::with_capacity(self.nnz() * 2);
+        for r in 0..self.n_rows {
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                triplets.push((r as u32, idx[k], val[k]));
+                triplets.push((idx[k], r as u32, val[k]));
+            }
+        }
+        Self::from_triplets(self.n_rows, self.n_cols, &triplets)
+    }
+
+    /// `A²` (boolean-ish structural product with summed multiplicities) —
+    /// higher-order adjacency for the §6.1 extension. Row-by-row sparse
+    /// accumulator (SPA) algorithm.
+    pub fn square(&self) -> Result<Self> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("square requires a square matrix".into()));
+        }
+        let n = self.n_rows;
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        indptr.push(0);
+        let mut acc: Vec<f32> = vec![0.0; n];
+        let mut touched: Vec<u32> = Vec::new();
+        for r in 0..n {
+            touched.clear();
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                let mid = idx[k] as usize;
+                let w = val[k];
+                let idx2 = self.row_indices(mid);
+                let val2 = self.row_values(mid);
+                for k2 in 0..idx2.len() {
+                    let c = idx2[k2] as usize;
+                    if acc[c] == 0.0 {
+                        touched.push(c as u32);
+                    }
+                    acc[c] += w * val2[k2];
+                }
+            }
+            touched.sort_unstable();
+            for &c in &touched {
+                indices.push(c);
+                values.push(acc[c as usize]);
+                acc[c as usize] = 0.0;
+            }
+            indptr.push(indices.len());
+        }
+        Ok(Self { n_rows: n, n_cols: n, indptr, indices, values })
+    }
+
+    /// Dense materialization (tests / small full-batch GNN inputs).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_rows * self.n_cols];
+        for r in 0..self.n_rows {
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                out[r * self.n_cols + idx[k] as usize] = val[k];
+            }
+        }
+        out
+    }
+
+    /// Row-normalized dense adjacency `D⁻¹A` (mean aggregator input for
+    /// full-batch GraphSAGE). Rows with no entries stay zero.
+    pub fn row_normalized_dense(&self) -> Result<Vec<f32>> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("row normalization requires square".into()));
+        }
+        let n = self.n_rows;
+        let mut dense = self.to_dense();
+        for r in 0..n {
+            let sum: f32 = dense[r * n..(r + 1) * n].iter().sum();
+            if sum > 0.0 {
+                let inv = 1.0 / sum;
+                for v in dense[r * n..(r + 1) * n].iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        Ok(dense)
+    }
+
+    /// Symmetric GCN normalization of a dense adjacency with self-loops:
+    /// `Â = D^{-1/2} (A + I) D^{-1/2}` returned dense (used as input to the
+    /// full-batch GCN/SGC/GIN executables).
+    pub fn gcn_normalized_dense(&self) -> Result<Vec<f32>> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("gcn normalization requires square".into()));
+        }
+        let n = self.n_rows;
+        let mut dense = self.to_dense();
+        for i in 0..n {
+            dense[i * n + i] += 1.0;
+        }
+        let mut deg = vec![0.0f32; n];
+        for r in 0..n {
+            for c in 0..n {
+                deg[r] += dense[r * n + c];
+            }
+        }
+        let dinv: Vec<f32> = deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        for r in 0..n {
+            for c in 0..n {
+                dense[r * n + c] *= dinv[r] * dinv[c];
+            }
+        }
+        Ok(dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // 0→1, 0→2, 1→2, 2→0
+        Csr::from_edges(3, &[(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap()
+    }
+
+    #[test]
+    fn build_and_access() {
+        let a = small();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.row_indices(0), &[1, 2]);
+        assert_eq!(a.row_indices(1), &[2]);
+        assert_eq!(a.degree(2), 1);
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let a = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (0, 1, 2.0)]).unwrap();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.row_values(0), &[3.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Csr::from_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn row_dot_matches_dense() {
+        let a = small();
+        let v = vec![0.5, -1.0, 2.0];
+        let dense = a.to_dense();
+        for r in 0..3 {
+            let expect: f32 = (0..3).map(|c| dense[r * 3 + c] * v[c]).sum();
+            assert!((a.row_dot(r, &v) - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn spmv_matches_rowdot() {
+        let a = small();
+        let v = vec![1.0, 2.0, 3.0];
+        let mut out = vec![0.0; 3];
+        a.spmv(&v, &mut out);
+        assert_eq!(out, vec![a.row_dot(0, &v), a.row_dot(1, &v), a.row_dot(2, &v)]);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let a = small().symmetrize().unwrap();
+        let d = a.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d[r * 3 + c], d[c * 3 + r]);
+            }
+        }
+        // 0→1 means 1 now links back to 0.
+        assert!(a.row_indices(1).contains(&0));
+    }
+
+    #[test]
+    fn square_matches_dense_matmul() {
+        let a = small();
+        let sq = a.square().unwrap();
+        let d = a.to_dense();
+        let mut expect = vec![0.0f32; 9];
+        for i in 0..3 {
+            for j in 0..3 {
+                for k in 0..3 {
+                    expect[i * 3 + j] += d[i * 3 + k] * d[k * 3 + j];
+                }
+            }
+        }
+        assert_eq!(sq.to_dense(), expect);
+    }
+
+    #[test]
+    fn densify_row_roundtrip() {
+        let a = small();
+        let mut buf = vec![9.0f32; 3];
+        a.densify_row(0, &mut buf);
+        assert_eq!(buf, vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn gcn_normalization_row_properties() {
+        let a = small().symmetrize().unwrap();
+        let norm = a.gcn_normalized_dense().unwrap();
+        // Symmetric and non-negative, self-loops present.
+        for r in 0..3 {
+            assert!(norm[r * 3 + r] > 0.0);
+            for c in 0..3 {
+                assert!((norm[r * 3 + c] - norm[c * 3 + r]).abs() < 1e-6);
+                assert!(norm[r * 3 + c] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = Csr::from_edges(4, &[(0, 1)]).unwrap();
+        assert_eq!(a.degree(2), 0);
+        assert_eq!(a.row_indices(2), &[] as &[u32]);
+        let mut out = vec![0.0; 4];
+        a.spmv(&[1.0; 4], &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Coder dispatch: produce a [`CodeTable`] for a set of entities with any
+//! of the paper's three coding schemes.
+//!
+//! - **random** — ALONE baseline, no auxiliary information;
+//! - **hash** — Algorithm 1 over either the graph adjacency
+//!   ("hashing/graph" in Figure 1) or pre-trained embeddings
+//!   ("hashing/pre-trained");
+//! - **learned** — the autoencoder baseline, which needs pre-trained
+//!   embeddings and a trained encoder (handled by [`recon`]'s AE path,
+//!   not here — it is the only coder with a training stage, exactly the
+//!   property the paper's method avoids).
+
+use crate::cfg::{Coder, CodingCfg};
+use crate::codes::{random_codes, CodeTable};
+use crate::graph::Graph;
+use crate::lsh::{self, DenseAux, Threshold};
+use crate::{Error, Result};
+
+/// Auxiliary information available to the coder.
+pub enum Aux<'a> {
+    /// Graph adjacency rows (the production path; works with no
+    /// pre-training whatsoever).
+    Graph(&'a Graph),
+    /// Pre-trained embeddings (Figure-1 proxy path).
+    Dense { data: &'a [f32], n: usize, d: usize },
+    /// Nothing (only valid for the random coder).
+    None { n: usize },
+}
+
+impl<'a> Aux<'a> {
+    pub fn n(&self) -> usize {
+        match self {
+            Aux::Graph(g) => g.n_nodes(),
+            Aux::Dense { n, .. } => *n,
+            Aux::None { n } => *n,
+        }
+    }
+}
+
+/// Produce codes for all `aux.n()` entities.
+pub fn make_codes(aux: &Aux, coder: Coder, coding: CodingCfg, seed: u64) -> Result<CodeTable> {
+    match coder {
+        Coder::Random => Ok(random_codes(aux.n(), coding, seed)),
+        Coder::Hash => match aux {
+            Aux::Graph(g) => lsh::encode(g.adj(), coding, Threshold::Median, seed),
+            Aux::Dense { data, n, d } => {
+                let dense = DenseAux::new(data, *n, *d);
+                lsh::encode(&dense, coding, Threshold::Median, seed)
+            }
+            Aux::None { .. } => {
+                Err(Error::Config("hash coder requires auxiliary information".into()))
+            }
+        },
+        Coder::Learned => Err(Error::Config(
+            "learned coder needs a trained autoencoder — use tasks::recon::learned_codes".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::barabasi_albert;
+
+    #[test]
+    fn random_needs_no_aux() {
+        let t = make_codes(&Aux::None { n: 50 }, Coder::Random, CodingCfg::new(4, 8).unwrap(), 1)
+            .unwrap();
+        assert_eq!(t.n(), 50);
+    }
+
+    #[test]
+    fn hash_over_graph() {
+        let g = barabasi_albert(100, 3, 2).unwrap();
+        let t =
+            make_codes(&Aux::Graph(&g), Coder::Hash, CodingCfg::new(16, 8).unwrap(), 3).unwrap();
+        assert_eq!(t.n(), 100);
+        assert_eq!(t.coding.n_bits(), 32);
+    }
+
+    #[test]
+    fn hash_without_aux_rejected() {
+        let r = make_codes(&Aux::None { n: 10 }, Coder::Hash, CodingCfg::new(4, 8).unwrap(), 1);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn learned_redirects() {
+        let r = make_codes(&Aux::None { n: 10 }, Coder::Learned, CodingCfg::new(4, 8).unwrap(), 1);
+        assert!(r.is_err());
+    }
+}

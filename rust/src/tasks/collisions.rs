@@ -1,0 +1,73 @@
+//! Figures 3 & 6: collision counts of median- vs zero-threshold LSH over
+//! repeated trials (Appendix A protocol: same random projections per
+//! trial pair, only the threshold differs — guaranteed here because both
+//! arms share the trial seed).
+
+use crate::embed::EmbeddingSet;
+use crate::lsh::{collision_trials, DenseAux, Threshold};
+
+/// One (embedding-set, bit-length) experiment: `trials` paired runs.
+#[derive(Clone, Debug)]
+pub struct CollisionResult {
+    pub dataset: String,
+    pub n_bits: usize,
+    pub median: Vec<usize>,
+    pub zero: Vec<usize>,
+}
+
+impl CollisionResult {
+    pub fn median_avg(&self) -> f64 {
+        avg(&self.median)
+    }
+
+    pub fn zero_avg(&self) -> f64 {
+        avg(&self.zero)
+    }
+}
+
+fn avg(xs: &[usize]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<usize>() as f64 / xs.len() as f64
+}
+
+/// Run the Appendix-A experiment on one embedding set.
+pub fn run(dataset: &str, set: &EmbeddingSet, n_bits: usize, trials: usize, seed: u64) -> CollisionResult {
+    let aux = DenseAux::new(&set.data, set.n, set.d);
+    CollisionResult {
+        dataset: dataset.to_string(),
+        n_bits,
+        median: collision_trials(&aux, n_bits, Threshold::Median, trials, seed),
+        zero: collision_trials(&aux, n_bits, Threshold::Zero, trials, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::gaussian_mixture;
+
+    #[test]
+    fn median_wins_on_clustered_embeddings() {
+        // Clustered data gives skewed projections — the regime where the
+        // median threshold matters (Figure 3's observation).
+        let set = gaussian_mixture(1500, 16, 6, 0.1, 3);
+        let r = run("m2v*", &set, 24, 5, 11);
+        assert_eq!(r.median.len(), 5);
+        assert!(
+            r.median_avg() <= r.zero_avg(),
+            "median {} vs zero {}",
+            r.median_avg(),
+            r.zero_avg()
+        );
+    }
+
+    #[test]
+    fn more_bits_fewer_collisions() {
+        let set = gaussian_mixture(800, 12, 4, 0.2, 5);
+        let short = run("x", &set, 16, 3, 7);
+        let long = run("x", &set, 32, 3, 7);
+        assert!(long.median_avg() <= short.median_avg());
+    }
+}

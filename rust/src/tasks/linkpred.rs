@@ -1,0 +1,164 @@
+//! Table 1 (link-prediction rows): full-batch encoders + dot-product
+//! scorer, hits@K evaluation (hits@50 for the collab analog, hits@20 for
+//! the ddi analog, matching §5.2.1).
+//!
+//! Edge protocol: undirected edges split 80/10/10; the message-passing
+//! adjacency uses **training edges only** (no leakage); negatives are
+//! uniform non-edges resampled per step.
+
+use crate::cfg::{CodingCfg, GnnKind};
+use crate::eval::link_hits_at_k;
+use crate::graph::{split::split_items, Graph};
+use crate::params::ParamStore;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{Engine, Tensor};
+use crate::tasks::nodeclf::{adj_tensor, all_codes_tensor, Frontend, RunOpts};
+use crate::train;
+use crate::{Error, Result};
+
+/// Outcome of one link-prediction cell.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkOutcome {
+    pub val_hits: f64,
+    pub test_hits: f64,
+    pub final_loss: f32,
+}
+
+/// Edge split (indices into the undirected edge list).
+pub struct EdgeSplit {
+    pub train: Vec<(u32, u32)>,
+    pub val: Vec<(u32, u32)>,
+    pub test: Vec<(u32, u32)>,
+}
+
+pub fn split_edges(graph: &Graph, seed: u64) -> Result<EdgeSplit> {
+    let edges = graph.undirected_edges();
+    let idx: Vec<u32> = (0..edges.len() as u32).collect();
+    let s = split_items(&idx, 0.8, 0.1, seed)?;
+    let take = |ids: &[u32]| ids.iter().map(|&i| edges[i as usize]).collect::<Vec<_>>();
+    Ok(EdgeSplit { train: take(&s.train), val: take(&s.val), test: take(&s.test) })
+}
+
+fn edges_tensor(edges: &[(u32, u32)], e: usize) -> Result<Tensor> {
+    // Fixed-shape buffer: pad by repeating the last edge.
+    assert!(!edges.is_empty());
+    let mut data = Vec::with_capacity(e * 2);
+    for i in 0..e {
+        let (u, v) = edges[i.min(edges.len() - 1)];
+        data.push(u as i32);
+        data.push(v as i32);
+    }
+    Tensor::i32(vec![e, 2], data)
+}
+
+fn sample_negatives(n: usize, count: usize, graph: &Graph, rng: &mut Xoshiro256pp) -> Vec<(u32, u32)> {
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let u = rng.index(n);
+        let v = rng.index(n);
+        if u != v && !graph.has_edge(u, v) {
+            out.push((u as u32, v as u32));
+        }
+    }
+    out
+}
+
+/// Run one (gnn, frontend) link-prediction cell; returns hits@k at the
+/// best validation epoch.
+pub fn run_fullbatch(
+    engine: &Engine,
+    gnn: GnnKind,
+    frontend: Frontend,
+    graph: &Graph,
+    hits_k: usize,
+    opts: RunOpts,
+) -> Result<LinkOutcome> {
+    let model = engine.load(&format!("link_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
+    let n = model.manifest.hyper_usize("n")?;
+    if graph.n_nodes() != n {
+        return Err(Error::Shape(format!("artifact expects n={n}, got {}", graph.n_nodes())));
+    }
+    let e_train = model.manifest.hyper_usize("e_train")?;
+    let e_pred = model.manifest.hyper_usize("e_pred")?;
+    let coding = CodingCfg::new(model.manifest.hyper_usize("c")?, model.manifest.hyper_usize("m")?)?;
+
+    let split = split_edges(graph, opts.seed ^ 0x5A5A)?;
+    // Message-passing graph: training edges only.
+    let train_graph = Graph::from_edges(n, &split.train)?;
+    let adj = adj_tensor(&train_graph, model.manifest.hyper_str("adj")?)?;
+    let codes = all_codes_tensor(&train_graph, frontend, coding, opts.seed)?;
+
+    let mut store = ParamStore::init(&model.manifest, opts.seed);
+    let mut rng = Xoshiro256pp::seed_from_u64(opts.seed ^ 0xBEEF);
+
+    let base: Vec<Tensor> = match &codes {
+        Some(c) => vec![c.clone(), adj.clone()],
+        None => vec![adj.clone()],
+    };
+
+    let mut best = LinkOutcome { val_hits: f64::MIN, test_hits: 0.0, final_loss: f32::NAN };
+    let mut last_loss = f32::NAN;
+    // Pre-draw the evaluation negative pool once (shared across epochs,
+    // OGB-style fixed negatives).
+    let eval_negs = sample_negatives(n, e_pred, graph, &mut rng);
+    for epoch in 0..opts.epochs {
+        // One step per epoch: full-batch encoder + fresh edge minibatch.
+        let mut pos = Vec::with_capacity(e_train);
+        for _ in 0..e_train {
+            pos.push(split.train[rng.index(split.train.len())]);
+        }
+        let neg = sample_negatives(n, e_train, graph, &mut rng);
+        let mut batch = base.clone();
+        batch.push(edges_tensor(&pos, e_train)?);
+        batch.push(edges_tensor(&neg, e_train)?);
+        last_loss = train::run_step(&model, &mut store, &batch)?;
+
+        if (epoch + 1) % opts.eval_every == 0 || epoch + 1 == opts.epochs {
+            let score = |edges: &[(u32, u32)]| -> Result<Vec<f32>> {
+                let mut b = base.clone();
+                b.push(edges_tensor(edges, e_pred)?);
+                let t = train::predict(&model, &store, &b)?;
+                Ok(t.as_f32()?[..edges.len().min(e_pred)].to_vec())
+            };
+            let neg_scores = score(&eval_negs)?;
+            let val_hits = link_hits_at_k(&score(&split.val)?, &neg_scores, hits_k);
+            let test_hits = link_hits_at_k(&score(&split.test)?, &neg_scores, hits_k);
+            if val_hits > best.val_hits {
+                best = LinkOutcome { val_hits, test_hits, final_loss: last_loss };
+            }
+        }
+    }
+    best.final_loss = last_loss;
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{sbm, SbmCfg};
+
+    #[test]
+    fn edge_split_partitions() {
+        let g = sbm(SbmCfg::new(300, 3, 8.0, 2.0), 1).unwrap();
+        let s = split_edges(&g, 2).unwrap();
+        let total = g.undirected_edges().len();
+        assert_eq!(s.train.len() + s.val.len() + s.test.len(), total);
+        assert!(s.train.len() > s.val.len());
+    }
+
+    #[test]
+    fn negatives_are_nonedges() {
+        let g = sbm(SbmCfg::new(100, 2, 6.0, 2.0), 3).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        for (u, v) in sample_negatives(100, 50, &g, &mut rng) {
+            assert!(!g.has_edge(u as usize, v as usize));
+            assert_ne!(u, v);
+        }
+    }
+
+    #[test]
+    fn edge_tensor_pads() {
+        let t = edges_tensor(&[(1, 2), (3, 4)], 4).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4, 3, 4, 3, 4]);
+    }
+}

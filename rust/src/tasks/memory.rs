@@ -1,0 +1,198 @@
+//! Tables 2, 4 and 6 — memory accounting and compression ratios.
+//!
+//! These tables are analytic in the paper too; we reproduce them at the
+//! paper's own dimensions (n = 1,871,031 for ogbn-products, etc.).
+//!
+//! **Accounting note** (documented reverse-engineering): the paper's §3.2
+//! formula counts MLP weights `d_c·d_m + (l−2)·d_m² + d_m·d_e`, but the
+//! numbers actually printed in Tables 2/4/6 reproduce exactly when the
+//! middle `(l−2)·d_m²` term is omitted (e.g. Table 4 GloVe/5000 = 2.65
+//! and Table 2's 9.13 MB decoder both match only then). We implement both
+//! and use the *effective* variant for the table reproductions so the
+//! printed numbers line up with the paper.
+
+use crate::cfg::{CodingCfg, DecoderCfg};
+
+/// Bytes per MiB (the paper's "MB" columns are mebibytes — 456.79 for
+/// ogbn-products' raw table only matches with 2²⁰).
+pub const MIB: f64 = 1024.0 * 1024.0;
+
+/// Decoder parameter count as the paper's tables actually account it
+/// (codebooks + first & last MLP layers; see module docs).
+pub fn effective_decoder_params(c: usize, m: usize, d_c: usize, d_m: usize, d_e: usize) -> usize {
+    m * c * d_c + d_c * d_m + d_m * d_e
+}
+
+/// Strict §3.2 decoder weight count (for comparison).
+pub fn strict_decoder_params(cfg: &DecoderCfg) -> usize {
+    cfg.codebook_params() + cfg.mlp_weight_params()
+}
+
+/// Bit-packed code storage bytes: `n·m·log2(c) / 8`.
+pub fn code_bytes(n: usize, coding: CodingCfg) -> usize {
+    n * coding.n_bits() / 8
+}
+
+/// Raw embedding-table bytes (f32).
+pub fn raw_bytes(n: usize, d_e: usize) -> usize {
+    n * d_e * 4
+}
+
+/// One row of Table 2.
+#[derive(Clone, Debug)]
+pub struct MemoryRow {
+    pub method: String,
+    pub cpu_code: f64,
+    pub cpu_decoder: f64,
+    pub cpu_total: f64,
+    pub gpu_model: f64,
+    pub gpu_gnn: f64,
+    pub gpu_total: f64,
+    pub gpu_ratio: f64,
+    pub total: f64,
+    pub total_ratio: f64,
+}
+
+/// Reproduce Table 2 (memory cost on ogbn-products): raw vs hash-light vs
+/// hash-full. All quantities in MiB. `gnn_bytes` is the GNN's own
+/// parameter memory (the paper reports 1.35).
+pub fn table2(
+    n: usize,
+    d_e: usize,
+    coding: CodingCfg,
+    d_c: usize,
+    d_m: usize,
+    gnn_bytes: usize,
+) -> Vec<MemoryRow> {
+    let raw = raw_bytes(n, d_e) as f64 / MIB;
+    let gnn = gnn_bytes as f64 / MIB;
+    let codes = code_bytes(n, coding) as f64 / MIB;
+    let books = (coding.m * coding.c * d_c * 4) as f64 / MIB;
+    let mlp = ((d_c * d_m + d_m * d_e) * 4) as f64 / MIB;
+
+    let raw_gpu_total = raw + gnn;
+    let mut rows = vec![MemoryRow {
+        method: "Raw".into(),
+        cpu_code: 0.0,
+        cpu_decoder: 0.0,
+        cpu_total: 0.0,
+        gpu_model: raw,
+        gpu_gnn: gnn,
+        gpu_total: raw_gpu_total,
+        gpu_ratio: 1.0,
+        total: raw_gpu_total,
+        total_ratio: 1.0,
+    }];
+    // Light: codebooks live on CPU (frozen), MLP+W0 on GPU.
+    let light_gpu = mlp + gnn;
+    let light_total = codes + books + light_gpu;
+    rows.push(MemoryRow {
+        method: "Hash-Light".into(),
+        cpu_code: codes,
+        cpu_decoder: books,
+        cpu_total: codes + books,
+        gpu_model: mlp,
+        gpu_gnn: gnn,
+        gpu_total: light_gpu,
+        gpu_ratio: raw_gpu_total / light_gpu,
+        total: light_total,
+        total_ratio: raw_gpu_total / light_total,
+    });
+    // Full ("Hash-Heavy" in the paper's table): codebooks trainable on GPU.
+    let full_gpu = books + mlp + gnn;
+    let full_total = codes + full_gpu;
+    rows.push(MemoryRow {
+        method: "Hash-Full".into(),
+        cpu_code: codes,
+        cpu_decoder: 0.0,
+        cpu_total: codes,
+        gpu_model: books + mlp,
+        gpu_gnn: gnn,
+        gpu_total: full_gpu,
+        gpu_ratio: raw_gpu_total / full_gpu,
+        total: full_total,
+        total_ratio: raw_gpu_total / full_total,
+    });
+    rows
+}
+
+/// Tables 4 & 6 — compression ratio for `n` compressed entities:
+/// `raw / (codes + decoder)`.
+pub fn compression_ratio(
+    n: usize,
+    d_raw: usize,
+    coding: CodingCfg,
+    d_c: usize,
+    d_m: usize,
+    d_e: usize,
+) -> f64 {
+    let raw = raw_bytes(n, d_raw) as f64;
+    let compressed = code_bytes(n, coding) as f64
+        + (effective_decoder_params(coding.c, coding.m, d_c, d_m, d_e) * 4) as f64;
+    raw / compressed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coding(c: usize, m: usize) -> CodingCfg {
+        CodingCfg::new(c, m).unwrap()
+    }
+
+    #[test]
+    fn table4_glove_row_matches_paper() {
+        // Paper Table 4, GloVe (d=300, d_c=d_m=512, c=2, m=128):
+        // 5000→2.65, 10000→5.11, 50000→20.09, 200000→44.55.
+        let cases = [(5000, 2.65), (10000, 5.11), (50000, 20.09), (200000, 44.55)];
+        for (n, expect) in cases {
+            let r = compression_ratio(n, 300, coding(2, 128), 512, 512, 300);
+            assert!((r - expect).abs() < 0.02, "n={n}: got {r}, paper {expect}");
+        }
+    }
+
+    #[test]
+    fn table4_metapath_row_matches_paper() {
+        // metapath2vec (d=128, d_e=128): 5000→1.34, 200000→20.34.
+        let cases = [(5000, 1.34), (10000, 2.57), (50000, 9.72), (200000, 20.34)];
+        for (n, expect) in cases {
+            let r = compression_ratio(n, 128, coding(2, 128), 512, 512, 128);
+            assert!((r - expect).abs() < 0.02, "n={n}: got {r}, paper {expect}");
+        }
+    }
+
+    #[test]
+    fn table6_cm_sweep_matches_paper() {
+        // GloVe rows of Table 6 at n=5000: (2,128)→2.65, (4,64)→2.65,
+        // (16,32)→2.15, (256,16)→0.59.
+        let cases = [((2usize, 128usize), 2.65), ((4, 64), 2.65), ((16, 32), 2.15), ((256, 16), 0.59)];
+        for ((c, m), expect) in cases {
+            let r = compression_ratio(5000, 300, coding(c, m), 512, 512, 300);
+            assert!((r - expect).abs() < 0.02, "(c={c},m={m}): got {r}, paper {expect}");
+        }
+    }
+
+    #[test]
+    fn table2_matches_paper_headline_numbers() {
+        // ogbn-products: n=1,871,031, d_e=64, c=256, m=16, d_c=d_m=512.
+        let rows = table2(1_871_031, 64, coding(256, 16), 512, 512, (1.35 * MIB) as usize);
+        let raw = &rows[0];
+        assert!((raw.gpu_model - 456.79).abs() < 0.2, "raw={}", raw.gpu_model);
+        let light = &rows[1];
+        assert!((light.cpu_code - 28.55).abs() < 0.2, "codes={}", light.cpu_code);
+        assert!((light.cpu_decoder - 8.0).abs() < 0.1);
+        assert!((light.gpu_model - 1.13).abs() < 0.05);
+        let full = &rows[2];
+        assert!((full.gpu_model - 9.13).abs() < 0.05, "full gpu={}", full.gpu_model);
+        assert!((full.gpu_ratio - 43.75).abs() < 0.3, "ratio={}", full.gpu_ratio);
+        assert!((full.total_ratio - 11.74).abs() < 0.15, "total ratio={}", full.total_ratio);
+    }
+
+    #[test]
+    fn strict_vs_effective_params_differ_by_middle_layer() {
+        let cfg = DecoderCfg::paper_ogb(coding(256, 16), crate::cfg::DecoderVariant::Full);
+        let strict = strict_decoder_params(&cfg);
+        let effective = effective_decoder_params(256, 16, 512, 512, 64);
+        assert_eq!(strict - effective, 512 * 512); // the (l-2)·d_m² term
+    }
+}

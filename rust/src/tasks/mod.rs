@@ -1,0 +1,78 @@
+//! Experiment drivers — one per family of paper results.
+//!
+//! | module | paper artifact |
+//! |---|---|
+//! | [`coding`]     | shared coder dispatch (random / hash / learned) |
+//! | [`recon`]      | Figure 1, Table 5 (reconstruction proxy tasks) |
+//! | [`collisions`] | Figures 3 and 6 (median vs zero threshold) |
+//! | [`nodeclf`]    | Table 1 node-classification rows |
+//! | [`linkpred`]   | Table 1 link-prediction rows |
+//! | [`sage`]       | minibatch GraphSAGE pipeline (§4, e2e example) |
+//! | [`merchant`]   | Table 3 (§5.3 merchant-category identification) |
+//! | [`memory`]     | Tables 2, 4 and 6 (memory accounting) |
+
+pub mod coding;
+pub mod collisions;
+pub mod linkpred;
+pub mod memory;
+pub mod merchant;
+pub mod nodeclf;
+pub mod recon;
+pub mod sage;
+
+use crate::graph::{generate, Graph};
+use crate::Result;
+
+/// Synthetic analogs of the five OGB datasets used in Table 1
+/// (DESIGN.md §4). All share `n = 1024` so one artifact set serves every
+/// dataset; they differ in density, community strength and class count
+/// the way the originals differ in character.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum T1Dataset {
+    /// ogbn-arxiv analog: moderate density, clear communities.
+    Arxiv,
+    /// ogbn-mag analog: sparse, weaker communities (hardest).
+    Mag,
+    /// ogbn-products analog: dense, strong communities.
+    Products,
+    /// ogbl-collab analog: community graph for link prediction.
+    Collab,
+    /// ogbl-ddi analog: dense link-prediction graph.
+    Ddi,
+}
+
+impl T1Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            T1Dataset::Arxiv => "ogbn-arxiv*",
+            T1Dataset::Mag => "ogbn-mag*",
+            T1Dataset::Products => "ogbn-products*",
+            T1Dataset::Collab => "ogbl-collab*",
+            T1Dataset::Ddi => "ogbl-ddi*",
+        }
+    }
+
+    pub fn is_linkpred(&self) -> bool {
+        matches!(self, T1Dataset::Collab | T1Dataset::Ddi)
+    }
+
+    pub fn nodeclf_all() -> [T1Dataset; 3] {
+        [T1Dataset::Arxiv, T1Dataset::Mag, T1Dataset::Products]
+    }
+
+    pub fn linkpred_all() -> [T1Dataset; 2] {
+        [T1Dataset::Collab, T1Dataset::Ddi]
+    }
+
+    /// Generate the graph (n=1024, labels for node-clf datasets).
+    pub fn generate(&self, seed: u64) -> Result<Graph> {
+        let n = 1024;
+        match self {
+            T1Dataset::Arxiv => generate::sbm(generate::SbmCfg::new(n, 8, 10.0, 2.5), seed),
+            T1Dataset::Mag => generate::sbm(generate::SbmCfg::new(n, 8, 6.0, 3.0), seed),
+            T1Dataset::Products => generate::sbm(generate::SbmCfg::new(n, 8, 16.0, 2.0), seed),
+            T1Dataset::Collab => generate::sbm(generate::SbmCfg::new(n, 8, 12.0, 2.0), seed),
+            T1Dataset::Ddi => generate::sbm(generate::SbmCfg::new(n, 4, 20.0, 6.0), seed),
+        }
+    }
+}

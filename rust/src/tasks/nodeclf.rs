@@ -1,0 +1,261 @@
+//! Table 1 (node classification rows): full-batch GCN / SGC / GIN / SAGE
+//! with NC (explicit embedding table), Rand (ALONE codes) and Hash
+//! (Algorithm 1 over the adjacency) feature front-ends.
+//!
+//! Protocol (Appendix C.1): AdamW lr=0.01, train to a fixed epoch budget,
+//! evaluate every few epochs on the validation split and report the test
+//! metric from the best-validation epoch.
+
+use crate::cfg::{CodingCfg, Coder, GnnKind};
+use crate::eval::accuracy_from_logits;
+use crate::graph::{split_nodes, Graph, Split};
+use crate::params::ParamStore;
+use crate::runtime::{Engine, Tensor};
+use crate::tasks::coding::{make_codes, Aux};
+use crate::train;
+use crate::{Error, Result};
+
+/// Which feature front-end (Table 1 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frontend {
+    /// "NC": explicit trainable embedding table (no compression).
+    Nc,
+    /// "Rand": ALONE random coding.
+    Rand,
+    /// "Hash": the paper's LSH coding over the adjacency matrix.
+    Hash,
+}
+
+impl Frontend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frontend::Nc => "NC",
+            Frontend::Rand => "Rand",
+            Frontend::Hash => "Hash",
+        }
+    }
+
+    pub fn all() -> [Frontend; 3] {
+        [Frontend::Nc, Frontend::Rand, Frontend::Hash]
+    }
+
+    pub fn artifact_tag(&self) -> &'static str {
+        match self {
+            Frontend::Nc => "nc",
+            _ => "coded",
+        }
+    }
+
+    fn coder(&self) -> Option<Coder> {
+        match self {
+            Frontend::Nc => None,
+            Frontend::Rand => Some(Coder::Random),
+            Frontend::Hash => Some(Coder::Hash),
+        }
+    }
+}
+
+/// Run options for one Table-1 cell.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    pub epochs: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self { epochs: 60, eval_every: 5, seed: 7 }
+    }
+}
+
+/// Outcome of one (gnn, frontend, dataset) cell.
+#[derive(Clone, Copy, Debug)]
+pub struct CellOutcome {
+    pub val: f64,
+    pub test: f64,
+    pub final_loss: f32,
+}
+
+/// Build the dense adjacency tensor in the normalization the artifact
+/// expects (manifest hyper `adj`).
+pub fn adj_tensor(graph: &Graph, adj_kind: &str) -> Result<Tensor> {
+    let n = graph.n_nodes();
+    let dense = match adj_kind {
+        "sym_norm" => graph.adj().gcn_normalized_dense()?,
+        "row_norm" => graph.adj().row_normalized_dense()?,
+        "raw" => graph.adj().to_dense(),
+        other => return Err(Error::Config(format!("unknown adj kind '{other}'"))),
+    };
+    Tensor::f32(vec![n, n], dense)
+}
+
+/// Gather all-node integer codes as the `(n, m)` input tensor.
+pub fn all_codes_tensor(
+    graph: &Graph,
+    frontend: Frontend,
+    coding: CodingCfg,
+    seed: u64,
+) -> Result<Option<Tensor>> {
+    let Some(coder) = frontend.coder() else { return Ok(None) };
+    let table = make_codes(&Aux::Graph(graph), coder, coding, seed)?;
+    let n = graph.n_nodes();
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let mut buf = Vec::new();
+    table.gather_int_codes(&ids, &mut buf);
+    Ok(Some(Tensor::i32(vec![n, coding.m], buf)?))
+}
+
+/// One full-batch node-classification run; returns val/test accuracy at
+/// the best validation epoch.
+pub fn run_fullbatch(
+    engine: &Engine,
+    gnn: GnnKind,
+    frontend: Frontend,
+    graph: &Graph,
+    opts: RunOpts,
+) -> Result<CellOutcome> {
+    let model = engine.load(&format!("node_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
+    let n = model.manifest.hyper_usize("n")?;
+    let k = model.manifest.hyper_usize("n_classes")?;
+    if graph.n_nodes() != n {
+        return Err(Error::Shape(format!(
+            "artifact expects n={n}, graph has {}",
+            graph.n_nodes()
+        )));
+    }
+    let labels = graph
+        .labels()
+        .ok_or_else(|| Error::Config("node classification needs labels".into()))?;
+    let coding = CodingCfg::new(model.manifest.hyper_usize("c")?, model.manifest.hyper_usize("m")?)?;
+    let adj = adj_tensor(graph, model.manifest.hyper_str("adj")?)?;
+    let codes = all_codes_tensor(graph, frontend, coding, opts.seed)?;
+
+    let split = split_nodes(n, 0.7, 0.1, opts.seed ^ 0xA5A5)?;
+    let mut mask = vec![0.0f32; n];
+    for &i in &split.train {
+        mask[i as usize] = 1.0;
+    }
+    let labels_t = Tensor::i32(vec![n], labels.iter().map(|&l| l as i32).collect())?;
+    let mask_t = Tensor::f32(vec![n], mask)?;
+
+    let mut batch: Vec<Tensor> = Vec::new();
+    if let Some(c) = &codes {
+        batch.push(c.clone());
+    }
+    batch.push(adj);
+    batch.push(labels_t);
+    batch.push(mask_t);
+
+    let mut store = ParamStore::init(&model.manifest, opts.seed);
+    let pred_batch: Vec<Tensor> = batch[..batch.len() - 2].to_vec(); // codes? + adj
+
+    let mut best = CellOutcome { val: f64::MIN, test: 0.0, final_loss: f32::NAN };
+    let mut last_loss = f32::NAN;
+    for epoch in 0..opts.epochs {
+        last_loss = train::run_step(&model, &mut store, &batch)?;
+        if (epoch + 1) % opts.eval_every == 0 || epoch + 1 == opts.epochs {
+            let logits = train::predict(&model, &store, &pred_batch)?;
+            let (val, test) = split_accuracy(logits.as_f32()?, n, k, labels, &split);
+            if val > best.val {
+                best = CellOutcome { val, test, final_loss: last_loss };
+            }
+        }
+    }
+    best.final_loss = last_loss;
+    Ok(best)
+}
+
+/// Accuracy over the val and test index sets.
+pub fn split_accuracy(
+    logits: &[f32],
+    n: usize,
+    k: usize,
+    labels: &[u32],
+    split: &Split,
+) -> (f64, f64) {
+    debug_assert_eq!(logits.len(), n * k);
+    let acc_of = |ids: &[u32]| {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        let sub_logits: Vec<f32> = ids
+            .iter()
+            .flat_map(|&i| logits[i as usize * k..(i as usize + 1) * k].iter().copied())
+            .collect();
+        let sub_labels: Vec<u32> = ids.iter().map(|&i| labels[i as usize]).collect();
+        accuracy_from_logits(&sub_logits, ids.len(), k, &sub_labels)
+    };
+    (acc_of(&split.val), acc_of(&split.test))
+}
+
+/// Shared handle for tests/benches: codes quality sanity (hash codes over
+/// an SBM adjacency should separate classes better than random codes).
+pub fn code_label_consistency(graph: &Graph, coding: CodingCfg, coder: Coder, seed: u64) -> Result<f64> {
+    let table = make_codes(&Aux::Graph(graph), coder, coding, seed)?;
+    let labels = graph.labels().ok_or_else(|| Error::Config("needs labels".into()))?;
+    let n = graph.n_nodes();
+    let bits = coding.n_bits();
+    // Average intra-class vs inter-class Hamming similarity over a sample.
+    let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+    use crate::rng::Rng;
+    let mut intra = 0.0f64;
+    let mut inter = 0.0f64;
+    let mut n_intra = 0usize;
+    let mut n_inter = 0usize;
+    for _ in 0..4000 {
+        let a = rng.index(n);
+        let b = rng.index(n);
+        if a == b {
+            continue;
+        }
+        let same_bits = (0..bits).filter(|&k| table.bits.get(a, k) == table.bits.get(b, k)).count();
+        let sim = same_bits as f64 / bits as f64;
+        if labels[a] == labels[b] {
+            intra += sim;
+            n_intra += 1;
+        } else {
+            inter += sim;
+            n_inter += 1;
+        }
+    }
+    Ok(intra / n_intra.max(1) as f64 - inter / n_inter.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{sbm, SbmCfg};
+
+    #[test]
+    fn hash_codes_carry_label_signal_random_dont() {
+        let g = sbm(SbmCfg::new(600, 4, 24.0, 2.0), 3).unwrap();
+        let coding = CodingCfg::new(16, 8).unwrap();
+        let hash_gap = code_label_consistency(&g, coding, Coder::Hash, 5).unwrap();
+        let rand_gap = code_label_consistency(&g, coding, Coder::Random, 5).unwrap();
+        assert!(hash_gap > 0.01, "hash intra-inter gap too small: {hash_gap}");
+        assert!(rand_gap.abs() < 0.02, "random codes should carry no signal: {rand_gap}");
+        assert!(hash_gap > rand_gap);
+    }
+
+    #[test]
+    fn split_accuracy_math() {
+        // 4 nodes, 2 classes; logits favor class of node id parity.
+        let logits = vec![0.9, 0.1, 0.1, 0.9, 0.9, 0.1, 0.1, 0.9];
+        let labels = vec![0u32, 1, 1, 1];
+        let split = Split { train: vec![], val: vec![0, 1], test: vec![2, 3] };
+        let (val, test) = split_accuracy(&logits, 4, 2, &labels, &split);
+        assert_eq!(val, 1.0); // node0→0 ✓, node1→1 ✓
+        assert_eq!(test, 0.5); // node2→0 ✗, node3→1 ✓
+    }
+
+    #[test]
+    fn adj_kinds() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        for kind in ["sym_norm", "row_norm", "raw"] {
+            let t = adj_tensor(&g, kind).unwrap();
+            assert_eq!(t.shape(), &[3, 3]);
+        }
+        assert!(adj_tensor(&g, "bogus").is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! §5.1 — pre-trained-embedding reconstruction (Figure 1, Table 5).
+//!
+//! Protocol (§5.1.2): compress the top-`n` entities by frequency with a
+//! coder, train the decoder with MSE against the originals, then evaluate
+//! the reconstructed embeddings of the top-5k entities on the proxy task
+//! (analogy accuracy + similarity ρ for the GloVe analog, k-means NMI for
+//! the metapath2vec analogs).
+
+use std::sync::Arc;
+
+use crate::codes::CodeTable;
+use crate::embed::{cosine, AnalogyQuad, EmbeddingSet, SimPair, WordEmbeddings};
+use crate::eval::{kmeans, nmi, spearman};
+use crate::params::ParamStore;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{Engine, Model, Tensor};
+use crate::train::{self, TrainOpts};
+use crate::Result;
+
+/// Train a reconstruction decoder on `codes` → `targets`.
+pub fn train_decoder(
+    model: &Model,
+    codes: &CodeTable,
+    targets: &EmbeddingSet,
+    epochs: usize,
+    seed: u64,
+) -> Result<(ParamStore, train::TrainLog)> {
+    let b = model.manifest.hyper_usize("batch")?;
+    let m = model.manifest.hyper_usize("m")?;
+    let d_e = model.manifest.hyper_usize("d_e")?;
+    assert_eq!(targets.d, d_e, "target dim must match artifact d_e");
+    let n = codes.n().min(targets.n);
+    let mut store = ParamStore::init(&model.manifest, seed);
+    let codes = Arc::new(codes.clone());
+    let data = Arc::new(targets.data.clone());
+    let steps = (epochs * n.div_ceil(b)) as u64;
+    let source = move |step: u64| {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ (step.wrapping_mul(0x9E3779B97F4A7C15)));
+        let mut ids = Vec::with_capacity(b);
+        let mut tgt = Vec::with_capacity(b * d_e);
+        for _ in 0..b {
+            let id = rng.index(n);
+            ids.push(id as u32);
+            tgt.extend_from_slice(&data[id * d_e..(id + 1) * d_e]);
+        }
+        let mut code_buf = Vec::new();
+        codes.gather_int_codes(&ids, &mut code_buf);
+        vec![
+            Tensor::i32(vec![b, m], code_buf).expect("code tensor"),
+            Tensor::f32(vec![b, d_e], tgt).expect("target tensor"),
+        ]
+    };
+    let log = train::train(model, &mut store, source, TrainOpts::new(steps))?;
+    Ok((store, log))
+}
+
+/// Reconstruct embeddings for entities `0..k` (batched through pred).
+pub fn reconstruct(model: &Model, store: &ParamStore, codes: &CodeTable, k: usize) -> Result<Vec<f32>> {
+    let b = model.manifest.hyper_usize("batch")?;
+    let m = model.manifest.hyper_usize("m")?;
+    let d_e = model.manifest.hyper_usize("d_e")?;
+    let mut out = Vec::with_capacity(k * d_e);
+    let mut code_buf = Vec::new();
+    let mut start = 0usize;
+    while start < k {
+        let ids: Vec<u32> = (start..start + b).map(|i| (i.min(k - 1)) as u32).collect();
+        codes.gather_int_codes(&ids, &mut code_buf);
+        let logits = train::predict(
+            model,
+            store,
+            &[Tensor::i32(vec![b, m], code_buf.clone())?],
+        )?;
+        let vals = logits.as_f32()?;
+        let take = (k - start).min(b);
+        out.extend_from_slice(&vals[..take * d_e]);
+        start += b;
+    }
+    Ok(out)
+}
+
+/// Train the autoencoder baseline and encode the first `n` entities
+/// (the "learn" lines in Figure 1).
+pub fn learned_codes(
+    ae: &Model,
+    set: &EmbeddingSet,
+    n: usize,
+    epochs: usize,
+    seed: u64,
+) -> Result<CodeTable> {
+    let b = ae.manifest.hyper_usize("batch")?;
+    let m = ae.manifest.hyper_usize("m")?;
+    let c = ae.manifest.hyper_usize("c")?;
+    let d_e = ae.manifest.hyper_usize("d_e")?;
+    let n = n.min(set.n);
+    let mut store = ParamStore::init(&ae.manifest, seed);
+    let data = Arc::new(set.data.clone());
+    let steps = (epochs * n.div_ceil(b)) as u64;
+    let data_src = data.clone();
+    let source = move |step: u64| {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ step.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut emb = Vec::with_capacity(b * d_e);
+        for _ in 0..b {
+            let id = rng.index(n);
+            emb.extend_from_slice(&data_src[id * d_e..(id + 1) * d_e]);
+        }
+        let mut uniform = vec![0.0f32; b * m * c];
+        rng.fill_uniform_f32(&mut uniform, 1e-6, 1.0);
+        vec![
+            Tensor::f32(vec![b, d_e], emb).expect("emb tensor"),
+            Tensor::f32(vec![b, m, c], uniform).expect("gumbel tensor"),
+        ]
+    };
+    train::train(ae, &mut store, source, TrainOpts::new(steps))?;
+    // Encode all n entities with the trained encoder (argmax, no noise).
+    let coding = crate::cfg::CodingCfg::new(c, m)?;
+    let mut all_codes: Vec<i32> = Vec::with_capacity(n * m);
+    let mut start = 0usize;
+    while start < n {
+        let mut emb = Vec::with_capacity(b * d_e);
+        for i in 0..b {
+            let id = (start + i).min(n - 1);
+            emb.extend_from_slice(&data[id * d_e..(id + 1) * d_e]);
+        }
+        let codes_t = train::predict(ae, &store, &[Tensor::f32(vec![b, d_e], emb)?])?;
+        let vals = codes_t.as_i32()?;
+        let take = (n - start).min(b);
+        all_codes.extend_from_slice(&vals[..take * m]);
+        start += b;
+    }
+    CodeTable::from_int_codes(&all_codes, n, coding)
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation protocols (Appendix B.1)
+// ---------------------------------------------------------------------------
+
+/// Word-analogy accuracy: `argmax_i cos(emb_i, emb_b − emb_a + emb_c)`
+/// must equal `d` (a, b, c excluded), averaged per relation then over
+/// relations (B.1.2).
+pub fn analogy_accuracy(emb: &[f32], n: usize, d: usize, quads: &[AnalogyQuad], n_relations: usize) -> f64 {
+    let mut correct = vec![0usize; n_relations];
+    let mut total = vec![0usize; n_relations];
+    let mut query = vec![0.0f32; d];
+    for q in quads {
+        if (q.a as usize) >= n || (q.b as usize) >= n || (q.c as usize) >= n || (q.d as usize) >= n
+        {
+            continue; // outside the evaluated top-k slice
+        }
+        for j in 0..d {
+            query[j] = emb[q.b as usize * d + j] - emb[q.a as usize * d + j]
+                + emb[q.c as usize * d + j];
+        }
+        let mut best = (f32::MIN, usize::MAX);
+        for i in 0..n {
+            if i as u32 == q.a || i as u32 == q.b || i as u32 == q.c {
+                continue;
+            }
+            let s = cosine(&query, &emb[i * d..(i + 1) * d]);
+            if s > best.0 {
+                best = (s, i);
+            }
+        }
+        total[q.relation as usize] += 1;
+        if best.1 as u32 == q.d {
+            correct[q.relation as usize] += 1;
+        }
+    }
+    let accs: Vec<f64> = correct
+        .iter()
+        .zip(&total)
+        .filter(|(_, &t)| t > 0)
+        .map(|(&c, &t)| c as f64 / t as f64)
+        .collect();
+    if accs.is_empty() {
+        0.0
+    } else {
+        accs.iter().sum::<f64>() / accs.len() as f64
+    }
+}
+
+/// Word-similarity Spearman ρ between reconstructed cosine similarities
+/// and planted ground truth (B.1.3).
+pub fn similarity_rho(emb: &[f32], n: usize, d: usize, pairs: &[SimPair]) -> f64 {
+    let mut obs = Vec::new();
+    let mut truth = Vec::new();
+    for p in pairs {
+        if (p.a as usize) >= n || (p.b as usize) >= n {
+            continue;
+        }
+        obs.push(cosine(&emb[p.a as usize * d..(p.a as usize + 1) * d], &emb[p.b as usize * d..(p.b as usize + 1) * d]));
+        truth.push(p.score);
+    }
+    spearman(&obs, &truth)
+}
+
+/// Node-clustering NMI: k-means on reconstructed embeddings vs labels
+/// (B.1.4).
+pub fn clustering_nmi(emb: &[f32], n: usize, d: usize, labels: &[u32], k: usize, seed: u64) -> f64 {
+    let assign = kmeans(emb, n, d, k, 30, seed);
+    nmi(&assign, &labels[..n], k, k)
+}
+
+/// Evaluate reconstructed GloVe-analog embeddings (both §5.1 word tasks).
+pub fn eval_word(recon: &[f32], k: usize, w: &WordEmbeddings) -> (f64, f64) {
+    let d = w.set.d;
+    (
+        analogy_accuracy(recon, k, d, &w.analogies, w.n_relations),
+        similarity_rho(recon, k, d, &w.sim_pairs),
+    )
+}
+
+/// A convenience wrapper: load engine + artifact by (c, m).
+pub fn recon_model(engine: &Engine, c: usize, m: usize) -> Result<Model> {
+    engine.load(&format!("recon_c{c}_m{m}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::analogy_embeddings;
+
+    #[test]
+    fn analogy_eval_on_raw_is_high() {
+        let w = analogy_embeddings(800, 24, 4, 8, 50, 0.02, 3);
+        let acc = analogy_accuracy(&w.set.data, w.set.n, w.set.d, &w.analogies, w.n_relations);
+        assert!(acc > 0.8, "acc={acc}");
+        let rho = similarity_rho(&w.set.data, w.set.n, w.set.d, &w.sim_pairs);
+        assert!(rho > 0.9, "rho={rho}");
+    }
+
+    #[test]
+    fn analogy_eval_on_noise_is_low() {
+        let w = analogy_embeddings(400, 16, 4, 6, 50, 0.02, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut junk = vec![0.0f32; w.set.n * w.set.d];
+        rng.fill_normal_f32(&mut junk, 0.0, 1.0);
+        let acc = analogy_accuracy(&junk, w.set.n, w.set.d, &w.analogies, w.n_relations);
+        assert!(acc < 0.2, "acc={acc}");
+    }
+
+    #[test]
+    fn quads_outside_slice_skipped() {
+        let w = analogy_embeddings(500, 16, 3, 5, 20, 0.02, 7);
+        // Evaluating only the top 10 rows: most quads fall outside; the
+        // function must not panic and must return a value in [0, 1].
+        let acc = analogy_accuracy(&w.set.data[..10 * 16], 10, 16, &w.analogies, w.n_relations);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal property-testing harness (the offline crate set has no
+//! `proptest`). Runs a property over many seeded random cases; on failure
+//! reports the failing case index and seed so it can be replayed exactly.
+//!
+//! Used by `rust/tests/prop_invariants.rs` for coordinator invariants
+//! (routing/batching/state per the session testing contract).
+
+use crate::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` independently seeded RNGs. The property
+/// returns `Err(reason)` to fail. Panics with a replayable report.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256pp::seed_from_u64(case_seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (replay seed: {case_seed:#x}): {reason}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Shorthand for a default-config check.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", PropConfig { cases: 17, seed: 5 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        quickcheck("always-fails", |rng| {
+            let x = rng.index(10);
+            if x < 10 {
+                Err("x is always < 10".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_behaviour() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Training coordinator: drives a train-step executable with a pipelined
+//! batch producer.
+//!
+//! The producer (neighbor sampling, code gathering, negative-edge drawing —
+//! all pure rust) runs on its own thread and feeds a bounded channel; the
+//! consumer thread keeps the PJRT executable busy. This is the L3
+//! concurrency story: batch preparation overlaps device execution, the
+//! paper's "scalable training on industrial graphs" requirement
+//! (Section 4 / Figure 4 pipeline).
+
+use std::sync::mpsc;
+
+use crate::params::ParamStore;
+use crate::runtime::{Model, Tensor};
+use crate::Result;
+
+/// Anything that can produce train-step batch tensors. `step` is the
+/// global step index (sources use it to seed per-step sampling so runs
+/// stay deterministic regardless of pipelining).
+pub trait BatchSource: Send {
+    fn next_batch(&mut self, step: u64) -> Vec<Tensor>;
+}
+
+/// Blanket impl so closures can be sources.
+impl<F: FnMut(u64) -> Vec<Tensor> + Send> BatchSource for F {
+    fn next_batch(&mut self, step: u64) -> Vec<Tensor> {
+        self(step)
+    }
+}
+
+/// Per-run training log.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+}
+
+impl TrainLog {
+    /// Mean loss of the last `k` steps (loss-curve smoothing for reports).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len()).max(1);
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Training-loop options.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOpts {
+    pub n_steps: u64,
+    /// Overlap batch production with execution (bounded channel depth 2).
+    pub pipeline: bool,
+    /// Print a progress line every `log_every` steps (0 = silent).
+    pub log_every: u64,
+}
+
+impl TrainOpts {
+    pub fn new(n_steps: u64) -> Self {
+        Self { n_steps, pipeline: true, log_every: 0 }
+    }
+
+    pub fn silent(n_steps: u64) -> Self {
+        Self { n_steps, pipeline: true, log_every: 0 }
+    }
+}
+
+/// Run `opts.n_steps` train steps of `model`, mutating `store` in place.
+pub fn train(
+    model: &Model,
+    store: &mut ParamStore,
+    source: impl BatchSource + 'static,
+    opts: TrainOpts,
+) -> Result<TrainLog> {
+    if opts.pipeline {
+        train_pipelined(model, store, source, opts)
+    } else {
+        train_serial(model, store, source, opts)
+    }
+}
+
+fn train_serial(
+    model: &Model,
+    store: &mut ParamStore,
+    mut source: impl BatchSource,
+    opts: TrainOpts,
+) -> Result<TrainLog> {
+    let mut log = TrainLog::default();
+    for step in 0..opts.n_steps {
+        let batch = source.next_batch(step);
+        let loss = run_step(model, store, &batch)?;
+        maybe_log(step, loss, opts.log_every);
+        log.losses.push(loss);
+    }
+    Ok(log)
+}
+
+fn train_pipelined(
+    model: &Model,
+    store: &mut ParamStore,
+    mut source: impl BatchSource + 'static,
+    opts: TrainOpts,
+) -> Result<TrainLog> {
+    let n_steps = opts.n_steps;
+    // Depth-2 bounded channel: producer stays at most 2 batches ahead, so
+    // memory is bounded and the consumer never waits on a cold producer.
+    let (tx, rx) = mpsc::sync_channel::<(u64, Vec<Tensor>)>(2);
+    let producer = std::thread::spawn(move || {
+        for step in 0..n_steps {
+            let batch = source.next_batch(step);
+            if tx.send((step, batch)).is_err() {
+                return source; // consumer dropped (error path)
+            }
+        }
+        source
+    });
+    let mut log = TrainLog::default();
+    let mut result = Ok(());
+    for (step, batch) in rx {
+        match run_step(model, store, &batch) {
+            Ok(loss) => {
+                maybe_log(step, loss, opts.log_every);
+                log.losses.push(loss);
+            }
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
+        }
+    }
+    producer.join().map_err(|_| crate::Error::Runtime("batch producer panicked".into()))?;
+    result.map(|_| log)
+}
+
+/// One synchronous train step.
+pub fn run_step(model: &Model, store: &mut ParamStore, batch: &[Tensor]) -> Result<f32> {
+    validate_batch(model, batch)?;
+    let inputs = store.train_inputs(batch);
+    let outputs = model.train.run(&inputs)?;
+    store.absorb(outputs)
+}
+
+/// Run the predict executable over one batch.
+pub fn predict(model: &Model, store: &ParamStore, batch: &[Tensor]) -> Result<Tensor> {
+    let inputs = store.pred_inputs(batch);
+    let mut out = model.pred.run(&inputs)?;
+    if out.len() != 1 {
+        return Err(crate::Error::Runtime(format!(
+            "predict returned {} tensors, expected 1",
+            out.len()
+        )));
+    }
+    Ok(out.pop().expect("len checked"))
+}
+
+fn validate_batch(model: &Model, batch: &[Tensor]) -> Result<()> {
+    let specs = &model.manifest.train_inputs;
+    if batch.len() != specs.len() {
+        return Err(crate::Error::Shape(format!(
+            "batch has {} tensors, manifest expects {}",
+            batch.len(),
+            specs.len()
+        )));
+    }
+    for (t, s) in batch.iter().zip(specs) {
+        if t.shape() != s.shape.as_slice() {
+            return Err(crate::Error::Shape(format!(
+                "input '{}': got shape {:?}, manifest says {:?}",
+                s.name,
+                t.shape(),
+                s.shape
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn maybe_log(step: u64, loss: f32, log_every: u64) {
+    if log_every > 0 && step % log_every == 0 {
+        eprintln!("[train] step {step:>6}  loss {loss:.5}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_mean_behaviour() {
+        let log = TrainLog { losses: vec![4.0, 3.0, 2.0, 1.0] };
+        assert_eq!(log.tail_mean(2), 1.5);
+        assert_eq!(log.tail_mean(100), 2.5);
+        assert!(TrainLog::default().tail_mean(3).is_nan());
+    }
+
+    #[test]
+    fn closure_is_a_batch_source() {
+        let mut calls = 0u64;
+        let _ = &calls;
+        let mut src = move |step: u64| {
+            calls += 1;
+            vec![Tensor::scalar_f32(step as f32)]
+        };
+        let b = src.next_batch(7);
+        assert_eq!(b[0].scalar().unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: experiment drivers against real artifacts, scaled to
+//! test-suite budgets. Skips cleanly when artifacts are missing.
+
+use hashgnn::cfg::{Coder, CodingCfg, GnnKind};
+use hashgnn::embed::gaussian_mixture;
+use hashgnn::runtime::Engine;
+use hashgnn::tasks::coding::{make_codes, Aux};
+use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+use hashgnn::tasks::{linkpred, recon, T1Dataset};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_dir().join("index.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn recon_hash_beats_random_on_clustered_embeddings() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let coding = CodingCfg::new(16, 32).unwrap();
+    let set = gaussian_mixture(3000, 128, 8, 0.25, 9);
+    let labels = set.labels.clone().unwrap();
+    let eval_k = 1000;
+    let mut nmi = std::collections::HashMap::new();
+    for coder in [Coder::Random, Coder::Hash] {
+        let aux = match coder {
+            Coder::Random => Aux::None { n: set.n },
+            _ => Aux::Dense { data: &set.data, n: set.n, d: set.d },
+        };
+        let codes = make_codes(&aux, coder, coding, 5).unwrap();
+        let (store, _) = recon::train_decoder(&model, &codes, &set, 4, 3).unwrap();
+        let emb = recon::reconstruct(&model, &store, &codes, eval_k).unwrap();
+        let score = recon::clustering_nmi(&emb, eval_k, 128, &labels, 8, 1);
+        nmi.insert(coder.as_str(), score);
+    }
+    // The Figure-1 shape: hash above random (margin depends on budget, so
+    // require strict ordering only).
+    assert!(
+        nmi["hash"] > nmi["random"],
+        "hash {:.3} should beat random {:.3}",
+        nmi["hash"],
+        nmi["random"]
+    );
+}
+
+#[test]
+fn nodeclf_cell_produces_sane_accuracy() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let graph = T1Dataset::Arxiv.generate(11).unwrap();
+    let opts = RunOpts { epochs: 30, eval_every: 10, seed: 7 };
+    let out = nodeclf::run_fullbatch(&engine, GnnKind::Gcn, Frontend::Hash, &graph, opts).unwrap();
+    // 8 classes → chance 0.125; the hash front-end must do far better.
+    assert!(out.test > 0.4, "hash/gcn test acc {:.3} too low", out.test);
+    assert!(out.final_loss.is_finite());
+}
+
+#[test]
+fn nodeclf_nc_baseline_learns_fast() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let graph = T1Dataset::Products.generate(11).unwrap();
+    let opts = RunOpts { epochs: 10, eval_every: 5, seed: 7 };
+    let out = nodeclf::run_fullbatch(&engine, GnnKind::Sgc, Frontend::Nc, &graph, opts).unwrap();
+    assert!(out.test > 0.5, "nc/sgc test acc {:.3}", out.test);
+}
+
+#[test]
+fn linkpred_cell_runs_and_scores() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let graph = T1Dataset::Ddi.generate(13).unwrap();
+    let opts = RunOpts { epochs: 10, eval_every: 5, seed: 7 };
+    let out =
+        linkpred::run_fullbatch(&engine, GnnKind::Gcn, Frontend::Hash, &graph, 20, opts).unwrap();
+    assert!(out.final_loss.is_finite());
+    assert!((0.0..=1.0).contains(&out.test_hits));
+}
+
+#[test]
+fn all_manifest_artifacts_load_and_validate() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let idx = hashgnn::ser::from_file(&artifacts_dir().join("index.json")).unwrap();
+    let names = idx.get("artifacts").unwrap().as_arr().unwrap();
+    assert!(names.len() >= 20, "expected the full variant registry");
+    // Compile a representative subset end-to-end (full set is covered by
+    // the benches; compiling all 25 here would double test wallclock).
+    for name in ["recon_c2_m128", "node_fb_gin_coded", "link_fb_sage_nc", "sage_mb_nc"] {
+        let model = engine.load(name).unwrap();
+        assert_eq!(model.manifest.name, name);
+        assert!(!model.manifest.params.is_empty());
+        // Every param spec must have a nonempty shape product.
+        for p in &model.manifest.params {
+            assert!(p.n_elements() > 0, "{name}: empty param {}", p.name);
+        }
+    }
+}

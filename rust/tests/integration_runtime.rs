@@ -1,0 +1,170 @@
+//! Integration: AOT artifacts → PJRT compile → execute → train.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use std::sync::Arc;
+
+use hashgnn::cfg::CodingCfg;
+use hashgnn::codes::random_codes;
+use hashgnn::embed::gaussian_mixture;
+use hashgnn::params::ParamStore;
+use hashgnn::rng::{Rng, Xoshiro256pp};
+use hashgnn::runtime::{Engine, Tensor};
+use hashgnn::tasks::recon;
+use hashgnn::train::{self, TrainOpts};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("index.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    assert_eq!(engine.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn recon_train_step_runs_and_loss_decreases() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let b = model.manifest.hyper_usize("batch").unwrap();
+    let m = model.manifest.hyper_usize("m").unwrap();
+    let d_e = model.manifest.hyper_usize("d_e").unwrap();
+
+    let mut store = ParamStore::init(&model.manifest, 1);
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    // Fixed batch: loss on the same batch must drop under repeated steps.
+    let codes: Vec<i32> = (0..b * m).map(|_| rng.index(16) as i32).collect();
+    let mut target = vec![0.0f32; b * d_e];
+    rng.fill_normal_f32(&mut target, 0.0, 0.3);
+    let batch = vec![
+        Tensor::i32(vec![b, m], codes).unwrap(),
+        Tensor::f32(vec![b, d_e], target).unwrap(),
+    ];
+    let first = train::run_step(&model, &mut store, &batch).unwrap();
+    assert!(first.is_finite());
+    let mut last = first;
+    for _ in 0..20 {
+        last = train::run_step(&model, &mut store, &batch).unwrap();
+    }
+    assert!(last < first * 0.8, "loss did not decrease: {first} -> {last}");
+    assert_eq!(store.step, 21);
+}
+
+#[test]
+fn recon_predict_shape_matches_manifest() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let b = model.manifest.hyper_usize("batch").unwrap();
+    let m = model.manifest.hyper_usize("m").unwrap();
+    let store = ParamStore::init(&model.manifest, 1);
+    let codes = Tensor::i32(vec![b, m], vec![0i32; b * m]).unwrap();
+    let out = train::predict(&model, &store, &[codes]).unwrap();
+    assert_eq!(out.shape(), model.manifest.pred_output.shape.as_slice());
+}
+
+#[test]
+fn wrong_batch_shape_is_rejected_before_execution() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let mut store = ParamStore::init(&model.manifest, 1);
+    let bad = vec![Tensor::i32(vec![3, 3], vec![0; 9]).unwrap()];
+    let err = train::run_step(&model, &mut store, &bad).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("manifest"), "{msg}");
+}
+
+#[test]
+fn pipelined_training_reduces_recon_loss_on_real_embeddings() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let coding = CodingCfg::new(16, 32).unwrap();
+    let set = gaussian_mixture(2000, 128, 8, 0.25, 5);
+    let codes = random_codes(2000, coding, 7);
+    let (_store, log) = recon::train_decoder(&model, &codes, &set, 3, 11).unwrap();
+    let early: f32 = log.losses[..3].iter().sum::<f32>() / 3.0;
+    let late = log.tail_mean(3);
+    assert!(late < early, "no training signal: {early} -> {late}");
+}
+
+#[test]
+fn pipelined_and_serial_training_agree() {
+    require_artifacts!();
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("recon_c16_m32").unwrap();
+    let b = model.manifest.hyper_usize("batch").unwrap();
+    let m = model.manifest.hyper_usize("m").unwrap();
+    let d_e = model.manifest.hyper_usize("d_e").unwrap();
+
+    let make_source = move || {
+        move |step: u64| {
+            let mut rng = Xoshiro256pp::seed_from_u64(100 + step);
+            let codes: Vec<i32> = (0..b * m).map(|_| rng.index(16) as i32).collect();
+            let mut target = vec![0.0f32; b * d_e];
+            rng.fill_normal_f32(&mut target, 0.0, 0.3);
+            vec![
+                Tensor::i32(vec![b, m], codes).unwrap(),
+                Tensor::f32(vec![b, d_e], target).unwrap(),
+            ]
+        }
+    };
+    let mut s1 = ParamStore::init(&model.manifest, 3);
+    let mut s2 = ParamStore::init(&model.manifest, 3);
+    let mut o_pipe = TrainOpts::new(6);
+    o_pipe.pipeline = true;
+    let mut o_serial = TrainOpts::new(6);
+    o_serial.pipeline = false;
+    let l1 = train::train(&model, &mut s1, make_source(), o_pipe).unwrap();
+    let l2 = train::train(&model, &mut s2, make_source(), o_serial).unwrap();
+    assert_eq!(l1.losses, l2.losses, "pipelining must not change the math");
+    assert_eq!(s1.params, s2.params);
+}
+
+#[test]
+fn sage_minibatch_artifact_end_to_end_smoke() {
+    require_artifacts!();
+    use hashgnn::graph::generate::{sbm, SbmCfg};
+    use hashgnn::tasks::sage::{self, Features, SageTask};
+
+    let engine = Engine::cpu(artifacts_dir()).unwrap();
+    let model = engine.load("sage_mb_coded").unwrap();
+    let n = model.manifest.hyper_usize("n").unwrap();
+    let c = model.manifest.hyper_usize("c").unwrap();
+    let m = model.manifest.hyper_usize("m").unwrap();
+    let g = Arc::new(sbm(SbmCfg::new(n, 8, 12.0, 2.0), 3).unwrap());
+    let labels = Arc::new(g.labels().unwrap().to_vec());
+    let coding = CodingCfg::new(c, m).unwrap();
+    let codes =
+        hashgnn::lsh::encode(g.adj(), coding, hashgnn::lsh::Threshold::Median, 5).unwrap();
+    let task = SageTask {
+        graph: g.clone(),
+        labels,
+        features: Features::Codes(Arc::new(codes)),
+        train_nodes: Arc::new((0..n as u32).collect()),
+    };
+    let batcher = sage::SageBatcher::new(task, &model, 9).unwrap();
+    let mut store = ParamStore::init(&model.manifest, 1);
+    let opts = TrainOpts::new(3);
+    let log = train::train(&model, &mut store, batcher, opts).unwrap();
+    assert_eq!(log.losses.len(), 3);
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+}

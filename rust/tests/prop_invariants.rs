@@ -1,0 +1,198 @@
+//! Property-based tests over coordinator invariants (session contract:
+//! proptest-style checks on routing, batching, state). Uses the in-repo
+//! `testing` harness (no proptest in the offline crate set); every failure
+//! reports a replayable case seed.
+
+use hashgnn::cfg::CodingCfg;
+use hashgnn::codes::{random_codes, CodeTable};
+use hashgnn::graph::generate::{barabasi_albert, sbm, SbmCfg};
+use hashgnn::graph::{split_nodes, NeighborSampler};
+use hashgnn::lsh::{self, median_in_place, Threshold};
+use hashgnn::rng::Rng;
+use hashgnn::ser;
+use hashgnn::testing::{check, PropConfig};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, seed: 0xDEC0DE }
+}
+
+#[test]
+fn prop_code_roundtrip_bits_ints() {
+    // For any (c, m) and any random codes: int → bits → int is identity.
+    check("code roundtrip", cfg(60), |rng| {
+        let log_c = 1 + rng.index(8);
+        let c = 1usize << log_c;
+        let m = 1 + rng.index(32);
+        let n = 1 + rng.index(40);
+        let coding = CodingCfg::new(c, m).map_err(|e| e.to_string())?;
+        let codes: Vec<i32> = (0..n * m).map(|_| rng.index(c) as i32).collect();
+        let table = CodeTable::from_int_codes(&codes, n, coding).map_err(|e| e.to_string())?;
+        for row in 0..n {
+            let got = table.int_code(row);
+            if got != codes[row * m..(row + 1) * m] {
+                return Err(format!("row {row}: {got:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_median_splits_half() {
+    // The LSH threshold invariant: strictly-above count ≤ n/2 and
+    // at least one element is ≤ the median.
+    check("median split", cfg(100), |rng| {
+        let n = 1 + rng.index(400);
+        let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 5.0) as f32).collect();
+        let mut buf = xs.clone();
+        let t = median_in_place(&mut buf);
+        let above = xs.iter().filter(|&&x| x > t).count();
+        if above > n / 2 {
+            return Err(format!("n={n} above={above}"));
+        }
+        if !xs.iter().any(|&x| x <= t) {
+            return Err("median not attained".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lsh_bit_balance() {
+    // Every LSH bit column (median threshold) selects ≤ half the rows.
+    check("lsh bit balance", cfg(8), |rng| {
+        let n = 50 + rng.index(300);
+        let d = 4 + rng.index(24);
+        let mut data = vec![0.0f32; n * d];
+        let mean = (rng.f64() * 4.0 - 2.0) as f32;
+        rng.fill_normal_f32(&mut data, mean, 1.0);
+        let aux = lsh::DenseAux::new(&data, n, d);
+        let coding = CodingCfg::new(2, 16).unwrap();
+        let t = lsh::encode(&aux, coding, Threshold::Median, rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        for bit in 0..16 {
+            let ones = (0..n).filter(|&r| t.bits.get(r, bit)).count();
+            if ones > n / 2 {
+                return Err(format!("bit {bit}: {ones}/{n} ones"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_stays_in_neighborhood() {
+    // Batching invariant: every sampled hop-1 node is a neighbor (or the
+    // node itself when isolated); shapes are exactly (B·k1), (B·k1·k2).
+    check("sampler neighborhood", cfg(20), |rng| {
+        let n = 20 + rng.index(200);
+        let g = barabasi_albert(n, 1 + rng.index(3), rng.next_u64()).map_err(|e| e.to_string())?;
+        let k1 = 1 + rng.index(6);
+        let k2 = 1 + rng.index(4);
+        let b = 1 + rng.index(16);
+        let batch: Vec<u32> = (0..b).map(|_| rng.index(n) as u32).collect();
+        let sampler = NeighborSampler::new(&g, k1, k2);
+        let s = sampler.sample_seeded(&batch, rng.next_u64());
+        if s.hop1.len() != b * k1 || s.hop2.len() != b * k1 * k2 {
+            return Err("shape mismatch".into());
+        }
+        for (i, &u) in batch.iter().enumerate() {
+            for j in 0..k1 {
+                let v = s.hop1[i * k1 + j];
+                if v != u && !g.neighbors(u as usize).contains(&v) {
+                    return Err(format!("{v} not a neighbor of {u}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_is_partition() {
+    // State invariant: splits partition the node set for any fractions.
+    check("split partition", cfg(60), |rng| {
+        let n = 1 + rng.index(500);
+        let ft = rng.f64() * 0.8;
+        let fv = rng.f64() * (1.0 - ft);
+        let s = split_nodes(n, ft, fv, rng.next_u64()).map_err(|e| e.to_string())?;
+        if s.total() != n {
+            return Err(format!("total {} != {n}", s.total()));
+        }
+        let mut all: Vec<u32> = s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        if all.len() != n {
+            return Err("overlap between splits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    // Serialization invariant: parse(render(v)) == v for random JSON.
+    fn random_json(rng: &mut hashgnn::rng::Xoshiro256pp, depth: usize) -> ser::Json {
+        let pick = if depth == 0 { rng.index(4) } else { rng.index(6) };
+        match pick {
+            0 => ser::Json::Null,
+            1 => ser::Json::Bool(rng.bool_with(0.5)),
+            2 => ser::Json::Num((rng.index(2_000_001) as f64 - 1e6) / 64.0),
+            3 => {
+                let len = rng.index(12);
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(32 + rng.index(90) as u32).unwrap())
+                    .collect();
+                ser::Json::Str(s)
+            }
+            4 => ser::Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => ser::Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", cfg(150), |rng| {
+        let v = random_json(rng, 3);
+        let s = ser::to_string_pretty(&v);
+        let back = ser::parse(&s).map_err(|e| format!("{e}\n{s}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch:\n{s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_coding_is_reproducible_and_seed_sensitive() {
+    check("random coding determinism", cfg(30), |rng| {
+        let coding = CodingCfg::new(4, 8).unwrap();
+        let n = 1 + rng.index(100);
+        let seed = rng.next_u64();
+        let a = random_codes(n, coding, seed);
+        let b = random_codes(n, coding, seed);
+        if a.bits != b.bits {
+            return Err("same seed differs".into());
+        }
+        let c = random_codes(n, coding, seed ^ 1);
+        if n > 4 && a.bits == c.bits {
+            return Err("different seed identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sbm_labels_within_range() {
+    check("sbm labels", cfg(10), |rng| {
+        let k = 2 + rng.index(6);
+        let n = k * (10 + rng.index(40));
+        let g = sbm(SbmCfg::new(n, k, 8.0, 2.0), rng.next_u64()).map_err(|e| e.to_string())?;
+        let labels = g.labels().ok_or("missing labels")?;
+        if labels.iter().any(|&l| l as usize >= k) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    });
+}
