@@ -19,7 +19,7 @@ use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
 use hashgnn::tasks::T1Dataset;
 
 /// Encode with `A + A²` (second-order connectivity) as auxiliary info.
-fn encode_second_order(graph: &Graph, coding: CodingCfg, seed: u64) -> anyhow::Result<CodeTable> {
+fn encode_second_order(graph: &Graph, coding: CodingCfg, seed: u64) -> hashgnn::Result<CodeTable> {
     let a2 = graph.adj().square()?;
     // A + A²: keep first-order structure, add two-hop counts.
     let n = graph.n_nodes();
@@ -36,7 +36,7 @@ fn encode_second_order(graph: &Graph, coding: CodingCfg, seed: u64) -> anyhow::R
     Ok(lsh::encode(&combined, coding, Threshold::Median, seed)?)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("ablation_higher_order", "§6.1 extension: A vs A+A² auxiliary info");
     let engine = Engine::cpu("artifacts")?;
     let coding = CodingCfg::new(16, 32)?;
@@ -106,7 +106,7 @@ fn run_gcn_with_codes(
     graph: &Graph,
     codes: &CodeTable,
     epochs: usize,
-) -> anyhow::Result<f64> {
+) -> hashgnn::Result<f64> {
     use hashgnn::graph::split_nodes;
     use hashgnn::params::ParamStore;
     use hashgnn::train;

@@ -19,7 +19,7 @@ use hashgnn::runtime::Engine;
 use hashgnn::tasks::coding::{make_codes, Aux};
 use hashgnn::tasks::recon;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("fig1_reconstruction", "Figure 1 (all six panels' series)");
     let engine = Engine::cpu("artifacts")?;
     let model = engine.load("recon_c16_m32")?;

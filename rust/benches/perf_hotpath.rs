@@ -1,16 +1,22 @@
 //! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf before/after
 //! numbers come from here).
 //!
-//! L3 paths: Algorithm-1 encode (bit-by-bit vs blocked), median
+//! L3 paths: Algorithm-1 encode (bit-by-bit reference vs blocked vs the
+//! multi-threaded engine with 1/2/all-core scaling rows), median
 //! (quickselect vs full sort), code gathering, neighbor sampling, and the
 //! end-to-end train step with the batch pipeline on vs off.
+//!
+//! Besides the stdout table, writes machine-readable
+//! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
+//! tracked across PRs. Also asserts the encode engine's determinism
+//! contract (bit-identical output across thread counts) on every run.
 
 mod bench_util;
 
 use std::sync::Arc;
 
 use bench_util::Samples;
-use hashgnn::cfg::CodingCfg;
+use hashgnn::cfg::{CodingCfg, EncodeCfg};
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::graph::NeighborSampler;
 use hashgnn::lsh::{self, median_in_place, Threshold};
@@ -18,14 +24,25 @@ use hashgnn::params::ParamStore;
 use hashgnn::report::Table;
 use hashgnn::rng::{Rng, Xoshiro256pp};
 use hashgnn::runtime::Engine;
+use hashgnn::ser::{self, Json};
 use hashgnn::tasks::sage::{self, Features, SageTask};
 use hashgnn::train::{self, TrainOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("perf_hotpath", "§Perf microbenches (EXPERIMENTS.md)");
     let mut t = Table::new("hot-path microbenchmarks", &["path", "metric", "value"]);
+    let mut json_rows: Vec<Json> = Vec::new();
     let n = bench_util::pick(20000, 5000);
     let reps = bench_util::pick(5, 2);
+
+    fn push_row(t: &mut Table, json_rows: &mut Vec<Json>, path: &str, metric: &str, value: f64) {
+        t.row(vec![path.into(), metric.into(), format!("{value:.1}")]);
+        json_rows.push(Json::obj(vec![
+            ("path", Json::str(path)),
+            ("metric", Json::str(metric)),
+            ("value", Json::num(value)),
+        ]));
+    }
 
     // ---- L3: LSH encode -------------------------------------------------
     let g = sbm(SbmCfg::new(n, 8, 12.0, 2.0), 3)?;
@@ -33,21 +50,58 @@ fn main() -> anyhow::Result<()> {
     let s = Samples::collect(reps, || {
         let _ = lsh::encode(g.adj(), coding, Threshold::Median, 7).unwrap();
     });
-    t.row(vec![
-        "lsh::encode (bit-by-bit)".into(),
-        "nodes/s".into(),
-        format!("{:.0}", n as f64 / s.median()),
-    ]);
+    let bitbybit_rate = n as f64 / s.median();
+    push_row(&mut t, &mut json_rows, "lsh::encode (bit-by-bit reference)", "nodes/s", bitbybit_rate);
     for block in [8usize, 32] {
         let s = Samples::collect(reps, || {
             let _ = lsh::encode_blocked(g.adj(), coding, Threshold::Median, 7, block).unwrap();
         });
-        t.row(vec![
-            format!("lsh::encode_blocked (B={block})"),
-            "nodes/s".into(),
-            format!("{:.0}", n as f64 / s.median()),
-        ]);
+        push_row(
+            &mut t,
+            &mut json_rows,
+            &format!("lsh::encode_blocked (B={block}, 1 thread)"),
+            "nodes/s",
+            n as f64 / s.median(),
+        );
     }
+
+    // ---- L3: parallel encode engine (thread-scaling rows) ---------------
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut thread_counts = vec![1usize];
+    if avail >= 2 {
+        thread_counts.push(2);
+    }
+    if avail > 2 {
+        thread_counts.push(avail);
+    }
+    let mut engine_rates: Vec<(usize, f64)> = Vec::new();
+    for &threads in &thread_counts {
+        let plan = EncodeCfg::new(threads, 64);
+        let s = Samples::collect(reps, || {
+            let _ = lsh::encode_with(g.adj(), coding, Threshold::Median, 7, plan).unwrap();
+        });
+        let rate = n as f64 / s.median();
+        push_row(
+            &mut t,
+            &mut json_rows,
+            &format!("lsh::encode_with (B=64, threads={threads})"),
+            "nodes/s",
+            rate,
+        );
+        engine_rates.push((threads, rate));
+    }
+    // Determinism contract: same bits from the reference path and the
+    // engine at full parallelism.
+    let reference = lsh::encode(g.adj(), coding, Threshold::Median, 7)?;
+    let parallel = lsh::encode_with(g.adj(), coding, Threshold::Median, 7, EncodeCfg::new(avail, 64))?;
+    let bit_identical = reference.bits == parallel.bits;
+    t.row(vec![
+        "encode determinism (reference vs all-thread engine)".into(),
+        "bit-identical".into(),
+        bit_identical.to_string(),
+    ]);
+    assert!(bit_identical, "parallel encode diverged from the bit-by-bit reference");
+    let engine_best = engine_rates.iter().map(|&(_, r)| r).fold(0.0f64, f64::max);
 
     // ---- L3: median selection -------------------------------------------
     let mut rng = Xoshiro256pp::seed_from_u64(5);
@@ -61,40 +115,54 @@ fn main() -> anyhow::Result<()> {
         buf.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         let _ = buf[(buf.len() - 1) / 2];
     });
-    t.row(vec![
-        "median: quickselect".into(),
-        "Melem/s".into(),
-        format!("{:.1}", n as f64 / s_qs.median() / 1e6),
-    ]);
-    t.row(vec![
-        "median: full sort (baseline)".into(),
-        "Melem/s".into(),
-        format!("{:.1}", n as f64 / s_sort.median() / 1e6),
-    ]);
+    push_row(&mut t, &mut json_rows, "median: quickselect", "Melem/s", n as f64 / s_qs.median() / 1e6);
+    push_row(
+        &mut t,
+        &mut json_rows,
+        "median: full sort (baseline)",
+        "Melem/s",
+        n as f64 / s_sort.median() / 1e6,
+    );
+
+    // ---- L3: collision counting -----------------------------------------
+    let codes = lsh::encode_with(g.adj(), coding, Threshold::Median, 7, EncodeCfg::default())?;
+    let s = Samples::collect(10, || {
+        let _ = codes.bits.n_collisions();
+    });
+    push_row(
+        &mut t,
+        &mut json_rows,
+        "codes::n_collisions (hash+sort)",
+        "Mrows/s",
+        n as f64 / s.median() / 1e6,
+    );
 
     // ---- L3: code gather + neighbor sampling ----------------------------
-    let codes = lsh::encode(g.adj(), coding, Threshold::Median, 7)?;
     let ids: Vec<u32> = (0..4096u32).map(|i| i % n as u32).collect();
     let mut buf = Vec::new();
     let s = Samples::collect(50, || {
         codes.gather_int_codes(&ids, &mut buf);
     });
-    t.row(vec![
-        "codes::gather_int_codes".into(),
-        "Mcodes/s".into(),
-        format!("{:.1}", ids.len() as f64 / s.median() / 1e6),
-    ]);
+    push_row(
+        &mut t,
+        &mut json_rows,
+        "codes::gather_int_codes",
+        "Mcodes/s",
+        ids.len() as f64 / s.median() / 1e6,
+    );
     let sampler = NeighborSampler::new(&g, 10, 10);
     let batch: Vec<u32> = (0..256u32).collect();
     let mut srng = Xoshiro256pp::seed_from_u64(9);
     let s = Samples::collect(50, || {
         let _ = sampler.sample(&batch, &mut srng);
     });
-    t.row(vec![
-        "sampler (B=256, 10x10 fanout)".into(),
-        "batches/s".into(),
-        format!("{:.0}", 1.0 / s.median()),
-    ]);
+    push_row(
+        &mut t,
+        &mut json_rows,
+        "sampler (B=256, 10x10 fanout)",
+        "batches/s",
+        1.0 / s.median(),
+    );
 
     // ---- e2e: train step, pipeline on vs off ----------------------------
     let engine = Engine::cpu("artifacts")?;
@@ -102,7 +170,13 @@ fn main() -> anyhow::Result<()> {
         let nn = model.manifest.hyper_usize("n")?;
         let gg = Arc::new(sbm(SbmCfg::new(nn, 8, 12.0, 2.0), 3)?);
         let labels = Arc::new(gg.labels().unwrap().to_vec());
-        let table = Arc::new(lsh::encode(gg.adj(), coding, Threshold::Median, 7)?);
+        let table = Arc::new(lsh::encode_with(
+            gg.adj(),
+            coding,
+            Threshold::Median,
+            7,
+            EncodeCfg::default(),
+        )?);
         let steps = bench_util::pick(20u64, 6);
         for pipeline in [false, true] {
             let task = SageTask {
@@ -117,16 +191,40 @@ fn main() -> anyhow::Result<()> {
             opts.pipeline = pipeline;
             let (log, secs) = bench_util::timed(|| train::train(&model, &mut store, batcher, opts));
             let log = log?;
-            t.row(vec![
-                format!("sage_mb train step (pipeline={pipeline})"),
-                "steps/s".into(),
-                format!("{:.2}", log.losses.len() as f64 / secs),
-            ]);
+            push_row(
+                &mut t,
+                &mut json_rows,
+                &format!("sage_mb train step (pipeline={pipeline})"),
+                "steps/s",
+                log.losses.len() as f64 / secs,
+            );
         }
     } else {
         eprintln!("(artifacts not built; e2e section skipped)");
     }
 
     println!("{}", t.render());
+
+    // ---- machine-readable trajectory file at the repo root ---------------
+    let json = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("quick", Json::Bool(bench_util::quick())),
+        ("n_nodes", Json::num(n as f64)),
+        ("encode_n_bits", Json::num(coding.n_bits() as f64)),
+        ("available_parallelism", Json::num(avail as f64)),
+        ("encode_bit_identical_across_threads", Json::Bool(bit_identical)),
+        (
+            "encode_speedup_engine_vs_bitbybit",
+            Json::num(if bitbybit_rate > 0.0 { engine_best / bitbybit_rate } else { 0.0 }),
+        ),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_default()
+        .join("BENCH_perf_hotpath.json");
+    ser::to_file(&out_path, &json)?;
+    eprintln!("wrote {}", out_path.display());
     Ok(())
 }

@@ -12,7 +12,7 @@ use hashgnn::runtime::Engine;
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
 use hashgnn::tasks::{linkpred, T1Dataset};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("table1_gnn", "Table 1 (full NC/Rand/Hash × GNN × dataset grid)");
     let engine = Engine::cpu("artifacts")?;
     let opts = RunOpts {

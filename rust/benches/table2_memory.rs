@@ -34,7 +34,7 @@ fn render(rows: &[memory::MemoryRow], title: &str) {
     println!("{}", t.render());
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("table2_memory", "Table 2 (memory cost breakdown)");
     // Paper scale: ogbn-products, n = 1,871,031, d_e = 64, (c=256, m=16),
     // d_c = d_m = 512. Expected: 456.79 / 28.55 / 8.00 / 1.13 / 9.13 MiB,

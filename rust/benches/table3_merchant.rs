@@ -11,7 +11,7 @@ use hashgnn::report::Table;
 use hashgnn::runtime::Engine;
 use hashgnn::tasks::merchant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("table3_merchant", "Table 3 (merchant category identification)");
     let engine = Engine::cpu("artifacts")?;
     let model = engine.load("merchant")?;

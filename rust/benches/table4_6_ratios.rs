@@ -8,7 +8,7 @@ use hashgnn::cfg::CodingCfg;
 use hashgnn::report::Table;
 use hashgnn::tasks::memory::compression_ratio;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("table4_6_ratios", "Tables 4 and 6 (compression ratios)");
     let counts = [5000usize, 10000, 25000, 50000, 100000, 200000];
 

@@ -14,7 +14,7 @@ use hashgnn::runtime::Engine;
 use hashgnn::tasks::coding::{make_codes, Aux};
 use hashgnn::tasks::recon;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     bench_util::banner("table5_cm_sweep", "Table 5 ((c,m) grid on reconstruction)");
     let engine = Engine::cpu("artifacts")?;
     let grid = [(2usize, 128usize), (4, 64), (16, 32), (256, 16)];

@@ -14,7 +14,7 @@ use hashgnn::runtime::Engine;
 use hashgnn::tasks::coding::{make_codes, Aux};
 use hashgnn::tasks::recon;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5000);
     let seed = 3u64;
     let epochs = 8;

@@ -12,7 +12,7 @@ use hashgnn::cfg::Coder;
 use hashgnn::runtime::Engine;
 use hashgnn::tasks::{memory, merchant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     let epochs: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let seed = 11u64;

@@ -16,7 +16,7 @@ use hashgnn::params::ParamStore;
 use hashgnn::runtime::{Engine, Tensor};
 use hashgnn::train;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     // --- 1. a featureless graph -----------------------------------------
     let graph = sbm(SbmCfg::new(2000, 4, 12.0, 2.0), 42)?;
     println!(

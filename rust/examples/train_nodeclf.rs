@@ -17,7 +17,7 @@ use hashgnn::runtime::Engine;
 use hashgnn::tasks::coding::{make_codes, Aux};
 use hashgnn::tasks::sage::{self, Features, SageTask};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hashgnn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let epochs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(5);
     let coder = Coder::parse(args.get(1).map(|s| s.as_str()).unwrap_or("hash"))

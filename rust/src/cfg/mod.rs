@@ -53,6 +53,67 @@ impl CodingCfg {
     }
 }
 
+/// Parallel encode-engine settings (§Perf): how Algorithm 1 is *executed*,
+/// deliberately separate from [`CodingCfg`], which defines *what* is
+/// computed — by construction these knobs never change encode output
+/// (bit-identical for every `threads`/`block_bits` choice, see
+/// [`crate::lsh::encode_with`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EncodeCfg {
+    /// Worker threads; `0` = use all available parallelism.
+    pub threads: usize,
+    /// Projections carried per pass over the auxiliary matrix;
+    /// `0` = auto (one 64-bit word per pass).
+    pub block_bits: usize,
+}
+
+impl Default for EncodeCfg {
+    fn default() -> Self {
+        Self { threads: 0, block_bits: 0 }
+    }
+}
+
+impl EncodeCfg {
+    pub fn new(threads: usize, block_bits: usize) -> Self {
+        Self { threads, block_bits }
+    }
+
+    /// Reference single-thread execution (still blocked, still word-packed).
+    pub fn single_thread() -> Self {
+        Self { threads: 1, block_bits: 0 }
+    }
+
+    /// Resolve `threads = 0` against the machine.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        }
+    }
+
+    /// Resolve `block_bits = 0` (default: one packed word per pass) and
+    /// clamp to the code width.
+    pub fn resolved_block_bits(&self, n_bits: usize) -> usize {
+        let raw = if self.block_bits > 0 { self.block_bits } else { 64 };
+        raw.clamp(1, n_bits.max(1))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("block_bits", Json::num(self.block_bits as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            threads: v.get("threads")?.as_usize()?,
+            block_bits: v.get("block_bits")?.as_usize()?,
+        })
+    }
+}
+
 /// Decoder variant (Section 3.2 / Figure 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecoderVariant {
@@ -310,6 +371,22 @@ mod tests {
         assert!(CodingCfg::new(0, 8).is_err());
         assert!(CodingCfg::new(1, 8).is_err());
         assert!(CodingCfg::new(2, 0).is_err());
+    }
+
+    #[test]
+    fn encode_cfg_resolution_and_roundtrip() {
+        let auto = EncodeCfg::default();
+        assert!(auto.resolved_threads() >= 1);
+        assert_eq!(auto.resolved_block_bits(128), 64);
+        assert_eq!(auto.resolved_block_bits(12), 12);
+        let one = EncodeCfg::single_thread();
+        assert_eq!(one.resolved_threads(), 1);
+        let fixed = EncodeCfg::new(4, 96);
+        assert_eq!(fixed.resolved_threads(), 4);
+        assert_eq!(fixed.resolved_block_bits(128), 96);
+        assert_eq!(fixed.resolved_block_bits(32), 32);
+        let back = EncodeCfg::from_json(&fixed.to_json()).unwrap();
+        assert_eq!(fixed, back);
     }
 
     #[test]

@@ -127,6 +127,18 @@ impl Args {
             .map_err(|_| Error::Config(format!("--{name} must be an unsigned integer")))
     }
 
+    /// Like [`Self::get_usize`], but also accepts `auto` / `all` as `0`
+    /// (the conventional "resolve against the machine" sentinel, used by
+    /// parallelism knobs like `--threads`).
+    pub fn get_usize_auto(&self, name: &str) -> Result<usize> {
+        match self.get(name).as_str() {
+            "auto" | "all" => Ok(0),
+            v => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be an unsigned integer or 'auto'"))),
+        }
+    }
+
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         self.get(name)
             .parse()
@@ -198,6 +210,25 @@ mod tests {
             .parse(argv(&["cmd", "--x", "2", "sub"]))
             .unwrap();
         assert_eq!(a.positional(), &["cmd".to_string(), "sub".to_string()]);
+    }
+
+    #[test]
+    fn usize_auto_accepts_sentinels() {
+        let a = Args::new("t", "test")
+            .opt("threads", "0", "worker threads")
+            .parse(argv(&["--threads", "auto"]))
+            .unwrap();
+        assert_eq!(a.get_usize_auto("threads").unwrap(), 0);
+        let a = Args::new("t", "test")
+            .opt("threads", "0", "worker threads")
+            .parse(argv(&["--threads", "4"]))
+            .unwrap();
+        assert_eq!(a.get_usize_auto("threads").unwrap(), 4);
+        let a = Args::new("t", "test")
+            .opt("threads", "0", "worker threads")
+            .parse(argv(&["--threads", "lots"]))
+            .unwrap();
+        assert!(a.get_usize_auto("threads").is_err());
     }
 
     #[test]

@@ -61,19 +61,85 @@ impl BitMatrix {
         (self.words[w] >> (bit % 64)) & 1 == 1
     }
 
+    /// Words per packed row (`ceil(n_bits / 64)`).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Overwrite one 64-bit word of a row — bits `[64·word, 64·word + 64)`
+    /// in one store (64× fewer read-modify-write cycles than per-bit
+    /// [`Self::set`]). This is the checked single-row counterpart of the
+    /// parallel encoder's packer, which writes the same layout through
+    /// disjoint [`Self::words_mut`] row views; external callers building
+    /// packed codes word-at-a-time should come through here.
+    ///
+    /// Bits at positions `≥ n_bits` in the last word must be zero; the
+    /// padding invariant is what lets row comparisons work on raw words.
+    #[inline]
+    pub fn set_word(&mut self, row: usize, word: usize, value: u64) {
+        debug_assert!(row < self.n && word < self.words_per_row);
+        debug_assert!(
+            word + 1 < self.words_per_row
+                || self.n_bits % 64 == 0
+                || value >> (self.n_bits % 64) == 0,
+            "set_word: nonzero padding bits past n_bits"
+        );
+        self.words[row * self.words_per_row + word] = value;
+    }
+
     /// Raw words of one row.
     pub fn row_words(&self, row: usize) -> &[u64] {
         &self.words[row * self.words_per_row..(row + 1) * self.words_per_row]
     }
 
+    /// All packed words, row-major with [`Self::words_per_row`] words per
+    /// row. Exposed so the parallel encoder can split the storage into
+    /// disjoint per-thread row ranges (`&mut words[r0*wpr .. r1*wpr]`) and
+    /// assemble 64 bits per store without going through `&mut self`.
+    /// Callers must keep the padding invariant of [`Self::set_word`].
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
     /// Number of rows that collide (i.e. `n − #distinct codes`) — the
     /// quantity histogrammed in Figures 3 and 6.
+    ///
+    /// Allocation-light: rows are reduced to a [`crate::rng::mix64`]-mixed
+    /// content hash in one scratch `Vec<(u64, u32)>`, sorted, and only
+    /// equal-hash runs fall back to exact word-slice comparison (so the
+    /// count stays exact even under 64-bit hash collisions). The old
+    /// implementation keyed a `HashMap` by `Vec<u64>` — one heap
+    /// allocation per row, inside `collision_trials`' trial loop.
     pub fn n_collisions(&self) -> usize {
-        let mut seen = std::collections::HashMap::with_capacity(self.n);
+        let mut keyed: Vec<(u64, u32)> = Vec::with_capacity(self.n);
         for r in 0..self.n {
-            *seen.entry(self.row_words(r).to_vec()).or_insert(0usize) += 1;
+            let mut h = 0x243F_6A88_85A3_08D3u64;
+            for &w in self.row_words(r) {
+                h = crate::rng::mix64(h ^ w).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            }
+            keyed.push((h, r as u32));
         }
-        self.n - seen.len()
+        keyed.sort_unstable();
+        let mut distinct = 0usize;
+        let mut reps: Vec<u32> = Vec::new();
+        let mut i = 0;
+        while i < keyed.len() {
+            let mut j = i + 1;
+            while j < keyed.len() && keyed[j].0 == keyed[i].0 {
+                j += 1;
+            }
+            reps.clear();
+            for &(_, r) in &keyed[i..j] {
+                let row = self.row_words(r as usize);
+                if !reps.iter().any(|&p| self.row_words(p as usize) == row) {
+                    reps.push(r);
+                }
+            }
+            distinct += reps.len();
+            i = j;
+        }
+        self.n - distinct
     }
 
     /// Serialize to a compact binary file (little-endian header + words).
@@ -273,6 +339,38 @@ mod tests {
         assert!(!b.get(0, 63));
         b.set(1, 63, false);
         assert!(!b.get(1, 63));
+    }
+
+    #[test]
+    fn set_word_matches_per_bit_sets() {
+        let mut by_bit = BitMatrix::zeros(3, 100);
+        let mut by_word = BitMatrix::zeros(3, 100);
+        let pattern = 0xDEAD_BEEF_CAFE_F00Du64;
+        for bit in 0..64 {
+            by_bit.set(1, bit, (pattern >> bit) & 1 == 1);
+        }
+        by_word.set_word(1, 0, pattern);
+        // Second (partial) word: only 36 valid bits.
+        let tail = pattern & ((1u64 << 36) - 1);
+        for bit in 0..36 {
+            by_bit.set(1, 64 + bit, (tail >> bit) & 1 == 1);
+        }
+        by_word.set_word(1, 1, tail);
+        assert_eq!(by_bit, by_word);
+        assert_eq!(by_word.words_per_row(), 2);
+    }
+
+    #[test]
+    fn n_collisions_matches_hashmap_reference() {
+        for seed in 0..5u64 {
+            // Few bits over many rows → plenty of genuine duplicates.
+            let t = random_codes(300, coding(2, 6), seed);
+            let mut seen = std::collections::HashMap::new();
+            for r in 0..300 {
+                *seen.entry(t.bits.row_words(r).to_vec()).or_insert(0usize) += 1;
+            }
+            assert_eq!(t.bits.n_collisions(), 300 - seen.len(), "seed {seed}");
+        }
     }
 
     #[test]

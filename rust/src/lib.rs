@@ -8,7 +8,11 @@
 //! 1. an **encoding stage** ([`lsh`]) that assigns every node an
 //!    `m·log2(c)`-bit compositional code via random-projection LSH over
 //!    auxiliary information (adjacency rows or pre-trained embeddings),
-//!    binarized at the **median** to minimize collisions (Algorithm 1), and
+//!    binarized at the **median** to minimize collisions (Algorithm 1).
+//!    The encode path is a deterministic multi-threaded engine
+//!    ([`lsh::encode_with`]): per-bit seed streams, a blocked CSR SpMM,
+//!    parallel medians and word-packed bit writes — output is
+//!    bit-identical for every thread count and block size; and
 //! 2. a **decoding stage** (AOT-compiled JAX/Pallas, executed through
 //!    [`runtime`]) that maps codes through `m` codebooks + an MLP to dense
 //!    embeddings, trained end-to-end with the GNN.
@@ -23,9 +27,9 @@
 //!
 //! | layer | modules |
 //! |---|---|
-//! | substrates | [`rng`], [`ser`], [`cli`], [`cfg`], [`sparse`], [`graph`], [`embed`] |
-//! | paper core | [`lsh`] (Algorithm 1), [`codes`] (compositional codes) |
-//! | runtime    | [`runtime`] (PJRT), [`params`], [`train`] |
+//! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`], [`sparse`] (SpMV + blocked SpMM), [`graph`], [`embed`] |
+//! | paper core | [`lsh`] (Algorithm 1 + parallel encode engine), [`codes`] (compositional codes, word-packed bits) |
+//! | runtime    | [`runtime`] (PJRT; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
 //! | evaluation | [`eval`], [`tasks`], [`report`] |
 //! | dev        | [`testing`] (property-test harness) |
 
@@ -46,21 +50,51 @@ pub mod tasks;
 pub mod testing;
 pub mod train;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Host-only stand-in for the `xla` PJRT binding crate, compiled when the
+/// default-off `xla` feature is disabled (the offline build). See
+/// `rust/Cargo.toml` for how to wire in a real binding.
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
+/// Crate-wide error type. Display/Error are implemented by hand — the
+/// offline crate set has no `thiserror`.
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -71,3 +105,25 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_matches_previous_derive_format() {
+        assert_eq!(format!("{}", Error::Config("bad c".into())), "config error: bad c");
+        assert_eq!(format!("{}", Error::Shape("2x3".into())), "shape mismatch: 2x3");
+        assert_eq!(format!("{}", Error::Json("eof".into())), "json error: eof");
+        assert_eq!(format!("{}", Error::Runtime("no artifact".into())), "runtime error: no artifact");
+        assert_eq!(format!("{}", Error::Xla("stub".into())), "xla error: stub");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -9,18 +9,37 @@
 //!
 //! Memory follows the paper's analysis: the outer loop is per-bit so only
 //! one `V ∈ R^d` and one `U ∈ R^n` are live at a time —
-//! `O(max(n·m·log2 c, d·f, n·f))` overall.
+//! `O(max(n·m·log2 c, d·f, n·f))` overall (the blocked engine trades a
+//! factor `B = block_bits` of that for fewer traversals).
 //!
-//! [`encode_blocked`] is the §Perf variant: it processes `B` bits per pass
-//! over `A`, trading `B·(d+n)` floats of memory for a `B×` reduction in
-//! sparse-matrix traversals (the dominant cost: `A` is scanned once per
-//! *block* instead of once per *bit*).
+//! ## §Perf — the encode engine
+//!
+//! [`encode`] is the verbatim bit-by-bit reference. Production encoding
+//! goes through [`encode_with`] (see [`engine`] internals): `B` bits per
+//! pass over `A` (one blocked CSR SpMM / row-tiled dense GEMV instead of
+//! `B` traversals), per-bit medians computed in parallel, and word-packed
+//! `BitMatrix` writes (64 bits per store through disjoint per-thread row
+//! views). Every output bit draws its Gaussian vector from its own
+//! [`crate::rng::derive_stream_seed`] stream, so all paths —
+//! [`encode`], [`encode_blocked`], [`encode_with`] at any
+//! `threads`/`block_bits` — produce **bit-identical** code tables; the
+//! determinism is enforced by unit + property tests and re-checked by
+//! `benches/perf_hotpath.rs`, which records encode throughput and
+//! thread-scaling rows in `BENCH_perf_hotpath.json` at the repo root.
+//!
+//! **Compatibility note:** the per-bit stream derivation changed the
+//! random stream layout, so codes for a given seed differ bitwise from
+//! pre-engine versions of this crate (same distribution, different
+//! draws). Persisted code files and decoder artifacts trained against
+//! old codes must be regenerated.
 
+mod engine;
 mod median;
 
+pub use engine::encode_with;
 pub use median::median_in_place;
 
-use crate::cfg::CodingCfg;
+use crate::cfg::{CodingCfg, EncodeCfg};
 use crate::codes::{BitMatrix, CodeTable};
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::sparse::Csr;
@@ -44,6 +63,41 @@ pub trait AuxSource {
     fn d(&self) -> usize;
     /// `out[j] = dot(A[j, :], v)` for all rows `j` (Algorithm 1 lines 7–8).
     fn project(&self, v: &[f32], out: &mut [f32]);
+
+    /// Blocked row-range projection, the engine's hot kernel:
+    /// `outs[b][j - rows.start] = dot(A[j,:], V_b)` where `V_b` is column
+    /// `b` of the coordinate-major block `vt` (`vt[k * n_vecs + b]`).
+    ///
+    /// Implementations must accumulate each dot product in ascending
+    /// coordinate order with a single f32 accumulator so results are
+    /// bit-identical to [`AuxSource::project`] — the engine's determinism
+    /// contract depends on it.
+    ///
+    /// The default reconstitutes each vector and delegates to `project`
+    /// (correct, but one full pass per vector — and since `project` covers
+    /// all rows, under a multi-threaded plan *every worker* repeats that
+    /// full pass and keeps only its row range: no speedup, `T×` the CPU).
+    /// Any source used with `threads > 1` should override this; [`Csr`]
+    /// and [`DenseAux`] do, with single-pass row-range kernels.
+    fn project_block_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        vt: &[f32],
+        n_vecs: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        let d = self.d();
+        let n = self.n();
+        let mut v = vec![0.0f32; d];
+        let mut full = vec![0.0f32; n];
+        for b in 0..n_vecs {
+            for k in 0..d {
+                v[k] = vt[k * n_vecs + b];
+            }
+            self.project(&v, &mut full);
+            outs[b].copy_from_slice(&full[rows.clone()]);
+        }
+    }
 }
 
 impl AuxSource for Csr {
@@ -57,6 +111,16 @@ impl AuxSource for Csr {
 
     fn project(&self, v: &[f32], out: &mut [f32]) {
         self.spmv(v, out);
+    }
+
+    fn project_block_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        vt: &[f32],
+        n_vecs: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        self.spmm_block_rows(rows, vt, n_vecs, outs);
     }
 }
 
@@ -73,6 +137,10 @@ impl<'a> DenseAux<'a> {
         Self { data, n, d }
     }
 }
+
+/// Rows per register tile of the blocked dense kernel: each coordinate row
+/// of `vt` loaded from cache is reused across this many entity rows.
+const DENSE_ROW_TILE: usize = 8;
 
 impl<'a> AuxSource for DenseAux<'a> {
     fn n(&self) -> usize {
@@ -93,9 +161,49 @@ impl<'a> AuxSource for DenseAux<'a> {
             out[j] = acc;
         }
     }
+
+    /// Cache-blocked `(rows × d) · (d × n_vecs)` kernel: row tiles of
+    /// [`DENSE_ROW_TILE`] share each streamed `vt` coordinate row. The
+    /// per-`(j, b)` accumulation order (ascending `k`, one accumulator)
+    /// matches [`Self::project`] exactly.
+    fn project_block_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        vt: &[f32],
+        n_vecs: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        debug_assert!(rows.end <= self.n);
+        debug_assert_eq!(vt.len(), self.d * n_vecs);
+        debug_assert_eq!(outs.len(), n_vecs);
+        let row0 = rows.start;
+        let mut acc = vec![0.0f32; DENSE_ROW_TILE * n_vecs];
+        let mut j0 = rows.start;
+        while j0 < rows.end {
+            let jt = DENSE_ROW_TILE.min(rows.end - j0);
+            acc[..jt * n_vecs].fill(0.0);
+            for k in 0..self.d {
+                let vrow = &vt[k * n_vecs..][..n_vecs];
+                for t in 0..jt {
+                    let a = self.data[(j0 + t) * self.d + k];
+                    let arow = &mut acc[t * n_vecs..][..n_vecs];
+                    for b in 0..n_vecs {
+                        arow[b] += a * vrow[b];
+                    }
+                }
+            }
+            for t in 0..jt {
+                for b in 0..n_vecs {
+                    outs[b][j0 + t - row0] = acc[t * n_vecs + b];
+                }
+            }
+            j0 += jt;
+        }
+    }
 }
 
-/// Algorithm 1, verbatim: bit-by-bit streaming encode.
+/// Algorithm 1, verbatim: bit-by-bit streaming encode (the reference
+/// implementation — [`encode_with`] reproduces its output exactly).
 pub fn encode<A: AuxSource>(
     aux: &A,
     coding: CodingCfg,
@@ -107,12 +215,17 @@ pub fn encode<A: AuxSource>(
     let d = aux.d();
     let n_bits = coding.n_bits();
     let mut bits = BitMatrix::zeros(n, n_bits);
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    if n == 0 {
+        return CodeTable::new(bits, coding);
+    }
     let mut v = vec![0.0f32; d];
     let mut u = vec![0.0f32; n];
     let mut scratch = vec![0.0f32; n];
     for bit in 0..n_bits {
-        rng.fill_normal_f32(&mut v, 0.0, 1.0); // line 5: GetRandomVector(d)
+        // line 5: GetRandomVector(d) — one seed stream per output bit, so
+        // every execution layout draws the same vector for the same bit.
+        let mut rng = Xoshiro256pp::seed_for_stream(seed, bit as u64);
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
         aux.project(&v, &mut u); // lines 7–8: U = A·V
         let t = match threshold {
             Threshold::Median => {
@@ -130,10 +243,10 @@ pub fn encode<A: AuxSource>(
     CodeTable::new(bits, coding)
 }
 
-/// Blocked encode (§Perf): identical output *distribution* (different
-/// random stream layout), processing `block_bits` projections per pass.
-/// With a CSR source this turns `n_bits` full sparse traversals into
-/// `n_bits / block_bits` traversals of a multi-vector SpMM.
+/// Blocked single-thread encode (§Perf): `block_bits` projections per pass
+/// over `A`, trading `B·(d+n)` floats of memory for a `B×` reduction in
+/// sparse-matrix traversals. Output is **bit-identical** to [`encode`];
+/// use [`encode_with`] directly to also parallelize across threads.
 pub fn encode_blocked<A: AuxSource + Sync>(
     aux: &A,
     coding: CodingCfg,
@@ -141,62 +254,12 @@ pub fn encode_blocked<A: AuxSource + Sync>(
     seed: u64,
     block_bits: usize,
 ) -> Result<CodeTable> {
-    coding.validate()?;
-    let n = aux.n();
-    let d = aux.d();
-    let n_bits = coding.n_bits();
-    let block = block_bits.clamp(1, n_bits);
-    let mut bits = BitMatrix::zeros(n, n_bits);
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    let mut vs = vec![0.0f32; d * block];
-    let mut us = vec![0.0f32; n * block];
-    let mut scratch = vec![0.0f32; n];
-    let mut start = 0usize;
-    while start < n_bits {
-        let cur = block.min(n_bits - start);
-        rng.fill_normal_f32(&mut vs[..d * cur], 0.0, 1.0);
-        // Multi-vector projection. For CSR this is the blocked SpMM fast
-        // path; for dense it is a (n×d)·(d×cur) matmul done row-wise.
-        project_block(aux, &vs[..d * cur], cur, &mut us[..n * cur]);
-        for b in 0..cur {
-            let u = &us[b * n..(b + 1) * n];
-            let t = match threshold {
-                Threshold::Median => {
-                    scratch.copy_from_slice(u);
-                    median_in_place(&mut scratch)
-                }
-                Threshold::Zero => 0.0,
-            };
-            let bit = start + b;
-            for j in 0..n {
-                if u[j] > t {
-                    bits.set(j, bit, true);
-                }
-            }
-        }
-        start += cur;
-    }
-    CodeTable::new(bits, coding)
-}
-
-/// `us[b*n + j] = dot(A[j,:], vs[b*d..])` — one pass over `A` for all `b`.
-fn project_block<A: AuxSource + ?Sized>(aux: &A, vs: &[f32], n_vecs: usize, us: &mut [f32]) {
-    let n = aux.n();
-    let d = aux.d();
-    debug_assert_eq!(vs.len(), d * n_vecs);
-    debug_assert_eq!(us.len(), n * n_vecs);
-    // Generic fallback: delegate to per-vector project (already one pass
-    // per vector). Csr gets a specialized single-pass loop below.
-    for b in 0..n_vecs {
-        // SAFETY of indexing: disjoint slices per b.
-        let (v, u) = (&vs[b * d..(b + 1) * d], &mut us[b * n..(b + 1) * n]);
-        aux.project(v, u);
-    }
+    encode_with(aux, coding, threshold, seed, EncodeCfg { threads: 1, block_bits })
 }
 
 /// Count collisions produced by a given (threshold, bits) setting over
 /// `trials` seeds — the Figure 3 / Figure 6 experiment.
-pub fn collision_trials<A: AuxSource>(
+pub fn collision_trials<A: AuxSource + Sync>(
     aux: &A,
     n_bits: usize,
     threshold: Threshold,
@@ -207,7 +270,7 @@ pub fn collision_trials<A: AuxSource>(
     let coding = CodingCfg::new(2, n_bits).expect("valid coding");
     (0..trials)
         .map(|t| {
-            let table = encode(aux, coding, threshold, base_seed + t as u64)
+            let table = encode_with(aux, coding, threshold, base_seed + t as u64, EncodeCfg::default())
                 .expect("encode cannot fail on valid input");
             table.bits.n_collisions()
         })
@@ -313,20 +376,45 @@ mod tests {
     }
 
     #[test]
-    fn blocked_encode_same_statistics() {
+    fn blocked_encode_bit_identical_to_plain() {
         let e = gaussian_mixture(500, 12, 4, 0.3, 6);
         let aux = DenseAux::new(&e.data, e.n, e.d);
         let plain = encode(&aux, coding(2, 32), Threshold::Median, 3).unwrap();
-        let blocked = encode_blocked(&aux, coding(2, 32), Threshold::Median, 3, 8).unwrap();
-        // Same RNG consumption order per block differs, so exact equality is
-        // not required — but per-bit balance must hold for both.
-        for t in [&plain, &blocked] {
-            for bit in 0..32 {
-                let ones = (0..500).filter(|&r| t.bits.get(r, bit)).count();
-                assert!((230..=270).contains(&ones), "ones={ones}");
+        for block in [1usize, 8, 64] {
+            let blocked = encode_blocked(&aux, coding(2, 32), Threshold::Median, 3, block).unwrap();
+            assert_eq!(plain.bits, blocked.bits, "block_bits={block}");
+        }
+    }
+
+    #[test]
+    fn parallel_encode_bit_identical_across_threads_and_blocks() {
+        // The engine's determinism contract, over both aux sources and
+        // both thresholds: output never depends on the execution plan.
+        let g = barabasi_albert(400, 3, 9).unwrap();
+        let e = gaussian_mixture(300, 16, 4, 0.3, 2);
+        let aux = DenseAux::new(&e.data, e.n, e.d);
+        for threshold in [Threshold::Median, Threshold::Zero] {
+            let ref_csr = encode(g.adj(), coding(4, 16), threshold, 11).unwrap();
+            let ref_dense = encode(&aux, coding(4, 16), threshold, 11).unwrap();
+            for threads in [1usize, 2, 8] {
+                for block in [1usize, 8, 64] {
+                    let plan = EncodeCfg::new(threads, block);
+                    let t = encode_with(g.adj(), coding(4, 16), threshold, 11, plan).unwrap();
+                    assert_eq!(ref_csr.bits, t.bits, "csr threads={threads} block={block}");
+                    let t = encode_with(&aux, coding(4, 16), threshold, 11, plan).unwrap();
+                    assert_eq!(ref_dense.bits, t.bits, "dense threads={threads} block={block}");
+                }
             }
         }
-        assert_eq!(blocked.n(), 500);
+    }
+
+    #[test]
+    fn encode_with_auto_plan_matches_reference() {
+        let g = barabasi_albert(200, 2, 4).unwrap();
+        let a = encode(g.adj(), coding(2, 24), Threshold::Median, 5).unwrap();
+        let b = encode_with(g.adj(), coding(2, 24), Threshold::Median, 5, EncodeCfg::default())
+            .unwrap();
+        assert_eq!(a.bits, b.bits);
     }
 
     use crate::rng::Xoshiro256pp;

@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use hashgnn::cfg::{Coder, CodingCfg};
+use hashgnn::cfg::{Coder, CodingCfg, EncodeCfg};
 use hashgnn::cli::Args;
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::report::{self, Table};
@@ -70,16 +70,24 @@ fn cmd_encode(argv: Vec<String>) -> Result<()> {
         .opt("m", "32", "code length")
         .opt("coder", "hash", "coding scheme: hash | random")
         .opt("seed", "7", "rng seed")
+        .opt("threads", "0", "encode worker threads (0 = all cores; output is thread-count independent)")
+        .opt("block-bits", "0", "projections per pass over A (0 = auto)")
         .opt("out", "", "output file for the bit-packed codes (optional)")
         .parse(argv)?;
     let n = a.get_usize("nodes")?;
     let coding_cfg = CodingCfg::new(a.get_usize("c")?, a.get_usize("m")?)?;
     let coder = Coder::parse(&a.get("coder"))?;
     let seed = a.get_u64("seed")?;
+    let plan = EncodeCfg::new(a.get_usize_auto("threads")?, a.get_usize("block-bits")?);
     eprintln!("[encode] generating SBM graph n={n} ...");
     let g = sbm(SbmCfg::new(n, a.get_usize("classes")?, 12.0, 2.0), seed)?;
+    eprintln!(
+        "[encode] {} threads, {} bits/block",
+        plan.resolved_threads(),
+        plan.resolved_block_bits(coding_cfg.n_bits())
+    );
     let t0 = std::time::Instant::now();
-    let table = coding::make_codes(&coding::Aux::Graph(&g), coder, coding_cfg, seed)?;
+    let table = coding::make_codes_with(&coding::Aux::Graph(&g), coder, coding_cfg, seed, plan)?;
     let dt = t0.elapsed();
     println!(
         "encoded {n} nodes -> {} bits/node ({} KiB total) in {:.2}s ({:.0} nodes/s)",

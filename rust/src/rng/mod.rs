@@ -11,6 +11,33 @@ mod zipf;
 
 pub use zipf::Zipf;
 
+/// The SplitMix64 finalizer as a standalone mixing function: a bijective
+/// avalanche permutation of `u64`. Used for seeding, stream derivation
+/// ([`derive_stream_seed`]) and cheap content hashing
+/// (`BitMatrix::n_collisions`).
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive the seed of logical stream `stream` under a root seed.
+///
+/// Deterministic stream splitting for parallel work: two distinct
+/// `(root, stream)` pairs land in decorrelated states (Weyl increment on
+/// the root, a second odd multiplier on the stream index, then the
+/// SplitMix64 avalanche). The LSH engine gives every output *bit* its own
+/// stream, which is what makes encode output independent of block size,
+/// thread count and scheduling — see [`crate::lsh`].
+#[inline]
+pub fn derive_stream_seed(root: u64, stream: u64) -> u64 {
+    mix64(
+        root.wrapping_add(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(stream.wrapping_mul(0xD1B5_4A32_D192_ED03)),
+    )
+}
+
 /// SplitMix64 — used to expand a single `u64` seed into generator state.
 ///
 /// Reference: Steele, Lea & Flood, "Fast splittable pseudorandom number
@@ -28,10 +55,7 @@ impl SplitMix64 {
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        mix64(self.state)
     }
 }
 
@@ -52,6 +76,14 @@ impl Xoshiro256pp {
         Self {
             s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
         }
+    }
+
+    /// Generator for logical stream `stream` under `seed` (see
+    /// [`derive_stream_seed`]). Unlike [`Self::split`], which advances a
+    /// shared generator, this is stateless: any worker can construct the
+    /// generator for any stream index without coordination.
+    pub fn seed_for_stream(seed: u64, stream: u64) -> Self {
+        Self::seed_from_u64(derive_stream_seed(seed, stream))
     }
 
     #[inline]
@@ -315,6 +347,33 @@ mod tests {
             assert_eq!(set.len(), k, "indices must be distinct");
             assert!(s.iter().all(|&i| i < n));
         }
+    }
+
+    #[test]
+    fn stream_seeds_deterministic_and_distinct() {
+        assert_eq!(derive_stream_seed(7, 3), derive_stream_seed(7, 3));
+        assert_ne!(derive_stream_seed(7, 3), derive_stream_seed(7, 4));
+        assert_ne!(derive_stream_seed(7, 3), derive_stream_seed(8, 3));
+        // No collisions over a large stream fan-out (mix64 is bijective, so
+        // collisions would require distinct pre-mix states colliding).
+        let seeds: std::collections::HashSet<u64> =
+            (0..10_000).map(|s| derive_stream_seed(42, s)).collect();
+        assert_eq!(seeds.len(), 10_000);
+    }
+
+    #[test]
+    fn stream_generators_decorrelated() {
+        // Adjacent streams must not produce overlapping prefixes.
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_for_stream(9, 0);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_for_stream(9, 1);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+        assert!(a.iter().all(|x| !b.contains(x)));
     }
 
     #[test]

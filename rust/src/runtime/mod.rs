@@ -2,6 +2,10 @@
 //! on the CPU PJRT client. This is the only module that touches the `xla`
 //! crate; everything above it works with [`Tensor`]s and artifact names.
 //!
+//! Without the default-off `xla` feature, `xla` here is the in-crate stub
+//! ([`crate::xla`]): clients and host literals work, while HLO compilation
+//! and execution return clean [`Error::Runtime`]-shaped errors.
+//!
 //! Lifecycle: [`Engine::cpu`] once per process → [`Engine::load`] per
 //! artifact (compiles HLO → executable) → [`Executable::run`] per step.
 
@@ -13,6 +17,8 @@ pub use tensor::Tensor;
 
 use std::path::{Path, PathBuf};
 
+#[cfg(not(feature = "xla"))]
+use crate::xla;
 use crate::{Error, Result};
 
 /// PJRT client wrapper. One per process.

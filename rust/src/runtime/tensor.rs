@@ -1,5 +1,7 @@
 //! Host-side tensors and the [`xla::Literal`] bridge.
 
+#[cfg(not(feature = "xla"))]
+use crate::xla;
 use crate::{Error, Result};
 
 /// A host tensor: shape + data. Only the two dtypes the artifacts use.

@@ -143,6 +143,75 @@ impl Csr {
         }
     }
 
+    /// Blocked SpMM over a row range: one traversal of the rows' stored
+    /// entries produces the projections against all `n_vecs` dense vectors
+    /// at once (the LSH engine's hot kernel — `A` is the dominant memory
+    /// stream, so amortizing it across a block of vectors is the §Perf
+    /// win over per-vector [`Self::spmv`]).
+    ///
+    /// `vt` is the **transposed** vector block, `vt[k * n_vecs + b]` =
+    /// coordinate `k` of vector `b`, so the inner loop reads one
+    /// contiguous `n_vecs`-row per stored entry. `outs[b][r - rows.start]`
+    /// receives `dot(A[r,:], V_b)`.
+    ///
+    /// Per `(r, b)` the accumulation order (ascending stored-column order,
+    /// one f32 accumulator) is identical to [`Self::row_dot`], so results
+    /// are bit-identical to the per-vector path — the property the
+    /// deterministic parallel encoder relies on.
+    pub fn spmm_block_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        vt: &[f32],
+        n_vecs: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        assert!(rows.end <= self.n_rows, "spmm: row range out of bounds");
+        assert_eq!(vt.len(), self.n_cols * n_vecs, "spmm: vt length");
+        assert_eq!(outs.len(), n_vecs, "spmm: outs count");
+        let row0 = rows.start;
+        let n_out = rows.end - rows.start;
+        for out in outs.iter() {
+            assert_eq!(out.len(), n_out, "spmm: out slice length");
+        }
+        let mut acc = vec![0.0f32; n_vecs];
+        for r in rows {
+            acc.fill(0.0);
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                let a = val[k];
+                let vrow = &vt[idx[k] as usize * n_vecs..][..n_vecs];
+                for b in 0..n_vecs {
+                    acc[b] += a * vrow[b];
+                }
+            }
+            for b in 0..n_vecs {
+                outs[b][r - row0] = acc[b];
+            }
+        }
+    }
+
+    /// Sparse matrix × dense multi-vector block, single pass over `A`:
+    /// `out[b * n_rows + r] = dot(A[r,:], vs[b*d .. (b+1)*d])`.
+    ///
+    /// `vs` is vector-major (vector `b` contiguous); the transpose into the
+    /// layout [`Self::spmm_block_rows`] wants is done internally.
+    pub fn spmm(&self, vs: &[f32], n_vecs: usize, out: &mut [f32]) {
+        assert_eq!(vs.len(), self.n_cols * n_vecs, "spmm: vs length");
+        assert_eq!(out.len(), self.n_rows * n_vecs, "spmm: out length");
+        if self.n_rows == 0 || n_vecs == 0 {
+            return;
+        }
+        let mut vt = vec![0.0f32; vs.len()];
+        for b in 0..n_vecs {
+            for k in 0..self.n_cols {
+                vt[k * n_vecs + b] = vs[b * self.n_cols + k];
+            }
+        }
+        let mut outs: Vec<&mut [f32]> = out.chunks_mut(self.n_rows).collect();
+        self.spmm_block_rows(0..self.n_rows, &vt, n_vecs, &mut outs);
+    }
+
     /// Materialize row `r` into a dense buffer (zero-filled first).
     pub fn densify_row(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.n_cols);
@@ -323,6 +392,64 @@ mod tests {
         let mut out = vec![0.0; 3];
         a.spmv(&v, &mut out);
         assert_eq!(out, vec![a.row_dot(0, &v), a.row_dot(1, &v), a.row_dot(2, &v)]);
+    }
+
+    #[test]
+    fn spmm_matches_per_vector_spmv_bitwise() {
+        // Random-ish rectangular matrix with duplicate-free triplets.
+        let mut triplets = Vec::new();
+        for r in 0..13u32 {
+            for c in 0..7u32 {
+                if (r * 31 + c * 17) % 3 == 0 {
+                    triplets.push((r, c, (r as f32 * 0.37 - c as f32 * 1.21).sin()));
+                }
+            }
+        }
+        let a = Csr::from_triplets(13, 7, &triplets).unwrap();
+        let n_vecs = 5;
+        let vs: Vec<f32> = (0..7 * n_vecs).map(|i| ((i * 29 + 3) % 11) as f32 * 0.3 - 1.5).collect();
+        let mut blocked = vec![0.0f32; 13 * n_vecs];
+        a.spmm(&vs, n_vecs, &mut blocked);
+        for b in 0..n_vecs {
+            let mut single = vec![0.0f32; 13];
+            a.spmv(&vs[b * 7..(b + 1) * 7], &mut single);
+            // Bit-identical, not approximately equal: the parallel encoder
+            // depends on the accumulation orders matching exactly.
+            assert_eq!(&blocked[b * 13..(b + 1) * 13], single.as_slice(), "vector {b}");
+        }
+    }
+
+    #[test]
+    fn spmm_block_rows_covers_partial_ranges() {
+        let a = small().symmetrize().unwrap();
+        let n_vecs = 3;
+        let mut vt = vec![0.0f32; 3 * n_vecs];
+        for k in 0..3 {
+            for b in 0..n_vecs {
+                vt[k * n_vecs + b] = (k * n_vecs + b) as f32 * 0.5 - 1.0;
+            }
+        }
+        let mut full = vec![0.0f32; 3 * n_vecs];
+        {
+            let mut outs: Vec<&mut [f32]> = full.chunks_mut(3).collect();
+            a.spmm_block_rows(0..3, &vt, n_vecs, &mut outs);
+        }
+        // Same computation over the split ranges [0,2) and [2,3).
+        let mut lo = vec![0.0f32; 2 * n_vecs];
+        let mut hi = vec![0.0f32; n_vecs];
+        {
+            let mut outs: Vec<&mut [f32]> = lo.chunks_mut(2).collect();
+            a.spmm_block_rows(0..2, &vt, n_vecs, &mut outs);
+        }
+        {
+            let mut outs: Vec<&mut [f32]> = hi.chunks_mut(1).collect();
+            a.spmm_block_rows(2..3, &vt, n_vecs, &mut outs);
+        }
+        for b in 0..n_vecs {
+            assert_eq!(full[b * 3], lo[b * 2]);
+            assert_eq!(full[b * 3 + 1], lo[b * 2 + 1]);
+            assert_eq!(full[b * 3 + 2], hi[b]);
+        }
     }
 
     #[test]

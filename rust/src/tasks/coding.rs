@@ -10,7 +10,7 @@
 //!   not here — it is the only coder with a training stage, exactly the
 //!   property the paper's method avoids).
 
-use crate::cfg::{Coder, CodingCfg};
+use crate::cfg::{Coder, CodingCfg, EncodeCfg};
 use crate::codes::{random_codes, CodeTable};
 use crate::graph::Graph;
 use crate::lsh::{self, DenseAux, Threshold};
@@ -37,15 +37,29 @@ impl<'a> Aux<'a> {
     }
 }
 
-/// Produce codes for all `aux.n()` entities.
+/// Produce codes for all `aux.n()` entities, using all available cores
+/// for the hash coder (output is independent of the thread count — see
+/// [`lsh::encode_with`]).
 pub fn make_codes(aux: &Aux, coder: Coder, coding: CodingCfg, seed: u64) -> Result<CodeTable> {
+    make_codes_with(aux, coder, coding, seed, EncodeCfg::default())
+}
+
+/// [`make_codes`] under an explicit encode execution plan (CLI `--threads`
+/// / `--block-bits`). The plan only affects speed, never the codes.
+pub fn make_codes_with(
+    aux: &Aux,
+    coder: Coder,
+    coding: CodingCfg,
+    seed: u64,
+    plan: EncodeCfg,
+) -> Result<CodeTable> {
     match coder {
         Coder::Random => Ok(random_codes(aux.n(), coding, seed)),
         Coder::Hash => match aux {
-            Aux::Graph(g) => lsh::encode(g.adj(), coding, Threshold::Median, seed),
+            Aux::Graph(g) => lsh::encode_with(g.adj(), coding, Threshold::Median, seed, plan),
             Aux::Dense { data, n, d } => {
                 let dense = DenseAux::new(data, *n, *d);
-                lsh::encode(&dense, coding, Threshold::Median, seed)
+                lsh::encode_with(&dense, coding, Threshold::Median, seed, plan)
             }
             Aux::None { .. } => {
                 Err(Error::Config("hash coder requires auxiliary information".into()))
@@ -76,6 +90,24 @@ mod tests {
             make_codes(&Aux::Graph(&g), Coder::Hash, CodingCfg::new(16, 8).unwrap(), 3).unwrap();
         assert_eq!(t.n(), 100);
         assert_eq!(t.coding.n_bits(), 32);
+    }
+
+    #[test]
+    fn hash_codes_independent_of_plan() {
+        let g = barabasi_albert(150, 3, 5).unwrap();
+        let coding = CodingCfg::new(16, 8).unwrap();
+        let base = make_codes(&Aux::Graph(&g), Coder::Hash, coding, 3).unwrap();
+        for threads in [1usize, 4] {
+            let t = make_codes_with(
+                &Aux::Graph(&g),
+                Coder::Hash,
+                coding,
+                3,
+                EncodeCfg::new(threads, 8),
+            )
+            .unwrap();
+            assert_eq!(base.bits, t.bits, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Minimal host-only stand-in for the `xla` PJRT binding crate.
+//!
+//! Compiled (as `crate::xla`) only when the default-off `xla` feature is
+//! disabled, so `cargo build && cargo test` work fully offline. The stub
+//! mirrors exactly the API surface [`crate::runtime`] uses:
+//!
+//! - **Literals are real**: shape + typed data + tuples live on the host,
+//!   so [`crate::runtime::Tensor`] round-trips (and its unit tests) behave
+//!   identically to the real binding.
+//! - **Compilation/execution are unavailable**: [`HloModuleProto::from_text_file`]
+//!   and [`PjRtLoadedExecutable::execute`] return a clean [`Error`] telling
+//!   the caller to build with the real backend. Callers already surface
+//!   this as `Error::Xla(..)` through the crate-level `From` impl.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in the offline xla stub — rebuild with the real \
+         PJRT backend (feature `xla`, see rust/Cargo.toml)"
+    ))
+}
+
+/// Element types the artifacts use (plus common extras for completeness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+    U8,
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: a shaped, typed buffer (or a tuple of literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Element types storable in a stub [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn vec1(data: &[Self]) -> Literal;
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn vec1(data: &[Self]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: Payload::F32(data.to_vec()) }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn vec1(data: &[Self]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: Payload::I32(data.to_vec()) }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1(data)
+    }
+
+    fn n_elements(&self) -> i64 {
+        match &self.payload {
+            Payload::F32(v) => v.len() as i64,
+            Payload::I32(v) => v.len() as i64,
+            Payload::Tuple(_) => -1,
+        }
+    }
+
+    /// Reshape to the given dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let have = self.n_elements();
+        if have < 0 {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want != have {
+            return Err(Error(format!("reshape {dims:?} needs {want} elements, literal has {have}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+            Payload::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::read(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// PJRT client stub (host CPU, no device runtime behind it).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("HLO compilation"))
+    }
+}
+
+/// Parsed HLO module stub.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("parsing HLO text ({path})")))
+    }
+}
+
+/// Computation stub.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer stub returned by [`PjRtLoadedExecutable::execute`].
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Loaded executable stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_stores_and_reshapes() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn compile_and_execute_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = client.compile(&XlaComputation::from_proto(&HloModuleProto)).map(|_| ()).unwrap_err();
+        assert!(msg.to_string().contains("stub"));
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}

@@ -3,7 +3,7 @@
 //! `testing` harness (no proptest in the offline crate set); every failure
 //! reports a replayable case seed.
 
-use hashgnn::cfg::CodingCfg;
+use hashgnn::cfg::{CodingCfg, EncodeCfg};
 use hashgnn::codes::{random_codes, CodeTable};
 use hashgnn::graph::generate::{barabasi_albert, sbm, SbmCfg};
 use hashgnn::graph::{split_nodes, NeighborSampler};
@@ -74,6 +74,45 @@ fn prop_lsh_bit_balance() {
             let ones = (0..n).filter(|&r| t.bits.get(r, bit)).count();
             if ones > n / 2 {
                 return Err(format!("bit {bit}: {ones}/{n} ones"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_bit_identical_across_execution_plans() {
+    // The parallel engine's contract: for any aux source, shape, seed and
+    // threshold, encode output never depends on (threads, block_bits),
+    // and the blocked/parallel paths equal the bit-by-bit reference.
+    check("encode plan independence", cfg(6), |rng| {
+        let n = 20 + rng.index(180);
+        let d = 3 + rng.index(20);
+        let mut data = vec![0.0f32; n * d];
+        rng.fill_normal_f32(&mut data, (rng.f64() - 0.5) as f32, 1.0);
+        let seed = rng.next_u64();
+        let coding = CodingCfg::new(4, 1 + rng.index(40)).map_err(|e| e.to_string())?;
+        let threshold =
+            if rng.bool_with(0.5) { lsh::Threshold::Median } else { lsh::Threshold::Zero };
+
+        let dense = lsh::DenseAux::new(&data, n, d);
+        let graph = barabasi_albert(n, 1 + rng.index(3), rng.next_u64()).map_err(|e| e.to_string())?;
+        let ref_dense = lsh::encode(&dense, coding, threshold, seed).map_err(|e| e.to_string())?;
+        let ref_csr =
+            lsh::encode(graph.adj(), coding, threshold, seed).map_err(|e| e.to_string())?;
+        for threads in [1usize, 2, 8] {
+            for block_bits in [1usize, 8, 64] {
+                let plan = EncodeCfg::new(threads, block_bits);
+                let got = lsh::encode_with(&dense, coding, threshold, seed, plan)
+                    .map_err(|e| e.to_string())?;
+                if got.bits != ref_dense.bits {
+                    return Err(format!("dense diverged: threads={threads} block={block_bits}"));
+                }
+                let got = lsh::encode_with(graph.adj(), coding, threshold, seed, plan)
+                    .map_err(|e| e.to_string())?;
+                if got.bits != ref_csr.bits {
+                    return Err(format!("csr diverged: threads={threads} block={block_bits}"));
+                }
             }
         }
         Ok(())
