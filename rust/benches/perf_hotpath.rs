@@ -165,8 +165,11 @@ fn main() -> hashgnn::Result<()> {
     );
 
     // ---- e2e: train step, pipeline on vs off ----------------------------
+    // With no artifacts present the Auto backend resolves to the native
+    // engine, so this section now always runs offline.
     let engine = Engine::cpu("artifacts")?;
     if let Ok(model) = engine.load("sage_mb_coded") {
+        eprintln!("(e2e backend: {})", model.backend_name());
         let nn = model.manifest.hyper_usize("n")?;
         let gg = Arc::new(sbm(SbmCfg::new(nn, 8, 12.0, 2.0), 3)?);
         let labels = Arc::new(gg.labels().unwrap().to_vec());
@@ -194,13 +197,16 @@ fn main() -> hashgnn::Result<()> {
             push_row(
                 &mut t,
                 &mut json_rows,
-                &format!("sage_mb train step (pipeline={pipeline})"),
+                &format!(
+                    "sage_mb train step ({}, pipeline={pipeline})",
+                    model.backend_name()
+                ),
                 "steps/s",
                 log.losses.len() as f64 / secs,
             );
         }
     } else {
-        eprintln!("(artifacts not built; e2e section skipped)");
+        eprintln!("(model unavailable; e2e section skipped)");
     }
 
     println!("{}", t.render());

@@ -1,0 +1,153 @@
+//! §Perf — native-backend train-step throughput.
+//!
+//! Sweeps batch size × thread count over a CPU-budget §4 minibatch-SAGE
+//! build (hash codes, decoder, CE head) and reports steps/s and ns/step.
+//! Also asserts the backend's determinism contract (bit-identical loss
+//! across thread counts) on every run, and emits machine-readable
+//! `BENCH_train_step.json` at the repo root.
+
+mod bench_util;
+
+use std::sync::Arc;
+
+use bench_util::Samples;
+use hashgnn::cfg::{CodingCfg, OptimCfg};
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::lsh::{self, Threshold};
+use hashgnn::params::ParamStore;
+use hashgnn::report::Table;
+use hashgnn::runtime::native::spec::SageMbBuild;
+use hashgnn::runtime::Model;
+use hashgnn::ser::{self, Json};
+use hashgnn::tasks::sage::{Features, SageBatcher, SageTask};
+use hashgnn::train::{self, BatchSource};
+
+fn build_for(batch: usize, n: usize) -> SageMbBuild {
+    SageMbBuild {
+        name: format!("bench_b{batch}"),
+        coded: true,
+        link: false,
+        n,
+        n_classes: 8,
+        d_e: 32,
+        hidden: 64,
+        batch,
+        k1: 5,
+        k2: 5,
+        c: 16,
+        m: 16,
+        d_c: 64,
+        d_m: 64,
+        l: 3,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn main() -> hashgnn::Result<()> {
+    bench_util::banner("train_step", "native-backend train-step throughput (§Perf)");
+    let n = bench_util::pick(4000, 1000);
+    let steps = bench_util::pick(12u64, 3);
+    let reps = bench_util::pick(3, 1);
+
+    let coding = CodingCfg::new(16, 16)?;
+    let g = Arc::new(sbm(SbmCfg::new(n, 8, 12.0, 2.0), 3)?);
+    let labels = Arc::new(g.labels().unwrap().to_vec());
+    let codes = Arc::new(lsh::encode(g.adj(), coding, Threshold::Median, 7)?);
+
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut thread_counts = vec![1usize];
+    if avail >= 2 {
+        thread_counts.push(2);
+    }
+    if avail > 2 {
+        thread_counts.push(avail);
+    }
+
+    let mut t = Table::new(
+        "native train step (steps/s; bit-identical across threads)",
+        &["batch", "threads", "steps/s", "ns/step"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut determinism_ok = true;
+
+    for batch in [64usize, 128, 256] {
+        let build = build_for(batch, n);
+        let manifest = build.manifest();
+        let mut reference_losses: Option<Vec<u32>> = None;
+        for &threads in &thread_counts {
+            let model = Model::native(manifest.clone(), threads)?;
+            let run_once = || -> hashgnn::Result<Vec<f32>> {
+                let task = SageTask {
+                    graph: g.clone(),
+                    labels: labels.clone(),
+                    features: Features::Codes(codes.clone()),
+                    train_nodes: Arc::new((0..n as u32).collect()),
+                };
+                let mut batcher = SageBatcher::new(task, &model, 9)?;
+                // Pre-produce the batches so the measurement isolates the
+                // train step itself from sampling/gather time.
+                let batches: Vec<_> = (0..steps).map(|s| batcher.next_batch(s)).collect();
+                let mut store = ParamStore::init(&model.manifest, 1);
+                let mut losses = Vec::with_capacity(batches.len());
+                for b in &batches {
+                    losses.push(train::run_step(&model, &mut store, b)?);
+                }
+                Ok(losses)
+            };
+            let mut losses = Vec::new();
+            let s = Samples::collect(reps, || {
+                losses = run_once().expect("bench step");
+            });
+            let secs_per_step = s.median() / steps as f64;
+            t.row(vec![
+                batch.to_string(),
+                threads.to_string(),
+                format!("{:.2}", 1.0 / secs_per_step),
+                format!("{:.0}", secs_per_step * 1e9),
+            ]);
+            rows.push(Json::obj(vec![
+                ("batch", Json::num(batch as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("steps_per_s", Json::num(1.0 / secs_per_step)),
+                ("ns_per_step", Json::num(secs_per_step * 1e9)),
+            ]));
+            let bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+            match &reference_losses {
+                None => reference_losses = Some(bits),
+                Some(r) => {
+                    if *r != bits {
+                        determinism_ok = false;
+                    }
+                }
+            }
+        }
+    }
+    assert!(determinism_ok, "native train step diverged across thread counts");
+    t.row(vec![
+        "determinism (loss bits across thread counts)".into(),
+        "-".into(),
+        determinism_ok.to_string(),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("train_step")),
+        ("backend", Json::str("native")),
+        ("quick", Json::Bool(bench_util::quick())),
+        ("n_nodes", Json::num(n as f64)),
+        ("steps_timed", Json::num(steps as f64)),
+        ("available_parallelism", Json::num(avail as f64)),
+        ("loss_bit_identical_across_threads", Json::Bool(determinism_ok)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_default()
+        .join("BENCH_train_step.json");
+    ser::to_file(&out_path, &json)?;
+    eprintln!("wrote {}", out_path.display());
+    Ok(())
+}

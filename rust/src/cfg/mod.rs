@@ -114,6 +114,43 @@ impl EncodeCfg {
     }
 }
 
+/// Which execution backend runs the train/pred executables
+/// ([`crate::runtime`]). `Auto` prefers AOT HLO artifacts when the `xla`
+/// feature is compiled in and the files exist, and otherwise falls back to
+/// the pure-Rust native backend so the full pipeline runs offline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// HLO artifacts when available (with the `xla` feature), else native.
+    #[default]
+    Auto,
+    /// Pure-Rust forward/backward/AdamW engine ([`crate::runtime::native`]).
+    Native,
+    /// AOT-compiled HLO via PJRT only (errors when artifacts are missing
+    /// or the build uses the offline xla stub).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" | "rust" => Ok(BackendKind::Native),
+            "xla" | "hlo" | "pjrt" => Ok(BackendKind::Xla),
+            other => Err(Error::Config(format!(
+                "unknown backend '{other}' (expected auto | native | xla)"
+            ))),
+        }
+    }
+}
+
 /// Decoder variant (Section 3.2 / Figure 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecoderVariant {
@@ -435,5 +472,17 @@ mod tests {
         assert_eq!(Coder::parse("lsh").unwrap(), Coder::Hash);
         assert_eq!(GnnKind::parse("graphsage").unwrap(), GnnKind::Sage);
         assert!(GnnKind::parse("gat").is_err());
+    }
+
+    #[test]
+    fn parse_backend_kind() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("rust").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("cuda").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+        assert_eq!(BackendKind::Native.as_str(), "native");
     }
 }

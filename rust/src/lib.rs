@@ -13,23 +13,28 @@
 //!    ([`lsh::encode_with`]): per-bit seed streams, a blocked CSR SpMM,
 //!    parallel medians and word-packed bit writes — output is
 //!    bit-identical for every thread count and block size; and
-//! 2. a **decoding stage** (AOT-compiled JAX/Pallas, executed through
-//!    [`runtime`]) that maps codes through `m` codebooks + an MLP to dense
-//!    embeddings, trained end-to-end with the GNN.
+//! 2. a **decoding stage** executed through [`runtime`] — a decoder that
+//!    maps codes through `m` codebooks + an MLP to dense embeddings,
+//!    trained jointly with the GNN (paper §4, Eq. 5–6).
 //!
-//! Layer 3 (this crate) owns the whole request/training path: graph
-//! substrates, code generation, batch pipelines, PJRT execution, parameter
-//! state, metrics, and the experiment drivers that regenerate every table
-//! and figure of the paper. Python/JAX runs only at build time
-//! (`make artifacts`).
+//! The runtime is a **backend dispatch**: the pure-Rust native engine
+//! ([`runtime::native`] — forward, hand-derived reverse-mode backward,
+//! fused AdamW, deterministic multi-threaded kernels) runs the full
+//! hash-embedding + GraphSAGE pipeline with zero artifacts, while the
+//! same models can execute as AOT-compiled JAX/Pallas HLO via PJRT when
+//! `make artifacts` has run and the `xla` feature is on. Layer 3 (this
+//! crate) owns the whole request/training path: graph substrates, code
+//! generation, batch pipelines, backend execution, parameter state,
+//! metrics, and the experiment drivers that regenerate every table and
+//! figure of the paper. Python/JAX is build-time only, and optional.
 //!
 //! ## Module map
 //!
 //! | layer | modules |
 //! |---|---|
-//! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`], [`sparse`] (SpMV + blocked SpMM), [`graph`], [`embed`] |
+//! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`] (incl. [`cfg::BackendKind`]), [`sparse`] (SpMV + blocked SpMM), [`graph`], [`embed`] |
 //! | paper core | [`lsh`] (Algorithm 1 + parallel encode engine), [`codes`] (compositional codes, word-packed bits) |
-//! | runtime    | [`runtime`] (PJRT; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
+//! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
 //! | evaluation | [`eval`], [`tasks`], [`report`] |
 //! | dev        | [`testing`] (property-test harness) |
 

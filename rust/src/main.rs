@@ -6,14 +6,21 @@
 //!   merchant    §5.3 merchant-category pipeline (Table 3)
 //!   collisions  Figure 3/6 median-vs-zero threshold experiment
 //!   memory      Tables 2/4/6 memory accounting
-//!   artifacts   list available AOT artifacts
+//!   artifacts   list available AOT artifacts / native builds
+//!
+//! Model-driven commands accept `--backend {auto,native,xla}`: `auto`
+//! uses AOT HLO artifacts when the `xla` feature and files are present
+//! and otherwise the pure-Rust native backend, so `hashgnn train` runs a
+//! full §4 pipeline completely offline. `--threads` bounds the native
+//! backend's compute threads without changing any result (bit-identical
+//! loss curves across thread counts).
 //!
 //! Every experiment is seeded and reproducible; benches that regenerate
 //! the paper's tables live under `cargo bench` (see DESIGN.md §6).
 
 use std::sync::Arc;
 
-use hashgnn::cfg::{Coder, CodingCfg, EncodeCfg};
+use hashgnn::cfg::{BackendKind, Coder, CodingCfg, EncodeCfg};
 use hashgnn::cli::Args;
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::report::{self, Table};
@@ -57,7 +64,10 @@ fn print_help() {
          \x20 merchant    merchant-category identification pipeline (§5.3)\n\
          \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
          \x20 memory      memory accounting tables (Tables 2/4/6)\n\
-         \x20 artifacts   list AOT artifacts\n\n\
+         \x20 artifacts   list AOT artifacts / native builds\n\n\
+         train and merchant take --backend {{auto|native|xla}}: the native\n\
+         backend is pure rust (no artifacts needed) and --threads N is\n\
+         bit-deterministic across thread counts\n\n\
          run `hashgnn <command> --help` for options"
     );
 }
@@ -112,11 +122,24 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("epochs", "5", "training epochs")
         .opt("seed", "7", "rng seed")
         .opt("log-every", "10", "loss log interval (steps)")
+        .opt(
+            "backend",
+            "auto",
+            "execution backend: auto (HLO artifacts when available, else native) | native | xla",
+        )
+        .opt(
+            "threads",
+            "0",
+            "native-backend compute threads (0 = all cores; loss curves are bit-identical across counts)",
+        )
         .parse(argv)?;
-    let engine = Engine::cpu(a.get("artifacts"))?;
+    let backend = BackendKind::parse(&a.get("backend"))?;
+    let engine =
+        Engine::with_backend(a.get("artifacts"), backend, a.get_usize_auto("threads")?)?;
     let coded = a.get("coder") != "nc";
     let name = if coded { "sage_mb_coded" } else { "sage_mb_nc" };
     let model = engine.load(name)?;
+    eprintln!("[train] backend: {}", model.backend_name());
     let n = model.manifest.hyper_usize("n")?;
     let k = model.manifest.hyper_usize("n_classes")?;
     let seed = a.get_u64("seed")?;
@@ -175,9 +198,16 @@ fn cmd_merchant(argv: Vec<String>) -> Result<()> {
         .opt("coder", "hash", "coding scheme: hash | random")
         .opt("epochs", "3", "training epochs")
         .opt("seed", "11", "rng seed")
+        .opt("backend", "auto", "execution backend: auto | native | xla")
+        .opt("threads", "0", "native-backend compute threads (0 = all cores)")
         .parse(argv)?;
-    let engine = Engine::cpu(a.get("artifacts"))?;
+    let engine = Engine::with_backend(
+        a.get("artifacts"),
+        BackendKind::parse(&a.get("backend"))?,
+        a.get_usize_auto("threads")?,
+    )?;
     let model = engine.load("merchant")?;
+    eprintln!("[merchant] backend: {}", model.backend_name());
     let seed = a.get_u64("seed")?;
     eprintln!("[merchant] building transaction graph ...");
     let bip = merchant::build_graph(&model, seed)?;
@@ -241,13 +271,25 @@ fn cmd_memory(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_artifacts(argv: Vec<String>) -> Result<()> {
-    let a = Args::new("hashgnn artifacts", "list AOT artifacts")
+    let a = Args::new("hashgnn artifacts", "list AOT artifacts and native builds")
         .opt("artifacts", "artifacts", "artifacts directory")
         .parse(argv)?;
     let idx = std::path::Path::new(&a.get("artifacts")).join("index.json");
-    let v = hashgnn::ser::from_file(&idx)?;
-    for name in v.get("artifacts")?.as_arr()? {
-        println!("{}", name.as_str()?);
+    match hashgnn::ser::from_file(&idx) {
+        Ok(v) => {
+            for name in v.get("artifacts")?.as_arr()? {
+                println!("{}", name.as_str()?);
+            }
+        }
+        Err(_) => {
+            eprintln!(
+                "(no AOT index at {}; the native backend synthesizes these builds)",
+                idx.display()
+            );
+            for name in hashgnn::runtime::native::spec::builtin_names() {
+                println!("{name} (native)");
+            }
+        }
     }
     Ok(())
 }

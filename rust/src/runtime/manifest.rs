@@ -103,6 +103,10 @@ impl Manifest {
     pub fn hyper_str(&self, key: &str) -> Result<&str> {
         self.hyper.get(key)?.as_str()
     }
+
+    pub fn hyper_bool(&self, key: &str) -> Result<bool> {
+        self.hyper.get(key)?.as_bool()
+    }
 }
 
 fn parse_param(v: &Json) -> Result<ParamSpec> {

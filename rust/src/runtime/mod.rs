@@ -1,37 +1,71 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
-//! on the CPU PJRT client. This is the only module that touches the `xla`
-//! crate; everything above it works with [`Tensor`]s and artifact names.
+//! Execution runtime — the backend seam.
 //!
-//! Without the default-off `xla` feature, `xla` here is the in-crate stub
-//! ([`crate::xla`]): clients and host literals work, while HLO compilation
-//! and execution return clean [`Error::Runtime`]-shaped errors.
+//! [`Engine::load`] resolves an artifact name to a [`Model`] whose train
+//! and pred [`Executable`]s run on one of two backends:
 //!
-//! Lifecycle: [`Engine::cpu`] once per process → [`Engine::load`] per
-//! artifact (compiles HLO → executable) → [`Executable::run`] per step.
+//! - **Native** ([`native`]): the pure-Rust forward/backward/AdamW engine,
+//!   built directly from the [`Manifest`]/[`ParamSpec`] contract. Needs no
+//!   artifacts at all — names the Python exporter knows are synthesized by
+//!   [`native::spec::builtin`] at the same scales. This is the default
+//!   whenever HLO artifacts are absent, and the only path that works in
+//!   the offline build.
+//! - **Hlo**: AOT-compiled HLO text executed on the CPU PJRT client. The
+//!   only code that touches the `xla` crate; without the default-off `xla`
+//!   feature, `xla` here is the in-crate stub ([`crate::xla`]) and
+//!   compilation returns a clean error.
+//!
+//! Which backend wins is governed by [`BackendKind`]
+//! (`hashgnn train --backend {auto,native,xla}`): `Auto` prefers HLO when
+//! the `xla` feature is compiled in *and* the artifact files exist,
+//! otherwise native. Everything above this module works with [`Tensor`]s
+//! and artifact names and never sees the difference — the train step is
+//! the same `(params…, m…, v…, step, batch…) → (params'…, m'…, v'…, loss)`
+//! tuple on both paths. Future backends (GPU, sharded, remote serving)
+//! plug into the same dispatch.
+//!
+//! Lifecycle: [`Engine::cpu`] (or [`Engine::with_backend`]) once per
+//! process → [`Engine::load`] per artifact → [`Executable::run`] per step.
 
 mod manifest;
+pub mod native;
 mod tensor;
 
 pub use manifest::{InitKind, Manifest, ParamSpec, TensorSpec};
 pub use tensor::Tensor;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use crate::cfg::BackendKind;
 #[cfg(not(feature = "xla"))]
 use crate::xla;
 use crate::{Error, Result};
 
-/// PJRT client wrapper. One per process.
+/// Runtime entry point: a (possibly unused) PJRT client, an artifacts
+/// directory and the backend policy. One per process.
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
+    backend: BackendKind,
+    /// Native-backend compute threads (`0` = all cores). Never changes
+    /// results — the native kernels are bit-deterministic across counts.
+    native_threads: usize,
 }
 
 impl Engine {
-    /// CPU PJRT client rooted at an artifacts directory.
+    /// CPU engine rooted at an artifacts directory, `Auto` backend.
     pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::with_backend(artifacts_dir, BackendKind::Auto, 0)
+    }
+
+    /// CPU engine with an explicit backend policy and native thread budget.
+    pub fn with_backend(
+        artifacts_dir: impl Into<PathBuf>,
+        backend: BackendKind,
+        native_threads: usize,
+    ) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, artifacts_dir: artifacts_dir.into() })
+        Ok(Self { client, artifacts_dir: artifacts_dir.into(), backend, native_threads })
     }
 
     pub fn platform(&self) -> String {
@@ -42,16 +76,63 @@ impl Engine {
         &self.artifacts_dir
     }
 
-    /// Load `<name>.json` (manifest) and compile `<name>_train.hlo.txt` /
-    /// `<name>_pred.hlo.txt` into executables.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// Resolve the backend for one artifact name under the engine policy.
+    fn resolve(&self, name: &str) -> BackendKind {
+        match self.backend {
+            BackendKind::Xla => BackendKind::Xla,
+            BackendKind::Native => BackendKind::Native,
+            BackendKind::Auto => {
+                let have_files = self.artifacts_dir.join(format!("{name}.json")).exists()
+                    && self.artifacts_dir.join(format!("{name}_train.hlo.txt")).exists();
+                if cfg!(feature = "xla") && have_files {
+                    BackendKind::Xla
+                } else {
+                    BackendKind::Native
+                }
+            }
+        }
+    }
+
+    /// Load `name` on the resolved backend. HLO: parse `<name>.json` and
+    /// compile the `_train`/`_pred` HLO text. Native: load the manifest
+    /// from disk when present, else synthesize it from the built-in
+    /// registry — no files required.
     pub fn load(&self, name: &str) -> Result<Model> {
+        match self.resolve(name) {
+            BackendKind::Native => self.load_native(name),
+            _ => self.load_hlo(name),
+        }
+    }
+
+    fn load_hlo(&self, name: &str) -> Result<Model> {
         let manifest = Manifest::load(&self.artifacts_dir.join(format!("{name}.json")))?;
         let train = self.compile_file(&self.artifacts_dir.join(format!("{name}_train.hlo.txt")))?;
         let pred = self.compile_file(&self.artifacts_dir.join(format!("{name}_pred.hlo.txt")))?;
         Ok(Model { manifest, train, pred })
     }
 
-    /// Compile a single HLO text file into an executable.
+    fn load_native(&self, name: &str) -> Result<Model> {
+        let path = self.artifacts_dir.join(format!("{name}.json"));
+        let manifest = if path.exists() {
+            Manifest::load(&path)?
+        } else {
+            native::spec::builtin(name).ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no artifact manifest at {} and '{name}' is not a built-in native model \
+                     (native registry: {}) — run `make artifacts` for exported variants",
+                    path.display(),
+                    native::spec::builtin_names().join(", ")
+                ))
+            })?
+        };
+        Model::native(manifest, self.native_threads)
+    }
+
+    /// Compile a single HLO text file into an executable (HLO path only).
     pub fn compile_file(&self, path: &Path) -> Result<Executable> {
         if !path.exists() {
             return Err(Error::Runtime(format!(
@@ -64,26 +145,53 @@ impl Engine {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe })
+        Ok(Executable::Hlo(HloExecutable { exe }))
     }
 }
 
-/// A compiled computation. The exported HLO always returns a tuple
+/// A compiled HLO computation. The exported HLO always returns a tuple
 /// (`return_tuple=True` at lowering), so `run` flattens it back into
 /// tensors.
-pub struct Executable {
+pub struct HloExecutable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-impl Executable {
-    /// Execute with the given inputs; returns the flattened output tuple.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+impl HloExecutable {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
         let result = self.exe.execute::<xla::Literal>(&literals)?;
         let out = result[0][0].to_literal_sync()?;
         let parts = out.to_tuple()?;
         parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// One executable computation — the backend dispatch point. Both variants
+/// are pure functions of their inputs; all state lives in
+/// [`crate::params::ParamStore`].
+pub enum Executable {
+    /// PJRT-compiled HLO artifact.
+    Hlo(HloExecutable),
+    /// Pure-Rust native engine.
+    Native(native::NativeExec),
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self {
+            Executable::Hlo(e) => e.run(inputs),
+            Executable::Native(e) => e.run(inputs),
+        }
+    }
+
+    /// Which backend this executable runs on (`"hlo"` / `"native"`).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Executable::Hlo(_) => "hlo",
+            Executable::Native(_) => "native",
+        }
     }
 }
 
@@ -94,21 +202,74 @@ pub struct Model {
     pub pred: Executable,
 }
 
+impl Model {
+    /// Build a native-backend model directly from a manifest (no engine,
+    /// no files) — the constructor tests and custom scales use.
+    pub fn native(manifest: Manifest, threads: usize) -> Result<Model> {
+        let nm = Arc::new(native::NativeModel::from_manifest(&manifest)?);
+        Ok(Model {
+            train: Executable::Native(native::NativeExec::new(
+                nm.clone(),
+                native::Mode::Train,
+                threads,
+            )),
+            pred: Executable::Native(native::NativeExec::new(nm, native::Mode::Pred, threads)),
+            manifest,
+        })
+    }
+
+    /// Backend of the train executable (`"hlo"` / `"native"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.train.backend_name()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Engine tests that need real artifacts live in rust/tests/ (they
-    // require `make artifacts` to have run). Unit tests here cover the
-    // error path only.
+    // require `make artifacts` to have run). Unit tests here cover backend
+    // resolution and the error paths.
     use super::*;
 
     #[test]
-    fn missing_artifact_is_a_clean_error() {
+    fn unknown_name_without_artifacts_is_a_clean_error() {
         let engine = Engine::cpu("/nonexistent-artifacts-dir").unwrap();
         let err = match engine.load("nope") {
             Err(e) => e,
-            Ok(_) => panic!("loading a missing artifact must fail"),
+            Ok(_) => panic!("loading an unknown model must fail"),
         };
         let msg = format!("{err}");
-        assert!(msg.contains("nope") || msg.contains("artifacts"), "{msg}");
+        assert!(msg.contains("nope") && msg.contains("native registry"), "{msg}");
+    }
+
+    #[test]
+    fn auto_backend_synthesizes_builtin_models_offline() {
+        let engine = Engine::cpu("/nonexistent-artifacts-dir").unwrap();
+        assert_eq!(engine.backend(), crate::cfg::BackendKind::Auto);
+        let model = engine.load("sage_mb_coded").unwrap();
+        assert_eq!(model.backend_name(), "native");
+        assert_eq!(model.manifest.name, "sage_mb_coded");
+        assert_eq!(model.manifest.hyper_usize("n").unwrap(), 10_000);
+    }
+
+    #[test]
+    fn xla_backend_still_reports_missing_artifacts() {
+        let engine =
+            Engine::with_backend("/nonexistent-artifacts-dir", BackendKind::Xla, 0).unwrap();
+        let err = engine.load("sage_mb_coded").map(|_| ()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("artifacts") || msg.contains(".json"), "{msg}");
+    }
+
+    #[test]
+    fn native_backend_rejects_unsupported_builtin() {
+        let engine = Engine::with_backend("/nowhere", BackendKind::Native, 2).unwrap();
+        // Fullbatch artifacts are not in the native registry.
+        assert!(engine.load("node_fb_gcn_coded").is_err());
+        // But every registry name loads.
+        for name in native::spec::builtin_names() {
+            let model = engine.load(name).unwrap();
+            assert_eq!(model.backend_name(), "native", "{name}");
+        }
     }
 }

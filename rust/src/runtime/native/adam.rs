@@ -1,0 +1,150 @@
+//! Fused AdamW (Loshchilov & Hutter 2018) for the native backend —
+//! bit-for-bit the update `python/compile/optim.py` lowers into every
+//! train-step executable: biased moments, bias correction with
+//! `t = completed_steps + 1`, decoupled weight decay. Purely elementwise,
+//! so parallel chunking is trivially deterministic.
+
+use crate::ser::Json;
+use crate::Result;
+
+/// Optimizer hyper-parameters (burned into the manifest's `hyper.optim`).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl AdamHyper {
+    /// Parse from a manifest's `hyper.optim` object.
+    pub fn from_json(optim: &Json) -> Result<Self> {
+        Ok(Self {
+            lr: optim.get("lr")?.as_f64()? as f32,
+            beta1: optim.get("beta1")?.as_f64()? as f32,
+            beta2: optim.get("beta2")?.as_f64()? as f32,
+            eps: optim.get("eps")?.as_f64()? as f32,
+            weight_decay: optim.get("weight_decay")?.as_f64()? as f32,
+        })
+    }
+}
+
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+fn update_chunk(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    bc1: f32,
+    bc2: f32,
+    h: AdamHyper,
+) {
+    for i in 0..p.len() {
+        let m_new = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        let v_new = h.beta2 * v[i] + (1.0 - h.beta2) * g[i] * g[i];
+        m[i] = m_new;
+        v[i] = v_new;
+        let mhat = m_new / bc1;
+        let vhat = v_new / bc2;
+        let update = mhat / (vhat.sqrt() + h.eps) + h.weight_decay * p[i];
+        p[i] -= h.lr * update;
+    }
+}
+
+/// One AdamW step over a single parameter tensor, in place. `t` is the
+/// *completed*-step counter plus one (matching the f32 `step` input the
+/// executables receive).
+pub fn adamw_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    h: AdamHyper,
+    threads: usize,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), v.len());
+    let bc1 = 1.0 - h.beta1.powf(t);
+    let bc2 = 1.0 - h.beta2.powf(t);
+    let len = p.len();
+    if len == 0 {
+        return;
+    }
+    let workers = threads.clamp(1, len);
+    if workers == 1 {
+        update_chunk(p, g, m, v, bc1, bc2, h);
+        return;
+    }
+    let chunk = len.div_ceil(workers);
+    std::thread::scope(|s| {
+        let parts = p
+            .chunks_mut(chunk)
+            .zip(m.chunks_mut(chunk))
+            .zip(v.chunks_mut(chunk))
+            .zip(g.chunks(chunk));
+        for (((pc, mc), vc), gc) in parts {
+            s.spawn(move || update_chunk(pc, gc, mc, vc, bc1, bc2, h));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> AdamHyper {
+        AdamHyper { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
+    }
+
+    #[test]
+    fn first_step_matches_reference_math() {
+        // Fresh moments, t=1: m=(1-b1)g, v=(1-b2)g²; mhat=g, vhat=g².
+        let g = vec![0.5f32, -2.0];
+        let mut p = vec![1.0f32, 1.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        let h = hyper();
+        adamw_update(&mut p, &g, &mut m, &mut v, 1.0, h, 1);
+        for (i, &gi) in g.iter().enumerate() {
+            let mhat = gi; // (1-b1)g / (1-b1)
+            let vhat = gi * gi;
+            let expect = 1.0 - h.lr * (mhat / (vhat.sqrt() + h.eps) + h.weight_decay * 1.0);
+            assert!((p[i] - expect).abs() < 1e-6, "{} vs {}", p[i], expect);
+        }
+        assert!((m[0] - 0.05).abs() < 1e-7);
+        assert!((v[1] - 0.004).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let g: Vec<f32> = (0..1000).map(|i| ((i * 37 % 101) as f32 - 50.0) / 25.0).collect();
+        let mut run = |threads: usize| {
+            let mut p: Vec<f32> = (0..1000).map(|i| (i as f32) / 500.0 - 1.0).collect();
+            let mut m = vec![0.1f32; 1000];
+            let mut v = vec![0.2f32; 1000];
+            for t in 1..5 {
+                adamw_update(&mut p, &g, &mut m, &mut v, t as f32, hyper(), threads);
+            }
+            (p, m, v)
+        };
+        let a = run(1);
+        let b = run(7);
+        assert!(a.0.iter().zip(&b.0).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.1.iter().zip(&b.1).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.2.iter().zip(&b.2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn parses_manifest_optim_object() {
+        let j = crate::ser::parse(
+            r#"{"lr": 0.01, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0}"#,
+        )
+        .unwrap();
+        let h = AdamHyper::from_json(&j).unwrap();
+        assert!((h.lr - 0.01).abs() < 1e-9);
+        assert_eq!(h.weight_decay, 0.0);
+    }
+}

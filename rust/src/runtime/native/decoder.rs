@@ -1,0 +1,276 @@
+//! Native code-dependent decoder (paper §3.2, Figure 2): gather + sum the
+//! `m` per-position codebook rows selected by the integer code, optionally
+//! rescale by the light variant's `W0`, then an `l`-layer MLP with ReLU
+//! between linear layers. Forward caches every activation so the reverse
+//! pass is a straight replay; parameter layout mirrors
+//! `python/compile/decoder.py::decoder_param_specs` exactly (same names,
+//! shapes, init kinds and trainable flags — validated at resolve time).
+
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+use super::ops;
+
+/// Decoder hyper-dimensions (`c, m` coding; `d_c → d_m → … → d_e` MLP).
+#[derive(Clone, Copy, Debug)]
+pub struct DecoderDims {
+    pub c: usize,
+    pub m: usize,
+    pub d_c: usize,
+    pub d_m: usize,
+    pub d_e: usize,
+    pub l: usize,
+    /// Light variant: frozen codebooks + trainable rescale `W0`.
+    pub light: bool,
+}
+
+impl DecoderDims {
+    /// MLP layer widths: `[d_c, d_m, …, d_m, d_e]` (length `l + 1`).
+    pub fn mlp_dims(&self) -> Vec<usize> {
+        let mut dims = Vec::with_capacity(self.l + 1);
+        dims.push(self.d_c);
+        for _ in 0..self.l - 1 {
+            dims.push(self.d_m);
+        }
+        dims.push(self.d_e);
+        dims
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.l < 2 {
+            return Err(Error::Config(format!("decoder requires l >= 2, got {}", self.l)));
+        }
+        for (name, v) in
+            [("c", self.c), ("m", self.m), ("d_c", self.d_c), ("d_m", self.d_m), ("d_e", self.d_e)]
+        {
+            if v == 0 {
+                return Err(Error::Config(format!("decoder {name} must be positive")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Indices of the decoder's parameters in the manifest's canonical order.
+#[derive(Clone, Debug)]
+pub struct DecoderIdx {
+    pub books: usize,
+    pub w0: Option<usize>,
+    /// `(weight, bias)` per MLP layer.
+    pub mlp: Vec<(usize, usize)>,
+}
+
+/// Find a parameter by name and check its shape against the contract.
+pub(super) fn find_param(manifest: &Manifest, name: &str, shape: &[usize]) -> Result<usize> {
+    let i = manifest
+        .params
+        .iter()
+        .position(|p| p.name == name)
+        .ok_or_else(|| Error::Config(format!("native backend: manifest has no param '{name}'")))?;
+    if manifest.params[i].shape != shape {
+        return Err(Error::Shape(format!(
+            "param '{name}': manifest shape {:?} != expected {:?}",
+            manifest.params[i].shape, shape
+        )));
+    }
+    Ok(i)
+}
+
+impl DecoderIdx {
+    /// Resolve (and shape-check) the decoder parameters in `manifest`.
+    pub fn resolve(manifest: &Manifest, dims: &DecoderDims) -> Result<Self> {
+        dims.validate()?;
+        let books = find_param(manifest, "dec.books", &[dims.m, dims.c, dims.d_c])?;
+        let w0 = if dims.light {
+            Some(find_param(manifest, "dec.w0", &[dims.d_c])?)
+        } else {
+            None
+        };
+        let mlp_dims = dims.mlp_dims();
+        let mut mlp = Vec::with_capacity(dims.l);
+        for i in 0..dims.l {
+            let w_shape = [mlp_dims[i], mlp_dims[i + 1]];
+            let w = find_param(manifest, &format!("dec.mlp{i}.w"), &w_shape)?;
+            let b = find_param(manifest, &format!("dec.mlp{i}.b"), &[mlp_dims[i + 1]])?;
+            mlp.push((w, b));
+        }
+        Ok(Self { books, w0, mlp })
+    }
+}
+
+/// Forward cache: `acts[0]` is the MLP input (the rescaled gather-sum for
+/// the light variant), `acts[i + 1]` the output of MLP layer `i`; the last
+/// entry is the decoder output `(n, d_e)`.
+pub struct DecCache {
+    /// Pre-rescale gather-sum, kept only for the light variant's `dW0`.
+    pub h0_raw: Option<Vec<f32>>,
+    pub acts: Vec<Vec<f32>>,
+}
+
+impl DecCache {
+    pub fn output(&self) -> &[f32] {
+        self.acts.last().expect("decoder cache has >= 1 activation")
+    }
+}
+
+/// Decode `codes (n, m)` into embeddings `(n, d_e)`, caching activations.
+pub fn forward(
+    dims: &DecoderDims,
+    idx: &DecoderIdx,
+    params: &[&[f32]],
+    codes: &[i32],
+    n: usize,
+    threads: usize,
+) -> Result<DecCache> {
+    ops::validate_codes(codes, dims.c)?;
+    if codes.len() != n * dims.m {
+        return Err(Error::Shape(format!(
+            "decoder: {} code elements for {n} rows of m={}",
+            codes.len(),
+            dims.m
+        )));
+    }
+    let mut h0 = vec![0.0f32; n * dims.d_c];
+    ops::codebook_fwd(params[idx.books], codes, n, dims.m, dims.c, dims.d_c, &mut h0, threads);
+    let (h0_raw, first) = if let Some(w0) = idx.w0 {
+        let mut scaled = h0.clone();
+        ops::scale_cols(&mut scaled, dims.d_c, params[w0], threads);
+        (Some(h0), scaled)
+    } else {
+        (None, h0)
+    };
+    let mlp_dims = dims.mlp_dims();
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.l + 1);
+    acts.push(first);
+    for i in 0..dims.l {
+        let (w, b) = idx.mlp[i];
+        let relu = i < dims.l - 1;
+        let mut out = vec![0.0f32; n * mlp_dims[i + 1]];
+        ops::linear_fwd(
+            &acts[i],
+            params[w],
+            params[b],
+            n,
+            mlp_dims[i],
+            mlp_dims[i + 1],
+            relu,
+            &mut out,
+            threads,
+        );
+        acts.push(out);
+    }
+    Ok(DecCache { h0_raw, acts })
+}
+
+/// Reverse pass: accumulate parameter gradients for `d_out (n, d_e)`
+/// (gradient w.r.t. the decoder output). Gradients for non-trainable
+/// parameters (the light variant's frozen codebooks) are skipped — the
+/// optimizer masks them anyway.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    dims: &DecoderDims,
+    idx: &DecoderIdx,
+    params: &[&[f32]],
+    codes: &[i32],
+    cache: &DecCache,
+    d_out: &[f32],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) {
+    let n = codes.len() / dims.m;
+    let mlp_dims = dims.mlp_dims();
+    debug_assert_eq!(d_out.len(), n * dims.d_e);
+    let mut cur = d_out.to_vec();
+    for i in (0..dims.l).rev() {
+        let (w, b) = idx.mlp[i];
+        if i < dims.l - 1 {
+            ops::relu_bwd_mask(&mut cur, &cache.acts[i + 1], threads);
+        }
+        ops::grad_w(&cache.acts[i], &cur, n, mlp_dims[i], mlp_dims[i + 1], &mut grads[w], threads);
+        ops::grad_b(&cur, n, mlp_dims[i + 1], &mut grads[b]);
+        let mut prev = vec![0.0f32; n * mlp_dims[i]];
+        ops::matmul_wt(&cur, params[w], n, mlp_dims[i], mlp_dims[i + 1], false, &mut prev, threads);
+        cur = prev;
+    }
+    // cur = gradient w.r.t. the (possibly rescaled) gather-sum (n, d_c).
+    if let Some(w0) = idx.w0 {
+        let h0 = cache.h0_raw.as_ref().expect("light cache keeps h0");
+        if trainable[w0] {
+            let gw0 = &mut grads[w0];
+            for r in 0..n {
+                let hrow = &h0[r * dims.d_c..(r + 1) * dims.d_c];
+                let crow = &cur[r * dims.d_c..(r + 1) * dims.d_c];
+                for ((g, &h), &c) in gw0.iter_mut().zip(hrow).zip(crow) {
+                    *g += h * c;
+                }
+            }
+        }
+        ops::scale_cols(&mut cur, dims.d_c, params[w0], threads);
+    }
+    if trainable[idx.books] {
+        ops::codebook_bwd(
+            &cur,
+            codes,
+            n,
+            dims.m,
+            dims.c,
+            dims.d_c,
+            &mut grads[idx.books],
+            threads,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+    use crate::runtime::native::spec;
+
+    fn tiny() -> (Manifest, DecoderDims) {
+        let b = spec::ReconBuild {
+            name: "t".into(),
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            d_e: 2,
+            l: 2,
+            light: false,
+            batch: 4,
+            optim: crate::cfg::OptimCfg::adamw_default(),
+        };
+        let m = b.manifest();
+        let dims = DecoderDims { c: 4, m: 3, d_c: 5, d_m: 6, d_e: 2, l: 2, light: false };
+        (m, dims)
+    }
+
+    #[test]
+    fn resolve_checks_names_and_shapes() {
+        let (m, dims) = tiny();
+        let idx = DecoderIdx::resolve(&m, &dims).unwrap();
+        assert_eq!(m.params[idx.books].name, "dec.books");
+        assert_eq!(idx.mlp.len(), 2);
+        let bad = DecoderDims { d_c: 7, ..dims };
+        assert!(DecoderIdx::resolve(&m, &bad).is_err());
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let (m, dims) = tiny();
+        let idx = DecoderIdx::resolve(&m, &dims).unwrap();
+        let store = ParamStore::init(&m, 7);
+        let params: Vec<&[f32]> = store.params.iter().map(|t| t.as_f32().unwrap()).collect();
+        let codes = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3]; // (4, 3)
+        let c1 = forward(&dims, &idx, &params, &codes, 4, 1).unwrap();
+        let c8 = forward(&dims, &idx, &params, &codes, 4, 8).unwrap();
+        assert_eq!(c1.output().len(), 4 * 2);
+        assert!(c1
+            .output()
+            .iter()
+            .zip(c8.output())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(forward(&dims, &idx, &params, &[0, 1, 4], 1, 1).is_err(), "code 4 out of range");
+    }
+}

@@ -1,0 +1,758 @@
+//! Dense kernels for the native backend — forward and backward.
+//!
+//! All tensors are row-major `f32` slices. Every kernel obeys the
+//! determinism rule from [`super::par`]: threads partition **output**
+//! rows/elements only, and each output element is a sequential reduction
+//! in a fixed order (ascending reduction index), so results are
+//! bit-identical for every thread count. Reductions that cross the row
+//! axis (weight/bias gradients, losses) partition the *gradient* rows or
+//! run single-threaded — never split the summation itself.
+//!
+//! Kernels take explicit dims and several buffers; the argument counts
+//! and index-heavy reduction loops are the point, so the corresponding
+//! clippy style lints are allowed file-wide.
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+
+use crate::{Error, Result};
+
+use super::par::par_rows;
+
+// ---------------------------------------------------------------------------
+// Linear layers
+// ---------------------------------------------------------------------------
+
+/// `out[r] = relu?(x[r] @ w + b)` — `x (n, d_in)`, `w (d_in, d_out)`,
+/// `b (d_out)`, `out (n, d_out)`. Rows are partitioned across threads;
+/// each output row accumulates over `k` in ascending order.
+pub fn linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    relu: bool,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(b.len(), d_out);
+    debug_assert_eq!(out.len(), n * d_out);
+    par_rows(out, d_out, threads, |row0, rows| {
+        for (i, orow) in rows.chunks_mut(d_out).enumerate() {
+            let r = row0 + i;
+            orow.copy_from_slice(b);
+            let xrow = &x[r * d_in..(r + 1) * d_in];
+            for (k, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+            if relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// In-place ReLU backward: `dy[i] = 0` wherever the *post*-activation
+/// `y[i] <= 0` (ties at exactly 0 get zero gradient, matching
+/// `jax.nn.relu`'s subgradient choice at 0).
+pub fn relu_bwd_mask(dy: &mut [f32], y: &[f32], threads: usize) {
+    debug_assert_eq!(dy.len(), y.len());
+    if dy.is_empty() {
+        return;
+    }
+    par_rows(dy, 1, threads, |row0, part| {
+        for (i, v) in part.iter_mut().enumerate() {
+            if y[row0 + i] <= 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+/// `dx (n, d_in) =|+= dz (n, d_out) @ wᵀ`. Rows of `dx` are partitioned;
+/// each entry is a sequential dot over `d_out`.
+pub fn matmul_wt(
+    dz: &[f32],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    accumulate: bool,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(dz.len(), n * d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(dx.len(), n * d_in);
+    par_rows(dx, d_in, threads, |row0, rows| {
+        for (i, xrow) in rows.chunks_mut(d_in).enumerate() {
+            let r = row0 + i;
+            let dzrow = &dz[r * d_out..(r + 1) * d_out];
+            for (k, xv) in xrow.iter_mut().enumerate() {
+                let wrow = &w[k * d_out..(k + 1) * d_out];
+                let mut acc = 0.0f32;
+                for (&g, &wv) in dzrow.iter().zip(wrow) {
+                    acc += g * wv;
+                }
+                if accumulate {
+                    *xv += acc;
+                } else {
+                    *xv = acc;
+                }
+            }
+        }
+    });
+}
+
+/// `dw (d_in, d_out) += xᵀ @ dz`. Rows of `dw` (the `d_in` axis) are
+/// partitioned; each `dw[k]` row accumulates over batch rows in ascending
+/// order, so repeated calls (one per layer application) accumulate
+/// deterministically.
+pub fn grad_w(
+    x: &[f32],
+    dz: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    dw: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(dz.len(), n * d_out);
+    debug_assert_eq!(dw.len(), d_in * d_out);
+    par_rows(dw, d_out, threads, |k0, rows| {
+        for (i, drow) in rows.chunks_mut(d_out).enumerate() {
+            let k = k0 + i;
+            for r in 0..n {
+                let xv = x[r * d_in + k];
+                if xv != 0.0 {
+                    let dzrow = &dz[r * d_out..(r + 1) * d_out];
+                    for (d, &g) in drow.iter_mut().zip(dzrow) {
+                        *d += xv * g;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `db (d_out) += column sums of dz (n, d_out)`. Single-threaded row-order
+/// accumulation (cheap, and trivially thread-count independent).
+pub fn grad_b(dz: &[f32], n: usize, d_out: usize, db: &mut [f32]) {
+    debug_assert_eq!(dz.len(), n * d_out);
+    debug_assert_eq!(db.len(), d_out);
+    for r in 0..n {
+        let dzrow = &dz[r * d_out..(r + 1) * d_out];
+        for (d, &g) in db.iter_mut().zip(dzrow) {
+            *d += g;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mean aggregation / concat (GraphSAGE plumbing)
+// ---------------------------------------------------------------------------
+
+/// `agg (n, d) = mean over the middle axis of nbrs (n, k, d)`.
+pub fn mean_rows_fwd(nbrs: &[f32], n: usize, k: usize, d: usize, agg: &mut [f32], threads: usize) {
+    debug_assert_eq!(nbrs.len(), n * k * d);
+    debug_assert_eq!(agg.len(), n * d);
+    debug_assert!(k > 0);
+    let inv = 1.0f32 / k as f32;
+    par_rows(agg, d, threads, |row0, rows| {
+        for (i, arow) in rows.chunks_mut(d).enumerate() {
+            let r = row0 + i;
+            arow.fill(0.0);
+            for t in 0..k {
+                let src = &nbrs[(r * k + t) * d..(r * k + t + 1) * d];
+                for (a, &v) in arow.iter_mut().zip(src) {
+                    *a += v;
+                }
+            }
+            for a in arow.iter_mut() {
+                *a *= inv;
+            }
+        }
+    });
+}
+
+/// Backward of [`mean_rows_fwd`]:
+/// `dnbrs[(r, t)] =|+= dagg[r] / k` for every `t`.
+pub fn mean_rows_bwd(
+    dagg: &[f32],
+    n: usize,
+    k: usize,
+    d: usize,
+    accumulate: bool,
+    dnbrs: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(dagg.len(), n * d);
+    debug_assert_eq!(dnbrs.len(), n * k * d);
+    let inv = 1.0f32 / k as f32;
+    // Partition over the (n) groups: each worker owns whole k*d blocks.
+    par_rows(dnbrs, k * d, threads, |row0, groups| {
+        for (i, group) in groups.chunks_mut(k * d).enumerate() {
+            let r = row0 + i;
+            let drow = &dagg[r * d..(r + 1) * d];
+            for block in group.chunks_mut(d) {
+                for (o, &g) in block.iter_mut().zip(drow) {
+                    if accumulate {
+                        *o += g * inv;
+                    } else {
+                        *o = g * inv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Write `src (n, width)` into columns `[col0, col0+width)` of
+/// `dst (n, d_dst)` (concat forward building block).
+pub fn scatter_cols(
+    src: &[f32],
+    n: usize,
+    d_dst: usize,
+    col0: usize,
+    width: usize,
+    dst: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(src.len(), n * width);
+    debug_assert_eq!(dst.len(), n * d_dst);
+    debug_assert!(col0 + width <= d_dst);
+    par_rows(dst, d_dst, threads, |row0, rows| {
+        for (i, drow) in rows.chunks_mut(d_dst).enumerate() {
+            let r = row0 + i;
+            drow[col0..col0 + width].copy_from_slice(&src[r * width..(r + 1) * width]);
+        }
+    });
+}
+
+/// Read columns `[col0, col0+width)` of `src (n, d_src)` into
+/// `dst (n, width)` (concat backward / split building block).
+pub fn gather_cols(
+    src: &[f32],
+    n: usize,
+    d_src: usize,
+    col0: usize,
+    width: usize,
+    accumulate: bool,
+    dst: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(src.len(), n * d_src);
+    debug_assert_eq!(dst.len(), n * width);
+    debug_assert!(col0 + width <= d_src);
+    par_rows(dst, width, threads, |row0, rows| {
+        for (i, drow) in rows.chunks_mut(width).enumerate() {
+            let r = row0 + i;
+            let srow = &src[r * d_src + col0..r * d_src + col0 + width];
+            if accumulate {
+                for (o, &v) in drow.iter_mut().zip(srow) {
+                    *o += v;
+                }
+            } else {
+                drow.copy_from_slice(srow);
+            }
+        }
+    });
+}
+
+/// In-place per-column rescale: `x[r, k] *= scale[k]` over `x (n, d)`
+/// (the light decoder's trainable `W0`).
+pub fn scale_cols(x: &mut [f32], d: usize, scale: &[f32], threads: usize) {
+    debug_assert_eq!(scale.len(), d);
+    debug_assert_eq!(x.len() % d.max(1), 0);
+    par_rows(x, d, threads, |_row0, rows| {
+        for xrow in rows.chunks_mut(d) {
+            for (v, &s) in xrow.iter_mut().zip(scale) {
+                *v *= s;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Codebook decoder kernels (paper §3.2: gather + sum over m codebooks)
+// ---------------------------------------------------------------------------
+
+/// Validate that every code element lies in `[0, c)`.
+pub fn validate_codes(codes: &[i32], c: usize) -> Result<()> {
+    for &v in codes {
+        if v < 0 || v as usize >= c {
+            return Err(Error::Shape(format!("code value {v} out of range [0, {c})")));
+        }
+    }
+    Ok(())
+}
+
+/// `out[r] = Σ_j books[j, codes[r, j], :]` — `books (m, c, d_c)`,
+/// `codes (n, m)` int32, `out (n, d_c)`. Caller must have validated codes.
+pub fn codebook_fwd(
+    books: &[f32],
+    codes: &[i32],
+    n: usize,
+    m: usize,
+    c: usize,
+    d_c: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(books.len(), m * c * d_c);
+    debug_assert_eq!(codes.len(), n * m);
+    debug_assert_eq!(out.len(), n * d_c);
+    par_rows(out, d_c, threads, |row0, rows| {
+        for (i, orow) in rows.chunks_mut(d_c).enumerate() {
+            let r = row0 + i;
+            orow.fill(0.0);
+            for j in 0..m {
+                let code = codes[r * m + j] as usize;
+                let brow = &books[(j * c + code) * d_c..(j * c + code + 1) * d_c];
+                for (o, &v) in orow.iter_mut().zip(brow) {
+                    *o += v;
+                }
+            }
+        }
+    });
+}
+
+/// Backward of [`codebook_fwd`]:
+/// `grad_books[j, codes[r, j], :] += dh[r, :]`. Threads partition the `m`
+/// codebook positions (each position's scatter runs over rows in ascending
+/// order), so accumulation order is independent of the thread count.
+pub fn codebook_bwd(
+    dh: &[f32],
+    codes: &[i32],
+    n: usize,
+    m: usize,
+    c: usize,
+    d_c: usize,
+    grad_books: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(dh.len(), n * d_c);
+    debug_assert_eq!(codes.len(), n * m);
+    debug_assert_eq!(grad_books.len(), m * c * d_c);
+    par_rows(grad_books, c * d_c, threads, |j0, positions| {
+        for (i, book) in positions.chunks_mut(c * d_c).enumerate() {
+            let j = j0 + i;
+            for r in 0..n {
+                let code = codes[r * m + j] as usize;
+                let drow = &dh[r * d_c..(r + 1) * d_c];
+                let brow = &mut book[code * d_c..(code + 1) * d_c];
+                for (b, &g) in brow.iter_mut().zip(drow) {
+                    *b += g;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Embedding-table kernels (NC baseline)
+// ---------------------------------------------------------------------------
+
+/// Validate that every id lies in `[0, n_table)`.
+pub fn validate_ids(ids: &[i32], n_table: usize) -> Result<()> {
+    for &v in ids {
+        if v < 0 || v as usize >= n_table {
+            return Err(Error::Shape(format!("node id {v} out of range [0, {n_table})")));
+        }
+    }
+    Ok(())
+}
+
+/// `out[r] = table[ids[r]]` — `table (n_table, d)`, `out (n, d)`.
+pub fn table_gather(
+    table: &[f32],
+    ids: &[i32],
+    d: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(out.len(), ids.len() * d);
+    par_rows(out, d, threads, |row0, rows| {
+        for (i, orow) in rows.chunks_mut(d).enumerate() {
+            let id = ids[row0 + i] as usize;
+            orow.copy_from_slice(&table[id * d..(id + 1) * d]);
+        }
+    });
+}
+
+/// Backward of [`table_gather`]: `grad[ids[r]] += dx[r]`. Threads
+/// partition the *table* rows; every worker scans all batch rows in
+/// ascending order and accumulates only the ids that land in its range —
+/// deterministic for any thread count, no scatter races.
+pub fn table_scatter_grad(
+    dx: &[f32],
+    ids: &[i32],
+    d: usize,
+    grad: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(dx.len(), ids.len() * d);
+    debug_assert_eq!(grad.len() % d, 0);
+    par_rows(grad, d, threads, |row0, rows| {
+        let hi = row0 + rows.len() / d;
+        for (r, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            if id >= row0 && id < hi {
+                let grow = &mut rows[(id - row0) * d..(id - row0 + 1) * d];
+                let drow = &dx[r * d..(r + 1) * d];
+                for (g, &v) in grow.iter_mut().zip(drow) {
+                    *g += v;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Losses and heads
+// ---------------------------------------------------------------------------
+
+/// Softmax cross-entropy over `logits (n, c)` with integer `labels (n)`.
+/// Returns the mean loss and writes `dlogits = (softmax − onehot) / n`.
+/// Rows compute their own softmax in parallel; the loss reduction over
+/// rows is a single-threaded ascending sum.
+pub fn softmax_ce(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    c: usize,
+    dlogits: &mut [f32],
+    threads: usize,
+) -> Result<f32> {
+    debug_assert_eq!(logits.len(), n * c);
+    debug_assert_eq!(labels.len(), n);
+    debug_assert_eq!(dlogits.len(), n * c);
+    if n == 0 {
+        return Err(Error::Shape("softmax_ce needs a non-empty batch".into()));
+    }
+    for &l in labels {
+        if l < 0 || l as usize >= c {
+            return Err(Error::Shape(format!("label {l} out of range [0, {c})")));
+        }
+    }
+    let inv = 1.0f32 / n as f32;
+    let mut nll = vec![0.0f32; n];
+    // One pass: workers own matching row ranges of dlogits and nll
+    // (chunked on the same boundaries), so each row's softmax is computed
+    // once and both outputs are written together.
+    let fill_rows = |row0: usize, drows: &mut [f32], nrows: &mut [f32]| {
+        for (i, drow) in drows.chunks_mut(c).enumerate() {
+            let r = row0 + i;
+            let lrow = &logits[r * c..(r + 1) * c];
+            let mut mx = f32::NEG_INFINITY;
+            for &v in lrow {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            let mut z = 0.0f32;
+            for (d, &v) in drow.iter_mut().zip(lrow) {
+                let e = (v - mx).exp();
+                *d = e;
+                z += e;
+            }
+            let label = labels[r] as usize;
+            nrows[i] = z.ln() + mx - lrow[label];
+            for (j, d) in drow.iter_mut().enumerate() {
+                let p = *d / z;
+                *d = (p - if j == label { 1.0 } else { 0.0 }) * inv;
+            }
+        }
+    };
+    let workers = threads.clamp(1, n);
+    if workers == 1 {
+        fill_rows(0, dlogits, &mut nll);
+    } else {
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|s| {
+            let fill_rows = &fill_rows;
+            for (w, (drows, nrows)) in
+                dlogits.chunks_mut(chunk * c).zip(nll.chunks_mut(chunk)).enumerate()
+            {
+                s.spawn(move || fill_rows(w * chunk, drows, nrows));
+            }
+        });
+    }
+    let mut loss = 0.0f32;
+    for &v in &nll {
+        loss += v;
+    }
+    Ok(loss * inv)
+}
+
+/// Mean-squared-error loss `mean((pred − target)²)` over all elements.
+/// Writes `dpred = 2 (pred − target) / len`. Loss reduction is a
+/// single-threaded ascending sum.
+pub fn mse(pred: &[f32], target: &[f32], dpred: &mut [f32], threads: usize) -> f32 {
+    debug_assert_eq!(pred.len(), target.len());
+    debug_assert_eq!(pred.len(), dpred.len());
+    let len = pred.len();
+    let inv = 1.0f32 / len as f32;
+    par_rows(dpred, 1, threads, |row0, part| {
+        for (i, d) in part.iter_mut().enumerate() {
+            let r = row0 + i;
+            *d = 2.0 * (pred[r] - target[r]) * inv;
+        }
+    });
+    let mut loss = 0.0f32;
+    for (&p, &t) in pred.iter().zip(target) {
+        let e = p - t;
+        loss += e * e;
+    }
+    loss * inv
+}
+
+/// Row-wise dot products: `out[r] = a[r] · b[r]` over `(n, d)` inputs.
+pub fn dot_rows(a: &[f32], b: &[f32], n: usize, d: usize, out: &mut [f32], threads: usize) {
+    debug_assert_eq!(a.len(), n * d);
+    debug_assert_eq!(b.len(), n * d);
+    debug_assert_eq!(out.len(), n);
+    par_rows(out, 1, threads, |row0, part| {
+        for (i, o) in part.iter_mut().enumerate() {
+            let r = row0 + i;
+            let ar = &a[r * d..(r + 1) * d];
+            let br = &b[r * d..(r + 1) * d];
+            let mut acc = 0.0f32;
+            for (&x, &y) in ar.iter().zip(br) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Numerically stable `softplus(x) = ln(1 + eˣ)`.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// BPR ranking loss `mean_e softplus(−(pos[e] − neg[e]))` (§4's
+/// dot-product link head). Writes the score gradients. Single-threaded —
+/// `n` is a batch size.
+pub fn bpr_loss(pos: &[f32], neg: &[f32], dpos: &mut [f32], dneg: &mut [f32]) -> f32 {
+    debug_assert_eq!(pos.len(), neg.len());
+    let n = pos.len();
+    let inv = 1.0f32 / n as f32;
+    let mut loss = 0.0f32;
+    for e in 0..n {
+        let x = pos[e] - neg[e];
+        loss += softplus(-x);
+        let g = -sigmoid(-x) * inv;
+        dpos[e] = g;
+        dneg[e] = -g;
+    }
+    loss * inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fwd_matches_manual() {
+        // x (2,3) @ w (3,2) + b
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let b = vec![0.5, -0.5];
+        let mut out = vec![0.0; 4];
+        linear_fwd(&x, &w, &b, 2, 3, 2, false, &mut out, 1);
+        // row0: [1+3+0.5, 2+3-0.5] = [4.5, 4.5]
+        // row1: [-1+2+0.5, 0.5+2-0.5] = [1.5, 2.0]
+        assert_eq!(out, vec![4.5, 4.5, 1.5, 2.0]);
+        let mut out_relu = vec![0.0; 4];
+        let b_neg = vec![-10.0, 0.0];
+        linear_fwd(&x, &w, &b_neg, 2, 3, 2, true, &mut out_relu, 3);
+        assert_eq!(out_relu, vec![0.0, 5.0, 0.0, 2.5]);
+    }
+
+    #[test]
+    fn matmul_wt_and_grad_w_match_manual() {
+        // y = x @ w; dz given; dx = dz @ wT; dw = xT dz.
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // (2,2)
+        let w = vec![1.0, -1.0, 0.5, 2.0]; // (2,2)
+        let dz = vec![1.0, 1.0, 0.0, 2.0]; // (2,2)
+        let mut dx = vec![0.0; 4];
+        matmul_wt(&dz, &w, 2, 2, 2, false, &mut dx, 2);
+        // dx[0] = [1*1 + 1*(-1), 1*0.5 + 1*2] = [0, 2.5]
+        // dx[1] = [0*1 + 2*(-1), 0*0.5 + 2*2] = [-2, 4]
+        assert_eq!(dx, vec![0.0, 2.5, -2.0, 4.0]);
+        let mut dw = vec![0.0; 4];
+        grad_w(&x, &dz, 2, 2, 2, &mut dw, 2);
+        // dw[k][j] = sum_r x[r][k] dz[r][j]
+        // dw[0] = [1*1+3*0, 1*1+3*2] = [1, 7]; dw[1] = [2*1+4*0, 2*1+4*2] = [2, 10]
+        assert_eq!(dw, vec![1.0, 7.0, 2.0, 10.0]);
+        let mut db = vec![0.0; 2];
+        grad_b(&dz, 2, 2, &mut db);
+        assert_eq!(db, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn mean_rows_roundtrip() {
+        // nbrs (1, 2, 3)
+        let nbrs = vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0];
+        let mut agg = vec![0.0; 3];
+        mean_rows_fwd(&nbrs, 1, 2, 3, &mut agg, 1);
+        assert_eq!(agg, vec![2.0, 3.0, 4.0]);
+        let dagg = vec![2.0, 4.0, 6.0];
+        let mut dn = vec![0.0; 6];
+        mean_rows_bwd(&dagg, 1, 2, 3, false, &mut dn, 1);
+        assert_eq!(dn, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        mean_rows_bwd(&dagg, 1, 2, 3, true, &mut dn, 4);
+        assert_eq!(dn, vec![2.0, 4.0, 6.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn concat_cols_roundtrip() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // (2,2)
+        let b = vec![5.0, 6.0]; // (2,1)
+        let mut cat = vec![0.0; 6]; // (2,3)
+        scatter_cols(&a, 2, 3, 0, 2, &mut cat, 1);
+        scatter_cols(&b, 2, 3, 2, 1, &mut cat, 1);
+        assert_eq!(cat, vec![1.0, 2.0, 5.0, 3.0, 4.0, 6.0]);
+        let mut back_a = vec![0.0; 4];
+        gather_cols(&cat, 2, 3, 0, 2, false, &mut back_a, 2);
+        assert_eq!(back_a, a);
+        gather_cols(&cat, 2, 3, 0, 2, true, &mut back_a, 2);
+        assert_eq!(back_a, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn codebook_fwd_bwd_match_manual() {
+        // m=2 positions, c=2 rows each, d_c=2.
+        let books = vec![
+            1.0, 0.0, // book 0, code 0
+            0.0, 1.0, // book 0, code 1
+            2.0, 2.0, // book 1, code 0
+            3.0, -1.0, // book 1, code 1
+        ];
+        let codes = vec![0, 1, 1, 0]; // rows: [b0c0 + b1c1], [b0c1 + b1c0]
+        assert!(validate_codes(&codes, 2).is_ok());
+        assert!(validate_codes(&[2], 2).is_err());
+        assert!(validate_codes(&[-1], 2).is_err());
+        let mut out = vec![0.0; 4];
+        codebook_fwd(&books, &codes, 2, 2, 2, 2, &mut out, 1);
+        assert_eq!(out, vec![4.0, -1.0, 2.0, 3.0]);
+        let dh = vec![1.0, 2.0, 3.0, 4.0];
+        let mut gb = vec![0.0; 8];
+        codebook_bwd(&dh, &codes, 2, 2, 2, 2, &mut gb, 2);
+        // book0 code0 += dh row0; book0 code1 += dh row1;
+        // book1 code1 += dh row0; book1 code0 += dh row1.
+        assert_eq!(gb, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn table_gather_scatter_match_manual() {
+        let table = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]; // (3,2)
+        let ids = vec![2, 0, 2];
+        assert!(validate_ids(&ids, 3).is_ok());
+        assert!(validate_ids(&[3], 3).is_err());
+        let mut out = vec![0.0; 6];
+        table_gather(&table, &ids, 2, &mut out, 2);
+        assert_eq!(out, vec![2.0, 2.0, 0.0, 0.0, 2.0, 2.0]);
+        let dx = vec![1.0, 1.0, 5.0, 5.0, 2.0, 2.0];
+        let mut grad = vec![0.0; 6];
+        table_scatter_grad(&dx, &ids, 2, &mut grad, 3);
+        assert_eq!(grad, vec![5.0, 5.0, 0.0, 0.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        // Uniform logits over 4 classes: loss = ln 4, grad = (1/4 - onehot)/n.
+        let logits = vec![0.0f32; 8];
+        let labels = vec![1, 3];
+        let mut d = vec![0.0f32; 8];
+        let loss = softmax_ce(&logits, &labels, 2, 4, &mut d, 1).unwrap();
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6, "{loss}");
+        assert!((d[0] - 0.125).abs() < 1e-6);
+        assert!((d[1] + 0.375).abs() < 1e-6);
+        assert!((d[7] + 0.375).abs() < 1e-6);
+        assert!(softmax_ce(&logits, &[4, 0], 2, 4, &mut d, 1).is_err());
+    }
+
+    #[test]
+    fn mse_matches_manual() {
+        let pred = vec![1.0, 2.0];
+        let target = vec![0.0, 4.0];
+        let mut d = vec![0.0; 2];
+        let loss = mse(&pred, &target, &mut d, 1);
+        assert!((loss - (1.0 + 4.0) / 2.0).abs() < 1e-6);
+        assert_eq!(d, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn bpr_loss_shape() {
+        let pos = vec![2.0f32, 0.0];
+        let neg = vec![0.0f32, 2.0];
+        let mut dp = vec![0.0; 2];
+        let mut dn = vec![0.0; 2];
+        let loss = bpr_loss(&pos, &neg, &mut dp, &mut dn);
+        let expect = (softplus(-2.0) + softplus(2.0)) / 2.0;
+        assert!((loss - expect).abs() < 1e-6);
+        assert!(dp[0] < 0.0 && dn[0] > 0.0);
+        assert!((dp[0] + dn[0]).abs() < 1e-7);
+        // Wrong-ordered pair pulls harder than the satisfied one.
+        assert!(dp[1].abs() > dp[0].abs());
+    }
+
+    #[test]
+    fn kernels_thread_count_invariant() {
+        // Random-ish data; every kernel must produce identical bits for
+        // threads in {1, 2, 7}.
+        let n = 37;
+        let d_in = 11;
+        let d_out = 5;
+        let mut state = 1u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let x: Vec<f32> = (0..n * d_in).map(|_| next()).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| next()).collect();
+        let b: Vec<f32> = (0..d_out).map(|_| next()).collect();
+        let dz: Vec<f32> = (0..n * d_out).map(|_| next()).collect();
+        let mut base_out = vec![0.0; n * d_out];
+        let mut base_dx = vec![0.0; n * d_in];
+        let mut base_dw = vec![0.0; d_in * d_out];
+        linear_fwd(&x, &w, &b, n, d_in, d_out, true, &mut base_out, 1);
+        matmul_wt(&dz, &w, n, d_in, d_out, false, &mut base_dx, 1);
+        grad_w(&x, &dz, n, d_in, d_out, &mut base_dw, 1);
+        for threads in [2usize, 7] {
+            let mut out = vec![0.0; n * d_out];
+            let mut dx = vec![0.0; n * d_in];
+            let mut dw = vec![0.0; d_in * d_out];
+            linear_fwd(&x, &w, &b, n, d_in, d_out, true, &mut out, threads);
+            matmul_wt(&dz, &w, n, d_in, d_out, false, &mut dx, threads);
+            grad_w(&x, &dz, n, d_in, d_out, &mut dw, threads);
+            assert!(out.iter().zip(&base_out).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(dx.iter().zip(&base_dx).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(dw.iter().zip(&base_dw).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+}

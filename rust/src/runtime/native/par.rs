@@ -1,0 +1,81 @@
+//! Deterministic scoped-thread helpers for the native backend.
+//!
+//! Same zero-dependency style as the LSH encode engine: workers get
+//! disjoint `&mut` row views via `chunks_mut`, spawned with
+//! `std::thread::scope`. The determinism rule every kernel in
+//! [`super::ops`] follows: **threads only ever partition output
+//! elements** — each output element is produced by exactly one worker as
+//! a sequential reduction in a fixed order over the reduction axis — so
+//! results are bit-identical for every thread count.
+
+/// Resolve a thread-count knob (`0` = all available parallelism).
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+}
+
+/// Split `out` into contiguous row chunks (rows of `stride` elements) and
+/// run `f(first_row_index, chunk)` per chunk, on scoped threads when more
+/// than one chunk is produced. `threads` is the resolved worker count.
+pub(crate) fn par_rows(
+    out: &mut [f32],
+    stride: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert!(stride > 0, "par_rows stride must be positive");
+    debug_assert_eq!(out.len() % stride, 0, "par_rows: length not a multiple of stride");
+    let n_rows = out.len() / stride;
+    if n_rows == 0 {
+        return;
+    }
+    let t = threads.clamp(1, n_rows);
+    if t == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n_rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (i, part) in out.chunks_mut(chunk * stride).enumerate() {
+            s.spawn(move || f(i * chunk, part));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_sentinel() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn par_rows_covers_all_rows_once() {
+        for threads in [1usize, 2, 3, 8, 100] {
+            let mut out = vec![0.0f32; 7 * 3];
+            par_rows(&mut out, 3, threads, |row0, rows| {
+                for (i, r) in rows.chunks_mut(3).enumerate() {
+                    for v in r.iter_mut() {
+                        *v += (row0 + i) as f32 + 1.0;
+                    }
+                }
+            });
+            let expect: Vec<f32> =
+                (0..7).flat_map(|r| [r as f32 + 1.0; 3]).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_rows_empty_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        par_rows(&mut out, 4, 8, |_r, _c| panic!("must not be called"));
+    }
+}

@@ -1,0 +1,542 @@
+//! Native minibatch GraphSAGE (paper §4 / Figure 4): two mean-aggregation
+//! layers over the fan-out tensors [`crate::tasks::sage::SageBatcher`]
+//! produces, fed by either the code-dependent decoder (compressed path)
+//! or an explicit embedding table (NC baseline), with a softmax-CE node
+//! head and a dot-product/BPR link head. Mirrors
+//! `python/compile/gnn.py::sage_mb_apply` layer for layer.
+//!
+//! The backward pass is hand-derived and follows the determinism rule of
+//! [`super::ops`]; gradient accumulation into shared parameters (`gnn.w1`
+//! is applied twice, the feature front-end three times) happens in a fixed
+//! program order, so loss curves are bit-identical across thread counts.
+#![allow(clippy::too_many_arguments)]
+
+use crate::runtime::{Manifest, Tensor};
+use crate::{Error, Result};
+
+use super::decoder::{self, find_param, DecCache, DecoderDims, DecoderIdx};
+use super::ops;
+use super::par::par_rows;
+
+/// Feature front-end: decoder over integer codes, or id-gather from an
+/// explicit `embed.table` (the NC baseline).
+pub enum FeatSource {
+    Decoder { dims: DecoderDims, idx: DecoderIdx },
+    Table { idx: usize, n: usize, d: usize },
+}
+
+/// Per-node-set forward cache for the front-end.
+pub enum FeatCache {
+    Dec(DecCache),
+    Table { x: Vec<f32> },
+}
+
+impl FeatSource {
+    /// Resolve the coded front-end from manifest hyper-parameters.
+    pub fn resolve_decoder(manifest: &Manifest) -> Result<FeatSource> {
+        let dims = DecoderDims {
+            c: manifest.hyper_usize("c")?,
+            m: manifest.hyper_usize("m")?,
+            d_c: manifest.hyper_usize("d_c")?,
+            d_m: manifest.hyper_usize("d_m")?,
+            d_e: manifest.hyper_usize("d_e")?,
+            l: manifest.hyper_usize("l")?,
+            light: manifest.hyper_str("variant")? == "light",
+        };
+        let idx = DecoderIdx::resolve(manifest, &dims)?;
+        Ok(FeatSource::Decoder { dims, idx })
+    }
+
+    /// Resolve the NC front-end (`embed.table (n, d_e)`).
+    pub fn resolve_table(manifest: &Manifest) -> Result<FeatSource> {
+        let n = manifest.hyper_usize("n")?;
+        let d = manifest.hyper_usize("d_e")?;
+        let idx = find_param(manifest, "embed.table", &[n, d])?;
+        Ok(FeatSource::Table { idx, n, d })
+    }
+
+    /// Output embedding width.
+    pub fn d_out(&self) -> usize {
+        match self {
+            FeatSource::Decoder { dims, .. } => dims.d_e,
+            FeatSource::Table { d, .. } => *d,
+        }
+    }
+
+    /// Forward one node set (`t` is the codes `(rows, m)` or ids `(rows,)`
+    /// tensor); returns the cache whose [`Self::output`] is `(rows, d)`.
+    pub fn fwd(&self, params: &[&[f32]], t: &Tensor, threads: usize) -> Result<FeatCache> {
+        match self {
+            FeatSource::Decoder { dims, idx } => {
+                let codes = t.as_i32()?;
+                let rows = codes.len() / dims.m;
+                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, codes, rows, threads)?))
+            }
+            FeatSource::Table { idx, n, d } => {
+                let ids = t.as_i32()?;
+                ops::validate_ids(ids, *n)?;
+                let mut x = vec![0.0f32; ids.len() * d];
+                ops::table_gather(params[*idx], ids, *d, &mut x, threads);
+                Ok(FeatCache::Table { x })
+            }
+        }
+    }
+
+    pub fn output<'a>(&self, cache: &'a FeatCache) -> &'a [f32] {
+        match cache {
+            FeatCache::Dec(c) => c.output(),
+            FeatCache::Table { x } => x,
+        }
+    }
+
+    /// Backward one node set: accumulate front-end parameter gradients.
+    pub fn bwd(
+        &self,
+        params: &[&[f32]],
+        t: &Tensor,
+        cache: &FeatCache,
+        dx: &[f32],
+        trainable: &[bool],
+        grads: &mut [Vec<f32>],
+        threads: usize,
+    ) -> Result<()> {
+        match (self, cache) {
+            (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
+                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
+                Ok(())
+            }
+            (FeatSource::Table { idx, d, .. }, FeatCache::Table { .. }) => {
+                if trainable[*idx] {
+                    ops::table_scatter_grad(dx, t.as_i32()?, *d, &mut grads[*idx], threads);
+                }
+                Ok(())
+            }
+            _ => Err(Error::Runtime("feature cache/source mismatch".into())),
+        }
+    }
+}
+
+/// GraphSAGE encoder dims (one minibatch).
+#[derive(Clone, Copy, Debug)]
+pub struct SageDims {
+    pub batch: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub d_e: usize,
+    pub hidden: usize,
+}
+
+impl SageDims {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("batch", self.batch),
+            ("k1", self.k1),
+            ("k2", self.k2),
+            ("d_e", self.d_e),
+            ("hidden", self.hidden),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("sage {name} must be positive")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Indices of the `gnn.*` parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SageIdx {
+    pub w1: usize,
+    pub b1: usize,
+    pub w2: usize,
+    pub b2: usize,
+}
+
+impl SageIdx {
+    pub fn resolve(manifest: &Manifest, d_e: usize, hidden: usize) -> Result<Self> {
+        Ok(Self {
+            w1: find_param(manifest, "gnn.w1", &[2 * d_e, hidden])?,
+            b1: find_param(manifest, "gnn.b1", &[hidden])?,
+            w2: find_param(manifest, "gnn.w2", &[2 * hidden, hidden])?,
+            b2: find_param(manifest, "gnn.b2", &[hidden])?,
+        })
+    }
+}
+
+/// Indices of the `head.*` parameters (classification head).
+#[derive(Clone, Copy, Debug)]
+pub struct HeadIdx {
+    pub w: usize,
+    pub b: usize,
+}
+
+impl HeadIdx {
+    pub fn resolve(manifest: &Manifest, hidden: usize, n_out: usize) -> Result<Self> {
+        Ok(Self {
+            w: find_param(manifest, "head.w", &[hidden, n_out])?,
+            b: find_param(manifest, "head.b", &[n_out])?,
+        })
+    }
+}
+
+/// Encoder forward cache (everything the reverse pass replays).
+pub struct EncCache {
+    fc_b: FeatCache,
+    fc_h1: FeatCache,
+    fc_h2: FeatCache,
+    cat_h1: Vec<f32>,
+    l1_h1: Vec<f32>,
+    cat_b: Vec<f32>,
+    l1_b: Vec<f32>,
+    cat2: Vec<f32>,
+    /// Final node representations `(batch, hidden)`.
+    pub hfin: Vec<f32>,
+}
+
+/// Encode one node set (targets + two fan-out hops) to `(batch, hidden)`.
+pub fn encode_fwd(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    dims: &SageDims,
+    params: &[&[f32]],
+    t_b: &Tensor,
+    t_h1: &Tensor,
+    t_h2: &Tensor,
+    threads: usize,
+) -> Result<EncCache> {
+    let (b, k1, k2, d, h) = (dims.batch, dims.k1, dims.k2, dims.d_e, dims.hidden);
+    let fc_b = feat.fwd(params, t_b, threads)?;
+    let fc_h1 = feat.fwd(params, t_h1, threads)?;
+    let fc_h2 = feat.fwd(params, t_h2, threads)?;
+    let xb = feat.output(&fc_b);
+    let xh1 = feat.output(&fc_h1);
+    let xh2 = feat.output(&fc_h2);
+    if xb.len() != b * d || xh1.len() != b * k1 * d || xh2.len() != b * k1 * k2 * d {
+        return Err(Error::Shape(format!(
+            "sage encode: feature rows {}/{}/{} do not match (B, B·k1, B·k1·k2) = ({b}, {}, {})",
+            xb.len() / d,
+            xh1.len() / d,
+            xh2.len() / d,
+            b * k1,
+            b * k1 * k2
+        )));
+    }
+
+    // Layer 1 on the hop-1 nodes (their neighbors are the hop-2 nodes).
+    let mut agg_h2 = vec![0.0f32; b * k1 * d];
+    ops::mean_rows_fwd(xh2, b * k1, k2, d, &mut agg_h2, threads);
+    let mut cat_h1 = vec![0.0f32; b * k1 * 2 * d];
+    ops::scatter_cols(xh1, b * k1, 2 * d, 0, d, &mut cat_h1, threads);
+    ops::scatter_cols(&agg_h2, b * k1, 2 * d, d, d, &mut cat_h1, threads);
+    let mut l1_h1 = vec![0.0f32; b * k1 * h];
+    ops::linear_fwd(
+        &cat_h1,
+        params[sage.w1],
+        params[sage.b1],
+        b * k1,
+        2 * d,
+        h,
+        true,
+        &mut l1_h1,
+        threads,
+    );
+
+    // Layer 1 on the targets (their neighbors are the hop-1 nodes).
+    let mut agg_h1 = vec![0.0f32; b * d];
+    ops::mean_rows_fwd(xh1, b, k1, d, &mut agg_h1, threads);
+    let mut cat_b = vec![0.0f32; b * 2 * d];
+    ops::scatter_cols(xb, b, 2 * d, 0, d, &mut cat_b, threads);
+    ops::scatter_cols(&agg_h1, b, 2 * d, d, d, &mut cat_b, threads);
+    let mut l1_b = vec![0.0f32; b * h];
+    ops::linear_fwd(
+        &cat_b,
+        params[sage.w1],
+        params[sage.b1],
+        b,
+        2 * d,
+        h,
+        true,
+        &mut l1_b,
+        threads,
+    );
+
+    // Layer 2: aggregate the layer-1 neighbor representations.
+    let mut agg2 = vec![0.0f32; b * h];
+    ops::mean_rows_fwd(&l1_h1, b, k1, h, &mut agg2, threads);
+    let mut cat2 = vec![0.0f32; b * 2 * h];
+    ops::scatter_cols(&l1_b, b, 2 * h, 0, h, &mut cat2, threads);
+    ops::scatter_cols(&agg2, b, 2 * h, h, h, &mut cat2, threads);
+    let mut hfin = vec![0.0f32; b * h];
+    ops::linear_fwd(&cat2, params[sage.w2], params[sage.b2], b, 2 * h, h, true, &mut hfin, threads);
+
+    Ok(EncCache { fc_b, fc_h1, fc_h2, cat_h1, l1_h1, cat_b, l1_b, cat2, hfin })
+}
+
+/// Reverse pass of [`encode_fwd`] for `dh (batch, hidden)` — the gradient
+/// w.r.t. the (post-ReLU) final representations. Accumulates into `grads`.
+pub fn encode_bwd(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    dims: &SageDims,
+    params: &[&[f32]],
+    t_b: &Tensor,
+    t_h1: &Tensor,
+    t_h2: &Tensor,
+    cache: &EncCache,
+    dh: &[f32],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<()> {
+    let (b, k1, k2, d, h) = (dims.batch, dims.k1, dims.k2, dims.d_e, dims.hidden);
+    debug_assert_eq!(dh.len(), b * h);
+
+    // Layer 2.
+    let mut dz2 = dh.to_vec();
+    ops::relu_bwd_mask(&mut dz2, &cache.hfin, threads);
+    if trainable[sage.w2] {
+        ops::grad_w(&cache.cat2, &dz2, b, 2 * h, h, &mut grads[sage.w2], threads);
+    }
+    if trainable[sage.b2] {
+        ops::grad_b(&dz2, b, h, &mut grads[sage.b2]);
+    }
+    let mut dcat2 = vec![0.0f32; b * 2 * h];
+    ops::matmul_wt(&dz2, params[sage.w2], b, 2 * h, h, false, &mut dcat2, threads);
+    let mut dl1_b = vec![0.0f32; b * h];
+    ops::gather_cols(&dcat2, b, 2 * h, 0, h, false, &mut dl1_b, threads);
+    let mut dagg2 = vec![0.0f32; b * h];
+    ops::gather_cols(&dcat2, b, 2 * h, h, h, false, &mut dagg2, threads);
+    let mut dl1_h1 = vec![0.0f32; b * k1 * h];
+    ops::mean_rows_bwd(&dagg2, b, k1, h, false, &mut dl1_h1, threads);
+
+    // Layer 1, target application.
+    ops::relu_bwd_mask(&mut dl1_b, &cache.l1_b, threads);
+    if trainable[sage.w1] {
+        ops::grad_w(&cache.cat_b, &dl1_b, b, 2 * d, h, &mut grads[sage.w1], threads);
+    }
+    if trainable[sage.b1] {
+        ops::grad_b(&dl1_b, b, h, &mut grads[sage.b1]);
+    }
+    let mut dcat_b = vec![0.0f32; b * 2 * d];
+    ops::matmul_wt(&dl1_b, params[sage.w1], b, 2 * d, h, false, &mut dcat_b, threads);
+    let mut dxb = vec![0.0f32; b * d];
+    ops::gather_cols(&dcat_b, b, 2 * d, 0, d, false, &mut dxb, threads);
+    let mut dagg_h1 = vec![0.0f32; b * d];
+    ops::gather_cols(&dcat_b, b, 2 * d, d, d, false, &mut dagg_h1, threads);
+    let mut dxh1 = vec![0.0f32; b * k1 * d];
+    ops::mean_rows_bwd(&dagg_h1, b, k1, d, false, &mut dxh1, threads);
+
+    // Layer 1, hop-1 application (second contribution to w1/b1 and xh1).
+    ops::relu_bwd_mask(&mut dl1_h1, &cache.l1_h1, threads);
+    if trainable[sage.w1] {
+        ops::grad_w(&cache.cat_h1, &dl1_h1, b * k1, 2 * d, h, &mut grads[sage.w1], threads);
+    }
+    if trainable[sage.b1] {
+        ops::grad_b(&dl1_h1, b * k1, h, &mut grads[sage.b1]);
+    }
+    let mut dcat_h1 = vec![0.0f32; b * k1 * 2 * d];
+    ops::matmul_wt(&dl1_h1, params[sage.w1], b * k1, 2 * d, h, false, &mut dcat_h1, threads);
+    ops::gather_cols(&dcat_h1, b * k1, 2 * d, 0, d, true, &mut dxh1, threads);
+    let mut dagg_h2 = vec![0.0f32; b * k1 * d];
+    ops::gather_cols(&dcat_h1, b * k1, 2 * d, d, d, false, &mut dagg_h2, threads);
+    let mut dxh2 = vec![0.0f32; b * k1 * k2 * d];
+    ops::mean_rows_bwd(&dagg_h2, b * k1, k2, d, false, &mut dxh2, threads);
+
+    // Feature front-end, fixed order: targets, hop 1, hop 2.
+    feat.bwd(params, t_b, &cache.fc_b, &dxb, trainable, grads, threads)?;
+    feat.bwd(params, t_h1, &cache.fc_h1, &dxh1, trainable, grads, threads)?;
+    feat.bwd(params, t_h2, &cache.fc_h2, &dxh2, trainable, grads, threads)?;
+    Ok(())
+}
+
+/// Full train-step gradients for the classification head (softmax CE over
+/// `n_classes`). Returns the loss.
+pub fn clf_grads(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    head: &HeadIdx,
+    n_classes: usize,
+    dims: &SageDims,
+    params: &[&[f32]],
+    batch: &[Tensor],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<f32> {
+    let (b, h) = (dims.batch, dims.hidden);
+    let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let labels = batch[3].as_i32()?;
+    let mut logits = vec![0.0f32; b * n_classes];
+    ops::linear_fwd(
+        &cache.hfin,
+        params[head.w],
+        params[head.b],
+        b,
+        h,
+        n_classes,
+        false,
+        &mut logits,
+        threads,
+    );
+    let mut dlogits = vec![0.0f32; b * n_classes];
+    let loss = ops::softmax_ce(&logits, labels, b, n_classes, &mut dlogits, threads)?;
+    if trainable[head.w] {
+        ops::grad_w(&cache.hfin, &dlogits, b, h, n_classes, &mut grads[head.w], threads);
+    }
+    if trainable[head.b] {
+        ops::grad_b(&dlogits, b, n_classes, &mut grads[head.b]);
+    }
+    let mut dh = vec![0.0f32; b * h];
+    ops::matmul_wt(&dlogits, params[head.w], b, h, n_classes, false, &mut dh, threads);
+    encode_bwd(
+        feat, sage, dims, params, &batch[0], &batch[1], &batch[2], &cache, &dh, trainable, grads,
+        threads,
+    )?;
+    Ok(loss)
+}
+
+/// Prediction for the classification head: logits `(batch, n_classes)`.
+pub fn clf_pred(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    head: &HeadIdx,
+    n_classes: usize,
+    dims: &SageDims,
+    params: &[&[f32]],
+    batch: &[Tensor],
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let (b, h) = (dims.batch, dims.hidden);
+    let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let mut logits = vec![0.0f32; b * n_classes];
+    ops::linear_fwd(
+        &cache.hfin,
+        params[head.w],
+        params[head.b],
+        b,
+        h,
+        n_classes,
+        false,
+        &mut logits,
+        threads,
+    );
+    Ok(logits)
+}
+
+/// Train-step gradients for the dot-product/BPR link head: three node
+/// sets (source `u`, positive `v`, negative `w`), loss
+/// `mean softplus(−(⟨hu, hv⟩ − ⟨hu, hw⟩))`.
+pub fn link_grads(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    dims: &SageDims,
+    params: &[&[f32]],
+    batch: &[Tensor],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<f32> {
+    let (b, h) = (dims.batch, dims.hidden);
+    let cu = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let cv = encode_fwd(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads)?;
+    let cw = encode_fwd(feat, sage, dims, params, &batch[6], &batch[7], &batch[8], threads)?;
+    let mut pos = vec![0.0f32; b];
+    let mut neg = vec![0.0f32; b];
+    ops::dot_rows(&cu.hfin, &cv.hfin, b, h, &mut pos, threads);
+    ops::dot_rows(&cu.hfin, &cw.hfin, b, h, &mut neg, threads);
+    let mut dpos = vec![0.0f32; b];
+    let mut dneg = vec![0.0f32; b];
+    let loss = ops::bpr_loss(&pos, &neg, &mut dpos, &mut dneg);
+    // Score gradients back to the three representation sets.
+    let mut dhu = vec![0.0f32; b * h];
+    let mut dhv = vec![0.0f32; b * h];
+    let mut dhw = vec![0.0f32; b * h];
+    {
+        let (hu, hv, hw) = (&cu.hfin, &cv.hfin, &cw.hfin);
+        par_rows(&mut dhu, h, threads, |row0, rows| {
+            for (i, row) in rows.chunks_mut(h).enumerate() {
+                let r = row0 + i;
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = dpos[r] * hv[r * h + j] + dneg[r] * hw[r * h + j];
+                }
+            }
+        });
+        par_rows(&mut dhv, h, threads, |row0, rows| {
+            for (i, row) in rows.chunks_mut(h).enumerate() {
+                let r = row0 + i;
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = dpos[r] * hu[r * h + j];
+                }
+            }
+        });
+        par_rows(&mut dhw, h, threads, |row0, rows| {
+            for (i, row) in rows.chunks_mut(h).enumerate() {
+                let r = row0 + i;
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = dneg[r] * hu[r * h + j];
+                }
+            }
+        });
+    }
+    // Fixed order: u, v, w.
+    encode_bwd(
+        feat,
+        sage,
+        dims,
+        params,
+        &batch[0],
+        &batch[1],
+        &batch[2],
+        &cu,
+        &dhu,
+        trainable,
+        grads,
+        threads,
+    )?;
+    encode_bwd(
+        feat,
+        sage,
+        dims,
+        params,
+        &batch[3],
+        &batch[4],
+        &batch[5],
+        &cv,
+        &dhv,
+        trainable,
+        grads,
+        threads,
+    )?;
+    encode_bwd(
+        feat,
+        sage,
+        dims,
+        params,
+        &batch[6],
+        &batch[7],
+        &batch[8],
+        &cw,
+        &dhw,
+        trainable,
+        grads,
+        threads,
+    )?;
+    Ok(loss)
+}
+
+/// Prediction for the link head: scores `(batch,)` for (u, v) pairs.
+pub fn link_pred(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    dims: &SageDims,
+    params: &[&[f32]],
+    batch: &[Tensor],
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let (b, h) = (dims.batch, dims.hidden);
+    let cu = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let cv = encode_fwd(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads)?;
+    let mut scores = vec![0.0f32; b];
+    ops::dot_rows(&cu.hfin, &cv.hfin, b, h, &mut scores, threads);
+    Ok(scores)
+}

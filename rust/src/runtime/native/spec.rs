@@ -1,0 +1,377 @@
+//! Rust-side model builds: synthesize a [`Manifest`] without any AOT
+//! artifact on disk. Parameter lists mirror `python/compile/decoder.py` /
+//! `gnn.py` name-for-name and init-for-init, and the hyper object carries
+//! the same keys `python/compile/aot.py` records — so a natively
+//! synthesized manifest and an exported one are interchangeable, and
+//! [`crate::params::ParamStore::init`] produces identical buffers for
+//! both.
+//!
+//! [`builtin`] is the native analog of the aot.py variant registry: the
+//! artifact names the CLI and tasks reference (`sage_mb_coded`,
+//! `sage_mb_nc`, `merchant`, `recon_c16_m32`, …) resolve to the same
+//! scales the Python exporter uses, plus the native-only `sage_mb_link`
+//! (the §4 dot-product/BPR link head, which has no HLO counterpart).
+
+use crate::cfg::OptimCfg;
+use crate::runtime::{InitKind, Manifest, ParamSpec, TensorSpec};
+use crate::ser::Json;
+
+use super::decoder::DecoderDims;
+
+fn param(name: String, shape: Vec<usize>, init: InitKind, trainable: bool) -> ParamSpec {
+    ParamSpec { name, shape, init, trainable }
+}
+
+fn xavier(name: &str, shape: Vec<usize>) -> ParamSpec {
+    param(name.to_string(), shape, InitKind::XavierUniform, true)
+}
+
+fn zeros(name: &str, shape: Vec<usize>) -> ParamSpec {
+    param(name.to_string(), shape, InitKind::Zeros, true)
+}
+
+fn tensor(name: &str, shape: Vec<usize>, dtype: &str) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape, dtype: dtype.to_string() }
+}
+
+/// Decoder parameter list (mirrors `decoder.decoder_param_specs`).
+pub fn decoder_param_specs(
+    c: usize,
+    m: usize,
+    d_c: usize,
+    d_m: usize,
+    d_e: usize,
+    l: usize,
+    light: bool,
+) -> Vec<ParamSpec> {
+    let mut specs = vec![param(
+        "dec.books".to_string(),
+        vec![m, c, d_c],
+        InitKind::Normal { std: 1.0 / (m as f32).sqrt() },
+        !light,
+    )];
+    if light {
+        specs.push(param("dec.w0".to_string(), vec![d_c], InitKind::Ones, true));
+    }
+    // One source of truth for the MLP layout: the resolver's dims.
+    let dims = DecoderDims { c, m, d_c, d_m, d_e, l, light }.mlp_dims();
+    for i in 0..l {
+        specs.push(xavier(&format!("dec.mlp{i}.w"), vec![dims[i], dims[i + 1]]));
+        specs.push(zeros(&format!("dec.mlp{i}.b"), vec![dims[i + 1]]));
+    }
+    specs
+}
+
+/// Minibatch-SAGE parameter list (mirrors `gnn.sage_mb_param_specs`).
+pub fn sage_mb_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
+    vec![
+        xavier("gnn.w1", vec![2 * d_in, hidden]),
+        zeros("gnn.b1", vec![hidden]),
+        xavier("gnn.w2", vec![2 * hidden, hidden]),
+        zeros("gnn.b2", vec![hidden]),
+    ]
+}
+
+/// Classification-head parameter list (mirrors `gnn.head_param_specs`).
+pub fn head_param_specs(hidden: usize, n_out: usize) -> Vec<ParamSpec> {
+    vec![xavier("head.w", vec![hidden, n_out]), zeros("head.b", vec![n_out])]
+}
+
+/// NC baseline's explicit embedding table.
+pub fn embed_table_spec(n: usize, d_e: usize) -> ParamSpec {
+    param("embed.table".to_string(), vec![n, d_e], InitKind::Normal { std: 0.1 }, true)
+}
+
+/// One §5.1 reconstruction-decoder build.
+#[derive(Clone, Debug)]
+pub struct ReconBuild {
+    pub name: String,
+    pub c: usize,
+    pub m: usize,
+    pub d_c: usize,
+    pub d_m: usize,
+    pub d_e: usize,
+    pub l: usize,
+    pub light: bool,
+    pub batch: usize,
+    pub optim: OptimCfg,
+}
+
+impl ReconBuild {
+    pub fn manifest(&self) -> Manifest {
+        let hyper = Json::obj(vec![
+            ("task", Json::str("recon")),
+            ("c", Json::num(self.c as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("d_c", Json::num(self.d_c as f64)),
+            ("d_m", Json::num(self.d_m as f64)),
+            ("d_e", Json::num(self.d_e as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("variant", Json::str(if self.light { "light" } else { "full" })),
+            ("batch", Json::num(self.batch as f64)),
+            ("optim", self.optim.to_json()),
+        ]);
+        let params =
+            decoder_param_specs(self.c, self.m, self.d_c, self.d_m, self.d_e, self.l, self.light);
+        Manifest {
+            name: self.name.clone(),
+            params,
+            train_inputs: vec![
+                tensor("codes", vec![self.batch, self.m], "i32"),
+                tensor("target", vec![self.batch, self.d_e], "f32"),
+            ],
+            pred_inputs: vec![tensor("codes", vec![self.batch, self.m], "i32")],
+            pred_output: tensor("embedding", vec![self.batch, self.d_e], "f32"),
+            hyper,
+        }
+    }
+}
+
+/// One §4 minibatch-GraphSAGE build (node classification or link head).
+#[derive(Clone, Debug)]
+pub struct SageMbBuild {
+    pub name: String,
+    pub coded: bool,
+    /// Dot-product/BPR link head instead of the softmax-CE node head.
+    pub link: bool,
+    pub n: usize,
+    pub n_classes: usize,
+    pub d_e: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub c: usize,
+    pub m: usize,
+    pub d_c: usize,
+    pub d_m: usize,
+    pub l: usize,
+    pub light: bool,
+    pub optim: OptimCfg,
+}
+
+impl SageMbBuild {
+    /// The three node-set input tensors for one encoder application.
+    /// The clf head uses the exact aot.py names (`codes_b`, `codes_h1`,
+    /// `codes_h2`); the link head's three node sets get `u`/`v`/`w`
+    /// prefixes (`codes_u`, `codes_u_h1`, …).
+    fn node_inputs(&self, prefix: &str) -> Vec<TensorSpec> {
+        let (b, k1, k2, m) = (self.batch, self.k1, self.k2, self.m);
+        let kind = if self.coded { "codes" } else { "ids" };
+        let names = if prefix == "b" {
+            [format!("{kind}_b"), format!("{kind}_h1"), format!("{kind}_h2")]
+        } else {
+            [
+                format!("{kind}_{prefix}"),
+                format!("{kind}_{prefix}_h1"),
+                format!("{kind}_{prefix}_h2"),
+            ]
+        };
+        let shapes: [Vec<usize>; 3] = if self.coded {
+            [vec![b, m], vec![b * k1, m], vec![b * k1 * k2, m]]
+        } else {
+            [vec![b], vec![b * k1], vec![b * k1 * k2]]
+        };
+        names
+            .into_iter()
+            .zip(shapes)
+            .map(|(name, shape)| tensor(&name, shape, "i32"))
+            .collect()
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        let task = if self.link { "sage_minibatch_link" } else { "sage_minibatch" };
+        let hyper = Json::obj(vec![
+            ("task", Json::str(task)),
+            ("coded", Json::Bool(self.coded)),
+            ("n", Json::num(self.n as f64)),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("d_e", Json::num(self.d_e as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("k1", Json::num(self.k1 as f64)),
+            ("k2", Json::num(self.k2 as f64)),
+            ("c", Json::num(self.c as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("d_c", Json::num(self.d_c as f64)),
+            ("d_m", Json::num(self.d_m as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("variant", Json::str(if self.light { "light" } else { "full" })),
+            ("optim", self.optim.to_json()),
+        ]);
+        let mut params = if self.coded {
+            decoder_param_specs(self.c, self.m, self.d_c, self.d_m, self.d_e, self.l, self.light)
+        } else {
+            vec![embed_table_spec(self.n, self.d_e)]
+        };
+        params.extend(sage_mb_param_specs(self.d_e, self.hidden));
+        let (train_inputs, pred_inputs, pred_output) = if self.link {
+            let mut train = self.node_inputs("u");
+            train.extend(self.node_inputs("v"));
+            train.extend(self.node_inputs("w"));
+            let mut pred = self.node_inputs("u");
+            pred.extend(self.node_inputs("v"));
+            (train, pred, tensor("scores", vec![self.batch], "f32"))
+        } else {
+            params.extend(head_param_specs(self.hidden, self.n_classes));
+            let mut train = self.node_inputs("b");
+            train.push(tensor("labels", vec![self.batch], "i32"));
+            let pred = self.node_inputs("b");
+            (train, pred, tensor("logits", vec![self.batch, self.n_classes], "f32"))
+        };
+        Manifest { name: self.name.clone(), params, train_inputs, pred_inputs, pred_output, hyper }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in registry (scales mirror python/compile/aot.py)
+// ---------------------------------------------------------------------------
+
+fn mb_build(name: &str, coded: bool, link: bool) -> SageMbBuild {
+    SageMbBuild {
+        name: name.to_string(),
+        coded,
+        link,
+        n: 10_000,
+        n_classes: 8,
+        d_e: 64,
+        hidden: 128,
+        batch: 256,
+        k1: 10,
+        k2: 10,
+        c: 16,
+        m: 32,
+        d_c: 128,
+        d_m: 128,
+        l: 3,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn merchant_build() -> SageMbBuild {
+    SageMbBuild {
+        name: "merchant".to_string(),
+        coded: true,
+        link: false,
+        n: 60_000,
+        n_classes: 64,
+        d_e: 64,
+        hidden: 128,
+        batch: 256,
+        k1: 5,
+        k2: 5,
+        c: 256,
+        m: 16,
+        d_c: 128,
+        d_m: 128,
+        l: 3,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn recon_build(name: &str, c: usize, m: usize, light: bool) -> ReconBuild {
+    ReconBuild {
+        name: name.to_string(),
+        c,
+        m,
+        d_c: 256,
+        d_m: 256,
+        d_e: 128,
+        l: 3,
+        light,
+        batch: 512,
+        optim: OptimCfg::adamw_default(),
+    }
+}
+
+/// Names the native registry can synthesize without artifacts.
+pub fn builtin_names() -> &'static [&'static str] {
+    &[
+        "sage_mb_coded",
+        "sage_mb_nc",
+        "sage_mb_link",
+        "merchant",
+        "recon_c2_m128",
+        "recon_c4_m64",
+        "recon_c16_m32",
+        "recon_c256_m16",
+        "recon_light_c16_m32",
+    ]
+}
+
+/// Synthesize the manifest for a registry name (`None` if unknown).
+pub fn builtin(name: &str) -> Option<Manifest> {
+    match name {
+        "sage_mb_coded" => Some(mb_build(name, true, false).manifest()),
+        "sage_mb_nc" => Some(mb_build(name, false, false).manifest()),
+        "sage_mb_link" => Some(mb_build(name, true, true).manifest()),
+        "merchant" => Some(merchant_build().manifest()),
+        "recon_c2_m128" => Some(recon_build(name, 2, 128, false).manifest()),
+        "recon_c4_m64" => Some(recon_build(name, 4, 64, false).manifest()),
+        "recon_c16_m32" => Some(recon_build(name, 16, 32, false).manifest()),
+        "recon_c256_m16" => Some(recon_build(name, 256, 16, false).manifest()),
+        "recon_light_c16_m32" => Some(recon_build(name, 16, 32, true).manifest()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+
+    #[test]
+    fn sage_coded_manifest_matches_aot_contract() {
+        let m = builtin("sage_mb_coded").unwrap();
+        assert_eq!(m.name, "sage_mb_coded");
+        // Param order: decoder, gnn, head (same as model.make_sage_minibatch).
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "dec.books", "dec.mlp0.w", "dec.mlp0.b", "dec.mlp1.w", "dec.mlp1.b",
+                "dec.mlp2.w", "dec.mlp2.b", "gnn.w1", "gnn.b1", "gnn.w2", "gnn.b2",
+                "head.w", "head.b"
+            ]
+        );
+        assert_eq!(m.params[0].shape, vec![32, 16, 128]);
+        assert!(m.params[0].trainable, "full variant trains codebooks");
+        assert_eq!(m.train_inputs.len(), 4);
+        assert_eq!(m.train_inputs[2].shape, vec![256 * 10 * 10, 32]);
+        assert_eq!(m.pred_output.shape, vec![256, 8]);
+        assert_eq!(m.hyper_usize("k1").unwrap(), 10);
+        assert_eq!(m.hyper_str("task").unwrap(), "sage_minibatch");
+        // Stores initialize from synthesized manifests like exported ones.
+        let store = ParamStore::init(&m, 3);
+        assert_eq!(store.n_params(), 13);
+    }
+
+    #[test]
+    fn nc_and_link_and_recon_variants() {
+        let nc = builtin("sage_mb_nc").unwrap();
+        assert_eq!(nc.params[0].name, "embed.table");
+        assert_eq!(nc.params[0].shape, vec![10_000, 64]);
+        assert_eq!(nc.train_inputs[0].shape, vec![256]);
+
+        let link = builtin("sage_mb_link").unwrap();
+        assert_eq!(link.train_inputs.len(), 9);
+        assert_eq!(link.pred_inputs.len(), 6);
+        assert_eq!(link.pred_output.shape, vec![256]);
+        assert!(!link.params.iter().any(|p| p.name.starts_with("head.")));
+
+        let recon = builtin("recon_c16_m32").unwrap();
+        assert_eq!(recon.params.len(), 7);
+        assert_eq!(recon.hyper_usize("batch").unwrap(), 512);
+
+        let light = builtin("recon_light_c16_m32").unwrap();
+        assert!(!light.params[0].trainable, "light variant freezes codebooks");
+        assert_eq!(light.params[1].name, "dec.w0");
+
+        assert!(builtin("node_fb_gcn_coded").is_none());
+        for name in builtin_names() {
+            assert!(builtin(name).is_some(), "{name} must synthesize");
+        }
+    }
+}

@@ -5,15 +5,28 @@
 //! Edge protocol: undirected edges split 80/10/10; the message-passing
 //! adjacency uses **training edges only** (no leakage); negatives are
 //! uniform non-edges resampled per step.
+//!
+//! Two encoder paths:
+//! - **Full-batch** ([`run_fullbatch`]): dense-adjacency GNNs, which still
+//!   require AOT HLO artifacts (the native backend does not implement the
+//!   full-batch tasks).
+//! - **Minibatch** ([`SageLinkBatcher`] / [`train_sage_link`]): the §4
+//!   fan-out GraphSAGE encoder with the dot-product/BPR link head — the
+//!   native backend's `sage_mb_link` build, so it runs with no artifacts
+//!   at all and scales past dense adjacencies.
+
+use std::sync::Arc;
 
 use crate::cfg::{CodingCfg, GnnKind};
+use crate::codes::CodeTable;
 use crate::eval::link_hits_at_k;
 use crate::graph::{split::split_items, Graph};
 use crate::params::ParamStore;
 use crate::rng::{Rng, Xoshiro256pp};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{Engine, Model, Tensor};
 use crate::tasks::nodeclf::{adj_tensor, all_codes_tensor, Frontend, RunOpts};
-use crate::train;
+use crate::tasks::sage;
+use crate::train::{self, BatchSource, TrainLog, TrainOpts};
 use crate::{Error, Result};
 
 /// Outcome of one link-prediction cell.
@@ -132,6 +145,156 @@ pub fn run_fullbatch(
     Ok(best)
 }
 
+// ---------------------------------------------------------------------------
+// Minibatch link prediction (§4 encoder + dot-product/BPR head)
+// ---------------------------------------------------------------------------
+
+/// Batch producer for the `sage_mb_link` executable: per step it draws
+/// `batch` positive edges `(u, v)` and uniform negative nodes `w` with
+/// `(u, w)` not an edge, fan-out samples all three node sets, and gathers
+/// their codes — nine tensors, seeded per step so runs are deterministic
+/// regardless of pipelining.
+pub struct SageLinkBatcher {
+    graph: Arc<Graph>,
+    codes: Arc<CodeTable>,
+    pos_edges: Arc<Vec<(u32, u32)>>,
+    batch: usize,
+    k1: usize,
+    k2: usize,
+    m: usize,
+    seed: u64,
+}
+
+impl SageLinkBatcher {
+    pub fn new(
+        graph: Arc<Graph>,
+        codes: Arc<CodeTable>,
+        pos_edges: Arc<Vec<(u32, u32)>>,
+        model: &Model,
+        seed: u64,
+    ) -> Result<Self> {
+        if !model.manifest.hyper_bool("coded")? {
+            return Err(Error::Config("SageLinkBatcher needs a coded manifest".into()));
+        }
+        if pos_edges.is_empty() {
+            return Err(Error::Config("link training needs at least one positive edge".into()));
+        }
+        Ok(Self {
+            batch: model.manifest.hyper_usize("batch")?,
+            k1: model.manifest.hyper_usize("k1")?,
+            k2: model.manifest.hyper_usize("k2")?,
+            m: model.manifest.hyper_usize("m")?,
+            graph,
+            codes,
+            pos_edges,
+            seed,
+        })
+    }
+
+    /// Fan-out sample + code gather for one node set → three tensors
+    /// (shared contract with the classification batcher).
+    fn node_set_tensors(&self, targets: &[u32], rng: &mut Xoshiro256pp) -> Result<Vec<Tensor>> {
+        sage::coded_fanout_tensors(&self.graph, &self.codes, self.k1, self.k2, self.m, targets, rng)
+    }
+
+    fn train_batch(&self, step: u64) -> Result<Vec<Tensor>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(
+            self.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1),
+        );
+        let n = self.graph.n_nodes();
+        let mut us = Vec::with_capacity(self.batch);
+        let mut vs = Vec::with_capacity(self.batch);
+        let mut ws = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let (u, v) = self.pos_edges[rng.index(self.pos_edges.len())];
+            // Bounded rejection sampling: a full-degree hub (or a complete
+            // graph) must error instead of hanging the producer thread.
+            let mut neg = None;
+            for _ in 0..10_000 {
+                let w = rng.index(n);
+                if w != u as usize && !self.graph.has_edge(u as usize, w) {
+                    neg = Some(w as u32);
+                    break;
+                }
+            }
+            let w = neg.ok_or_else(|| {
+                Error::Config(format!("no non-edge negative found for node {u} (graph too dense)"))
+            })?;
+            us.push(u);
+            vs.push(v);
+            ws.push(w);
+        }
+        let mut tensors = self.node_set_tensors(&us, &mut rng)?;
+        tensors.extend(self.node_set_tensors(&vs, &mut rng)?);
+        tensors.extend(self.node_set_tensors(&ws, &mut rng)?);
+        Ok(tensors)
+    }
+}
+
+impl BatchSource for SageLinkBatcher {
+    fn next_batch(&mut self, step: u64) -> Vec<Tensor> {
+        self.train_batch(step).expect("link batch tensors")
+    }
+}
+
+/// Train the minibatch link model for `n_steps` (pipelined producer).
+pub fn train_sage_link(
+    model: &Model,
+    graph: Arc<Graph>,
+    codes: Arc<CodeTable>,
+    pos_edges: Arc<Vec<(u32, u32)>>,
+    n_steps: u64,
+    seed: u64,
+    log_every: u64,
+) -> Result<(ParamStore, TrainLog)> {
+    let batcher = SageLinkBatcher::new(graph, codes, pos_edges, model, seed)?;
+    let mut store = ParamStore::init(&model.manifest, seed);
+    let mut opts = TrainOpts::new(n_steps);
+    opts.log_every = log_every;
+    let log = train::train(model, &mut store, batcher, opts)?;
+    Ok((store, log))
+}
+
+/// Score `(u, v)` pairs through the minibatch encoder in fixed-size
+/// batches (padding by repeating the last pair).
+pub fn score_edges_mb(
+    model: &Model,
+    store: &ParamStore,
+    graph: &Arc<Graph>,
+    codes: &Arc<CodeTable>,
+    edges: &[(u32, u32)],
+    seed: u64,
+) -> Result<Vec<f32>> {
+    if edges.is_empty() {
+        return Ok(Vec::new());
+    }
+    let batcher = SageLinkBatcher::new(
+        graph.clone(),
+        codes.clone(),
+        Arc::new(edges.to_vec()),
+        model,
+        seed,
+    )?;
+    let b = batcher.batch;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(edges.len());
+    let mut start = 0usize;
+    while start < edges.len() {
+        let us: Vec<u32> =
+            (0..b).map(|i| edges[(start + i).min(edges.len() - 1)].0).collect();
+        let vs: Vec<u32> =
+            (0..b).map(|i| edges[(start + i).min(edges.len() - 1)].1).collect();
+        let mut tensors = batcher.node_set_tensors(&us, &mut rng)?;
+        tensors.extend(batcher.node_set_tensors(&vs, &mut rng)?);
+        let scores = train::predict(model, store, &tensors)?;
+        let vals = scores.as_f32()?;
+        let take = (edges.len() - start).min(b);
+        out.extend_from_slice(&vals[..take]);
+        start += b;
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +323,50 @@ mod tests {
     fn edge_tensor_pads() {
         let t = edges_tensor(&[(1, 2), (3, 4)], 4).unwrap();
         assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4, 3, 4, 3, 4]);
+    }
+
+    #[test]
+    fn link_batcher_shapes_and_determinism() {
+        use crate::codes::random_codes;
+        use crate::runtime::native::spec::SageMbBuild;
+
+        let manifest = SageMbBuild {
+            name: "link_t".into(),
+            coded: true,
+            link: true,
+            n: 120,
+            n_classes: 2,
+            d_e: 4,
+            hidden: 6,
+            batch: 8,
+            k1: 3,
+            k2: 2,
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            l: 2,
+            light: false,
+            optim: crate::cfg::OptimCfg::adamw_gnn(),
+        }
+        .manifest();
+        let model = Model::native(manifest, 1).unwrap();
+        let g = Arc::new(sbm(SbmCfg::new(120, 3, 8.0, 2.0), 2).unwrap());
+        let codes = Arc::new(random_codes(120, CodingCfg::new(4, 3).unwrap(), 5));
+        let edges = Arc::new(g.undirected_edges());
+        let mut batcher =
+            SageLinkBatcher::new(g.clone(), codes, edges, &model, 11).unwrap();
+        let b = batcher.train_batch(0).unwrap();
+        assert_eq!(b.len(), 9);
+        for set in 0..3 {
+            assert_eq!(b[set * 3].shape(), &[8, 3]);
+            assert_eq!(b[set * 3 + 1].shape(), &[8 * 3, 3]);
+            assert_eq!(b[set * 3 + 2].shape(), &[8 * 3 * 2, 3]);
+        }
+        let again = batcher.next_batch(0);
+        assert_eq!(b[0], again[0]);
+        assert_eq!(b[8], again[8]);
+        let different = batcher.next_batch(1);
+        assert_ne!(b[0], different[0]);
     }
 }

@@ -6,7 +6,9 @@
 //! graph is the synthetic bipartite analog (DESIGN.md §4) at the scale the
 //! `merchant` artifact was exported for, and the pipeline is identical:
 //! bit-packed codes from adjacency LSH → minibatch SAGE → acc / hit@k
-//! on the merchant test split.
+//! on the merchant test split. With no artifacts present the engine
+//! resolves `merchant` to the native backend's synthesized build at the
+//! same scale, so the whole §5.3 pipeline runs offline.
 
 use std::sync::Arc;
 

@@ -5,6 +5,11 @@
 //! Protocol (Appendix C.1): AdamW lr=0.01, train to a fixed epoch budget,
 //! evaluate every few epochs on the validation split and report the test
 //! metric from the best-validation epoch.
+//!
+//! The full-batch executables are the one family the native backend does
+//! not implement — [`run_fullbatch`] needs AOT HLO artifacts (build with
+//! `make artifacts` and the `xla` feature, or use the minibatch SAGE
+//! drivers in [`crate::tasks::sage`] which run on either backend).
 
 use crate::cfg::{CodingCfg, Coder, GnnKind};
 use crate::eval::accuracy_from_logits;

@@ -1,8 +1,13 @@
 //! Minibatch GraphSAGE pipeline (paper Section 4 / Figure 4): the
 //! industrial-scale path. Target nodes are sampled in batches, two-hop
 //! neighborhoods are fan-out sampled, codes are gathered from the
-//! bit-packed store, and the AOT train step runs — with batch production
-//! overlapped against PJRT execution by the [`crate::train`] pipeline.
+//! bit-packed store, and the train step runs — with batch production
+//! overlapped against execution by the [`crate::train`] pipeline.
+//!
+//! The whole driver is backend-agnostic: the [`Model`] may hold AOT
+//! HLO executables or the pure-Rust native backend
+//! ([`crate::runtime::native`]); batching, training and evaluation are
+//! identical on both.
 
 use std::sync::Arc;
 
@@ -60,26 +65,23 @@ impl SageBatcher {
     /// Node tensors for an explicit list of target nodes (used by eval).
     pub fn node_tensors(&self, targets: &[u32], rng: &mut Xoshiro256pp) -> Result<Vec<Tensor>> {
         assert_eq!(targets.len(), self.batch);
-        let sampler = NeighborSampler::new(&self.task.graph, self.k1, self.k2);
-        let sample = sampler.sample(targets, rng);
         match &self.task.features {
-            Features::Codes(table) => {
-                let mut buf = Vec::new();
-                let gather = |ids: &[u32], buf: &mut Vec<i32>, m: usize| -> Result<Tensor> {
-                    table.gather_int_codes(ids, buf);
-                    Tensor::i32(vec![ids.len(), m], buf.clone())
-                };
-                Ok(vec![
-                    gather(&sample.batch, &mut buf, self.m)?,
-                    gather(&sample.hop1, &mut buf, self.m)?,
-                    gather(&sample.hop2, &mut buf, self.m)?,
-                ])
+            Features::Codes(table) => coded_fanout_tensors(
+                &self.task.graph,
+                table,
+                self.k1,
+                self.k2,
+                self.m,
+                targets,
+                rng,
+            ),
+            Features::Ids => {
+                let sampler = NeighborSampler::new(&self.task.graph, self.k1, self.k2);
+                let sample = sampler.sample(targets, rng);
+                let ids =
+                    |v: &[u32]| Tensor::i32(vec![v.len()], v.iter().map(|&x| x as i32).collect());
+                Ok(vec![ids(&sample.batch)?, ids(&sample.hop1)?, ids(&sample.hop2)?])
             }
-            Features::Ids => Ok(vec![
-                Tensor::i32(vec![sample.batch.len()], sample.batch.iter().map(|&x| x as i32).collect())?,
-                Tensor::i32(vec![sample.hop1.len()], sample.hop1.iter().map(|&x| x as i32).collect())?,
-                Tensor::i32(vec![sample.hop2.len()], sample.hop2.iter().map(|&x| x as i32).collect())?,
-            ]),
         }
     }
 
@@ -102,6 +104,34 @@ impl BatchSource for SageBatcher {
     fn next_batch(&mut self, step: u64) -> Vec<Tensor> {
         self.train_batch(step)
     }
+}
+
+/// Fan-out sample `targets` and gather their integer codes — the three
+/// `(rows, m)` tensors one encoder application consumes. Shared by the
+/// classification batcher above and the link batcher in
+/// [`crate::tasks::linkpred`], so the fan-out tensor contract lives in
+/// one place.
+pub fn coded_fanout_tensors(
+    graph: &Graph,
+    codes: &CodeTable,
+    k1: usize,
+    k2: usize,
+    m: usize,
+    targets: &[u32],
+    rng: &mut Xoshiro256pp,
+) -> Result<Vec<Tensor>> {
+    let sampler = NeighborSampler::new(graph, k1, k2);
+    let sample = sampler.sample(targets, rng);
+    let mut buf = Vec::new();
+    let gather = |ids: &[u32], buf: &mut Vec<i32>| -> Result<Tensor> {
+        codes.gather_int_codes(ids, buf);
+        Tensor::i32(vec![ids.len(), m], buf.clone())
+    };
+    Ok(vec![
+        gather(&sample.batch, &mut buf)?,
+        gather(&sample.hop1, &mut buf)?,
+        gather(&sample.hop2, &mut buf)?,
+    ])
 }
 
 /// Evaluation metrics over a node set.

@@ -1,12 +1,20 @@
 //! Training coordinator: drives a train-step executable with a pipelined
-//! batch producer.
+//! batch producer. Backend-agnostic — the [`Model`]'s executables may be
+//! AOT-compiled HLO or the pure-Rust native engine.
 //!
 //! The producer (neighbor sampling, code gathering, negative-edge drawing —
 //! all pure rust) runs on its own thread and feeds a bounded channel; the
-//! consumer thread keeps the PJRT executable busy. This is the L3
-//! concurrency story: batch preparation overlaps device execution, the
-//! paper's "scalable training on industrial graphs" requirement
-//! (Section 4 / Figure 4 pipeline).
+//! consumer thread keeps the executable busy. This is the L3 concurrency
+//! story: batch preparation overlaps step execution, the paper's
+//! "scalable training on industrial graphs" requirement (Section 4 /
+//! Figure 4 pipeline).
+//!
+//! **Determinism:** sources seed per step index, so the batch for step
+//! `s` is the same whether produced ahead (pipelined) or on demand; the
+//! consumer applies steps strictly in channel order (a single-producer
+//! `sync_channel` preserves send order), so pipelined and serial runs
+//! produce bit-identical loss curves — asserted by the test suite on the
+//! native backend.
 
 use std::sync::mpsc;
 

@@ -1,11 +1,19 @@
-//! Integration: experiment drivers against real artifacts, scaled to
-//! test-suite budgets. Skips cleanly when artifacts are missing.
+//! Integration: experiment drivers end to end.
+//!
+//! The native-backend tests run unconditionally — they synthesize their
+//! models in pure Rust and exercise the §4/§5 pipelines with no artifacts
+//! on disk. The HLO variants (full-batch GNNs, exported executables) stay
+//! gated on `make artifacts` as before.
 
-use hashgnn::cfg::{Coder, CodingCfg, GnnKind};
+use std::sync::Arc;
+
+use hashgnn::cfg::{Coder, CodingCfg, GnnKind, OptimCfg};
 use hashgnn::embed::gaussian_mixture;
-use hashgnn::runtime::Engine;
+use hashgnn::runtime::native::spec::{ReconBuild, SageMbBuild};
+use hashgnn::runtime::{Engine, Model};
 use hashgnn::tasks::coding::{make_codes, Aux};
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+use hashgnn::tasks::sage::{self, Features, SageTask};
 use hashgnn::tasks::{linkpred, recon, T1Dataset};
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -20,6 +28,190 @@ macro_rules! require_artifacts {
         }
     };
 }
+
+// ---------------------------------------------------------------------------
+// Native backend — always runs (no artifacts required)
+// ---------------------------------------------------------------------------
+
+/// A CPU-budget §4 build over the Arxiv-analog graph (n = 1024).
+fn small_sage_build(coded: bool) -> SageMbBuild {
+    SageMbBuild {
+        name: "it_sage".into(),
+        coded,
+        link: false,
+        n: 1024,
+        n_classes: 8,
+        d_e: 16,
+        hidden: 16,
+        batch: 32,
+        k1: 3,
+        k2: 2,
+        c: 16,
+        m: 8,
+        d_c: 16,
+        d_m: 16,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+#[test]
+fn native_sage_pipeline_trains_end_to_end() {
+    // The §4 pipeline with zero artifacts: SBM graph → Algorithm-1 codes
+    // → minibatch SAGE through the full train::train pipeline (pipelined
+    // producer) with per-epoch validation, then held-out evaluation.
+    let build = small_sage_build(true);
+    let model = Model::native(build.manifest(), 0).unwrap();
+    assert_eq!(model.backend_name(), "native");
+    let g = Arc::new(T1Dataset::Arxiv.generate(11).unwrap());
+    let labels = Arc::new(g.labels().unwrap().to_vec());
+    let coding = CodingCfg::new(build.c, build.m).unwrap();
+    let codes = Arc::new(make_codes(&Aux::Graph(&g), Coder::Hash, coding, 5).unwrap());
+    let split = hashgnn::graph::split_nodes(1024, 0.7, 0.1, 3).unwrap();
+    let task = SageTask {
+        graph: g.clone(),
+        labels: labels.clone(),
+        features: Features::Codes(codes.clone()),
+        train_nodes: Arc::new(split.train.clone()),
+    };
+    let run = sage::train_sage(&model, task, 4, &split.val, 9, 0).unwrap();
+    assert!(run.losses.iter().all(|l| l.is_finite()));
+    let early: f32 = run.losses[..5.min(run.losses.len())].iter().sum::<f32>()
+        / 5.min(run.losses.len()) as f32;
+    let late = {
+        let log = hashgnn::train::TrainLog { losses: run.losses.clone() };
+        log.tail_mean(5)
+    };
+    assert!(late < early, "no training signal: {early} -> {late}");
+    assert!(late < 2.0, "CE stuck at chance (ln 8 ≈ 2.08): {late}");
+    // Held-out metrics with the best-validation parameters.
+    let batcher = sage::SageBatcher::new(
+        SageTask {
+            graph: g,
+            labels,
+            features: Features::Codes(codes),
+            train_nodes: Arc::new(split.train),
+        },
+        &model,
+        9,
+    )
+    .unwrap();
+    let test = sage::evaluate(&model, &run.store, &batcher, &split.test, 17).unwrap();
+    assert!((0.0..=1.0).contains(&test.accuracy));
+    assert!(test.accuracy > 0.15, "hash features should beat 8-class chance: {}", test.accuracy);
+}
+
+#[test]
+fn native_nc_baseline_trains_end_to_end() {
+    let build = small_sage_build(false);
+    let model = Model::native(build.manifest(), 0).unwrap();
+    let g = Arc::new(T1Dataset::Arxiv.generate(13).unwrap());
+    let labels = Arc::new(g.labels().unwrap().to_vec());
+    let split = hashgnn::graph::split_nodes(1024, 0.7, 0.1, 5).unwrap();
+    let task = SageTask {
+        graph: g,
+        labels,
+        features: Features::Ids,
+        train_nodes: Arc::new(split.train),
+    };
+    let run = sage::train_sage(&model, task, 3, &[], 21, 0).unwrap();
+    let early = run.losses[0];
+    let late = {
+        let log = hashgnn::train::TrainLog { losses: run.losses.clone() };
+        log.tail_mean(5)
+    };
+    assert!(late < early, "NC table should overfit quickly: {early} -> {late}");
+}
+
+#[test]
+fn native_linkpred_head_learns_to_rank_edges() {
+    let mut build = small_sage_build(true);
+    build.link = true;
+    build.batch = 16;
+    let model = Model::native(build.manifest(), 0).unwrap();
+    let g = Arc::new(T1Dataset::Collab.generate(7).unwrap());
+    let coding = CodingCfg::new(build.c, build.m).unwrap();
+    let codes = Arc::new(make_codes(&Aux::Graph(&g), Coder::Hash, coding, 5).unwrap());
+    let edges = Arc::new(g.undirected_edges());
+    let (store, log) =
+        linkpred::train_sage_link(&model, g.clone(), codes.clone(), edges.clone(), 40, 3, 0)
+            .unwrap();
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        log.tail_mean(5) < log.losses[0],
+        "BPR loss did not decrease: {} -> {}",
+        log.losses[0],
+        log.tail_mean(5)
+    );
+    // Training edges must outscore uniform non-edges on average.
+    let pos: Vec<(u32, u32)> = edges.iter().copied().take(64).collect();
+    let mut rng = hashgnn::rng::Xoshiro256pp::seed_from_u64(31);
+    use hashgnn::rng::Rng;
+    let mut neg = Vec::with_capacity(64);
+    while neg.len() < 64 {
+        let u = rng.index(1024);
+        let v = rng.index(1024);
+        if u != v && !g.has_edge(u, v) {
+            neg.push((u as u32, v as u32));
+        }
+    }
+    let pos_scores = linkpred::score_edges_mb(&model, &store, &g, &codes, &pos, 41).unwrap();
+    let neg_scores = linkpred::score_edges_mb(&model, &store, &g, &codes, &neg, 43).unwrap();
+    let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+    assert!(
+        mean(&pos_scores) > mean(&neg_scores),
+        "pos {} should outscore neg {}",
+        mean(&pos_scores),
+        mean(&neg_scores)
+    );
+}
+
+#[test]
+fn native_recon_hash_beats_random_on_clustered_embeddings() {
+    // The Figure-1 shape on the native backend: LSH codes over clustered
+    // embeddings must reconstruct better-separated clusters than random
+    // codes, measured by k-means NMI.
+    let build = ReconBuild {
+        name: "it_recon".into(),
+        c: 16,
+        m: 16,
+        d_c: 64,
+        d_m: 64,
+        d_e: 32,
+        l: 2,
+        light: false,
+        batch: 128,
+        optim: OptimCfg::adamw_default(),
+    };
+    let model = Model::native(build.manifest(), 0).unwrap();
+    let coding = CodingCfg::new(16, 16).unwrap();
+    let set = gaussian_mixture(1500, 32, 8, 0.25, 9);
+    let labels = set.labels.clone().unwrap();
+    let eval_k = 600;
+    let mut nmi = std::collections::HashMap::new();
+    for coder in [Coder::Random, Coder::Hash] {
+        let aux = match coder {
+            Coder::Random => Aux::None { n: set.n },
+            _ => Aux::Dense { data: &set.data, n: set.n, d: set.d },
+        };
+        let codes = make_codes(&aux, coder, coding, 5).unwrap();
+        let (store, _) = recon::train_decoder(&model, &codes, &set, 6, 3).unwrap();
+        let emb = recon::reconstruct(&model, &store, &codes, eval_k).unwrap();
+        let score = recon::clustering_nmi(&emb, eval_k, 32, &labels, 8, 1);
+        nmi.insert(coder.as_str(), score);
+    }
+    assert!(
+        nmi["hash"] > nmi["random"],
+        "hash {:.3} should beat random {:.3}",
+        nmi["hash"],
+        nmi["random"]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// HLO backend — gated on exported artifacts
+// ---------------------------------------------------------------------------
 
 #[test]
 fn recon_hash_beats_random_on_clustered_embeddings() {
