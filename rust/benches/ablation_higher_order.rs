@@ -115,7 +115,8 @@ fn run_gcn_with_codes(
     let n = graph.n_nodes();
     let k = model.manifest.hyper_usize("n_classes")?;
     let labels = graph.labels().expect("labels");
-    let adj = nodeclf::adj_tensor(graph, model.manifest.hyper_str("adj")?)?;
+    let native = model.backend_name() == "native";
+    let adj = nodeclf::adj_input(graph, model.manifest.hyper_str("adj")?, native)?;
     let ids: Vec<u32> = (0..n as u32).collect();
     let mut buf = Vec::new();
     codes.gather_int_codes(&ids, &mut buf);
@@ -127,13 +128,14 @@ fn run_gcn_with_codes(
     for &i in &split.train {
         mask[i as usize] = 1.0;
     }
-    let batch = vec![
-        codes_t.clone(),
-        adj.clone(),
-        Tensor::i32(vec![n], labels.iter().map(|&l| l as i32).collect())?,
-        Tensor::f32(vec![n], mask)?,
-    ];
-    let pred_batch = vec![codes_t, adj];
+    let mut batch = vec![codes_t.clone()];
+    match &adj {
+        nodeclf::AdjInput::Csr(a) => model.bind_adjacency(a.clone())?,
+        nodeclf::AdjInput::Dense(t) => batch.push(t.clone()),
+    }
+    let pred_batch = batch.clone();
+    batch.push(Tensor::i32(vec![n], labels.iter().map(|&l| l as i32).collect())?);
+    batch.push(Tensor::f32(vec![n], mask)?);
     let mut store = ParamStore::init(&model.manifest, opts.seed);
     let mut best = (f64::MIN, 0.0f64);
     for epoch in 0..opts.epochs {

@@ -1,23 +1,25 @@
 //! §Perf — native-backend train-step throughput.
 //!
 //! Sweeps batch size × thread count over a CPU-budget §4 minibatch-SAGE
-//! build (hash codes, decoder, CE head) and reports steps/s and ns/step.
-//! Also asserts the backend's determinism contract (bit-identical loss
-//! across thread counts) on every run, and emits machine-readable
-//! `BENCH_train_step.json` at the repo root.
+//! build (hash codes, decoder, CE head), plus the full-batch sparse path
+//! (GCN / GIN over CSR adjacency, node-count × thread sweep) so the SpMM
+//! propagation's scaling is tracked. Also asserts the backend's
+//! determinism contract (bit-identical loss across thread counts) on
+//! every run, and emits machine-readable `BENCH_train_step.json` at the
+//! repo root.
 
 mod bench_util;
 
 use std::sync::Arc;
 
 use bench_util::Samples;
-use hashgnn::cfg::{CodingCfg, OptimCfg};
+use hashgnn::cfg::{CodingCfg, GnnKind, OptimCfg};
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::lsh::{self, Threshold};
 use hashgnn::params::ParamStore;
 use hashgnn::report::Table;
-use hashgnn::runtime::native::spec::SageMbBuild;
-use hashgnn::runtime::Model;
+use hashgnn::runtime::native::spec::{FullBatchBuild, SageMbBuild};
+use hashgnn::runtime::{Model, Tensor};
 use hashgnn::ser::{self, Json};
 use hashgnn::tasks::sage::{Features, SageBatcher, SageTask};
 use hashgnn::train::{self, BatchSource};
@@ -123,6 +125,89 @@ fn main() -> hashgnn::Result<()> {
             }
         }
     }
+    // Full-batch sparse path: GCN + GIN step time, node-count × thread
+    // sweep (the whole step — decoder, CSR SpMM propagation, masked CE,
+    // backward, AdamW — with no dense n×n anywhere).
+    let mut tfb = Table::new(
+        "native full-batch train step over sparse CSR (steps/s)",
+        &["model", "nodes", "threads", "steps/s", "ns/step"],
+    );
+    let mut fb_rows: Vec<Json> = Vec::new();
+    let fb_nodes: Vec<usize> =
+        if bench_util::quick() { vec![500] } else { vec![1000, 4000] };
+    for kind in [GnnKind::Gcn, GnnKind::Gin] {
+        for &nn in &fb_nodes {
+            let build = FullBatchBuild {
+                name: format!("bench_fb_{}_{nn}", kind.as_str()),
+                gnn: kind,
+                coded: true,
+                link: false,
+                n: nn,
+                n_classes: 8,
+                d_e: 32,
+                hidden: 32,
+                c: 16,
+                m: 16,
+                d_c: 64,
+                d_m: 64,
+                l: 2,
+                light: false,
+                e_train: 256,
+                e_pred: 512,
+                optim: OptimCfg::adamw_gnn(),
+            };
+            let manifest = build.manifest();
+            let fg = sbm(SbmCfg::new(nn, 8, 12.0, 2.0), 5)?;
+            let fb_codes = lsh::encode(fg.adj(), CodingCfg::new(16, 16)?, Threshold::Median, 7)?;
+            let ids: Vec<u32> = (0..nn as u32).collect();
+            let mut buf = Vec::new();
+            fb_codes.gather_int_codes(&ids, &mut buf);
+            let batch = vec![
+                Tensor::i32(vec![nn, 16], buf)?,
+                Tensor::i32(vec![nn], fg.labels().unwrap().iter().map(|&l| l as i32).collect())?,
+                Tensor::f32(vec![nn], vec![1.0; nn])?,
+            ];
+            let adj = Arc::new(fg.adj().normalized(manifest.hyper_str("adj")?)?);
+            let mut reference: Option<Vec<u32>> = None;
+            for &threads in &thread_counts {
+                let model = Model::native(manifest.clone(), threads)?;
+                model.bind_adjacency(adj.clone())?;
+                let mut losses: Vec<f32> = Vec::new();
+                let s = Samples::collect(reps, || {
+                    let mut store = ParamStore::init(&model.manifest, 1);
+                    losses.clear();
+                    for _ in 0..steps {
+                        losses.push(train::run_step(&model, &mut store, &batch).expect("fb step"));
+                    }
+                });
+                let secs_per_step = s.median() / steps as f64;
+                tfb.row(vec![
+                    kind.as_str().into(),
+                    nn.to_string(),
+                    threads.to_string(),
+                    format!("{:.2}", 1.0 / secs_per_step),
+                    format!("{:.0}", secs_per_step * 1e9),
+                ]);
+                fb_rows.push(Json::obj(vec![
+                    ("model", Json::str(kind.as_str())),
+                    ("n_nodes", Json::num(nn as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("steps_per_s", Json::num(1.0 / secs_per_step)),
+                    ("ns_per_step", Json::num(secs_per_step * 1e9)),
+                ]));
+                let bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(r) => {
+                        if *r != bits {
+                            determinism_ok = false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     assert!(determinism_ok, "native train step diverged across thread counts");
     t.row(vec![
         "determinism (loss bits across thread counts)".into(),
@@ -131,6 +216,7 @@ fn main() -> hashgnn::Result<()> {
         "-".into(),
     ]);
     println!("{}", t.render());
+    println!("{}", tfb.render());
 
     let json = Json::obj(vec![
         ("bench", Json::str("train_step")),
@@ -141,6 +227,7 @@ fn main() -> hashgnn::Result<()> {
         ("available_parallelism", Json::num(avail as f64)),
         ("loss_bit_identical_across_threads", Json::Bool(determinism_ok)),
         ("rows", Json::Arr(rows)),
+        ("rows_fullbatch", Json::Arr(fb_rows)),
     ]);
     let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -19,22 +19,27 @@
 //!
 //! The runtime is a **backend dispatch**: the pure-Rust native engine
 //! ([`runtime::native`] — forward, hand-derived reverse-mode backward,
-//! fused AdamW, deterministic multi-threaded kernels) runs the full
-//! hash-embedding + GraphSAGE pipeline with zero artifacts, while the
-//! same models can execute as AOT-compiled JAX/Pallas HLO via PJRT when
-//! `make artifacts` has run and the `xla` feature is on. Layer 3 (this
-//! crate) owns the whole request/training path: graph substrates, code
-//! generation, batch pipelines, backend execution, parameter state,
-//! metrics, and the experiment drivers that regenerate every table and
-//! figure of the paper. Python/JAX is build-time only, and optional.
+//! fused AdamW, deterministic kernels on a process-wide worker pool) runs
+//! every model family with zero artifacts — the §4 minibatch
+//! hash-embedding + GraphSAGE pipeline *and* the full §5.2 Table-1 grid
+//! (full-batch GCN / SGC / GIN / SAGE, node classification and link
+//! prediction, propagating over **sparse CSR adjacency** bound via
+//! [`runtime::Model::bind_adjacency`] — no dense `n×n` tensor on the
+//! native path). The same models can execute as AOT-compiled JAX/Pallas
+//! HLO via PJRT when `make artifacts` has run and the `xla` feature is
+//! on. Layer 3 (this crate) owns the whole request/training path: graph
+//! substrates, code generation, batch pipelines, backend execution,
+//! parameter state, metrics, and the experiment drivers that regenerate
+//! every table and figure of the paper. Python/JAX is build-time only,
+//! and optional.
 //!
 //! ## Module map
 //!
 //! | layer | modules |
 //! |---|---|
-//! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`] (incl. [`cfg::BackendKind`]), [`sparse`] (SpMV + blocked SpMM), [`graph`], [`embed`] |
+//! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`] (incl. [`cfg::BackendKind`]), [`sparse`] (SpMV, blocked SpMM, row-major SpMM, transpose, sparse normalizations), [`graph`], [`embed`] |
 //! | paper core | [`lsh`] (Algorithm 1 + parallel encode engine), [`codes`] (compositional codes, word-packed bits) |
-//! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
+//! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine — [`runtime::native::layers`] shared blocks, [`runtime::native::sage`] minibatch encoder, [`runtime::native::gnn`] full-batch grid — + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
 //! | evaluation | [`eval`], [`tasks`], [`report`] |
 //! | dev        | [`testing`] (property-test harness) |
 

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   encode      generate a synthetic graph and produce compositional codes
-//!   train       end-to-end minibatch GraphSAGE training (coded or NC)
+//!   train       end-to-end GNN training — minibatch GraphSAGE (§4) or the
+//!               full-batch Table-1 grid (--model node_fb_{gcn,sgc,gin,sage},
+//!               link_fb_*), coded or NC
 //!   merchant    §5.3 merchant-category pipeline (Table 3)
 //!   collisions  Figure 3/6 median-vs-zero threshold experiment
 //!   memory      Tables 2/4/6 memory accounting
@@ -20,13 +22,14 @@
 
 use std::sync::Arc;
 
-use hashgnn::cfg::{BackendKind, Coder, CodingCfg, EncodeCfg};
+use hashgnn::cfg::{BackendKind, Coder, CodingCfg, EncodeCfg, GnnKind};
 use hashgnn::cli::Args;
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::report::{self, Table};
 use hashgnn::runtime::Engine;
-use hashgnn::tasks::{coding, collisions, memory, merchant, sage};
-use hashgnn::{embed, Result};
+use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+use hashgnn::tasks::{coding, collisions, linkpred, memory, merchant, sage, T1Dataset};
+use hashgnn::{embed, Error, Result};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -60,7 +63,8 @@ fn print_help() {
         "hashgnn — embedding compression with hashing for GNNs (KDD'22 reproduction)\n\n\
          commands:\n\
          \x20 encode      generate graph, run Algorithm 1, save/report codes\n\
-         \x20 train       end-to-end minibatch GraphSAGE training\n\
+         \x20 train       end-to-end GNN training (--model sage_mb |\n\
+         \x20             node_fb_{{gcn,sgc,gin,sage}} | link_fb_...)\n\
          \x20 merchant    merchant-category identification pipeline (§5.3)\n\
          \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
          \x20 memory      memory accounting tables (Tables 2/4/6)\n\
@@ -116,8 +120,13 @@ fn cmd_encode(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
-    let a = Args::new("hashgnn train", "end-to-end minibatch GraphSAGE node classification")
+    let a = Args::new("hashgnn train", "end-to-end GNN training (minibatch §4 or full-batch Table 1)")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt(
+            "model",
+            "sage_mb",
+            "sage_mb (minibatch §4) | node_fb_{gcn,sgc,gin,sage} | link_fb_{gcn,sgc,gin,sage} (full-batch grid; one step per epoch)",
+        )
         .opt("coder", "hash", "feature front-end: hash | random | nc")
         .opt("epochs", "5", "training epochs")
         .opt("seed", "7", "rng seed")
@@ -136,6 +145,15 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let backend = BackendKind::parse(&a.get("backend"))?;
     let engine =
         Engine::with_backend(a.get("artifacts"), backend, a.get_usize_auto("threads")?)?;
+    let model_name = a.get("model");
+    if model_name.starts_with("node_fb") || model_name.starts_with("link_fb") {
+        return cmd_train_fullbatch(&a, &engine, &model_name);
+    }
+    if model_name != "sage_mb" {
+        return Err(Error::Config(format!(
+            "unknown --model '{model_name}' (expected sage_mb | node_fb_<gnn> | link_fb_<gnn>)"
+        )));
+    }
     let coded = a.get("coder") != "nc";
     let name = if coded { "sage_mb_coded" } else { "sage_mb_nc" };
     let model = engine.load(name)?;
@@ -189,6 +207,66 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         test.accuracy,
         run.losses.last().copied().unwrap_or(f32::NAN)
     );
+    Ok(())
+}
+
+/// `hashgnn train --model node_fb_gin …`: one Table-1 cell on a synthetic
+/// OGB analog (n = 1024). Runs on either backend; the native path needs no
+/// artifacts and never allocates a dense adjacency.
+fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
+    // Accept bare "node_fb_gin" or full registry names "node_fb_gin_coded";
+    // an explicit _coded/_nc suffix wins over --coder.
+    let mut frontend = match a.get("coder").as_str() {
+        "nc" => Frontend::Nc,
+        "random" | "rand" | "alone" => Frontend::Rand,
+        _ => Frontend::Hash,
+    };
+    if model.ends_with("_nc") {
+        frontend = Frontend::Nc;
+    } else if model.ends_with("_coded") && frontend == Frontend::Nc {
+        frontend = Frontend::Hash;
+    }
+    let base = model.trim_end_matches("_coded").trim_end_matches("_nc");
+    let (link, gnn_s) = if let Some(r) = base.strip_prefix("node_fb_") {
+        (false, r)
+    } else if let Some(r) = base.strip_prefix("link_fb_") {
+        (true, r)
+    } else {
+        return Err(Error::Config(format!("malformed full-batch model name '{model}'")));
+    };
+    let gnn = GnnKind::parse(gnn_s)?;
+    let seed = a.get_u64("seed")?;
+    let epochs = a.get_usize("epochs")?.max(1);
+    let opts = RunOpts { epochs, eval_every: 5.min(epochs), seed };
+    if link {
+        let graph = T1Dataset::Collab.generate(seed)?;
+        eprintln!(
+            "[train] full-batch {} link prediction ({}, {} front-end), {} epochs ...",
+            gnn.as_str(),
+            T1Dataset::Collab.name(),
+            frontend.name(),
+            epochs
+        );
+        let out = linkpred::run_fullbatch(engine, gnn, frontend, &graph, 50, opts)?;
+        println!(
+            "val hits@50 {:.4} | test hits@50 {:.4} | final loss {:.4}",
+            out.val_hits, out.test_hits, out.final_loss
+        );
+    } else {
+        let graph = T1Dataset::Arxiv.generate(seed)?;
+        eprintln!(
+            "[train] full-batch {} node classification ({}, {} front-end), {} epochs ...",
+            gnn.as_str(),
+            T1Dataset::Arxiv.name(),
+            frontend.name(),
+            epochs
+        );
+        let out = nodeclf::run_fullbatch(engine, gnn, frontend, &graph, opts)?;
+        println!(
+            "val acc {:.4} | test acc {:.4} | final loss {:.4}",
+            out.val, out.test, out.final_loss
+        );
+    }
     Ok(())
 }
 

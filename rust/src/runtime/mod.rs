@@ -6,9 +6,11 @@
 //! - **Native** ([`native`]): the pure-Rust forward/backward/AdamW engine,
 //!   built directly from the [`Manifest`]/[`ParamSpec`] contract. Needs no
 //!   artifacts at all — names the Python exporter knows are synthesized by
-//!   [`native::spec::builtin`] at the same scales. This is the default
-//!   whenever HLO artifacts are absent, and the only path that works in
-//!   the offline build.
+//!   [`native::spec::builtin`] at the same scales (including the full
+//!   Table-1 grid `node_fb_*` / `link_fb_*`, whose adjacency is a sparse
+//!   CSR bound via [`Model::bind_adjacency`], never a dense `n×n`
+//!   tensor). This is the default whenever HLO artifacts are absent, and
+//!   the only path that works in the offline build.
 //! - **Hlo**: AOT-compiled HLO text executed on the CPU PJRT client. The
 //!   only code that touches the `xla` crate; without the default-off `xla`
 //!   feature, `xla` here is the in-crate stub ([`crate::xla`]) and
@@ -37,6 +39,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cfg::BackendKind;
+use crate::sparse::Csr;
 #[cfg(not(feature = "xla"))]
 use crate::xla;
 use crate::{Error, Result};
@@ -204,9 +207,13 @@ pub struct Model {
 
 impl Model {
     /// Build a native-backend model directly from a manifest (no engine,
-    /// no files) — the constructor tests and custom scales use.
+    /// no files) — the constructor tests and custom scales use. The stored
+    /// manifest is the native model's normalized copy (for full-batch
+    /// tasks, any dense `adj` input spec is stripped — the adjacency is
+    /// bound as a CSR via [`Model::bind_adjacency`] instead).
     pub fn native(manifest: Manifest, threads: usize) -> Result<Model> {
         let nm = Arc::new(native::NativeModel::from_manifest(&manifest)?);
+        let manifest = nm.manifest().clone();
         Ok(Model {
             train: Executable::Native(native::NativeExec::new(
                 nm.clone(),
@@ -216,6 +223,20 @@ impl Model {
             pred: Executable::Native(native::NativeExec::new(nm, native::Mode::Pred, threads)),
             manifest,
         })
+    }
+
+    /// Bind the (normalized) sparse adjacency for a native full-batch GNN
+    /// model; train and pred share the binding. Errors on the HLO backend,
+    /// whose executables take the adjacency as a dense input tensor.
+    pub fn bind_adjacency(&self, adj: Arc<Csr>) -> Result<()> {
+        match &self.train {
+            Executable::Native(e) => e.model().bind_adjacency(adj),
+            Executable::Hlo(_) => Err(Error::Runtime(
+                "the HLO backend takes a dense adj input tensor, not a CSR binding — \
+                 build the batch with tasks::nodeclf::adj_input"
+                    .into(),
+            )),
+        }
     }
 
     /// Backend of the train executable (`"hlo"` / `"native"`).
@@ -262,14 +283,19 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_rejects_unsupported_builtin() {
+    fn native_backend_synthesizes_every_registry_name() {
         let engine = Engine::with_backend("/nowhere", BackendKind::Native, 2).unwrap();
-        // Fullbatch artifacts are not in the native registry.
-        assert!(engine.load("node_fb_gcn_coded").is_err());
-        // But every registry name loads.
+        // The full-batch Table-1 grid is part of the registry since PR 3.
+        let fb = engine.load("node_fb_gcn_coded").unwrap();
+        assert_eq!(fb.backend_name(), "native");
+        // Native full-batch manifests carry no dense adj input.
+        assert!(fb.manifest.train_inputs.iter().all(|t| t.name != "adj"));
+        // Every registry name loads.
         for name in native::spec::builtin_names() {
             let model = engine.load(name).unwrap();
             assert_eq!(model.backend_name(), "native", "{name}");
         }
+        // Unknown names still fail cleanly.
+        assert!(engine.load("node_fb_gat_coded").is_err());
     }
 }

@@ -79,16 +79,17 @@ pub fn adamw_update(
         return;
     }
     let chunk = len.div_ceil(workers);
-    std::thread::scope(|s| {
-        let parts = p
-            .chunks_mut(chunk)
-            .zip(m.chunks_mut(chunk))
-            .zip(v.chunks_mut(chunk))
-            .zip(g.chunks(chunk));
-        for (((pc, mc), vc), gc) in parts {
-            s.spawn(move || update_chunk(pc, gc, mc, vc, bc1, bc2, h));
-        }
-    });
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = p
+        .chunks_mut(chunk)
+        .zip(m.chunks_mut(chunk))
+        .zip(v.chunks_mut(chunk))
+        .zip(g.chunks(chunk))
+        .map(|(((pc, mc), vc), gc)| {
+            Box::new(move || update_chunk(pc, gc, mc, vc, bc1, bc2, h))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    super::par::join_all(jobs);
 }
 
 #[cfg(test)]

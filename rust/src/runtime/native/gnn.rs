@@ -1,0 +1,626 @@
+//! Native full-batch GNN grid (paper §5.2 / Table 1): GCN, SGC, GIN and
+//! full-batch GraphSAGE over a **sparse CSR adjacency**, with the masked
+//! softmax-CE node-classification head and the dot-product/BCE
+//! link-prediction head. Mirrors `python/compile/gnn.py` layer for layer —
+//! but where the HLO executables consume a dense `(n, n)` adjacency
+//! tensor, this path propagates through [`Csr`] SpMM
+//! ([`super::layers::spmm_par`] over [`Csr::spmm_row_major`]), so memory
+//! and time scale with `nnz`, not `n²`.
+//!
+//! The adjacency is *bound*, not batched: the driver normalizes the graph
+//! once (`sym_norm` / `row_norm` / `raw` per the manifest) and hands the
+//! CSR to [`crate::runtime::Model::bind_adjacency`]; [`FbAdj`] keeps the
+//! structural transpose alongside, because every hand-derived backward
+//! needs `Aᵀ·dz` (`row_norm` is not symmetric).
+//!
+//! Determinism: all adjacency products partition output rows across
+//! threads with fixed-order per-element reductions; gradient accumulation
+//! (including the edge-scatter in the link head, which partitions
+//! *gradient* rows and scans edges in order) follows the [`super::ops`]
+//! rule, so training is bit-identical for every thread count.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::Arc;
+
+use crate::runtime::{Manifest, Tensor};
+use crate::sparse::Csr;
+use crate::{Error, Result};
+
+use super::decoder::find_param;
+use super::layers::{spmm_par, FeatCache, FeatSource, LinearIdx};
+use super::ops;
+use super::par::par_rows;
+
+/// Full-batch model dims.
+#[derive(Clone, Copy, Debug)]
+pub struct FbDims {
+    pub n: usize,
+    pub d_e: usize,
+    pub hidden: usize,
+}
+
+/// A bound adjacency: the (normalized) matrix plus its structural
+/// transpose for the reverse pass.
+pub struct FbAdj {
+    pub a: Arc<Csr>,
+    pub at: Arc<Csr>,
+}
+
+impl FbAdj {
+    pub fn new(a: Arc<Csr>) -> FbAdj {
+        let at = Arc::new(a.transpose());
+        FbAdj { a, at }
+    }
+}
+
+/// One GCN layer with self-loop propagation and a linear skip connection:
+/// `h' = relu(Â(h w) + h s + b)` (mirrors `gnn.py::gcn_apply`).
+#[derive(Clone, Copy, Debug)]
+pub struct GcnLayer {
+    pub w: usize,
+    pub s: usize,
+    pub b: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+/// One GIN layer `relu-MLP((1 + ε)·h + A·h)` with trainable scalar ε
+/// (mirrors `gnn.py::gin_apply`).
+#[derive(Clone, Copy, Debug)]
+pub struct GinLayer {
+    pub eps: usize,
+    pub a: LinearIdx,
+    pub b: LinearIdx,
+}
+
+/// Resolved parameter indices for one §5.2 architecture.
+pub enum FbGnn {
+    Gcn { l1: GcnLayer, l2: GcnLayer },
+    /// SGC (Wu et al. 2019): one linear map of `Â²x`, no nonlinearity.
+    Sgc { lin: LinearIdx },
+    Gin { l1: GinLayer, l2: GinLayer },
+    /// Full-batch GraphSAGE: `h' = relu(W·concat(h, Āh) + b)` twice.
+    Sage { l1: LinearIdx, l2: LinearIdx },
+}
+
+impl FbGnn {
+    /// Resolve (and shape-check) the `gnn.*` parameters for `kind`,
+    /// name-for-name against `python/compile/gnn.py`'s spec lists.
+    pub fn resolve(manifest: &Manifest, kind: &str, d: usize, h: usize) -> Result<Self> {
+        match kind {
+            "gcn" => Ok(FbGnn::Gcn {
+                l1: GcnLayer {
+                    w: find_param(manifest, "gnn.w1", &[d, h])?,
+                    s: find_param(manifest, "gnn.s1", &[d, h])?,
+                    b: find_param(manifest, "gnn.b1", &[h])?,
+                    d_in: d,
+                    d_out: h,
+                },
+                l2: GcnLayer {
+                    w: find_param(manifest, "gnn.w2", &[h, h])?,
+                    s: find_param(manifest, "gnn.s2", &[h, h])?,
+                    b: find_param(manifest, "gnn.b2", &[h])?,
+                    d_in: h,
+                    d_out: h,
+                },
+            }),
+            "sgc" => Ok(FbGnn::Sgc { lin: LinearIdx::resolve(manifest, "gnn.w", "gnn.b", d, h)? }),
+            "gin" => Ok(FbGnn::Gin {
+                l1: GinLayer {
+                    eps: find_param(manifest, "gnn.eps1", &[1])?,
+                    a: LinearIdx::resolve(manifest, "gnn.m1a.w", "gnn.m1a.b", d, h)?,
+                    b: LinearIdx::resolve(manifest, "gnn.m1b.w", "gnn.m1b.b", h, h)?,
+                },
+                l2: GinLayer {
+                    eps: find_param(manifest, "gnn.eps2", &[1])?,
+                    a: LinearIdx::resolve(manifest, "gnn.m2a.w", "gnn.m2a.b", h, h)?,
+                    b: LinearIdx::resolve(manifest, "gnn.m2b.w", "gnn.m2b.b", h, h)?,
+                },
+            }),
+            "sage" => Ok(FbGnn::Sage {
+                l1: LinearIdx::resolve(manifest, "gnn.w1", "gnn.b1", 2 * d, h)?,
+                l2: LinearIdx::resolve(manifest, "gnn.w2", "gnn.b2", 2 * h, h)?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown full-batch gnn '{other}' (expected gcn | sgc | gin | sage)"
+            ))),
+        }
+    }
+}
+
+/// Model-specific forward intermediates.
+enum GnnCache {
+    Gcn { h1: Vec<f32> },
+    Sgc { a2x: Vec<f32> },
+    Gin { z1: Vec<f32>, u1: Vec<f32>, h1: Vec<f32>, z2: Vec<f32>, u2: Vec<f32> },
+    Sage { cat1: Vec<f32>, h1: Vec<f32>, cat2: Vec<f32> },
+}
+
+/// Full-batch encoder forward cache.
+pub struct FbCache {
+    feat: FeatCache,
+    gnn: GnnCache,
+    /// Final node representations `(n, hidden)`.
+    pub h: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// Per-architecture layers
+// ---------------------------------------------------------------------------
+
+fn gcn_layer_fwd(
+    l: &GcnLayer,
+    params: &[&[f32]],
+    adj: &Csr,
+    x: &[f32],
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut xw = vec![0.0f32; n * l.d_out];
+    ops::matmul_fwd(x, params[l.w], n, l.d_in, l.d_out, &mut xw, threads);
+    let mut axw = vec![0.0f32; n * l.d_out];
+    spmm_par(adj, &xw, l.d_out, &mut axw, threads);
+    // z = (x s + b) + Â(x w), then ReLU — fixed summand order per element.
+    let mut z = vec![0.0f32; n * l.d_out];
+    ops::linear_fwd(x, params[l.s], params[l.b], n, l.d_in, l.d_out, false, &mut z, threads);
+    ops::add_assign(&mut z, &axw, threads);
+    ops::relu_inplace(&mut z, threads);
+    z
+}
+
+/// Reverse of [`gcn_layer_fwd`] for `dz` (gradient at the post-ReLU
+/// output); returns the gradient w.r.t. the layer input.
+fn gcn_layer_bwd(
+    l: &GcnLayer,
+    params: &[&[f32]],
+    adj_t: &Csr,
+    x: &[f32],
+    out_post: &[f32],
+    mut dz: Vec<f32>,
+    n: usize,
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Vec<f32> {
+    ops::relu_bwd_mask(&mut dz, out_post, threads);
+    if trainable[l.b] {
+        ops::grad_b(&dz, n, l.d_out, &mut grads[l.b]);
+    }
+    // Propagated branch: d(xw) = Âᵀ dz.
+    let mut dq = vec![0.0f32; n * l.d_out];
+    spmm_par(adj_t, &dz, l.d_out, &mut dq, threads);
+    if trainable[l.w] {
+        ops::grad_w(x, &dq, n, l.d_in, l.d_out, &mut grads[l.w], threads);
+    }
+    if trainable[l.s] {
+        ops::grad_w(x, &dz, n, l.d_in, l.d_out, &mut grads[l.s], threads);
+    }
+    let mut dx = vec![0.0f32; n * l.d_in];
+    ops::matmul_wt(&dq, params[l.w], n, l.d_in, l.d_out, false, &mut dx, threads);
+    ops::matmul_wt(&dz, params[l.s], n, l.d_in, l.d_out, true, &mut dx, threads);
+    dx
+}
+
+struct GinFwd {
+    z: Vec<f32>,
+    u: Vec<f32>,
+    out: Vec<f32>,
+}
+
+fn gin_layer_fwd(
+    l: &GinLayer,
+    params: &[&[f32]],
+    adj: &Csr,
+    h_in: &[f32],
+    n: usize,
+    threads: usize,
+) -> GinFwd {
+    let din = l.a.d_in;
+    let eps = params[l.eps][0];
+    let mut ah = vec![0.0f32; n * din];
+    spmm_par(adj, h_in, din, &mut ah, threads);
+    let mut z = vec![0.0f32; n * din];
+    ops::scale_add(h_in, 1.0 + eps, &ah, &mut z, threads);
+    let mut u = vec![0.0f32; n * l.a.d_out];
+    l.a.fwd(params, &z, n, true, &mut u, threads);
+    let mut out = vec![0.0f32; n * l.b.d_out];
+    l.b.fwd(params, &u, n, true, &mut out, threads);
+    GinFwd { z, u, out }
+}
+
+/// Reverse of [`gin_layer_fwd`]; returns the gradient w.r.t. `h_in`.
+fn gin_layer_bwd(
+    l: &GinLayer,
+    params: &[&[f32]],
+    adj_t: &Csr,
+    h_in: &[f32],
+    z: &[f32],
+    u: &[f32],
+    out_post: &[f32],
+    mut dout: Vec<f32>,
+    n: usize,
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Vec<f32> {
+    let din = l.a.d_in;
+    let eps = params[l.eps][0];
+    ops::relu_bwd_mask(&mut dout, out_post, threads);
+    let mut du = vec![0.0f32; n * l.b.d_in];
+    l.b.bwd(params, u, &dout, n, trainable, grads, Some(&mut du), false, threads);
+    ops::relu_bwd_mask(&mut du, u, threads);
+    let mut dz = vec![0.0f32; n * din];
+    l.a.bwd(params, z, &du, n, trainable, grads, Some(&mut dz), false, threads);
+    // z = (1 + ε) h + A h  ⇒  dε = ⟨dz, h⟩, dh = (1 + ε) dz + Aᵀ dz.
+    if trainable[l.eps] {
+        grads[l.eps][0] += ops::dot_all(&dz, h_in);
+    }
+    let mut adz = vec![0.0f32; n * din];
+    spmm_par(adj_t, &dz, din, &mut adz, threads);
+    let mut dh = vec![0.0f32; n * din];
+    ops::scale_add(&dz, 1.0 + eps, &adz, &mut dh, threads);
+    dh
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+/// Encode all `n` nodes to `(n, hidden)` over the bound sparse adjacency.
+/// `codes` is the all-node `(n, m)` codes tensor for the coded front-end,
+/// `None` for the NC table.
+pub fn encode_fwd(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    dims: &FbDims,
+    params: &[&[f32]],
+    adj: &Csr,
+    codes: Option<&Tensor>,
+    threads: usize,
+) -> Result<FbCache> {
+    let (n, d, h) = (dims.n, dims.d_e, dims.hidden);
+    if adj.n_rows() != n || adj.n_cols() != n {
+        return Err(Error::Shape(format!(
+            "bound adjacency is {}×{}, model wants {n}×{n}",
+            adj.n_rows(),
+            adj.n_cols()
+        )));
+    }
+    let feat_cache = feat.fwd_full(params, codes, n, threads)?;
+    let x = feat.output_full(&feat_cache, params);
+    let (gnn_cache, hfin) = match gnn {
+        FbGnn::Gcn { l1, l2 } => {
+            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads);
+            let h2 = gcn_layer_fwd(l2, params, adj, &h1, n, threads);
+            (GnnCache::Gcn { h1 }, h2)
+        }
+        FbGnn::Sgc { lin } => {
+            let mut ax = vec![0.0f32; n * d];
+            spmm_par(adj, x, d, &mut ax, threads);
+            let mut a2x = vec![0.0f32; n * d];
+            spmm_par(adj, &ax, d, &mut a2x, threads);
+            let mut out = vec![0.0f32; n * h];
+            lin.fwd(params, &a2x, n, false, &mut out, threads);
+            (GnnCache::Sgc { a2x }, out)
+        }
+        FbGnn::Gin { l1, l2 } => {
+            let f1 = gin_layer_fwd(l1, params, adj, x, n, threads);
+            let f2 = gin_layer_fwd(l2, params, adj, &f1.out, n, threads);
+            (
+                GnnCache::Gin { z1: f1.z, u1: f1.u, h1: f1.out, z2: f2.z, u2: f2.u },
+                f2.out,
+            )
+        }
+        FbGnn::Sage { l1, l2 } => {
+            let mut ax = vec![0.0f32; n * d];
+            spmm_par(adj, x, d, &mut ax, threads);
+            let mut cat1 = vec![0.0f32; n * 2 * d];
+            ops::scatter_cols(x, n, 2 * d, 0, d, &mut cat1, threads);
+            ops::scatter_cols(&ax, n, 2 * d, d, d, &mut cat1, threads);
+            let mut h1 = vec![0.0f32; n * h];
+            l1.fwd(params, &cat1, n, true, &mut h1, threads);
+            let mut ah1 = vec![0.0f32; n * h];
+            spmm_par(adj, &h1, h, &mut ah1, threads);
+            let mut cat2 = vec![0.0f32; n * 2 * h];
+            ops::scatter_cols(&h1, n, 2 * h, 0, h, &mut cat2, threads);
+            ops::scatter_cols(&ah1, n, 2 * h, h, h, &mut cat2, threads);
+            let mut h2 = vec![0.0f32; n * h];
+            l2.fwd(params, &cat2, n, true, &mut h2, threads);
+            (GnnCache::Sage { cat1, h1, cat2 }, h2)
+        }
+    };
+    Ok(FbCache { feat: feat_cache, gnn: gnn_cache, h: hfin })
+}
+
+/// Reverse pass of [`encode_fwd`] for `dh (n, hidden)`. Accumulates GNN
+/// and front-end parameter gradients into `grads`.
+pub fn encode_bwd(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    dims: &FbDims,
+    params: &[&[f32]],
+    adj_t: &Csr,
+    codes: Option<&Tensor>,
+    cache: &FbCache,
+    dh: Vec<f32>,
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<()> {
+    let (n, d, h) = (dims.n, dims.d_e, dims.hidden);
+    debug_assert_eq!(dh.len(), n * h);
+    let x = feat.output_full(&cache.feat, params);
+    let dx: Vec<f32> = match (gnn, &cache.gnn) {
+        (FbGnn::Gcn { l1, l2 }, GnnCache::Gcn { h1 }) => {
+            let dh1 =
+                gcn_layer_bwd(l2, params, adj_t, h1, &cache.h, dh, n, trainable, grads, threads);
+            gcn_layer_bwd(l1, params, adj_t, x, h1, dh1, n, trainable, grads, threads)
+        }
+        (FbGnn::Sgc { lin }, GnnCache::Sgc { a2x }) => {
+            let mut da2x = vec![0.0f32; n * d];
+            lin.bwd(params, a2x, &dh, n, trainable, grads, Some(&mut da2x), false, threads);
+            let mut dax = vec![0.0f32; n * d];
+            spmm_par(adj_t, &da2x, d, &mut dax, threads);
+            let mut dx = vec![0.0f32; n * d];
+            spmm_par(adj_t, &dax, d, &mut dx, threads);
+            dx
+        }
+        (FbGnn::Gin { l1, l2 }, GnnCache::Gin { z1, u1, h1, z2, u2 }) => {
+            let dh1 = gin_layer_bwd(
+                l2, params, adj_t, h1, z2, u2, &cache.h, dh, n, trainable, grads, threads,
+            );
+            gin_layer_bwd(l1, params, adj_t, x, z1, u1, h1, dh1, n, trainable, grads, threads)
+        }
+        (FbGnn::Sage { l1, l2 }, GnnCache::Sage { cat1, h1, cat2 }) => {
+            let mut dz2 = dh;
+            ops::relu_bwd_mask(&mut dz2, &cache.h, threads);
+            let mut dcat2 = vec![0.0f32; n * 2 * h];
+            l2.bwd(params, cat2, &dz2, n, trainable, grads, Some(&mut dcat2), false, threads);
+            // dh1 = dcat2[:, :h] + Âᵀ dcat2[:, h:].
+            let mut dh1 = vec![0.0f32; n * h];
+            ops::gather_cols(&dcat2, n, 2 * h, 0, h, false, &mut dh1, threads);
+            let mut dah1 = vec![0.0f32; n * h];
+            ops::gather_cols(&dcat2, n, 2 * h, h, h, false, &mut dah1, threads);
+            let mut tmp = vec![0.0f32; n * h];
+            spmm_par(adj_t, &dah1, h, &mut tmp, threads);
+            ops::add_assign(&mut dh1, &tmp, threads);
+            ops::relu_bwd_mask(&mut dh1, h1, threads);
+            let mut dcat1 = vec![0.0f32; n * 2 * d];
+            l1.bwd(params, cat1, &dh1, n, trainable, grads, Some(&mut dcat1), false, threads);
+            let mut dx = vec![0.0f32; n * d];
+            ops::gather_cols(&dcat1, n, 2 * d, 0, d, false, &mut dx, threads);
+            let mut dax = vec![0.0f32; n * d];
+            ops::gather_cols(&dcat1, n, 2 * d, d, d, false, &mut dax, threads);
+            let mut tmp = vec![0.0f32; n * d];
+            spmm_par(adj_t, &dax, d, &mut tmp, threads);
+            ops::add_assign(&mut dx, &tmp, threads);
+            dx
+        }
+        _ => return Err(Error::Runtime("full-batch cache/model mismatch".into())),
+    };
+    feat.bwd_full(params, codes, &cache.feat, &dx, trainable, grads, threads)
+}
+
+// ---------------------------------------------------------------------------
+// Edge kernels (link head)
+// ---------------------------------------------------------------------------
+
+/// Validate `(e, 2)` edge endpoints against the node count.
+pub(crate) fn validate_edges(edges: &[i32], n: usize) -> Result<()> {
+    for &v in edges {
+        if v < 0 || v as usize >= n {
+            return Err(Error::Shape(format!("edge endpoint {v} out of range [0, {n})")));
+        }
+    }
+    Ok(())
+}
+
+/// `out[e] = ⟨h[u_e], h[v_e]⟩` over `edges (e, 2)`.
+fn edge_dot(hmat: &[f32], edges: &[i32], d: usize, out: &mut [f32], threads: usize) {
+    debug_assert_eq!(edges.len(), out.len() * 2);
+    par_rows(out, 1, threads, |e0, part| {
+        for (i, o) in part.iter_mut().enumerate() {
+            let e = e0 + i;
+            let u = edges[2 * e] as usize;
+            let v = edges[2 * e + 1] as usize;
+            let hu = &hmat[u * d..(u + 1) * d];
+            let hv = &hmat[v * d..(v + 1) * d];
+            let mut acc = 0.0f32;
+            for (&a, &b) in hu.iter().zip(hv) {
+                acc += a * b;
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Backward of [`edge_dot`]: `dh[u_e] += g_e·h[v_e]`, `dh[v_e] += g_e·h[u_e]`.
+/// Threads partition the *gradient* rows; every worker scans all edges in
+/// ascending order and accumulates only endpoints in its range, so the
+/// per-element order is fixed for any thread count (no scatter races).
+fn edge_dot_bwd(
+    hmat: &[f32],
+    edges: &[i32],
+    dscore: &[f32],
+    d: usize,
+    dh: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(edges.len(), dscore.len() * 2);
+    par_rows(dh, d, threads, |row0, rows| {
+        let hi = row0 + rows.len() / d;
+        for (e, &g) in dscore.iter().enumerate() {
+            let u = edges[2 * e] as usize;
+            let v = edges[2 * e + 1] as usize;
+            if u >= row0 && u < hi {
+                let grow = &mut rows[(u - row0) * d..(u - row0 + 1) * d];
+                let hrow = &hmat[v * d..(v + 1) * d];
+                for (o, &hv) in grow.iter_mut().zip(hrow) {
+                    *o += g * hv;
+                }
+            }
+            if v >= row0 && v < hi {
+                let grow = &mut rows[(v - row0) * d..(v - row0 + 1) * d];
+                let hrow = &hmat[u * d..(u + 1) * d];
+                for (o, &hu) in grow.iter_mut().zip(hrow) {
+                    *o += g * hu;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Heads
+// ---------------------------------------------------------------------------
+
+/// Split a full-batch batch into its optional codes tensor and the rest.
+fn split_codes(coded: bool, batch: &[Tensor]) -> (Option<&Tensor>, &[Tensor]) {
+    if coded {
+        (Some(&batch[0]), &batch[1..])
+    } else {
+        (None, batch)
+    }
+}
+
+/// Train-step gradients for full-batch node classification
+/// (masked softmax CE over all `n` nodes). Batch: `codes?, labels, mask`.
+pub fn clf_grads(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    head: &LinearIdx,
+    n_classes: usize,
+    dims: &FbDims,
+    coded: bool,
+    params: &[&[f32]],
+    adj: &FbAdj,
+    batch: &[Tensor],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<f32> {
+    let (n, h) = (dims.n, dims.hidden);
+    let (codes, rest) = split_codes(coded, batch);
+    let labels = rest[0].as_i32()?;
+    let mask = rest[1].as_f32()?;
+    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads)?;
+    let mut logits = vec![0.0f32; n * n_classes];
+    head.fwd(params, &cache.h, n, false, &mut logits, threads);
+    let mut dlogits = vec![0.0f32; n * n_classes];
+    let loss = ops::masked_softmax_ce(&logits, labels, mask, n, n_classes, &mut dlogits, threads)?;
+    let mut dh = vec![0.0f32; n * h];
+    head.bwd(params, &cache.h, &dlogits, n, trainable, grads, Some(&mut dh), false, threads);
+    encode_bwd(feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads)?;
+    Ok(loss)
+}
+
+/// Prediction for full-batch node classification: logits `(n, n_classes)`.
+/// Batch: `codes?`.
+pub fn clf_pred(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    head: &LinearIdx,
+    n_classes: usize,
+    dims: &FbDims,
+    coded: bool,
+    params: &[&[f32]],
+    adj: &Csr,
+    batch: &[Tensor],
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let n = dims.n;
+    let (codes, _rest) = split_codes(coded, batch);
+    let cache = encode_fwd(feat, gnn, dims, params, adj, codes, threads)?;
+    let mut logits = vec![0.0f32; n * n_classes];
+    head.fwd(params, &cache.h, n, false, &mut logits, threads);
+    Ok(logits)
+}
+
+/// Train-step gradients for full-batch link prediction (dot-product
+/// scorer, BCE over positive/negative edge batches). Batch:
+/// `codes?, pos_edges (e, 2), neg_edges (e, 2)`.
+pub fn link_grads(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    dims: &FbDims,
+    coded: bool,
+    params: &[&[f32]],
+    adj: &FbAdj,
+    batch: &[Tensor],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<f32> {
+    let (n, h) = (dims.n, dims.hidden);
+    let (codes, rest) = split_codes(coded, batch);
+    let pos = rest[0].as_i32()?;
+    let neg = rest[1].as_i32()?;
+    validate_edges(pos, n)?;
+    validate_edges(neg, n)?;
+    let e = pos.len() / 2;
+    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads)?;
+    let mut pos_s = vec![0.0f32; e];
+    let mut neg_s = vec![0.0f32; e];
+    edge_dot(&cache.h, pos, h, &mut pos_s, threads);
+    edge_dot(&cache.h, neg, h, &mut neg_s, threads);
+    let mut dpos = vec![0.0f32; e];
+    let mut dneg = vec![0.0f32; e];
+    let loss = ops::bce_pair_loss(&pos_s, &neg_s, &mut dpos, &mut dneg);
+    let mut dh = vec![0.0f32; n * h];
+    // Fixed order: positive edges, then negative.
+    edge_dot_bwd(&cache.h, pos, &dpos, h, &mut dh, threads);
+    edge_dot_bwd(&cache.h, neg, &dneg, h, &mut dh, threads);
+    encode_bwd(feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads)?;
+    Ok(loss)
+}
+
+/// Prediction for full-batch link prediction: scores `(e,)` for an edge
+/// batch. Batch: `codes?, edges (e, 2)`.
+pub fn link_pred(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    dims: &FbDims,
+    coded: bool,
+    params: &[&[f32]],
+    adj: &Csr,
+    batch: &[Tensor],
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let (n, h) = (dims.n, dims.hidden);
+    let (codes, rest) = split_codes(coded, batch);
+    let edges = rest[0].as_i32()?;
+    validate_edges(edges, n)?;
+    let cache = encode_fwd(feat, gnn, dims, params, adj, codes, threads)?;
+    let mut scores = vec![0.0f32; edges.len() / 2];
+    edge_dot(&cache.h, edges, h, &mut scores, threads);
+    Ok(scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_dot_and_bwd_match_manual() {
+        // 3 nodes, d = 2; h = [[1,0],[0,2],[3,1]].
+        let h = vec![1.0, 0.0, 0.0, 2.0, 3.0, 1.0];
+        let edges = vec![0, 1, 1, 2, 0, 2];
+        let mut out = vec![0.0f32; 3];
+        edge_dot(&h, &edges, 2, &mut out, 2);
+        assert_eq!(out, vec![0.0, 2.0, 3.0]);
+        let dscore = vec![1.0f32, 0.5, 2.0];
+        let mut dh1 = vec![0.0f32; 6];
+        edge_dot_bwd(&h, &edges, &dscore, 2, &mut dh1, 1);
+        // node0: 1.0*h1 + 2.0*h2 = [0+6, 2+2] = [6, 4]
+        // node1: 1.0*h0 + 0.5*h2 = [1+1.5, 0+0.5] = [2.5, 0.5]
+        // node2: 0.5*h1 + 2.0*h0 = [0+2, 1+0] = [2, 1]
+        assert_eq!(dh1, vec![6.0, 4.0, 2.5, 0.5, 2.0, 1.0]);
+        // Thread invariance (bitwise).
+        let mut dh4 = vec![0.0f32; 6];
+        edge_dot_bwd(&h, &edges, &dscore, 2, &mut dh4, 4);
+        assert!(dh1.iter().zip(&dh4).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(validate_edges(&edges, 3).is_ok());
+        assert!(validate_edges(&[0, 3], 3).is_err());
+        assert!(validate_edges(&[-1, 0], 3).is_err());
+    }
+}

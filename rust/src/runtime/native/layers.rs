@@ -1,0 +1,348 @@
+//! Reusable layer blocks for the native backend — the machinery PR 2 kept
+//! inside `sage.rs`, extracted so the minibatch SAGE encoder and the
+//! full-batch GNN grid ([`super::gnn`]) compose the same pieces:
+//!
+//! - [`FeatSource`]: the feature front-end (§3.2 code-dependent decoder, or
+//!   an explicit `embed.table` for the NC baseline), in per-row-set form
+//!   (minibatch fan-out tensors) and whole-graph form (full batch);
+//! - [`LinearIdx`]: one resolved linear layer (`x @ w + b`, optional ReLU)
+//!   with its hand-derived backward;
+//! - [`spmm_par`]: deterministic parallel sparse propagation `A @ X` over
+//!   [`Csr`], threads partitioning output rows.
+//!
+//! Everything follows the determinism rule of [`super::ops`]: threads only
+//! partition output elements, reductions stay sequential per element.
+#![allow(clippy::too_many_arguments)]
+
+use crate::runtime::{Manifest, Tensor};
+use crate::sparse::Csr;
+use crate::{Error, Result};
+
+use super::decoder::{self, find_param, DecCache, DecoderDims, DecoderIdx};
+use super::ops;
+use super::par::par_rows;
+
+// ---------------------------------------------------------------------------
+// Feature front-end
+// ---------------------------------------------------------------------------
+
+/// Feature front-end: decoder over integer codes, or an explicit
+/// `embed.table` (the NC baseline).
+pub enum FeatSource {
+    Decoder { dims: DecoderDims, idx: DecoderIdx },
+    Table { idx: usize, n: usize, d: usize },
+}
+
+/// Per-node-set forward cache for the front-end.
+pub enum FeatCache {
+    Dec(DecCache),
+    /// Minibatch NC: gathered rows.
+    Table { x: Vec<f32> },
+    /// Full batch NC: the features *are* the table parameter — no copy.
+    Full,
+}
+
+impl FeatSource {
+    /// Resolve the coded front-end from manifest hyper-parameters.
+    pub fn resolve_decoder(manifest: &Manifest) -> Result<FeatSource> {
+        let dims = DecoderDims {
+            c: manifest.hyper_usize("c")?,
+            m: manifest.hyper_usize("m")?,
+            d_c: manifest.hyper_usize("d_c")?,
+            d_m: manifest.hyper_usize("d_m")?,
+            d_e: manifest.hyper_usize("d_e")?,
+            l: manifest.hyper_usize("l")?,
+            light: manifest.hyper_str("variant")? == "light",
+        };
+        let idx = DecoderIdx::resolve(manifest, &dims)?;
+        Ok(FeatSource::Decoder { dims, idx })
+    }
+
+    /// Resolve the NC front-end (`embed.table (n, d_e)`).
+    pub fn resolve_table(manifest: &Manifest) -> Result<FeatSource> {
+        let n = manifest.hyper_usize("n")?;
+        let d = manifest.hyper_usize("d_e")?;
+        let idx = find_param(manifest, "embed.table", &[n, d])?;
+        Ok(FeatSource::Table { idx, n, d })
+    }
+
+    /// Output embedding width.
+    pub fn d_out(&self) -> usize {
+        match self {
+            FeatSource::Decoder { dims, .. } => dims.d_e,
+            FeatSource::Table { d, .. } => *d,
+        }
+    }
+
+    /// Forward one node set (`t` is the codes `(rows, m)` or ids `(rows,)`
+    /// tensor); returns the cache whose [`Self::output`] is `(rows, d)`.
+    pub fn fwd(&self, params: &[&[f32]], t: &Tensor, threads: usize) -> Result<FeatCache> {
+        match self {
+            FeatSource::Decoder { dims, idx } => {
+                let codes = t.as_i32()?;
+                let rows = codes.len() / dims.m;
+                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, codes, rows, threads)?))
+            }
+            FeatSource::Table { idx, n, d } => {
+                let ids = t.as_i32()?;
+                ops::validate_ids(ids, *n)?;
+                let mut x = vec![0.0f32; ids.len() * d];
+                ops::table_gather(params[*idx], ids, *d, &mut x, threads);
+                Ok(FeatCache::Table { x })
+            }
+        }
+    }
+
+    pub fn output<'a>(&self, cache: &'a FeatCache) -> &'a [f32] {
+        match cache {
+            FeatCache::Dec(c) => c.output(),
+            FeatCache::Table { x } => x,
+            FeatCache::Full => panic!("full-graph cache has no owned output — use output_full"),
+        }
+    }
+
+    /// Backward one node set: accumulate front-end parameter gradients.
+    pub fn bwd(
+        &self,
+        params: &[&[f32]],
+        t: &Tensor,
+        cache: &FeatCache,
+        dx: &[f32],
+        trainable: &[bool],
+        grads: &mut [Vec<f32>],
+        threads: usize,
+    ) -> Result<()> {
+        match (self, cache) {
+            (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
+                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
+                Ok(())
+            }
+            (FeatSource::Table { idx, d, .. }, FeatCache::Table { .. }) => {
+                if trainable[*idx] {
+                    ops::table_scatter_grad(dx, t.as_i32()?, *d, &mut grads[*idx], threads);
+                }
+                Ok(())
+            }
+            _ => Err(Error::Runtime("feature cache/source mismatch".into())),
+        }
+    }
+
+    /// Forward the *whole graph*'s features (full-batch tasks): the coded
+    /// path decodes an all-node `(n, m)` codes tensor; the NC path uses
+    /// the table parameter directly, with no gather and no copy.
+    pub fn fwd_full(
+        &self,
+        params: &[&[f32]],
+        codes: Option<&Tensor>,
+        n: usize,
+        threads: usize,
+    ) -> Result<FeatCache> {
+        match self {
+            FeatSource::Decoder { dims, idx } => {
+                let t = codes.ok_or_else(|| {
+                    Error::Shape("coded full-batch front-end needs a codes tensor".into())
+                })?;
+                let c = t.as_i32()?;
+                if c.len() != n * dims.m {
+                    return Err(Error::Shape(format!(
+                        "full-batch codes: {} elements for n={n}, m={}",
+                        c.len(),
+                        dims.m
+                    )));
+                }
+                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, c, n, threads)?))
+            }
+            FeatSource::Table { n: nt, .. } => {
+                if codes.is_some() {
+                    return Err(Error::Shape("NC full-batch front-end takes no codes".into()));
+                }
+                if *nt != n {
+                    return Err(Error::Shape(format!("embed.table has {nt} rows, graph has {n}")));
+                }
+                Ok(FeatCache::Full)
+            }
+        }
+    }
+
+    /// Feature matrix `(n, d)` of a full-graph forward.
+    pub fn output_full<'a>(&self, cache: &'a FeatCache, params: &[&'a [f32]]) -> &'a [f32] {
+        match (self, cache) {
+            (FeatSource::Decoder { .. }, FeatCache::Dec(c)) => c.output(),
+            (FeatSource::Table { idx, .. }, FeatCache::Full) => params[*idx],
+            _ => panic!("full-graph feature cache/source mismatch"),
+        }
+    }
+
+    /// Backward of [`Self::fwd_full`]: accumulate front-end parameter
+    /// gradients for `dx (n, d)`.
+    pub fn bwd_full(
+        &self,
+        params: &[&[f32]],
+        codes: Option<&Tensor>,
+        cache: &FeatCache,
+        dx: &[f32],
+        trainable: &[bool],
+        grads: &mut [Vec<f32>],
+        threads: usize,
+    ) -> Result<()> {
+        match (self, cache) {
+            (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
+                let t = codes
+                    .ok_or_else(|| Error::Shape("coded full-batch backward needs codes".into()))?;
+                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
+                Ok(())
+            }
+            (FeatSource::Table { idx, .. }, FeatCache::Full) => {
+                if trainable[*idx] {
+                    ops::add_assign(&mut grads[*idx], dx, threads);
+                }
+                Ok(())
+            }
+            _ => Err(Error::Runtime("full-graph feature cache/source mismatch".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear layer block
+// ---------------------------------------------------------------------------
+
+/// One resolved linear layer: parameter indices plus dims. Forward is
+/// `x @ w + b` with optional fused ReLU; backward accumulates `dw`/`db`
+/// and optionally back-propagates `dx = dz @ wᵀ`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearIdx {
+    pub w: usize,
+    pub b: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl LinearIdx {
+    /// Resolve (and shape-check) `w (d_in, d_out)` / `b (d_out)` by name.
+    pub fn resolve(
+        manifest: &Manifest,
+        w_name: &str,
+        b_name: &str,
+        d_in: usize,
+        d_out: usize,
+    ) -> Result<Self> {
+        Ok(Self {
+            w: find_param(manifest, w_name, &[d_in, d_out])?,
+            b: find_param(manifest, b_name, &[d_out])?,
+            d_in,
+            d_out,
+        })
+    }
+
+    /// `out (n, d_out) = relu?(x @ w + b)`.
+    pub fn fwd(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        n: usize,
+        relu: bool,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        ops::linear_fwd(x, params[self.w], params[self.b], n, self.d_in, self.d_out, relu, out, threads);
+    }
+
+    /// Backward for `dz (n, d_out)` — the gradient at the layer's
+    /// *pre-activation* output (callers apply the ReLU mask first, as the
+    /// fused forward caches only the post-activation). Accumulates
+    /// `dw += xᵀ dz`, `db += Σ dz`, and writes (`accumulate_dx` ? `+=` :
+    /// `=`) `dx = dz @ wᵀ` when requested.
+    pub fn bwd(
+        &self,
+        params: &[&[f32]],
+        x: &[f32],
+        dz: &[f32],
+        n: usize,
+        trainable: &[bool],
+        grads: &mut [Vec<f32>],
+        dx: Option<&mut [f32]>,
+        accumulate_dx: bool,
+        threads: usize,
+    ) {
+        if trainable[self.w] {
+            ops::grad_w(x, dz, n, self.d_in, self.d_out, &mut grads[self.w], threads);
+        }
+        if trainable[self.b] {
+            ops::grad_b(dz, n, self.d_out, &mut grads[self.b]);
+        }
+        if let Some(dx) = dx {
+            ops::matmul_wt(dz, params[self.w], n, self.d_in, self.d_out, accumulate_dx, dx, threads);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse propagation
+// ---------------------------------------------------------------------------
+
+/// Deterministic parallel SpMM `out (n_rows, d) = adj @ x` with `x
+/// (n_cols, d)` row-major: threads partition output rows, each row's
+/// accumulation runs in ascending stored-column order via
+/// [`Csr::spmm_row_major`] — bit-identical for every thread count and to
+/// the PR 1 `spmm`/`spmm_block_rows` kernels.
+pub fn spmm_par(adj: &Csr, x: &[f32], d: usize, out: &mut [f32], threads: usize) {
+    debug_assert_eq!(x.len(), adj.n_cols() * d);
+    debug_assert_eq!(out.len(), adj.n_rows() * d);
+    par_rows(out, d, threads, |row0, rows| {
+        adj.spmm_row_major(row0..row0 + rows.len() / d, x, d, rows);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmm_par_thread_invariant_and_matches_serial() {
+        let a = Csr::from_edges(6, &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3), (0, 5)])
+            .unwrap()
+            .symmetrize()
+            .unwrap();
+        let d = 3usize;
+        let x: Vec<f32> = (0..6 * d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut base = vec![0.0f32; 6 * d];
+        a.spmm_row_major(0..6, &x, d, &mut base);
+        for threads in [1usize, 2, 4, 9] {
+            let mut out = vec![0.0f32; 6 * d];
+            spmm_par(&a, &x, d, &mut out, threads);
+            assert!(
+                out.iter().zip(&base).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_idx_resolves_against_manifest() {
+        let m = super::super::spec::SageMbBuild {
+            name: "t".into(),
+            coded: false,
+            link: false,
+            n: 10,
+            n_classes: 3,
+            d_e: 4,
+            hidden: 5,
+            batch: 2,
+            k1: 2,
+            k2: 2,
+            c: 4,
+            m: 3,
+            d_c: 4,
+            d_m: 6,
+            l: 2,
+            light: false,
+            optim: crate::cfg::OptimCfg::adamw_gnn(),
+        }
+        .manifest();
+        let head = LinearIdx::resolve(&m, "head.w", "head.b", 5, 3).unwrap();
+        assert_eq!(m.params[head.w].name, "head.w");
+        assert!(LinearIdx::resolve(&m, "head.w", "head.b", 5, 4).is_err());
+        assert!(LinearIdx::resolve(&m, "nope.w", "head.b", 5, 3).is_err());
+    }
+}

@@ -5,15 +5,20 @@
 //!
 //! Supported tasks (`hyper.task`):
 //!
-//! | task | model | train output |
+//! | task | model | adjacency |
 //! |---|---|---|
-//! | `recon` | §3.2 decoder, MSE vs pre-trained embeddings | `(params…, m…, v…, loss)` |
-//! | `sage_minibatch` | decoder/NC-table → 2-layer mean-agg GraphSAGE → softmax-CE head (§4) | same |
-//! | `sage_minibatch_link` | same encoder → dot-product/BPR link head | same |
+//! | `recon` | §3.2 decoder, MSE vs pre-trained embeddings | — |
+//! | `sage_minibatch` | decoder/NC-table → 2-layer mean-agg GraphSAGE → softmax-CE head (§4) | fan-out tensors |
+//! | `sage_minibatch_link` | same encoder → dot-product/BPR link head | fan-out tensors |
+//! | `nodeclf_fullbatch` | GCN / SGC / GIN / full-batch SAGE → masked-CE head (Table 1) | bound sparse CSR |
+//! | `linkpred_fullbatch` | same encoders → dot-product/BCE edge scorer | bound sparse CSR |
 //!
-//! Full-batch GNN tasks (`nodeclf_fullbatch`, `linkpred_fullbatch`) still
-//! require the HLO path; [`NativeModel::from_manifest`] rejects them with
-//! a clear error.
+//! The full-batch tasks ([`gnn`]) never see a dense `n×n` adjacency: the
+//! driver normalizes the graph once and hands the CSR to
+//! [`NativeModel::bind_adjacency`] (via
+//! [`crate::runtime::Model::bind_adjacency`]); any `adj` tensor spec an
+//! exported HLO manifest declares is stripped at load, so the same
+//! manifest runs on either backend.
 //!
 //! The train step consumes and produces exactly the tuple
 //! [`crate::params::ParamStore`] threads through every call —
@@ -24,32 +29,50 @@
 //! threads and keeps each reduction a fixed-order sequential sum (see
 //! [`ops`]); gradient contributions to shared parameters accumulate in
 //! fixed program order. Training is therefore bit-identical for every
-//! thread count, which the test suite asserts.
+//! thread count, which the test suite asserts. Kernels dispatch to one
+//! process-wide worker pool (the private `par` module) instead of
+//! spawning OS threads per call; the pool never changes the output
+//! partition, so pool size and scheduling cannot change results either.
 
 pub mod adam;
 pub mod decoder;
+pub mod gnn;
+pub mod layers;
 pub mod ops;
 mod par;
 pub mod sage;
 pub mod spec;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::runtime::{Manifest, Tensor, TensorSpec};
+use crate::sparse::Csr;
 use crate::{Error, Result};
 
 pub use adam::AdamHyper;
+use gnn::{FbAdj, FbDims, FbGnn};
+use layers::{FeatSource, LinearIdx};
 use par::resolve_threads;
-use sage::{FeatSource, HeadIdx, SageDims, SageIdx};
+use sage::{SageDims, SageIdx};
 
 /// Which model family a manifest describes.
 enum Task {
     /// §5.1 reconstruction decoder: `feat` must be the decoder.
     Recon { batch: usize, d_e: usize },
     /// §4 minibatch GraphSAGE + softmax-CE node head.
-    SageClf { sage: SageIdx, head: HeadIdx, n_classes: usize, dims: SageDims },
+    SageClf { sage: SageIdx, head: LinearIdx, n_classes: usize, dims: SageDims },
     /// §4 minibatch GraphSAGE + dot-product/BPR link head.
     SageLink { sage: SageIdx, dims: SageDims },
+    /// §5.2 full-batch GNN + masked-CE node head (Table 1 node rows).
+    FbClf { gnn: FbGnn, head: LinearIdx, n_classes: usize, dims: FbDims, coded: bool },
+    /// §5.2 full-batch GNN + dot-product/BCE link head (Table 1 link rows).
+    FbLink { gnn: FbGnn, dims: FbDims, coded: bool },
+}
+
+impl Task {
+    fn is_fullbatch(&self) -> bool {
+        matches!(self, Task::FbClf { .. } | Task::FbLink { .. })
+    }
 }
 
 /// A manifest compiled for the native backend: resolved parameter
@@ -60,12 +83,16 @@ pub struct NativeModel {
     feat: FeatSource,
     optim: AdamHyper,
     trainable: Vec<bool>,
+    /// Sparse adjacency for the full-batch tasks, bound once per model.
+    adj: OnceLock<FbAdj>,
 }
 
 impl NativeModel {
     /// Build from a manifest (exported by `python/compile/aot.py` or
     /// synthesized by [`spec`]). Validates every referenced parameter's
-    /// name and shape against the contract.
+    /// name and shape against the contract. For the full-batch tasks any
+    /// dense `adj` input spec is stripped (the native path takes the
+    /// adjacency as a bound CSR instead).
     pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
         let task_str = manifest.hyper_str("task")?;
         let (task, feat) = match task_str {
@@ -93,23 +120,53 @@ impl NativeModel {
                 let sage = SageIdx::resolve(manifest, dims.d_e, dims.hidden)?;
                 let task = if task_str == "sage_minibatch" {
                     let n_classes = manifest.hyper_usize("n_classes")?;
-                    let head = HeadIdx::resolve(manifest, dims.hidden, n_classes)?;
+                    let head =
+                        LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
                     Task::SageClf { sage, head, n_classes, dims }
                 } else {
                     Task::SageLink { sage, dims }
                 };
                 (task, feat)
             }
+            "nodeclf_fullbatch" | "linkpred_fullbatch" => {
+                let coded = manifest.hyper_bool("coded")?;
+                let feat = if coded {
+                    FeatSource::resolve_decoder(manifest)?
+                } else {
+                    FeatSource::resolve_table(manifest)?
+                };
+                let dims = FbDims {
+                    n: manifest.hyper_usize("n")?,
+                    d_e: manifest.hyper_usize("d_e")?,
+                    hidden: manifest.hyper_usize("hidden")?,
+                };
+                let gnn = FbGnn::resolve(manifest, manifest.hyper_str("gnn")?, dims.d_e, dims.hidden)?;
+                let task = if task_str == "nodeclf_fullbatch" {
+                    let n_classes = manifest.hyper_usize("n_classes")?;
+                    let head =
+                        LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
+                    Task::FbClf { gnn, head, n_classes, dims, coded }
+                } else {
+                    Task::FbLink { gnn, dims, coded }
+                };
+                (task, feat)
+            }
             other => {
                 return Err(Error::Runtime(format!(
-                    "native backend does not implement task '{other}' \
-                     (full-batch GNNs need the HLO path — `make artifacts` + the `xla` feature)"
+                    "native backend does not implement task '{other}'"
                 )))
             }
         };
         let optim = AdamHyper::from_json(manifest.hyper.get("optim")?)?;
         let trainable = manifest.params.iter().map(|p| p.trainable).collect();
-        Ok(Self { manifest: manifest.clone(), task, feat, optim, trainable })
+        let mut manifest = manifest.clone();
+        if task.is_fullbatch() {
+            // Exported HLO manifests declare a dense (n, n) adj input; the
+            // native path binds a CSR instead and must never allocate n².
+            manifest.train_inputs.retain(|t| t.name != "adj");
+            manifest.pred_inputs.retain(|t| t.name != "adj");
+        }
+        Ok(Self { manifest, task, feat, optim, trainable, adj: OnceLock::new() })
     }
 
     pub fn n_params(&self) -> usize {
@@ -118,6 +175,59 @@ impl NativeModel {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Bind the (already normalized) sparse adjacency for a full-batch
+    /// model. Must be called exactly once before train/predict; the
+    /// structural transpose for the backward pass is precomputed here.
+    pub fn bind_adjacency(&self, adj: Arc<Csr>) -> Result<()> {
+        let n = match &self.task {
+            Task::FbClf { dims, .. } | Task::FbLink { dims, .. } => dims.n,
+            _ => {
+                return Err(Error::Runtime(format!(
+                    "model '{}' is not a full-batch task — only nodeclf_fullbatch / \
+                     linkpred_fullbatch take a CSR adjacency",
+                    self.manifest.name
+                )))
+            }
+        };
+        if adj.n_rows() != n || adj.n_cols() != n {
+            return Err(Error::Shape(format!(
+                "adjacency is {}×{}, model '{}' wants {n}×{n}",
+                adj.n_rows(),
+                adj.n_cols(),
+                self.manifest.name
+            )));
+        }
+        // Rebinding the *same* matrix is a no-op, so drivers like
+        // `run_fullbatch_model` can reuse one loaded model across runs on
+        // one graph; a different matrix is rejected (load a fresh model).
+        if let Some(existing) = self.adj.get() {
+            if Arc::ptr_eq(&existing.a, &adj) || *existing.a == *adj {
+                return Ok(());
+            }
+            return Err(Error::Runtime(format!(
+                "model '{}' already has a different bound adjacency",
+                self.manifest.name
+            )));
+        }
+        self.adj.set(FbAdj::new(adj)).map_err(|_| {
+            Error::Runtime(format!(
+                "model '{}': concurrent adjacency binds raced — bind once before training",
+                self.manifest.name
+            ))
+        })
+    }
+
+    fn fb_adj(&self) -> Result<&FbAdj> {
+        self.adj.get().ok_or_else(|| {
+            Error::Runtime(format!(
+                "full-batch model '{}' has no adjacency bound — call \
+                 Model::bind_adjacency with the normalized graph CSR before train/predict \
+                 (the native path never materializes a dense n×n adjacency)",
+                self.manifest.name
+            ))
+        })
     }
 
     /// Loss and per-parameter gradients at `params` for one batch — the
@@ -152,6 +262,28 @@ impl NativeModel {
             Task::SageLink { sage, dims } => {
                 sage::link_pred(&self.feat, sage, dims, &slices, batch, threads)?
             }
+            Task::FbClf { gnn, head, n_classes, dims, coded } => gnn::clf_pred(
+                &self.feat,
+                gnn,
+                head,
+                *n_classes,
+                dims,
+                *coded,
+                &slices,
+                &self.fb_adj()?.a,
+                batch,
+                threads,
+            )?,
+            Task::FbLink { gnn, dims, coded } => gnn::link_pred(
+                &self.feat,
+                gnn,
+                dims,
+                *coded,
+                &slices,
+                &self.fb_adj()?.a,
+                batch,
+                threads,
+            )?,
         };
         Tensor::f32(out.shape.clone(), data)
     }
@@ -279,6 +411,32 @@ impl NativeModel {
                 &mut grads,
                 threads,
             )?,
+            Task::FbClf { gnn, head, n_classes, dims, coded } => gnn::clf_grads(
+                &self.feat,
+                gnn,
+                head,
+                *n_classes,
+                dims,
+                *coded,
+                params,
+                self.fb_adj()?,
+                batch,
+                &self.trainable,
+                &mut grads,
+                threads,
+            )?,
+            Task::FbLink { gnn, dims, coded } => gnn::link_grads(
+                &self.feat,
+                gnn,
+                dims,
+                *coded,
+                params,
+                self.fb_adj()?,
+                batch,
+                &self.trainable,
+                &mut grads,
+                threads,
+            )?,
         };
         if !loss.is_finite() {
             return Err(Error::Runtime(format!("native train step produced loss {loss}")));
@@ -335,6 +493,12 @@ pub struct NativeExec {
 impl NativeExec {
     pub fn new(model: Arc<NativeModel>, mode: Mode, threads: usize) -> Self {
         Self { model, mode, threads }
+    }
+
+    /// The shared model (train and pred executables hold the same one, so
+    /// binding an adjacency through either is visible to both).
+    pub fn model(&self) -> &Arc<NativeModel> {
+        &self.model
     }
 
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -398,13 +562,56 @@ mod tests {
     }
 
     #[test]
-    fn rejects_fullbatch_tasks_with_clear_error() {
+    fn rejects_unknown_tasks_with_clear_error() {
         let mut m = tiny_clf_manifest();
         if let crate::ser::Json::Obj(o) = &mut m.hyper {
-            o.insert("task".into(), crate::ser::Json::str("nodeclf_fullbatch"));
+            o.insert("task".into(), crate::ser::Json::str("transformer"));
         }
         let err = NativeModel::from_manifest(&m).unwrap_err();
-        assert!(format!("{err}").contains("HLO"), "{err}");
+        assert!(format!("{err}").contains("transformer"), "{err}");
+    }
+
+    #[test]
+    fn fullbatch_without_bound_adjacency_is_a_clear_error() {
+        let m = spec::FullBatchBuild {
+            name: "t_fb".into(),
+            gnn: crate::cfg::GnnKind::Sgc,
+            coded: false,
+            link: false,
+            n: 8,
+            n_classes: 2,
+            d_e: 3,
+            hidden: 4,
+            c: 4,
+            m: 2,
+            d_c: 3,
+            d_m: 3,
+            l: 2,
+            light: false,
+            e_train: 4,
+            e_pred: 4,
+            optim: crate::cfg::OptimCfg::adamw_gnn(),
+        }
+        .manifest();
+        let model = NativeModel::from_manifest(&m).unwrap();
+        let store = ParamStore::init(&m, 3);
+        // NC full-batch pred takes no batch tensors at all.
+        let err = model.predict(&store.params, &[], 1).unwrap_err();
+        assert!(format!("{err}").contains("bind_adjacency"), "{err}");
+        // Binding a wrong-sized CSR is rejected; a right-sized one works.
+        let small = Arc::new(crate::sparse::Csr::from_edges(3, &[(0, 1)]).unwrap());
+        assert!(model.bind_adjacency(small).is_err());
+        let adj = Arc::new(crate::sparse::Csr::from_edges(8, &[(0, 1), (1, 2)]).unwrap());
+        model.bind_adjacency(adj.clone()).unwrap();
+        assert!(model.predict(&store.params, &[], 1).is_ok());
+        // Rebinding the same matrix is a no-op; a different one is rejected.
+        assert!(model.bind_adjacency(adj).is_ok());
+        let other = Arc::new(crate::sparse::Csr::from_edges(8, &[(3, 4)]).unwrap());
+        assert!(model.bind_adjacency(other).is_err());
+        // Non-fullbatch models reject binding outright.
+        let mb = NativeModel::from_manifest(&tiny_clf_manifest()).unwrap();
+        let any = Arc::new(crate::sparse::Csr::from_edges(50, &[(0, 1)]).unwrap());
+        assert!(mb.bind_adjacency(any).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use crate::{Error, Result};
 
-use super::par::par_rows;
+use super::par::{join_all, par_rows};
 
 // ---------------------------------------------------------------------------
 // Linear layers
@@ -59,6 +59,89 @@ pub fn linear_fwd(
             }
         }
     });
+}
+
+/// `out[r] = x[r] @ w` — bias-free [`linear_fwd`] (the full-batch GCN's
+/// propagated branch `adj @ (x @ w)` wants the product alone).
+pub fn matmul_fwd(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), n * d_out);
+    par_rows(out, d_out, threads, |row0, rows| {
+        for (i, orow) in rows.chunks_mut(d_out).enumerate() {
+            let r = row0 + i;
+            orow.fill(0.0);
+            let xrow = &x[r * d_in..(r + 1) * d_in];
+            for (k, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+/// In-place ReLU: `x[i] = max(x[i], 0)`.
+pub fn relu_inplace(x: &mut [f32], threads: usize) {
+    if x.is_empty() {
+        return;
+    }
+    par_rows(x, 1, threads, |_row0, part| {
+        for v in part.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+/// Elementwise accumulate `dst[i] += src[i]`.
+pub fn add_assign(dst: &mut [f32], src: &[f32], threads: usize) {
+    debug_assert_eq!(dst.len(), src.len());
+    if dst.is_empty() {
+        return;
+    }
+    par_rows(dst, 1, threads, |row0, part| {
+        for (i, v) in part.iter_mut().enumerate() {
+            *v += src[row0 + i];
+        }
+    });
+}
+
+/// Elementwise `out[i] = c * x[i] + y[i]` (GIN's `(1 + ε)·h + A·h` and its
+/// backward mirror).
+pub fn scale_add(x: &[f32], c: f32, y: &[f32], out: &mut [f32], threads: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    if out.is_empty() {
+        return;
+    }
+    par_rows(out, 1, threads, |row0, part| {
+        for (i, v) in part.iter_mut().enumerate() {
+            let r = row0 + i;
+            *v = c * x[r] + y[r];
+        }
+    });
+}
+
+/// Full sequential dot product over two equal-length buffers (GIN's scalar
+/// `ε` gradient; single f32 accumulator in ascending index order).
+pub fn dot_all(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
 }
 
 /// In-place ReLU backward: `dy[i] = 0` wherever the *post*-activation
@@ -423,9 +506,10 @@ pub fn table_scatter_grad(
 // ---------------------------------------------------------------------------
 
 /// Softmax cross-entropy over `logits (n, c)` with integer `labels (n)`.
-/// Returns the mean loss and writes `dlogits = (softmax − onehot) / n`.
-/// Rows compute their own softmax in parallel; the loss reduction over
-/// rows is a single-threaded ascending sum.
+/// Returns the mean loss and writes `dlogits = (softmax − onehot) / n` —
+/// exactly [`masked_softmax_ce`] with an all-ones mask (`Σ mask = n` and
+/// `x · 1.0` are exact in f32, so the results are bit-identical to the
+/// dedicated kernel this used to be).
 pub fn softmax_ce(
     logits: &[f32],
     labels: &[i32],
@@ -434,22 +518,43 @@ pub fn softmax_ce(
     dlogits: &mut [f32],
     threads: usize,
 ) -> Result<f32> {
+    let ones = vec![1.0f32; n];
+    masked_softmax_ce(logits, labels, &ones, n, c, dlogits, threads)
+}
+
+/// Masked softmax cross-entropy (full-batch node classification, mirrors
+/// `python/compile/gnn.py::masked_cross_entropy`): mean NLL over the rows
+/// `mask` selects, `loss = Σ_r nll[r]·mask[r] / max(Σ_r mask[r], 1)`, with
+/// `dlogits[r] = (softmax(logits[r]) − onehot(labels[r])) · mask[r] / M`.
+/// Rows compute their own softmax in parallel; both reductions over rows
+/// are single-threaded ascending sums.
+pub fn masked_softmax_ce(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    n: usize,
+    c: usize,
+    dlogits: &mut [f32],
+    threads: usize,
+) -> Result<f32> {
     debug_assert_eq!(logits.len(), n * c);
     debug_assert_eq!(labels.len(), n);
+    debug_assert_eq!(mask.len(), n);
     debug_assert_eq!(dlogits.len(), n * c);
     if n == 0 {
-        return Err(Error::Shape("softmax_ce needs a non-empty batch".into()));
+        return Err(Error::Shape("masked_softmax_ce needs a non-empty batch".into()));
     }
     for &l in labels {
         if l < 0 || l as usize >= c {
             return Err(Error::Shape(format!("label {l} out of range [0, {c})")));
         }
     }
-    let inv = 1.0f32 / n as f32;
+    let mut msum = 0.0f32;
+    for &w in mask {
+        msum += w;
+    }
+    let inv = 1.0f32 / msum.max(1.0);
     let mut nll = vec![0.0f32; n];
-    // One pass: workers own matching row ranges of dlogits and nll
-    // (chunked on the same boundaries), so each row's softmax is computed
-    // once and both outputs are written together.
     let fill_rows = |row0: usize, drows: &mut [f32], nrows: &mut [f32]| {
         for (i, drow) in drows.chunks_mut(c).enumerate() {
             let r = row0 + i;
@@ -467,10 +572,11 @@ pub fn softmax_ce(
                 z += e;
             }
             let label = labels[r] as usize;
-            nrows[i] = z.ln() + mx - lrow[label];
+            nrows[i] = (z.ln() + mx - lrow[label]) * mask[r];
+            let scale = mask[r] * inv;
             for (j, d) in drow.iter_mut().enumerate() {
                 let p = *d / z;
-                *d = (p - if j == label { 1.0 } else { 0.0 }) * inv;
+                *d = (p - if j == label { 1.0 } else { 0.0 }) * scale;
             }
         }
     };
@@ -479,14 +585,17 @@ pub fn softmax_ce(
         fill_rows(0, dlogits, &mut nll);
     } else {
         let chunk = n.div_ceil(workers);
-        std::thread::scope(|s| {
-            let fill_rows = &fill_rows;
-            for (w, (drows, nrows)) in
-                dlogits.chunks_mut(chunk * c).zip(nll.chunks_mut(chunk)).enumerate()
-            {
-                s.spawn(move || fill_rows(w * chunk, drows, nrows));
-            }
-        });
+        let fill_rows = &fill_rows;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = dlogits
+            .chunks_mut(chunk * c)
+            .zip(nll.chunks_mut(chunk))
+            .enumerate()
+            .map(|(w, (drows, nrows))| {
+                Box::new(move || fill_rows(w * chunk, drows, nrows))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        join_all(jobs);
     }
     let mut loss = 0.0f32;
     for &v in &nll {
@@ -569,6 +678,27 @@ pub fn bpr_loss(pos: &[f32], neg: &[f32], dpos: &mut [f32], dneg: &mut [f32]) ->
         dneg[e] = -g;
     }
     loss * inv
+}
+
+/// BCE-with-logits over a positive/negative score pair (full-batch link
+/// prediction, mirrors `python/compile/gnn.py::bce_link_loss`):
+/// `loss = mean_e softplus(−pos[e]) + mean_e softplus(neg[e])`. Writes the
+/// score gradients. Single-threaded — `e` is an edge-batch size.
+pub fn bce_pair_loss(pos: &[f32], neg: &[f32], dpos: &mut [f32], dneg: &mut [f32]) -> f32 {
+    debug_assert_eq!(pos.len(), neg.len());
+    debug_assert_eq!(pos.len(), dpos.len());
+    debug_assert_eq!(pos.len(), dneg.len());
+    let n = pos.len();
+    let inv = 1.0f32 / n as f32;
+    let mut loss_pos = 0.0f32;
+    let mut loss_neg = 0.0f32;
+    for e in 0..n {
+        loss_pos += softplus(-pos[e]);
+        loss_neg += softplus(neg[e]);
+        dpos[e] = -sigmoid(-pos[e]) * inv;
+        dneg[e] = sigmoid(neg[e]) * inv;
+    }
+    loss_pos * inv + loss_neg * inv
 }
 
 #[cfg(test)]
@@ -719,6 +849,83 @@ mod tests {
         assert!((dp[0] + dn[0]).abs() < 1e-7);
         // Wrong-ordered pair pulls harder than the satisfied one.
         assert!(dp[1].abs() > dp[0].abs());
+    }
+
+    #[test]
+    fn matmul_fwd_is_biasless_linear() {
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = vec![0.0; 4];
+        matmul_fwd(&x, &w, 2, 3, 2, &mut out, 2);
+        assert_eq!(out, vec![4.0, 5.0, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn elementwise_helpers_match_manual() {
+        let mut x = vec![-1.0f32, 0.0, 2.0];
+        relu_inplace(&mut x, 2);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut dst = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut dst, &[0.5, -2.0, 1.0], 2);
+        assert_eq!(dst, vec![1.5, 0.0, 4.0]);
+        let mut out = vec![0.0f32; 3];
+        scale_add(&[1.0, 2.0, 3.0], 1.5, &[10.0, 20.0, 30.0], &mut out, 2);
+        assert_eq!(out, vec![11.5, 23.0, 34.5]);
+        assert_eq!(dot_all(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn masked_softmax_ce_respects_mask() {
+        // Uniform logits, 2 rows × 4 classes, only row 0 masked in.
+        let logits = vec![0.0f32; 8];
+        let labels = vec![1, 3];
+        let mask = vec![1.0f32, 0.0];
+        let mut d = vec![0.0f32; 8];
+        let loss = masked_softmax_ce(&logits, &labels, &mask, 2, 4, &mut d, 1).unwrap();
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6, "{loss}");
+        // Row 0 gradient = (1/4 - onehot) / 1; row 1 gradient = 0.
+        assert!((d[0] - 0.25).abs() < 1e-6);
+        assert!((d[1] + 0.75).abs() < 1e-6);
+        assert!(d[4..].iter().all(|&g| g == 0.0));
+        // All-zero mask: denominator clamps to 1, loss 0, grads 0.
+        let zero_mask = vec![0.0f32; 2];
+        let loss = masked_softmax_ce(&logits, &labels, &zero_mask, 2, 4, &mut d, 2).unwrap();
+        assert_eq!(loss, 0.0);
+        assert!(d.iter().all(|&g| g == 0.0));
+        assert!(masked_softmax_ce(&logits, &[4, 0], &mask, 2, 4, &mut d, 1).is_err());
+        // Thread invariance (bitwise).
+        let logits: Vec<f32> = (0..12).map(|i| (i as f32 * 0.7).sin()).collect();
+        let labels = vec![0, 2, 1];
+        let mask = vec![1.0, 0.0, 1.0];
+        let mut d1 = vec![0.0f32; 12];
+        let mut d7 = vec![0.0f32; 12];
+        let l1 = masked_softmax_ce(&logits, &labels, &mask, 3, 4, &mut d1, 1).unwrap();
+        let l7 = masked_softmax_ce(&logits, &labels, &mask, 3, 4, &mut d7, 7).unwrap();
+        assert_eq!(l1.to_bits(), l7.to_bits());
+        assert!(d1.iter().zip(&d7).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn bce_pair_loss_shape_and_grads() {
+        let pos = vec![2.0f32, -1.0];
+        let neg = vec![0.0f32, 1.0];
+        let mut dp = vec![0.0; 2];
+        let mut dn = vec![0.0; 2];
+        let loss = bce_pair_loss(&pos, &neg, &mut dp, &mut dn);
+        let expect = (softplus(-2.0) + softplus(1.0)) / 2.0 + (softplus(0.0) + softplus(1.0)) / 2.0;
+        assert!((loss - expect).abs() < 1e-6, "{loss} vs {expect}");
+        // Positive scores are pushed up (negative gradient), negatives down.
+        assert!(dp.iter().all(|&g| g < 0.0));
+        assert!(dn.iter().all(|&g| g > 0.0));
+        // Central finite difference on pos[1].
+        let eps = 1e-3f32;
+        let f = |p1: f32| -> f32 {
+            let mut a = vec![0.0; 2];
+            let mut b = vec![0.0; 2];
+            bce_pair_loss(&[2.0, p1], &neg, &mut a, &mut b)
+        };
+        let fd = (f(-1.0 + eps) - f(-1.0 - eps)) / (2.0 * eps);
+        assert!((fd - dp[1]).abs() < 1e-3, "fd {fd} vs {}", dp[1]);
     }
 
     #[test]

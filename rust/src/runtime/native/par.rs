@@ -1,12 +1,38 @@
-//! Deterministic scoped-thread helpers for the native backend.
+//! Deterministic parallel substrate for the native backend: one reusable
+//! worker pool instead of OS-thread spawns on every kernel call.
 //!
-//! Same zero-dependency style as the LSH encode engine: workers get
-//! disjoint `&mut` row views via `chunks_mut`, spawned with
-//! `std::thread::scope`. The determinism rule every kernel in
-//! [`super::ops`] follows: **threads only ever partition output
-//! elements** — each output element is produced by exactly one worker as
-//! a sequential reduction in a fixed order over the reduction axis — so
-//! results are bit-identical for every thread count.
+//! PR 2 spawned `std::thread::scope` threads inside every kernel; a train
+//! step makes dozens of kernel calls, so thread creation dominated small
+//! problems. The pool here is spawned once per process (lazily, sized to
+//! `available_parallelism() - 1` detached workers parked on channels) and
+//! every kernel dispatches borrowed closures to it via [`join_all`].
+//! Dispatch is lock-free — each call carries its own completion channel,
+//! so concurrent callers (e.g. parallel tests, multiple models) share the
+//! workers instead of serializing behind a dispatch mutex.
+//!
+//! The determinism rule every kernel in [`super::ops`] follows is
+//! unchanged: **threads only ever partition output elements** — each
+//! output element is produced by exactly one job as a sequential reduction
+//! in a fixed order over the reduction axis — and the partition depends
+//! only on the *requested* `threads` value, never on pool size or
+//! scheduling, so results are bit-identical for every thread count and on
+//! every machine.
+//!
+//! ## Safety model
+//!
+//! Jobs borrow the caller's stack (`&mut` output chunks, `&` inputs), so
+//! their lifetimes are erased before crossing the channel. This is sound
+//! because [`join_all`] does not return — and does not unwind — until
+//! every dispatched job has sent its completion on the call-local channel:
+//! the borrows outlive every use. A drop guard drains outstanding
+//! completions even if the locally run job panics, and worker panics are
+//! caught, forwarded, and re-raised on the calling thread after the
+//! barrier.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::OnceLock;
 
 /// Resolve a thread-count knob (`0` = all available parallelism).
 pub(crate) fn resolve_threads(threads: usize) -> usize {
@@ -17,9 +43,153 @@ pub(crate) fn resolve_threads(threads: usize) -> usize {
     }
 }
 
+/// One unit of work as it crosses a worker channel: the lifetime-erased
+/// closure plus the dispatching call's completion sender.
+struct Job {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    done: Sender<std::thread::Result<()>>,
+}
+
+struct Pool {
+    /// One channel per detached worker thread. `mpsc::Sender` is `Sync`
+    /// (T: Send), so dispatch needs no lock.
+    workers: Vec<Sender<Job>>,
+    /// Round-robin start offset so concurrent dispatchers spread across
+    /// workers instead of all queueing on worker 0. Purely a scheduling
+    /// hint — never affects results (jobs own disjoint outputs).
+    next: AtomicUsize,
+}
+
+thread_local! {
+    /// Set on pool workers so nested [`join_all`] calls run inline instead
+    /// of deadlocking on their own queue.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .saturating_sub(1);
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("hashgnn-pool-{w}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    while let Ok(job) = rx.recv() {
+                        let result = catch_unwind(AssertUnwindSafe(job.run));
+                        // A dropped receiver just means the dispatcher is
+                        // unwinding its drain guard; nothing to do.
+                        let _ = job.done.send(result);
+                    }
+                })
+                .expect("spawn hashgnn pool worker");
+            workers.push(tx);
+        }
+        Pool { workers, next: AtomicUsize::new(0) }
+    })
+}
+
+/// Waits for outstanding pool jobs even while unwinding, so borrows the
+/// jobs captured can never dangle.
+struct Drain<'a> {
+    rx: &'a Receiver<std::thread::Result<()>>,
+    outstanding: usize,
+}
+
+impl Drop for Drain<'_> {
+    fn drop(&mut self) {
+        while self.outstanding > 0 {
+            match self.rx.recv() {
+                Ok(_) => self.outstanding -= 1,
+                // All job-held senders dropped: every remaining job already
+                // finished (send happens strictly after the closure runs).
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Run a batch of borrowed closures: job 0 on the calling thread, the rest
+/// on the pool (round-robin from a rotating start, queued in order per
+/// worker). Blocks until all jobs finish; panics from any job are
+/// re-raised here afterwards. Called from a pool worker (nested
+/// parallelism) or with an empty pool, jobs run inline in order — same
+/// results either way, since jobs own disjoint outputs.
+pub(crate) fn join_all<'env>(jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 || IN_POOL_WORKER.with(|f| f.get()) {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    let pool = pool();
+    let n_workers = pool.workers.len();
+    if n_workers == 0 {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    let (done_tx, done_rx) = channel();
+    let start = pool.next.fetch_add(n - 1, Ordering::Relaxed);
+    let mut it = jobs.into_iter();
+    let local = it.next().expect("checked non-empty");
+    let mut drain = Drain { rx: &done_rx, outstanding: 0 };
+    for (k, job) in it.enumerate() {
+        // SAFETY: the job's completion is collected below (by the loop, or
+        // by `Drain::drop` on any unwind path) before this frame — and
+        // therefore every borrow the job captures — is left, so erasing
+        // the lifetime cannot let the job outlive its data.
+        let run: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        let job = Job { run, done: done_tx.clone() };
+        let w = start.wrapping_add(k) % n_workers;
+        pool.workers[w].send(job).expect("pool worker channel closed");
+        drain.outstanding += 1;
+    }
+    // Keep no spare sender: once every dispatched job has sent (or been
+    // dropped with its worker), recv() can only yield what we wait for.
+    drop(done_tx);
+    let local_result = catch_unwind(AssertUnwindSafe(local));
+    let mut worker_panic: Option<Box<dyn std::any::Any + Send>> = None;
+    while drain.outstanding > 0 {
+        match drain.rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(p)) => {
+                if worker_panic.is_none() {
+                    worker_panic = Some(p);
+                }
+            }
+            Err(_) => panic!("worker pool completion channel closed"),
+        }
+        drain.outstanding -= 1;
+    }
+    drop(drain);
+    if let Err(p) = local_result {
+        resume_unwind(p);
+    }
+    if let Some(p) = worker_panic {
+        resume_unwind(p);
+    }
+}
+
 /// Split `out` into contiguous row chunks (rows of `stride` elements) and
-/// run `f(first_row_index, chunk)` per chunk, on scoped threads when more
-/// than one chunk is produced. `threads` is the resolved worker count.
+/// run `f(first_row_index, chunk)` per chunk on the worker pool. `threads`
+/// is the resolved worker count; the chunking depends only on it, so
+/// output bits never depend on pool size or scheduling.
 pub(crate) fn par_rows(
     out: &mut [f32],
     stride: usize,
@@ -38,12 +208,13 @@ pub(crate) fn par_rows(
         return;
     }
     let chunk = n_rows.div_ceil(t);
-    std::thread::scope(|s| {
-        let f = &f;
-        for (i, part) in out.chunks_mut(chunk * stride).enumerate() {
-            s.spawn(move || f(i * chunk, part));
-        }
-    });
+    let f = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(chunk * stride)
+        .enumerate()
+        .map(|(i, part)| Box::new(move || f(i * chunk, part)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    join_all(jobs);
 }
 
 #[cfg(test)]
@@ -77,5 +248,70 @@ mod tests {
     fn par_rows_empty_is_noop() {
         let mut out: Vec<f32> = Vec::new();
         par_rows(&mut out, 4, 8, |_r, _c| panic!("must not be called"));
+    }
+
+    #[test]
+    fn join_all_runs_every_job_and_pool_is_reusable() {
+        // Many rounds on the same process-wide pool: no spawn-per-call, no
+        // cross-talk between dispatches (each owns its completion channel).
+        for round in 0..50usize {
+            let mut cells = vec![0usize; 9];
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = cells
+                .iter_mut()
+                .enumerate()
+                .map(|(i, c)| Box::new(move || *c = i + round) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            join_all(jobs);
+            for (i, &c) in cells.iter().enumerate() {
+                assert_eq!(c, i + round);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_the_pool() {
+        // Several threads dispatching simultaneously: every dispatch sees
+        // exactly its own completions (per-call channels, no lock).
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for round in 0..20usize {
+                        let mut out = vec![0.0f32; 12];
+                        par_rows(&mut out, 1, 4, |row0, part| {
+                            for (i, v) in part.iter_mut().enumerate() {
+                                *v = (t * 1000 + round + row0 + i) as f32;
+                            }
+                        });
+                        for (i, &v) in out.iter().enumerate() {
+                            assert_eq!(v, (t * 1000 + round + i) as f32);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 8];
+            par_rows(&mut out, 1, 4, |row0, _c| {
+                if row0 >= 4 {
+                    panic!("boom in worker");
+                }
+            });
+        });
+        assert!(caught.is_err(), "worker panic must reach the caller");
+        // The pool must still work afterwards.
+        let mut out = vec![0.0f32; 6];
+        par_rows(&mut out, 1, 3, |row0, part| {
+            for (i, v) in part.iter_mut().enumerate() {
+                *v = (row0 + i) as f32;
+            }
+        });
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
     }
 }

@@ -3,7 +3,10 @@
 //! produces, fed by either the code-dependent decoder (compressed path)
 //! or an explicit embedding table (NC baseline), with a softmax-CE node
 //! head and a dot-product/BPR link head. Mirrors
-//! `python/compile/gnn.py::sage_mb_apply` layer for layer.
+//! `python/compile/gnn.py::sage_mb_apply` layer for layer, composed from
+//! the shared [`super::layers`] blocks ([`FeatSource`] front-end,
+//! [`LinearIdx`] layers) that the full-batch grid ([`super::gnn`]) also
+//! uses.
 //!
 //! The backward pass is hand-derived and follows the determinism rule of
 //! [`super::ops`]; gradient accumulation into shared parameters (`gnn.w1`
@@ -14,107 +17,9 @@
 use crate::runtime::{Manifest, Tensor};
 use crate::{Error, Result};
 
-use super::decoder::{self, find_param, DecCache, DecoderDims, DecoderIdx};
+use super::layers::{FeatCache, FeatSource, LinearIdx};
 use super::ops;
 use super::par::par_rows;
-
-/// Feature front-end: decoder over integer codes, or id-gather from an
-/// explicit `embed.table` (the NC baseline).
-pub enum FeatSource {
-    Decoder { dims: DecoderDims, idx: DecoderIdx },
-    Table { idx: usize, n: usize, d: usize },
-}
-
-/// Per-node-set forward cache for the front-end.
-pub enum FeatCache {
-    Dec(DecCache),
-    Table { x: Vec<f32> },
-}
-
-impl FeatSource {
-    /// Resolve the coded front-end from manifest hyper-parameters.
-    pub fn resolve_decoder(manifest: &Manifest) -> Result<FeatSource> {
-        let dims = DecoderDims {
-            c: manifest.hyper_usize("c")?,
-            m: manifest.hyper_usize("m")?,
-            d_c: manifest.hyper_usize("d_c")?,
-            d_m: manifest.hyper_usize("d_m")?,
-            d_e: manifest.hyper_usize("d_e")?,
-            l: manifest.hyper_usize("l")?,
-            light: manifest.hyper_str("variant")? == "light",
-        };
-        let idx = DecoderIdx::resolve(manifest, &dims)?;
-        Ok(FeatSource::Decoder { dims, idx })
-    }
-
-    /// Resolve the NC front-end (`embed.table (n, d_e)`).
-    pub fn resolve_table(manifest: &Manifest) -> Result<FeatSource> {
-        let n = manifest.hyper_usize("n")?;
-        let d = manifest.hyper_usize("d_e")?;
-        let idx = find_param(manifest, "embed.table", &[n, d])?;
-        Ok(FeatSource::Table { idx, n, d })
-    }
-
-    /// Output embedding width.
-    pub fn d_out(&self) -> usize {
-        match self {
-            FeatSource::Decoder { dims, .. } => dims.d_e,
-            FeatSource::Table { d, .. } => *d,
-        }
-    }
-
-    /// Forward one node set (`t` is the codes `(rows, m)` or ids `(rows,)`
-    /// tensor); returns the cache whose [`Self::output`] is `(rows, d)`.
-    pub fn fwd(&self, params: &[&[f32]], t: &Tensor, threads: usize) -> Result<FeatCache> {
-        match self {
-            FeatSource::Decoder { dims, idx } => {
-                let codes = t.as_i32()?;
-                let rows = codes.len() / dims.m;
-                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, codes, rows, threads)?))
-            }
-            FeatSource::Table { idx, n, d } => {
-                let ids = t.as_i32()?;
-                ops::validate_ids(ids, *n)?;
-                let mut x = vec![0.0f32; ids.len() * d];
-                ops::table_gather(params[*idx], ids, *d, &mut x, threads);
-                Ok(FeatCache::Table { x })
-            }
-        }
-    }
-
-    pub fn output<'a>(&self, cache: &'a FeatCache) -> &'a [f32] {
-        match cache {
-            FeatCache::Dec(c) => c.output(),
-            FeatCache::Table { x } => x,
-        }
-    }
-
-    /// Backward one node set: accumulate front-end parameter gradients.
-    pub fn bwd(
-        &self,
-        params: &[&[f32]],
-        t: &Tensor,
-        cache: &FeatCache,
-        dx: &[f32],
-        trainable: &[bool],
-        grads: &mut [Vec<f32>],
-        threads: usize,
-    ) -> Result<()> {
-        match (self, cache) {
-            (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
-                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
-                Ok(())
-            }
-            (FeatSource::Table { idx, d, .. }, FeatCache::Table { .. }) => {
-                if trainable[*idx] {
-                    ops::table_scatter_grad(dx, t.as_i32()?, *d, &mut grads[*idx], threads);
-                }
-                Ok(())
-            }
-            _ => Err(Error::Runtime("feature cache/source mismatch".into())),
-        }
-    }
-}
 
 /// GraphSAGE encoder dims (one minibatch).
 #[derive(Clone, Copy, Debug)]
@@ -143,38 +48,18 @@ impl SageDims {
     }
 }
 
-/// Indices of the `gnn.*` parameters.
+/// The two SAGE layers (`gnn.w1/b1`, `gnn.w2/b2`) as linear blocks.
 #[derive(Clone, Copy, Debug)]
 pub struct SageIdx {
-    pub w1: usize,
-    pub b1: usize,
-    pub w2: usize,
-    pub b2: usize,
+    pub l1: LinearIdx,
+    pub l2: LinearIdx,
 }
 
 impl SageIdx {
     pub fn resolve(manifest: &Manifest, d_e: usize, hidden: usize) -> Result<Self> {
         Ok(Self {
-            w1: find_param(manifest, "gnn.w1", &[2 * d_e, hidden])?,
-            b1: find_param(manifest, "gnn.b1", &[hidden])?,
-            w2: find_param(manifest, "gnn.w2", &[2 * hidden, hidden])?,
-            b2: find_param(manifest, "gnn.b2", &[hidden])?,
-        })
-    }
-}
-
-/// Indices of the `head.*` parameters (classification head).
-#[derive(Clone, Copy, Debug)]
-pub struct HeadIdx {
-    pub w: usize,
-    pub b: usize,
-}
-
-impl HeadIdx {
-    pub fn resolve(manifest: &Manifest, hidden: usize, n_out: usize) -> Result<Self> {
-        Ok(Self {
-            w: find_param(manifest, "head.w", &[hidden, n_out])?,
-            b: find_param(manifest, "head.b", &[n_out])?,
+            l1: LinearIdx::resolve(manifest, "gnn.w1", "gnn.b1", 2 * d_e, hidden)?,
+            l2: LinearIdx::resolve(manifest, "gnn.w2", "gnn.b2", 2 * hidden, hidden)?,
         })
     }
 }
@@ -229,17 +114,7 @@ pub fn encode_fwd(
     ops::scatter_cols(xh1, b * k1, 2 * d, 0, d, &mut cat_h1, threads);
     ops::scatter_cols(&agg_h2, b * k1, 2 * d, d, d, &mut cat_h1, threads);
     let mut l1_h1 = vec![0.0f32; b * k1 * h];
-    ops::linear_fwd(
-        &cat_h1,
-        params[sage.w1],
-        params[sage.b1],
-        b * k1,
-        2 * d,
-        h,
-        true,
-        &mut l1_h1,
-        threads,
-    );
+    sage.l1.fwd(params, &cat_h1, b * k1, true, &mut l1_h1, threads);
 
     // Layer 1 on the targets (their neighbors are the hop-1 nodes).
     let mut agg_h1 = vec![0.0f32; b * d];
@@ -248,17 +123,7 @@ pub fn encode_fwd(
     ops::scatter_cols(xb, b, 2 * d, 0, d, &mut cat_b, threads);
     ops::scatter_cols(&agg_h1, b, 2 * d, d, d, &mut cat_b, threads);
     let mut l1_b = vec![0.0f32; b * h];
-    ops::linear_fwd(
-        &cat_b,
-        params[sage.w1],
-        params[sage.b1],
-        b,
-        2 * d,
-        h,
-        true,
-        &mut l1_b,
-        threads,
-    );
+    sage.l1.fwd(params, &cat_b, b, true, &mut l1_b, threads);
 
     // Layer 2: aggregate the layer-1 neighbor representations.
     let mut agg2 = vec![0.0f32; b * h];
@@ -267,7 +132,7 @@ pub fn encode_fwd(
     ops::scatter_cols(&l1_b, b, 2 * h, 0, h, &mut cat2, threads);
     ops::scatter_cols(&agg2, b, 2 * h, h, h, &mut cat2, threads);
     let mut hfin = vec![0.0f32; b * h];
-    ops::linear_fwd(&cat2, params[sage.w2], params[sage.b2], b, 2 * h, h, true, &mut hfin, threads);
+    sage.l2.fwd(params, &cat2, b, true, &mut hfin, threads);
 
     Ok(EncCache { fc_b, fc_h1, fc_h2, cat_h1, l1_h1, cat_b, l1_b, cat2, hfin })
 }
@@ -294,14 +159,8 @@ pub fn encode_bwd(
     // Layer 2.
     let mut dz2 = dh.to_vec();
     ops::relu_bwd_mask(&mut dz2, &cache.hfin, threads);
-    if trainable[sage.w2] {
-        ops::grad_w(&cache.cat2, &dz2, b, 2 * h, h, &mut grads[sage.w2], threads);
-    }
-    if trainable[sage.b2] {
-        ops::grad_b(&dz2, b, h, &mut grads[sage.b2]);
-    }
     let mut dcat2 = vec![0.0f32; b * 2 * h];
-    ops::matmul_wt(&dz2, params[sage.w2], b, 2 * h, h, false, &mut dcat2, threads);
+    sage.l2.bwd(params, &cache.cat2, &dz2, b, trainable, grads, Some(&mut dcat2), false, threads);
     let mut dl1_b = vec![0.0f32; b * h];
     ops::gather_cols(&dcat2, b, 2 * h, 0, h, false, &mut dl1_b, threads);
     let mut dagg2 = vec![0.0f32; b * h];
@@ -311,14 +170,8 @@ pub fn encode_bwd(
 
     // Layer 1, target application.
     ops::relu_bwd_mask(&mut dl1_b, &cache.l1_b, threads);
-    if trainable[sage.w1] {
-        ops::grad_w(&cache.cat_b, &dl1_b, b, 2 * d, h, &mut grads[sage.w1], threads);
-    }
-    if trainable[sage.b1] {
-        ops::grad_b(&dl1_b, b, h, &mut grads[sage.b1]);
-    }
     let mut dcat_b = vec![0.0f32; b * 2 * d];
-    ops::matmul_wt(&dl1_b, params[sage.w1], b, 2 * d, h, false, &mut dcat_b, threads);
+    sage.l1.bwd(params, &cache.cat_b, &dl1_b, b, trainable, grads, Some(&mut dcat_b), false, threads);
     let mut dxb = vec![0.0f32; b * d];
     ops::gather_cols(&dcat_b, b, 2 * d, 0, d, false, &mut dxb, threads);
     let mut dagg_h1 = vec![0.0f32; b * d];
@@ -328,14 +181,18 @@ pub fn encode_bwd(
 
     // Layer 1, hop-1 application (second contribution to w1/b1 and xh1).
     ops::relu_bwd_mask(&mut dl1_h1, &cache.l1_h1, threads);
-    if trainable[sage.w1] {
-        ops::grad_w(&cache.cat_h1, &dl1_h1, b * k1, 2 * d, h, &mut grads[sage.w1], threads);
-    }
-    if trainable[sage.b1] {
-        ops::grad_b(&dl1_h1, b * k1, h, &mut grads[sage.b1]);
-    }
     let mut dcat_h1 = vec![0.0f32; b * k1 * 2 * d];
-    ops::matmul_wt(&dl1_h1, params[sage.w1], b * k1, 2 * d, h, false, &mut dcat_h1, threads);
+    sage.l1.bwd(
+        params,
+        &cache.cat_h1,
+        &dl1_h1,
+        b * k1,
+        trainable,
+        grads,
+        Some(&mut dcat_h1),
+        false,
+        threads,
+    );
     ops::gather_cols(&dcat_h1, b * k1, 2 * d, 0, d, true, &mut dxh1, threads);
     let mut dagg_h2 = vec![0.0f32; b * k1 * d];
     ops::gather_cols(&dcat_h1, b * k1, 2 * d, d, d, false, &mut dagg_h2, threads);
@@ -354,7 +211,7 @@ pub fn encode_bwd(
 pub fn clf_grads(
     feat: &FeatSource,
     sage: &SageIdx,
-    head: &HeadIdx,
+    head: &LinearIdx,
     n_classes: usize,
     dims: &SageDims,
     params: &[&[f32]],
@@ -367,27 +224,11 @@ pub fn clf_grads(
     let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
     let labels = batch[3].as_i32()?;
     let mut logits = vec![0.0f32; b * n_classes];
-    ops::linear_fwd(
-        &cache.hfin,
-        params[head.w],
-        params[head.b],
-        b,
-        h,
-        n_classes,
-        false,
-        &mut logits,
-        threads,
-    );
+    head.fwd(params, &cache.hfin, b, false, &mut logits, threads);
     let mut dlogits = vec![0.0f32; b * n_classes];
     let loss = ops::softmax_ce(&logits, labels, b, n_classes, &mut dlogits, threads)?;
-    if trainable[head.w] {
-        ops::grad_w(&cache.hfin, &dlogits, b, h, n_classes, &mut grads[head.w], threads);
-    }
-    if trainable[head.b] {
-        ops::grad_b(&dlogits, b, n_classes, &mut grads[head.b]);
-    }
     let mut dh = vec![0.0f32; b * h];
-    ops::matmul_wt(&dlogits, params[head.w], b, h, n_classes, false, &mut dh, threads);
+    head.bwd(params, &cache.hfin, &dlogits, b, trainable, grads, Some(&mut dh), false, threads);
     encode_bwd(
         feat, sage, dims, params, &batch[0], &batch[1], &batch[2], &cache, &dh, trainable, grads,
         threads,
@@ -399,27 +240,17 @@ pub fn clf_grads(
 pub fn clf_pred(
     feat: &FeatSource,
     sage: &SageIdx,
-    head: &HeadIdx,
+    head: &LinearIdx,
     n_classes: usize,
     dims: &SageDims,
     params: &[&[f32]],
     batch: &[Tensor],
     threads: usize,
 ) -> Result<Vec<f32>> {
-    let (b, h) = (dims.batch, dims.hidden);
+    let b = dims.batch;
     let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
     let mut logits = vec![0.0f32; b * n_classes];
-    ops::linear_fwd(
-        &cache.hfin,
-        params[head.w],
-        params[head.b],
-        b,
-        h,
-        n_classes,
-        false,
-        &mut logits,
-        threads,
-    );
+    head.fwd(params, &cache.hfin, b, false, &mut logits, threads);
     Ok(logits)
 }
 

@@ -12,7 +12,7 @@
 //! scales the Python exporter uses, plus the native-only `sage_mb_link`
 //! (the §4 dot-product/BPR link head, which has no HLO counterpart).
 
-use crate::cfg::OptimCfg;
+use crate::cfg::{GnnKind, OptimCfg};
 use crate::runtime::{InitKind, Manifest, ParamSpec, TensorSpec};
 use crate::ser::Json;
 
@@ -70,6 +70,59 @@ pub fn sage_mb_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
         xavier("gnn.w2", vec![2 * hidden, hidden]),
         zeros("gnn.b2", vec![hidden]),
     ]
+}
+
+/// Full-batch GCN parameter list (mirrors `gnn.gcn_param_specs`):
+/// 2 layers of self-loop propagation + linear skip connection.
+pub fn gcn_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
+    vec![
+        xavier("gnn.w1", vec![d_in, hidden]),
+        xavier("gnn.s1", vec![d_in, hidden]),
+        zeros("gnn.b1", vec![hidden]),
+        xavier("gnn.w2", vec![hidden, hidden]),
+        xavier("gnn.s2", vec![hidden, hidden]),
+        zeros("gnn.b2", vec![hidden]),
+    ]
+}
+
+/// Full-batch SGC parameter list (mirrors `gnn.sgc_param_specs`): one
+/// linear map of `Â²x`.
+pub fn sgc_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
+    vec![xavier("gnn.w", vec![d_in, hidden]), zeros("gnn.b", vec![hidden])]
+}
+
+/// Full-batch GIN parameter list (mirrors `gnn.gin_param_specs`): 2 GIN
+/// layers, each a trainable ε plus a 2-layer MLP.
+pub fn gin_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
+    vec![
+        zeros("gnn.eps1", vec![1]),
+        xavier("gnn.m1a.w", vec![d_in, hidden]),
+        zeros("gnn.m1a.b", vec![hidden]),
+        xavier("gnn.m1b.w", vec![hidden, hidden]),
+        zeros("gnn.m1b.b", vec![hidden]),
+        zeros("gnn.eps2", vec![1]),
+        xavier("gnn.m2a.w", vec![hidden, hidden]),
+        zeros("gnn.m2a.b", vec![hidden]),
+        xavier("gnn.m2b.w", vec![hidden, hidden]),
+        zeros("gnn.m2b.b", vec![hidden]),
+    ]
+}
+
+/// Full-batch GraphSAGE parameter list (mirrors `gnn.sage_fb_param_specs`
+/// — same layout as the minibatch encoder).
+pub fn sage_fb_param_specs(d_in: usize, hidden: usize) -> Vec<ParamSpec> {
+    sage_mb_param_specs(d_in, hidden)
+}
+
+/// Specs plus the adjacency normalization each §5.2 architecture expects
+/// (mirrors `gnn.FULLBATCH`).
+fn fullbatch_gnn_specs(gnn: GnnKind, d_e: usize, hidden: usize) -> (Vec<ParamSpec>, &'static str) {
+    match gnn {
+        GnnKind::Gcn => (gcn_param_specs(d_e, hidden), "sym_norm"),
+        GnnKind::Sgc => (sgc_param_specs(d_e, hidden), "sym_norm"),
+        GnnKind::Gin => (gin_param_specs(d_e, hidden), "raw"),
+        GnnKind::Sage => (sage_fb_param_specs(d_e, hidden), "row_norm"),
+    }
 }
 
 /// Classification-head parameter list (mirrors `gnn.head_param_specs`).
@@ -223,6 +276,99 @@ impl SageMbBuild {
     }
 }
 
+/// One §5.2 full-batch build (Table-1 cell): GCN / SGC / GIN / SAGE over
+/// the whole graph, node classification or link prediction, coded or NC.
+///
+/// The synthesized manifest carries the same hyper keys
+/// `model.make_nodeclf_fullbatch` / `make_linkpred_fullbatch` record, but
+/// **no `adj` input tensor**: the native backend takes the adjacency as a
+/// sparse CSR bound via [`crate::runtime::Model::bind_adjacency`], so no
+/// dense `n×n` buffer ever exists on this path. (Exported HLO manifests
+/// that do declare `adj` have it stripped at native load.)
+#[derive(Clone, Debug)]
+pub struct FullBatchBuild {
+    pub name: String,
+    pub gnn: GnnKind,
+    pub coded: bool,
+    /// Dot-product/BCE link scorer instead of the masked-CE node head.
+    pub link: bool,
+    pub n: usize,
+    pub n_classes: usize,
+    pub d_e: usize,
+    pub hidden: usize,
+    pub c: usize,
+    pub m: usize,
+    pub d_c: usize,
+    pub d_m: usize,
+    pub l: usize,
+    pub light: bool,
+    pub e_train: usize,
+    pub e_pred: usize,
+    pub optim: OptimCfg,
+}
+
+impl FullBatchBuild {
+    pub fn manifest(&self) -> Manifest {
+        let (gnn_specs, adj_kind) = fullbatch_gnn_specs(self.gnn, self.d_e, self.hidden);
+        let task = if self.link { "linkpred_fullbatch" } else { "nodeclf_fullbatch" };
+        let mut hyper = vec![
+            ("task", Json::str(task)),
+            ("gnn", Json::str(self.gnn.as_str())),
+            ("adj", Json::str(adj_kind)),
+            ("coded", Json::Bool(self.coded)),
+            ("n", Json::num(self.n as f64)),
+            ("d_e", Json::num(self.d_e as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("c", Json::num(self.c as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("d_c", Json::num(self.d_c as f64)),
+            ("d_m", Json::num(self.d_m as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("variant", Json::str(if self.light { "light" } else { "full" })),
+            ("optim", self.optim.to_json()),
+        ];
+        if self.link {
+            hyper.push(("e_train", Json::num(self.e_train as f64)));
+            hyper.push(("e_pred", Json::num(self.e_pred as f64)));
+        } else {
+            hyper.push(("n_classes", Json::num(self.n_classes as f64)));
+        }
+        let mut params = if self.coded {
+            decoder_param_specs(self.c, self.m, self.d_c, self.d_m, self.d_e, self.l, self.light)
+        } else {
+            vec![embed_table_spec(self.n, self.d_e)]
+        };
+        params.extend(gnn_specs);
+        let code_in: Vec<TensorSpec> = if self.coded {
+            vec![tensor("codes", vec![self.n, self.m], "i32")]
+        } else {
+            Vec::new()
+        };
+        let (train_inputs, pred_inputs, pred_output) = if self.link {
+            let mut train = code_in.clone();
+            train.push(tensor("pos_edges", vec![self.e_train, 2], "i32"));
+            train.push(tensor("neg_edges", vec![self.e_train, 2], "i32"));
+            let mut pred = code_in;
+            pred.push(tensor("edges", vec![self.e_pred, 2], "i32"));
+            (train, pred, tensor("scores", vec![self.e_pred], "f32"))
+        } else {
+            params.extend(head_param_specs(self.hidden, self.n_classes));
+            let mut train = code_in.clone();
+            train.push(tensor("labels", vec![self.n], "i32"));
+            train.push(tensor("mask", vec![self.n], "f32"));
+            (train, code_in, tensor("logits", vec![self.n, self.n_classes], "f32"))
+        };
+        Manifest {
+            name: self.name.clone(),
+            params,
+            train_inputs,
+            pred_inputs,
+            pred_output,
+            hyper: Json::obj(hyper),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Built-in registry (scales mirror python/compile/aot.py)
 // ---------------------------------------------------------------------------
@@ -271,6 +417,51 @@ fn merchant_build() -> SageMbBuild {
     }
 }
 
+/// Table-1 scale (mirrors aot.py `T1`): n nodes per synthetic OGB analog,
+/// shared across datasets so one build set serves all of them.
+fn fb_build(gnn: GnnKind, coded: bool, link: bool) -> FullBatchBuild {
+    let prefix = if link { "link_fb" } else { "node_fb" };
+    let tag = if coded { "coded" } else { "nc" };
+    FullBatchBuild {
+        name: format!("{prefix}_{}_{tag}", gnn.as_str()),
+        gnn,
+        coded,
+        link,
+        n: 1024,
+        n_classes: 8,
+        d_e: 64,
+        hidden: 64,
+        c: 16,
+        m: 32,
+        d_c: 128,
+        d_m: 128,
+        l: 3,
+        light: false,
+        e_train: 512,
+        e_pred: 4096,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+/// Parse a `node_fb_{gnn}_{coded|nc}` / `link_fb_{gnn}_{coded|nc}` name.
+fn parse_fb_name(name: &str) -> Option<FullBatchBuild> {
+    let (link, rest) = if let Some(r) = name.strip_prefix("node_fb_") {
+        (false, r)
+    } else if let Some(r) = name.strip_prefix("link_fb_") {
+        (true, r)
+    } else {
+        return None;
+    };
+    let (gnn_s, tag) = rest.rsplit_once('_')?;
+    let coded = match tag {
+        "coded" => true,
+        "nc" => false,
+        _ => return None,
+    };
+    let gnn = GnnKind::parse(gnn_s).ok()?;
+    Some(fb_build(gnn, coded, link))
+}
+
 fn recon_build(name: &str, c: usize, m: usize, light: bool) -> ReconBuild {
     ReconBuild {
         name: name.to_string(),
@@ -298,11 +489,31 @@ pub fn builtin_names() -> &'static [&'static str] {
         "recon_c16_m32",
         "recon_c256_m16",
         "recon_light_c16_m32",
+        // §5.2 Table-1 full-batch grid: 4 GNNs × {node, link} × {coded, nc}.
+        "node_fb_gcn_coded",
+        "node_fb_gcn_nc",
+        "node_fb_sgc_coded",
+        "node_fb_sgc_nc",
+        "node_fb_gin_coded",
+        "node_fb_gin_nc",
+        "node_fb_sage_coded",
+        "node_fb_sage_nc",
+        "link_fb_gcn_coded",
+        "link_fb_gcn_nc",
+        "link_fb_sgc_coded",
+        "link_fb_sgc_nc",
+        "link_fb_gin_coded",
+        "link_fb_gin_nc",
+        "link_fb_sage_coded",
+        "link_fb_sage_nc",
     ]
 }
 
 /// Synthesize the manifest for a registry name (`None` if unknown).
 pub fn builtin(name: &str) -> Option<Manifest> {
+    if let Some(fb) = parse_fb_name(name) {
+        return Some(fb.manifest());
+    }
     match name {
         "sage_mb_coded" => Some(mb_build(name, true, false).manifest()),
         "sage_mb_nc" => Some(mb_build(name, false, false).manifest()),
@@ -369,9 +580,60 @@ mod tests {
         assert!(!light.params[0].trainable, "light variant freezes codebooks");
         assert_eq!(light.params[1].name, "dec.w0");
 
-        assert!(builtin("node_fb_gcn_coded").is_none());
         for name in builtin_names() {
             assert!(builtin(name).is_some(), "{name} must synthesize");
         }
+        assert!(builtin("node_fb_gat_coded").is_none(), "unknown gnn kinds stay unknown");
+        assert!(builtin("node_fb_gcn").is_none(), "tag is required");
+    }
+
+    #[test]
+    fn fullbatch_manifests_match_model_py_contract() {
+        // GIN node-clf, coded: decoder + gin + head params in model.py order.
+        let m = builtin("node_fb_gin_coded").unwrap();
+        assert_eq!(m.hyper_str("task").unwrap(), "nodeclf_fullbatch");
+        assert_eq!(m.hyper_str("gnn").unwrap(), "gin");
+        assert_eq!(m.hyper_str("adj").unwrap(), "raw");
+        assert!(m.hyper_bool("coded").unwrap());
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "dec.books", "dec.mlp0.w", "dec.mlp0.b", "dec.mlp1.w", "dec.mlp1.b",
+                "dec.mlp2.w", "dec.mlp2.b", "gnn.eps1", "gnn.m1a.w", "gnn.m1a.b",
+                "gnn.m1b.w", "gnn.m1b.b", "gnn.eps2", "gnn.m2a.w", "gnn.m2a.b",
+                "gnn.m2b.w", "gnn.m2b.b", "head.w", "head.b"
+            ]
+        );
+        // Native manifests never declare a dense adj input.
+        let train_names: Vec<&str> = m.train_inputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(train_names, vec!["codes", "labels", "mask"]);
+        assert_eq!(m.train_inputs[0].shape, vec![1024, 32]);
+        assert_eq!(m.pred_output.shape, vec![1024, 8]);
+        assert_eq!(m.pred_inputs.len(), 1);
+
+        // GCN has the skip-connection params.
+        let gcn = builtin("node_fb_gcn_nc").unwrap();
+        assert_eq!(gcn.hyper_str("adj").unwrap(), "sym_norm");
+        assert_eq!(gcn.params[0].name, "embed.table");
+        assert_eq!(gcn.params[0].shape, vec![1024, 64]);
+        assert!(gcn.params.iter().any(|p| p.name == "gnn.s1"));
+        assert!(gcn.pred_inputs.is_empty(), "nc pred needs no batch tensors");
+
+        // Link builds: edge tensors, no head, e_pred-shaped scores.
+        let link = builtin("link_fb_sage_nc").unwrap();
+        assert_eq!(link.hyper_str("task").unwrap(), "linkpred_fullbatch");
+        assert_eq!(link.hyper_str("adj").unwrap(), "row_norm");
+        assert_eq!(link.hyper_usize("e_train").unwrap(), 512);
+        let train_names: Vec<&str> = link.train_inputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(train_names, vec!["pos_edges", "neg_edges"]);
+        assert_eq!(link.train_inputs[0].shape, vec![512, 2]);
+        assert_eq!(link.pred_output.shape, vec![4096]);
+        assert!(!link.params.iter().any(|p| p.name.starts_with("head.")));
+
+        // SGC is two params + head.
+        let sgc = builtin("node_fb_sgc_coded").unwrap();
+        assert!(sgc.params.iter().any(|p| p.name == "gnn.w"));
+        assert_eq!(sgc.params.iter().filter(|p| p.name.starts_with("gnn.")).count(), 2);
     }
 }

@@ -212,6 +212,145 @@ impl Csr {
         self.spmm_block_rows(0..self.n_rows, &vt, n_vecs, &mut outs);
     }
 
+    /// Sparse matrix × dense row-major matrix over a row range:
+    /// `out[(r - rows.start) * d + j] = dot(A[r,:], x[:, j])` with
+    /// `x (n_cols, d)` row-major. The per-element accumulation (ascending
+    /// stored-column order, one f32 accumulator) is identical to
+    /// [`Self::row_dot`] / [`Self::spmm_block_rows`], so results are
+    /// bit-identical to the per-vector path — this is the full-batch GNN
+    /// propagation kernel, shaped so callers can partition output rows
+    /// across threads under the determinism rule.
+    pub fn spmm_row_major(
+        &self,
+        rows: std::ops::Range<usize>,
+        x: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        assert!(rows.end <= self.n_rows, "spmm_row_major: row range out of bounds");
+        assert_eq!(x.len(), self.n_cols * d, "spmm_row_major: x length");
+        assert_eq!(out.len(), (rows.end - rows.start) * d, "spmm_row_major: out length");
+        let row0 = rows.start;
+        for r in rows {
+            let orow = &mut out[(r - row0) * d..(r - row0 + 1) * d];
+            orow.fill(0.0);
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                let a = val[k];
+                let xrow = &x[idx[k] as usize * d..][..d];
+                for (o, &v) in orow.iter_mut().zip(xrow) {
+                    *o += a * v;
+                }
+            }
+        }
+    }
+
+    /// Structural transpose `Aᵀ` (O(nnz) counting pass; columns of each
+    /// output row come out ascending). The full-batch GNN backward passes
+    /// need `Aᵀ·dz` for the non-symmetric normalizations (`row_norm`).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut next = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        for r in 0..self.n_rows {
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                let c = idx[k] as usize;
+                let pos = next[c];
+                next[c] += 1;
+                indices[pos] = r as u32;
+                values[pos] = val[k];
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices, values }
+    }
+
+    /// Symmetric GCN normalization with self-loops, **kept sparse**:
+    /// `Â = D^{-1/2} (A + I) D^{-1/2}`. Values match
+    /// [`Self::gcn_normalized_dense`] bit for bit (degree sums run in the
+    /// same ascending order; adding structural zeros is an f32 no-op).
+    pub fn gcn_normalized(&self) -> Result<Csr> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("gcn normalization requires square".into()));
+        }
+        let n = self.n_rows;
+        let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(self.nnz() + n);
+        for r in 0..n {
+            let idx = self.row_indices(r);
+            let val = self.row_values(r);
+            for k in 0..idx.len() {
+                triplets.push((r as u32, idx[k], val[k]));
+            }
+        }
+        for i in 0..n {
+            triplets.push((i as u32, i as u32, 1.0));
+        }
+        let mut out = Csr::from_triplets(n, n, &triplets)?;
+        let mut deg = vec![0.0f32; n];
+        for r in 0..n {
+            let mut s = 0.0f32;
+            for &v in out.row_values(r) {
+                s += v;
+            }
+            deg[r] = s;
+        }
+        let dinv: Vec<f32> =
+            deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        for r in 0..n {
+            for k in out.indptr[r]..out.indptr[r + 1] {
+                let c = out.indices[k] as usize;
+                out.values[k] *= dinv[r] * dinv[c];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Row normalization `D⁻¹A`, **kept sparse** (mean-aggregator input for
+    /// full-batch GraphSAGE). Rows with no entries stay empty. Values match
+    /// [`Self::row_normalized_dense`] bit for bit.
+    pub fn row_normalized(&self) -> Result<Csr> {
+        if self.n_rows != self.n_cols {
+            return Err(Error::Shape("row normalization requires square".into()));
+        }
+        let mut out = self.clone();
+        for r in 0..out.n_rows {
+            let start = out.indptr[r];
+            let end = out.indptr[r + 1];
+            let mut sum = 0.0f32;
+            for k in start..end {
+                sum += out.values[k];
+            }
+            if sum > 0.0 {
+                let inv = 1.0 / sum;
+                for k in start..end {
+                    out.values[k] *= inv;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Dispatch a manifest's `adj` normalization kind to the matching
+    /// sparse normalization (`raw` is a structural copy).
+    pub fn normalized(&self, kind: &str) -> Result<Csr> {
+        match kind {
+            "sym_norm" => self.gcn_normalized(),
+            "row_norm" => self.row_normalized(),
+            "raw" => Ok(self.clone()),
+            other => Err(Error::Config(format!("unknown adj kind '{other}'"))),
+        }
+    }
+
     /// Materialize row `r` into a dense buffer (zero-filled first).
     pub fn densify_row(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.n_cols);
@@ -296,51 +435,17 @@ impl Csr {
         out
     }
 
-    /// Row-normalized dense adjacency `D⁻¹A` (mean aggregator input for
-    /// full-batch GraphSAGE). Rows with no entries stay zero.
+    /// Row-normalized dense adjacency `D⁻¹A` — [`Self::row_normalized`]
+    /// materialized for the HLO full-batch executables.
     pub fn row_normalized_dense(&self) -> Result<Vec<f32>> {
-        if self.n_rows != self.n_cols {
-            return Err(Error::Shape("row normalization requires square".into()));
-        }
-        let n = self.n_rows;
-        let mut dense = self.to_dense();
-        for r in 0..n {
-            let sum: f32 = dense[r * n..(r + 1) * n].iter().sum();
-            if sum > 0.0 {
-                let inv = 1.0 / sum;
-                for v in dense[r * n..(r + 1) * n].iter_mut() {
-                    *v *= inv;
-                }
-            }
-        }
-        Ok(dense)
+        Ok(self.row_normalized()?.to_dense())
     }
 
-    /// Symmetric GCN normalization of a dense adjacency with self-loops:
-    /// `Â = D^{-1/2} (A + I) D^{-1/2}` returned dense (used as input to the
-    /// full-batch GCN/SGC/GIN executables).
+    /// Symmetric GCN normalization `Â = D^{-1/2} (A + I) D^{-1/2}` —
+    /// [`Self::gcn_normalized`] materialized for the HLO full-batch
+    /// executables.
     pub fn gcn_normalized_dense(&self) -> Result<Vec<f32>> {
-        if self.n_rows != self.n_cols {
-            return Err(Error::Shape("gcn normalization requires square".into()));
-        }
-        let n = self.n_rows;
-        let mut dense = self.to_dense();
-        for i in 0..n {
-            dense[i * n + i] += 1.0;
-        }
-        let mut deg = vec![0.0f32; n];
-        for r in 0..n {
-            for c in 0..n {
-                deg[r] += dense[r * n + c];
-            }
-        }
-        let dinv: Vec<f32> = deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
-        for r in 0..n {
-            for c in 0..n {
-                dense[r * n + c] *= dinv[r] * dinv[c];
-            }
-        }
-        Ok(dense)
+        Ok(self.gcn_normalized()?.to_dense())
     }
 }
 
@@ -501,6 +606,98 @@ mod tests {
                 assert!(norm[r * 3 + c] >= 0.0);
             }
         }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (0, 3, -1.0), (1, 0, 0.5), (2, 3, 4.0), (2, 0, 1.5)],
+        )
+        .unwrap();
+        let t = a.transpose();
+        assert_eq!(t.n_rows(), 4);
+        assert_eq!(t.n_cols(), 3);
+        let d = a.to_dense();
+        let dt = t.to_dense();
+        for r in 0..3 {
+            for c in 0..4 {
+                assert_eq!(d[r * 4 + c], dt[c * 3 + r]);
+            }
+        }
+        // Double transpose is the identity.
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn spmm_row_major_matches_spmm_bitwise() {
+        let mut triplets = Vec::new();
+        for r in 0..11u32 {
+            for c in 0..6u32 {
+                if (r * 13 + c * 7) % 3 == 0 {
+                    triplets.push((r, c, (r as f32 * 0.61 - c as f32 * 0.87).cos()));
+                }
+            }
+        }
+        let a = Csr::from_triplets(11, 6, &triplets).unwrap();
+        let d = 4usize;
+        // x row-major (6, 4); the same data vector-major for spmm.
+        let x: Vec<f32> = (0..6 * d).map(|i| ((i * 17 + 5) % 9) as f32 * 0.4 - 1.1).collect();
+        let mut vs = vec![0.0f32; 6 * d];
+        for k in 0..6 {
+            for b in 0..d {
+                vs[b * 6 + k] = x[k * d + b];
+            }
+        }
+        let mut spmm_out = vec![0.0f32; 11 * d];
+        a.spmm(&vs, d, &mut spmm_out);
+        // Full range and a split range must both agree bit-for-bit.
+        let mut rm = vec![0.0f32; 11 * d];
+        a.spmm_row_major(0..11, &x, d, &mut rm);
+        let mut rm_split = vec![0.0f32; 11 * d];
+        a.spmm_row_major(0..5, &x, d, &mut rm_split[..5 * d]);
+        a.spmm_row_major(5..11, &x, d, &mut rm_split[5 * d..]);
+        for r in 0..11 {
+            for b in 0..d {
+                let expect = spmm_out[b * 11 + r];
+                assert_eq!(rm[r * d + b].to_bits(), expect.to_bits(), "({r},{b})");
+                assert_eq!(rm_split[r * d + b].to_bits(), expect.to_bits(), "split ({r},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_normalizations_match_dense() {
+        let a = small().symmetrize().unwrap();
+        assert_eq!(a.gcn_normalized().unwrap().to_dense(), a.gcn_normalized_dense().unwrap());
+        assert_eq!(a.row_normalized().unwrap().to_dense(), a.row_normalized_dense().unwrap());
+        // Row norm: every non-empty row sums to ~1.
+        let rn = a.row_normalized().unwrap();
+        for r in 0..3 {
+            let s: f32 = rn.row_values(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // Independent reference for Â = D^{-1/2}(A+I)D^{-1/2}.
+        let n = 3usize;
+        let mut with_loops = a.to_dense();
+        for i in 0..n {
+            with_loops[i * n + i] += 1.0;
+        }
+        let deg: Vec<f32> =
+            (0..n).map(|r| with_loops[r * n..(r + 1) * n].iter().sum()).collect();
+        let gcn = a.gcn_normalized().unwrap().to_dense();
+        for r in 0..n {
+            for c in 0..n {
+                let expect = with_loops[r * n + c] / (deg[r].sqrt() * deg[c].sqrt());
+                assert!((gcn[r * n + c] - expect).abs() < 1e-6, "({r},{c})");
+            }
+        }
+        // Dispatch helper.
+        assert_eq!(a.normalized("raw").unwrap(), a);
+        assert!(a.normalized("sym_norm").is_ok());
+        assert!(a.normalized("row_norm").is_ok());
+        assert!(a.normalized("bogus").is_err());
     }
 
     #[test]

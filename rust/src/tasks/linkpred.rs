@@ -7,13 +7,13 @@
 //! uniform non-edges resampled per step.
 //!
 //! Two encoder paths:
-//! - **Full-batch** ([`run_fullbatch`]): dense-adjacency GNNs, which still
-//!   require AOT HLO artifacts (the native backend does not implement the
-//!   full-batch tasks).
+//! - **Full-batch** ([`run_fullbatch`]): GCN / SGC / GIN / SAGE encoders
+//!   over the training-edge graph. On the native backend the adjacency is
+//!   a sparse CSR bound to the model (no artifacts, no dense `n×n`); the
+//!   HLO executables still take a size-guarded dense `adj` tensor.
 //! - **Minibatch** ([`SageLinkBatcher`] / [`train_sage_link`]): the §4
 //!   fan-out GraphSAGE encoder with the dot-product/BPR link head — the
-//!   native backend's `sage_mb_link` build, so it runs with no artifacts
-//!   at all and scales past dense adjacencies.
+//!   native backend's `sage_mb_link` build.
 
 use std::sync::Arc;
 
@@ -24,7 +24,7 @@ use crate::graph::{split::split_items, Graph};
 use crate::params::ParamStore;
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::{Engine, Model, Tensor};
-use crate::tasks::nodeclf::{adj_tensor, all_codes_tensor, Frontend, RunOpts};
+use crate::tasks::nodeclf::{adj_input, all_codes_tensor, AdjInput, Frontend, RunOpts};
 use crate::tasks::sage;
 use crate::train::{self, BatchSource, TrainLog, TrainOpts};
 use crate::{Error, Result};
@@ -87,9 +87,23 @@ pub fn run_fullbatch(
     opts: RunOpts,
 ) -> Result<LinkOutcome> {
     let model = engine.load(&format!("link_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
+    run_fullbatch_model(&model, frontend, graph, hits_k, opts)
+}
+
+/// Drive one already-loaded full-batch link-prediction model (any
+/// backend, any scale). Native: the training-edge graph's normalized
+/// adjacency is bound as a sparse CSR; HLO: densified (size-guarded) into
+/// the batch.
+pub fn run_fullbatch_model(
+    model: &Model,
+    frontend: Frontend,
+    graph: &Graph,
+    hits_k: usize,
+    opts: RunOpts,
+) -> Result<LinkOutcome> {
     let n = model.manifest.hyper_usize("n")?;
     if graph.n_nodes() != n {
-        return Err(Error::Shape(format!("artifact expects n={n}, got {}", graph.n_nodes())));
+        return Err(Error::Shape(format!("model expects n={n}, got {}", graph.n_nodes())));
     }
     let e_train = model.manifest.hyper_usize("e_train")?;
     let e_pred = model.manifest.hyper_usize("e_pred")?;
@@ -98,16 +112,21 @@ pub fn run_fullbatch(
     let split = split_edges(graph, opts.seed ^ 0x5A5A)?;
     // Message-passing graph: training edges only.
     let train_graph = Graph::from_edges(n, &split.train)?;
-    let adj = adj_tensor(&train_graph, model.manifest.hyper_str("adj")?)?;
+    let native = model.backend_name() == "native";
+    let adj = adj_input(&train_graph, model.manifest.hyper_str("adj")?, native)?;
     let codes = all_codes_tensor(&train_graph, frontend, coding, opts.seed)?;
 
     let mut store = ParamStore::init(&model.manifest, opts.seed);
     let mut rng = Xoshiro256pp::seed_from_u64(opts.seed ^ 0xBEEF);
 
-    let base: Vec<Tensor> = match &codes {
-        Some(c) => vec![c.clone(), adj.clone()],
-        None => vec![adj.clone()],
-    };
+    let mut base: Vec<Tensor> = Vec::new();
+    if let Some(c) = &codes {
+        base.push(c.clone());
+    }
+    match &adj {
+        AdjInput::Csr(a) => model.bind_adjacency(a.clone())?,
+        AdjInput::Dense(t) => base.push(t.clone()),
+    }
 
     let mut best = LinkOutcome { val_hits: f64::MIN, test_hits: 0.0, final_loss: f32::NAN };
     let mut last_loss = f32::NAN;

@@ -6,16 +6,21 @@
 //! evaluate every few epochs on the validation split and report the test
 //! metric from the best-validation epoch.
 //!
-//! The full-batch executables are the one family the native backend does
-//! not implement — [`run_fullbatch`] needs AOT HLO artifacts (build with
-//! `make artifacts` and the `xla` feature, or use the minibatch SAGE
-//! drivers in [`crate::tasks::sage`] which run on either backend).
+//! Both backends run the full grid. The native path propagates over a
+//! **sparse CSR adjacency** bound to the model
+//! ([`crate::runtime::Model::bind_adjacency`]) — no `n×n` buffer ever
+//! exists, so it scales to graphs far beyond what dense adjacency allows.
+//! The HLO path still consumes a dense `adj` tensor and is size-guarded
+//! by [`DENSE_ADJ_MAX_NODES`]; [`adj_input`] picks the right form.
+
+use std::sync::Arc;
 
 use crate::cfg::{CodingCfg, Coder, GnnKind};
 use crate::eval::accuracy_from_logits;
 use crate::graph::{split_nodes, Graph, Split};
 use crate::params::ParamStore;
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{Engine, Model, Tensor};
+use crate::sparse::Csr;
 use crate::tasks::coding::{make_codes, Aux};
 use crate::train;
 use crate::{Error, Result};
@@ -82,17 +87,39 @@ pub struct CellOutcome {
     pub final_loss: f32,
 }
 
-/// Build the dense adjacency tensor in the normalization the artifact
-/// expects (manifest hyper `adj`).
-pub fn adj_tensor(graph: &Graph, adj_kind: &str) -> Result<Tensor> {
+/// Largest graph the HLO path may densify: beyond this, a dense `(n, n)`
+/// f32 adjacency is the kind of allocation the paper's large-scale premise
+/// forbids (4096² is already 64 MiB — per *input tensor copy*).
+pub const DENSE_ADJ_MAX_NODES: usize = 4096;
+
+/// Adjacency in the form the executing backend consumes.
+pub enum AdjInput {
+    /// Sparse CSR for the native backend — bound to the model via
+    /// [`Model::bind_adjacency`], never materialized dense.
+    Csr(Arc<Csr>),
+    /// Dense `(n, n)` tensor for the HLO executables (size-guarded).
+    Dense(Tensor),
+}
+
+/// Build the adjacency in the normalization the model expects (manifest
+/// hyper `adj`), in the backend's preferred form. The native path always
+/// stays sparse; the dense HLO form errors clearly above
+/// [`DENSE_ADJ_MAX_NODES`] instead of silently allocating `n²` floats.
+pub fn adj_input(graph: &Graph, adj_kind: &str, native: bool) -> Result<AdjInput> {
+    let adj = graph.adj().normalized(adj_kind)?;
+    if native {
+        return Ok(AdjInput::Csr(Arc::new(adj)));
+    }
     let n = graph.n_nodes();
-    let dense = match adj_kind {
-        "sym_norm" => graph.adj().gcn_normalized_dense()?,
-        "row_norm" => graph.adj().row_normalized_dense()?,
-        "raw" => graph.adj().to_dense(),
-        other => return Err(Error::Config(format!("unknown adj kind '{other}'"))),
-    };
-    Tensor::f32(vec![n, n], dense)
+    if n > DENSE_ADJ_MAX_NODES {
+        return Err(Error::Config(format!(
+            "the HLO full-batch path would materialize a dense {n}×{n} adjacency \
+             ({:.2} GiB); the guard is {DENSE_ADJ_MAX_NODES} nodes — use \
+             `--backend native`, which propagates over the sparse CSR",
+            (n as f64) * (n as f64) * 4.0 / (1u64 << 30) as f64
+        )));
+    }
+    Tensor::f32(vec![n, n], adj.to_dense()).map(AdjInput::Dense)
 }
 
 /// Gather all-node integer codes as the `(n, m)` input tensor.
@@ -112,7 +139,8 @@ pub fn all_codes_tensor(
 }
 
 /// One full-batch node-classification run; returns val/test accuracy at
-/// the best validation epoch.
+/// the best validation epoch. Resolves the Table-1 cell's model through
+/// the engine's backend policy, then delegates to [`run_fullbatch_model`].
 pub fn run_fullbatch(
     engine: &Engine,
     gnn: GnnKind,
@@ -121,19 +149,41 @@ pub fn run_fullbatch(
     opts: RunOpts,
 ) -> Result<CellOutcome> {
     let model = engine.load(&format!("node_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
+    run_fullbatch_model(&model, frontend, graph, opts)
+}
+
+/// Drive one already-loaded full-batch node-classification model (any
+/// backend, any scale — tests use small custom builds). On the native
+/// backend the graph's normalized adjacency is bound as a sparse CSR; on
+/// HLO it is densified (size-guarded) into the batch.
+pub fn run_fullbatch_model(
+    model: &Model,
+    frontend: Frontend,
+    graph: &Graph,
+    opts: RunOpts,
+) -> Result<CellOutcome> {
     let n = model.manifest.hyper_usize("n")?;
     let k = model.manifest.hyper_usize("n_classes")?;
     if graph.n_nodes() != n {
         return Err(Error::Shape(format!(
-            "artifact expects n={n}, graph has {}",
+            "model expects n={n}, graph has {}",
             graph.n_nodes()
+        )));
+    }
+    if model.manifest.hyper_bool("coded")? != (frontend != Frontend::Nc) {
+        return Err(Error::Config(format!(
+            "frontend {} does not match model '{}' (coded = {})",
+            frontend.name(),
+            model.manifest.name,
+            model.manifest.hyper_bool("coded")?
         )));
     }
     let labels = graph
         .labels()
         .ok_or_else(|| Error::Config("node classification needs labels".into()))?;
     let coding = CodingCfg::new(model.manifest.hyper_usize("c")?, model.manifest.hyper_usize("m")?)?;
-    let adj = adj_tensor(graph, model.manifest.hyper_str("adj")?)?;
+    let native = model.backend_name() == "native";
+    let adj = adj_input(graph, model.manifest.hyper_str("adj")?, native)?;
     let codes = all_codes_tensor(graph, frontend, coding, opts.seed)?;
 
     let split = split_nodes(n, 0.7, 0.1, opts.seed ^ 0xA5A5)?;
@@ -148,12 +198,15 @@ pub fn run_fullbatch(
     if let Some(c) = &codes {
         batch.push(c.clone());
     }
-    batch.push(adj);
+    match &adj {
+        AdjInput::Csr(a) => model.bind_adjacency(a.clone())?,
+        AdjInput::Dense(t) => batch.push(t.clone()),
+    }
     batch.push(labels_t);
     batch.push(mask_t);
 
     let mut store = ParamStore::init(&model.manifest, opts.seed);
-    let pred_batch: Vec<Tensor> = batch[..batch.len() - 2].to_vec(); // codes? + adj
+    let pred_batch: Vec<Tensor> = batch[..batch.len() - 2].to_vec(); // codes? (+ dense adj)
 
     let mut best = CellOutcome { val: f64::MIN, test: 0.0, final_loss: f32::NAN };
     let mut last_loss = f32::NAN;
@@ -258,9 +311,31 @@ mod tests {
     fn adj_kinds() {
         let g = Graph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
         for kind in ["sym_norm", "row_norm", "raw"] {
-            let t = adj_tensor(&g, kind).unwrap();
-            assert_eq!(t.shape(), &[3, 3]);
+            match adj_input(&g, kind, false).unwrap() {
+                AdjInput::Dense(t) => assert_eq!(t.shape(), &[3, 3]),
+                AdjInput::Csr(_) => panic!("asked for the dense form"),
+            }
+            match adj_input(&g, kind, true).unwrap() {
+                AdjInput::Csr(a) => {
+                    assert_eq!(a.n_rows(), 3);
+                    assert_eq!(a.n_cols(), 3);
+                }
+                AdjInput::Dense(_) => panic!("native form must stay sparse"),
+            }
         }
-        assert!(adj_tensor(&g, "bogus").is_err());
+        assert!(adj_input(&g, "bogus", true).is_err());
+        assert!(adj_input(&g, "bogus", false).is_err());
+    }
+
+    #[test]
+    fn dense_adj_is_size_guarded_but_sparse_is_not() {
+        // A graph just over the guard: the sparse form is fine, the dense
+        // HLO form must refuse (and do so *before* allocating n² floats).
+        let n = DENSE_ADJ_MAX_NODES + 1;
+        let g = Graph::from_edges(n, &[(0, 1), (2, 3)]).unwrap();
+        assert!(matches!(adj_input(&g, "raw", true), Ok(AdjInput::Csr(_))));
+        let err = adj_input(&g, "raw", false).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("native"), "error should point at the sparse path: {msg}");
     }
 }
