@@ -3,10 +3,12 @@
 //! Sweeps batch size × thread count over a CPU-budget §4 minibatch-SAGE
 //! build (hash codes, decoder, CE head), plus the full-batch sparse path
 //! (GCN / GIN over CSR adjacency, node-count × thread sweep) so the SpMM
-//! propagation's scaling is tracked. Also asserts the backend's
-//! determinism contract (bit-identical loss across thread counts) on
-//! every run, and emits machine-readable `BENCH_train_step.json` at the
-//! repo root.
+//! propagation's scaling is tracked, plus the serving path
+//! (`ServeSession::embed_nodes` batch × thread × cache-hit-rate sweep,
+//! `rows_infer`). Also asserts the backend's determinism contract
+//! (bit-identical loss and served bytes across thread counts) on every
+//! run, and emits machine-readable `BENCH_train_step.json` at the repo
+//! root.
 
 mod bench_util;
 
@@ -21,6 +23,7 @@ use hashgnn::report::Table;
 use hashgnn::runtime::native::spec::{FullBatchBuild, SageMbBuild};
 use hashgnn::runtime::{Model, Tensor};
 use hashgnn::ser::{self, Json};
+use hashgnn::serve::{ServeOpts, ServeSession, ServingBundle};
 use hashgnn::tasks::sage::{Features, SageBatcher, SageTask};
 use hashgnn::train::{self, BatchSource};
 
@@ -208,6 +211,79 @@ fn main() -> hashgnn::Result<()> {
         }
     }
 
+    // Inference/serving path: `ServeSession::embed_nodes` throughput —
+    // per miss: per-node fan-out sample + code decode + 2-layer SAGE
+    // encode in pool-sized batches; per hit: exact-LRU replay. Sweeps
+    // batch size × threads × cache-hit rate, and feeds the same
+    // determinism assert (served bytes bit-identical across threads).
+    let mut ti = Table::new(
+        "serve embed_nodes (nodes/s; bit-identical across threads)",
+        &["batch", "threads", "hit rate", "nodes/s", "us/node"],
+    );
+    let mut infer_rows: Vec<Json> = Vec::new();
+    let q = bench_util::pick(512usize, 128);
+    let ids: Vec<u32> = (0..q).map(|i| (i * (n / q)) as u32).collect();
+    let edges = g.undirected_edges();
+    for batch in [64usize, 256] {
+        let manifest = build_for(batch, n).manifest();
+        let store = ParamStore::init(&manifest, 1);
+        let bundle =
+            ServingBundle::new(manifest, &store, Some((*codes).clone()), edges.clone(), n)?;
+        let mut reference: Option<Vec<u32>> = None;
+        for &threads in &thread_counts {
+            for hit in [0.0f64, 0.5, 1.0] {
+                let mut secs = Vec::with_capacity(reps);
+                let mut first_bytes: Vec<u32> = Vec::new();
+                for _ in 0..reps {
+                    // Fresh session per rep so the measured pass sees
+                    // exactly the configured hit rate (prewarm untimed).
+                    let mut session = ServeSession::new(
+                        bundle.clone(),
+                        ServeOpts { threads, cache_capacity: 2 * q, seed: 11 },
+                    )?;
+                    let warm = (hit * q as f64).round() as usize;
+                    if warm > 0 {
+                        session.embed_nodes(&ids[..warm])?;
+                    }
+                    let (out, dt) = bench_util::timed(|| session.embed_nodes(&ids));
+                    let out = out?;
+                    secs.push(dt);
+                    if first_bytes.is_empty() {
+                        first_bytes = out.iter().map(|v| v.to_bits()).collect();
+                    }
+                }
+                secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let sec = secs[secs.len() / 2];
+                let nodes_per_s = q as f64 / sec;
+                ti.row(vec![
+                    batch.to_string(),
+                    threads.to_string(),
+                    format!("{:.0}%", hit * 100.0),
+                    format!("{nodes_per_s:.0}"),
+                    format!("{:.1}", sec / q as f64 * 1e6),
+                ]);
+                infer_rows.push(Json::obj(vec![
+                    ("batch", Json::num(batch as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("cache_hit_rate", Json::num(hit)),
+                    ("nodes_per_s", Json::num(nodes_per_s)),
+                    ("us_per_node", Json::num(sec / q as f64 * 1e6)),
+                ]));
+                if hit == 0.0 {
+                    match &reference {
+                        None => reference = Some(first_bytes),
+                        Some(r) => {
+                            if *r != first_bytes {
+                                determinism_ok = false;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!("{}", ti.render());
+
     assert!(determinism_ok, "native train step diverged across thread counts");
     t.row(vec![
         "determinism (loss bits across thread counts)".into(),
@@ -228,6 +304,7 @@ fn main() -> hashgnn::Result<()> {
         ("loss_bit_identical_across_threads", Json::Bool(determinism_ok)),
         ("rows", Json::Arr(rows)),
         ("rows_fullbatch", Json::Arr(fb_rows)),
+        ("rows_infer", Json::Arr(infer_rows)),
     ]);
     let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -142,41 +142,107 @@ impl BitMatrix {
         self.n - distinct
     }
 
-    /// Serialize to a compact binary file (little-endian header + words).
-    pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        let mut buf =
-            Vec::with_capacity(24 + self.words.len() * 8);
-        buf.extend_from_slice(b"HGNC0001");
-        buf.extend_from_slice(&(self.n as u64).to_le_bytes());
-        buf.extend_from_slice(&(self.n_bits as u64).to_le_bytes());
-        for w in &self.words {
-            buf.extend_from_slice(&w.to_le_bytes());
+    /// All packed words, row-major ([`Self::words_per_row`] per row) —
+    /// read-only view for serializers (the serving bundle embeds the raw
+    /// words verbatim).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw packed words (inverse of [`Self::words`]); the
+    /// word count and the padding invariant of [`Self::set_word`] are
+    /// checked.
+    pub fn from_words(n: usize, n_bits: usize, words: Vec<u64>) -> Result<Self> {
+        let words_per_row = n_bits.div_ceil(64);
+        if words.len() != n * words_per_row {
+            return Err(Error::Shape(format!(
+                "bit matrix needs {} words for {n}×{n_bits}, got {}",
+                n * words_per_row,
+                words.len()
+            )));
         }
+        if n_bits % 64 != 0 && words_per_row > 0 {
+            for r in 0..n {
+                let last = words[r * words_per_row + words_per_row - 1];
+                if last >> (n_bits % 64) != 0 {
+                    return Err(Error::Shape(format!(
+                        "bit matrix row {r} has nonzero padding past bit {n_bits}"
+                    )));
+                }
+            }
+        }
+        Ok(Self { n, n_bits, words_per_row, words })
+    }
+
+    /// Serialize to a compact binary file.
+    ///
+    /// Format `HGNC0002`: 8-byte magic, payload byte count + FNV-1a
+    /// checksum of the payload (u64 LE each), then the payload
+    /// (`n`, `n_bits`, packed words, all LE) — truncation and bit rot are
+    /// caught at [`Self::load`] before any decoding.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut payload = Vec::with_capacity(16 + self.words.len() * 8);
+        payload.extend_from_slice(&(self.n as u64).to_le_bytes());
+        payload.extend_from_slice(&(self.n_bits as u64).to_le_bytes());
+        for w in &self.words {
+            payload.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut buf = Vec::with_capacity(24 + payload.len());
+        buf.extend_from_slice(b"HGNC0002");
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&crate::ser::fnv1a64(&payload).to_le_bytes());
+        buf.extend_from_slice(&payload);
         std::fs::write(path, buf)?;
         Ok(())
     }
 
     pub fn load(path: &std::path::Path) -> Result<Self> {
         let buf = std::fs::read(path)?;
-        if buf.len() < 24 || &buf[..8] != b"HGNC0001" {
-            return Err(Error::Config(format!("{}: not a code file", path.display())));
-        }
-        let n = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-        let n_bits = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
-        let words_per_row = n_bits.div_ceil(64);
-        let expect = 24 + n * words_per_row * 8;
-        if buf.len() != expect {
+        if buf.len() >= 8 && &buf[..8] == b"HGNC0001" {
             return Err(Error::Config(format!(
-                "{}: truncated code file ({} vs {expect} bytes)",
-                path.display(),
-                buf.len()
+                "{}: v1 code file (HGNC0001, no checksum header) is no longer readable — \
+                 re-run `hashgnn encode --out` to regenerate it",
+                path.display()
             )));
         }
-        let words = buf[24..]
+        if buf.len() < 24 || &buf[..8] != b"HGNC0002" {
+            return Err(Error::Config(format!(
+                "{}: not a code file (bad magic or shorter than the header)",
+                path.display()
+            )));
+        }
+        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let payload = &buf[24..];
+        if payload.len() != expect_len || payload.len() < 16 {
+            return Err(Error::Config(format!(
+                "{}: truncated code file ({} payload bytes, header says {expect_len})",
+                path.display(),
+                payload.len()
+            )));
+        }
+        let got = crate::ser::fnv1a64(payload);
+        if got != expect_sum {
+            return Err(Error::Config(format!(
+                "{}: code-file checksum mismatch ({got:#018x} != {expect_sum:#018x}) — corrupt",
+                path.display()
+            )));
+        }
+        let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+        let n_bits = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
+        let words_per_row = n_bits.div_ceil(64);
+        if payload.len() != 16 + n * words_per_row * 8 {
+            return Err(Error::Config(format!(
+                "{}: code file declares {n}×{n_bits} but carries {} word bytes",
+                path.display(),
+                payload.len() - 16
+            )));
+        }
+        let words = payload[16..]
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        Ok(Self { n, n_bits, words_per_row, words })
+        Self::from_words(n, n_bits, words)
     }
 }
 
@@ -402,6 +468,29 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"not a code file at all").unwrap();
         assert!(BitMatrix::load(&path).is_err());
+        // A flipped payload byte fails the checksum.
+        let t = random_codes(17, coding(4, 10), 11);
+        let path = dir.join("flip.bin");
+        t.bits.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = BitMatrix::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn words_roundtrip_and_padding_guard() {
+        let t = random_codes(9, coding(4, 10), 2); // 20 bits/row → 1 word
+        let back =
+            BitMatrix::from_words(9, 20, t.bits.words().to_vec()).unwrap();
+        assert_eq!(t.bits, back);
+        assert!(BitMatrix::from_words(9, 20, vec![0; 5]).is_err(), "wrong word count");
+        assert!(
+            BitMatrix::from_words(1, 20, vec![1u64 << 20]).is_err(),
+            "padding bit past n_bits"
+        );
     }
 
     #[test]

@@ -39,7 +39,8 @@
 //! |---|---|
 //! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`] (incl. [`cfg::BackendKind`]), [`sparse`] (SpMV, blocked SpMM, row-major SpMM, transpose, sparse normalizations), [`graph`], [`embed`] |
 //! | paper core | [`lsh`] (Algorithm 1 + parallel encode engine), [`codes`] (compositional codes, word-packed bits) |
-//! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine — [`runtime::native::layers`] shared blocks, [`runtime::native::sage`] minibatch encoder, [`runtime::native::gnn`] full-batch grid — + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
+//! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine — [`runtime::native::layers`] shared blocks, [`runtime::native::sage`] minibatch encoder, [`runtime::native::gnn`] full-batch grid, [`runtime::native::infer`] forward-only inference surface — + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
+//! | serving    | [`serve`] (frozen [`serve::ServingBundle`] artifact, request [`serve::Batcher`], exact-LRU [`serve::EmbedCache`], [`serve::ServeSession`] — `hashgnn export` / `infer` / `serve --oneshot`; no backward code reachable) |
 //! | evaluation | [`eval`], [`tasks`], [`report`] |
 //! | dev        | [`testing`] (property-test harness) |
 
@@ -55,6 +56,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod ser;
+pub mod serve;
 pub mod sparse;
 pub mod tasks;
 pub mod testing;

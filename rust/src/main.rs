@@ -4,7 +4,11 @@
 //!   encode      generate a synthetic graph and produce compositional codes
 //!   train       end-to-end GNN training — minibatch GraphSAGE (§4) or the
 //!               full-batch Table-1 grid (--model node_fb_{gcn,sgc,gin,sage},
-//!               link_fb_*), coded or NC
+//!               link_fb_*), coded or NC; --ckpt-out saves the trained store
+//!   export      freeze a trained checkpoint + packed codes + edges into a
+//!               self-contained serving bundle
+//!   infer       answer embed/score/classes queries from a serving bundle
+//!   serve       batch-serve a JSON request file from a bundle (--oneshot)
 //!   merchant    §5.3 merchant-category pipeline (Table 3)
 //!   collisions  Figure 3/6 median-vs-zero threshold experiment
 //!   memory      Tables 2/4/6 memory accounting
@@ -20,16 +24,20 @@
 //! Every experiment is seeded and reproducible; benches that regenerate
 //! the paper's tables live under `cargo bench` (see DESIGN.md §6).
 
+use std::path::Path;
 use std::sync::Arc;
 
 use hashgnn::cfg::{BackendKind, Coder, CodingCfg, EncodeCfg, GnnKind};
 use hashgnn::cli::Args;
 use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
 use hashgnn::report::{self, Table};
 use hashgnn::runtime::Engine;
+use hashgnn::serve::{parse_requests, ServeOpts, ServeSession, ServingBundle};
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+use hashgnn::tasks::serve as serve_task;
 use hashgnn::tasks::{coding, collisions, linkpred, memory, merchant, sage, T1Dataset};
-use hashgnn::{embed, Error, Result};
+use hashgnn::{embed, ser, Error, Result};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +46,9 @@ fn main() {
     let outcome = match cmd.as_str() {
         "encode" => cmd_encode(rest),
         "train" => cmd_train(rest),
+        "export" => cmd_export(rest),
+        "infer" => cmd_infer(rest),
+        "serve" => cmd_serve(rest),
         "merchant" => cmd_merchant(rest),
         "collisions" => cmd_collisions(rest),
         "memory" => cmd_memory(rest),
@@ -64,11 +75,16 @@ fn print_help() {
          commands:\n\
          \x20 encode      generate graph, run Algorithm 1, save/report codes\n\
          \x20 train       end-to-end GNN training (--model sage_mb |\n\
-         \x20             node_fb_{{gcn,sgc,gin,sage}} | link_fb_...)\n\
+         \x20             node_fb_{{gcn,sgc,gin,sage}} | link_fb_...);\n\
+         \x20             --ckpt-out saves the trained parameters\n\
+         \x20 export      freeze checkpoint + codes + edges into a serving bundle\n\
+         \x20 infer       embed/score/classify from a bundle (--embed 0,1 ...)\n\
+         \x20 serve       one-shot batch serving of a JSON request file\n\
          \x20 merchant    merchant-category identification pipeline (§5.3)\n\
          \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
          \x20 memory      memory accounting tables (Tables 2/4/6)\n\
          \x20 artifacts   list AOT artifacts / native builds\n\n\
+         deployment flow: encode -> train --ckpt-out -> export -> infer/serve\n\n\
          train and merchant take --backend {{auto|native|xla}}: the native\n\
          backend is pure rust (no artifacts needed) and --threads N is\n\
          bit-deterministic across thread counts\n\n\
@@ -141,6 +157,11 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "0",
             "native-backend compute threads (0 = all cores; loss curves are bit-identical across counts)",
         )
+        .opt(
+            "ckpt-out",
+            "",
+            "save the trained ParamStore checkpoint here (feeds `hashgnn export`)",
+        )
         .parse(argv)?;
     let backend = BackendKind::parse(&a.get("backend"))?;
     let engine =
@@ -207,6 +228,17 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         test.accuracy,
         run.losses.last().copied().unwrap_or(f32::NAN)
     );
+    save_ckpt(&a, &run.store)?;
+    Ok(())
+}
+
+/// Honor `--ckpt-out` after a training run.
+fn save_ckpt(a: &Args, store: &hashgnn::params::ParamStore) -> Result<()> {
+    let path = a.get("ckpt-out");
+    if !path.is_empty() {
+        store.save(std::path::Path::new(&path))?;
+        eprintln!("[train] checkpoint written to {path}");
+    }
     Ok(())
 }
 
@@ -238,6 +270,13 @@ fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
     let seed = a.get_u64("seed")?;
     let epochs = a.get_usize("epochs")?.max(1);
     let opts = RunOpts { epochs, eval_every: 5.min(epochs), seed };
+    let name = format!(
+        "{}_fb_{}_{}",
+        if link { "link" } else { "node" },
+        gnn.as_str(),
+        frontend.artifact_tag()
+    );
+    let model = engine.load(&name)?;
     if link {
         let graph = T1Dataset::Collab.generate(seed)?;
         eprintln!(
@@ -247,11 +286,12 @@ fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
             frontend.name(),
             epochs
         );
-        let out = linkpred::run_fullbatch(engine, gnn, frontend, &graph, 50, opts)?;
+        let (out, store) = linkpred::run_fullbatch_model(&model, frontend, &graph, 50, opts)?;
         println!(
             "val hits@50 {:.4} | test hits@50 {:.4} | final loss {:.4}",
             out.val_hits, out.test_hits, out.final_loss
         );
+        save_ckpt(a, &store)?;
     } else {
         let graph = T1Dataset::Arxiv.generate(seed)?;
         eprintln!(
@@ -261,12 +301,201 @@ fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
             frontend.name(),
             epochs
         );
-        let out = nodeclf::run_fullbatch(engine, gnn, frontend, &graph, opts)?;
+        let (out, store) = nodeclf::run_fullbatch_model(&model, frontend, &graph, opts)?;
         println!(
             "val acc {:.4} | test acc {:.4} | final loss {:.4}",
             out.val, out.test, out.final_loss
         );
+        save_ckpt(a, &store)?;
     }
+    Ok(())
+}
+
+/// Parse `"0,1,2"` into node ids.
+fn parse_ids(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.trim()
+                .parse::<u32>()
+                .map_err(|_| Error::Config(format!("bad node id '{t}' (expected e.g. 0,1,2)")))
+        })
+        .collect()
+}
+
+/// Parse `"0-1,2-3"` into (u, v) edges.
+fn parse_edges(s: &str) -> Result<Vec<(u32, u32)>> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let (u, v) = t
+                .trim()
+                .split_once('-')
+                .ok_or_else(|| Error::Config(format!("bad edge '{t}' (expected e.g. 0-1,2-3)")))?;
+            Ok((
+                u.parse::<u32>()
+                    .map_err(|_| Error::Config(format!("bad edge endpoint '{u}'")))?,
+                v.parse::<u32>()
+                    .map_err(|_| Error::Config(format!("bad edge endpoint '{v}'")))?,
+            ))
+        })
+        .collect()
+}
+
+fn cmd_export(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn export", "freeze a trained model into a serving bundle")
+        .req("checkpoint", "trained ParamStore checkpoint (`hashgnn train --ckpt-out`)")
+        .req("out", "output bundle path")
+        .opt("model", "sage_mb_coded", "model/artifact name the checkpoint was trained for")
+        .opt("artifacts", "artifacts", "artifacts directory (exported manifests used when present)")
+        .opt("coder", "hash", "coding scheme when codes are regenerated: hash | random")
+        .opt(
+            "codes",
+            "",
+            "pre-encoded bit-packed code file (`hashgnn encode --out`); default: regenerate \
+             via Algorithm 1 from the training graph",
+        )
+        .opt("seed", "7", "the training run's seed (graph, split and codes derive from it)")
+        .parse(argv)?;
+    // The bundle is a native-serving artifact; the native backend loads
+    // (or synthesizes) the manifest without requiring HLO files.
+    let engine = Engine::with_backend(a.get("artifacts"), BackendKind::Native, 0)?;
+    let model = engine.load(&a.get("model"))?;
+    let store = ParamStore::load(Path::new(&a.get("checkpoint")))?;
+    let codes = a.get("codes");
+    let opts = serve_task::ExportOpts {
+        coder: Coder::parse(&a.get("coder"))?,
+        codes_file: if codes.is_empty() { None } else { Some(codes.into()) },
+        seed: a.get_u64("seed")?,
+    };
+    let out = a.get("out");
+    eprintln!("[export] assembling bundle for '{}' ...", model.manifest.name);
+    let bundle = serve_task::export_bundle_to(&model.manifest, &store, &opts, Path::new(&out))?;
+    println!(
+        "bundle '{}' written to {out}: {} nodes, {} edges, {} KiB params, {} KiB packed codes",
+        bundle.manifest.name,
+        bundle.n_nodes,
+        bundle.edges.len(),
+        bundle.param_bytes() / 1024,
+        bundle.code_bytes() / 1024
+    );
+    Ok(())
+}
+
+fn cmd_infer(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn infer", "answer embed/score/classes queries from a bundle")
+        .req("bundle", "serving bundle (`hashgnn export`)")
+        .opt("embed", "", "comma-separated node ids to embed (e.g. 0,1,2)")
+        .opt("score", "", "dash-pair edges to score (e.g. 0-1,2-3)")
+        .opt("classes", "", "comma-separated node ids to classify")
+        .opt("threads", "0", "compute threads (0 = all cores; never changes any served bit)")
+        .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
+        .opt("seed", "7", "fan-out sampling seed (minibatch models)")
+        .parse(argv)?;
+    let bundle = ServingBundle::load(Path::new(&a.get("bundle")))?;
+    eprintln!(
+        "[infer] bundle '{}': {} nodes, {} edges, {} KiB params, {} KiB codes",
+        bundle.manifest.name,
+        bundle.n_nodes,
+        bundle.edges.len(),
+        bundle.param_bytes() / 1024,
+        bundle.code_bytes() / 1024
+    );
+    let mut session = ServeSession::new(
+        bundle,
+        ServeOpts {
+            threads: a.get_usize_auto("threads")?,
+            cache_capacity: a.get_usize("cache")?,
+            seed: a.get_u64("seed")?,
+        },
+    )?;
+    let mut did_anything = false;
+    let embed_q = a.get("embed");
+    if !embed_q.is_empty() {
+        let ids = parse_ids(&embed_q)?;
+        let emb = session.embed_nodes(&ids)?;
+        let d = session.embed_dim();
+        for (i, &id) in ids.iter().enumerate() {
+            let row = &emb[i * d..(i + 1) * d];
+            let norm = row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            let head: Vec<String> = row.iter().take(6).map(|x| format!("{x:.4}")).collect();
+            println!(
+                "embed {id}: [{}{}] |h| = {norm:.4}",
+                head.join(", "),
+                if d > 6 { ", ..." } else { "" }
+            );
+        }
+        did_anything = true;
+    }
+    let score_q = a.get("score");
+    if !score_q.is_empty() {
+        let edges = parse_edges(&score_q)?;
+        let scores = session.score_edges(&edges)?;
+        for (&(u, v), &s) in edges.iter().zip(&scores) {
+            println!("score {u}-{v}: {s:.4}");
+        }
+        did_anything = true;
+    }
+    let classes_q = a.get("classes");
+    if !classes_q.is_empty() {
+        let ids = parse_ids(&classes_q)?;
+        let (_logits, argmax) = session.predict_classes(&ids)?;
+        for (&id, &c) in ids.iter().zip(&argmax) {
+            println!("class {id}: {c}");
+        }
+        did_anything = true;
+    }
+    if !did_anything {
+        return Err(Error::Config(
+            "nothing to do — pass --embed, --score and/or --classes".into(),
+        ));
+    }
+    let s = session.cache_stats();
+    eprintln!(
+        "[infer] cache: {} hits / {} misses / {} evictions ({}/{} entries)",
+        s.hits, s.misses, s.evictions, s.len, s.capacity
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("hashgnn serve", "batch-serve a JSON request file from a bundle")
+        .req("bundle", "serving bundle (`hashgnn export`)")
+        .flag("oneshot", "process one request file and exit (the only implemented mode)")
+        .opt(
+            "requests",
+            "",
+            "JSON request file: {\"requests\": [{\"op\": \"embed\", \"nodes\": [0, 1]}, \
+             {\"op\": \"score\", \"edges\": [[0, 1]]}, {\"op\": \"classes\", \"nodes\": [2]}]}",
+        )
+        .opt("threads", "0", "compute threads (0 = all cores)")
+        .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
+        .opt("seed", "7", "fan-out sampling seed (minibatch models)")
+        .parse(argv)?;
+    if !a.get_bool("oneshot") {
+        return Err(Error::Config(
+            "persistent serving is not implemented yet — run with --oneshot; a long-lived \
+             (or remote/sharded) server plugs into the same ServeSession seam (see ROADMAP)"
+                .into(),
+        ));
+    }
+    let req_path = a.get("requests");
+    if req_path.is_empty() {
+        return Err(Error::Config("--requests <file.json> is required with --oneshot".into()));
+    }
+    let reqs = parse_requests(&ser::from_file(Path::new(&req_path))?)?;
+    let bundle = ServingBundle::load(Path::new(&a.get("bundle")))?;
+    let mut session = ServeSession::new(
+        bundle,
+        ServeOpts {
+            threads: a.get_usize_auto("threads")?,
+            cache_capacity: a.get_usize("cache")?,
+            seed: a.get_u64("seed")?,
+        },
+    )?;
+    eprintln!("[serve] oneshot: {} request(s)", reqs.len());
+    let out = session.handle_all(&reqs)?;
+    println!("{}", ser::to_string_pretty(&out));
     Ok(())
 }
 

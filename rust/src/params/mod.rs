@@ -96,35 +96,73 @@ impl ParamStore {
     }
 
     /// Save a checkpoint (params + moments + step) to a binary file.
+    ///
+    /// Format `HGNP0002`: an 8-byte magic, then the payload byte count and
+    /// an FNV-1a checksum of the payload (both u64 LE) — so a truncated or
+    /// bit-rotted file fails loudly at [`Self::load`] instead of decoding
+    /// into garbage parameters — then the payload (step, tensor count,
+    /// three tensor groups of rank + dims + f32 data, all LE).
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(b"HGNP0001");
-        buf.extend_from_slice(&(self.step).to_le_bytes());
-        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        let mut payload: Vec<u8> = Vec::new();
+        payload.extend_from_slice(&(self.step).to_le_bytes());
+        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
         for group in [&self.params, &self.adam_m, &self.adam_v] {
             for t in group.iter() {
                 let data = t.as_f32()?;
                 let shape = t.shape();
-                buf.extend_from_slice(&(shape.len() as u64).to_le_bytes());
+                payload.extend_from_slice(&(shape.len() as u64).to_le_bytes());
                 for &d in shape {
-                    buf.extend_from_slice(&(d as u64).to_le_bytes());
+                    payload.extend_from_slice(&(d as u64).to_le_bytes());
                 }
                 for &x in data {
-                    buf.extend_from_slice(&x.to_le_bytes());
+                    payload.extend_from_slice(&x.to_le_bytes());
                 }
             }
         }
+        let mut buf: Vec<u8> = Vec::with_capacity(24 + payload.len());
+        buf.extend_from_slice(b"HGNP0002");
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&crate::ser::fnv1a64(&payload).to_le_bytes());
+        buf.extend_from_slice(&payload);
         std::fs::write(path, buf)?;
         Ok(())
     }
 
-    /// Load a checkpoint previously written by [`Self::save`].
+    /// Load a checkpoint previously written by [`Self::save`], verifying
+    /// the header's byte count and checksum before decoding anything.
     pub fn load(path: &Path) -> Result<Self> {
         let buf = std::fs::read(path)?;
-        if buf.len() < 24 || &buf[..8] != b"HGNP0001" {
-            return Err(Error::Config(format!("{}: not a checkpoint", path.display())));
+        if buf.len() >= 8 && &buf[..8] == b"HGNP0001" {
+            return Err(Error::Config(format!(
+                "{}: v1 checkpoint (HGNP0001, no checksum header) is no longer readable — \
+                 re-train (or re-save) to produce a v2 checkpoint",
+                path.display()
+            )));
         }
-        let mut pos = 8usize;
+        if buf.len() < 24 || &buf[..8] != b"HGNP0002" {
+            return Err(Error::Config(format!(
+                "{}: not a checkpoint (bad magic or shorter than the header)",
+                path.display()
+            )));
+        }
+        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let payload = &buf[24..];
+        if payload.len() != expect_len {
+            return Err(Error::Config(format!(
+                "{}: checkpoint payload is {} bytes, header says {expect_len} (truncated?)",
+                path.display(),
+                payload.len()
+            )));
+        }
+        let got = crate::ser::fnv1a64(payload);
+        if got != expect_sum {
+            return Err(Error::Config(format!(
+                "{}: checkpoint checksum mismatch ({got:#018x} != {expect_sum:#018x}) — file is corrupt",
+                path.display()
+            )));
+        }
+        let mut pos = 0usize;
         let read_u64 = |buf: &[u8], pos: &mut usize| -> Result<u64> {
             if *pos + 8 > buf.len() {
                 return Err(Error::Config("truncated checkpoint".into()));
@@ -133,22 +171,22 @@ impl ParamStore {
             *pos += 8;
             Ok(v)
         };
-        let step = read_u64(&buf, &mut pos)?;
-        let n = read_u64(&buf, &mut pos)? as usize;
+        let step = read_u64(payload, &mut pos)?;
+        let n = read_u64(payload, &mut pos)? as usize;
         let mut groups: Vec<Vec<Tensor>> = Vec::with_capacity(3);
         for _ in 0..3 {
             let mut group = Vec::with_capacity(n);
             for _ in 0..n {
-                let rank = read_u64(&buf, &mut pos)? as usize;
+                let rank = read_u64(payload, &mut pos)? as usize;
                 let mut shape = Vec::with_capacity(rank);
                 for _ in 0..rank {
-                    shape.push(read_u64(&buf, &mut pos)? as usize);
+                    shape.push(read_u64(payload, &mut pos)? as usize);
                 }
                 let count: usize = shape.iter().product();
-                if pos + count * 4 > buf.len() {
+                if pos + count * 4 > payload.len() {
                     return Err(Error::Config("truncated checkpoint data".into()));
                 }
-                let data: Vec<f32> = buf[pos..pos + count * 4]
+                let data: Vec<f32> = payload[pos..pos + count * 4]
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
@@ -254,5 +292,37 @@ mod tests {
         assert_eq!(back.params, store.params);
         assert_eq!(back.adam_m, store.adam_m);
         assert_eq!(back.adam_v, store.adam_v);
+    }
+
+    #[test]
+    fn load_rejects_corrupt_and_truncated_checkpoints() {
+        let store = ParamStore::init(&manifest(), 3);
+        let dir = std::env::temp_dir().join("hashgnn_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Not a checkpoint at all.
+        let garbage = dir.join("garbage.bin");
+        std::fs::write(&garbage, b"definitely not a checkpoint").unwrap();
+        let err = ParamStore::load(&garbage).unwrap_err();
+        assert!(format!("{err}").contains("not a checkpoint"), "{err}");
+
+        // A single flipped payload byte must fail the checksum, not decode.
+        let path = dir.join("ckpt_corrupt.bin");
+        store.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = 24 + (bytes.len() - 24) / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ParamStore::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+
+        // Truncation is caught by the header byte count.
+        let path = dir.join("ckpt_trunc.bin");
+        store.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = ParamStore::load(&path).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("truncated") || msg.contains("header says"), "{msg}");
     }
 }

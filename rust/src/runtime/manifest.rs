@@ -95,6 +95,26 @@ impl Manifest {
         self.params.iter().filter(|p| p.trainable).map(ParamSpec::n_elements).sum()
     }
 
+    /// Serialize back to the exact JSON contract [`Self::from_json`]
+    /// parses — used by the serving bundle, which freezes the manifest
+    /// alongside the trained parameters.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("params", Json::Arr(self.params.iter().map(param_to_json).collect())),
+            (
+                "train_inputs",
+                Json::Arr(self.train_inputs.iter().map(tensor_to_json).collect()),
+            ),
+            (
+                "pred_inputs",
+                Json::Arr(self.pred_inputs.iter().map(tensor_to_json).collect()),
+            ),
+            ("pred_output", tensor_to_json(&self.pred_output)),
+            ("hyper", self.hyper.clone()),
+        ])
+    }
+
     /// Hyper field helpers.
     pub fn hyper_usize(&self, key: &str) -> Result<usize> {
         self.hyper.get(key)?.as_usize()
@@ -123,6 +143,30 @@ fn parse_param(v: &Json) -> Result<ParamSpec> {
         init,
         trainable: v.get("trainable")?.as_bool()?,
     })
+}
+
+fn param_to_json(p: &ParamSpec) -> Json {
+    let (init, std) = match p.init {
+        InitKind::XavierUniform => ("xavier_uniform", 0.0f32),
+        InitKind::Normal { std } => ("normal", std),
+        InitKind::Zeros => ("zeros", 0.0),
+        InitKind::Ones => ("ones", 0.0),
+    };
+    Json::obj(vec![
+        ("name", Json::str(p.name.clone())),
+        ("shape", Json::arr_usize(&p.shape)),
+        ("init", Json::str(init)),
+        ("std", Json::num(std as f64)),
+        ("trainable", Json::Bool(p.trainable)),
+    ])
+}
+
+fn tensor_to_json(t: &TensorSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(t.name.clone())),
+        ("shape", Json::arr_usize(&t.shape)),
+        ("dtype", Json::str(t.dtype.clone())),
+    ])
 }
 
 fn parse_tensor(v: &Json) -> Result<TensorSpec> {
@@ -179,6 +223,17 @@ mod tests {
         let m = Manifest::from_json(&sample()).unwrap();
         assert_eq!(m.n_param_elements(), 4 * 16 * 8 + 64 + 8);
         assert_eq!(m.n_trainable_elements(), 64 + 8);
+    }
+
+    #[test]
+    fn to_json_round_trips() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        let j1 = m.to_json();
+        let back = Manifest::from_json(&j1).unwrap();
+        assert_eq!(j1, back.to_json());
+        assert_eq!(back.params[0].init, InitKind::Normal { std: 0.5 });
+        assert_eq!(back.pred_output.shape, vec![32, 8]);
+        assert_eq!(back.hyper_usize("c").unwrap(), 16);
     }
 
     #[test]

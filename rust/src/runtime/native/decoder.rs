@@ -162,6 +162,53 @@ pub fn forward(
     Ok(DecCache { h0_raw, acts })
 }
 
+/// Inference-only decode: the same kernel sequence as [`forward`] (so the
+/// output is bit-identical for every thread count), but activations are
+/// dropped as soon as the next layer has consumed them — no cache, no
+/// `h0_raw`, nothing the reverse pass would need. This is the decode the
+/// serving path ([`crate::serve`]) runs per request.
+pub fn forward_infer(
+    dims: &DecoderDims,
+    idx: &DecoderIdx,
+    params: &[&[f32]],
+    codes: &[i32],
+    n: usize,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    ops::validate_codes(codes, dims.c)?;
+    if codes.len() != n * dims.m {
+        return Err(Error::Shape(format!(
+            "decoder: {} code elements for {n} rows of m={}",
+            codes.len(),
+            dims.m
+        )));
+    }
+    let mut cur = vec![0.0f32; n * dims.d_c];
+    ops::codebook_fwd(params[idx.books], codes, n, dims.m, dims.c, dims.d_c, &mut cur, threads);
+    if let Some(w0) = idx.w0 {
+        ops::scale_cols(&mut cur, dims.d_c, params[w0], threads);
+    }
+    let mlp_dims = dims.mlp_dims();
+    for i in 0..dims.l {
+        let (w, b) = idx.mlp[i];
+        let relu = i < dims.l - 1;
+        let mut out = vec![0.0f32; n * mlp_dims[i + 1]];
+        ops::linear_fwd(
+            &cur,
+            params[w],
+            params[b],
+            n,
+            mlp_dims[i],
+            mlp_dims[i + 1],
+            relu,
+            &mut out,
+            threads,
+        );
+        cur = out;
+    }
+    Ok(cur)
+}
+
 /// Reverse pass: accumulate parameter gradients for `d_out (n, d_e)`
 /// (gradient w.r.t. the decoder output). Gradients for non-trainable
 /// parameters (the light variant's frozen codebooks) are skipped — the
@@ -272,5 +319,38 @@ mod tests {
             .zip(c8.output())
             .all(|(a, b)| a.to_bits() == b.to_bits()));
         assert!(forward(&dims, &idx, &params, &[0, 1, 4], 1, 1).is_err(), "code 4 out of range");
+    }
+
+    #[test]
+    fn forward_infer_matches_cached_forward_bitwise() {
+        for light in [false, true] {
+            let b = spec::ReconBuild {
+                name: "t".into(),
+                c: 4,
+                m: 3,
+                d_c: 5,
+                d_m: 6,
+                d_e: 2,
+                l: 3,
+                light,
+                batch: 4,
+                optim: crate::cfg::OptimCfg::adamw_default(),
+            };
+            let m = b.manifest();
+            let dims = DecoderDims { c: 4, m: 3, d_c: 5, d_m: 6, d_e: 2, l: 3, light };
+            let idx = DecoderIdx::resolve(&m, &dims).unwrap();
+            let store = ParamStore::init(&m, 11);
+            let params: Vec<&[f32]> = store.params.iter().map(|t| t.as_f32().unwrap()).collect();
+            let codes = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3];
+            let cached = forward(&dims, &idx, &params, &codes, 4, 1).unwrap();
+            for threads in [1usize, 8] {
+                let lean = forward_infer(&dims, &idx, &params, &codes, 4, threads).unwrap();
+                assert!(
+                    lean.iter().zip(cached.output()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "light={light} threads={threads}"
+                );
+            }
+            assert!(forward_infer(&dims, &idx, &params, &[0, 1, 4], 1, 1).is_err());
+        }
     }
 }

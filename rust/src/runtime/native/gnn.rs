@@ -262,6 +262,31 @@ fn gin_layer_bwd(
     dh
 }
 
+/// [`gin_layer_fwd`] without the `z`/`u` cache — every intermediate is
+/// dropped once consumed. Same kernels, bit-identical output.
+fn gin_layer_infer(
+    l: &GinLayer,
+    params: &[&[f32]],
+    adj: &Csr,
+    h_in: &[f32],
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let din = l.a.d_in;
+    let eps = params[l.eps][0];
+    let mut ah = vec![0.0f32; n * din];
+    spmm_par(adj, h_in, din, &mut ah, threads);
+    let mut z = vec![0.0f32; n * din];
+    ops::scale_add(h_in, 1.0 + eps, &ah, &mut z, threads);
+    drop(ah);
+    let mut u = vec![0.0f32; n * l.a.d_out];
+    l.a.fwd(params, &z, n, true, &mut u, threads);
+    drop(z);
+    let mut out = vec![0.0f32; n * l.b.d_out];
+    l.b.fwd(params, &u, n, true, &mut out, threads);
+    out
+}
+
 // ---------------------------------------------------------------------------
 // Encoder
 // ---------------------------------------------------------------------------
@@ -330,6 +355,76 @@ pub fn encode_fwd(
         }
     };
     Ok(FbCache { feat: feat_cache, gnn: gnn_cache, h: hfin })
+}
+
+/// Inference-only full-graph encoder: all `n` final representations
+/// `(n, hidden)` with **no cache** — intermediates are dropped as soon as
+/// the next layer has consumed them, and nothing the reverse pass would
+/// need survives. Same kernel sequence as [`encode_fwd`], so the output
+/// is bit-identical to the training forward at every thread count.
+pub fn encode_infer(
+    feat: &FeatSource,
+    gnn: &FbGnn,
+    dims: &FbDims,
+    params: &[&[f32]],
+    adj: &Csr,
+    codes: Option<&Tensor>,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let (n, d, h) = (dims.n, dims.d_e, dims.hidden);
+    if adj.n_rows() != n || adj.n_cols() != n {
+        return Err(Error::Shape(format!(
+            "bound adjacency is {}×{}, model wants {n}×{n}",
+            adj.n_rows(),
+            adj.n_cols()
+        )));
+    }
+    let feats = feat.infer_full(params, codes, n, threads)?;
+    let x = feats.as_slice();
+    let hfin = match gnn {
+        FbGnn::Gcn { l1, l2 } => {
+            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads);
+            gcn_layer_fwd(l2, params, adj, &h1, n, threads)
+        }
+        FbGnn::Sgc { lin } => {
+            let mut ax = vec![0.0f32; n * d];
+            spmm_par(adj, x, d, &mut ax, threads);
+            let mut a2x = vec![0.0f32; n * d];
+            spmm_par(adj, &ax, d, &mut a2x, threads);
+            drop(ax);
+            let mut out = vec![0.0f32; n * h];
+            lin.fwd(params, &a2x, n, false, &mut out, threads);
+            out
+        }
+        FbGnn::Gin { l1, l2 } => {
+            let h1 = gin_layer_infer(l1, params, adj, x, n, threads);
+            gin_layer_infer(l2, params, adj, &h1, n, threads)
+        }
+        FbGnn::Sage { l1, l2 } => {
+            let h1 = {
+                let mut ax = vec![0.0f32; n * d];
+                spmm_par(adj, x, d, &mut ax, threads);
+                let mut cat1 = vec![0.0f32; n * 2 * d];
+                ops::scatter_cols(x, n, 2 * d, 0, d, &mut cat1, threads);
+                ops::scatter_cols(&ax, n, 2 * d, d, d, &mut cat1, threads);
+                drop(ax);
+                let mut out = vec![0.0f32; n * h];
+                l1.fwd(params, &cat1, n, true, &mut out, threads);
+                out
+            };
+            let mut ah1 = vec![0.0f32; n * h];
+            spmm_par(adj, &h1, h, &mut ah1, threads);
+            let mut cat2 = vec![0.0f32; n * 2 * h];
+            ops::scatter_cols(&h1, n, 2 * h, 0, h, &mut cat2, threads);
+            ops::scatter_cols(&ah1, n, 2 * h, h, h, &mut cat2, threads);
+            drop(ah1);
+            drop(h1);
+            let mut out = vec![0.0f32; n * h];
+            l2.fwd(params, &cat2, n, true, &mut out, threads);
+            out
+        }
+    };
+    Ok(hfin)
 }
 
 /// Reverse pass of [`encode_fwd`] for `dh (n, hidden)`. Accumulates GNN
@@ -415,8 +510,10 @@ pub(crate) fn validate_edges(edges: &[i32], n: usize) -> Result<()> {
     Ok(())
 }
 
-/// `out[e] = ⟨h[u_e], h[v_e]⟩` over `edges (e, 2)`.
-fn edge_dot(hmat: &[f32], edges: &[i32], d: usize, out: &mut [f32], threads: usize) {
+/// `out[e] = ⟨h[u_e], h[v_e]⟩` over `edges (e, 2)`. Shared with the
+/// inference surface ([`super::infer`]), which scores edges over the same
+/// representations.
+pub(super) fn edge_dot(hmat: &[f32], edges: &[i32], d: usize, out: &mut [f32], threads: usize) {
     debug_assert_eq!(edges.len(), out.len() * 2);
     par_rows(out, 1, threads, |e0, part| {
         for (i, o) in part.iter_mut().enumerate() {
@@ -475,7 +572,7 @@ fn edge_dot_bwd(
 // ---------------------------------------------------------------------------
 
 /// Split a full-batch batch into its optional codes tensor and the rest.
-fn split_codes(coded: bool, batch: &[Tensor]) -> (Option<&Tensor>, &[Tensor]) {
+pub(super) fn split_codes(coded: bool, batch: &[Tensor]) -> (Option<&Tensor>, &[Tensor]) {
     if coded {
         (Some(&batch[0]), &batch[1..])
     } else {
@@ -530,9 +627,9 @@ pub fn clf_pred(
 ) -> Result<Vec<f32>> {
     let n = dims.n;
     let (codes, _rest) = split_codes(coded, batch);
-    let cache = encode_fwd(feat, gnn, dims, params, adj, codes, threads)?;
+    let h = encode_infer(feat, gnn, dims, params, adj, codes, threads)?;
     let mut logits = vec![0.0f32; n * n_classes];
-    head.fwd(params, &cache.h, n, false, &mut logits, threads);
+    head.fwd(params, &h, n, false, &mut logits, threads);
     Ok(logits)
 }
 
@@ -590,9 +687,9 @@ pub fn link_pred(
     let (codes, rest) = split_codes(coded, batch);
     let edges = rest[0].as_i32()?;
     validate_edges(edges, n)?;
-    let cache = encode_fwd(feat, gnn, dims, params, adj, codes, threads)?;
+    let hmat = encode_infer(feat, gnn, dims, params, adj, codes, threads)?;
     let mut scores = vec![0.0f32; edges.len() / 2];
-    edge_dot(&cache.h, edges, h, &mut scores, threads);
+    edge_dot(&hmat, edges, h, &mut scores, threads);
     Ok(scores)
 }
 

@@ -1,0 +1,480 @@
+//! Inference-only model surface — the forward half of the fwd/bwd split.
+//!
+//! [`InferModel`] resolves the same [`Manifest`] contract as
+//! [`super::NativeModel`] (shared resolver, shared parameter-index types)
+//! but exposes **only** forward execution: no optimizer state, no
+//! `trainable` masks, no gradient buffers, and no activation caches —
+//! every path here goes through the `*_infer` forwards
+//! ([`super::decoder::forward_infer`], [`super::sage::encode_infer`],
+//! [`super::gnn::encode_infer`]), which drop intermediates as soon as the
+//! next layer has consumed them. By construction nothing reachable from
+//! this type can touch backward code.
+//!
+//! Because the inference forwards run the exact kernel sequence of the
+//! train-fused forwards on the shared deterministic worker pool, every
+//! result is **bit-identical** to the training-time forward at any thread
+//! count — `tests/infer_parity.rs` asserts this for the decoder, the
+//! minibatch SAGE heads, and all four full-batch architectures, including
+//! the loss values ([`InferModel::loss`] vs. the fused train step).
+//!
+//! Batch layouts per task (`hyper.task`):
+//!
+//! | task | [`embed_nodes`](InferModel::embed_nodes) | [`score_edges`](InferModel::score_edges) | [`predict_classes`](InferModel::predict_classes) |
+//! |---|---|---|---|
+//! | `recon` | `[codes (rows, m)]` → `(rows, d_e)` | `[codes_u, codes_v]` → `(rows,)` | — |
+//! | `sage_minibatch[_link]` | 3 fan-out tensors → `(batch, hidden)` | 6 fan-out tensors (u then v) → `(batch,)` | 3 fan-out tensors → logits (clf only) |
+//! | `*_fullbatch` | `[codes?]` → `(n, hidden)` | `[codes?, edges (e, 2)]` → `(e,)` | `[codes?]` → logits (clf only) |
+
+use std::sync::{Arc, OnceLock};
+
+use crate::runtime::{Manifest, Tensor};
+use crate::sparse::Csr;
+use crate::{Error, Result};
+
+use super::gnn::{self, split_codes, validate_edges};
+use super::layers::FeatSource;
+use super::par::resolve_threads;
+use super::{normalize_manifest, ops, param_slices, resolve_task, sage, Task};
+
+/// A manifest compiled for forward-only execution: resolved parameter
+/// indices and dims, with no optimizer or gradient machinery attached.
+pub struct InferModel {
+    manifest: Manifest,
+    task: Task,
+    feat: FeatSource,
+    /// Sparse adjacency for the full-batch tasks. Inference never needs
+    /// the structural transpose the training model precomputes.
+    adj: OnceLock<Arc<Csr>>,
+}
+
+impl InferModel {
+    /// Build from a manifest (exported, synthesized by [`super::spec`], or
+    /// carried by a [`crate::serve::ServingBundle`]). Validates every
+    /// referenced parameter name/shape; any dense `adj` input spec is
+    /// stripped exactly as the training model does.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let (task, feat) = resolve_task(manifest)?;
+        let manifest = normalize_manifest(manifest, &task);
+        Ok(Self { manifest, task, feat, adj: OnceLock::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.manifest.params.len()
+    }
+
+    /// Width of the representations [`Self::embed_nodes`] produces
+    /// (`d_e` for the plain decoder, `hidden` for every GNN task).
+    pub fn embed_dim(&self) -> usize {
+        match &self.task {
+            Task::Recon { d_e, .. } => *d_e,
+            Task::SageClf { dims, .. } | Task::SageLink { dims, .. } => dims.hidden,
+            Task::FbClf { dims, .. } | Task::FbLink { dims, .. } => dims.hidden,
+        }
+    }
+
+    /// Natural request-batch size: the manifest batch for the minibatch
+    /// tasks (their input shapes are fixed), the node count for full
+    /// batch. The serving batcher coalesces queries into groups of this.
+    pub fn serve_batch(&self) -> usize {
+        match &self.task {
+            Task::Recon { batch, .. } => *batch,
+            Task::SageClf { dims, .. } | Task::SageLink { dims, .. } => dims.batch,
+            Task::FbClf { dims, .. } | Task::FbLink { dims, .. } => dims.n,
+        }
+    }
+
+    pub fn is_fullbatch(&self) -> bool {
+        matches!(self.task, Task::FbClf { .. } | Task::FbLink { .. })
+    }
+
+    pub fn is_minibatch_sage(&self) -> bool {
+        matches!(self.task, Task::SageClf { .. } | Task::SageLink { .. })
+    }
+
+    /// Fan-out widths `(k1, k2)` for the minibatch SAGE tasks.
+    pub fn fanout(&self) -> Option<(usize, usize)> {
+        match &self.task {
+            Task::SageClf { dims, .. } | Task::SageLink { dims, .. } => Some((dims.k1, dims.k2)),
+            _ => None,
+        }
+    }
+
+    /// Whether the front-end consumes compositional codes (vs. node ids
+    /// into an explicit table).
+    pub fn coded(&self) -> bool {
+        matches!(self.feat, FeatSource::Decoder { .. })
+    }
+
+    /// Code length `m` of the coded front-end.
+    pub fn code_m(&self) -> Option<usize> {
+        match &self.feat {
+            FeatSource::Decoder { dims, .. } => Some(dims.m),
+            FeatSource::Table { .. } => None,
+        }
+    }
+
+    /// Classes of the classification head, when the task has one.
+    pub fn n_classes(&self) -> Option<usize> {
+        match &self.task {
+            Task::SageClf { n_classes, .. } | Task::FbClf { n_classes, .. } => Some(*n_classes),
+            _ => None,
+        }
+    }
+
+    /// Bind the (already normalized) sparse adjacency for a full-batch
+    /// model — same contract as the training model's bind, minus the
+    /// transpose precompute the backward pass would need.
+    pub fn bind_adjacency(&self, adj: Arc<Csr>) -> Result<()> {
+        let n = match &self.task {
+            Task::FbClf { dims, .. } | Task::FbLink { dims, .. } => dims.n,
+            _ => {
+                return Err(Error::Runtime(format!(
+                    "model '{}' is not a full-batch task — only nodeclf_fullbatch / \
+                     linkpred_fullbatch take a CSR adjacency",
+                    self.manifest.name
+                )))
+            }
+        };
+        if adj.n_rows() != n || adj.n_cols() != n {
+            return Err(Error::Shape(format!(
+                "adjacency is {}×{}, model '{}' wants {n}×{n}",
+                adj.n_rows(),
+                adj.n_cols(),
+                self.manifest.name
+            )));
+        }
+        if let Some(existing) = self.adj.get() {
+            if Arc::ptr_eq(existing, &adj) || **existing == *adj {
+                return Ok(());
+            }
+            return Err(Error::Runtime(format!(
+                "model '{}' already has a different bound adjacency",
+                self.manifest.name
+            )));
+        }
+        self.adj.set(adj).map_err(|_| {
+            Error::Runtime(format!(
+                "model '{}': concurrent adjacency binds raced — bind once before inference",
+                self.manifest.name
+            ))
+        })
+    }
+
+    fn bound_adj(&self) -> Result<&Arc<Csr>> {
+        self.adj.get().ok_or_else(|| {
+            Error::Runtime(format!(
+                "full-batch model '{}' has no adjacency bound — call \
+                 InferModel::bind_adjacency with the normalized graph CSR before inference",
+                self.manifest.name
+            ))
+        })
+    }
+
+    fn slices<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
+        param_slices(&self.manifest, params)
+    }
+
+    /// Node representations for one batch (layout per the module table).
+    /// Bit-identical to the training forward's representations.
+    pub fn embed_nodes(&self, params: &[Tensor], batch: &[Tensor], threads: usize) -> Result<Tensor> {
+        let slices = self.slices(params)?;
+        let threads = resolve_threads(threads);
+        match &self.task {
+            Task::Recon { d_e, .. } => {
+                need_tensors("recon embed_nodes", batch, 1)?;
+                let out = self.feat.infer(&slices, &batch[0], threads)?;
+                let rows = out.len() / d_e;
+                Tensor::f32(vec![rows, *d_e], out)
+            }
+            Task::SageClf { sage, dims, .. } | Task::SageLink { sage, dims } => {
+                need_tensors("sage embed_nodes", batch, 3)?;
+                let h = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[0], &batch[1], &batch[2], threads,
+                )?;
+                Tensor::f32(vec![dims.batch, dims.hidden], h)
+            }
+            Task::FbClf { gnn, dims, coded, .. } | Task::FbLink { gnn, dims, coded } => {
+                need_tensors("full-batch embed_nodes", batch, usize::from(*coded))?;
+                let (codes, _rest) = split_codes(*coded, batch);
+                let h = gnn::encode_infer(
+                    &self.feat, gnn, dims, &slices, self.bound_adj()?, codes, threads,
+                )?;
+                Tensor::f32(vec![dims.n, dims.hidden], h)
+            }
+        }
+    }
+
+    /// Edge scores — dot products of the two endpoint representations,
+    /// matching the training link heads bit for bit.
+    pub fn score_edges(&self, params: &[Tensor], batch: &[Tensor], threads: usize) -> Result<Tensor> {
+        let slices = self.slices(params)?;
+        let threads = resolve_threads(threads);
+        match &self.task {
+            Task::Recon { d_e, .. } => {
+                need_tensors("recon score_edges", batch, 2)?;
+                let u = self.feat.infer(&slices, &batch[0], threads)?;
+                let v = self.feat.infer(&slices, &batch[1], threads)?;
+                if u.len() != v.len() {
+                    return Err(Error::Shape(format!(
+                        "score_edges: {} u-rows vs {} v-rows",
+                        u.len() / d_e,
+                        v.len() / d_e
+                    )));
+                }
+                let rows = u.len() / d_e;
+                let mut scores = vec![0.0f32; rows];
+                ops::dot_rows(&u, &v, rows, *d_e, &mut scores, threads);
+                Tensor::f32(vec![rows], scores)
+            }
+            Task::SageClf { sage, dims, .. } | Task::SageLink { sage, dims } => {
+                need_tensors("sage score_edges", batch, 6)?;
+                let hu = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[0], &batch[1], &batch[2], threads,
+                )?;
+                let hv = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[3], &batch[4], &batch[5], threads,
+                )?;
+                let mut scores = vec![0.0f32; dims.batch];
+                ops::dot_rows(&hu, &hv, dims.batch, dims.hidden, &mut scores, threads);
+                Tensor::f32(vec![dims.batch], scores)
+            }
+            Task::FbClf { gnn, dims, coded, .. } | Task::FbLink { gnn, dims, coded } => {
+                need_tensors("full-batch score_edges", batch, usize::from(*coded) + 1)?;
+                let (codes, rest) = split_codes(*coded, batch);
+                let edges = rest[0].as_i32()?;
+                validate_edges(edges, dims.n)?;
+                let h = gnn::encode_infer(
+                    &self.feat, gnn, dims, &slices, self.bound_adj()?, codes, threads,
+                )?;
+                let mut scores = vec![0.0f32; edges.len() / 2];
+                gnn::edge_dot(&h, edges, dims.hidden, &mut scores, threads);
+                Tensor::f32(vec![edges.len() / 2], scores)
+            }
+        }
+    }
+
+    /// Class logits for the tasks that carry a classification head
+    /// (`sage_minibatch`, `nodeclf_fullbatch`); errors otherwise.
+    pub fn predict_classes(
+        &self,
+        params: &[Tensor],
+        batch: &[Tensor],
+        threads: usize,
+    ) -> Result<Tensor> {
+        let slices = self.slices(params)?;
+        let threads = resolve_threads(threads);
+        match &self.task {
+            Task::SageClf { sage, head, n_classes, dims } => {
+                need_tensors("sage predict_classes", batch, 3)?;
+                let h = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[0], &batch[1], &batch[2], threads,
+                )?;
+                let mut logits = vec![0.0f32; dims.batch * n_classes];
+                head.fwd(&slices, &h, dims.batch, false, &mut logits, threads);
+                Tensor::f32(vec![dims.batch, *n_classes], logits)
+            }
+            Task::FbClf { gnn, head, n_classes, dims, coded } => {
+                need_tensors("full-batch predict_classes", batch, usize::from(*coded))?;
+                let (codes, _rest) = split_codes(*coded, batch);
+                let h = gnn::encode_infer(
+                    &self.feat, gnn, dims, &slices, self.bound_adj()?, codes, threads,
+                )?;
+                let mut logits = vec![0.0f32; dims.n * n_classes];
+                head.fwd(&slices, &h, dims.n, false, &mut logits, threads);
+                Tensor::f32(vec![dims.n, *n_classes], logits)
+            }
+            _ => Err(Error::Runtime(format!(
+                "model '{}' has no classification head",
+                self.manifest.name
+            ))),
+        }
+    }
+
+    /// Apply the classification head to already-computed representations
+    /// `h (rows, hidden)` — the path the serving cache uses after a hit.
+    /// Row-wise, so the logits are bit-identical to running the head over
+    /// any batch containing the same rows.
+    pub fn head_logits(
+        &self,
+        params: &[Tensor],
+        h: &[f32],
+        rows: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let (head, n_classes, hidden) = match &self.task {
+            Task::SageClf { head, n_classes, dims, .. } => (head, *n_classes, dims.hidden),
+            Task::FbClf { head, n_classes, dims, .. } => (head, *n_classes, dims.hidden),
+            _ => {
+                return Err(Error::Runtime(format!(
+                    "model '{}' has no classification head",
+                    self.manifest.name
+                )))
+            }
+        };
+        if h.len() != rows * hidden {
+            return Err(Error::Shape(format!(
+                "head_logits: {} elements for {rows} rows of hidden={hidden}",
+                h.len()
+            )));
+        }
+        let slices = self.slices(params)?;
+        let threads = resolve_threads(threads);
+        let mut logits = vec![0.0f32; rows * n_classes];
+        head.fwd(&slices, h, rows, false, &mut logits, threads);
+        Ok(logits)
+    }
+
+    /// Forward-only training loss over one full train batch (layout =
+    /// `manifest.train_inputs`) — the value the fused train step would
+    /// emit for the same parameters and batch, bit for bit, with no
+    /// gradient buffer allocated anywhere. Exists so inference/training
+    /// parity is testable end to end.
+    pub fn loss(&self, params: &[Tensor], batch: &[Tensor], threads: usize) -> Result<f32> {
+        super::validate_specs(batch, &self.manifest.train_inputs)?;
+        let slices = self.slices(params)?;
+        let threads = resolve_threads(threads);
+        match &self.task {
+            Task::Recon { .. } => {
+                let out = self.feat.infer(&slices, &batch[0], threads)?;
+                let target = batch[1].as_f32()?;
+                Ok(ops::mse_loss(&out, target))
+            }
+            Task::SageClf { sage, head, n_classes, dims } => {
+                let h = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[0], &batch[1], &batch[2], threads,
+                )?;
+                let mut logits = vec![0.0f32; dims.batch * n_classes];
+                head.fwd(&slices, &h, dims.batch, false, &mut logits, threads);
+                ops::softmax_ce_loss(&logits, batch[3].as_i32()?, dims.batch, *n_classes, threads)
+            }
+            Task::SageLink { sage, dims } => {
+                let hu = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[0], &batch[1], &batch[2], threads,
+                )?;
+                let hv = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[3], &batch[4], &batch[5], threads,
+                )?;
+                let hw = sage::encode_infer(
+                    &self.feat, sage, dims, &slices, &batch[6], &batch[7], &batch[8], threads,
+                )?;
+                let mut pos = vec![0.0f32; dims.batch];
+                let mut neg = vec![0.0f32; dims.batch];
+                ops::dot_rows(&hu, &hv, dims.batch, dims.hidden, &mut pos, threads);
+                ops::dot_rows(&hu, &hw, dims.batch, dims.hidden, &mut neg, threads);
+                Ok(ops::bpr_loss_value(&pos, &neg))
+            }
+            Task::FbClf { gnn, head, n_classes, dims, coded } => {
+                let (codes, rest) = split_codes(*coded, batch);
+                let labels = rest[0].as_i32()?;
+                let mask = rest[1].as_f32()?;
+                let h = gnn::encode_infer(
+                    &self.feat, gnn, dims, &slices, self.bound_adj()?, codes, threads,
+                )?;
+                let mut logits = vec![0.0f32; dims.n * n_classes];
+                head.fwd(&slices, &h, dims.n, false, &mut logits, threads);
+                ops::masked_softmax_ce_loss(&logits, labels, mask, dims.n, *n_classes, threads)
+            }
+            Task::FbLink { gnn, dims, coded } => {
+                let (codes, rest) = split_codes(*coded, batch);
+                let pos_e = rest[0].as_i32()?;
+                let neg_e = rest[1].as_i32()?;
+                validate_edges(pos_e, dims.n)?;
+                validate_edges(neg_e, dims.n)?;
+                let h = gnn::encode_infer(
+                    &self.feat, gnn, dims, &slices, self.bound_adj()?, codes, threads,
+                )?;
+                let e = pos_e.len() / 2;
+                let mut pos = vec![0.0f32; e];
+                let mut neg = vec![0.0f32; e];
+                gnn::edge_dot(&h, pos_e, dims.hidden, &mut pos, threads);
+                gnn::edge_dot(&h, neg_e, dims.hidden, &mut neg, threads);
+                Ok(ops::bce_pair_loss_value(&pos, &neg))
+            }
+        }
+    }
+}
+
+fn need_tensors(what: &str, batch: &[Tensor], n: usize) -> Result<()> {
+    if batch.len() != n {
+        return Err(Error::Shape(format!("{what}: got {} tensors, need {n}", batch.len())));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+    use crate::runtime::native::spec;
+
+    fn recon_manifest() -> Manifest {
+        spec::ReconBuild {
+            name: "inf_recon".into(),
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            d_e: 2,
+            l: 2,
+            light: false,
+            batch: 4,
+            optim: crate::cfg::OptimCfg::adamw_default(),
+        }
+        .manifest()
+    }
+
+    #[test]
+    fn recon_embed_and_score_shapes() {
+        let m = recon_manifest();
+        let model = InferModel::from_manifest(&m).unwrap();
+        assert_eq!(model.embed_dim(), 2);
+        assert_eq!(model.serve_batch(), 4);
+        assert!(model.coded());
+        assert_eq!(model.code_m(), Some(3));
+        assert_eq!(model.n_classes(), None);
+        let store = ParamStore::init(&m, 3);
+        let codes = Tensor::i32(vec![4, 3], vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3]).unwrap();
+        let emb = model.embed_nodes(&store.params, &[codes.clone()], 2).unwrap();
+        assert_eq!(emb.shape(), &[4, 2]);
+        let scores = model.score_edges(&store.params, &[codes.clone(), codes.clone()], 1).unwrap();
+        assert_eq!(scores.shape(), &[4]);
+        // An edge to itself scores the squared norm of its embedding.
+        let e = emb.as_f32().unwrap();
+        let s = scores.as_f32().unwrap();
+        for r in 0..4 {
+            let manual = e[r * 2] * e[r * 2] + e[r * 2 + 1] * e[r * 2 + 1];
+            assert_eq!(s[r].to_bits(), manual.to_bits());
+        }
+        assert!(model.predict_classes(&store.params, &[codes], 1).is_err());
+    }
+
+    #[test]
+    fn fullbatch_requires_bound_adjacency() {
+        let m = spec::builtin("node_fb_sgc_nc").unwrap();
+        let model = InferModel::from_manifest(&m).unwrap();
+        let store = ParamStore::init(&m, 3);
+        let err = model.embed_nodes(&store.params, &[], 1).unwrap_err();
+        assert!(format!("{err}").contains("bind_adjacency"), "{err}");
+        let n = m.hyper_usize("n").unwrap();
+        let adj = Arc::new(Csr::from_edges(n, &[(0, 1), (1, 2)]).unwrap());
+        model.bind_adjacency(adj.clone()).unwrap();
+        assert!(model.bind_adjacency(adj).is_ok(), "rebinding same matrix is a no-op");
+        let other = Arc::new(Csr::from_edges(n, &[(4, 5)]).unwrap());
+        assert!(model.bind_adjacency(other).is_err());
+        let emb = model.embed_nodes(&store.params, &[], 2).unwrap();
+        assert_eq!(emb.shape(), &[n, m.hyper_usize("hidden").unwrap()]);
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        let mut m = recon_manifest();
+        if let crate::ser::Json::Obj(o) = &mut m.hyper {
+            o.insert("task".into(), crate::ser::Json::str("transformer"));
+        }
+        assert!(InferModel::from_manifest(&m).is_err());
+    }
+}

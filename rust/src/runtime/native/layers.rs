@@ -33,6 +33,23 @@ pub enum FeatSource {
     Table { idx: usize, n: usize, d: usize },
 }
 
+/// A feature matrix produced by the inference-only front-end: owned for
+/// decoded codes, borrowed straight from the parameter buffer for the NC
+/// full-batch table (no gather, no copy).
+pub enum Feats<'a> {
+    Owned(Vec<f32>),
+    Borrowed(&'a [f32]),
+}
+
+impl Feats<'_> {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Feats::Owned(v) => v,
+            Feats::Borrowed(s) => s,
+        }
+    }
+}
+
 /// Per-node-set forward cache for the front-end.
 pub enum FeatCache {
     Dec(DecCache),
@@ -98,6 +115,66 @@ impl FeatSource {
             FeatCache::Dec(c) => c.output(),
             FeatCache::Table { x } => x,
             FeatCache::Full => panic!("full-graph cache has no owned output — use output_full"),
+        }
+    }
+
+    /// Inference-only forward of one node set: the `(rows, d)` feature
+    /// matrix with no cache behind it. Runs the same kernels as
+    /// [`Self::fwd`] (decoded codes go through
+    /// [`decoder::forward_infer`]), so the output is bit-identical to the
+    /// training forward's [`Self::output`] at every thread count.
+    pub fn infer(&self, params: &[&[f32]], t: &Tensor, threads: usize) -> Result<Vec<f32>> {
+        match self {
+            FeatSource::Decoder { dims, idx } => {
+                let codes = t.as_i32()?;
+                let rows = codes.len() / dims.m;
+                decoder::forward_infer(dims, idx, params, codes, rows, threads)
+            }
+            FeatSource::Table { idx, n, d } => {
+                let ids = t.as_i32()?;
+                ops::validate_ids(ids, *n)?;
+                let mut x = vec![0.0f32; ids.len() * d];
+                ops::table_gather(params[*idx], ids, *d, &mut x, threads);
+                Ok(x)
+            }
+        }
+    }
+
+    /// Inference-only whole-graph forward (full-batch tasks): decoded
+    /// `(n, d)` features for the coded path, the table parameter itself
+    /// (borrowed, zero-copy) for NC. Mirrors [`Self::fwd_full`]'s
+    /// validation; bit-identical to it.
+    pub fn infer_full<'a>(
+        &self,
+        params: &[&'a [f32]],
+        codes: Option<&Tensor>,
+        n: usize,
+        threads: usize,
+    ) -> Result<Feats<'a>> {
+        match self {
+            FeatSource::Decoder { dims, idx } => {
+                let t = codes.ok_or_else(|| {
+                    Error::Shape("coded full-batch front-end needs a codes tensor".into())
+                })?;
+                let c = t.as_i32()?;
+                if c.len() != n * dims.m {
+                    return Err(Error::Shape(format!(
+                        "full-batch codes: {} elements for n={n}, m={}",
+                        c.len(),
+                        dims.m
+                    )));
+                }
+                Ok(Feats::Owned(decoder::forward_infer(dims, idx, params, c, n, threads)?))
+            }
+            FeatSource::Table { idx, n: nt, .. } => {
+                if codes.is_some() {
+                    return Err(Error::Shape("NC full-batch front-end takes no codes".into()));
+                }
+                if *nt != n {
+                    return Err(Error::Shape(format!("embed.table has {nt} rows, graph has {n}")));
+                }
+                Ok(Feats::Borrowed(params[*idx]))
+            }
         }
     }
 

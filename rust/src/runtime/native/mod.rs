@@ -33,10 +33,19 @@
 //! process-wide worker pool (the private `par` module) instead of
 //! spawning OS threads per call; the pool never changes the output
 //! partition, so pool size and scheduling cannot change results either.
+//!
+//! **Forward/backward split:** forward-only execution lives in the
+//! inference-only paths (`decoder::forward_infer`, `sage::encode_infer`,
+//! `gnn::encode_infer`) — no activation stashing, no grad buffers — and
+//! is surfaced as [`infer::InferModel`], the model the serving subsystem
+//! ([`crate::serve`]) loads from a frozen bundle. The train-fused paths
+//! keep their caches; both run the same kernels in the same order, so
+//! inference output is bit-identical to the training forward.
 
 pub mod adam;
 pub mod decoder;
 pub mod gnn;
+pub mod infer;
 pub mod layers;
 pub mod ops;
 mod par;
@@ -75,6 +84,114 @@ impl Task {
     }
 }
 
+/// Resolve a manifest's task string into typed parameter indices + dims —
+/// the shared front half of both the train/bwd model ([`NativeModel`])
+/// and the inference-only model ([`infer::InferModel`]).
+fn resolve_task(manifest: &Manifest) -> Result<(Task, FeatSource)> {
+    let task_str = manifest.hyper_str("task")?;
+    match task_str {
+        "recon" => {
+            let feat = FeatSource::resolve_decoder(manifest)?;
+            let batch = manifest.hyper_usize("batch")?;
+            let d_e = feat.d_out();
+            Ok((Task::Recon { batch, d_e }, feat))
+        }
+        "sage_minibatch" | "sage_minibatch_link" => {
+            let coded = manifest.hyper_bool("coded")?;
+            let feat = if coded {
+                FeatSource::resolve_decoder(manifest)?
+            } else {
+                FeatSource::resolve_table(manifest)?
+            };
+            let dims = SageDims {
+                batch: manifest.hyper_usize("batch")?,
+                k1: manifest.hyper_usize("k1")?,
+                k2: manifest.hyper_usize("k2")?,
+                d_e: manifest.hyper_usize("d_e")?,
+                hidden: manifest.hyper_usize("hidden")?,
+            };
+            dims.validate()?;
+            let sage = SageIdx::resolve(manifest, dims.d_e, dims.hidden)?;
+            let task = if task_str == "sage_minibatch" {
+                let n_classes = manifest.hyper_usize("n_classes")?;
+                let head =
+                    LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
+                Task::SageClf { sage, head, n_classes, dims }
+            } else {
+                Task::SageLink { sage, dims }
+            };
+            Ok((task, feat))
+        }
+        "nodeclf_fullbatch" | "linkpred_fullbatch" => {
+            let coded = manifest.hyper_bool("coded")?;
+            let feat = if coded {
+                FeatSource::resolve_decoder(manifest)?
+            } else {
+                FeatSource::resolve_table(manifest)?
+            };
+            let dims = FbDims {
+                n: manifest.hyper_usize("n")?,
+                d_e: manifest.hyper_usize("d_e")?,
+                hidden: manifest.hyper_usize("hidden")?,
+            };
+            let gnn = FbGnn::resolve(manifest, manifest.hyper_str("gnn")?, dims.d_e, dims.hidden)?;
+            let task = if task_str == "nodeclf_fullbatch" {
+                let n_classes = manifest.hyper_usize("n_classes")?;
+                let head =
+                    LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
+                Task::FbClf { gnn, head, n_classes, dims, coded }
+            } else {
+                Task::FbLink { gnn, dims, coded }
+            };
+            Ok((task, feat))
+        }
+        other => Err(Error::Runtime(format!(
+            "native backend does not implement task '{other}'"
+        ))),
+    }
+}
+
+/// Normalized manifest copy for native execution: exported HLO manifests
+/// declare a dense `(n, n)` adj input for the full-batch tasks; the
+/// native paths bind a CSR instead and must never allocate `n²`.
+fn normalize_manifest(manifest: &Manifest, task: &Task) -> Manifest {
+    let mut manifest = manifest.clone();
+    if task.is_fullbatch() {
+        manifest.train_inputs.retain(|t| t.name != "adj");
+        manifest.pred_inputs.retain(|t| t.name != "adj");
+    }
+    manifest
+}
+
+/// Borrow every parameter tensor as a checked `&[f32]` slice in manifest
+/// order (shared by the train and inference models).
+fn param_slices<'a>(manifest: &Manifest, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
+    if params.len() < manifest.params.len() {
+        return Err(Error::Shape(format!(
+            "got {} param tensors, manifest has {}",
+            params.len(),
+            manifest.params.len()
+        )));
+    }
+    manifest
+        .params
+        .iter()
+        .zip(params)
+        .map(|(spec, t)| {
+            let data = t.as_f32()?;
+            if data.len() != spec.n_elements() {
+                return Err(Error::Shape(format!(
+                    "param '{}' has {} elements, spec wants {}",
+                    spec.name,
+                    data.len(),
+                    spec.n_elements()
+                )));
+            }
+            Ok(data)
+        })
+        .collect()
+}
+
 /// A manifest compiled for the native backend: resolved parameter
 /// indices, dims and optimizer settings.
 pub struct NativeModel {
@@ -94,78 +211,10 @@ impl NativeModel {
     /// dense `adj` input spec is stripped (the native path takes the
     /// adjacency as a bound CSR instead).
     pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
-        let task_str = manifest.hyper_str("task")?;
-        let (task, feat) = match task_str {
-            "recon" => {
-                let feat = FeatSource::resolve_decoder(manifest)?;
-                let batch = manifest.hyper_usize("batch")?;
-                let d_e = feat.d_out();
-                (Task::Recon { batch, d_e }, feat)
-            }
-            "sage_minibatch" | "sage_minibatch_link" => {
-                let coded = manifest.hyper_bool("coded")?;
-                let feat = if coded {
-                    FeatSource::resolve_decoder(manifest)?
-                } else {
-                    FeatSource::resolve_table(manifest)?
-                };
-                let dims = SageDims {
-                    batch: manifest.hyper_usize("batch")?,
-                    k1: manifest.hyper_usize("k1")?,
-                    k2: manifest.hyper_usize("k2")?,
-                    d_e: manifest.hyper_usize("d_e")?,
-                    hidden: manifest.hyper_usize("hidden")?,
-                };
-                dims.validate()?;
-                let sage = SageIdx::resolve(manifest, dims.d_e, dims.hidden)?;
-                let task = if task_str == "sage_minibatch" {
-                    let n_classes = manifest.hyper_usize("n_classes")?;
-                    let head =
-                        LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
-                    Task::SageClf { sage, head, n_classes, dims }
-                } else {
-                    Task::SageLink { sage, dims }
-                };
-                (task, feat)
-            }
-            "nodeclf_fullbatch" | "linkpred_fullbatch" => {
-                let coded = manifest.hyper_bool("coded")?;
-                let feat = if coded {
-                    FeatSource::resolve_decoder(manifest)?
-                } else {
-                    FeatSource::resolve_table(manifest)?
-                };
-                let dims = FbDims {
-                    n: manifest.hyper_usize("n")?,
-                    d_e: manifest.hyper_usize("d_e")?,
-                    hidden: manifest.hyper_usize("hidden")?,
-                };
-                let gnn = FbGnn::resolve(manifest, manifest.hyper_str("gnn")?, dims.d_e, dims.hidden)?;
-                let task = if task_str == "nodeclf_fullbatch" {
-                    let n_classes = manifest.hyper_usize("n_classes")?;
-                    let head =
-                        LinearIdx::resolve(manifest, "head.w", "head.b", dims.hidden, n_classes)?;
-                    Task::FbClf { gnn, head, n_classes, dims, coded }
-                } else {
-                    Task::FbLink { gnn, dims, coded }
-                };
-                (task, feat)
-            }
-            other => {
-                return Err(Error::Runtime(format!(
-                    "native backend does not implement task '{other}'"
-                )))
-            }
-        };
+        let (task, feat) = resolve_task(manifest)?;
         let optim = AdamHyper::from_json(manifest.hyper.get("optim")?)?;
         let trainable = manifest.params.iter().map(|p| p.trainable).collect();
-        let mut manifest = manifest.clone();
-        if task.is_fullbatch() {
-            // Exported HLO manifests declare a dense (n, n) adj input; the
-            // native path binds a CSR instead and must never allocate n².
-            manifest.train_inputs.retain(|t| t.name != "adj");
-            manifest.pred_inputs.retain(|t| t.name != "adj");
-        }
+        let manifest = normalize_manifest(manifest, &task);
         Ok(Self { manifest, task, feat, optim, trainable, adj: OnceLock::new() })
     }
 
@@ -337,30 +386,7 @@ impl NativeModel {
     }
 
     fn param_slices<'a>(&self, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
-        if params.len() < self.n_params() {
-            return Err(Error::Shape(format!(
-                "got {} param tensors, manifest has {}",
-                params.len(),
-                self.n_params()
-            )));
-        }
-        self.manifest
-            .params
-            .iter()
-            .zip(params)
-            .map(|(spec, t)| {
-                let data = t.as_f32()?;
-                if data.len() != spec.n_elements() {
-                    return Err(Error::Shape(format!(
-                        "param '{}' has {} elements, spec wants {}",
-                        spec.name,
-                        data.len(),
-                        spec.n_elements()
-                    )));
-                }
-                Ok(data)
-            })
-            .collect()
+        param_slices(&self.manifest, params)
     }
 
     fn grads_inner(

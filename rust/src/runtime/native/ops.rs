@@ -701,6 +701,123 @@ pub fn bce_pair_loss(pos: &[f32], neg: &[f32], dpos: &mut [f32], dneg: &mut [f32
     loss_pos * inv + loss_neg * inv
 }
 
+// ---------------------------------------------------------------------------
+// Forward-only losses (inference / serving parity)
+// ---------------------------------------------------------------------------
+//
+// The [`super::infer`] path must report the same loss value as the fused
+// train step without touching any gradient buffer. Each `*_loss` /
+// `*_value` variant below repeats the exact per-element math and the exact
+// single-threaded ascending reductions of its training twin, so the value
+// is bit-identical — asserted by the tests at the bottom of this file.
+
+/// Loss of [`masked_softmax_ce`] without the `dlogits` write. Same per-row
+/// softmax math (max, then `exp` accumulated in ascending column order)
+/// and the same sequential mask/NLL sums, so the value is bit-identical to
+/// the training kernel's for every thread count.
+pub fn masked_softmax_ce_loss(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    n: usize,
+    c: usize,
+    threads: usize,
+) -> Result<f32> {
+    debug_assert_eq!(logits.len(), n * c);
+    debug_assert_eq!(labels.len(), n);
+    debug_assert_eq!(mask.len(), n);
+    if n == 0 {
+        return Err(Error::Shape("masked_softmax_ce needs a non-empty batch".into()));
+    }
+    for &l in labels {
+        if l < 0 || l as usize >= c {
+            return Err(Error::Shape(format!("label {l} out of range [0, {c})")));
+        }
+    }
+    let mut msum = 0.0f32;
+    for &w in mask {
+        msum += w;
+    }
+    let inv = 1.0f32 / msum.max(1.0);
+    let mut nll = vec![0.0f32; n];
+    par_rows(&mut nll, 1, threads, |row0, part| {
+        for (i, o) in part.iter_mut().enumerate() {
+            let r = row0 + i;
+            let lrow = &logits[r * c..(r + 1) * c];
+            let mut mx = f32::NEG_INFINITY;
+            for &v in lrow {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            let mut z = 0.0f32;
+            for &v in lrow {
+                z += (v - mx).exp();
+            }
+            *o = (z.ln() + mx - lrow[labels[r] as usize]) * mask[r];
+        }
+    });
+    let mut loss = 0.0f32;
+    for &v in &nll {
+        loss += v;
+    }
+    Ok(loss * inv)
+}
+
+/// Loss of [`softmax_ce`] without gradients — [`masked_softmax_ce_loss`]
+/// with an all-ones mask, mirroring how the training kernels relate.
+pub fn softmax_ce_loss(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    c: usize,
+    threads: usize,
+) -> Result<f32> {
+    let ones = vec![1.0f32; n];
+    masked_softmax_ce_loss(logits, labels, &ones, n, c, threads)
+}
+
+/// Loss of [`mse`] without the `dpred` write (same sequential ascending
+/// sum, same final scale — bit-identical).
+pub fn mse_loss(pred: &[f32], target: &[f32]) -> f32 {
+    debug_assert_eq!(pred.len(), target.len());
+    let inv = 1.0f32 / pred.len() as f32;
+    let mut loss = 0.0f32;
+    for (&p, &t) in pred.iter().zip(target) {
+        let e = p - t;
+        loss += e * e;
+    }
+    loss * inv
+}
+
+/// Loss of [`bpr_loss`] without the score gradients (same per-pair
+/// softplus, same ascending sum — bit-identical).
+pub fn bpr_loss_value(pos: &[f32], neg: &[f32]) -> f32 {
+    debug_assert_eq!(pos.len(), neg.len());
+    let inv = 1.0f32 / pos.len() as f32;
+    let mut loss = 0.0f32;
+    for e in 0..pos.len() {
+        let x = pos[e] - neg[e];
+        loss += softplus(-x);
+    }
+    loss * inv
+}
+
+/// Loss of [`bce_pair_loss`] without the score gradients (same two
+/// ascending sums combined the same way — bit-identical).
+pub fn bce_pair_loss_value(pos: &[f32], neg: &[f32]) -> f32 {
+    debug_assert_eq!(pos.len(), neg.len());
+    let n = pos.len();
+    let inv = 1.0f32 / n as f32;
+    let mut loss_pos = 0.0f32;
+    let mut loss_neg = 0.0f32;
+    for e in 0..n {
+        loss_pos += softplus(-pos[e]);
+        loss_neg += softplus(neg[e]);
+    }
+    loss_pos * inv + loss_neg * inv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -961,5 +1078,48 @@ mod tests {
             assert!(dx.iter().zip(&base_dx).all(|(a, b)| a.to_bits() == b.to_bits()));
             assert!(dw.iter().zip(&base_dw).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
+    }
+
+    #[test]
+    fn forward_only_losses_match_training_kernels_bitwise() {
+        let (n, c) = (13usize, 5usize);
+        let mut state = 9u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let logits: Vec<f32> = (0..n * c).map(|_| next() * 3.0).collect();
+        let labels: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        for threads in [1usize, 2, 8] {
+            let mut d = vec![0.0f32; n * c];
+            let full = masked_softmax_ce(&logits, &labels, &mask, n, c, &mut d, threads).unwrap();
+            let fwd = masked_softmax_ce_loss(&logits, &labels, &mask, n, c, threads).unwrap();
+            assert_eq!(full.to_bits(), fwd.to_bits(), "masked, threads={threads}");
+            let mut d = vec![0.0f32; n * c];
+            let full = softmax_ce(&logits, &labels, n, c, &mut d, threads).unwrap();
+            let fwd = softmax_ce_loss(&logits, &labels, n, c, threads).unwrap();
+            assert_eq!(full.to_bits(), fwd.to_bits(), "unmasked, threads={threads}");
+        }
+        let mut bad_labels = labels.clone();
+        bad_labels[2] = 9;
+        assert!(masked_softmax_ce_loss(&logits, &bad_labels, &mask, n, c, 1).is_err());
+
+        let pred: Vec<f32> = (0..40).map(|_| next()).collect();
+        let target: Vec<f32> = (0..40).map(|_| next()).collect();
+        let mut dpred = vec![0.0f32; 40];
+        assert_eq!(mse(&pred, &target, &mut dpred, 2).to_bits(), mse_loss(&pred, &target).to_bits());
+
+        let pos: Vec<f32> = (0..17).map(|_| next() * 2.0).collect();
+        let neg: Vec<f32> = (0..17).map(|_| next() * 2.0).collect();
+        let (mut dp, mut dn) = (vec![0.0f32; 17], vec![0.0f32; 17]);
+        assert_eq!(
+            bpr_loss(&pos, &neg, &mut dp, &mut dn).to_bits(),
+            bpr_loss_value(&pos, &neg).to_bits()
+        );
+        assert_eq!(
+            bce_pair_loss(&pos, &neg, &mut dp, &mut dn).to_bits(),
+            bce_pair_loss_value(&pos, &neg).to_bits()
+        );
     }
 }

@@ -137,6 +137,78 @@ pub fn encode_fwd(
     Ok(EncCache { fc_b, fc_h1, fc_h2, cat_h1, l1_h1, cat_b, l1_b, cat2, hfin })
 }
 
+/// Inference-only encoder: the final `(batch, hidden)` representations
+/// with **no cache** — every intermediate buffer is dropped the moment
+/// the next layer has consumed it, and nothing the reverse pass would
+/// need survives the call. Runs the exact kernel sequence of
+/// [`encode_fwd`] (each kernel is deterministic in its inputs), so the
+/// output is bit-identical to the training forward's `hfin` at every
+/// thread count — asserted by `tests/infer_parity.rs`.
+pub fn encode_infer(
+    feat: &FeatSource,
+    sage: &SageIdx,
+    dims: &SageDims,
+    params: &[&[f32]],
+    t_b: &Tensor,
+    t_h1: &Tensor,
+    t_h2: &Tensor,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let (b, k1, k2, d, h) = (dims.batch, dims.k1, dims.k2, dims.d_e, dims.hidden);
+    let xb = feat.infer(params, t_b, threads)?;
+    let xh1 = feat.infer(params, t_h1, threads)?;
+    let xh2 = feat.infer(params, t_h2, threads)?;
+    if xb.len() != b * d || xh1.len() != b * k1 * d || xh2.len() != b * k1 * k2 * d {
+        return Err(Error::Shape(format!(
+            "sage encode: feature rows {}/{}/{} do not match (B, B·k1, B·k1·k2) = ({b}, {}, {})",
+            xb.len() / d,
+            xh1.len() / d,
+            xh2.len() / d,
+            b * k1,
+            b * k1 * k2
+        )));
+    }
+
+    // Layer 1 on the hop-1 nodes.
+    let l1_h1 = {
+        let mut agg_h2 = vec![0.0f32; b * k1 * d];
+        ops::mean_rows_fwd(&xh2, b * k1, k2, d, &mut agg_h2, threads);
+        drop(xh2);
+        let mut cat_h1 = vec![0.0f32; b * k1 * 2 * d];
+        ops::scatter_cols(&xh1, b * k1, 2 * d, 0, d, &mut cat_h1, threads);
+        ops::scatter_cols(&agg_h2, b * k1, 2 * d, d, d, &mut cat_h1, threads);
+        drop(agg_h2);
+        let mut out = vec![0.0f32; b * k1 * h];
+        sage.l1.fwd(params, &cat_h1, b * k1, true, &mut out, threads);
+        out
+    };
+
+    // Layer 1 on the targets.
+    let l1_b = {
+        let mut agg_h1 = vec![0.0f32; b * d];
+        ops::mean_rows_fwd(&xh1, b, k1, d, &mut agg_h1, threads);
+        drop(xh1);
+        let mut cat_b = vec![0.0f32; b * 2 * d];
+        ops::scatter_cols(&xb, b, 2 * d, 0, d, &mut cat_b, threads);
+        ops::scatter_cols(&agg_h1, b, 2 * d, d, d, &mut cat_b, threads);
+        drop(xb);
+        let mut out = vec![0.0f32; b * h];
+        sage.l1.fwd(params, &cat_b, b, true, &mut out, threads);
+        out
+    };
+
+    // Layer 2.
+    let mut agg2 = vec![0.0f32; b * h];
+    ops::mean_rows_fwd(&l1_h1, b, k1, h, &mut agg2, threads);
+    drop(l1_h1);
+    let mut cat2 = vec![0.0f32; b * 2 * h];
+    ops::scatter_cols(&l1_b, b, 2 * h, 0, h, &mut cat2, threads);
+    ops::scatter_cols(&agg2, b, 2 * h, h, h, &mut cat2, threads);
+    let mut hfin = vec![0.0f32; b * h];
+    sage.l2.fwd(params, &cat2, b, true, &mut hfin, threads);
+    Ok(hfin)
+}
+
 /// Reverse pass of [`encode_fwd`] for `dh (batch, hidden)` — the gradient
 /// w.r.t. the (post-ReLU) final representations. Accumulates into `grads`.
 pub fn encode_bwd(
@@ -237,6 +309,7 @@ pub fn clf_grads(
 }
 
 /// Prediction for the classification head: logits `(batch, n_classes)`.
+/// Runs the inference-only encoder — no activation cache is built.
 pub fn clf_pred(
     feat: &FeatSource,
     sage: &SageIdx,
@@ -248,9 +321,9 @@ pub fn clf_pred(
     threads: usize,
 ) -> Result<Vec<f32>> {
     let b = dims.batch;
-    let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let hfin = encode_infer(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
     let mut logits = vec![0.0f32; b * n_classes];
-    head.fwd(params, &cache.hfin, b, false, &mut logits, threads);
+    head.fwd(params, &hfin, b, false, &mut logits, threads);
     Ok(logits)
 }
 
@@ -356,6 +429,7 @@ pub fn link_grads(
 }
 
 /// Prediction for the link head: scores `(batch,)` for (u, v) pairs.
+/// Runs the inference-only encoder — no activation cache is built.
 pub fn link_pred(
     feat: &FeatSource,
     sage: &SageIdx,
@@ -365,9 +439,9 @@ pub fn link_pred(
     threads: usize,
 ) -> Result<Vec<f32>> {
     let (b, h) = (dims.batch, dims.hidden);
-    let cu = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
-    let cv = encode_fwd(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads)?;
+    let hu = encode_infer(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let hv = encode_infer(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads)?;
     let mut scores = vec![0.0f32; b];
-    ops::dot_rows(&cu.hfin, &cv.hfin, b, h, &mut scores, threads);
+    ops::dot_rows(&hu, &hv, b, h, &mut scores, threads);
     Ok(scores)
 }

@@ -121,6 +121,18 @@ impl Json {
     }
 }
 
+/// FNV-1a 64-bit hash — the integrity checksum the binary artifact
+/// headers carry (checkpoints, code files, serving bundles). Not
+/// cryptographic; it guards against truncation and bit rot, not tampering.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Read and parse a JSON file.
 pub fn from_file(path: &std::path::Path) -> Result<Json> {
     let text = std::fs::read_to_string(path)?;
@@ -160,6 +172,16 @@ mod tests {
         assert!(!v.get("d").unwrap().as_bool().unwrap());
         assert!(v.get("zzz").is_err());
         assert!(v.opt("zzz").is_none());
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors_and_sensitivity() {
+        // Reference FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Single-bit flips change the hash.
+        assert_ne!(fnv1a64(b"hashgnn"), fnv1a64(b"iashgnn"));
     }
 
     #[test]

@@ -1,0 +1,98 @@
+//! Request batcher: coalesce incoming node/edge queries into the
+//! fixed-size batches the inference model consumes.
+//!
+//! The minibatch executables take shape-fixed inputs (`batch` targets per
+//! encoder application), so ad-hoc query lists must be deduplicated,
+//! chunked to that size, and tail-padded. Padding repeats the group's
+//! last id — padded rows are computed and discarded, never returned —
+//! and deduplication preserves first-seen order, so the whole coalescing
+//! step is deterministic and cannot change any served value (per-row
+//! kernels make each output row a function of its own input row only).
+//! Edge queries reduce to node queries before reaching the batcher: the
+//! session flattens endpoints into one id list, embeds through the cache,
+//! and dots the pairs.
+
+use crate::{Error, Result};
+
+/// One pool-sized group: exactly `batch` ids, of which the first
+/// `real` are genuine queries and the rest are padding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchGroup {
+    pub ids: Vec<u32>,
+    pub real: usize,
+}
+
+/// A coalesced query: the unique ids in first-seen order plus the padded
+/// groups that cover them (`groups` concatenated and truncated to
+/// `unique.len()` equals `unique`).
+#[derive(Clone, Debug, Default)]
+pub struct Coalesced {
+    pub unique: Vec<u32>,
+    pub groups: Vec<BatchGroup>,
+}
+
+/// Fixed-batch request coalescer.
+#[derive(Clone, Copy, Debug)]
+pub struct Batcher {
+    batch: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize) -> Result<Self> {
+        if batch == 0 {
+            return Err(Error::Config("batcher batch size must be positive".into()));
+        }
+        Ok(Self { batch })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Dedup (first-seen order) and chunk into padded groups.
+    pub fn coalesce(&self, ids: &[u32]) -> Coalesced {
+        let mut unique: Vec<u32> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for &id in ids {
+            if seen.insert(id) {
+                unique.push(id);
+            }
+        }
+        let mut groups = Vec::with_capacity(unique.len().div_ceil(self.batch));
+        for chunk in unique.chunks(self.batch) {
+            let mut g = chunk.to_vec();
+            let last = *g.last().expect("chunks are non-empty");
+            g.resize(self.batch, last);
+            groups.push(BatchGroup { ids: g, real: chunk.len() });
+        }
+        Coalesced { unique, groups }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_in_first_seen_order_and_pads_the_tail() {
+        let b = Batcher::new(3).unwrap();
+        let c = b.coalesce(&[5, 1, 5, 9, 1, 2, 7]);
+        assert_eq!(c.unique, vec![5, 1, 9, 2, 7]);
+        assert_eq!(c.groups.len(), 2);
+        assert_eq!(c.groups[0], BatchGroup { ids: vec![5, 1, 9], real: 3 });
+        assert_eq!(c.groups[1], BatchGroup { ids: vec![2, 7, 7], real: 2 });
+        // Concatenated real prefixes reproduce `unique`.
+        let flat: Vec<u32> =
+            c.groups.iter().flat_map(|g| g.ids[..g.real].iter().copied()).collect();
+        assert_eq!(flat, c.unique);
+    }
+
+    #[test]
+    fn empty_query_yields_no_groups() {
+        let b = Batcher::new(4).unwrap();
+        let c = b.coalesce(&[]);
+        assert!(c.unique.is_empty() && c.groups.is_empty());
+        assert!(Batcher::new(0).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! The frozen serving artifact: everything inference needs, nothing
+//! training needs.
+//!
+//! A [`ServingBundle`] packs the manifest (the model contract), the
+//! trained parameter tensors (no AdamW moments — serving never updates),
+//! the bit-packed compositional codes (the paper's compressed node
+//! representation, §3.1), and the message-passing edge list (for GNN
+//! propagation / fan-out sampling). One file, self-contained: a serving
+//! process needs no artifacts directory, no graph generator, and no
+//! training code.
+//!
+//! On-disk format `HGNB0001` (all little-endian): 8-byte magic, payload
+//! byte count (u64), FNV-1a checksum of the payload (u64), then the
+//! payload — manifest JSON (length-prefixed), parameter tensors
+//! (rank + dims + f32 data each), optional codes block (`c, m, n, n_bits`
+//! + packed words), edge list, node count. Load verifies size and
+//! checksum before decoding anything, same policy as the checkpoint and
+//! code-file headers.
+
+use std::path::Path;
+
+use crate::cfg::CodingCfg;
+use crate::codes::{BitMatrix, CodeTable};
+use crate::params::ParamStore;
+use crate::runtime::{Manifest, Tensor};
+use crate::ser;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"HGNB0001";
+
+/// A frozen, self-contained serving artifact.
+#[derive(Clone)]
+pub struct ServingBundle {
+    pub manifest: Manifest,
+    /// Trained parameters in manifest order (shapes validated at
+    /// construction and load).
+    pub params: Vec<Tensor>,
+    /// Bit-packed compositional codes for the coded front-ends; `None`
+    /// for the NC baseline.
+    pub codes: Option<CodeTable>,
+    /// Undirected message-passing edges (empty for the plain decoder,
+    /// whose inference needs no graph).
+    pub edges: Vec<(u32, u32)>,
+    pub n_nodes: usize,
+}
+
+impl ServingBundle {
+    /// Assemble from a trained [`ParamStore`] (moments are dropped) plus
+    /// the serving-side data. Validates the parameters against the
+    /// manifest, the codes format against the hyper-parameters, and every
+    /// edge endpoint against `n_nodes`.
+    pub fn new(
+        manifest: Manifest,
+        store: &ParamStore,
+        codes: Option<CodeTable>,
+        edges: Vec<(u32, u32)>,
+        n_nodes: usize,
+    ) -> Result<Self> {
+        let bundle = Self { manifest, params: store.params.clone(), codes, edges, n_nodes };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.params.len() != self.manifest.params.len() {
+            return Err(Error::Shape(format!(
+                "bundle has {} param tensors, manifest '{}' declares {}",
+                self.params.len(),
+                self.manifest.name,
+                self.manifest.params.len()
+            )));
+        }
+        for (t, spec) in self.params.iter().zip(&self.manifest.params) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::Shape(format!(
+                    "bundle param '{}' has shape {:?}, manifest says {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+            t.as_f32()?;
+        }
+        if let Some(codes) = &self.codes {
+            if codes.n() != self.n_nodes {
+                return Err(Error::Shape(format!(
+                    "bundle codes cover {} entities, bundle declares {} nodes",
+                    codes.n(),
+                    self.n_nodes
+                )));
+            }
+            // When the manifest records a coding format, it must match.
+            if let (Ok(c), Ok(m)) =
+                (self.manifest.hyper_usize("c"), self.manifest.hyper_usize("m"))
+            {
+                if codes.coding.c != c || codes.coding.m != m {
+                    return Err(Error::Shape(format!(
+                        "bundle codes are (c={}, m={}), manifest '{}' wants (c={c}, m={m})",
+                        codes.coding.c, codes.coding.m, self.manifest.name
+                    )));
+                }
+            }
+        }
+        for &(u, v) in &self.edges {
+            if u as usize >= self.n_nodes || v as usize >= self.n_nodes {
+                return Err(Error::Shape(format!(
+                    "bundle edge ({u}, {v}) out of range for {} nodes",
+                    self.n_nodes
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialized parameter footprint in bytes (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|t| t.len() * 4).sum()
+    }
+
+    /// Packed-code footprint in bytes (the Table-2 accounting unit).
+    pub fn code_bytes(&self) -> usize {
+        self.codes.as_ref().map(|c| c.bits.storage_bytes()).unwrap_or(0)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut p: Vec<u8> = Vec::new();
+        let manifest_json = ser::to_string_pretty(&self.manifest.to_json());
+        p.extend_from_slice(&(manifest_json.len() as u64).to_le_bytes());
+        p.extend_from_slice(manifest_json.as_bytes());
+        p.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for t in &self.params {
+            let data = t.as_f32()?;
+            let shape = t.shape();
+            p.extend_from_slice(&(shape.len() as u64).to_le_bytes());
+            for &d in shape {
+                p.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in data {
+                p.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        match &self.codes {
+            None => p.push(0u8),
+            Some(codes) => {
+                p.push(1u8);
+                p.extend_from_slice(&(codes.coding.c as u64).to_le_bytes());
+                p.extend_from_slice(&(codes.coding.m as u64).to_le_bytes());
+                p.extend_from_slice(&(codes.bits.n() as u64).to_le_bytes());
+                p.extend_from_slice(&(codes.bits.n_bits() as u64).to_le_bytes());
+                for &w in codes.bits.words() {
+                    p.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+        p.extend_from_slice(&(self.edges.len() as u64).to_le_bytes());
+        for &(u, v) in &self.edges {
+            p.extend_from_slice(&u.to_le_bytes());
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        p.extend_from_slice(&(self.n_nodes as u64).to_le_bytes());
+
+        let mut buf = Vec::with_capacity(24 + p.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&ser::fnv1a64(&p).to_le_bytes());
+        buf.extend_from_slice(&p);
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)?;
+        if buf.len() < 24 || &buf[..8] != MAGIC {
+            return Err(Error::Config(format!(
+                "{}: not a serving bundle (bad magic or shorter than the header)",
+                path.display()
+            )));
+        }
+        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let p = &buf[24..];
+        if p.len() != expect_len {
+            return Err(Error::Config(format!(
+                "{}: bundle payload is {} bytes, header says {expect_len} (truncated?)",
+                path.display(),
+                p.len()
+            )));
+        }
+        if ser::fnv1a64(p) != expect_sum {
+            return Err(Error::Config(format!(
+                "{}: bundle checksum mismatch — file is corrupt",
+                path.display()
+            )));
+        }
+
+        let mut pos = 0usize;
+        let take = |p: &[u8], pos: &mut usize, n: usize| -> Result<()> {
+            if *pos + n > p.len() {
+                return Err(Error::Config("truncated serving bundle".into()));
+            }
+            Ok(())
+        };
+        let read_u64 = |p: &[u8], pos: &mut usize| -> Result<u64> {
+            take(p, pos, 8)?;
+            let v = u64::from_le_bytes(p[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            Ok(v)
+        };
+
+        let mlen = read_u64(p, &mut pos)? as usize;
+        take(p, &mut pos, mlen)?;
+        let mtext = std::str::from_utf8(&p[pos..pos + mlen])
+            .map_err(|_| Error::Config("bundle manifest is not UTF-8".into()))?;
+        pos += mlen;
+        let manifest = Manifest::from_json(&ser::parse(mtext)?)?;
+
+        let n_params = read_u64(p, &mut pos)? as usize;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            let rank = read_u64(p, &mut pos)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(p, &mut pos)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            take(p, &mut pos, count * 4)?;
+            let data: Vec<f32> = p[pos..pos + count * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += count * 4;
+            params.push(Tensor::F32 { shape, data });
+        }
+
+        take(p, &mut pos, 1)?;
+        let has_codes = p[pos] == 1;
+        pos += 1;
+        let codes = if has_codes {
+            let c = read_u64(p, &mut pos)? as usize;
+            let m = read_u64(p, &mut pos)? as usize;
+            let n = read_u64(p, &mut pos)? as usize;
+            let n_bits = read_u64(p, &mut pos)? as usize;
+            let wpr = n_bits.div_ceil(64);
+            take(p, &mut pos, n * wpr * 8)?;
+            let words: Vec<u64> = p[pos..pos + n * wpr * 8]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += n * wpr * 8;
+            let bits = BitMatrix::from_words(n, n_bits, words)?;
+            Some(CodeTable::new(bits, CodingCfg::new(c, m)?)?)
+        } else {
+            None
+        };
+
+        let n_edges = read_u64(p, &mut pos)? as usize;
+        take(p, &mut pos, n_edges * 8)?;
+        let mut edges = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
+            let u = u32::from_le_bytes(p[pos..pos + 4].try_into().unwrap());
+            let v = u32::from_le_bytes(p[pos + 4..pos + 8].try_into().unwrap());
+            pos += 8;
+            edges.push((u, v));
+        }
+        let n_nodes = read_u64(p, &mut pos)? as usize;
+
+        let bundle = Self { manifest, params, codes, edges, n_nodes };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::random_codes;
+    use crate::runtime::native::spec;
+
+    fn tiny_bundle() -> ServingBundle {
+        let m = spec::ReconBuild {
+            name: "b_recon".into(),
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            d_e: 2,
+            l: 2,
+            light: false,
+            batch: 4,
+            optim: crate::cfg::OptimCfg::adamw_default(),
+        }
+        .manifest();
+        let store = ParamStore::init(&m, 9);
+        let codes = random_codes(12, CodingCfg::new(4, 3).unwrap(), 5);
+        ServingBundle::new(m, &store, Some(codes), vec![(0, 1), (3, 11)], 12).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let b = tiny_bundle();
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle.bin");
+        b.save(&path).unwrap();
+        let back = ServingBundle::load(&path).unwrap();
+        assert_eq!(back.manifest.name, "b_recon");
+        assert_eq!(back.manifest.to_json(), b.manifest.to_json());
+        assert_eq!(back.params, b.params);
+        assert_eq!(back.codes.as_ref().unwrap().bits, b.codes.as_ref().unwrap().bits);
+        assert_eq!(back.codes.as_ref().unwrap().coding, b.codes.as_ref().unwrap().coding);
+        assert_eq!(back.edges, b.edges);
+        assert_eq!(back.n_nodes, 12);
+        assert_eq!(back.param_bytes(), b.param_bytes());
+        assert!(back.code_bytes() > 0);
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let b = tiny_bundle();
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.bin");
+        b.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = 24 + (bytes.len() - 24) / 2;
+        bytes[mid] ^= 0x55;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ServingBundle::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(ServingBundle::load(&path).is_err());
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let b = tiny_bundle();
+        // Codes with the wrong coding format.
+        let bad_codes = random_codes(12, CodingCfg::new(2, 6).unwrap(), 1);
+        let store = ParamStore { params: b.params.clone(), ..ParamStore::init(&b.manifest, 1) };
+        assert!(ServingBundle::new(
+            b.manifest.clone(),
+            &store,
+            Some(bad_codes),
+            vec![],
+            12
+        )
+        .is_err());
+        // Out-of-range edge.
+        assert!(
+            ServingBundle::new(b.manifest.clone(), &store, b.codes.clone(), vec![(0, 40)], 12)
+                .is_err()
+        );
+    }
+}

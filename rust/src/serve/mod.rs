@@ -1,0 +1,557 @@
+//! Batched inference/serving subsystem — the deployment payoff of the
+//! paper (§1, §4): once the codebook decoder + GNN are trained, every
+//! node is a compact bit vector, and embeddings / edge scores / class
+//! predictions are answered from that compressed representation alone.
+//!
+//! Pieces:
+//!
+//! - [`ServingBundle`] ([`bundle`]): the frozen artifact — manifest +
+//!   trained parameters + packed codes + message-passing edges — written
+//!   by `hashgnn export` and loaded by `hashgnn infer` / `hashgnn serve`;
+//! - [`Batcher`] ([`batcher`]): coalesces ad-hoc node/edge queries into
+//!   the fixed, pool-sized batches the executables consume (dedup +
+//!   tail-padding, both result-neutral);
+//! - [`EmbedCache`] ([`cache`]): bounded, exact-LRU cache of decoded
+//!   embeddings keyed by node id with precise hit/miss/eviction counters;
+//! - [`ServeSession`]: wires the three around an
+//!   [`InferModel`](crate::runtime::native::infer::InferModel) — the
+//!   forward-only model surface, so **no backward or optimizer code is
+//!   reachable from this module**.
+//!
+//! Every served value is bit-identical to the training-time forward on
+//! the same inputs: the inference forwards run the training kernels in
+//! the same order, the batcher only regroups row-independent work, the
+//! cache only replays previously computed bytes, and minibatch fan-out
+//! sampling is seeded **per node id**, so a node's neighborhood — and
+//! therefore its embedding — does not depend on which request batch it
+//! arrived in. `tests/serve_e2e.rs` asserts all of this at thread counts
+//! {1, 8}.
+//!
+//! This module is also the seam future remote/sharded serving backends
+//! plug into (ROADMAP "backend seam"): a remote backend replaces
+//! [`ServeSession`]'s local `InferModel` calls; the bundle, batcher and
+//! cache contracts stay.
+
+pub mod batcher;
+pub mod bundle;
+pub mod cache;
+
+pub use batcher::{BatchGroup, Batcher, Coalesced};
+pub use bundle::ServingBundle;
+pub use cache::{CacheStats, EmbedCache};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::graph::{Graph, NeighborSampler};
+use crate::rng::mix64;
+use crate::runtime::native::infer::InferModel;
+use crate::runtime::Tensor;
+use crate::ser::Json;
+use crate::{Error, Result};
+
+/// Session knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Compute threads (0 = all cores; never changes any served bit).
+    pub threads: usize,
+    /// Embedding-cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Seed for the per-node fan-out sampling of minibatch models.
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self { threads: 0, cache_capacity: 4096, seed: 7 }
+    }
+}
+
+/// One parsed serving request (the `hashgnn serve --oneshot` wire form).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Embed these node ids.
+    Embed(Vec<u32>),
+    /// Score these (u, v) edges.
+    Score(Vec<(u32, u32)>),
+    /// Predict classes for these node ids.
+    Classes(Vec<u32>),
+}
+
+fn id_from(v: &Json) -> Result<u32> {
+    let u = v.as_usize()?;
+    u32::try_from(u).map_err(|_| Error::Json(format!("node id {u} exceeds u32 range")))
+}
+
+fn ids_from(v: &Json) -> Result<Vec<u32>> {
+    v.as_arr()?.iter().map(id_from).collect()
+}
+
+impl Request {
+    /// Parse `{"op": "embed"|"score"|"classes", "nodes": [...]}` /
+    /// `{"op": "score", "edges": [[u, v], ...]}`.
+    pub fn from_json(v: &Json) -> Result<Request> {
+        match v.get("op")?.as_str()? {
+            "embed" => Ok(Request::Embed(ids_from(v.get("nodes")?)?)),
+            "classes" => Ok(Request::Classes(ids_from(v.get("nodes")?)?)),
+            "score" => {
+                let mut edges = Vec::new();
+                for pair in v.get("edges")?.as_arr()? {
+                    let p = pair.as_arr()?;
+                    if p.len() != 2 {
+                        return Err(Error::Json("edge must be a [u, v] pair".into()));
+                    }
+                    edges.push((id_from(&p[0])?, id_from(&p[1])?));
+                }
+                Ok(Request::Score(edges))
+            }
+            other => Err(Error::Json(format!(
+                "unknown serve op '{other}' (expected embed | score | classes)"
+            ))),
+        }
+    }
+}
+
+/// Parse a `{"requests": [...]}` envelope.
+pub fn parse_requests(v: &Json) -> Result<Vec<Request>> {
+    v.get("requests")?.as_arr()?.iter().map(Request::from_json).collect()
+}
+
+/// A live serving session over one frozen bundle: forward-only model,
+/// request batcher, embedding LRU.
+pub struct ServeSession {
+    bundle: ServingBundle,
+    model: InferModel,
+    /// Rebuilt message-passing graph (fan-out sampling for the minibatch
+    /// encoder; adjacency source for full batch). `None` for the plain
+    /// decoder, which needs no graph at all.
+    graph: Option<Graph>,
+    /// Pre-gathered all-node codes batch for full-batch models.
+    fb_batch: Vec<Tensor>,
+    /// Memoized full-graph representation matrix `(n, hidden)` for the
+    /// full-batch models: the bundle is frozen, so H never changes —
+    /// computed once on the first miss, row-copied ever after.
+    fb_h: Option<Vec<f32>>,
+    batcher: Batcher,
+    cache: EmbedCache,
+    threads: usize,
+    seed: u64,
+    d: usize,
+}
+
+impl ServeSession {
+    pub fn new(bundle: ServingBundle, opts: ServeOpts) -> Result<Self> {
+        let model = InferModel::from_manifest(&bundle.manifest)?;
+        if model.coded() && bundle.codes.is_none() {
+            return Err(Error::Config(format!(
+                "bundle for coded model '{}' carries no packed codes",
+                bundle.manifest.name
+            )));
+        }
+        let graph = if model.is_fullbatch() || model.is_minibatch_sage() {
+            Some(Graph::from_edges(bundle.n_nodes, &bundle.edges)?)
+        } else {
+            None
+        };
+        if model.is_fullbatch() {
+            let g = graph.as_ref().expect("full-batch session has a graph");
+            let adj = Arc::new(g.adj().normalized(bundle.manifest.hyper_str("adj")?)?);
+            model.bind_adjacency(adj)?;
+        }
+        let fb_batch = if model.is_fullbatch() && model.coded() {
+            let codes = bundle.codes.as_ref().expect("checked above");
+            let ids: Vec<u32> = (0..bundle.n_nodes as u32).collect();
+            let mut buf = Vec::new();
+            codes.gather_int_codes(&ids, &mut buf);
+            vec![Tensor::i32(vec![bundle.n_nodes, codes.coding.m], buf)?]
+        } else {
+            Vec::new()
+        };
+        let d = model.embed_dim();
+        let batcher = Batcher::new(model.serve_batch())?;
+        Ok(Self {
+            model,
+            graph,
+            fb_batch,
+            fb_h: None,
+            batcher,
+            cache: EmbedCache::new(opts.cache_capacity, d),
+            threads: opts.threads,
+            seed: opts.seed,
+            d,
+            bundle,
+        })
+    }
+
+    /// Width of the served embeddings.
+    pub fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.bundle.n_nodes
+    }
+
+    pub fn model(&self) -> &InferModel {
+        &self.model
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    fn check_ids(&self, ids: &[u32]) -> Result<()> {
+        for &id in ids {
+            if id as usize >= self.bundle.n_nodes {
+                return Err(Error::Shape(format!(
+                    "node id {id} out of range [0, {})",
+                    self.bundle.n_nodes
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve embeddings for `ids` (row-major, [`Self::embed_dim`] wide).
+    /// Cache hits are replayed; misses are deduplicated, coalesced into
+    /// pool-sized batches, computed, and inserted. Results are
+    /// bit-identical to a cold computation for any cache state, request
+    /// grouping, or thread count.
+    pub fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        self.check_ids(ids)?;
+        let d = self.d;
+        let mut out = vec![0.0f32; ids.len() * d];
+        let mut miss_slots: Vec<usize> = Vec::new();
+        let mut missing: Vec<u32> = Vec::new();
+        let mut missing_set = std::collections::HashSet::new();
+        for (i, &id) in ids.iter().enumerate() {
+            if let Some(e) = self.cache.get(id) {
+                out[i * d..(i + 1) * d].copy_from_slice(e);
+            } else {
+                miss_slots.push(i);
+                if missing_set.insert(id) {
+                    missing.push(id);
+                }
+            }
+        }
+        if !missing.is_empty() {
+            let fresh = self.compute_unique(&missing)?;
+            debug_assert_eq!(fresh.len(), missing.len() * d);
+            let index: HashMap<u32, usize> =
+                missing.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+            for &slot in &miss_slots {
+                let k = index[&ids[slot]];
+                out[slot * d..(slot + 1) * d].copy_from_slice(&fresh[k * d..(k + 1) * d]);
+            }
+            for (k, &id) in missing.iter().enumerate() {
+                self.cache.insert(id, fresh[k * d..(k + 1) * d].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serve dot-product scores for `(u, v)` edges, through the embedding
+    /// cache. The per-edge accumulation runs in ascending dimension order
+    /// — the same reduction the training link heads use — so scores are
+    /// bit-identical to the training-time forward.
+    pub fn score_edges(&mut self, edges: &[(u32, u32)]) -> Result<Vec<f32>> {
+        let mut ids = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            ids.push(u);
+            ids.push(v);
+        }
+        let emb = self.embed_nodes(&ids)?;
+        let d = self.d;
+        let mut scores = vec![0.0f32; edges.len()];
+        for (e, s) in scores.iter_mut().enumerate() {
+            let hu = &emb[(2 * e) * d..(2 * e + 1) * d];
+            let hv = &emb[(2 * e + 1) * d..(2 * e + 2) * d];
+            let mut acc = 0.0f32;
+            for (&a, &b) in hu.iter().zip(hv) {
+                acc += a * b;
+            }
+            *s = acc;
+        }
+        Ok(scores)
+    }
+
+    /// Serve class predictions (logits + argmax) for `ids`; errors for
+    /// models without a classification head.
+    pub fn predict_classes(&mut self, ids: &[u32]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let k = self.model.n_classes().ok_or_else(|| {
+            Error::Runtime(format!(
+                "model '{}' has no classification head",
+                self.bundle.manifest.name
+            ))
+        })?;
+        let emb = self.embed_nodes(ids)?;
+        let logits =
+            self.model.head_logits(&self.bundle.params, &emb, ids.len(), self.threads)?;
+        let argmax = logits
+            .chunks(k)
+            .map(|row| {
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect();
+        Ok((logits, argmax))
+    }
+
+    /// Compute embeddings for a deduplicated id list (cache-free inner
+    /// path shared by hits-and-misses assembly above).
+    fn compute_unique(&mut self, unique: &[u32]) -> Result<Vec<f32>> {
+        if self.model.is_fullbatch() {
+            self.compute_fullbatch(unique)
+        } else if self.model.is_minibatch_sage() {
+            self.compute_sage(unique)
+        } else {
+            self.compute_decoder(unique)
+        }
+    }
+
+    fn compute_decoder(&self, unique: &[u32]) -> Result<Vec<f32>> {
+        let codes = self.bundle.codes.as_ref().expect("coded session has codes");
+        let m = codes.coding.m;
+        let d = self.d;
+        let co = self.batcher.coalesce(unique);
+        let mut out = Vec::with_capacity(unique.len() * d);
+        let mut buf = Vec::new();
+        for g in &co.groups {
+            codes.gather_int_codes(&g.ids, &mut buf);
+            let t = Tensor::i32(vec![g.ids.len(), m], buf.clone())?;
+            let emb = self.model.embed_nodes(&self.bundle.params, &[t], self.threads)?;
+            out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
+        }
+        Ok(out)
+    }
+
+    fn compute_sage(&self, unique: &[u32]) -> Result<Vec<f32>> {
+        let graph = self.graph.as_ref().expect("sage session has a graph");
+        let (k1, k2) = self.model.fanout().expect("sage model has fan-out dims");
+        let sampler = NeighborSampler::new(graph, k1, k2);
+        let d = self.d;
+        let co = self.batcher.coalesce(unique);
+        let mut out = Vec::with_capacity(unique.len() * d);
+        for g in &co.groups {
+            // Per-node seeded fan-out: node u's neighborhood (and hence
+            // its embedding) never depends on the batch it rides in.
+            let mut hop1: Vec<u32> = Vec::with_capacity(g.ids.len() * k1);
+            let mut hop2: Vec<u32> = Vec::with_capacity(g.ids.len() * k1 * k2);
+            for &id in &g.ids {
+                let s = sampler.sample_seeded(&[id], mix64(self.seed ^ (id as u64 + 1)));
+                hop1.extend_from_slice(&s.hop1);
+                hop2.extend_from_slice(&s.hop2);
+            }
+            let tensors = self.node_set_tensors(&g.ids, &hop1, &hop2)?;
+            let emb = self.model.embed_nodes(&self.bundle.params, &tensors, self.threads)?;
+            out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
+        }
+        Ok(out)
+    }
+
+    /// The three node-set tensors one encoder application consumes:
+    /// gathered codes for the coded front-end, raw ids for NC.
+    fn node_set_tensors(
+        &self,
+        targets: &[u32],
+        hop1: &[u32],
+        hop2: &[u32],
+    ) -> Result<Vec<Tensor>> {
+        match (&self.bundle.codes, self.model.code_m()) {
+            (Some(codes), Some(m)) => {
+                let mut buf = Vec::new();
+                let gather = |ids: &[u32], buf: &mut Vec<i32>| -> Result<Tensor> {
+                    codes.gather_int_codes(ids, buf);
+                    Tensor::i32(vec![ids.len(), m], buf.clone())
+                };
+                Ok(vec![
+                    gather(targets, &mut buf)?,
+                    gather(hop1, &mut buf)?,
+                    gather(hop2, &mut buf)?,
+                ])
+            }
+            _ => {
+                let ids =
+                    |v: &[u32]| Tensor::i32(vec![v.len()], v.iter().map(|&x| x as i32).collect());
+                Ok(vec![ids(targets)?, ids(hop1)?, ids(hop2)?])
+            }
+        }
+    }
+
+    fn compute_fullbatch(&mut self, unique: &[u32]) -> Result<Vec<f32>> {
+        if self.fb_h.is_none() {
+            let emb =
+                self.model.embed_nodes(&self.bundle.params, &self.fb_batch, self.threads)?;
+            let data = match emb {
+                Tensor::F32 { data, .. } => data,
+                Tensor::I32 { .. } => {
+                    return Err(Error::Runtime("embed_nodes produced a non-f32 tensor".into()))
+                }
+            };
+            self.fb_h = Some(data);
+        }
+        let vals = self.fb_h.as_deref().expect("filled above");
+        let d = self.d;
+        let mut out = Vec::with_capacity(unique.len() * d);
+        for &id in unique {
+            let r = id as usize;
+            out.extend_from_slice(&vals[r * d..(r + 1) * d]);
+        }
+        Ok(out)
+    }
+
+    /// Dispatch one wire request; the response is a JSON object.
+    pub fn handle(&mut self, req: &Request) -> Result<Json> {
+        match req {
+            Request::Embed(ids) => {
+                let emb = self.embed_nodes(ids)?;
+                let d = self.d;
+                let rows: Vec<Json> = (0..ids.len())
+                    .map(|i| Json::arr_num(emb[i * d..(i + 1) * d].iter().map(|&x| x as f64)))
+                    .collect();
+                Ok(Json::obj(vec![
+                    ("op", Json::str("embed")),
+                    ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+                    ("dim", Json::num(d as f64)),
+                    ("embeddings", Json::Arr(rows)),
+                ]))
+            }
+            Request::Score(edges) => {
+                let scores = self.score_edges(edges)?;
+                Ok(Json::obj(vec![
+                    ("op", Json::str("score")),
+                    (
+                        "edges",
+                        Json::Arr(
+                            edges
+                                .iter()
+                                .map(|&(u, v)| Json::arr_num([u as f64, v as f64]))
+                                .collect(),
+                        ),
+                    ),
+                    ("scores", Json::arr_num(scores.iter().map(|&s| s as f64))),
+                ]))
+            }
+            Request::Classes(ids) => {
+                let (_logits, argmax) = self.predict_classes(ids)?;
+                Ok(Json::obj(vec![
+                    ("op", Json::str("classes")),
+                    ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+                    ("classes", Json::Arr(argmax.iter().map(|&c| Json::num(c as f64)).collect())),
+                ]))
+            }
+        }
+    }
+
+    /// Run a request batch and wrap the responses with cache statistics.
+    pub fn handle_all(&mut self, reqs: &[Request]) -> Result<Json> {
+        let responses: Vec<Json> = reqs.iter().map(|r| self.handle(r)).collect::<Result<_>>()?;
+        let s = self.cache_stats();
+        Ok(Json::obj(vec![
+            ("responses", Json::Arr(responses)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(s.hits as f64)),
+                    ("misses", Json::num(s.misses as f64)),
+                    ("evictions", Json::num(s.evictions as f64)),
+                    ("len", Json::num(s.len as f64)),
+                    ("capacity", Json::num(s.capacity as f64)),
+                ]),
+            ),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::CodingCfg;
+    use crate::codes::random_codes;
+    use crate::params::ParamStore;
+    use crate::runtime::native::spec;
+    use crate::ser;
+
+    fn recon_session(cache: usize) -> ServeSession {
+        let m = spec::ReconBuild {
+            name: "s_recon".into(),
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            d_e: 2,
+            l: 2,
+            light: false,
+            batch: 3,
+            optim: crate::cfg::OptimCfg::adamw_default(),
+        }
+        .manifest();
+        let store = ParamStore::init(&m, 4);
+        let codes = random_codes(10, CodingCfg::new(4, 3).unwrap(), 5);
+        let bundle = ServingBundle::new(m, &store, Some(codes), vec![], 10).unwrap();
+        ServeSession::new(bundle, ServeOpts { threads: 1, cache_capacity: cache, seed: 3 })
+            .unwrap()
+    }
+
+    #[test]
+    fn decoder_session_serves_and_caches() {
+        let mut cold = recon_session(0);
+        let mut warm = recon_session(8);
+        let ids = [0u32, 7, 3, 7, 9];
+        let a = cold.embed_nodes(&ids).unwrap();
+        let b = warm.embed_nodes(&ids).unwrap();
+        assert_eq!(a.len(), ids.len() * 2);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // Second pass: all hits, identical bytes.
+        let c = warm.embed_nodes(&ids).unwrap();
+        assert!(b.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let s = warm.cache_stats();
+        // First pass: 5 lookups, all misses (dup id 7 counted per lookup);
+        // 4 unique entries inserted. Second pass: 5 hits.
+        assert_eq!((s.hits, s.misses, s.len), (5, 5, 4));
+        // Scores equal manual dots of the embeddings.
+        let scores = warm.score_edges(&[(0, 7)]).unwrap();
+        let manual = b[0] * b[2] + b[1] * b[3]; // rows 0 and 1 of first pass
+        assert_eq!(scores[0].to_bits(), manual.to_bits());
+        // No head on the plain decoder.
+        assert!(warm.predict_classes(&[0]).is_err());
+        // Out-of-range ids rejected.
+        assert!(warm.embed_nodes(&[10]).is_err());
+    }
+
+    #[test]
+    fn oneshot_request_wire_roundtrip() {
+        let mut session = recon_session(8);
+        let v = ser::parse(
+            r#"{"requests": [
+                {"op": "embed", "nodes": [1, 2]},
+                {"op": "score", "edges": [[1, 2], [0, 3]]}
+            ]}"#,
+        )
+        .unwrap();
+        let reqs = parse_requests(&v).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0], Request::Embed(vec![1, 2]));
+        let out = session.handle_all(&reqs).unwrap();
+        let responses = out.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(responses.len(), 2);
+        assert_eq!(
+            responses[1].get("scores").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert!(out.get("cache").unwrap().get("hits").is_ok());
+        // Unknown op rejected.
+        let bad = ser::parse(r#"{"op": "train", "nodes": []}"#).unwrap();
+        assert!(Request::from_json(&bad).is_err());
+        // Ids beyond u32 must error, not silently wrap onto a valid node.
+        let too_big = ser::parse(r#"{"op": "embed", "nodes": [4294967296]}"#).unwrap();
+        assert!(Request::from_json(&too_big).is_err());
+        let bad_edge = ser::parse(r#"{"op": "score", "edges": [[0, 4294967296]]}"#).unwrap();
+        assert!(Request::from_json(&bad_edge).is_err());
+    }
+}

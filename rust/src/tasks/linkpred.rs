@@ -87,20 +87,21 @@ pub fn run_fullbatch(
     opts: RunOpts,
 ) -> Result<LinkOutcome> {
     let model = engine.load(&format!("link_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
-    run_fullbatch_model(&model, frontend, graph, hits_k, opts)
+    run_fullbatch_model(&model, frontend, graph, hits_k, opts).map(|(out, _store)| out)
 }
 
 /// Drive one already-loaded full-batch link-prediction model (any
 /// backend, any scale). Native: the training-edge graph's normalized
 /// adjacency is bound as a sparse CSR; HLO: densified (size-guarded) into
-/// the batch.
+/// the batch. Returns the metrics together with the best-validation
+/// parameters for checkpointing/export.
 pub fn run_fullbatch_model(
     model: &Model,
     frontend: Frontend,
     graph: &Graph,
     hits_k: usize,
     opts: RunOpts,
-) -> Result<LinkOutcome> {
+) -> Result<(LinkOutcome, ParamStore)> {
     let n = model.manifest.hyper_usize("n")?;
     if graph.n_nodes() != n {
         return Err(Error::Shape(format!("model expects n={n}, got {}", graph.n_nodes())));
@@ -129,6 +130,7 @@ pub fn run_fullbatch_model(
     }
 
     let mut best = LinkOutcome { val_hits: f64::MIN, test_hits: 0.0, final_loss: f32::NAN };
+    let mut best_store = store.clone();
     let mut last_loss = f32::NAN;
     // Pre-draw the evaluation negative pool once (shared across epochs,
     // OGB-style fixed negatives).
@@ -157,11 +159,12 @@ pub fn run_fullbatch_model(
             let test_hits = link_hits_at_k(&score(&split.test)?, &neg_scores, hits_k);
             if val_hits > best.val_hits {
                 best = LinkOutcome { val_hits, test_hits, final_loss: last_loss };
+                best_store = store.clone();
             }
         }
     }
     best.final_loss = last_loss;
-    Ok(best)
+    Ok((best, best_store))
 }
 
 // ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@
 //! | [`sage`]       | minibatch GraphSAGE pipeline (§4, e2e example) |
 //! | [`merchant`]   | Table 3 (§5.3 merchant-category identification) |
 //! | [`memory`]     | Tables 2, 4 and 6 (memory accounting) |
+//! | [`serve`]      | serving-bundle export (§1/§4 deployment payoff) |
 
 pub mod coding;
 pub mod collisions;
@@ -19,6 +20,7 @@ pub mod merchant;
 pub mod nodeclf;
 pub mod recon;
 pub mod sage;
+pub mod serve;
 
 use crate::graph::{generate, Graph};
 use crate::Result;

@@ -140,7 +140,8 @@ pub fn all_codes_tensor(
 
 /// One full-batch node-classification run; returns val/test accuracy at
 /// the best validation epoch. Resolves the Table-1 cell's model through
-/// the engine's backend policy, then delegates to [`run_fullbatch_model`].
+/// the engine's backend policy, then delegates to [`run_fullbatch_model`]
+/// (whose trained parameters this convenience wrapper discards).
 pub fn run_fullbatch(
     engine: &Engine,
     gnn: GnnKind,
@@ -149,19 +150,22 @@ pub fn run_fullbatch(
     opts: RunOpts,
 ) -> Result<CellOutcome> {
     let model = engine.load(&format!("node_fb_{}_{}", gnn.as_str(), frontend.artifact_tag()))?;
-    run_fullbatch_model(&model, frontend, graph, opts)
+    run_fullbatch_model(&model, frontend, graph, opts).map(|(out, _store)| out)
 }
 
 /// Drive one already-loaded full-batch node-classification model (any
 /// backend, any scale — tests use small custom builds). On the native
 /// backend the graph's normalized adjacency is bound as a sparse CSR; on
-/// HLO it is densified (size-guarded) into the batch.
+/// HLO it is densified (size-guarded) into the batch. Returns the cell
+/// metrics together with the best-validation parameters, so callers can
+/// checkpoint or export the trained model (`hashgnn train --ckpt-out` →
+/// `hashgnn export`).
 pub fn run_fullbatch_model(
     model: &Model,
     frontend: Frontend,
     graph: &Graph,
     opts: RunOpts,
-) -> Result<CellOutcome> {
+) -> Result<(CellOutcome, ParamStore)> {
     let n = model.manifest.hyper_usize("n")?;
     let k = model.manifest.hyper_usize("n_classes")?;
     if graph.n_nodes() != n {
@@ -209,6 +213,7 @@ pub fn run_fullbatch_model(
     let pred_batch: Vec<Tensor> = batch[..batch.len() - 2].to_vec(); // codes? (+ dense adj)
 
     let mut best = CellOutcome { val: f64::MIN, test: 0.0, final_loss: f32::NAN };
+    let mut best_store = store.clone();
     let mut last_loss = f32::NAN;
     for epoch in 0..opts.epochs {
         last_loss = train::run_step(&model, &mut store, &batch)?;
@@ -217,11 +222,12 @@ pub fn run_fullbatch_model(
             let (val, test) = split_accuracy(logits.as_f32()?, n, k, labels, &split);
             if val > best.val {
                 best = CellOutcome { val, test, final_loss: last_loss };
+                best_store = store.clone();
             }
         }
     }
     best.final_loss = last_loss;
-    Ok(best)
+    Ok((best, best_store))
 }
 
 /// Accuracy over the val and test index sets.

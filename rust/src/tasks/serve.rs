@@ -1,0 +1,194 @@
+//! Serving drivers: assemble the frozen [`ServingBundle`] from training
+//! artifacts (`hashgnn export`) and keep the graph/codes recipes in one
+//! place so the train and export CLIs cannot drift apart.
+//!
+//! The bundle must freeze exactly what training saw: the same synthetic
+//! graph (same generator, same seed), the same message-passing edge set
+//! (link prediction trains on the 80% train split only — no leakage into
+//! serving either), and the same compositional codes (Algorithm 1 over
+//! the same adjacency with the same seed, or a pre-encoded code file).
+//! Everything here is deterministic in `(manifest, seed)`.
+
+use std::path::Path;
+
+use crate::cfg::{Coder, CodingCfg};
+use crate::codes::{BitMatrix, CodeTable};
+use crate::graph::generate::{sbm, SbmCfg};
+use crate::graph::Graph;
+use crate::params::ParamStore;
+use crate::runtime::Manifest;
+use crate::serve::ServingBundle;
+use crate::tasks::coding::{make_codes, Aux};
+use crate::tasks::linkpred::split_edges;
+use crate::tasks::T1Dataset;
+use crate::{Error, Result};
+
+/// Regenerate the graph `hashgnn train` used for this manifest's task:
+/// the §4 SBM for the minibatch pipeline, the Table-1 OGB analogs for
+/// the full-batch grid, nothing for the plain decoder. Deterministic in
+/// `(manifest, seed)`, and validated against the manifest's `n`.
+pub fn training_graph(manifest: &Manifest, seed: u64) -> Result<Option<Graph>> {
+    let task = manifest.hyper_str("task")?;
+    let graph = match task {
+        "recon" => return Ok(None),
+        "sage_minibatch" | "sage_minibatch_link" => {
+            let n = manifest.hyper_usize("n")?;
+            let k = manifest.hyper_usize("n_classes")?;
+            sbm(SbmCfg::new(n, k, 12.0, 2.0), seed)?
+        }
+        "nodeclf_fullbatch" => T1Dataset::Arxiv.generate(seed)?,
+        "linkpred_fullbatch" => T1Dataset::Collab.generate(seed)?,
+        other => {
+            return Err(Error::Config(format!(
+                "no serving-graph recipe for task '{other}'"
+            )))
+        }
+    };
+    let n = manifest.hyper_usize("n")?;
+    if graph.n_nodes() != n {
+        return Err(Error::Shape(format!(
+            "regenerated training graph has {} nodes, manifest '{}' wants {n} — export the \
+             bundle through the API (ServingBundle::new) for custom scales",
+            graph.n_nodes(),
+            manifest.name
+        )));
+    }
+    Ok(Some(graph))
+}
+
+/// The message-passing edge set serving should propagate over — exactly
+/// what training bound: the 80% train split for full-batch link
+/// prediction (same split seed derivation as the training driver), the
+/// whole graph otherwise.
+pub fn serving_edges(manifest: &Manifest, graph: &Graph, seed: u64) -> Result<Vec<(u32, u32)>> {
+    if manifest.hyper_str("task")? == "linkpred_fullbatch" {
+        Ok(split_edges(graph, seed ^ 0x5A5A)?.train)
+    } else {
+        Ok(graph.undirected_edges())
+    }
+}
+
+/// Export options (`hashgnn export` flags).
+#[derive(Clone, Debug)]
+pub struct ExportOpts {
+    /// Coding scheme when codes are regenerated (hash = Algorithm 1).
+    pub coder: Coder,
+    /// Pre-encoded bit-packed code file (`hashgnn encode --out`); when
+    /// absent, codes are regenerated from the training graph.
+    pub codes_file: Option<std::path::PathBuf>,
+    /// The training run's seed (graph, split and codes all derive from it).
+    pub seed: u64,
+}
+
+/// Assemble a [`ServingBundle`] for a trained checkpoint: regenerate the
+/// training graph and edge set, load or regenerate the codes, and
+/// validate everything against the manifest.
+pub fn export_bundle(
+    manifest: &Manifest,
+    store: &ParamStore,
+    opts: &ExportOpts,
+) -> Result<ServingBundle> {
+    let task = manifest.hyper_str("task")?;
+    let coded = if task == "recon" { true } else { manifest.hyper_bool("coded")? };
+    let graph = training_graph(manifest, opts.seed)?;
+    let edges = match &graph {
+        Some(g) => serving_edges(manifest, g, opts.seed)?,
+        None => Vec::new(),
+    };
+    let codes = if coded {
+        let coding =
+            CodingCfg::new(manifest.hyper_usize("c")?, manifest.hyper_usize("m")?)?;
+        Some(match &opts.codes_file {
+            Some(path) => CodeTable::new(BitMatrix::load(path)?, coding)?,
+            None => {
+                let g = graph.as_ref().ok_or_else(|| {
+                    Error::Config(
+                        "the plain decoder has no training graph to encode from — pass a \
+                         pre-encoded code file (--codes, from `hashgnn encode --out`)"
+                            .into(),
+                    )
+                })?;
+                // Mirror the training drivers' codes source: link prediction
+                // encodes the train-edge graph, everything else the full one.
+                if task == "linkpred_fullbatch" {
+                    let train_graph = Graph::from_edges(g.n_nodes(), &edges)?;
+                    make_codes(&Aux::Graph(&train_graph), opts.coder, coding, opts.seed)?
+                } else {
+                    make_codes(&Aux::Graph(g), opts.coder, coding, opts.seed)?
+                }
+            }
+        })
+    } else {
+        None
+    };
+    let n_nodes = match (&graph, &codes) {
+        (Some(g), _) => g.n_nodes(),
+        (None, Some(c)) => c.n(),
+        (None, None) => {
+            return Err(Error::Config("bundle would carry neither graph nor codes".into()))
+        }
+    };
+    ServingBundle::new(manifest.clone(), store, codes, edges, n_nodes)
+}
+
+/// Export and write to disk; returns the bundle for reporting.
+pub fn export_bundle_to(
+    manifest: &Manifest,
+    store: &ParamStore,
+    opts: &ExportOpts,
+    out: &Path,
+) -> Result<ServingBundle> {
+    let bundle = export_bundle(manifest, store, opts)?;
+    bundle.save(out)?;
+    Ok(bundle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spec;
+
+    #[test]
+    fn training_graph_recipes_match_tasks() {
+        let sage = spec::builtin("sage_mb_coded").unwrap();
+        let g = training_graph(&sage, 7).unwrap().unwrap();
+        assert_eq!(g.n_nodes(), 10_000);
+        assert!(g.labels().is_some());
+
+        let fb = spec::builtin("node_fb_sgc_coded").unwrap();
+        let g = training_graph(&fb, 7).unwrap().unwrap();
+        assert_eq!(g.n_nodes(), 1024);
+
+        let recon = spec::builtin("recon_c16_m32").unwrap();
+        assert!(training_graph(&recon, 7).unwrap().is_none());
+    }
+
+    #[test]
+    fn linkpred_serving_edges_are_the_train_split() {
+        let fb = spec::builtin("link_fb_sgc_coded").unwrap();
+        let g = training_graph(&fb, 3).unwrap().unwrap();
+        let edges = serving_edges(&fb, &g, 3).unwrap();
+        let all = g.undirected_edges();
+        assert!(edges.len() < all.len(), "train split is a strict subset");
+        // Same derivation as the training driver's split.
+        let again = split_edges(&g, 3 ^ 0x5A5A).unwrap().train;
+        assert_eq!(edges, again);
+    }
+
+    #[test]
+    fn export_regenerates_codes_deterministically() {
+        let m = spec::builtin("node_fb_sgc_coded").unwrap();
+        let store = ParamStore::init(&m, 7);
+        let opts = ExportOpts { coder: Coder::Hash, codes_file: None, seed: 7 };
+        let a = export_bundle(&m, &store, &opts).unwrap();
+        let b = export_bundle(&m, &store, &opts).unwrap();
+        assert_eq!(a.codes.as_ref().unwrap().bits, b.codes.as_ref().unwrap().bits);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.n_nodes, 1024);
+        // The plain decoder demands a code file.
+        let recon = spec::builtin("recon_c16_m32").unwrap();
+        let rstore = ParamStore::init(&recon, 7);
+        let err = export_bundle(&recon, &rstore, &opts).unwrap_err();
+        assert!(format!("{err}").contains("hashgnn encode"), "{err}");
+    }
+}

@@ -1,0 +1,327 @@
+//! Inference/training forward parity — the fwd/bwd-split contract.
+//!
+//! For every model family the inference-only surface
+//! ([`InferModel`]) must reproduce the training-time forward **bit for
+//! bit**: the loss it computes equals the loss the fused train step
+//! emits for the same parameters and batch, and its
+//! embeddings/logits/scores equal the train-fused predict path — at
+//! thread counts {1, 8}. Covered: decoder recon, minibatch SAGE
+//! (clf + link), and all four full-batch architectures (clf for each,
+//! link for GCN and SAGE).
+
+use std::sync::Arc;
+
+use hashgnn::cfg::{GnnKind, OptimCfg};
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
+use hashgnn::rng::{Rng, Xoshiro256pp};
+use hashgnn::runtime::native::infer::InferModel;
+use hashgnn::runtime::native::spec::{FullBatchBuild, ReconBuild, SageMbBuild};
+use hashgnn::runtime::native::NativeModel;
+use hashgnn::runtime::{Manifest, Tensor};
+use hashgnn::sparse::Csr;
+
+// ---------------------------------------------------------------------------
+// Deterministic batch builders
+// ---------------------------------------------------------------------------
+
+fn codes_tensor(rows: usize, m: usize, c: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let data: Vec<i32> = (0..rows * m).map(|_| rng.index(c) as i32).collect();
+    Tensor::i32(vec![rows, m], data).unwrap()
+}
+
+fn ids_tensor(rows: usize, n: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let data: Vec<i32> = (0..rows).map(|_| rng.index(n) as i32).collect();
+    Tensor::i32(vec![rows], data).unwrap()
+}
+
+fn f32_tensor(shape: Vec<usize>, std: f32, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let n: usize = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut data, 0.0, std);
+    Tensor::f32(shape, data).unwrap()
+}
+
+fn edges_tensor(e: usize, n: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let data: Vec<i32> = (0..e * 2).map(|_| rng.index(n) as i32).collect();
+    Tensor::i32(vec![e, 2], data).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Parity harness
+// ---------------------------------------------------------------------------
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Loss parity: `InferModel::loss` equals the loss the fused train step
+/// emits, bitwise, at threads {1, 8}; plus thread-count invariance.
+fn assert_loss_parity(manifest: &Manifest, batch: &[Tensor], adj: Option<&Arc<Csr>>) {
+    let nm = NativeModel::from_manifest(manifest).unwrap();
+    let im = InferModel::from_manifest(manifest).unwrap();
+    if let Some(a) = adj {
+        nm.bind_adjacency(a.clone()).unwrap();
+        im.bind_adjacency(a.clone()).unwrap();
+    }
+    let store = ParamStore::init(manifest, 33);
+    let mut reference: Option<u32> = None;
+    for threads in [1usize, 8] {
+        let outs = nm.train_step(&store.train_inputs(batch), threads).unwrap();
+        let train_loss = outs.last().unwrap().scalar().unwrap();
+        let infer_loss = im.loss(&store.params, batch, threads).unwrap();
+        assert_eq!(
+            train_loss.to_bits(),
+            infer_loss.to_bits(),
+            "{}: fwd-only loss {infer_loss} != train-step loss {train_loss} (threads={threads})",
+            manifest.name
+        );
+        match reference {
+            None => reference = Some(train_loss.to_bits()),
+            Some(r) => assert_eq!(r, train_loss.to_bits(), "{}: thread variance", manifest.name),
+        }
+    }
+}
+
+/// Prediction parity: the named `InferModel` method equals the
+/// train-fused predict executable output, bitwise, at threads {1, 8}.
+fn assert_pred_parity(
+    manifest: &Manifest,
+    pred_batch: &[Tensor],
+    adj: Option<&Arc<Csr>>,
+    call: impl Fn(&InferModel, &[Tensor], &[Tensor], usize) -> Tensor,
+) {
+    let nm = NativeModel::from_manifest(manifest).unwrap();
+    let im = InferModel::from_manifest(manifest).unwrap();
+    if let Some(a) = adj {
+        nm.bind_adjacency(a.clone()).unwrap();
+        im.bind_adjacency(a.clone()).unwrap();
+    }
+    let store = ParamStore::init(manifest, 33);
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 8] {
+        let trained = nm.predict(&store.params, pred_batch, threads).unwrap();
+        let inferred = call(&im, &store.params, pred_batch, threads);
+        assert_eq!(trained.shape(), inferred.shape(), "{}: shape", manifest.name);
+        assert_bits_equal(
+            trained.as_f32().unwrap(),
+            inferred.as_f32().unwrap(),
+            &format!("{} (threads={threads})", manifest.name),
+        );
+        let bits: Vec<u32> = inferred.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(*r, bits, "{}: thread variance", manifest.name),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder recon
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recon_decoder_parity() {
+    for light in [false, true] {
+        let manifest = ReconBuild {
+            name: format!("p_recon{}", if light { "_l" } else { "" }),
+            c: 4,
+            m: 3,
+            d_c: 5,
+            d_m: 6,
+            d_e: 4,
+            l: 2,
+            light,
+            batch: 6,
+            optim: OptimCfg::adamw_default(),
+        }
+        .manifest();
+        let codes = codes_tensor(6, 3, 4, 9);
+        let batch = vec![codes.clone(), f32_tensor(vec![6, 4], 0.5, 10)];
+        assert_loss_parity(&manifest, &batch, None);
+        assert_pred_parity(&manifest, &[codes], None, |im, p, b, t| {
+            im.embed_nodes(p, b, t).unwrap()
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minibatch SAGE (clf + link, coded + nc)
+// ---------------------------------------------------------------------------
+
+fn mb_build(coded: bool, link: bool) -> SageMbBuild {
+    SageMbBuild {
+        name: format!("p_mb_{}{}", if coded { "c" } else { "nc" }, if link { "_l" } else { "" }),
+        coded,
+        link,
+        n: 30,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn mb_node_set(build: &SageMbBuild, seed: u64) -> Vec<Tensor> {
+    let (b, k1, k2) = (build.batch, build.k1, build.k2);
+    if build.coded {
+        vec![
+            codes_tensor(b, build.m, build.c, seed),
+            codes_tensor(b * k1, build.m, build.c, seed ^ 1),
+            codes_tensor(b * k1 * k2, build.m, build.c, seed ^ 2),
+        ]
+    } else {
+        vec![
+            ids_tensor(b, build.n, seed),
+            ids_tensor(b * k1, build.n, seed ^ 1),
+            ids_tensor(b * k1 * k2, build.n, seed ^ 2),
+        ]
+    }
+}
+
+#[test]
+fn sage_minibatch_clf_parity() {
+    for coded in [true, false] {
+        let build = mb_build(coded, false);
+        let manifest = build.manifest();
+        let mut rng = Xoshiro256pp::seed_from_u64(0x51);
+        let labels: Vec<i32> =
+            (0..build.batch).map(|_| rng.index(build.n_classes) as i32).collect();
+        let node_set = mb_node_set(&build, 17);
+        let mut batch = node_set.clone();
+        batch.push(Tensor::i32(vec![build.batch], labels).unwrap());
+        assert_loss_parity(&manifest, &batch, None);
+        assert_pred_parity(&manifest, &node_set, None, |im, p, b, t| {
+            im.predict_classes(p, b, t).unwrap()
+        });
+        // embed_nodes serves the (batch, hidden) representations.
+        let im = InferModel::from_manifest(&manifest).unwrap();
+        let store = ParamStore::init(&manifest, 33);
+        let h = im.embed_nodes(&store.params, &node_set, 1).unwrap();
+        assert_eq!(h.shape(), &[build.batch, build.hidden]);
+    }
+}
+
+#[test]
+fn sage_minibatch_link_parity() {
+    let build = mb_build(true, true);
+    let manifest = build.manifest();
+    let mut train_batch = mb_node_set(&build, 23);
+    train_batch.extend(mb_node_set(&build, 31));
+    train_batch.extend(mb_node_set(&build, 47));
+    assert_loss_parity(&manifest, &train_batch, None);
+    let mut pred_batch = mb_node_set(&build, 23);
+    pred_batch.extend(mb_node_set(&build, 31));
+    assert_pred_parity(&manifest, &pred_batch, None, |im, p, b, t| {
+        im.score_edges(p, b, t).unwrap()
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Full-batch grid (all four architectures)
+// ---------------------------------------------------------------------------
+
+fn fb_build(gnn: GnnKind, coded: bool, link: bool) -> FullBatchBuild {
+    FullBatchBuild {
+        name: format!("p_fb_{}_{}", gnn.as_str(), if link { "l" } else { "c" }),
+        gnn,
+        coded,
+        link,
+        n: 60,
+        n_classes: 4,
+        d_e: 6,
+        hidden: 8,
+        c: 4,
+        m: 5,
+        d_c: 6,
+        d_m: 7,
+        l: 2,
+        light: false,
+        e_train: 32,
+        e_pred: 48,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn fb_adj(manifest: &Manifest, n: usize, seed: u64) -> Arc<Csr> {
+    let g = sbm(SbmCfg::new(n, 4, 6.0, 2.0), seed).unwrap();
+    Arc::new(g.adj().normalized(manifest.hyper_str("adj").unwrap()).unwrap())
+}
+
+#[test]
+fn fullbatch_clf_parity_all_architectures() {
+    for gnn in GnnKind::all() {
+        let build = fb_build(gnn, true, false);
+        let manifest = build.manifest();
+        let adj = fb_adj(&manifest, build.n, 5);
+        let codes = codes_tensor(build.n, build.m, build.c, 7);
+        let mut rng = Xoshiro256pp::seed_from_u64(0x77);
+        let labels: Vec<i32> =
+            (0..build.n).map(|_| rng.index(build.n_classes) as i32).collect();
+        let mask: Vec<f32> =
+            (0..build.n).map(|i| if i % 4 == 0 { 0.0 } else { 1.0 }).collect();
+        let batch = vec![
+            codes.clone(),
+            Tensor::i32(vec![build.n], labels).unwrap(),
+            Tensor::f32(vec![build.n], mask).unwrap(),
+        ];
+        assert_loss_parity(&manifest, &batch, Some(&adj));
+        assert_pred_parity(&manifest, &[codes], Some(&adj), |im, p, b, t| {
+            im.predict_classes(p, b, t).unwrap()
+        });
+    }
+}
+
+#[test]
+fn fullbatch_nc_clf_parity() {
+    // NC front-end: features come straight from the table parameter.
+    let build = fb_build(GnnKind::Gin, false, false);
+    let manifest = build.manifest();
+    let adj = fb_adj(&manifest, build.n, 6);
+    let mut rng = Xoshiro256pp::seed_from_u64(0x78);
+    let labels: Vec<i32> = (0..build.n).map(|_| rng.index(build.n_classes) as i32).collect();
+    let batch = vec![
+        Tensor::i32(vec![build.n], labels).unwrap(),
+        Tensor::f32(vec![build.n], vec![1.0; build.n]).unwrap(),
+    ];
+    assert_loss_parity(&manifest, &batch, Some(&adj));
+    assert_pred_parity(&manifest, &[], Some(&adj), |im, p, b, t| {
+        im.predict_classes(p, b, t).unwrap()
+    });
+}
+
+#[test]
+fn fullbatch_link_parity() {
+    for gnn in [GnnKind::Gcn, GnnKind::Sage] {
+        let build = fb_build(gnn, true, true);
+        let manifest = build.manifest();
+        let adj = fb_adj(&manifest, build.n, 8);
+        let codes = codes_tensor(build.n, build.m, build.c, 11);
+        let batch = vec![
+            codes.clone(),
+            edges_tensor(build.e_train, build.n, 13),
+            edges_tensor(build.e_train, build.n, 14),
+        ];
+        assert_loss_parity(&manifest, &batch, Some(&adj));
+        let pred = vec![codes, edges_tensor(build.e_pred, build.n, 15)];
+        assert_pred_parity(&manifest, &pred, Some(&adj), |im, p, b, t| {
+            im.score_edges(p, b, t).unwrap()
+        });
+    }
+}

@@ -293,7 +293,7 @@ fn native_fullbatch_grid_hash_beats_random() {
         let mut acc = std::collections::HashMap::new();
         for fe in [Frontend::Rand, Frontend::Hash] {
             let model = Model::native(build.manifest(), 0).unwrap();
-            let out = nodeclf::run_fullbatch_model(&model, fe, &graph, opts).unwrap();
+            let (out, _store) = nodeclf::run_fullbatch_model(&model, fe, &graph, opts).unwrap();
             assert!(out.final_loss.is_finite(), "{}/{}", gnn.as_str(), fe.name());
             acc.insert(fe.name(), out.test);
         }
@@ -327,7 +327,8 @@ fn native_fullbatch_linkpred_runs_end_to_end() {
     build.e_pred = 256;
     let model = Model::native(build.manifest(), 0).unwrap();
     let opts = RunOpts { epochs: 20, eval_every: 5, seed: 9 };
-    let out = linkpred::run_fullbatch_model(&model, Frontend::Hash, &graph, 20, opts).unwrap();
+    let (out, _store) =
+        linkpred::run_fullbatch_model(&model, Frontend::Hash, &graph, 20, opts).unwrap();
     assert!(out.final_loss.is_finite());
     assert!((0.0..=1.0).contains(&out.val_hits));
     assert!((0.0..=1.0).contains(&out.test_hits));

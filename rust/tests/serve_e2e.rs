@@ -1,0 +1,278 @@
+//! Serving subsystem end-to-end: bundle export → load → session, with
+//! the three invariants the serving layer must preserve on top of the
+//! model-level parity (`tests/infer_parity.rs` proves InferModel ==
+//! training forward):
+//!
+//! 1. the cache never changes bytes (cold == warm == any grouping);
+//! 2. thread counts never change bytes (threads 1 == 8);
+//! 3. the batcher/cache bookkeeping is exact (capacity bound, LRU
+//!    eviction order, hit/miss counts).
+
+use std::sync::Arc;
+
+use hashgnn::cfg::{Coder, CodingCfg, GnnKind, OptimCfg};
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::graph::Graph;
+use hashgnn::params::ParamStore;
+use hashgnn::runtime::native::infer::InferModel;
+use hashgnn::runtime::native::spec::{self, FullBatchBuild, SageMbBuild};
+use hashgnn::runtime::Tensor;
+use hashgnn::serve::{ServeOpts, ServeSession, ServingBundle};
+use hashgnn::tasks::coding::{make_codes, Aux};
+use hashgnn::tasks::serve::{export_bundle, ExportOpts};
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// ---------------------------------------------------------------------------
+// Full-batch session
+// ---------------------------------------------------------------------------
+
+fn fb_bundle(link: bool) -> ServingBundle {
+    let build = FullBatchBuild {
+        name: "e2e_fb".into(),
+        gnn: GnnKind::Gcn,
+        coded: true,
+        link,
+        n: 60,
+        n_classes: 4,
+        d_e: 6,
+        hidden: 8,
+        c: 4,
+        m: 5,
+        d_c: 6,
+        d_m: 7,
+        l: 2,
+        light: false,
+        e_train: 32,
+        e_pred: 48,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 4, 8.0, 2.0), 3).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 5).unwrap(), 3).unwrap();
+    let store = ParamStore::init(&manifest, 21);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+fn session(bundle: ServingBundle, threads: usize, cache: usize) -> ServeSession {
+    ServeSession::new(bundle, ServeOpts { threads, cache_capacity: cache, seed: 5 }).unwrap()
+}
+
+#[test]
+fn fullbatch_session_matches_infer_model_bitwise() {
+    let bundle = fb_bundle(false);
+    // Reference: the InferModel over the same rebuilt adjacency + codes.
+    let rebuilt = Graph::from_edges(bundle.n_nodes, &bundle.edges).unwrap();
+    let adj = Arc::new(
+        rebuilt.adj().normalized(bundle.manifest.hyper_str("adj").unwrap()).unwrap(),
+    );
+    let im = InferModel::from_manifest(&bundle.manifest).unwrap();
+    im.bind_adjacency(adj).unwrap();
+    let codes = bundle.codes.as_ref().unwrap();
+    let ids_all: Vec<u32> = (0..60).collect();
+    let mut buf = Vec::new();
+    codes.gather_int_codes(&ids_all, &mut buf);
+    let codes_t = Tensor::i32(vec![60, 5], buf).unwrap();
+    let h_ref = im.embed_nodes(&bundle.params, &[codes_t.clone()], 1).unwrap();
+    let h_ref = h_ref.as_f32().unwrap();
+    let d = im.embed_dim();
+
+    let mut s = session(bundle.clone(), 1, 32);
+    let query = [7u32, 0, 59, 7];
+    let served = s.embed_nodes(&query).unwrap();
+    for (i, &id) in query.iter().enumerate() {
+        assert!(
+            bits_equal(
+                &served[i * d..(i + 1) * d],
+                &h_ref[id as usize * d..(id as usize + 1) * d]
+            ),
+            "served row {i} (node {id}) != full-batch forward row"
+        );
+    }
+    // Edge scores through the cache == edge_dot over the same H rows ==
+    // the training link scorer's math.
+    let edges = [(7u32, 0u32), (59, 59)];
+    let scores = s.score_edges(&edges).unwrap();
+    for (k, &(u, v)) in edges.iter().enumerate() {
+        let (u, v) = (u as usize, v as usize);
+        let mut acc = 0.0f32;
+        for j in 0..d {
+            acc += h_ref[u * d + j] * h_ref[v * d + j];
+        }
+        assert_eq!(scores[k].to_bits(), acc.to_bits());
+    }
+    // Class predictions equal the full-batch head over the same rows.
+    let logits_ref = im.predict_classes(&bundle.params, &[codes_t], 1).unwrap();
+    let logits_ref = logits_ref.as_f32().unwrap();
+    let k = 4usize;
+    let (logits, classes) = s.predict_classes(&query).unwrap();
+    assert_eq!(classes.len(), 4);
+    for (i, &id) in query.iter().enumerate() {
+        assert!(
+            bits_equal(
+                &logits[i * k..(i + 1) * k],
+                &logits_ref[id as usize * k..(id as usize + 1) * k]
+            ),
+            "served logits for node {id} != full-batch head output"
+        );
+    }
+}
+
+#[test]
+fn fullbatch_link_session_scores_and_rejects_classes() {
+    let bundle = fb_bundle(true);
+    let mut s = session(bundle, 2, 16);
+    let scores = s.score_edges(&[(1, 2), (3, 4)]).unwrap();
+    assert_eq!(scores.len(), 2);
+    assert!(scores.iter().all(|v| v.is_finite()));
+    assert!(s.predict_classes(&[1]).is_err(), "link models have no class head");
+}
+
+#[test]
+fn serving_is_cache_grouping_and_thread_invariant() {
+    let bundle = fb_bundle(false);
+    let query = [3u32, 11, 3, 42, 0];
+    // Cold (cache disabled), warm (cached, queried twice), threaded, and
+    // one-by-one sessions must all serve identical bytes.
+    let mut cold = session(bundle.clone(), 1, 0);
+    let a = cold.embed_nodes(&query).unwrap();
+    let mut warm = session(bundle.clone(), 1, 64);
+    let b1 = warm.embed_nodes(&query).unwrap();
+    let b2 = warm.embed_nodes(&query).unwrap();
+    let mut threaded = session(bundle.clone(), 8, 64);
+    let c = threaded.embed_nodes(&query).unwrap();
+    let mut one_by_one = session(bundle.clone(), 1, 64);
+    let mut d_out = Vec::new();
+    for &id in &query {
+        d_out.extend(one_by_one.embed_nodes(&[id]).unwrap());
+    }
+    assert!(bits_equal(&a, &b1), "cold vs warm first pass");
+    assert!(bits_equal(&b1, &b2), "first vs second (cached) pass");
+    assert!(bits_equal(&a, &c), "threads 1 vs 8");
+    assert!(bits_equal(&a, &d_out), "batched vs one-by-one");
+    // Counter bookkeeping: 5 lookups, 4 unique entries; second pass all hits.
+    let s = warm.cache_stats();
+    assert_eq!((s.misses, s.hits, s.len), (5, 5, 4));
+}
+
+#[test]
+fn cache_eviction_respects_capacity_in_a_live_session() {
+    let bundle = fb_bundle(false);
+    let mut s = session(bundle, 1, 2);
+    let full = s.embed_nodes(&[1, 2, 3]).unwrap();
+    let st = s.cache_stats();
+    assert_eq!(st.len, 2, "capacity is a hard bound");
+    assert_eq!(st.misses, 3);
+    assert_eq!(st.evictions, 1, "inserting the third entry evicts the LRU");
+    // 1 was evicted (oldest insert); 2 and 3 are resident.
+    let again = s.embed_nodes(&[2, 3, 1]).unwrap();
+    let st = s.cache_stats();
+    assert_eq!(st.hits, 2, "2 and 3 hit");
+    assert_eq!(st.misses, 4, "1 recomputed");
+    // Bytes unchanged regardless of the eviction churn.
+    assert!(bits_equal(&full[0..s.embed_dim()], &again[2 * s.embed_dim()..]));
+}
+
+// ---------------------------------------------------------------------------
+// Minibatch SAGE session (per-node seeded fan-out)
+// ---------------------------------------------------------------------------
+
+fn sage_bundle(coded: bool) -> ServingBundle {
+    let build = SageMbBuild {
+        name: "e2e_mb".into(),
+        coded,
+        link: false,
+        n: 60,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let codes = if coded {
+        Some(
+            make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 3).unwrap(), 9)
+                .unwrap(),
+        )
+    } else {
+        None
+    };
+    let store = ParamStore::init(&manifest, 13);
+    ServingBundle::new(manifest, &store, codes, graph.undirected_edges(), 60).unwrap()
+}
+
+#[test]
+fn sage_session_embeddings_are_request_grouping_invariant() {
+    for coded in [true, false] {
+        let bundle = sage_bundle(coded);
+        let query = [10u32, 3, 55, 10, 7, 21];
+        let mut batched = session(bundle.clone(), 1, 64);
+        let a = batched.embed_nodes(&query).unwrap();
+        // Per-node seeded sampling: each node's neighborhood is a function
+        // of (seed, id) only, so serving one node at a time — different
+        // batch composition, different padding — yields identical bytes.
+        let mut single = session(bundle.clone(), 1, 0);
+        let mut b = Vec::new();
+        for &id in &query {
+            b.extend(single.embed_nodes(&[id]).unwrap());
+        }
+        assert!(bits_equal(&a, &b), "coded={coded}: grouping changed served bytes");
+        let mut threaded = session(bundle.clone(), 8, 64);
+        let c = threaded.embed_nodes(&query).unwrap();
+        assert!(bits_equal(&a, &c), "coded={coded}: threads changed served bytes");
+        // Warm replay.
+        let a2 = batched.embed_nodes(&query).unwrap();
+        assert!(bits_equal(&a, &a2), "coded={coded}: cache changed served bytes");
+        // Classes come from the head over the served representations.
+        let (logits, classes) = batched.predict_classes(&query[..2]).unwrap();
+        assert_eq!(logits.len(), 2 * 3);
+        assert_eq!(classes.len(), 2);
+        assert!(classes.iter().all(|&c| c < 3));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export → save → load → serve (registry model, the CLI path's core)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_roundtrip_serves_registry_model() {
+    let manifest = spec::builtin("node_fb_sgc_coded").unwrap();
+    let store = ParamStore::init(&manifest, 7);
+    let opts = ExportOpts { coder: Coder::Hash, codes_file: None, seed: 7 };
+    let bundle = export_bundle(&manifest, &store, &opts).unwrap();
+    assert_eq!(bundle.n_nodes, 1024);
+    assert!(bundle.code_bytes() > 0);
+
+    let dir = std::env::temp_dir().join("hashgnn_serve_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sgc.bundle");
+    bundle.save(&path).unwrap();
+    let loaded = ServingBundle::load(&path).unwrap();
+
+    let mut s1 = session(loaded.clone(), 1, 16);
+    let mut s8 = session(loaded, 8, 16);
+    let ids = [0u32, 5, 1023];
+    let e1 = s1.embed_nodes(&ids).unwrap();
+    let e8 = s8.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&e1, &e8), "exported bundle serves thread-invariant bytes");
+    assert!(e1.iter().all(|v| v.is_finite()));
+    let (logits, classes) = s1.predict_classes(&ids).unwrap();
+    assert_eq!(classes.len(), 3);
+    assert_eq!(logits.len(), 3 * 8);
+    let scores = s1.score_edges(&[(0, 5), (5, 1023)]).unwrap();
+    assert!(scores.iter().all(|v| v.is_finite()));
+}
