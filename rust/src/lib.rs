@@ -40,9 +40,13 @@
 //! | substrates | [`rng`] (incl. stream splitting), [`ser`], [`cli`], [`cfg`] (incl. [`cfg::BackendKind`]), [`sparse`] (SpMV, blocked SpMM, row-major SpMM, transpose, sparse normalizations), [`graph`], [`embed`] |
 //! | paper core | [`lsh`] (Algorithm 1 + parallel encode engine), [`codes`] (compositional codes, word-packed bits) |
 //! | runtime    | [`runtime`] (backend seam: [`runtime::native`] pure-Rust train/pred engine — [`runtime::native::layers`] shared blocks, [`runtime::native::sage`] minibatch encoder, [`runtime::native::gnn`] full-batch grid, [`runtime::native::infer`] forward-only inference surface — + PJRT HLO path; in-crate [`xla`] stub unless the `xla` feature is on), [`params`], [`train`] |
-//! | serving    | [`serve`] (frozen [`serve::ServingBundle`] artifact, request [`serve::Batcher`], exact-LRU [`serve::EmbedCache`], [`serve::ServeSession`] — `hashgnn export` / `infer` / `serve --oneshot`; no backward code reachable) |
+//! | serving    | [`serve`] (frozen [`serve::ServingBundle`] artifact + node-range shards, request [`serve::Batcher`] / cross-request [`serve::CrossBatcher`], exact-LRU [`serve::EmbedCache`], [`serve::ServeSession`] / [`serve::ShardRouter`] behind the [`serve::Serving`] seam, persistent NDJSON/TCP loop in [`serve::server`] — `hashgnn export [--shards K]` / `infer` / `serve --oneshot|--stdin|--listen`; no backward code reachable) |
 //! | evaluation | [`eval`], [`tasks`], [`report`] |
 //! | dev        | [`testing`] (property-test harness) |
+//!
+//! Repo-level docs: `docs/ARCHITECTURE.md` maps the four subsystems,
+//! their seams, the determinism rule and the binary format family;
+//! `docs/SERVING.md` specifies the serving wire protocol end to end.
 
 pub mod cfg;
 pub mod cli;

@@ -6,9 +6,13 @@
 //!               full-batch Table-1 grid (--model node_fb_{gcn,sgc,gin,sage},
 //!               link_fb_*), coded or NC; --ckpt-out saves the trained store
 //!   export      freeze a trained checkpoint + packed codes + edges into a
-//!               self-contained serving bundle
-//!   infer       answer embed/score/classes queries from a serving bundle
-//!   serve       batch-serve a JSON request file from a bundle (--oneshot)
+//!               self-contained serving bundle (--shards K splits it into
+//!               K node-range shard files)
+//!   infer       answer embed/score/classes queries from a bundle or shard set
+//!   serve       serve a bundle or shard set: --oneshot (one JSON request
+//!               file), --stdin (persistent NDJSON session), or
+//!               --listen <addr> (persistent NDJSON over TCP), with
+//!               cross-request batching under a latency budget
 //!   merchant    §5.3 merchant-category pipeline (Table 3)
 //!   collisions  Figure 3/6 median-vs-zero threshold experiment
 //!   memory      Tables 2/4/6 memory accounting
@@ -24,8 +28,9 @@
 //! Every experiment is seeded and reproducible; benches that regenerate
 //! the paper's tables live under `cargo bench` (see DESIGN.md §6).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use hashgnn::cfg::{BackendKind, Coder, CodingCfg, EncodeCfg, GnnKind};
 use hashgnn::cli::Args;
@@ -33,7 +38,10 @@ use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::params::ParamStore;
 use hashgnn::report::{self, Table};
 use hashgnn::runtime::Engine;
-use hashgnn::serve::{parse_requests, ServeOpts, ServeSession, ServingBundle};
+use hashgnn::serve::{
+    handle_all_on, load_backend, parse_requests, predict_classes_on, score_edges_on, server,
+    ServeOpts, ServerCfg,
+};
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
 use hashgnn::tasks::serve as serve_task;
 use hashgnn::tasks::{coding, collisions, linkpred, memory, merchant, sage, T1Dataset};
@@ -78,8 +86,11 @@ fn print_help() {
          \x20             node_fb_{{gcn,sgc,gin,sage}} | link_fb_...);\n\
          \x20             --ckpt-out saves the trained parameters\n\
          \x20 export      freeze checkpoint + codes + edges into a serving bundle\n\
-         \x20 infer       embed/score/classify from a bundle (--embed 0,1 ...)\n\
-         \x20 serve       one-shot batch serving of a JSON request file\n\
+         \x20             (--shards K writes K node-range shard files)\n\
+         \x20 infer       embed/score/classify from a bundle or shard set\n\
+         \x20 serve       --oneshot request file | --stdin persistent NDJSON |\n\
+         \x20             --listen <addr> TCP; batches across requests under\n\
+         \x20             --max-batch / --max-delay-ms\n\
          \x20 merchant    merchant-category identification pipeline (§5.3)\n\
          \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
          \x20 memory      memory accounting tables (Tables 2/4/6)\n\
@@ -88,8 +99,14 @@ fn print_help() {
          train and merchant take --backend {{auto|native|xla}}: the native\n\
          backend is pure rust (no artifacts needed) and --threads N is\n\
          bit-deterministic across thread counts\n\n\
-         run `hashgnn <command> --help` for options"
+         run `hashgnn <command> --help` for options\n\n\
+         docs: docs/ARCHITECTURE.md (system map), docs/SERVING.md (wire protocol)"
     );
+}
+
+/// Parse a comma-separated bundle/shard path list.
+fn bundle_paths(s: &str) -> Vec<PathBuf> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(PathBuf::from).collect()
 }
 
 fn cmd_encode(argv: Vec<String>) -> Result<()> {
@@ -356,6 +373,12 @@ fn cmd_export(argv: Vec<String>) -> Result<()> {
              via Algorithm 1 from the training graph",
         )
         .opt("seed", "7", "the training run's seed (graph, split and codes derive from it)")
+        .opt(
+            "shards",
+            "1",
+            "split the export into K contiguous node-range shard files \
+             (<out>.shard-<i>-of-<K>, served together by the shard router)",
+        )
         .parse(argv)?;
     // The bundle is a native-serving artifact; the native backend loads
     // (or synthesizes) the manifest without requiring HLO files.
@@ -369,22 +392,54 @@ fn cmd_export(argv: Vec<String>) -> Result<()> {
         seed: a.get_u64("seed")?,
     };
     let out = a.get("out");
+    let shards = a.get_usize("shards")?;
     eprintln!("[export] assembling bundle for '{}' ...", model.manifest.name);
-    let bundle = serve_task::export_bundle_to(&model.manifest, &store, &opts, Path::new(&out))?;
-    println!(
-        "bundle '{}' written to {out}: {} nodes, {} edges, {} KiB params, {} KiB packed codes",
-        bundle.manifest.name,
-        bundle.n_nodes,
-        bundle.edges.len(),
-        bundle.param_bytes() / 1024,
-        bundle.code_bytes() / 1024
-    );
+    if shards <= 1 {
+        let bundle =
+            serve_task::export_bundle_to(&model.manifest, &store, &opts, Path::new(&out))?;
+        println!(
+            "bundle '{}' written to {out}: {} nodes, {} edges, {} KiB params, {} KiB packed codes",
+            bundle.manifest.name,
+            bundle.n_nodes,
+            bundle.edges.len(),
+            bundle.param_bytes() / 1024,
+            bundle.code_bytes() / 1024
+        );
+    } else {
+        let written = serve_task::export_sharded_to(
+            &model.manifest,
+            &store,
+            &opts,
+            shards,
+            Path::new(&out),
+        )?;
+        for (path, shard) in &written {
+            let info = shard.shard.as_ref().expect("sharded export tags every file");
+            println!(
+                "shard {}/{} [{}, {}) written to {}: {} edges, {} KiB params, {} KiB packed codes",
+                info.index,
+                info.count,
+                info.lo,
+                info.hi,
+                path.display(),
+                shard.edges.len(),
+                shard.param_bytes() / 1024,
+                shard.code_bytes() / 1024
+            );
+        }
+        let all: Vec<String> =
+            written.iter().map(|(p, _)| p.display().to_string()).collect();
+        println!("serve the set with: hashgnn serve --bundle {}", all.join(","));
+    }
     Ok(())
 }
 
 fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let a = Args::new("hashgnn infer", "answer embed/score/classes queries from a bundle")
-        .req("bundle", "serving bundle (`hashgnn export`)")
+        .req(
+            "bundle",
+            "serving bundle, or comma-separated shard set (`hashgnn export [--shards K]`)",
+        )
         .opt("embed", "", "comma-separated node ids to embed (e.g. 0,1,2)")
         .opt("score", "", "dash-pair edges to score (e.g. 0-1,2-3)")
         .opt("classes", "", "comma-separated node ids to classify")
@@ -392,23 +447,22 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
         .opt("seed", "7", "fan-out sampling seed (minibatch models)")
         .parse(argv)?;
-    let bundle = ServingBundle::load(Path::new(&a.get("bundle")))?;
-    eprintln!(
-        "[infer] bundle '{}': {} nodes, {} edges, {} KiB params, {} KiB codes",
-        bundle.manifest.name,
-        bundle.n_nodes,
-        bundle.edges.len(),
-        bundle.param_bytes() / 1024,
-        bundle.code_bytes() / 1024
-    );
-    let mut session = ServeSession::new(
-        bundle,
+    let paths = bundle_paths(&a.get("bundle"));
+    let mut backend = load_backend(
+        &paths,
         ServeOpts {
             threads: a.get_usize_auto("threads")?,
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
         },
     )?;
+    let session = backend.as_mut();
+    eprintln!(
+        "[infer] {} file(s): {} nodes, embedding dim {}",
+        paths.len(),
+        session.n_nodes(),
+        session.embed_dim()
+    );
     let mut did_anything = false;
     let embed_q = a.get("embed");
     if !embed_q.is_empty() {
@@ -430,7 +484,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let score_q = a.get("score");
     if !score_q.is_empty() {
         let edges = parse_edges(&score_q)?;
-        let scores = session.score_edges(&edges)?;
+        let scores = score_edges_on(session, &edges)?;
         for (&(u, v), &s) in edges.iter().zip(&scores) {
             println!("score {u}-{v}: {s:.4}");
         }
@@ -439,7 +493,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
     let classes_q = a.get("classes");
     if !classes_q.is_empty() {
         let ids = parse_ids(&classes_q)?;
-        let (_logits, argmax) = session.predict_classes(&ids)?;
+        let (_logits, argmax) = predict_classes_on(session, &ids)?;
         for (&id, &c) in ids.iter().zip(&argmax) {
             println!("class {id}: {c}");
         }
@@ -450,52 +504,111 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
             "nothing to do — pass --embed, --score and/or --classes".into(),
         ));
     }
-    let s = session.cache_stats();
-    eprintln!(
-        "[infer] cache: {} hits / {} misses / {} evictions ({}/{} entries)",
-        s.hits, s.misses, s.evictions, s.len, s.capacity
-    );
+    eprintln!("[infer] cache: {}", ser::to_string_compact(&session.stats_json()));
     Ok(())
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let a = Args::new("hashgnn serve", "batch-serve a JSON request file from a bundle")
-        .req("bundle", "serving bundle (`hashgnn export`)")
-        .flag("oneshot", "process one request file and exit (the only implemented mode)")
-        .opt(
-            "requests",
-            "",
-            "JSON request file: {\"requests\": [{\"op\": \"embed\", \"nodes\": [0, 1]}, \
-             {\"op\": \"score\", \"edges\": [[0, 1]]}, {\"op\": \"classes\", \"nodes\": [2]}]}",
-        )
-        .opt("threads", "0", "compute threads (0 = all cores)")
-        .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
-        .opt("seed", "7", "fan-out sampling seed (minibatch models)")
-        .parse(argv)?;
-    if !a.get_bool("oneshot") {
+    let a = Args::new(
+        "hashgnn serve",
+        "serve a bundle or shard set: one-shot request file, persistent NDJSON, or TCP",
+    )
+    .req(
+        "bundle",
+        "serving bundle, or comma-separated shard set (`hashgnn export [--shards K]`)",
+    )
+    .flag("oneshot", "process one --requests file and exit")
+    .flag("stdin", "persistent NDJSON session: one request per stdin line, one response per stdout line")
+    .opt(
+        "listen",
+        "",
+        "persistent NDJSON server on this TCP address (e.g. 127.0.0.1:7433); connections \
+         are served sequentially over one warm backend",
+    )
+    .opt(
+        "requests",
+        "",
+        "JSON request file for --oneshot: {\"requests\": [{\"op\": \"embed\", \"nodes\": [0, 1]}, \
+         {\"op\": \"score\", \"edges\": [[0, 1]]}, {\"op\": \"classes\", \"nodes\": [2]}]}",
+    )
+    .opt(
+        "max-batch",
+        "256",
+        "persistent modes: flush once this many distinct node ids are pending",
+    )
+    .opt(
+        "max-delay-ms",
+        "5",
+        "persistent modes: flush once the oldest pending request has waited this long",
+    )
+    .opt("max-conns", "0", "TCP mode: exit after this many connections (0 = serve forever)")
+    .opt("threads", "0", "compute threads (0 = all cores)")
+    .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
+    .opt("seed", "7", "fan-out sampling seed (minibatch models)")
+    .parse(argv)?;
+    let listen = a.get("listen");
+    let n_modes = [a.get_bool("oneshot"), a.get_bool("stdin"), !listen.is_empty()]
+        .iter()
+        .filter(|&&m| m)
+        .count();
+    if n_modes != 1 {
         return Err(Error::Config(
-            "persistent serving is not implemented yet — run with --oneshot; a long-lived \
-             (or remote/sharded) server plugs into the same ServeSession seam (see ROADMAP)"
+            "pick exactly one serving mode: --oneshot (one request file), --stdin \
+             (persistent NDJSON session on stdio), or --listen <addr> (persistent NDJSON \
+             over TCP) — see docs/SERVING.md for the protocol"
                 .into(),
         ));
     }
-    let req_path = a.get("requests");
-    if req_path.is_empty() {
-        return Err(Error::Config("--requests <file.json> is required with --oneshot".into()));
-    }
-    let reqs = parse_requests(&ser::from_file(Path::new(&req_path))?)?;
-    let bundle = ServingBundle::load(Path::new(&a.get("bundle")))?;
-    let mut session = ServeSession::new(
-        bundle,
+    let paths = bundle_paths(&a.get("bundle"));
+    let mut backend = load_backend(
+        &paths,
         ServeOpts {
             threads: a.get_usize_auto("threads")?,
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
         },
     )?;
-    eprintln!("[serve] oneshot: {} request(s)", reqs.len());
-    let out = session.handle_all(&reqs)?;
-    println!("{}", ser::to_string_pretty(&out));
+    if a.get_bool("oneshot") {
+        let req_path = a.get("requests");
+        if req_path.is_empty() {
+            return Err(Error::Config(
+                "--requests <file.json> is required with --oneshot".into(),
+            ));
+        }
+        let reqs = parse_requests(&ser::from_file(Path::new(&req_path))?)?;
+        eprintln!("[serve] oneshot: {} request(s)", reqs.len());
+        let out = handle_all_on(backend.as_mut(), &reqs)?;
+        println!("{}", ser::to_string_pretty(&out));
+        return Ok(());
+    }
+    let cfg = ServerCfg {
+        max_batch: a.get_usize("max-batch")?,
+        max_delay: Duration::from_millis(a.get_u64("max-delay-ms")?),
+    };
+    if a.get_bool("stdin") {
+        eprintln!(
+            "[serve] persistent NDJSON session on stdin/stdout (max-batch {}, max-delay {:?})",
+            cfg.max_batch, cfg.max_delay
+        );
+        let stats = server::serve_stdin(backend.as_mut(), &cfg)?;
+        eprintln!("[serve] session ended: {}", stats.summary());
+    } else {
+        let listener = std::net::TcpListener::bind(&listen)?;
+        eprintln!(
+            "[serve] listening on {} (max-batch {}, max-delay {:?})",
+            listener.local_addr()?,
+            cfg.max_batch,
+            cfg.max_delay
+        );
+        let stats = server::serve_listener(
+            listener,
+            backend.as_mut(),
+            &cfg,
+            a.get_usize("max-conns")?,
+        )?;
+        eprintln!("[serve] done: {}", stats.summary());
+    }
+    eprintln!("[serve] cache: {}", ser::to_string_compact(&backend.stats_json()));
     Ok(())
 }
 

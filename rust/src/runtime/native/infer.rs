@@ -17,6 +17,11 @@
 //! minibatch SAGE heads, and all four full-batch architectures, including
 //! the loss values ([`InferModel::loss`] vs. the fused train step).
 //!
+//! The serving layer's cross-request flush computes one deduplicated
+//! node union through these forwards and scatters rows back per request
+//! with [`demux_rows`] — the copy-only demux that makes batching
+//! result-neutral by construction.
+//!
 //! Batch layouts per task (`hyper.task`):
 //!
 //! | task | [`embed_nodes`](InferModel::embed_nodes) | [`score_edges`](InferModel::score_edges) | [`predict_classes`](InferModel::predict_classes) |
@@ -405,6 +410,80 @@ fn need_tensors(what: &str, batch: &[Tensor], n: usize) -> Result<()> {
     Ok(())
 }
 
+/// Scatter rows computed for a **deduplicated** id list back onto an
+/// arbitrary (possibly repeating, arbitrarily ordered) query — the batch
+/// demux the serving layer runs after a cross-request flush. `rows` is
+/// row-major `(unique.len(), d)`; `out` must be `query.len() × d` and
+/// receives, for each query slot, a verbatim copy of its id's row.
+///
+/// Copying is the whole point: the flush computes each distinct node
+/// once, and every request that referenced it gets byte-identical data,
+/// so batching and deduplication can never change a served value.
+///
+/// ```
+/// use hashgnn::runtime::native::infer::demux_rows;
+///
+/// let unique = [7u32, 3, 9];
+/// let rows = [0.7, 0.7, 0.3, 0.3, 0.9, 0.9]; // (3, 2) for nodes 7, 3, 9
+/// let mut out = vec![0.0f32; 4 * 2];
+/// demux_rows(&unique, &rows, 2, &[3, 7, 3, 9], &mut out).unwrap();
+/// assert_eq!(out, [0.3, 0.3, 0.7, 0.7, 0.3, 0.3, 0.9, 0.9]);
+/// ```
+pub fn demux_rows(
+    unique: &[u32],
+    rows: &[f32],
+    d: usize,
+    query: &[u32],
+    out: &mut [f32],
+) -> Result<()> {
+    if rows.len() != unique.len() * d {
+        return Err(Error::Shape(format!(
+            "demux_rows: {} row values for {} unique ids of width {d}",
+            rows.len(),
+            unique.len()
+        )));
+    }
+    demux_rows_with(&row_index(unique), rows, d, query, out)
+}
+
+/// The id → row lookup table of a deduplicated id list. Build it once
+/// per flush and reuse it across every request's [`demux_rows_with`]
+/// call — rebuilding it per request would redo O(unique) work per
+/// pending request on the hot serving path.
+pub fn row_index(unique: &[u32]) -> std::collections::HashMap<u32, usize> {
+    unique.iter().enumerate().map(|(k, &id)| (id, k)).collect()
+}
+
+/// [`demux_rows`] against a prebuilt [`row_index`].
+pub fn demux_rows_with(
+    index: &std::collections::HashMap<u32, usize>,
+    rows: &[f32],
+    d: usize,
+    query: &[u32],
+    out: &mut [f32],
+) -> Result<()> {
+    if out.len() != query.len() * d {
+        return Err(Error::Shape(format!(
+            "demux_rows: output holds {} values, query needs {}",
+            out.len(),
+            query.len() * d
+        )));
+    }
+    for (slot, id) in query.iter().enumerate() {
+        let k = *index.get(id).ok_or_else(|| {
+            Error::Shape(format!("demux_rows: query id {id} missing from the computed union"))
+        })?;
+        if (k + 1) * d > rows.len() {
+            return Err(Error::Shape(format!(
+                "demux_rows: index row {k} out of bounds for {} row values of width {d}",
+                rows.len()
+            )));
+        }
+        out[slot * d..(slot + 1) * d].copy_from_slice(&rows[k * d..(k + 1) * d]);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +546,19 @@ mod tests {
         assert!(model.bind_adjacency(other).is_err());
         let emb = model.embed_nodes(&store.params, &[], 2).unwrap();
         assert_eq!(emb.shape(), &[n, m.hyper_usize("hidden").unwrap()]);
+    }
+
+    #[test]
+    fn demux_rows_copies_and_validates() {
+        let unique = [4u32, 1];
+        let rows = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0f32; 3 * 2];
+        demux_rows(&unique, &rows, 2, &[1, 4, 1], &mut out).unwrap();
+        assert_eq!(out, vec![3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+        // Missing id, bad row count, bad out size — all loud.
+        assert!(demux_rows(&unique, &rows, 2, &[9], &mut out[..2]).is_err());
+        assert!(demux_rows(&unique, &rows[..3], 2, &[1], &mut out[..2]).is_err());
+        assert!(demux_rows(&unique, &rows, 2, &[1], &mut out).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! JSON writer (pretty, deterministic key order via BTreeMap).
+//! JSON writer (pretty and compact, deterministic key order via BTreeMap).
 
 use super::Json;
 
@@ -8,6 +8,47 @@ pub fn to_string_pretty(v: &Json) -> String {
     write_value(v, 0, &mut out);
     out.push('\n');
     out
+}
+
+/// Serialize onto one line with no trailing newline — the framing the
+/// NDJSON serving protocol requires (one JSON value per line; embedded
+/// newlines in strings are escaped by the writer, so the output never
+/// spans lines).
+pub fn to_string_compact(v: &Json) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
+fn write_compact(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => write_num(*n, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(o) => {
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_compact(x, out);
+            }
+            out.push('}');
+        }
+    }
 }
 
 fn write_value(v: &Json, indent: usize, out: &mut String) {
@@ -114,6 +155,21 @@ mod tests {
         let v = Json::Str("line1\nline2\t\"q\" \\ \u{0001}".into());
         let s = to_string_pretty(&v);
         assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let v = Json::obj(vec![
+            ("op", Json::str("embed")),
+            ("nodes", Json::arr_num([0.0, 1.0, 2.0])),
+            ("note", Json::Str("line1\nline2".into())),
+            ("nested", Json::obj(vec![("k", Json::Bool(true)), ("z", Json::Null)])),
+        ]);
+        let s = to_string_compact(&v);
+        assert!(!s.contains('\n'), "compact output must be one line: {s:?}");
+        assert_eq!(parse(&s).unwrap(), v);
+        assert_eq!(to_string_compact(&Json::Arr(vec![])), "[]");
+        assert_eq!(to_string_compact(&Json::obj(vec![])), "{}");
     }
 
     #[test]

@@ -1,5 +1,9 @@
-//! Request batcher: coalesce incoming node/edge queries into the
-//! fixed-size batches the inference model consumes.
+//! Request batchers: the per-call [`Batcher`] that coalesces one query
+//! into the fixed-size batches the inference model consumes, and the
+//! cross-request [`CrossBatcher`] that accumulates *multiple* requests
+//! under a latency budget before handing them to the session at all.
+//!
+//! # Per-call coalescing ([`Batcher`])
 //!
 //! The minibatch executables take shape-fixed inputs (`batch` targets per
 //! encoder application), so ad-hoc query lists must be deduplicated,
@@ -11,6 +15,33 @@
 //! Edge queries reduce to node queries before reaching the batcher: the
 //! session flattens endpoints into one id list, embeds through the cache,
 //! and dots the pairs.
+//!
+//! # Cross-request batching ([`CrossBatcher`])
+//!
+//! The persistent server ([`super::server`]) does not compute per
+//! request: it enqueues requests and flushes the whole pending set as one
+//! deduplicated node-id union when **either** bound trips, whichever
+//! comes first:
+//!
+//! - **fill** — the pending set references `max_batch` distinct node ids;
+//! - **budget** — `max_delay` has elapsed since the *oldest* pending
+//!   request arrived (so the first request in a lull never waits longer
+//!   than the budget, no matter how slowly followers trickle in).
+//!
+//! The `CrossBatcher` is a pure state machine — callers inject
+//! [`Instant`]s — so the budget/fill decision logic is unit-testable
+//! without real clocks and the server loop owns all actual waiting.
+//! Exact counters ([`BatchStats`]) account for every flush, its trigger,
+//! and how many node references cross-request deduplication saved.
+//!
+//! Like everything in the serving layer, batching is result-neutral: the
+//! union is computed through the same session path as a lone request,
+//! and per-row independence plus per-node sampling seeds make each
+//! served row a function of `(bundle, id)` only — never of what else
+//! happened to share the flush.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
 
 use crate::{Error, Result};
 
@@ -32,6 +63,16 @@ pub struct Coalesced {
 }
 
 /// Fixed-batch request coalescer.
+///
+/// ```
+/// use hashgnn::serve::Batcher;
+///
+/// let b = Batcher::new(3).unwrap();
+/// let c = b.coalesce(&[5, 1, 5, 9, 1]);
+/// assert_eq!(c.unique, vec![5, 1, 9]);               // first-seen dedup
+/// assert_eq!(c.groups[0].ids, vec![5, 1, 9]);        // one padded group
+/// assert_eq!(c.groups[0].real, 3);
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct Batcher {
     batch: usize,
@@ -70,6 +111,172 @@ impl Batcher {
 
 }
 
+/// What made a [`CrossBatcher`] flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushTrigger {
+    /// The pending set reached `max_batch` distinct node ids.
+    Fill,
+    /// The latency budget elapsed before the set filled.
+    Budget,
+    /// The caller drained the queue (EOF, a control request, shutdown).
+    Drain,
+}
+
+/// Exact cross-request batching counters, cumulative over a server loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests accepted into the pending queue.
+    pub batched_requests: u64,
+    /// Total flush events (`fill + budget + drain`).
+    pub flushes: u64,
+    /// Flushes triggered by reaching `max_batch` distinct nodes.
+    pub fill_flushes: u64,
+    /// Flushes triggered by the latency budget expiring.
+    pub budget_expiries: u64,
+    /// Flushes triggered by a drain (EOF / control request).
+    pub drain_flushes: u64,
+    /// Node references removed by cross-request deduplication — the
+    /// compute the union saved versus handling each request alone
+    /// (Σ per flush of `references − distinct`).
+    pub coalesced_nodes: u64,
+    /// Distinct node ids actually computed across all flushes.
+    pub unique_nodes: u64,
+}
+
+impl BatchStats {
+    /// Field-wise accumulation (the TCP front sums per-connection
+    /// sessions through here, so a new counter cannot be silently
+    /// dropped from aggregates).
+    pub fn absorb(&mut self, o: &BatchStats) {
+        let BatchStats {
+            batched_requests,
+            flushes,
+            fill_flushes,
+            budget_expiries,
+            drain_flushes,
+            coalesced_nodes,
+            unique_nodes,
+        } = o;
+        self.batched_requests += batched_requests;
+        self.flushes += flushes;
+        self.fill_flushes += fill_flushes;
+        self.budget_expiries += budget_expiries;
+        self.drain_flushes += drain_flushes;
+        self.coalesced_nodes += coalesced_nodes;
+        self.unique_nodes += unique_nodes;
+    }
+}
+
+/// Cross-request accumulator with a fill bound and a latency budget (see
+/// the module docs for semantics). Generic over the queued item so the
+/// server can carry its response bookkeeping through a flush; `push`
+/// takes the node ids the item references separately.
+///
+/// Time is injected — `push`/`should_flush` take an [`Instant`] — which
+/// keeps the decision logic deterministic under test; only the server
+/// loop ever sleeps.
+pub struct CrossBatcher<T> {
+    max_batch: usize,
+    max_delay: Duration,
+    pending: Vec<T>,
+    /// Distinct pending node ids, in first-seen order (`unique` mirrors
+    /// `unique_set`; the order makes flush output deterministic).
+    unique: Vec<u32>,
+    unique_set: HashSet<u32>,
+    /// Total node references across pending items (≥ `unique.len()`).
+    references: usize,
+    /// Arrival time of the oldest pending item — the budget anchor.
+    oldest: Option<Instant>,
+    stats: BatchStats,
+}
+
+impl<T> CrossBatcher<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Result<Self> {
+        if max_batch == 0 {
+            return Err(Error::Config("cross-batcher max_batch must be positive".into()));
+        }
+        Ok(Self {
+            max_batch,
+            max_delay,
+            pending: Vec::new(),
+            unique: Vec::new(),
+            unique_set: HashSet::new(),
+            references: 0,
+            oldest: None,
+            stats: BatchStats::default(),
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Pending items (requests, not nodes).
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Distinct node ids currently pending.
+    pub fn pending_nodes(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// Queue one item referencing `ids`; returns `true` when the fill
+    /// bound is reached and the caller must flush now.
+    pub fn push(&mut self, item: T, ids: &[u32], now: Instant) -> bool {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        self.stats.batched_requests += 1;
+        self.references += ids.len();
+        for &id in ids {
+            if self.unique_set.insert(id) {
+                self.unique.push(id);
+            }
+        }
+        self.unique.len() >= self.max_batch
+    }
+
+    /// Deadline after which the pending set must flush (`None` when
+    /// nothing is pending).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.oldest.map(|t| t + self.max_delay)
+    }
+
+    /// True when something is pending and its budget has elapsed.
+    pub fn should_flush(&self, now: Instant) -> bool {
+        self.deadline().map(|d| now >= d).unwrap_or(false)
+    }
+
+    /// Take the pending items and their deduplicated node-id union
+    /// (first-seen order), recording `trigger` in the counters. Calling
+    /// on an empty queue returns empty vecs and counts nothing.
+    pub fn take(&mut self, trigger: FlushTrigger) -> (Vec<T>, Vec<u32>) {
+        if self.pending.is_empty() {
+            return (Vec::new(), Vec::new());
+        }
+        let items = std::mem::take(&mut self.pending);
+        let unique = std::mem::take(&mut self.unique);
+        self.unique_set.clear();
+        self.oldest = None;
+        self.stats.flushes += 1;
+        match trigger {
+            FlushTrigger::Fill => self.stats.fill_flushes += 1,
+            FlushTrigger::Budget => self.stats.budget_expiries += 1,
+            FlushTrigger::Drain => self.stats.drain_flushes += 1,
+        }
+        self.stats.coalesced_nodes += (self.references - unique.len()) as u64;
+        self.stats.unique_nodes += unique.len() as u64;
+        self.references = 0;
+        (items, unique)
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        self.stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +301,78 @@ mod tests {
         let c = b.coalesce(&[]);
         assert!(c.unique.is_empty() && c.groups.is_empty());
         assert!(Batcher::new(0).is_err());
+    }
+
+    // ---- CrossBatcher: fill vs budget semantics -------------------------
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn fill_bound_trips_on_distinct_nodes_not_references() {
+        let mut cb: CrossBatcher<&str> = CrossBatcher::new(4, ms(1000)).unwrap();
+        let t0 = Instant::now();
+        assert!(!cb.push("a", &[1, 2], t0), "2 distinct < 4");
+        assert!(!cb.push("b", &[2, 1, 3], t0), "duplicates don't fill: 3 distinct");
+        assert!(cb.push("c", &[3, 9], t0), "4 distinct trips the fill bound");
+        assert_eq!(cb.pending_nodes(), 4);
+        let (items, unique) = cb.take(FlushTrigger::Fill);
+        assert_eq!(items, vec!["a", "b", "c"]);
+        assert_eq!(unique, vec![1, 2, 3, 9], "first-seen union order");
+        let s = cb.stats();
+        assert_eq!((s.flushes, s.fill_flushes, s.budget_expiries), (1, 1, 0));
+        // 7 references, 4 distinct → 3 coalesced away.
+        assert_eq!((s.coalesced_nodes, s.unique_nodes, s.batched_requests), (3, 4, 3));
+        assert!(cb.is_empty() && cb.deadline().is_none());
+    }
+
+    #[test]
+    fn budget_anchors_on_the_oldest_request() {
+        let mut cb: CrossBatcher<u32> = CrossBatcher::new(100, ms(50)).unwrap();
+        let t0 = Instant::now();
+        assert!(!cb.should_flush(t0), "empty queue has no deadline");
+        cb.push(0, &[5], t0);
+        // Followers arriving late do NOT extend the first request's wait.
+        cb.push(1, &[6], t0 + ms(30));
+        assert_eq!(cb.deadline().unwrap(), t0 + ms(50));
+        assert!(!cb.should_flush(t0 + ms(49)));
+        assert!(cb.should_flush(t0 + ms(50)), "budget expires exactly at oldest + delay");
+        let (items, unique) = cb.take(FlushTrigger::Budget);
+        assert_eq!((items.len(), unique.len()), (2, 2));
+        assert_eq!(cb.stats().budget_expiries, 1);
+        // Next arrival re-anchors the deadline.
+        cb.push(2, &[7], t0 + ms(80));
+        assert_eq!(cb.deadline().unwrap(), t0 + ms(130));
+    }
+
+    #[test]
+    fn zero_delay_means_flush_after_every_request() {
+        let mut cb: CrossBatcher<u32> = CrossBatcher::new(100, ms(0)).unwrap();
+        let t0 = Instant::now();
+        cb.push(0, &[1], t0);
+        assert!(cb.should_flush(t0), "zero budget expires immediately");
+        assert!(CrossBatcher::<u32>::new(0, ms(1)).is_err());
+    }
+
+    #[test]
+    fn drain_and_empty_take_accounting() {
+        let mut cb: CrossBatcher<u32> = CrossBatcher::new(8, ms(10)).unwrap();
+        let (items, unique) = cb.take(FlushTrigger::Drain);
+        assert!(items.is_empty() && unique.is_empty());
+        assert_eq!(cb.stats().flushes, 0, "empty take is not a flush");
+        cb.push(0, &[], Instant::now());
+        let (items, unique) = cb.take(FlushTrigger::Drain);
+        assert_eq!((items.len(), unique.len()), (1, 0), "id-free items still flush");
+        let s = cb.stats();
+        assert_eq!((s.flushes, s.drain_flushes, s.unique_nodes), (1, 1, 0));
+    }
+
+    #[test]
+    fn oversized_single_request_flushes_at_once() {
+        let mut cb: CrossBatcher<u32> = CrossBatcher::new(3, ms(1000)).unwrap();
+        assert!(cb.push(0, &[1, 2, 3, 4, 5], Instant::now()), "5 ≥ 3 flushes immediately");
+        let (_, unique) = cb.take(FlushTrigger::Fill);
+        assert_eq!(unique, vec![1, 2, 3, 4, 5], "never truncated, only flushed");
     }
 }

@@ -16,17 +16,93 @@
 //! + packed words), edge list, node count. Load verifies size and
 //! checksum before decoding anything, same policy as the checkpoint and
 //! code-file headers.
+//!
+//! # Shard files (`HGNS0001`)
+//!
+//! `hashgnn export --shards K` splits one bundle into K **contiguous
+//! node-range shards** so a graph larger than one machine's memory can be
+//! served by K processes behind a [`ShardRouter`](crate::serve::ShardRouter).
+//! A shard file carries the same 24-byte `magic + payload-size + FNV-1a`
+//! envelope (each shard is checksummed independently), then a shard
+//! header — owned range `[lo, hi)`, shard index, shard count, and the
+//! `present` id list described below — followed by the ordinary bundle
+//! payload.
+//!
+//! What gets sliced per shard depends on the model family, because
+//! **served bytes must stay bit-identical to the unsharded session**:
+//!
+//! - *plain decoder* (`recon`): a node's embedding is a function of its
+//!   own code only, so the shard keeps codes for its owned range and no
+//!   edges;
+//! - *minibatch SAGE*: fan-out sampling draws uniformly from a node's
+//!   full (sorted, deduplicated) CSR neighbor list, and the per-node seed
+//!   makes a node's two-hop sample a function of `(seed, id)` alone. The
+//!   shard therefore keeps every edge incident to `owned ∪ N(owned)` —
+//!   which reproduces the exact neighbor lists of all nodes sampling can
+//!   draw *from* — plus codes for the two-hop closure
+//!   `owned ∪ N(owned) ∪ N(N(owned))`, the set sampling can draw *to*;
+//! - *full-batch GNNs*: every node's representation depends on the whole
+//!   graph, so shards replicate edges and codes and the split only
+//!   records ownership (the router still fans requests out across
+//!   shards; the memory win is for the minibatch/decoder families, the
+//!   paper's industrial serving case).
+//!
+//! Sliced codes are **row-compacted**: the shard's `BitMatrix` has one
+//! row per retained node and the header's ascending `present` list maps
+//! global node ids to rows. An empty `present` list means codes (when
+//! present at all) are dense over all `n_nodes`. Node ids stay global
+//! everywhere else — edges, requests, and sampling seeds never change
+//! meaning across the split, which is what makes bit-parity provable
+//! (`tests/serve_persistent.rs` asserts it).
 
 use std::path::Path;
 
 use crate::cfg::CodingCfg;
 use crate::codes::{BitMatrix, CodeTable};
+use crate::graph::Graph;
 use crate::params::ParamStore;
 use crate::runtime::{Manifest, Tensor};
 use crate::ser;
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"HGNB0001";
+const SHARD_MAGIC: &[u8; 8] = b"HGNS0001";
+
+/// Shard header of a node-range bundle slice (`HGNS0001` files): which
+/// contiguous global id range this shard **owns** (serves), where it sits
+/// in the shard set, and which global ids its row-compacted code table
+/// retains.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Owned node range `[lo, hi)` in global ids — the only ids this
+    /// shard may be asked to serve.
+    pub lo: u32,
+    pub hi: u32,
+    /// Position of this shard in the set (`0..count`).
+    pub index: usize,
+    /// Total shards the bundle was split into.
+    pub count: usize,
+    /// Ascending global ids whose codes this shard retains (row `r` of
+    /// the shard's `BitMatrix` is the code of `present[r]`). Empty means
+    /// the codes — when the model has any — are dense over all `n_nodes`.
+    pub present: Vec<u32>,
+}
+
+impl ShardInfo {
+    /// True when `id` is in the owned range `[lo, hi)`.
+    pub fn owns(&self, id: u32) -> bool {
+        self.lo <= id && id < self.hi
+    }
+
+    /// Row of `id`'s code in the compacted table (`None` when the shard's
+    /// codes are dense, identity-mapped, or `id` was not retained).
+    pub fn code_row(&self, id: u32) -> Option<usize> {
+        if self.present.is_empty() {
+            return None;
+        }
+        self.present.binary_search(&id).ok()
+    }
+}
 
 /// A frozen, self-contained serving artifact.
 #[derive(Clone)]
@@ -42,6 +118,9 @@ pub struct ServingBundle {
     /// whose inference needs no graph).
     pub edges: Vec<(u32, u32)>,
     pub n_nodes: usize,
+    /// `Some` when this bundle is one node-range shard of a split export
+    /// ([`ServingBundle::split_shards`]); `None` for a whole-graph bundle.
+    pub shard: Option<ShardInfo>,
 }
 
 impl ServingBundle {
@@ -56,7 +135,8 @@ impl ServingBundle {
         edges: Vec<(u32, u32)>,
         n_nodes: usize,
     ) -> Result<Self> {
-        let bundle = Self { manifest, params: store.params.clone(), codes, edges, n_nodes };
+        let bundle =
+            Self { manifest, params: store.params.clone(), codes, edges, n_nodes, shard: None };
         bundle.validate()?;
         Ok(bundle)
     }
@@ -81,12 +161,53 @@ impl ServingBundle {
             }
             t.as_f32()?;
         }
-        if let Some(codes) = &self.codes {
-            if codes.n() != self.n_nodes {
+        if let Some(s) = &self.shard {
+            if s.lo >= s.hi || s.hi as usize > self.n_nodes {
                 return Err(Error::Shape(format!(
-                    "bundle codes cover {} entities, bundle declares {} nodes",
-                    codes.n(),
-                    self.n_nodes
+                    "shard owns [{}, {}) which is not a non-empty range within {} nodes",
+                    s.lo, s.hi, self.n_nodes
+                )));
+            }
+            if s.index >= s.count {
+                return Err(Error::Shape(format!(
+                    "shard index {} out of range for {} shards",
+                    s.index, s.count
+                )));
+            }
+            if !s.present.is_empty() {
+                if !s.present.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(Error::Shape(
+                        "shard present-id list must be strictly ascending".into(),
+                    ));
+                }
+                if s.present.last().map(|&v| v as usize >= self.n_nodes).unwrap_or(false) {
+                    return Err(Error::Shape(format!(
+                        "shard present id {} out of range for {} nodes",
+                        s.present.last().unwrap(),
+                        self.n_nodes
+                    )));
+                }
+                // Every owned id must have its code retained.
+                for id in s.lo..s.hi {
+                    if s.present.binary_search(&id).is_err() {
+                        return Err(Error::Shape(format!(
+                            "shard owns node {id} but its code row is not retained"
+                        )));
+                    }
+                }
+            }
+        }
+        if let Some(codes) = &self.codes {
+            // A shard with a non-empty present list carries a row-compacted
+            // code table; everything else is dense over all nodes.
+            let expect = match &self.shard {
+                Some(s) if !s.present.is_empty() => s.present.len(),
+                _ => self.n_nodes,
+            };
+            if codes.n() != expect {
+                return Err(Error::Shape(format!(
+                    "bundle codes cover {} entities, expected {expect}",
+                    codes.n()
                 )));
             }
             // When the manifest records a coding format, it must match.
@@ -124,6 +245,34 @@ impl ServingBundle {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut p: Vec<u8> = Vec::new();
+        let magic = match &self.shard {
+            Some(s) => {
+                p.extend_from_slice(&(s.lo as u64).to_le_bytes());
+                p.extend_from_slice(&(s.hi as u64).to_le_bytes());
+                p.extend_from_slice(&(s.index as u64).to_le_bytes());
+                p.extend_from_slice(&(s.count as u64).to_le_bytes());
+                p.extend_from_slice(&(s.present.len() as u64).to_le_bytes());
+                for &id in &s.present {
+                    p.extend_from_slice(&id.to_le_bytes());
+                }
+                SHARD_MAGIC
+            }
+            None => MAGIC,
+        };
+        self.encode_core(&mut p)?;
+
+        let mut buf = Vec::with_capacity(24 + p.len());
+        buf.extend_from_slice(magic);
+        buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&ser::fnv1a64(&p).to_le_bytes());
+        buf.extend_from_slice(&p);
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    /// Encode manifest + params + codes + edges + node count (the part of
+    /// the payload shared by whole bundles and shards) onto `p`.
+    fn encode_core(&self, p: &mut Vec<u8>) -> Result<()> {
         let manifest_json = ser::to_string_pretty(&self.manifest.to_json());
         p.extend_from_slice(&(manifest_json.len() as u64).to_le_bytes());
         p.extend_from_slice(manifest_json.as_bytes());
@@ -158,24 +307,20 @@ impl ServingBundle {
             p.extend_from_slice(&v.to_le_bytes());
         }
         p.extend_from_slice(&(self.n_nodes as u64).to_le_bytes());
-
-        let mut buf = Vec::with_capacity(24 + p.len());
-        buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
-        buf.extend_from_slice(&ser::fnv1a64(&p).to_le_bytes());
-        buf.extend_from_slice(&p);
-        std::fs::write(path, buf)?;
         Ok(())
     }
 
+    /// Load either a whole bundle (`HGNB0001`) or one shard (`HGNS0001`);
+    /// [`ServingBundle::shard`] distinguishes them after the fact.
     pub fn load(path: &Path) -> Result<Self> {
         let buf = std::fs::read(path)?;
-        if buf.len() < 24 || &buf[..8] != MAGIC {
+        if buf.len() < 24 || (&buf[..8] != MAGIC && &buf[..8] != SHARD_MAGIC) {
             return Err(Error::Config(format!(
-                "{}: not a serving bundle (bad magic or shorter than the header)",
+                "{}: not a serving bundle or shard (bad magic or shorter than the header)",
                 path.display()
             )));
         }
+        let sharded = &buf[..8] == SHARD_MAGIC;
         let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
         let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
         let p = &buf[24..];
@@ -205,6 +350,29 @@ impl ServingBundle {
             let v = u64::from_le_bytes(p[*pos..*pos + 8].try_into().unwrap());
             *pos += 8;
             Ok(v)
+        };
+
+        let shard = if sharded {
+            let lo = read_u64(p, &mut pos)?;
+            let hi = read_u64(p, &mut pos)?;
+            let index = read_u64(p, &mut pos)? as usize;
+            let count = read_u64(p, &mut pos)? as usize;
+            let n_present = read_u64(p, &mut pos)? as usize;
+            take(p, &mut pos, n_present * 4)?;
+            let present: Vec<u32> = p[pos..pos + n_present * 4]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += n_present * 4;
+            let (lo, hi) = (
+                u32::try_from(lo)
+                    .map_err(|_| Error::Config("shard lo exceeds u32 range".into()))?,
+                u32::try_from(hi)
+                    .map_err(|_| Error::Config("shard hi exceeds u32 range".into()))?,
+            );
+            Some(ShardInfo { lo, hi, index, count, present })
+        } else {
+            None
         };
 
         let mlen = read_u64(p, &mut pos)? as usize;
@@ -264,10 +432,117 @@ impl ServingBundle {
         }
         let n_nodes = read_u64(p, &mut pos)? as usize;
 
-        let bundle = Self { manifest, params, codes, edges, n_nodes };
+        let bundle = Self { manifest, params, codes, edges, n_nodes, shard };
         bundle.validate()?;
         Ok(bundle)
     }
+
+    /// Split a whole-graph bundle into `k` contiguous node-range shards
+    /// (shard `i` owns `[i·n/k, (i+1)·n/k)`), slicing edges and codes per
+    /// the family rules in the module docs. Every shard serves its owned
+    /// ids **bit-identically** to this bundle; a
+    /// [`ShardRouter`](crate::serve::ShardRouter) reassembles the full id
+    /// space.
+    pub fn split_shards(&self, k: usize) -> Result<Vec<ServingBundle>> {
+        if self.shard.is_some() {
+            return Err(Error::Config("bundle is already a shard — split the original".into()));
+        }
+        if k < 1 || k > self.n_nodes {
+            return Err(Error::Config(format!(
+                "cannot split {} nodes into {k} shards (need 1 ≤ k ≤ n)",
+                self.n_nodes
+            )));
+        }
+        let task = self.manifest.hyper_str("task")?.to_string();
+        let fullbatch = task.ends_with("_fullbatch");
+        let minibatch = task.starts_with("sage_minibatch");
+        // Neighbor closure for the minibatch family (global neighbor lists
+        // come from the same symmetrized CSR the serving session rebuilds).
+        let graph = if minibatch {
+            Some(Graph::from_edges(self.n_nodes, &self.edges)?)
+        } else {
+            None
+        };
+        let n = self.n_nodes;
+        let mut shards = Vec::with_capacity(k);
+        for i in 0..k {
+            let lo = (i * n / k) as u32;
+            let hi = ((i + 1) * n / k) as u32;
+            let (edges, present) = if fullbatch {
+                // Whole graph replicated; ownership is routing-only.
+                (self.edges.clone(), Vec::new())
+            } else if let Some(g) = &graph {
+                // Edge slice: everything incident to owned ∪ N(owned), so
+                // the full neighbor list of every node sampling draws FROM
+                // is reproduced exactly. Code closure adds N(N(owned)) —
+                // every node sampling can draw TO.
+                let mut edge_nodes = vec![false; n];
+                for u in lo..hi {
+                    edge_nodes[u as usize] = true;
+                    for &v in g.neighbors(u as usize) {
+                        edge_nodes[v as usize] = true;
+                    }
+                }
+                let mut closure = edge_nodes.clone();
+                for v in 0..n {
+                    if edge_nodes[v] {
+                        for &w in g.neighbors(v) {
+                            closure[w as usize] = true;
+                        }
+                    }
+                }
+                let edges: Vec<(u32, u32)> = self
+                    .edges
+                    .iter()
+                    .filter(|&&(u, v)| edge_nodes[u as usize] || edge_nodes[v as usize])
+                    .copied()
+                    .collect();
+                let present: Vec<u32> =
+                    (0..n as u32).filter(|&v| closure[v as usize]).collect();
+                (edges, present)
+            } else {
+                // Plain decoder: no graph; a node needs only its own code.
+                (Vec::new(), (lo..hi).collect())
+            };
+            let codes = match &self.codes {
+                None => None,
+                Some(table) if present.is_empty() => Some(table.clone()),
+                Some(table) => Some(compact_codes(table, &present)?),
+            };
+            let shard = ServingBundle {
+                manifest: self.manifest.clone(),
+                params: self.params.clone(),
+                codes,
+                edges,
+                n_nodes: n,
+                shard: Some(ShardInfo {
+                    lo,
+                    hi,
+                    index: i,
+                    count: k,
+                    // NC models carry no codes to compact; an empty list
+                    // keeps "present" meaning "compacted code rows" only.
+                    present: if self.codes.is_some() { present } else { Vec::new() },
+                }),
+            };
+            shard.validate()?;
+            shards.push(shard);
+        }
+        Ok(shards)
+    }
+}
+
+/// Row-compact a code table to `present` (ascending global ids): shard
+/// row `r` gets the packed words of global row `present[r]`, verbatim.
+fn compact_codes(table: &CodeTable, present: &[u32]) -> Result<CodeTable> {
+    let bits = &table.bits;
+    let wpr = bits.words_per_row();
+    let mut words = Vec::with_capacity(present.len() * wpr);
+    for &id in present {
+        words.extend_from_slice(bits.row_words(id as usize));
+    }
+    let compact = BitMatrix::from_words(present.len(), bits.n_bits(), words)?;
+    CodeTable::new(compact, table.coding)
 }
 
 #[cfg(test)]
@@ -329,6 +604,64 @@ mod tests {
         assert!(format!("{err}").contains("checksum"), "{err}");
         std::fs::write(&path, b"nope").unwrap();
         assert!(ServingBundle::load(&path).is_err());
+    }
+
+    #[test]
+    fn recon_split_shards_compacts_codes_and_roundtrips() {
+        let b = tiny_bundle();
+        let shards = b.split_shards(3).unwrap();
+        assert_eq!(shards.len(), 3);
+        let mut covered = 0usize;
+        for (i, s) in shards.iter().enumerate() {
+            let info = s.shard.as_ref().unwrap();
+            assert_eq!((info.index, info.count), (i, 3));
+            assert_eq!(info.present.len(), (info.hi - info.lo) as usize);
+            covered += (info.hi - info.lo) as usize;
+            assert!(s.edges.is_empty(), "decoder shards carry no edges");
+            // Compacted rows are the original rows, verbatim.
+            let codes = s.codes.as_ref().unwrap();
+            assert_eq!(codes.n(), info.present.len());
+            for (r, &id) in info.present.iter().enumerate() {
+                assert_eq!(
+                    codes.int_code(r),
+                    b.codes.as_ref().unwrap().int_code(id as usize),
+                    "shard {i} row {r} (global {id})"
+                );
+            }
+            assert_eq!(s.n_nodes, 12, "ids stay global");
+        }
+        assert_eq!(covered, 12, "ranges tile the node space");
+        // Shard save/load roundtrip through the HGNS0001 header.
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard.bin");
+        shards[1].save(&path).unwrap();
+        let back = ServingBundle::load(&path).unwrap();
+        assert_eq!(back.shard, shards[1].shard);
+        assert_eq!(back.codes.as_ref().unwrap().bits, shards[1].codes.as_ref().unwrap().bits);
+        // Splitting a shard again is rejected; so are degenerate counts.
+        assert!(back.split_shards(2).is_err());
+        assert!(b.split_shards(0).is_err());
+        assert!(b.split_shards(13).is_err());
+    }
+
+    #[test]
+    fn shard_validation_catches_bad_headers() {
+        let b = tiny_bundle();
+        let mut s = b.split_shards(2).unwrap().remove(0);
+        // Owned id whose code row is missing.
+        let info = s.shard.as_mut().unwrap();
+        info.present.remove(0);
+        // Codes row count now disagrees with present too — both are errors;
+        // rebuild a consistent-but-wrong variant to hit the ownership check.
+        let present = info.present.clone();
+        s.codes = Some(super::compact_codes(b.codes.as_ref().unwrap(), &present).unwrap());
+        assert!(s.validate().is_err(), "owned id without a retained code");
+        // Inverted range.
+        let mut s2 = b.split_shards(2).unwrap().remove(1);
+        let info = s2.shard.as_mut().unwrap();
+        std::mem::swap(&mut info.lo, &mut info.hi);
+        assert!(s2.validate().is_err());
     }
 
     #[test]

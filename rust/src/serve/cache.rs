@@ -21,6 +21,20 @@ pub struct CacheStats {
     pub capacity: usize,
 }
 
+impl CacheStats {
+    /// Field-wise accumulation (the shard router aggregates per-shard
+    /// caches through here; the exhaustive destructuring means a new
+    /// counter cannot be silently dropped from aggregates).
+    pub fn absorb(&mut self, o: &CacheStats) {
+        let CacheStats { hits, misses, evictions, len, capacity } = o;
+        self.hits += hits;
+        self.misses += misses;
+        self.evictions += evictions;
+        self.len += len;
+        self.capacity += capacity;
+    }
+}
+
 struct Slot {
     emb: Vec<f32>,
     last_used: u64,
@@ -29,6 +43,19 @@ struct Slot {
 /// Bounded LRU of `d`-wide embeddings. `capacity == 0` disables caching
 /// (every lookup is a miss, nothing is stored) — the "cold" reference
 /// configuration the parity tests use.
+///
+/// ```
+/// use hashgnn::serve::EmbedCache;
+///
+/// let mut c = EmbedCache::new(2, 3); // 2 entries, 3-wide rows
+/// c.insert(7, vec![1.0, 2.0, 3.0]);
+/// c.insert(8, vec![4.0, 5.0, 6.0]);
+/// assert_eq!(c.get(7).unwrap(), &[1.0, 2.0, 3.0]); // refreshes 7's recency
+/// c.insert(9, vec![7.0, 8.0, 9.0]); // evicts 8, now the least recently used
+/// assert!(c.contains(7) && !c.contains(8));
+/// let s = c.stats();
+/// assert_eq!((s.hits, s.misses, s.evictions), (1, 0, 1));
+/// ```
 pub struct EmbedCache {
     capacity: usize,
     d: usize,

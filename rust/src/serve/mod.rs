@@ -7,45 +7,64 @@
 //!
 //! - [`ServingBundle`] ([`bundle`]): the frozen artifact — manifest +
 //!   trained parameters + packed codes + message-passing edges — written
-//!   by `hashgnn export` and loaded by `hashgnn infer` / `hashgnn serve`;
-//! - [`Batcher`] ([`batcher`]): coalesces ad-hoc node/edge queries into
-//!   the fixed, pool-sized batches the executables consume (dedup +
-//!   tail-padding, both result-neutral);
+//!   by `hashgnn export` (optionally as K node-range **shards**, see
+//!   [`ServingBundle::split_shards`]) and loaded by `hashgnn infer` /
+//!   `hashgnn serve`;
+//! - [`Batcher`] / [`CrossBatcher`] ([`batcher`]): per-call coalescing
+//!   into fixed, pool-sized batches, and cross-request accumulation
+//!   under a fill bound + latency budget for the persistent server;
 //! - [`EmbedCache`] ([`cache`]): bounded, exact-LRU cache of decoded
 //!   embeddings keyed by node id with precise hit/miss/eviction counters;
-//! - [`ServeSession`]: wires the three around an
+//! - [`ServeSession`]: wires the above around an
 //!   [`InferModel`](crate::runtime::native::infer::InferModel) — the
 //!   forward-only model surface, so **no backward or optimizer code is
-//!   reachable from this module**.
+//!   reachable from this module**;
+//! - [`ShardRouter`] ([`router`]): serves a sharded export as one id
+//!   space — routes each request's node ids to the owning shard's
+//!   session and merges responses;
+//! - [`server`]: the persistent loop — newline-delimited JSON over
+//!   stdin/stdout or TCP, cross-request batching, exact counters.
+//!
+//! The [`Serving`] trait is the request-side seam: [`ServeSession`]
+//! (one bundle) and [`ShardRouter`] (K bundles) both implement it, and
+//! every front-end — `serve --oneshot`, the persistent NDJSON/TCP loop,
+//! `hashgnn infer` — is written against `&mut dyn Serving`, so a future
+//! remote backend is one more implementation, not a new protocol.
+//! Response construction lives in [`handle_on`] / [`handle_all_on`] so
+//! the wire format cannot drift between front-ends.
 //!
 //! Every served value is bit-identical to the training-time forward on
 //! the same inputs: the inference forwards run the training kernels in
-//! the same order, the batcher only regroups row-independent work, the
+//! the same order, the batchers only regroup row-independent work, the
 //! cache only replays previously computed bytes, and minibatch fan-out
 //! sampling is seeded **per node id**, so a node's neighborhood — and
 //! therefore its embedding — does not depend on which request batch it
-//! arrived in. `tests/serve_e2e.rs` asserts all of this at thread counts
+//! arrived in, nor on which shard served it. `tests/serve_e2e.rs` and
+//! `tests/serve_persistent.rs` assert all of this at thread counts
 //! {1, 8}.
 //!
-//! This module is also the seam future remote/sharded serving backends
-//! plug into (ROADMAP "backend seam"): a remote backend replaces
-//! [`ServeSession`]'s local `InferModel` calls; the bundle, batcher and
-//! cache contracts stay.
+//! See `docs/SERVING.md` for the wire protocol and an end-to-end
+//! transcript, and `docs/ARCHITECTURE.md` for where this subsystem sits
+//! in the repo.
 
 pub mod batcher;
 pub mod bundle;
 pub mod cache;
+pub mod router;
+pub mod server;
 
-pub use batcher::{BatchGroup, Batcher, Coalesced};
-pub use bundle::ServingBundle;
+pub use batcher::{BatchGroup, BatchStats, Batcher, Coalesced, CrossBatcher, FlushTrigger};
+pub use bundle::{ServingBundle, ShardInfo};
 pub use cache::{CacheStats, EmbedCache};
+pub use router::ShardRouter;
+pub use server::{LoopStats, ServerCfg};
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::codes::CodeTable;
 use crate::graph::{Graph, NeighborSampler};
 use crate::rng::mix64;
-use crate::runtime::native::infer::InferModel;
+use crate::runtime::native::infer::{row_index, InferModel};
 use crate::runtime::Tensor;
 use crate::ser::Json;
 use crate::{Error, Result};
@@ -112,9 +131,214 @@ impl Request {
     }
 }
 
+impl Request {
+    /// Every node id the request references (edge endpoints flattened) —
+    /// what the cross-request batcher accumulates and the flush embeds.
+    pub fn node_ids(&self) -> Vec<u32> {
+        match self {
+            Request::Embed(ids) | Request::Classes(ids) => ids.clone(),
+            Request::Score(edges) => {
+                let mut ids = Vec::with_capacity(edges.len() * 2);
+                for &(u, v) in edges {
+                    ids.push(u);
+                    ids.push(v);
+                }
+                ids
+            }
+        }
+    }
+}
+
 /// Parse a `{"requests": [...]}` envelope.
 pub fn parse_requests(v: &Json) -> Result<Vec<Request>> {
     v.get("requests")?.as_arr()?.iter().map(Request::from_json).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The request-side seam: one trait, many backends, one wire format.
+// ---------------------------------------------------------------------------
+
+/// What a serving backend must provide for the shared front-ends
+/// (`oneshot`, the persistent NDJSON/TCP loop, `hashgnn infer`).
+///
+/// Implementors: [`ServeSession`] (one bundle, local [`InferModel`]) and
+/// [`ShardRouter`] (K node-range shards). The contract every implementor
+/// must keep: `embed_nodes` returns `ids.len() × embed_dim` row-major
+/// f32s that are **bit-identical** for any request grouping, cache
+/// state, thread count, or sharding of the same bundle.
+pub trait Serving {
+    /// Size of the served id space (requests are validated against it).
+    fn n_nodes(&self) -> usize;
+    /// Width of the rows [`Serving::embed_nodes`] returns.
+    fn embed_dim(&self) -> usize;
+    /// Serve embeddings for `ids` (duplicates allowed, any order).
+    fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>>;
+    /// Classification head over already-served rows `h (rows, embed_dim)`
+    /// → `(logits, argmax)`; errors when the model has no head. Row-wise,
+    /// so results never depend on how rows were grouped.
+    fn classes_from_rows(&self, h: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<usize>)>;
+    /// Cache/backend counters as a JSON object (the `"cache"` field of
+    /// batch responses).
+    fn stats_json(&self) -> Json;
+}
+
+/// Score `(u, v)` edges on any backend: embed both endpoints, then a
+/// fixed ascending-dimension dot per pair — the exact reduction the
+/// training link heads use, so scores are bit-identical to the training
+/// forward.
+pub fn score_edges_on(backend: &mut dyn Serving, edges: &[(u32, u32)]) -> Result<Vec<f32>> {
+    let mut ids = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in edges {
+        ids.push(u);
+        ids.push(v);
+    }
+    let emb = backend.embed_nodes(&ids)?;
+    let d = backend.embed_dim();
+    Ok(dot_pairs(&emb, edges.len(), d))
+}
+
+/// Ascending-dimension dots of `2·pairs` consecutive row pairs.
+pub(crate) fn dot_pairs(emb: &[f32], pairs: usize, d: usize) -> Vec<f32> {
+    let mut scores = vec![0.0f32; pairs];
+    for (e, s) in scores.iter_mut().enumerate() {
+        let hu = &emb[(2 * e) * d..(2 * e + 1) * d];
+        let hv = &emb[(2 * e + 1) * d..(2 * e + 2) * d];
+        let mut acc = 0.0f32;
+        for (&a, &b) in hu.iter().zip(hv) {
+            acc += a * b;
+        }
+        *s = acc;
+    }
+    scores
+}
+
+/// Class predictions (logits + argmax) for `ids` on any backend.
+pub fn predict_classes_on(
+    backend: &mut dyn Serving,
+    ids: &[u32],
+) -> Result<(Vec<f32>, Vec<usize>)> {
+    let emb = backend.embed_nodes(ids)?;
+    backend.classes_from_rows(&emb, ids.len())
+}
+
+/// Row-major argmax of `(rows, k)` logits.
+pub(crate) fn argmax_rows(logits: &[f32], k: usize) -> Vec<usize> {
+    logits
+        .chunks(k)
+        .map(|row| {
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// The wire form of [`CacheStats`] — one place, so the session's and the
+/// router's `"cache"` objects cannot drift apart field-by-field.
+pub(crate) fn cache_stats_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("evictions", Json::num(s.evictions as f64)),
+        ("len", Json::num(s.len as f64)),
+        ("capacity", Json::num(s.capacity as f64)),
+    ])
+}
+
+// Response builders — the single source of truth for the wire format,
+// shared by the oneshot path and the persistent server's flush demux.
+
+pub(crate) fn embed_response(ids: &[u32], emb: &[f32], d: usize) -> Json {
+    let rows: Vec<Json> = (0..ids.len())
+        .map(|i| Json::arr_num(emb[i * d..(i + 1) * d].iter().map(|&x| x as f64)))
+        .collect();
+    Json::obj(vec![
+        ("op", Json::str("embed")),
+        ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+        ("dim", Json::num(d as f64)),
+        ("embeddings", Json::Arr(rows)),
+    ])
+}
+
+pub(crate) fn score_response(edges: &[(u32, u32)], scores: &[f32]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("score")),
+        (
+            "edges",
+            Json::Arr(edges.iter().map(|&(u, v)| Json::arr_num([u as f64, v as f64])).collect()),
+        ),
+        ("scores", Json::arr_num(scores.iter().map(|&s| s as f64))),
+    ])
+}
+
+pub(crate) fn classes_response(ids: &[u32], argmax: &[usize]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("classes")),
+        ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+        ("classes", Json::Arr(argmax.iter().map(|&c| Json::num(c as f64)).collect())),
+    ])
+}
+
+/// Dispatch one wire request on any backend; the response is a JSON
+/// object in the same format for every front-end.
+pub fn handle_on(backend: &mut dyn Serving, req: &Request) -> Result<Json> {
+    match req {
+        Request::Embed(ids) => {
+            let emb = backend.embed_nodes(ids)?;
+            Ok(embed_response(ids, &emb, backend.embed_dim()))
+        }
+        Request::Score(edges) => {
+            let scores = score_edges_on(backend, edges)?;
+            Ok(score_response(edges, &scores))
+        }
+        Request::Classes(ids) => {
+            let (_logits, argmax) = predict_classes_on(backend, ids)?;
+            Ok(classes_response(ids, &argmax))
+        }
+    }
+}
+
+/// Run a request batch (the `--oneshot` envelope) and wrap the responses
+/// with the backend's counters.
+pub fn handle_all_on(backend: &mut dyn Serving, reqs: &[Request]) -> Result<Json> {
+    let responses: Vec<Json> =
+        reqs.iter().map(|r| handle_on(backend, r)).collect::<Result<_>>()?;
+    Ok(Json::obj(vec![
+        ("responses", Json::Arr(responses)),
+        ("cache", backend.stats_json()),
+    ]))
+}
+
+/// Load one or more bundle/shard files into the right backend: one
+/// whole-graph bundle → [`ServeSession`]; a complete shard set →
+/// [`ShardRouter`]. A lone shard file is rejected with the list it
+/// belongs to, so a misconfigured server cannot silently serve a
+/// fraction of the id space.
+pub fn load_backend(paths: &[std::path::PathBuf], opts: ServeOpts) -> Result<Box<dyn Serving>> {
+    if paths.is_empty() {
+        return Err(Error::Config("no bundle paths given".into()));
+    }
+    if paths.len() == 1 {
+        let bundle = ServingBundle::load(&paths[0])?;
+        if let Some(s) = &bundle.shard {
+            if s.count > 1 {
+                return Err(Error::Config(format!(
+                    "{} is shard {} of {} — pass all {} shard files (comma-separated) so the \
+                     router can cover the whole node range",
+                    paths[0].display(),
+                    s.index,
+                    s.count,
+                    s.count
+                )));
+            }
+        }
+        return Ok(Box::new(ServeSession::new(bundle, opts)?));
+    }
+    Ok(Box::new(ShardRouter::load(paths, opts)?))
 }
 
 /// A live serving session over one frozen bundle: forward-only model,
@@ -147,6 +371,17 @@ impl ServeSession {
                 "bundle for coded model '{}' carries no packed codes",
                 bundle.manifest.name
             )));
+        }
+        if model.is_fullbatch() {
+            if let Some(s) = &bundle.shard {
+                if !s.present.is_empty() {
+                    return Err(Error::Config(format!(
+                        "full-batch shard for '{}' carries row-compacted codes — full-batch \
+                         propagation needs every node's code (split_shards keeps them dense)",
+                        bundle.manifest.name
+                    )));
+                }
+            }
         }
         let graph = if model.is_fullbatch() || model.is_minibatch_sage() {
             Some(Graph::from_edges(bundle.n_nodes, &bundle.edges)?)
@@ -200,16 +435,59 @@ impl ServeSession {
         self.cache.stats()
     }
 
+    /// The node range this session may be asked to serve: the shard's
+    /// owned `[lo, hi)` for a shard bundle, `[0, n)` otherwise.
+    pub fn owned_range(&self) -> (u32, u32) {
+        match &self.bundle.shard {
+            Some(s) => (s.lo, s.hi),
+            None => (0, self.bundle.n_nodes as u32),
+        }
+    }
+
+    /// The bundle this session serves (the router validates shard sets
+    /// through it).
+    pub fn bundle(&self) -> &ServingBundle {
+        &self.bundle
+    }
+
     fn check_ids(&self, ids: &[u32]) -> Result<()> {
+        let (lo, hi) = self.owned_range();
         for &id in ids {
-            if id as usize >= self.bundle.n_nodes {
-                return Err(Error::Shape(format!(
-                    "node id {id} out of range [0, {})",
-                    self.bundle.n_nodes
-                )));
+            if id < lo || id >= hi {
+                return Err(Error::Shape(if self.bundle.shard.is_some() {
+                    format!("node id {id} outside this shard's owned range [{lo}, {hi})")
+                } else {
+                    format!("node id {id} out of range [0, {hi})")
+                }));
             }
         }
         Ok(())
+    }
+
+    /// Gather integer codes for global `ids`, translating through the
+    /// shard's row compaction when present.
+    fn gather_codes(&self, codes: &CodeTable, ids: &[u32], buf: &mut Vec<i32>) -> Result<()> {
+        match self.bundle.shard.as_ref().filter(|s| !s.present.is_empty()) {
+            None => {
+                codes.gather_int_codes(ids, buf);
+                Ok(())
+            }
+            Some(s) => {
+                let mut rows = Vec::with_capacity(ids.len());
+                for &id in ids {
+                    let r = s.code_row(id).ok_or_else(|| {
+                        Error::Shape(format!(
+                            "node id {id} has no code row in shard {}/{} — outside the \
+                             two-hop closure split_shards retained",
+                            s.index, s.count
+                        ))
+                    })?;
+                    rows.push(r as u32);
+                }
+                codes.gather_int_codes(&rows, buf);
+                Ok(())
+            }
+        }
     }
 
     /// Serve embeddings for `ids` (row-major, [`Self::embed_dim`] wide).
@@ -237,8 +515,7 @@ impl ServeSession {
         if !missing.is_empty() {
             let fresh = self.compute_unique(&missing)?;
             debug_assert_eq!(fresh.len(), missing.len() * d);
-            let index: HashMap<u32, usize> =
-                missing.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+            let index = row_index(&missing);
             for &slot in &miss_slots {
                 let k = index[&ids[slot]];
                 out[slot * d..(slot + 1) * d].copy_from_slice(&fresh[k * d..(k + 1) * d]);
@@ -255,51 +532,13 @@ impl ServeSession {
     /// — the same reduction the training link heads use — so scores are
     /// bit-identical to the training-time forward.
     pub fn score_edges(&mut self, edges: &[(u32, u32)]) -> Result<Vec<f32>> {
-        let mut ids = Vec::with_capacity(edges.len() * 2);
-        for &(u, v) in edges {
-            ids.push(u);
-            ids.push(v);
-        }
-        let emb = self.embed_nodes(&ids)?;
-        let d = self.d;
-        let mut scores = vec![0.0f32; edges.len()];
-        for (e, s) in scores.iter_mut().enumerate() {
-            let hu = &emb[(2 * e) * d..(2 * e + 1) * d];
-            let hv = &emb[(2 * e + 1) * d..(2 * e + 2) * d];
-            let mut acc = 0.0f32;
-            for (&a, &b) in hu.iter().zip(hv) {
-                acc += a * b;
-            }
-            *s = acc;
-        }
-        Ok(scores)
+        score_edges_on(self, edges)
     }
 
     /// Serve class predictions (logits + argmax) for `ids`; errors for
     /// models without a classification head.
     pub fn predict_classes(&mut self, ids: &[u32]) -> Result<(Vec<f32>, Vec<usize>)> {
-        let k = self.model.n_classes().ok_or_else(|| {
-            Error::Runtime(format!(
-                "model '{}' has no classification head",
-                self.bundle.manifest.name
-            ))
-        })?;
-        let emb = self.embed_nodes(ids)?;
-        let logits =
-            self.model.head_logits(&self.bundle.params, &emb, ids.len(), self.threads)?;
-        let argmax = logits
-            .chunks(k)
-            .map(|row| {
-                let mut best = 0usize;
-                for (j, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = j;
-                    }
-                }
-                best
-            })
-            .collect();
-        Ok((logits, argmax))
+        predict_classes_on(self, ids)
     }
 
     /// Compute embeddings for a deduplicated id list (cache-free inner
@@ -322,7 +561,7 @@ impl ServeSession {
         let mut out = Vec::with_capacity(unique.len() * d);
         let mut buf = Vec::new();
         for g in &co.groups {
-            codes.gather_int_codes(&g.ids, &mut buf);
+            self.gather_codes(codes, &g.ids, &mut buf)?;
             let t = Tensor::i32(vec![g.ids.len(), m], buf.clone())?;
             let emb = self.model.embed_nodes(&self.bundle.params, &[t], self.threads)?;
             out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
@@ -366,7 +605,7 @@ impl ServeSession {
             (Some(codes), Some(m)) => {
                 let mut buf = Vec::new();
                 let gather = |ids: &[u32], buf: &mut Vec<i32>| -> Result<Tensor> {
-                    codes.gather_int_codes(ids, buf);
+                    self.gather_codes(codes, ids, buf)?;
                     Tensor::i32(vec![ids.len(), m], buf.clone())
                 };
                 Ok(vec![
@@ -405,66 +644,45 @@ impl ServeSession {
         Ok(out)
     }
 
-    /// Dispatch one wire request; the response is a JSON object.
+    /// Dispatch one wire request; the response is a JSON object (same
+    /// format on every backend — see [`handle_on`]).
     pub fn handle(&mut self, req: &Request) -> Result<Json> {
-        match req {
-            Request::Embed(ids) => {
-                let emb = self.embed_nodes(ids)?;
-                let d = self.d;
-                let rows: Vec<Json> = (0..ids.len())
-                    .map(|i| Json::arr_num(emb[i * d..(i + 1) * d].iter().map(|&x| x as f64)))
-                    .collect();
-                Ok(Json::obj(vec![
-                    ("op", Json::str("embed")),
-                    ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
-                    ("dim", Json::num(d as f64)),
-                    ("embeddings", Json::Arr(rows)),
-                ]))
-            }
-            Request::Score(edges) => {
-                let scores = self.score_edges(edges)?;
-                Ok(Json::obj(vec![
-                    ("op", Json::str("score")),
-                    (
-                        "edges",
-                        Json::Arr(
-                            edges
-                                .iter()
-                                .map(|&(u, v)| Json::arr_num([u as f64, v as f64]))
-                                .collect(),
-                        ),
-                    ),
-                    ("scores", Json::arr_num(scores.iter().map(|&s| s as f64))),
-                ]))
-            }
-            Request::Classes(ids) => {
-                let (_logits, argmax) = self.predict_classes(ids)?;
-                Ok(Json::obj(vec![
-                    ("op", Json::str("classes")),
-                    ("nodes", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
-                    ("classes", Json::Arr(argmax.iter().map(|&c| Json::num(c as f64)).collect())),
-                ]))
-            }
-        }
+        handle_on(self, req)
     }
 
     /// Run a request batch and wrap the responses with cache statistics.
     pub fn handle_all(&mut self, reqs: &[Request]) -> Result<Json> {
-        let responses: Vec<Json> = reqs.iter().map(|r| self.handle(r)).collect::<Result<_>>()?;
-        let s = self.cache_stats();
-        Ok(Json::obj(vec![
-            ("responses", Json::Arr(responses)),
-            (
-                "cache",
-                Json::obj(vec![
-                    ("hits", Json::num(s.hits as f64)),
-                    ("misses", Json::num(s.misses as f64)),
-                    ("evictions", Json::num(s.evictions as f64)),
-                    ("len", Json::num(s.len as f64)),
-                    ("capacity", Json::num(s.capacity as f64)),
-                ]),
-            ),
-        ]))
+        handle_all_on(self, reqs)
+    }
+}
+
+impl Serving for ServeSession {
+    fn n_nodes(&self) -> usize {
+        self.bundle.n_nodes
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        ServeSession::embed_nodes(self, ids)
+    }
+
+    fn classes_from_rows(&self, h: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<usize>)> {
+        let k = self.model.n_classes().ok_or_else(|| {
+            Error::Runtime(format!(
+                "model '{}' has no classification head",
+                self.bundle.manifest.name
+            ))
+        })?;
+        let logits = self.model.head_logits(&self.bundle.params, h, rows, self.threads)?;
+        let argmax = argmax_rows(&logits, k);
+        Ok((logits, argmax))
+    }
+
+    fn stats_json(&self) -> Json {
+        cache_stats_json(&self.cache_stats())
     }
 }
 

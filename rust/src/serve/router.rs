@@ -1,0 +1,269 @@
+//! Shard router: serve a `hashgnn export --shards K` set as one id space.
+//!
+//! A [`ShardRouter`] owns one [`ServeSession`] per node-range shard and
+//! presents the same [`Serving`] surface as a single session: each
+//! request's node ids are routed to the shard whose `[lo, hi)` range owns
+//! them, computed there, and scattered back into request order. Because
+//! every shard serves its owned ids bit-identically to the unsharded
+//! bundle (see the slicing rules in [`super::bundle`]), the router's
+//! merged output is **bit-identical** to an unsharded [`ServeSession`]
+//! over the same requests — `tests/serve_persistent.rs` asserts this for
+//! embeddings, scores and class predictions at thread counts {1, 8}.
+//!
+//! Construction validates the set as a whole: every bundle must be a
+//! shard of the same export (same manifest name, node count, shard
+//! count, identical parameters), each index must appear exactly once,
+//! and the owned ranges must tile `[0, n)` with no gap or overlap. A
+//! missing or duplicated shard file is a loud constructor error, never a
+//! partially-served id space.
+//!
+//! ```no_run
+//! use std::path::PathBuf;
+//! use hashgnn::serve::{ServeOpts, ShardRouter};
+//!
+//! let paths: Vec<PathBuf> =
+//!     vec!["b.bin.shard-0-of-2".into(), "b.bin.shard-1-of-2".into()];
+//! let mut router = ShardRouter::load(&paths, ServeOpts::default()).unwrap();
+//! let emb = router.embed_nodes(&[0, 1, 2]).unwrap(); // routed + merged
+//! assert_eq!(emb.len(), 3 * router.embed_dim());
+//! ```
+
+use std::path::PathBuf;
+
+use crate::ser::Json;
+use crate::{Error, Result};
+
+use super::{
+    predict_classes_on, score_edges_on, CacheStats, ServeOpts, ServeSession, Serving,
+    ServingBundle,
+};
+
+/// K shard sessions behind one [`Serving`] front; see the module docs.
+pub struct ShardRouter {
+    /// Sessions sorted by owned range (`sessions[i]` owns `ranges[i]`).
+    /// For the full-batch family this collapses to ONE session over the
+    /// de-sharded bundle (see [`ShardRouter::new`]).
+    sessions: Vec<ServeSession>,
+    /// Contiguous owned ranges `[lo, hi)` tiling `[0, n)`, ascending.
+    ranges: Vec<(u32, u32)>,
+    /// Shard count the export declared (what [`ShardRouter::n_shards`]
+    /// reports, independent of the session collapse above).
+    declared: usize,
+    n_nodes: usize,
+    d: usize,
+}
+
+impl ShardRouter {
+    /// Build from a complete, validated shard set. `opts` (threads,
+    /// cache capacity, sampling seed) apply to every shard session —
+    /// the seed in particular must be uniform, since minibatch fan-out
+    /// is seeded per `(seed, node id)`.
+    pub fn new(bundles: Vec<ServingBundle>, opts: ServeOpts) -> Result<Self> {
+        if bundles.is_empty() {
+            return Err(Error::Config("shard router needs at least one bundle".into()));
+        }
+        let count = bundles.len();
+        let name = bundles[0].manifest.name.clone();
+        let n_nodes = bundles[0].n_nodes;
+        let mut slots: Vec<Option<ServingBundle>> = (0..count).map(|_| None).collect();
+        for b in bundles {
+            let s = b.shard.as_ref().ok_or_else(|| {
+                Error::Config(format!(
+                    "bundle '{}' is not a shard — route only `export --shards K` outputs",
+                    b.manifest.name
+                ))
+            })?;
+            if b.manifest.name != name || b.n_nodes != n_nodes || s.count != count {
+                return Err(Error::Config(format!(
+                    "mixed shard set: '{}' ({} nodes, {} shards) vs '{name}' ({n_nodes} \
+                     nodes, {count} shards)",
+                    b.manifest.name, b.n_nodes, s.count
+                )));
+            }
+            let idx = s.index;
+            if idx >= count || slots[idx].is_some() {
+                return Err(Error::Config(format!(
+                    "shard index {idx} duplicated or out of range for {count} shards"
+                )));
+            }
+            slots[idx] = Some(b);
+        }
+        let bundles: Vec<ServingBundle> =
+            slots.into_iter().map(|s| s.expect("every index filled exactly once")).collect();
+        // Parameters must be byte-identical across shards: the head demux
+        // (classes_from_rows) runs on shard 0 for rows served anywhere.
+        for b in &bundles[1..] {
+            if b.params != bundles[0].params {
+                return Err(Error::Config(
+                    "shard set carries differing parameter tensors — shards of one export \
+                     always share the trained store"
+                        .into(),
+                ));
+            }
+        }
+        let mut ranges = Vec::with_capacity(count);
+        let mut expect_lo = 0u32;
+        for b in &bundles {
+            let s = b.shard.as_ref().expect("checked above");
+            if s.lo != expect_lo {
+                return Err(Error::Config(format!(
+                    "shard ranges do not tile the node space: shard {} starts at {} but the \
+                     previous range ends at {expect_lo}",
+                    s.index, s.lo
+                )));
+            }
+            ranges.push((s.lo, s.hi));
+            expect_lo = s.hi;
+        }
+        if expect_lo as usize != n_nodes {
+            return Err(Error::Config(format!(
+                "shard ranges cover [0, {expect_lo}) but the export has {n_nodes} nodes"
+            )));
+        }
+        let fullbatch = bundles[0]
+            .manifest
+            .hyper_str("task")
+            .map(|t| t.ends_with("_fullbatch"))
+            .unwrap_or(false);
+        let (sessions, ranges) = if fullbatch {
+            // Full-batch shards replicate the whole graph and codes —
+            // ownership is routing-only — so one session over the
+            // de-sharded bundle serves every id and memoizes the
+            // (n, hidden) H matrix ONCE instead of once per shard.
+            let mut whole = bundles.into_iter().next().expect("validated non-empty set");
+            whole.shard = None;
+            (vec![ServeSession::new(whole, opts)?], vec![(0u32, n_nodes as u32)])
+        } else {
+            let mut sessions = Vec::with_capacity(count);
+            for b in bundles {
+                sessions.push(ServeSession::new(b, opts)?);
+            }
+            (sessions, ranges)
+        };
+        let d = sessions[0].embed_dim();
+        Ok(Self { sessions, ranges, declared: count, n_nodes, d })
+    }
+
+    /// Load every shard file of one export and build the router.
+    pub fn load(paths: &[PathBuf], opts: ServeOpts) -> Result<Self> {
+        let bundles: Vec<ServingBundle> =
+            paths.iter().map(|p| ServingBundle::load(p)).collect::<Result<_>>()?;
+        Self::new(bundles, opts)
+    }
+
+    /// Shard count of the export (the declared split, even when the
+    /// full-batch collapse serves it through fewer sessions).
+    pub fn n_shards(&self) -> usize {
+        self.declared
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Owning shard of a (validated) node id: its range index in the
+    /// contiguous tiling.
+    fn owner(&self, id: u32) -> usize {
+        // partition_point returns the first range with lo > id; its
+        // predecessor owns id because ranges tile [0, n).
+        self.ranges.partition_point(|&(lo, _)| lo <= id) - 1
+    }
+
+    /// Serve embeddings for `ids`: route each id to its owning shard,
+    /// compute per shard, scatter rows back into request order.
+    pub fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        for &id in ids {
+            if id as usize >= self.n_nodes {
+                return Err(Error::Shape(format!(
+                    "node id {id} out of range [0, {})",
+                    self.n_nodes
+                )));
+            }
+        }
+        let k = self.sessions.len();
+        let mut per_shard_ids: Vec<Vec<u32>> = vec![Vec::new(); k];
+        let mut per_shard_slots: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = self.owner(id);
+            per_shard_ids[s].push(id);
+            per_shard_slots[s].push(slot);
+        }
+        let d = self.d;
+        let mut out = vec![0.0f32; ids.len() * d];
+        for s in 0..k {
+            if per_shard_ids[s].is_empty() {
+                continue;
+            }
+            let rows = self.sessions[s].embed_nodes(&per_shard_ids[s])?;
+            for (j, &slot) in per_shard_slots[s].iter().enumerate() {
+                out[slot * d..(slot + 1) * d].copy_from_slice(&rows[j * d..(j + 1) * d]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serve edge scores; endpoints may live on different shards — each
+    /// is embedded by its owner, the dot happens here, in the same
+    /// ascending-dimension order as every other backend.
+    pub fn score_edges(&mut self, edges: &[(u32, u32)]) -> Result<Vec<f32>> {
+        score_edges_on(self, edges)
+    }
+
+    /// Serve class predictions (logits + argmax) for `ids`.
+    pub fn predict_classes(&mut self, ids: &[u32]) -> Result<(Vec<f32>, Vec<usize>)> {
+        predict_classes_on(self, ids)
+    }
+
+    /// Dispatch one wire request (same format as [`ServeSession::handle`]).
+    pub fn handle(&mut self, req: &super::Request) -> Result<Json> {
+        super::handle_on(self, req)
+    }
+
+    /// Run a request batch and wrap the responses with aggregate cache
+    /// statistics.
+    pub fn handle_all(&mut self, reqs: &[super::Request]) -> Result<Json> {
+        super::handle_all_on(self, reqs)
+    }
+
+    /// Cache counters summed over every shard session.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.sessions {
+            total.absorb(&s.cache_stats());
+        }
+        total
+    }
+}
+
+impl Serving for ShardRouter {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        ShardRouter::embed_nodes(self, ids)
+    }
+
+    fn classes_from_rows(&self, h: &[f32], rows: usize) -> Result<(Vec<f32>, Vec<usize>)> {
+        // The head is row-wise and the trained parameters are replicated
+        // (and verified identical) across shards, so any shard can apply
+        // it to rows served anywhere.
+        self.sessions[0].classes_from_rows(h, rows)
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut v = super::cache_stats_json(&self.cache_stats());
+        if let Json::Obj(o) = &mut v {
+            o.insert("shards".to_string(), Json::num(self.declared as f64));
+        }
+        v
+    }
+}

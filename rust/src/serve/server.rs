@@ -1,0 +1,481 @@
+//! Persistent server loop: newline-delimited JSON over stdin/stdout
+//! (`hashgnn serve --stdin`) or TCP (`--listen <addr>`), with
+//! cross-request batching under a latency budget.
+//!
+//! # Protocol (see `docs/SERVING.md` for the full spec)
+//!
+//! One JSON object per input line — the same request objects the oneshot
+//! envelope carries (`{"op": "embed", "nodes": [...]}` etc.), plus two
+//! control ops: `{"op": "stats"}` (flush, then report counters) and
+//! `{"op": "shutdown"}` (flush, acknowledge, end the session). An
+//! optional `"id"` field is echoed verbatim on the matching response
+//! line. One JSON object per output line, **in request order**; a
+//! request that fails — malformed JSON, unknown op, out-of-range node id,
+//! model without the requested head — produces an `{"error": ...}` line
+//! in its position and never tears down the session.
+//!
+//! # Batching semantics
+//!
+//! Requests do not compute as they arrive. They queue in a
+//! [`CrossBatcher`] until **either** `max_batch` distinct node ids are
+//! pending **or** `max_delay` has elapsed since the oldest queued request
+//! (whichever comes first; EOF and control ops drain immediately). A
+//! flush embeds the union of pending node ids in one deduplicated
+//! session call — the padded, pool-sized `InferModel` batches — and
+//! demuxes rows back per request
+//! ([`demux_rows`](crate::runtime::native::infer::demux_rows)). Exact
+//! counters ([`LoopStats`]) report flushes by trigger, nodes saved by
+//! cross-request coalescing, and distinct nodes computed.
+//!
+//! Batching never changes served bytes: the union goes through the same
+//! grouping-invariant session path as a lone request, and the classifier
+//! head is applied row-wise to the flushed rows. The NDJSON responses
+//! are therefore identical whether requests arrive one per flush or all
+//! in one — and identical between a [`ServeSession`](super::ServeSession)
+//! and a [`ShardRouter`](super::ShardRouter) over the same export.
+//!
+//! # Blocking model
+//!
+//! A detached reader thread feeds raw lines into a channel; the loop
+//! waits with `recv_timeout` against the batcher's deadline, so the
+//! latency budget holds whether input is idle, trickling, or flooding.
+//! TCP mode accepts connections sequentially (one NDJSON session at a
+//! time over a shared backend, so the embedding cache stays warm across
+//! connections); concurrent connections belong to a fleet of processes
+//! behind the shard router, not to one loop.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::runtime::native::infer::{demux_rows_with, row_index};
+use crate::ser::{self, Json};
+use crate::Result;
+
+use super::batcher::{BatchStats, CrossBatcher, FlushTrigger};
+use super::{classes_response, dot_pairs, embed_response, score_response, Request, Serving};
+
+/// Persistent-loop knobs (`--max-batch`, `--max-delay-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCfg {
+    /// Flush when this many distinct node ids are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        Self { max_batch: 256, max_delay: Duration::from_millis(5) }
+    }
+}
+
+/// Exact per-session counters: request/response accounting on top of the
+/// batcher's flush statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoopStats {
+    /// Non-empty input lines consumed (requests + control ops).
+    pub requests: u64,
+    /// Successful response lines written.
+    pub responses: u64,
+    /// Error lines written.
+    pub errors: u64,
+    /// Cross-request batching counters.
+    pub batch: BatchStats,
+}
+
+impl LoopStats {
+    /// Accumulate another session's counters (TCP mode sums sessions).
+    pub fn absorb(&mut self, o: &LoopStats) {
+        self.requests += o.requests;
+        self.responses += o.responses;
+        self.errors += o.errors;
+        self.batch.absorb(&o.batch);
+    }
+
+    /// One-line human summary (the CLI prints it to stderr).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} request(s), {} response(s), {} error(s) | {} flush(es): {} fill / {} budget / \
+             {} drain | {} node(s) coalesced away, {} unique computed",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.batch.flushes,
+            self.batch.fill_flushes,
+            self.batch.budget_expiries,
+            self.batch.drain_flushes,
+            self.batch.coalesced_nodes,
+            self.batch.unique_nodes
+        )
+    }
+}
+
+/// One queued input line: a validated request or a deferred error that
+/// must answer in its arrival position.
+enum Pending {
+    Req { req: Request, echo: Option<Json> },
+    Fail { msg: String, echo: Option<Json> },
+}
+
+/// One parsed input line.
+enum Line {
+    Item(Pending),
+    Stats(Option<Json>),
+    Shutdown(Option<Json>),
+}
+
+fn parse_line(line: &str, n_nodes: usize) -> Line {
+    let v = match ser::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Line::Item(Pending::Fail { msg: format!("{e}"), echo: None }),
+    };
+    let echo = v.opt("id").cloned();
+    match v.opt("op").and_then(|op| op.as_str().ok()) {
+        Some("stats") => return Line::Stats(echo),
+        Some("shutdown") => return Line::Shutdown(echo),
+        _ => {}
+    }
+    match Request::from_json(&v) {
+        Ok(req) => {
+            // Validate ids at enqueue time so one bad id fails its own
+            // line instead of poisoning a whole flush.
+            if let Some(&bad) = req.node_ids().iter().find(|&&id| id as usize >= n_nodes) {
+                return Line::Item(Pending::Fail {
+                    msg: format!("node id {bad} out of range [0, {n_nodes})"),
+                    echo,
+                });
+            }
+            Line::Item(Pending::Req { req, echo })
+        }
+        Err(e) => Line::Item(Pending::Fail { msg: format!("{e}"), echo }),
+    }
+}
+
+fn with_echo(v: Json, echo: Option<Json>) -> Json {
+    match (v, echo) {
+        (Json::Obj(mut o), Some(e)) => {
+            o.insert("id".to_string(), e);
+            Json::Obj(o)
+        }
+        (v, _) => v,
+    }
+}
+
+fn error_json(msg: &str, echo: Option<Json>) -> Json {
+    with_echo(Json::obj(vec![("error", Json::str(msg))]), echo)
+}
+
+/// Build one response from the flush's precomputed rows. Embeds and
+/// scores demux through the flush's shared id→row index; classes push
+/// the demuxed rows through the row-wise head.
+fn respond(
+    backend: &dyn Serving,
+    req: &Request,
+    index: &HashMap<u32, usize>,
+    rows: &[f32],
+    d: usize,
+) -> Result<Json> {
+    match req {
+        Request::Embed(ids) => {
+            let mut emb = vec![0.0f32; ids.len() * d];
+            demux_rows_with(index, rows, d, ids, &mut emb)?;
+            Ok(embed_response(ids, &emb, d))
+        }
+        Request::Score(edges) => {
+            let ids = req.node_ids();
+            let mut emb = vec![0.0f32; ids.len() * d];
+            demux_rows_with(index, rows, d, &ids, &mut emb)?;
+            Ok(score_response(edges, &dot_pairs(&emb, edges.len(), d)))
+        }
+        Request::Classes(ids) => {
+            let mut emb = vec![0.0f32; ids.len() * d];
+            demux_rows_with(index, rows, d, ids, &mut emb)?;
+            let (_logits, argmax) = backend.classes_from_rows(&emb, ids.len())?;
+            Ok(classes_response(ids, &argmax))
+        }
+    }
+}
+
+fn flush(
+    backend: &mut dyn Serving,
+    batcher: &mut CrossBatcher<Pending>,
+    trigger: FlushTrigger,
+    out: &mut dyn Write,
+    stats: &mut LoopStats,
+) -> Result<()> {
+    if batcher.is_empty() {
+        return Ok(());
+    }
+    let (items, unique) = batcher.take(trigger);
+    let computed =
+        if unique.is_empty() { Ok(Vec::new()) } else { backend.embed_nodes(&unique) };
+    let d = backend.embed_dim();
+    match computed {
+        Ok(rows) => {
+            // One id→row index per flush, shared by every request's demux.
+            let index = row_index(&unique);
+            for item in items {
+                let line = match item {
+                    Pending::Fail { msg, echo } => {
+                        stats.errors += 1;
+                        error_json(&msg, echo)
+                    }
+                    Pending::Req { req, echo } => match respond(backend, &req, &index, &rows, d)
+                    {
+                        Ok(resp) => {
+                            stats.responses += 1;
+                            with_echo(resp, echo)
+                        }
+                        Err(e) => {
+                            stats.errors += 1;
+                            error_json(&format!("{e}"), echo)
+                        }
+                    },
+                };
+                writeln!(out, "{}", ser::to_string_compact(&line))?;
+            }
+        }
+        Err(e) => {
+            // The whole union failed (ids were pre-validated, so this is a
+            // model/bundle-level fault): every queued line gets the error.
+            let msg = format!("{e}");
+            for item in items {
+                stats.errors += 1;
+                let echo = match item {
+                    Pending::Req { echo, .. } | Pending::Fail { echo, .. } => echo,
+                };
+                writeln!(out, "{}", ser::to_string_compact(&error_json(&msg, echo)))?;
+            }
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn stats_response(backend: &dyn Serving, stats: &LoopStats, batch: BatchStats) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("stats")),
+        ("requests", Json::num(stats.requests as f64)),
+        ("responses", Json::num(stats.responses as f64)),
+        ("errors", Json::num(stats.errors as f64)),
+        ("flushes", Json::num(batch.flushes as f64)),
+        ("fill_flushes", Json::num(batch.fill_flushes as f64)),
+        ("budget_expiries", Json::num(batch.budget_expiries as f64)),
+        ("drain_flushes", Json::num(batch.drain_flushes as f64)),
+        ("coalesced_nodes", Json::num(batch.coalesced_nodes as f64)),
+        ("unique_nodes", Json::num(batch.unique_nodes as f64)),
+        ("cache", backend.stats_json()),
+    ])
+}
+
+/// Lines the reader thread may buffer ahead of the serve loop. Bounded
+/// so a client that floods requests (or never drains responses, wedging
+/// the loop on socket backpressure) blocks its own reader instead of
+/// growing server memory without limit.
+const READER_BACKLOG: usize = 1024;
+
+/// Spawn a detached thread reading raw lines into a bounded channel —
+/// the select-able form of a blocking reader the budget wait needs. The
+/// channel closes at EOF or on the first read error.
+pub fn spawn_line_reader<R: BufRead + Send + 'static>(
+    mut r: R,
+) -> Receiver<std::io::Result<String>> {
+    let (tx, rx) = sync_channel(READER_BACKLOG);
+    std::thread::spawn(move || loop {
+        let mut line = String::new();
+        match r.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if tx.send(Ok(line)).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                break;
+            }
+        }
+    });
+    rx
+}
+
+/// Drive one NDJSON session to completion (EOF or `shutdown`); the core
+/// the stdin, TCP and test front-ends share.
+pub fn run_loop(
+    backend: &mut dyn Serving,
+    cfg: &ServerCfg,
+    rx: &Receiver<std::io::Result<String>>,
+    out: &mut dyn Write,
+) -> Result<LoopStats> {
+    let mut batcher: CrossBatcher<Pending> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
+    let mut stats = LoopStats::default();
+    loop {
+        let msg = if batcher.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => None, // channel closed: EOF
+            }
+        } else {
+            let deadline = batcher.deadline().expect("non-empty queue has a deadline");
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(wait) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    flush(backend, &mut batcher, FlushTrigger::Budget, out, &mut stats)?;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => None,
+            }
+        };
+        let line = match msg {
+            None => {
+                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                break;
+            }
+            Some(Err(e)) => {
+                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                return Err(e.into());
+            }
+            Some(Ok(line)) => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        match parse_line(line, backend.n_nodes()) {
+            Line::Item(item) => {
+                let ids = match &item {
+                    Pending::Req { req, .. } => req.node_ids(),
+                    Pending::Fail { .. } => Vec::new(),
+                };
+                let full = batcher.push(item, &ids, Instant::now());
+                if full {
+                    flush(backend, &mut batcher, FlushTrigger::Fill, out, &mut stats)?;
+                } else if batcher.should_flush(Instant::now()) {
+                    // Continuous traffic must still honor the budget even
+                    // though recv_timeout never got to expire.
+                    flush(backend, &mut batcher, FlushTrigger::Budget, out, &mut stats)?;
+                }
+            }
+            Line::Stats(echo) => {
+                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                stats.responses += 1;
+                let resp =
+                    with_echo(stats_response(backend, &stats, batcher.stats()), echo);
+                writeln!(out, "{}", ser::to_string_compact(&resp))?;
+                out.flush()?;
+            }
+            Line::Shutdown(echo) => {
+                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                stats.responses += 1;
+                let resp = with_echo(
+                    Json::obj(vec![("op", Json::str("shutdown")), ("ok", Json::Bool(true))]),
+                    echo,
+                );
+                writeln!(out, "{}", ser::to_string_compact(&resp))?;
+                out.flush()?;
+                break;
+            }
+        }
+    }
+    stats.batch = batcher.stats();
+    Ok(stats)
+}
+
+/// Run one NDJSON session over an arbitrary reader/writer pair (the
+/// piped-session entry point the e2e tests drive).
+pub fn run_ndjson<R: BufRead + Send + 'static>(
+    backend: &mut dyn Serving,
+    cfg: &ServerCfg,
+    input: R,
+    out: &mut dyn Write,
+) -> Result<LoopStats> {
+    let rx = spawn_line_reader(input);
+    run_loop(backend, cfg, &rx, out)
+}
+
+/// `hashgnn serve --stdin`: one NDJSON session over stdin/stdout.
+pub fn serve_stdin(backend: &mut dyn Serving, cfg: &ServerCfg) -> Result<LoopStats> {
+    let rx = spawn_line_reader(std::io::BufReader::new(std::io::stdin()));
+    let mut out = std::io::BufWriter::new(std::io::stdout());
+    run_loop(backend, cfg, &rx, &mut out)
+}
+
+/// `hashgnn serve --listen`: accept NDJSON sessions sequentially over a
+/// bound listener, sharing one backend (and so one warm cache) across
+/// connections. `max_conns = 0` accepts forever; a positive bound makes
+/// the call return aggregate stats after that many connections (the CI
+/// smoke and tests use 1).
+pub fn serve_listener(
+    listener: std::net::TcpListener,
+    backend: &mut dyn Serving,
+    cfg: &ServerCfg,
+    max_conns: usize,
+) -> Result<LoopStats> {
+    let mut total = LoopStats::default();
+    let mut served = 0usize;
+    while max_conns == 0 || served < max_conns {
+        let (stream, peer) = listener.accept()?;
+        eprintln!("[serve] connection from {peer}");
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let closer = stream.try_clone()?;
+        let rx = spawn_line_reader(reader);
+        let mut out = std::io::BufWriter::new(stream);
+        match run_loop(backend, cfg, &rx, &mut out) {
+            Ok(s) => {
+                eprintln!("[serve] connection closed: {}", s.summary());
+                total.absorb(&s);
+            }
+            Err(e) => eprintln!("[serve] connection error: {e}"),
+        }
+        // The reader thread still holds a clone of the socket blocked in
+        // read_line; shut the connection down so the client sees EOF and
+        // the thread unblocks instead of leaking per connection.
+        let _ = closer.shutdown(std::net::Shutdown::Both);
+        served += 1;
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_classifies_requests_controls_and_errors() {
+        match parse_line(r#"{"op": "embed", "nodes": [1, 2], "id": 7}"#, 10) {
+            Line::Item(Pending::Req { req, echo }) => {
+                assert_eq!(req, Request::Embed(vec![1, 2]));
+                assert_eq!(echo, Some(Json::num(7.0)));
+            }
+            _ => panic!("expected a request"),
+        }
+        assert!(matches!(parse_line(r#"{"op": "stats"}"#, 10), Line::Stats(None)));
+        assert!(matches!(parse_line(r#"{"op": "shutdown"}"#, 10), Line::Shutdown(None)));
+        // Out-of-range id fails its own line at parse time.
+        match parse_line(r#"{"op": "embed", "nodes": [99]}"#, 10) {
+            Line::Item(Pending::Fail { msg, .. }) => assert!(msg.contains("out of range")),
+            _ => panic!("expected a deferred failure"),
+        }
+        // Malformed JSON and unknown ops likewise.
+        assert!(matches!(
+            parse_line("not json", 10),
+            Line::Item(Pending::Fail { .. })
+        ));
+        assert!(matches!(
+            parse_line(r#"{"op": "train"}"#, 10),
+            Line::Item(Pending::Fail { .. })
+        ));
+    }
+
+    #[test]
+    fn echo_attaches_to_objects_only() {
+        let v = with_echo(Json::obj(vec![("a", Json::num(1.0))]), Some(Json::str("x")));
+        assert_eq!(v.get("id").unwrap(), &Json::str("x"));
+        let e = error_json("boom", None);
+        assert!(e.get("error").is_ok() && e.opt("id").is_none());
+    }
+}

@@ -143,6 +143,39 @@ pub fn export_bundle_to(
     Ok(bundle)
 }
 
+/// Shard file naming: `bundle.bin` + (0, 2) → `bundle.bin.shard-0-of-2`.
+/// Every consumer (CLI, docs, CI) derives names through here so a shard
+/// set is always discoverable from its base path.
+pub fn shard_path(base: &Path, index: usize, count: usize) -> std::path::PathBuf {
+    let mut name = base.as_os_str().to_os_string();
+    name.push(format!(".shard-{index}-of-{count}"));
+    std::path::PathBuf::from(name)
+}
+
+/// `hashgnn export --shards K`: assemble the full bundle, split it into
+/// K contiguous node-range shards
+/// ([`ServingBundle::split_shards`]), and write one checksummed
+/// `HGNS0001` file per shard next to `out_base`. Returns the written
+/// paths with their bundles for reporting.
+pub fn export_sharded_to(
+    manifest: &Manifest,
+    store: &ParamStore,
+    opts: &ExportOpts,
+    shards: usize,
+    out_base: &Path,
+) -> Result<Vec<(std::path::PathBuf, ServingBundle)>> {
+    let bundle = export_bundle(manifest, store, opts)?;
+    let split = bundle.split_shards(shards)?;
+    let mut out = Vec::with_capacity(split.len());
+    for shard in split {
+        let info = shard.shard.as_ref().expect("split_shards tags every shard");
+        let path = shard_path(out_base, info.index, info.count);
+        shard.save(&path)?;
+        out.push((path, shard));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
