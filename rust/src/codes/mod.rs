@@ -187,12 +187,7 @@ impl BitMatrix {
         for w in &self.words {
             payload.extend_from_slice(&w.to_le_bytes());
         }
-        let mut buf = Vec::with_capacity(24 + payload.len());
-        buf.extend_from_slice(b"HGNC0002");
-        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        buf.extend_from_slice(&crate::ser::fnv1a64(&payload).to_le_bytes());
-        buf.extend_from_slice(&payload);
-        std::fs::write(path, buf)?;
+        std::fs::write(path, crate::ser::write_envelope(b"HGNC0002", &payload))?;
         Ok(())
     }
 
@@ -205,27 +200,12 @@ impl BitMatrix {
                 path.display()
             )));
         }
-        if buf.len() < 24 || &buf[..8] != b"HGNC0002" {
+        let (_, payload) = crate::ser::read_envelope(&buf, &[b"HGNC0002"], "code file", path)?;
+        if payload.len() < 16 {
             return Err(Error::Config(format!(
-                "{}: not a code file (bad magic or shorter than the header)",
-                path.display()
-            )));
-        }
-        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
-        let payload = &buf[24..];
-        if payload.len() != expect_len || payload.len() < 16 {
-            return Err(Error::Config(format!(
-                "{}: truncated code file ({} payload bytes, header says {expect_len})",
+                "{}: truncated code file ({} payload bytes, header needs 16)",
                 path.display(),
                 payload.len()
-            )));
-        }
-        let got = crate::ser::fnv1a64(payload);
-        if got != expect_sum {
-            return Err(Error::Config(format!(
-                "{}: code-file checksum mismatch ({got:#018x} != {expect_sum:#018x}) — corrupt",
-                path.display()
             )));
         }
         let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;

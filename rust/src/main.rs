@@ -39,8 +39,8 @@ use hashgnn::params::ParamStore;
 use hashgnn::report::{self, Table};
 use hashgnn::runtime::Engine;
 use hashgnn::serve::{
-    handle_all_on, load_backend, parse_requests, predict_classes_on, score_edges_on, server,
-    ServeOpts, ServerCfg,
+    handle_all_on, load_backend, load_worker_backend, parse_requests, predict_classes_on,
+    score_edges_on, server, FaultPlan, RemoteCfg, RemoteRouter, ServeOpts, ServerCfg, Serving,
 };
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
 use hashgnn::tasks::serve as serve_task;
@@ -89,8 +89,9 @@ fn print_help() {
          \x20             (--shards K writes K node-range shard files)\n\
          \x20 infer       embed/score/classify from a bundle or shard set\n\
          \x20 serve       --oneshot request file | --stdin persistent NDJSON |\n\
-         \x20             --listen <addr> TCP; batches across requests under\n\
-         \x20             --max-batch / --max-delay-ms\n\
+         \x20             --listen <addr> concurrent TCP; batches across requests\n\
+         \x20             (and connections) under --max-batch / --max-delay-ms;\n\
+         \x20             --shard-worker + --remote run shards as processes\n\
          \x20 merchant    merchant-category identification pipeline (§5.3)\n\
          \x20 collisions  median-vs-zero collision experiment (Fig. 3/6)\n\
          \x20 memory      memory accounting tables (Tables 2/4/6)\n\
@@ -511,19 +512,32 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::new(
         "hashgnn serve",
-        "serve a bundle or shard set: one-shot request file, persistent NDJSON, or TCP",
+        "serve a bundle, shard set, or remote worker fleet: one-shot request file, \
+         persistent NDJSON, or concurrent TCP",
     )
-    .req(
+    .opt(
         "bundle",
+        "",
         "serving bundle, or comma-separated shard set (`hashgnn export [--shards K]`)",
+    )
+    .opt(
+        "remote",
+        "",
+        "comma-separated shard-worker addresses to route to instead of --bundle \
+         (each runs `serve --shard-worker --listen <addr>`)",
     )
     .flag("oneshot", "process one --requests file and exit")
     .flag("stdin", "persistent NDJSON session: one request per stdin line, one response per stdout line")
     .opt(
         "listen",
         "",
-        "persistent NDJSON server on this TCP address (e.g. 127.0.0.1:7433); connections \
-         are served sequentially over one warm backend",
+        "concurrent NDJSON server on this TCP address (e.g. 127.0.0.1:7433, or :0 with \
+         --port-file); all connections share one batcher and one warm backend",
+    )
+    .flag(
+        "shard-worker",
+        "with --listen: serve ONE shard file as a worker process — ids outside the \
+         owned range are rejected per line; `stats` advertises the range",
     )
     .opt(
         "requests",
@@ -541,7 +555,53 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "5",
         "persistent modes: flush once the oldest pending request has waited this long",
     )
-    .opt("max-conns", "0", "TCP mode: exit after this many connections (0 = serve forever)")
+    .opt(
+        "deadline-ms",
+        "none",
+        "persistent modes: shed requests that waited longer than this with \
+         {\"error\": \"deadline\"} in position (none/0 = no deadline)",
+    )
+    .opt(
+        "queue-cap",
+        "1024",
+        "persistent modes: pending-request bound; overflow sheds {\"error\": \"overloaded\"} \
+         in position",
+    )
+    .opt(
+        "max-line-bytes",
+        "1048576",
+        "longest accepted input line; longer lines answer {\"error\": \"line_too_long\"} \
+         in position without being buffered",
+    )
+    .opt(
+        "max-conns",
+        "0",
+        "TCP mode: concurrent-connection cap (0 = unlimited); excess connections get one \
+         {\"error\": \"overloaded\"} line and are closed",
+    )
+    .opt(
+        "port-file",
+        "",
+        "TCP mode: write the bound address to this file after bind (use with --listen \
+         127.0.0.1:0 so tests/scripts learn the kernel-assigned port)",
+    )
+    .opt(
+        "fault",
+        "",
+        "deterministic fault injection for degradation tests: comma-separated \
+         drop:N | delay:N:MS | truncate:N | corrupt:N | kill:K (1-based response \
+         ordinals; overrides HASHGNN_FAULT; TCP mode only)",
+    )
+    .opt("connect-timeout-ms", "1000", "--remote: TCP dial timeout per worker")
+    .opt("request-timeout-ms", "5000", "--remote: per-request read/write timeout")
+    .opt("retries", "2", "--remote: retry budget per request (attempts = retries + 1)")
+    .opt("backoff-ms", "50", "--remote: first retry sleep, doubling per attempt")
+    .opt(
+        "health-every-ms",
+        "1000",
+        "--remote: minimum interval between health probes of a down worker (0 = probe \
+         on every routing decision)",
+    )
     .opt("threads", "0", "compute threads (0 = all cores)")
     .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
     .opt("seed", "7", "fan-out sampling seed (minibatch models)")
@@ -554,20 +614,61 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     if n_modes != 1 {
         return Err(Error::Config(
             "pick exactly one serving mode: --oneshot (one request file), --stdin \
-             (persistent NDJSON session on stdio), or --listen <addr> (persistent NDJSON \
+             (persistent NDJSON session on stdio), or --listen <addr> (concurrent NDJSON \
              over TCP) — see docs/SERVING.md for the protocol"
                 .into(),
         ));
     }
-    let paths = bundle_paths(&a.get("bundle"));
-    let mut backend = load_backend(
-        &paths,
-        ServeOpts {
+    let bundle = a.get("bundle");
+    let remote = a.get("remote");
+    if bundle.is_empty() == remote.is_empty() {
+        return Err(Error::Config(
+            "pass exactly one of --bundle <files> (serve locally) or --remote <addrs> \
+             (route to shard workers)"
+                .into(),
+        ));
+    }
+    if a.get_bool("shard-worker") && (listen.is_empty() || bundle.is_empty()) {
+        return Err(Error::Config(
+            "--shard-worker needs --listen <addr> and --bundle <shard file>: a worker is \
+             one shard process behind a socket"
+                .into(),
+        ));
+    }
+    let mut backend: Box<dyn Serving> = if !remote.is_empty() {
+        let addrs: Vec<String> = remote
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let rcfg = RemoteCfg {
+            connect_timeout: Duration::from_millis(a.get_u64("connect-timeout-ms")?),
+            request_timeout: Duration::from_millis(a.get_u64("request-timeout-ms")?),
+            retries: a.get_u64("retries")? as u32,
+            backoff: Duration::from_millis(a.get_u64("backoff-ms")?),
+            health_every: Duration::from_millis(a.get_u64("health-every-ms")?),
+            max_line_bytes: a.get_usize("max-line-bytes")?,
+        };
+        let router = RemoteRouter::connect(&addrs, rcfg)?;
+        eprintln!(
+            "[serve] routing {} nodes across {} worker(s)",
+            router.n_nodes(),
+            addrs.len()
+        );
+        Box::new(router)
+    } else {
+        let paths = bundle_paths(&bundle);
+        let opts = ServeOpts {
             threads: a.get_usize_auto("threads")?,
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
-        },
-    )?;
+        };
+        if a.get_bool("shard-worker") {
+            load_worker_backend(&paths, opts)?
+        } else {
+            load_backend(&paths, opts)?
+        }
+    };
     if a.get_bool("oneshot") {
         let req_path = a.get("requests");
         if req_path.is_empty() {
@@ -581,9 +682,20 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         println!("{}", ser::to_string_pretty(&out));
         return Ok(());
     }
+    let deadline = match a.get("deadline-ms").as_str() {
+        "" | "none" | "0" => None,
+        s => Some(Duration::from_millis(s.parse::<u64>().map_err(|_| {
+            Error::Config(format!(
+                "--deadline-ms: '{s}' is not a millisecond count (or 'none')"
+            ))
+        })?)),
+    };
     let cfg = ServerCfg {
         max_batch: a.get_usize("max-batch")?,
         max_delay: Duration::from_millis(a.get_u64("max-delay-ms")?),
+        deadline,
+        queue_cap: a.get_usize("queue-cap")?,
+        max_line_bytes: a.get_usize("max-line-bytes")?,
     };
     if a.get_bool("stdin") {
         eprintln!(
@@ -593,19 +705,31 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         let stats = server::serve_stdin(backend.as_mut(), &cfg)?;
         eprintln!("[serve] session ended: {}", stats.summary());
     } else {
+        let fault_spec = a.get("fault");
+        let fault = if fault_spec.is_empty() {
+            FaultPlan::from_env()?
+        } else {
+            Some(FaultPlan::parse(&fault_spec)?)
+        };
+        let max_conns = a.get_usize("max-conns")?;
         let listener = std::net::TcpListener::bind(&listen)?;
+        let local = listener.local_addr()?;
+        let port_file = a.get("port-file");
+        if !port_file.is_empty() {
+            std::fs::write(&port_file, local.to_string())?;
+        }
         eprintln!(
-            "[serve] listening on {} (max-batch {}, max-delay {:?})",
-            listener.local_addr()?,
+            "[serve] listening on {local} ({}max-batch {}, max-delay {:?}, queue-cap {}, \
+             max-conns {}{})",
+            if a.get_bool("shard-worker") { "shard worker, " } else { "" },
             cfg.max_batch,
-            cfg.max_delay
+            cfg.max_delay,
+            cfg.queue_cap,
+            max_conns,
+            if fault.is_some() { ", FAULT INJECTION ACTIVE" } else { "" },
         );
-        let stats = server::serve_listener(
-            listener,
-            backend.as_mut(),
-            &cfg,
-            a.get_usize("max-conns")?,
-        )?;
+        let stats =
+            server::serve_concurrent(listener, backend.as_mut(), &cfg, max_conns, fault)?;
         eprintln!("[serve] done: {}", stats.summary());
     }
     eprintln!("[serve] cache: {}", ser::to_string_compact(&backend.stats_json()));

@@ -119,12 +119,7 @@ impl ParamStore {
                 }
             }
         }
-        let mut buf: Vec<u8> = Vec::with_capacity(24 + payload.len());
-        buf.extend_from_slice(b"HGNP0002");
-        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        buf.extend_from_slice(&crate::ser::fnv1a64(&payload).to_le_bytes());
-        buf.extend_from_slice(&payload);
-        std::fs::write(path, buf)?;
+        std::fs::write(path, crate::ser::write_envelope(b"HGNP0002", &payload))?;
         Ok(())
     }
 
@@ -139,29 +134,7 @@ impl ParamStore {
                 path.display()
             )));
         }
-        if buf.len() < 24 || &buf[..8] != b"HGNP0002" {
-            return Err(Error::Config(format!(
-                "{}: not a checkpoint (bad magic or shorter than the header)",
-                path.display()
-            )));
-        }
-        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
-        let payload = &buf[24..];
-        if payload.len() != expect_len {
-            return Err(Error::Config(format!(
-                "{}: checkpoint payload is {} bytes, header says {expect_len} (truncated?)",
-                path.display(),
-                payload.len()
-            )));
-        }
-        let got = crate::ser::fnv1a64(payload);
-        if got != expect_sum {
-            return Err(Error::Config(format!(
-                "{}: checkpoint checksum mismatch ({got:#018x} != {expect_sum:#018x}) — file is corrupt",
-                path.display()
-            )));
-        }
+        let (_, payload) = crate::ser::read_envelope(&buf, &[b"HGNP0002"], "checkpoint", path)?;
         let mut pos = 0usize;
         let read_u64 = |buf: &[u8], pos: &mut usize| -> Result<u64> {
             if *pos + 8 > buf.len() {

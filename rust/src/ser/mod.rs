@@ -133,6 +133,67 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Frame a binary artifact payload with the shared 24-byte envelope:
+/// 8-byte ASCII magic, payload byte count (u64 LE), FNV-1a checksum of
+/// the payload (u64 LE), then the payload. Checkpoints (`HGNP0002`),
+/// code files (`HGNC0002`), serving bundles (`HGNB0001`) and shard
+/// files (`HGNS0001`) all use this one framing, so truncation and bit
+/// rot are caught the same way everywhere.
+pub fn write_envelope(magic: &[u8; 8], payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24 + payload.len());
+    buf.extend_from_slice(magic);
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Validate a [`write_envelope`] frame and return `(matched magic index,
+/// payload)`. `magics` lists every acceptable magic (bundle loading
+/// accepts both the whole-bundle and the shard magic); `kind` names the
+/// artifact in error messages ("checkpoint", "code file", ...). The
+/// payload is checked against the header's byte count and checksum
+/// before the caller decodes a single field.
+pub fn read_envelope<'a>(
+    buf: &'a [u8],
+    magics: &[&[u8; 8]],
+    kind: &str,
+    path: &std::path::Path,
+) -> Result<(usize, &'a [u8])> {
+    let which = if buf.len() >= 24 {
+        magics.iter().position(|m| buf[..8] == m[..])
+    } else {
+        None
+    };
+    let which = match which {
+        Some(w) => w,
+        None => {
+            return Err(Error::Config(format!(
+                "{}: not a {kind} (bad magic or shorter than the header)",
+                path.display()
+            )))
+        }
+    };
+    let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    let payload = &buf[24..];
+    if payload.len() != expect_len {
+        return Err(Error::Config(format!(
+            "{}: {kind} payload is {} bytes, header says {expect_len} (truncated?)",
+            path.display(),
+            payload.len()
+        )));
+    }
+    let got = fnv1a64(payload);
+    if got != expect_sum {
+        return Err(Error::Config(format!(
+            "{}: {kind} checksum mismatch ({got:#018x} != {expect_sum:#018x}) — file is corrupt",
+            path.display()
+        )));
+    }
+    Ok((which, payload))
+}
+
 /// Read and parse a JSON file.
 pub fn from_file(path: &std::path::Path) -> Result<Json> {
     let text = std::fs::read_to_string(path)?;
@@ -182,6 +243,33 @@ mod tests {
         assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
         // Single-bit flips change the hash.
         assert_ne!(fnv1a64(b"hashgnn"), fnv1a64(b"iashgnn"));
+    }
+
+    #[test]
+    fn envelope_roundtrips_and_rejects_damage() {
+        let path = std::path::Path::new("mem.bin");
+        let framed = write_envelope(b"HGNT0001", b"hello payload");
+        assert_eq!(framed.len(), 24 + 13);
+        let (which, payload) =
+            read_envelope(&framed, &[b"HGNX0001", b"HGNT0001"], "test artifact", path).unwrap();
+        assert_eq!(which, 1);
+        assert_eq!(payload, b"hello payload");
+
+        // Wrong magic / short buffer.
+        let err = read_envelope(&framed, &[b"HGNX0001"], "test artifact", path).unwrap_err();
+        assert!(format!("{err}").contains("not a test artifact"), "{err}");
+        assert!(read_envelope(b"short", &[b"HGNT0001"], "t", path).is_err());
+
+        // Truncated payload fails the byte count.
+        let err = read_envelope(&framed[..framed.len() - 1], &[b"HGNT0001"], "t", path)
+            .unwrap_err();
+        assert!(format!("{err}").contains("header says"), "{err}");
+
+        // Flipped payload byte fails the checksum.
+        let mut bad = framed.clone();
+        bad[30] ^= 0x40;
+        let err = read_envelope(&bad, &[b"HGNT0001"], "t", path).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
     }
 
     #[test]

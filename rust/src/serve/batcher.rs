@@ -277,6 +277,66 @@ impl<T> CrossBatcher<T> {
     }
 }
 
+/// Sliding window of the last `cap` flush latencies (microseconds) with
+/// exact rank-based percentiles — the `flush_p50_us` / `flush_p99_us`
+/// fields of the `stats` control response. A ring buffer, so a
+/// long-lived server reports recent behavior, not its lifetime average;
+/// exact (sort the window, index by rank), so tests can assert the
+/// numbers instead of trusting an approximation.
+#[derive(Clone, Debug)]
+pub struct LatencyWindow {
+    cap: usize,
+    buf: Vec<u64>,
+    /// Next overwrite position once the buffer is full.
+    next: usize,
+    /// Total samples ever recorded (≥ `buf.len()`).
+    total: u64,
+}
+
+impl LatencyWindow {
+    /// `cap` = window size in samples (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    pub fn record(&mut self, micros: u64) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(micros);
+        } else {
+            self.buf[self.next] = micros;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Samples currently in the window.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Samples ever recorded (the window forgets, this counter doesn't).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact p-th percentile of the window by nearest-rank on the sorted
+    /// samples (`index = (len - 1) · p / 100`, integer floor). Returns 0
+    /// for an empty window. `p` is clamped to 100.
+    pub fn percentile(&self, p: usize) -> u64 {
+        if self.buf.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        let idx = (sorted.len() - 1) * p.min(100) / 100;
+        sorted[idx]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +426,32 @@ mod tests {
         assert_eq!((items.len(), unique.len()), (1, 0), "id-free items still flush");
         let s = cb.stats();
         assert_eq!((s.flushes, s.drain_flushes, s.unique_nodes), (1, 1, 0));
+    }
+
+    #[test]
+    fn latency_window_exact_percentiles_and_wraparound() {
+        let mut w = LatencyWindow::new(4);
+        assert_eq!(w.percentile(99), 0, "empty window reports 0");
+        for us in [10, 20, 30, 40] {
+            w.record(us);
+        }
+        assert_eq!(w.len(), 4);
+        // Sorted [10,20,30,40]: p0 → idx 0, p50 → idx 1, p99 → idx 2, p100 → idx 3.
+        assert_eq!(w.percentile(0), 10);
+        assert_eq!(w.percentile(50), 20);
+        assert_eq!(w.percentile(99), 30);
+        assert_eq!(w.percentile(100), 40);
+        // Overflow evicts the oldest sample: window becomes [50,20,30,40].
+        w.record(50);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.total(), 5);
+        assert_eq!(w.percentile(100), 50);
+        assert_eq!(w.percentile(0), 20, "the 10µs sample was evicted");
+        // cap 0 clamps to 1 (a degenerate but valid window).
+        let mut one = LatencyWindow::new(0);
+        one.record(7);
+        one.record(9);
+        assert_eq!((one.len(), one.percentile(50)), (1, 9));
     }
 
     #[test]

@@ -260,13 +260,7 @@ impl ServingBundle {
             None => MAGIC,
         };
         self.encode_core(&mut p)?;
-
-        let mut buf = Vec::with_capacity(24 + p.len());
-        buf.extend_from_slice(magic);
-        buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
-        buf.extend_from_slice(&ser::fnv1a64(&p).to_le_bytes());
-        buf.extend_from_slice(&p);
-        std::fs::write(path, buf)?;
+        std::fs::write(path, ser::write_envelope(magic, &p))?;
         Ok(())
     }
 
@@ -314,29 +308,9 @@ impl ServingBundle {
     /// [`ServingBundle::shard`] distinguishes them after the fact.
     pub fn load(path: &Path) -> Result<Self> {
         let buf = std::fs::read(path)?;
-        if buf.len() < 24 || (&buf[..8] != MAGIC && &buf[..8] != SHARD_MAGIC) {
-            return Err(Error::Config(format!(
-                "{}: not a serving bundle or shard (bad magic or shorter than the header)",
-                path.display()
-            )));
-        }
-        let sharded = &buf[..8] == SHARD_MAGIC;
-        let expect_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-        let expect_sum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
-        let p = &buf[24..];
-        if p.len() != expect_len {
-            return Err(Error::Config(format!(
-                "{}: bundle payload is {} bytes, header says {expect_len} (truncated?)",
-                path.display(),
-                p.len()
-            )));
-        }
-        if ser::fnv1a64(p) != expect_sum {
-            return Err(Error::Config(format!(
-                "{}: bundle checksum mismatch — file is corrupt",
-                path.display()
-            )));
-        }
+        let (which, p) =
+            ser::read_envelope(&buf, &[MAGIC, SHARD_MAGIC], "serving bundle or shard", path)?;
+        let sharded = which == 1;
 
         let mut pos = 0usize;
         let take = |p: &[u8], pos: &mut usize, n: usize| -> Result<()> {

@@ -1,0 +1,243 @@
+//! Deterministic fault injection for the serving loop.
+//!
+//! A [`FaultPlan`] describes response-stream damage in terms of *ordinal
+//! positions* — "drop the 3rd response", "kill the process after 5" — so
+//! degradation tests are exactly reproducible: no randomness, no timing
+//! races, the Nth response always breaks the same way. The plan is
+//! gated: it only activates when the operator passes `serve --fault
+//! <spec>` or sets `HASHGNN_FAULT=<spec>`; production servers with
+//! neither run the untouched write path.
+//!
+//! # Spec grammar
+//!
+//! A comma-separated list of actions (1-based response counting):
+//!
+//! | token          | effect on the Nth response line                     |
+//! |----------------|-----------------------------------------------------|
+//! | `drop:N`       | never written (client sees a missing/late response) |
+//! | `delay:N:MS`   | written after an extra `MS` milliseconds            |
+//! | `truncate:N`   | first half of the line, **no newline** (torn write) |
+//! | `corrupt:N`    | first byte replaced with `#` (unparseable JSON)     |
+//! | `kill:K`       | process exits(9) right after the Kth response       |
+//!
+//! e.g. `HASHGNN_FAULT=corrupt:2,kill:5`. The [`RemoteShard`] client
+//! (see [`super::remote`]) must survive every one of these: drops and
+//! delays hit its request timeout, truncation and corruption fail the
+//! response parse — all of which tear down the pooled connection,
+//! retry with backoff, and eventually mark the worker down rather than
+//! serving damaged bytes. `tests/serve_fault.rs` drives each row.
+
+use crate::{Error, Result};
+
+/// One scripted fault, positioned by 1-based response ordinal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Swallow the Nth response entirely.
+    Drop { nth: u64 },
+    /// Sleep `ms` milliseconds before writing the Nth response.
+    Delay { nth: u64, ms: u64 },
+    /// Write only the first half of the Nth response, without its
+    /// trailing newline — a torn write mid-line.
+    Truncate { nth: u64 },
+    /// Replace the Nth response's first byte with `#` so it cannot parse
+    /// as JSON (framing survives, content doesn't).
+    Corrupt { nth: u64 },
+    /// `exit(9)` immediately after writing the Nth response — the
+    /// crashed-worker scenario (`kill -9` without the signal).
+    KillAfter { n: u64 },
+}
+
+/// A parsed, ordered fault script. Empty plans are inert.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Parse the spec grammar above; loud errors for anything else.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let bad = |tok: &str, why: &str| {
+            Error::Config(format!("fault spec token '{tok}': {why}"))
+        };
+        let num = |tok: &str, field: &str| -> Result<u64> {
+            let n: u64 = field
+                .parse()
+                .map_err(|_| bad(tok, &format!("'{field}' is not a non-negative integer")))?;
+            if n == 0 {
+                return Err(bad(tok, "response ordinals are 1-based (got 0)"));
+            }
+            Ok(n)
+        };
+        let mut actions = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let mut parts = tok.split(':');
+            let kind = parts.next().unwrap_or("");
+            let rest: Vec<&str> = parts.collect();
+            let action = match (kind, rest.as_slice()) {
+                ("drop", [n]) => FaultAction::Drop { nth: num(tok, n)? },
+                ("delay", [n, ms]) => FaultAction::Delay {
+                    nth: num(tok, n)?,
+                    ms: ms.parse().map_err(|_| {
+                        bad(tok, &format!("'{ms}' is not a millisecond count"))
+                    })?,
+                },
+                ("truncate", [n]) => FaultAction::Truncate { nth: num(tok, n)? },
+                ("corrupt", [n]) => FaultAction::Corrupt { nth: num(tok, n)? },
+                ("kill", [k]) => FaultAction::KillAfter { n: num(tok, k)? },
+                _ => {
+                    return Err(bad(
+                        tok,
+                        "expected drop:N | delay:N:MS | truncate:N | corrupt:N | kill:K",
+                    ))
+                }
+            };
+            actions.push(action);
+        }
+        Ok(Self { actions })
+    }
+
+    /// The env-gated plan: `HASHGNN_FAULT=<spec>` (`None` when unset or
+    /// empty — the common case costs one getenv).
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var("HASHGNN_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(Self::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// What the writer should do with one response line.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultDecision {
+    /// Extra sleep before writing, in milliseconds.
+    pub delay_ms: u64,
+    /// Bytes to put on the wire (`None` = drop the response). The
+    /// healthy path is the line plus `\n`.
+    pub bytes: Option<Vec<u8>>,
+    /// `exit(9)` after the write.
+    pub kill: bool,
+}
+
+/// Plan + response counter: one per serving process, shared by every
+/// connection writer (the ordinal counts *process-wide* responses, which
+/// is what "kill the worker after K requests" means).
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    sent: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, sent: 0 }
+    }
+
+    /// Responses counted so far (1-based after the first `decide`).
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Count this response and apply every action scripted for its
+    /// ordinal. Later tokens win where they overlap (e.g. `drop:1` after
+    /// `corrupt:1` drops).
+    pub fn decide(&mut self, line: &str) -> FaultDecision {
+        self.sent += 1;
+        let n = self.sent;
+        let mut d = FaultDecision {
+            delay_ms: 0,
+            bytes: Some(format!("{line}\n").into_bytes()),
+            kill: false,
+        };
+        for a in &self.plan.actions {
+            match *a {
+                FaultAction::Drop { nth } if nth == n => d.bytes = None,
+                FaultAction::Delay { nth, ms } if nth == n => d.delay_ms = ms,
+                FaultAction::Truncate { nth } if nth == n => {
+                    d.bytes = Some(line.as_bytes()[..line.len() / 2].to_vec());
+                }
+                FaultAction::Corrupt { nth } if nth == n => {
+                    let mut b = line.as_bytes().to_vec();
+                    if !b.is_empty() {
+                        b[0] = b'#';
+                    }
+                    b.push(b'\n');
+                    d.bytes = Some(b);
+                }
+                FaultAction::KillAfter { n: k } if n >= k => d.kill = true,
+                _ => {}
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_token_kind_and_rejects_garbage() {
+        let p = FaultPlan::parse("drop:1, delay:2:250,truncate:3,corrupt:4,kill:5").unwrap();
+        assert_eq!(
+            p.actions,
+            vec![
+                FaultAction::Drop { nth: 1 },
+                FaultAction::Delay { nth: 2, ms: 250 },
+                FaultAction::Truncate { nth: 3 },
+                FaultAction::Corrupt { nth: 4 },
+                FaultAction::KillAfter { n: 5 },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("explode:1").is_err());
+        assert!(FaultPlan::parse("drop:0").is_err(), "ordinals are 1-based");
+        assert!(FaultPlan::parse("delay:1").is_err(), "delay needs a millisecond field");
+        assert!(FaultPlan::parse("drop:x").is_err());
+    }
+
+    #[test]
+    fn decide_applies_faults_at_exact_ordinals() {
+        let plan = FaultPlan::parse("drop:2,corrupt:3,truncate:4,kill:5").unwrap();
+        let mut st = FaultState::new(plan);
+        let line = r#"{"embeddings": [[1, 2]]}"#;
+
+        // #1: untouched — line plus newline, no kill.
+        let d = st.decide(line);
+        assert_eq!(d.bytes.as_deref(), Some(format!("{line}\n").as_bytes()));
+        assert!(!d.kill && d.delay_ms == 0);
+
+        // #2: dropped.
+        assert_eq!(st.decide(line).bytes, None);
+
+        // #3: corrupted — same length + newline, starts with '#', unparseable.
+        let d = st.decide(line);
+        let b = d.bytes.unwrap();
+        assert_eq!(b.len(), line.len() + 1);
+        assert_eq!(b[0], b'#');
+        assert!(crate::ser::parse(std::str::from_utf8(&b).unwrap().trim()).is_err());
+
+        // #4: truncated — half the line, and crucially NO newline.
+        let d = st.decide(line);
+        let b = d.bytes.unwrap();
+        assert_eq!(b, &line.as_bytes()[..line.len() / 2]);
+        assert!(!b.ends_with(b"\n"));
+
+        // #5: written intact, then kill.
+        let d = st.decide(line);
+        assert_eq!(d.bytes.as_deref(), Some(format!("{line}\n").as_bytes()));
+        assert!(d.kill);
+    }
+
+    #[test]
+    fn kill_fires_on_every_response_at_or_past_k() {
+        let mut st = FaultState::new(FaultPlan::parse("kill:2").unwrap());
+        assert!(!st.decide("a").kill);
+        assert!(st.decide("b").kill);
+        assert!(st.decide("c").kill, "a process that somehow survived still dies next write");
+        assert_eq!(st.sent(), 3);
+    }
+}

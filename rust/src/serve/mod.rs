@@ -50,12 +50,18 @@
 pub mod batcher;
 pub mod bundle;
 pub mod cache;
+pub mod fault;
+pub mod remote;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatchGroup, BatchStats, Batcher, Coalesced, CrossBatcher, FlushTrigger};
+pub use batcher::{
+    BatchGroup, BatchStats, Batcher, Coalesced, CrossBatcher, FlushTrigger, LatencyWindow,
+};
 pub use bundle::{ServingBundle, ShardInfo};
 pub use cache::{CacheStats, EmbedCache};
+pub use fault::{FaultAction, FaultPlan, FaultState};
+pub use remote::{RemoteCfg, RemoteRouter, RemoteShard};
 pub use router::ShardRouter;
 pub use server::{LoopStats, ServerCfg};
 
@@ -158,14 +164,30 @@ pub fn parse_requests(v: &Json) -> Result<Vec<Request>> {
 // The request-side seam: one trait, many backends, one wire format.
 // ---------------------------------------------------------------------------
 
+/// Result of a best-effort embedding call ([`Serving::embed_nodes_partial`]):
+/// row-major rows for every requested id (failed ids are **zero-filled**
+/// so demux indexing stays uniform) plus the per-id failure reasons. An
+/// empty `failed` map means every row is genuine.
+#[derive(Debug, Default)]
+pub struct PartialRows {
+    /// `ids.len() × embed_dim` row-major f32s; rows of failed ids are
+    /// zeros and must not be served.
+    pub rows: Vec<f32>,
+    /// Ids that could not be served, with the reason (e.g.
+    /// `"shard_unavailable"` from a dead remote worker).
+    pub failed: std::collections::BTreeMap<u32, String>,
+}
+
 /// What a serving backend must provide for the shared front-ends
 /// (`oneshot`, the persistent NDJSON/TCP loop, `hashgnn infer`).
 ///
-/// Implementors: [`ServeSession`] (one bundle, local [`InferModel`]) and
-/// [`ShardRouter`] (K node-range shards). The contract every implementor
-/// must keep: `embed_nodes` returns `ids.len() × embed_dim` row-major
-/// f32s that are **bit-identical** for any request grouping, cache
-/// state, thread count, or sharding of the same bundle.
+/// Implementors: [`ServeSession`] (one bundle, local [`InferModel`]),
+/// [`ShardRouter`] (K in-process node-range shards) and
+/// [`RemoteRouter`] (K shard-worker *processes* over TCP). The contract
+/// every implementor must keep: `embed_nodes` returns
+/// `ids.len() × embed_dim` row-major f32s that are **bit-identical** for
+/// any request grouping, cache state, thread count, or sharding of the
+/// same bundle — local or remote.
 pub trait Serving {
     /// Size of the served id space (requests are validated against it).
     fn n_nodes(&self) -> usize;
@@ -180,6 +202,48 @@ pub trait Serving {
     /// Cache/backend counters as a JSON object (the `"cache"` field of
     /// batch responses).
     fn stats_json(&self) -> Json;
+
+    /// Best-effort embedding: serve every id that can be served and name
+    /// the ones that can't, instead of failing the whole union. The
+    /// default is all-or-nothing (local backends have no partial failure
+    /// mode); [`RemoteRouter`] overrides it so one dead shard worker
+    /// degrades only the ids it owns.
+    fn embed_nodes_partial(&mut self, ids: &[u32]) -> Result<PartialRows> {
+        Ok(PartialRows { rows: self.embed_nodes(ids)?, failed: Default::default() })
+    }
+
+    /// Class predictions `(logits, argmax)` for `ids`. The default
+    /// embeds locally and applies the row-wise head; [`RemoteRouter`]
+    /// overrides it to forward `{"op": "classes"}` to the owning worker
+    /// (the head parameters live worker-side). `logits` may be empty for
+    /// backends that only transport the argmax — the NDJSON `classes`
+    /// response carries only the argmax.
+    fn classes_for_ids(&mut self, ids: &[u32]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let emb = self.embed_nodes(ids)?;
+        self.classes_from_rows(&emb, ids.len())
+    }
+
+    /// The contiguous `[lo, hi)` global-id range this backend may be
+    /// asked to serve — `[0, n)` for everything except a lone shard
+    /// session behind `serve --shard-worker`, whose loop rejects
+    /// non-owned ids per line instead of poisoning a flush.
+    fn owned_range(&self) -> (u32, u32) {
+        (0, self.n_nodes() as u32)
+    }
+
+    /// `(lo, hi, index, count)` when this backend serves exactly one
+    /// shard of a split export — what a shard worker advertises in its
+    /// `stats` handshake so [`RemoteRouter`] can validate the set.
+    fn shard_info(&self) -> Option<(u32, u32, usize, usize)> {
+        None
+    }
+
+    /// Manifest name of the served model ("" when unknown) — handshake
+    /// field guarding against routing to a worker serving a different
+    /// export.
+    fn model_name(&self) -> String {
+        String::new()
+    }
 }
 
 /// Score `(u, v)` edges on any backend: embed both endpoints, then a
@@ -339,6 +403,22 @@ pub fn load_backend(paths: &[std::path::PathBuf], opts: ServeOpts) -> Result<Box
         return Ok(Box::new(ServeSession::new(bundle, opts)?));
     }
     Ok(Box::new(ShardRouter::load(paths, opts)?))
+}
+
+/// Load the backend for `serve --shard-worker`: exactly like
+/// [`load_backend`], except that a **lone shard file is allowed** — the
+/// whole point of a worker process is to serve one shard's owned range
+/// and let the [`RemoteRouter`] cover the rest of the id space. Multiple
+/// paths still build a router (a worker may serve a sub-set as one unit).
+pub fn load_worker_backend(
+    paths: &[std::path::PathBuf],
+    opts: ServeOpts,
+) -> Result<Box<dyn Serving>> {
+    if paths.len() == 1 {
+        let bundle = ServingBundle::load(&paths[0])?;
+        return Ok(Box::new(ServeSession::new(bundle, opts)?));
+    }
+    load_backend(paths, opts)
 }
 
 /// A live serving session over one frozen bundle: forward-only model,
@@ -683,6 +763,18 @@ impl Serving for ServeSession {
 
     fn stats_json(&self) -> Json {
         cache_stats_json(&self.cache_stats())
+    }
+
+    fn owned_range(&self) -> (u32, u32) {
+        ServeSession::owned_range(self)
+    }
+
+    fn shard_info(&self) -> Option<(u32, u32, usize, usize)> {
+        self.bundle.shard.as_ref().map(|s| (s.lo, s.hi, s.index, s.count))
+    }
+
+    fn model_name(&self) -> String {
+        self.bundle.manifest.name.clone()
     }
 }
 

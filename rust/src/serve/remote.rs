@@ -1,0 +1,555 @@
+//! Remote shard backend: the [`Serving`] implementation over worker
+//! *processes* instead of in-process sessions.
+//!
+//! `hashgnn serve --shard-worker --listen <addr> --bundle <shard>` turns
+//! each `HGNS0001` shard file into its own OS process speaking the
+//! existing NDJSON protocol over TCP. [`RemoteShard`] is the client for
+//! one such worker — pooled connection, connect/request timeouts,
+//! bounded retries with exponential backoff, and a health state machine —
+//! and [`RemoteRouter`] composes one per shard into the same [`Serving`]
+//! surface as the in-process [`ShardRouter`](super::ShardRouter).
+//!
+//! # Fault model (what `tests/serve_fault.rs` and CI pin down)
+//!
+//! - **Transport faults** (refused connect, timeout, torn or unparseable
+//!   response) tear down the pooled connection — the next attempt dials
+//!   fresh, so framing can never de-sync — and are retried up to
+//!   `retries` times with `backoff × 2^attempt` sleeps. Damaged bytes
+//!   are **never** served: a response that does not parse is
+//!   indistinguishable from no response.
+//! - **A worker that stays dead** is marked `Down` after the retry
+//!   budget. Service degrades *partially*: ids owned by the dead shard
+//!   answer `{"error": "shard_unavailable"}` in position, while every
+//!   other shard keeps serving **bit-identical** bytes (shard outputs
+//!   are independent by the slicing rules in [`super::bundle`]).
+//! - **Recovery** is automatic: a `Down` worker is re-probed with a
+//!   `stats` ping at most every `health_every` (zero = every request,
+//!   which tests use for determinism); a probe that answers flips it
+//!   back to `Up` and normal routing resumes.
+//! - **Application errors** (`{"error": ...}` lines — bad id, deadline
+//!   shed) are responses, not faults: they propagate to the caller's
+//!   position and are never retried.
+//!
+//! The handshake (`{"op": "stats"}` at connect) carries `n_nodes`,
+//! `dim`, `model` and the worker's `shard` range; [`RemoteRouter`]
+//! validates that every worker serves the same export and that the
+//! owned ranges tile `[0, n)` exactly — a mis-assembled fleet is a loud
+//! constructor error, not a silently wrong id space.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::ser::{self, Json};
+use crate::{Error, Result};
+
+use super::server::{read_bounded_line, RawLine};
+use super::Serving;
+
+/// Exact wire string for ids owned by an unreachable worker.
+pub const SHARD_UNAVAILABLE: &str = "shard_unavailable";
+
+/// Client-side knobs for one worker connection.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteCfg {
+    /// TCP dial timeout.
+    pub connect_timeout: Duration,
+    /// Read/write timeout for one request/response round trip.
+    pub request_timeout: Duration,
+    /// Retry budget per request (total attempts = `retries + 1`).
+    pub retries: u32,
+    /// First retry sleep; doubles per attempt (`backoff × 2^attempt`).
+    pub backoff: Duration,
+    /// Minimum interval between health probes of a `Down` worker; zero
+    /// probes on every routing decision (deterministic tests).
+    pub health_every: Duration,
+    /// Longest response line the client will buffer.
+    pub max_line_bytes: usize,
+}
+
+impl Default for RemoteCfg {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_millis(1000),
+            request_timeout: Duration::from_millis(5000),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            health_every: Duration::from_millis(1000),
+            max_line_bytes: 1 << 20,
+        }
+    }
+}
+
+/// What the worker advertised in its `stats` handshake.
+#[derive(Clone, Debug)]
+pub struct WorkerMeta {
+    pub n_nodes: usize,
+    pub dim: usize,
+    pub model: String,
+    /// Owned `[lo, hi)` plus `(index, count)`; a whole-bundle worker
+    /// reports `(0, n, 0, 1)`.
+    pub lo: u32,
+    pub hi: u32,
+    pub index: usize,
+    pub count: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Health {
+    Up,
+    Down,
+}
+
+/// One worker process, as seen from the router.
+pub struct RemoteShard {
+    addr: String,
+    cfg: RemoteCfg,
+    /// Pooled connection; `None` between failures (every retry dials
+    /// fresh, so a torn response can never de-sync framing).
+    conn: Option<BufReader<TcpStream>>,
+    meta: WorkerMeta,
+    health: Health,
+    last_probe: Instant,
+}
+
+impl RemoteShard {
+    /// Dial the worker and handshake via `{"op": "stats"}`; fails loudly
+    /// if the worker is unreachable or the response carries no metadata.
+    pub fn connect(addr: &str, cfg: RemoteCfg) -> Result<Self> {
+        let mut shard = Self {
+            addr: addr.to_string(),
+            cfg,
+            conn: None,
+            meta: WorkerMeta {
+                n_nodes: 0,
+                dim: 0,
+                model: String::new(),
+                lo: 0,
+                hi: 0,
+                index: 0,
+                count: 1,
+            },
+            health: Health::Down,
+            last_probe: Instant::now(),
+        };
+        let stats = shard.request_once(r#"{"op": "stats"}"#).map_err(|e| {
+            Error::Runtime(format!("worker {addr}: handshake failed: {e}"))
+        })?;
+        shard.meta = Self::meta_from_stats(addr, &stats)?;
+        shard.health = Health::Up;
+        Ok(shard)
+    }
+
+    fn meta_from_stats(addr: &str, stats: &Json) -> Result<WorkerMeta> {
+        let n_nodes = stats
+            .get("n_nodes")
+            .and_then(|v| v.as_usize())
+            .map_err(|e| Error::Runtime(format!("worker {addr}: bad stats handshake: {e}")))?;
+        let dim = stats
+            .get("dim")
+            .and_then(|v| v.as_usize())
+            .map_err(|e| Error::Runtime(format!("worker {addr}: bad stats handshake: {e}")))?;
+        let model =
+            stats.opt("model").and_then(|v| v.as_str().ok()).unwrap_or_default().to_string();
+        let (lo, hi, index, count) = match stats.opt("shard") {
+            Some(s) => (
+                s.get("lo")?.as_usize()? as u32,
+                s.get("hi")?.as_usize()? as u32,
+                s.get("index")?.as_usize()?,
+                s.get("count")?.as_usize()?,
+            ),
+            None => (0, n_nodes as u32, 0, 1),
+        };
+        Ok(WorkerMeta { n_nodes, dim, model, lo, hi, index, count })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn meta(&self) -> &WorkerMeta {
+        &self.meta
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.health == Health::Up
+    }
+
+    fn dial(&self) -> std::io::Result<TcpStream> {
+        let sockaddr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    format!("{}: no address", self.addr),
+                )
+            })?;
+        let stream = TcpStream::connect_timeout(&sockaddr, self.cfg.connect_timeout)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(self.cfg.request_timeout))?;
+        stream.set_write_timeout(Some(self.cfg.request_timeout))?;
+        Ok(stream)
+    }
+
+    /// One request/response round trip on the pooled connection. ANY
+    /// failure — dial, write, timed-out/torn read, unparseable response —
+    /// drops the connection before returning the error, so the next
+    /// attempt starts on a clean stream.
+    fn request_once(&mut self, line: &str) -> Result<Json> {
+        let r = self.try_round_trip(line);
+        if r.is_err() {
+            self.conn = None;
+        }
+        r
+    }
+
+    fn try_round_trip(&mut self, line: &str) -> Result<Json> {
+        if self.conn.is_none() {
+            self.conn = Some(BufReader::new(self.dial()?));
+        }
+        let conn = self.conn.as_mut().expect("established above");
+        let stream = conn.get_mut();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        let mut buf = Vec::new();
+        match read_bounded_line(conn, self.cfg.max_line_bytes, &mut buf)? {
+            RawLine::Line => {}
+            RawLine::Eof => {
+                return Err(Error::Runtime(format!(
+                    "worker {}: connection closed mid-request",
+                    self.addr
+                )))
+            }
+            RawLine::TooLong => {
+                return Err(Error::Runtime(format!(
+                    "worker {}: response line exceeds {} bytes",
+                    self.addr, self.cfg.max_line_bytes
+                )))
+            }
+        }
+        let text = std::str::from_utf8(&buf)
+            .map_err(|_| Error::Runtime(format!("worker {}: non-UTF-8 response", self.addr)))?;
+        ser::parse(text.trim()).map_err(|e| {
+            Error::Runtime(format!("worker {}: unparseable response: {e}", self.addr))
+        })
+    }
+
+    /// Round trip with the retry policy: `retries + 1` attempts,
+    /// exponential backoff between them; exhaustion marks the worker
+    /// `Down` (the health loop re-admits it later).
+    fn request(&mut self, line: &str) -> Result<Json> {
+        let mut last = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 && !self.cfg.backoff.is_zero() {
+                std::thread::sleep(self.cfg.backoff * (1u32 << (attempt - 1).min(16)));
+            }
+            match self.request_once(line) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        self.health = Health::Down;
+        self.last_probe = Instant::now();
+        Err(last.expect("at least one attempt ran"))
+    }
+
+    /// Single-attempt `stats` ping; success re-admits the worker.
+    pub fn health_check(&mut self) -> bool {
+        self.last_probe = Instant::now();
+        match self.request_once(r#"{"op": "stats"}"#) {
+            Ok(_) => {
+                self.health = Health::Up;
+                true
+            }
+            Err(_) => {
+                self.health = Health::Down;
+                false
+            }
+        }
+    }
+
+    /// Is this worker routable right now? `Up` passes; `Down` triggers a
+    /// health probe once `health_every` has elapsed since the last one
+    /// (zero re-probes immediately — dead workers re-admit on the first
+    /// request after restart).
+    fn available(&mut self) -> bool {
+        match self.health {
+            Health::Up => true,
+            Health::Down => {
+                if self.last_probe.elapsed() >= self.cfg.health_every {
+                    self.health_check()
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
+fn ids_json(ids: &[u32]) -> Json {
+    Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())
+}
+
+/// K worker processes behind one [`Serving`] front.
+pub struct RemoteRouter {
+    /// Workers sorted by owned range (`shards[i]` owns `ranges[i]`).
+    shards: Vec<RemoteShard>,
+    ranges: Vec<(u32, u32)>,
+    n_nodes: usize,
+    d: usize,
+    name: String,
+    declared: usize,
+}
+
+impl RemoteRouter {
+    /// Connect to every worker and validate the fleet: all must be up at
+    /// startup, serve the same export (name, node count, dim), and their
+    /// owned ranges must tile `[0, n)` with no gap or overlap.
+    pub fn connect(addrs: &[String], cfg: RemoteCfg) -> Result<Self> {
+        if addrs.is_empty() {
+            return Err(Error::Config("remote router needs at least one worker address".into()));
+        }
+        let mut shards: Vec<RemoteShard> =
+            addrs.iter().map(|a| RemoteShard::connect(a, cfg)).collect::<Result<_>>()?;
+        let (name, n_nodes, d) = {
+            let m = shards[0].meta();
+            (m.model.clone(), m.n_nodes, m.dim)
+        };
+        for s in &shards[1..] {
+            let m = s.meta();
+            if m.model != name || m.n_nodes != n_nodes || m.dim != d {
+                return Err(Error::Config(format!(
+                    "mixed worker fleet: {} serves '{}' ({} nodes, dim {}) vs '{name}' \
+                     ({n_nodes} nodes, dim {d})",
+                    s.addr(),
+                    m.model,
+                    m.n_nodes,
+                    m.dim
+                )));
+            }
+        }
+        shards.sort_by_key(|s| s.meta().lo);
+        let declared = shards[0].meta().count;
+        let mut ranges = Vec::with_capacity(shards.len());
+        let mut expect_lo = 0u32;
+        for s in &shards {
+            let m = s.meta();
+            if m.lo != expect_lo {
+                return Err(Error::Config(format!(
+                    "worker ranges do not tile the node space: {} owns [{}, {}) but the \
+                     previous range ends at {expect_lo}",
+                    s.addr(),
+                    m.lo,
+                    m.hi
+                )));
+            }
+            ranges.push((m.lo, m.hi));
+            expect_lo = m.hi;
+        }
+        if expect_lo as usize != n_nodes {
+            return Err(Error::Config(format!(
+                "worker ranges cover [0, {expect_lo}) but the export has {n_nodes} nodes"
+            )));
+        }
+        Ok(Self { shards, ranges, n_nodes, d, name, declared })
+    }
+
+    /// Owning worker of a (validated) node id.
+    fn owner(&self, id: u32) -> usize {
+        self.ranges.partition_point(|&(lo, _)| lo <= id) - 1
+    }
+
+    /// Group `ids` by owning worker, preserving each id's slot in the
+    /// request order.
+    fn group(&self, ids: &[u32]) -> (Vec<Vec<u32>>, Vec<Vec<usize>>) {
+        let k = self.shards.len();
+        let mut per_ids: Vec<Vec<u32>> = vec![Vec::new(); k];
+        let mut per_slots: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = self.owner(id);
+            per_ids[s].push(id);
+            per_slots[s].push(slot);
+        }
+        (per_ids, per_slots)
+    }
+
+    fn check_ids(&self, ids: &[u32]) -> Result<()> {
+        for &id in ids {
+            if id as usize >= self.n_nodes {
+                return Err(Error::Shape(format!(
+                    "node id {id} out of range [0, {})",
+                    self.n_nodes
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Serving for RemoteRouter {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.d
+    }
+
+    fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        let part = self.embed_nodes_partial(ids)?;
+        if let Some((id, msg)) = part.failed.iter().next() {
+            return Err(Error::Runtime(format!("node {id}: {msg}")));
+        }
+        Ok(part.rows)
+    }
+
+    /// Best-effort embedding across the fleet: each worker serves the
+    /// ids it owns; an unavailable or exhausted-retries worker fails
+    /// *only its own ids* with [`SHARD_UNAVAILABLE`], and application
+    /// errors from a live worker carry through verbatim. Rows that do
+    /// arrive are the worker's served f64 text round-tripped back to
+    /// f32 — exact, so remote bytes match local bytes.
+    fn embed_nodes_partial(&mut self, ids: &[u32]) -> Result<super::PartialRows> {
+        self.check_ids(ids)?;
+        let d = self.d;
+        let mut part = super::PartialRows {
+            rows: vec![0.0f32; ids.len() * d],
+            failed: Default::default(),
+        };
+        let (per_ids, per_slots) = self.group(ids);
+        for (s, shard_ids) in per_ids.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let fail_all = |part: &mut super::PartialRows, msg: &str| {
+                for &id in shard_ids {
+                    part.failed.insert(id, msg.to_string());
+                }
+            };
+            if !self.shards[s].available() {
+                fail_all(&mut part, SHARD_UNAVAILABLE);
+                continue;
+            }
+            let line = ser::to_string_compact(&Json::obj(vec![
+                ("op", Json::str("embed")),
+                ("nodes", ids_json(shard_ids)),
+            ]));
+            let resp = match self.shards[s].request(&line) {
+                Ok(v) => v,
+                Err(_) => {
+                    fail_all(&mut part, SHARD_UNAVAILABLE);
+                    continue;
+                }
+            };
+            if let Some(err) = resp.opt("error").and_then(|e| e.as_str().ok()) {
+                fail_all(&mut part, err);
+                continue;
+            }
+            let parsed: Result<()> = (|| {
+                let rows = resp.get("embeddings")?.as_arr()?;
+                if rows.len() != shard_ids.len() {
+                    return Err(Error::Runtime(format!(
+                        "worker {}: {} rows for {} ids",
+                        self.shards[s].addr(),
+                        rows.len(),
+                        shard_ids.len()
+                    )));
+                }
+                for (j, row) in rows.iter().enumerate() {
+                    let vals = row.as_f64_vec()?;
+                    if vals.len() != d {
+                        return Err(Error::Runtime(format!(
+                            "worker {}: row of {} values, dim is {d}",
+                            self.shards[s].addr(),
+                            vals.len()
+                        )));
+                    }
+                    let slot = per_slots[s][j];
+                    for (c, &v) in vals.iter().enumerate() {
+                        part.rows[slot * d + c] = v as f32;
+                    }
+                }
+                Ok(())
+            })();
+            if parsed.is_err() {
+                // A malformed body from a live worker is a fault, not an
+                // answer: fail its ids rather than serve damaged rows.
+                fail_all(&mut part, SHARD_UNAVAILABLE);
+            }
+        }
+        Ok(part)
+    }
+
+    fn classes_from_rows(&self, _h: &[f32], _rows: usize) -> Result<(Vec<f32>, Vec<usize>)> {
+        Err(Error::Runtime(
+            "remote backend applies the classifier head worker-side (classes_for_ids)".into(),
+        ))
+    }
+
+    /// Forward `{"op": "classes"}` to each owning worker (the head
+    /// parameters live worker-side) and merge the argmax back into
+    /// request order. Logits are not transported — the NDJSON response
+    /// only carries the argmax.
+    fn classes_for_ids(&mut self, ids: &[u32]) -> Result<(Vec<f32>, Vec<usize>)> {
+        self.check_ids(ids)?;
+        let mut argmax = vec![0usize; ids.len()];
+        let (per_ids, per_slots) = self.group(ids);
+        for (s, shard_ids) in per_ids.iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            if !self.shards[s].available() {
+                return Err(Error::Runtime(SHARD_UNAVAILABLE.into()));
+            }
+            let line = ser::to_string_compact(&Json::obj(vec![
+                ("op", Json::str("classes")),
+                ("nodes", ids_json(shard_ids)),
+            ]));
+            let resp = self.shards[s]
+                .request(&line)
+                .map_err(|_| Error::Runtime(SHARD_UNAVAILABLE.into()))?;
+            if let Some(err) = resp.opt("error").and_then(|e| e.as_str().ok()) {
+                return Err(Error::Runtime(err.to_string()));
+            }
+            let classes = resp.get("classes")?.as_usize_vec()?;
+            if classes.len() != shard_ids.len() {
+                return Err(Error::Runtime(format!(
+                    "worker {}: {} classes for {} ids",
+                    self.shards[s].addr(),
+                    classes.len(),
+                    shard_ids.len()
+                )));
+            }
+            for (j, &c) in classes.iter().enumerate() {
+                argmax[per_slots[s][j]] = c;
+            }
+        }
+        Ok((Vec::new(), argmax))
+    }
+
+    fn stats_json(&self) -> Json {
+        let workers: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("addr", Json::str(s.addr())),
+                    ("up", Json::Bool(s.is_up())),
+                    ("lo", Json::num(s.meta().lo as f64)),
+                    ("hi", Json::num(s.meta().hi as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("shards", Json::num(self.declared as f64)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+
+    fn model_name(&self) -> String {
+        self.name.clone()
+    }
+}

@@ -266,4 +266,8 @@ impl Serving for ShardRouter {
         }
         v
     }
+
+    fn model_name(&self) -> String {
+        self.sessions[0].bundle().manifest.name.clone()
+    }
 }

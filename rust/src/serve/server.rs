@@ -1,18 +1,25 @@
 //! Persistent server loop: newline-delimited JSON over stdin/stdout
 //! (`hashgnn serve --stdin`) or TCP (`--listen <addr>`), with
-//! cross-request batching under a latency budget.
+//! cross-request batching under a latency budget, bounded admission,
+//! per-request deadlines, and load-shed responses.
 //!
 //! # Protocol (see `docs/SERVING.md` for the full spec)
 //!
 //! One JSON object per input line — the same request objects the oneshot
 //! envelope carries (`{"op": "embed", "nodes": [...]}` etc.), plus two
 //! control ops: `{"op": "stats"}` (flush, then report counters) and
-//! `{"op": "shutdown"}` (flush, acknowledge, end the session). An
-//! optional `"id"` field is echoed verbatim on the matching response
-//! line. One JSON object per output line, **in request order**; a
-//! request that fails — malformed JSON, unknown op, out-of-range node id,
-//! model without the requested head — produces an `{"error": ...}` line
-//! in its position and never tears down the session.
+//! `{"op": "shutdown"}` (flush, acknowledge, end the session — in
+//! concurrent TCP mode, the whole server). An optional `"id"` field is
+//! echoed verbatim on the matching response line. One JSON object per
+//! output line, **in request order**; a request that fails — malformed
+//! JSON, unknown op, out-of-range node id, model without the requested
+//! head — produces an `{"error": ...}` line in its position and never
+//! tears down the session. Load shedding speaks the same form:
+//! `{"error": "overloaded"}` when the bounded queue is full,
+//! `{"error": "deadline"}` when a request waited past `--deadline-ms`,
+//! `{"error": "line_too_long"}` for a line beyond `--max-line-bytes`,
+//! and `{"error": "shard_unavailable"}` for ids owned by a dead remote
+//! shard worker — always in the request's position.
 //!
 //! # Batching semantics
 //!
@@ -25,49 +32,88 @@
 //! demuxes rows back per request
 //! ([`demux_rows`](crate::runtime::native::infer::demux_rows)). Exact
 //! counters ([`LoopStats`]) report flushes by trigger, nodes saved by
-//! cross-request coalescing, and distinct nodes computed.
+//! cross-request coalescing, distinct nodes computed, shed counts, and
+//! requests drained at shutdown; a [`LatencyWindow`] tracks exact
+//! p50/p99 flush latency for the `stats` response.
 //!
 //! Batching never changes served bytes: the union goes through the same
 //! grouping-invariant session path as a lone request, and the classifier
-//! head is applied row-wise to the flushed rows. The NDJSON responses
-//! are therefore identical whether requests arrive one per flush or all
-//! in one — and identical between a [`ServeSession`](super::ServeSession)
-//! and a [`ShardRouter`](super::ShardRouter) over the same export.
+//! head is applied row-wise per request. The NDJSON responses are
+//! therefore identical whether requests arrive one per flush or all in
+//! one — and identical between a [`ServeSession`](super::ServeSession),
+//! a [`ShardRouter`](super::ShardRouter) and a
+//! [`RemoteRouter`](super::RemoteRouter) over the same export.
 //!
 //! # Blocking model
 //!
-//! A detached reader thread feeds raw lines into a channel; the loop
-//! waits with `recv_timeout` against the batcher's deadline, so the
-//! latency budget holds whether input is idle, trickling, or flooding.
-//! TCP mode accepts connections sequentially (one NDJSON session at a
-//! time over a shared backend, so the embedding cache stays warm across
-//! connections); concurrent connections belong to a fleet of processes
-//! behind the shard router, not to one loop.
+//! Single-session fronts (`--stdin`, tests) run [`run_loop`]: a detached
+//! reader thread feeds bounded lines into a channel; the loop waits with
+//! `recv_timeout` against the batcher's deadline, so the latency budget
+//! holds whether input is idle, trickling, or flooding.
+//!
+//! The TCP front ([`serve_concurrent`]) accepts up to `--max-conns`
+//! connections **concurrently**: per connection, a reader thread parses
+//! bounded lines and a writer thread reorders responses by arrival slot;
+//! every line funnels through one bounded engine queue into the ONE
+//! shared [`CrossBatcher`], so deduplication finally coalesces across
+//! *connections*, not just across requests. The engine — and therefore
+//! the backend — stays on the calling thread: `Serving` needs no `Send`
+//! bound, and every flush is a plain `&mut` call. Admission is bounded
+//! end to end (engine queue, pending set, per-connection writer buffer);
+//! overflow sheds with explicit error lines instead of growing memory.
+//! [`serve_listener`] remains the sequential variant (one session at a
+//! time over the shared backend).
 
-use std::collections::HashMap;
-use std::io::{BufRead, Write};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::runtime::native::infer::{demux_rows_with, row_index};
 use crate::ser::{self, Json};
 use crate::Result;
 
-use super::batcher::{BatchStats, CrossBatcher, FlushTrigger};
-use super::{classes_response, dot_pairs, embed_response, score_response, Request, Serving};
+use super::batcher::{BatchStats, CrossBatcher, FlushTrigger, LatencyWindow};
+use super::fault::{FaultPlan, FaultState};
+use super::{
+    classes_response, dot_pairs, embed_response, score_response, PartialRows, Request, Serving,
+};
 
-/// Persistent-loop knobs (`--max-batch`, `--max-delay-ms`).
+/// Persistent-loop knobs (`--max-batch`, `--max-delay-ms`,
+/// `--deadline-ms`, `--queue-cap`, `--max-line-bytes`).
 #[derive(Clone, Copy, Debug)]
 pub struct ServerCfg {
     /// Flush when this many distinct node ids are pending.
     pub max_batch: usize,
     /// Flush when the oldest pending request has waited this long.
     pub max_delay: Duration,
+    /// Per-request deadline: a data request still unanswered this long
+    /// after arrival is shed with `{"error": "deadline"}` in its
+    /// position at the next flush. `None` disables deadlines.
+    pub deadline: Option<Duration>,
+    /// Admission bound: data requests arriving while this many items are
+    /// already pending are shed with `{"error": "overloaded"}` in
+    /// position (clamped to ≥ 1). Also bounds the concurrent engine's
+    /// event queue.
+    pub queue_cap: usize,
+    /// Longest accepted input line in bytes; longer lines answer
+    /// `{"error": "line_too_long"}` in position and are discarded
+    /// without buffering (OOM hardening for the public socket).
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        Self { max_batch: 256, max_delay: Duration::from_millis(5) }
+        Self {
+            max_batch: 256,
+            max_delay: Duration::from_millis(5),
+            deadline: None,
+            queue_cap: 1024,
+            max_line_bytes: 1 << 20,
+        }
     }
 }
 
@@ -79,8 +125,20 @@ pub struct LoopStats {
     pub requests: u64,
     /// Successful response lines written.
     pub responses: u64,
-    /// Error lines written.
+    /// Error lines written (including shed responses).
     pub errors: u64,
+    /// Requests shed with `{"error": "overloaded"}` (admission queue or
+    /// engine queue full, or the connection cap reached).
+    pub shed_overload: u64,
+    /// Requests shed with `{"error": "deadline"}` (waited past the
+    /// per-request deadline before their flush).
+    pub shed_deadline: u64,
+    /// Items answered by drain flushes (control barriers, EOF, shutdown)
+    /// — the graceful-shutdown guarantee made countable.
+    pub drained: u64,
+    /// Connections dropped because their writer buffer overflowed (a
+    /// client that stopped draining responses).
+    pub dropped_conns: u64,
     /// Cross-request batching counters.
     pub batch: BatchStats,
 }
@@ -91,6 +149,10 @@ impl LoopStats {
         self.requests += o.requests;
         self.responses += o.responses;
         self.errors += o.errors;
+        self.shed_overload += o.shed_overload;
+        self.shed_deadline += o.shed_deadline;
+        self.drained += o.drained;
+        self.dropped_conns += o.dropped_conns;
         self.batch.absorb(&o.batch);
     }
 
@@ -98,7 +160,8 @@ impl LoopStats {
     pub fn summary(&self) -> String {
         format!(
             "{} request(s), {} response(s), {} error(s) | {} flush(es): {} fill / {} budget / \
-             {} drain | {} node(s) coalesced away, {} unique computed",
+             {} drain | {} node(s) coalesced away, {} unique computed | shed {} overload / \
+             {} deadline, {} drained",
             self.requests,
             self.responses,
             self.errors,
@@ -107,7 +170,10 @@ impl LoopStats {
             self.batch.budget_expiries,
             self.batch.drain_flushes,
             self.batch.coalesced_nodes,
-            self.batch.unique_nodes
+            self.batch.unique_nodes,
+            self.shed_overload,
+            self.shed_deadline,
+            self.drained
         )
     }
 }
@@ -119,6 +185,17 @@ enum Pending {
     Fail { msg: String, echo: Option<Json> },
 }
 
+/// A [`Pending`] item with its response routing (connection + arrival
+/// slot for the per-connection reorder buffer) and arrival time (for the
+/// per-request deadline). The single-session loop uses `conn = 0` and a
+/// running slot.
+struct Queued {
+    conn: u64,
+    slot: u64,
+    at: Instant,
+    item: Pending,
+}
+
 /// One parsed input line.
 enum Line {
     Item(Pending),
@@ -126,7 +203,7 @@ enum Line {
     Shutdown(Option<Json>),
 }
 
-fn parse_line(line: &str, n_nodes: usize) -> Line {
+fn parse_line(line: &str, n_nodes: usize, owned: (u32, u32)) -> Line {
     let v = match ser::parse(line) {
         Ok(v) => v,
         Err(e) => return Line::Item(Pending::Fail { msg: format!("{e}"), echo: None }),
@@ -144,6 +221,17 @@ fn parse_line(line: &str, n_nodes: usize) -> Line {
             if let Some(&bad) = req.node_ids().iter().find(|&&id| id as usize >= n_nodes) {
                 return Line::Item(Pending::Fail {
                     msg: format!("node id {bad} out of range [0, {n_nodes})"),
+                    echo,
+                });
+            }
+            // A shard worker only owns [lo, hi): misrouted ids fail per
+            // line, the same policy as out-of-range ids.
+            let (lo, hi) = owned;
+            if let Some(&bad) =
+                req.node_ids().iter().find(|&&id| id < lo || id >= hi)
+            {
+                return Line::Item(Pending::Fail {
+                    msg: format!("node id {bad} outside this shard's owned range [{lo}, {hi})"),
                     echo,
                 });
             }
@@ -167,11 +255,36 @@ fn error_json(msg: &str, echo: Option<Json>) -> Json {
     with_echo(Json::obj(vec![("error", Json::str(msg))]), echo)
 }
 
+/// Node ids a pending item references (what the batcher accumulates).
+fn item_ids(item: &Pending) -> Vec<u32> {
+    match item {
+        Pending::Req { req, .. } => req.node_ids(),
+        Pending::Fail { .. } => Vec::new(),
+    }
+}
+
+/// Admission bound: convert a data request into an in-position
+/// `{"error": "overloaded"}` when the pending set is at capacity.
+/// Deferred failures pass through (they carry no node ids and answer an
+/// error either way).
+fn admit(item: Pending, pending: usize, queue_cap: usize, stats: &mut LoopStats) -> Pending {
+    match item {
+        Pending::Req { echo, .. } if pending >= queue_cap.max(1) => {
+            stats.shed_overload += 1;
+            Pending::Fail { msg: "overloaded".into(), echo }
+        }
+        other => other,
+    }
+}
+
 /// Build one response from the flush's precomputed rows. Embeds and
-/// scores demux through the flush's shared id→row index; classes push
-/// the demuxed rows through the row-wise head.
+/// scores demux through the flush's shared id→row index; classes go
+/// through [`Serving::classes_for_ids`] so remote backends can apply the
+/// head worker-side (for local backends that path replays the rows the
+/// flush just computed — through the cache — and is bit-identical by the
+/// grouping-invariance rule).
 fn respond(
-    backend: &dyn Serving,
+    backend: &mut dyn Serving,
     req: &Request,
     index: &HashMap<u32, usize>,
     rows: &[f32],
@@ -190,72 +303,129 @@ fn respond(
             Ok(score_response(edges, &dot_pairs(&emb, edges.len(), d)))
         }
         Request::Classes(ids) => {
-            let mut emb = vec![0.0f32; ids.len() * d];
-            demux_rows_with(index, rows, d, ids, &mut emb)?;
-            let (_logits, argmax) = backend.classes_from_rows(&emb, ids.len())?;
+            let (_logits, argmax) = backend.classes_for_ids(ids)?;
             Ok(classes_response(ids, &argmax))
         }
     }
 }
 
-fn flush(
+/// Flush the pending set and emit one response per queued item, in queue
+/// order, via `emit(conn, slot, line)`. Handles deadline shedding,
+/// partial shard failures ([`Serving::embed_nodes_partial`]) and the
+/// whole-union error path; records the flush latency.
+fn flush_core(
     backend: &mut dyn Serving,
-    batcher: &mut CrossBatcher<Pending>,
+    batcher: &mut CrossBatcher<Queued>,
     trigger: FlushTrigger,
-    out: &mut dyn Write,
+    deadline: Option<Duration>,
     stats: &mut LoopStats,
+    lat: &mut LatencyWindow,
+    emit: &mut dyn FnMut(u64, u64, &Json) -> Result<()>,
 ) -> Result<()> {
     if batcher.is_empty() {
         return Ok(());
     }
+    let t0 = Instant::now();
     let (items, unique) = batcher.take(trigger);
-    let computed =
-        if unique.is_empty() { Ok(Vec::new()) } else { backend.embed_nodes(&unique) };
+    if trigger == FlushTrigger::Drain {
+        stats.drained += items.len() as u64;
+    }
+    let computed = if unique.is_empty() {
+        Ok(PartialRows::default())
+    } else {
+        backend.embed_nodes_partial(&unique)
+    };
     let d = backend.embed_dim();
+    let now = Instant::now();
     match computed {
-        Ok(rows) => {
+        Ok(part) => {
             // One id→row index per flush, shared by every request's demux.
             let index = row_index(&unique);
-            for item in items {
+            for q in items {
+                let Queued { conn, slot, at, item } = q;
                 let line = match item {
                     Pending::Fail { msg, echo } => {
                         stats.errors += 1;
                         error_json(&msg, echo)
                     }
-                    Pending::Req { req, echo } => match respond(backend, &req, &index, &rows, d)
-                    {
-                        Ok(resp) => {
-                            stats.responses += 1;
-                            with_echo(resp, echo)
-                        }
-                        Err(e) => {
+                    Pending::Req { req, echo } => {
+                        let blown =
+                            deadline.map(|dl| now.duration_since(at) >= dl).unwrap_or(false);
+                        if blown {
+                            stats.shed_deadline += 1;
                             stats.errors += 1;
-                            error_json(&format!("{e}"), echo)
+                            error_json("deadline", echo)
+                        } else if let Some(msg) =
+                            req.node_ids().iter().find_map(|id| part.failed.get(id))
+                        {
+                            // Partial service: an id owned by a dead
+                            // shard fails its own request; every other
+                            // request demuxes bit-identically.
+                            stats.errors += 1;
+                            error_json(msg, echo)
+                        } else {
+                            match respond(backend, &req, &index, &part.rows, d) {
+                                Ok(resp) => {
+                                    stats.responses += 1;
+                                    with_echo(resp, echo)
+                                }
+                                Err(e) => {
+                                    stats.errors += 1;
+                                    error_json(&format!("{e}"), echo)
+                                }
+                            }
                         }
-                    },
+                    }
                 };
-                writeln!(out, "{}", ser::to_string_compact(&line))?;
+                emit(conn, slot, &line)?;
             }
         }
         Err(e) => {
             // The whole union failed (ids were pre-validated, so this is a
             // model/bundle-level fault): every queued line gets the error.
             let msg = format!("{e}");
-            for item in items {
+            for q in items {
                 stats.errors += 1;
+                let Queued { conn, slot, item, .. } = q;
                 let echo = match item {
                     Pending::Req { echo, .. } | Pending::Fail { echo, .. } => echo,
                 };
-                writeln!(out, "{}", ser::to_string_compact(&error_json(&msg, echo)))?;
+                emit(conn, slot, &error_json(&msg, echo))?;
             }
         }
     }
+    lat.record(t0.elapsed().as_micros() as u64);
+    Ok(())
+}
+
+/// Single-writer flush: emit responses in queue order onto `out`.
+fn flush_to_writer(
+    backend: &mut dyn Serving,
+    batcher: &mut CrossBatcher<Queued>,
+    trigger: FlushTrigger,
+    cfg: &ServerCfg,
+    stats: &mut LoopStats,
+    lat: &mut LatencyWindow,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let mut emit = |_conn: u64, _slot: u64, line: &Json| -> Result<()> {
+        writeln!(out, "{}", ser::to_string_compact(line))?;
+        Ok(())
+    };
+    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, &mut emit)?;
     out.flush()?;
     Ok(())
 }
 
-fn stats_response(backend: &dyn Serving, stats: &LoopStats, batch: BatchStats) -> Json {
-    Json::obj(vec![
+fn stats_response(
+    backend: &dyn Serving,
+    stats: &LoopStats,
+    batch: BatchStats,
+    lat: &LatencyWindow,
+    queue_depth: usize,
+    in_flight: usize,
+) -> Json {
+    let mut resp = Json::obj(vec![
         ("op", Json::str("stats")),
         ("requests", Json::num(stats.requests as f64)),
         ("responses", Json::num(stats.responses as f64)),
@@ -266,8 +436,35 @@ fn stats_response(backend: &dyn Serving, stats: &LoopStats, batch: BatchStats) -
         ("drain_flushes", Json::num(batch.drain_flushes as f64)),
         ("coalesced_nodes", Json::num(batch.coalesced_nodes as f64)),
         ("unique_nodes", Json::num(batch.unique_nodes as f64)),
+        ("shed_overload", Json::num(stats.shed_overload as f64)),
+        ("shed_deadline", Json::num(stats.shed_deadline as f64)),
+        ("drained_requests", Json::num(stats.drained as f64)),
+        ("dropped_conns", Json::num(stats.dropped_conns as f64)),
+        ("queue_depth", Json::num(queue_depth as f64)),
+        ("in_flight", Json::num(in_flight as f64)),
+        ("flush_p50_us", Json::num(lat.percentile(50) as f64)),
+        ("flush_p99_us", Json::num(lat.percentile(99) as f64)),
+        ("n_nodes", Json::num(backend.n_nodes() as f64)),
+        ("dim", Json::num(backend.embed_dim() as f64)),
+        ("model", Json::str(backend.model_name())),
         ("cache", backend.stats_json()),
-    ])
+    ]);
+    // Shard workers advertise their owned range so the remote router can
+    // validate the set in its stats-ping handshake.
+    if let Some((lo, hi, index, count)) = backend.shard_info() {
+        if let Json::Obj(o) = &mut resp {
+            o.insert(
+                "shard".to_string(),
+                Json::obj(vec![
+                    ("lo", Json::num(lo as f64)),
+                    ("hi", Json::num(hi as f64)),
+                    ("index", Json::num(index as f64)),
+                    ("count", Json::num(count as f64)),
+                ]),
+            );
+        }
+    }
+    resp
 }
 
 /// Lines the reader thread may buffer ahead of the serve loop. Bounded
@@ -276,25 +473,119 @@ fn stats_response(backend: &dyn Serving, stats: &LoopStats, batch: BatchStats) -
 /// growing server memory without limit.
 const READER_BACKLOG: usize = 1024;
 
+/// Responses a connection's writer may buffer before the engine declares
+/// the client dead (it stopped draining) and drops the connection.
+const WRITER_BACKLOG: usize = 4096;
+
+/// Flush-latency samples the p50/p99 window keeps.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Marker message for an input line that exceeded `max_line_bytes`; the
+/// reader encodes it as an `InvalidData` io error so the channel type
+/// stays `io::Result<String>`, and the loop answers
+/// `{"error": "line_too_long"}` in position instead of ending the
+/// session.
+const LINE_TOO_LONG: &str = "line_too_long";
+
+fn is_line_too_long(e: &std::io::Error) -> bool {
+    e.kind() == std::io::ErrorKind::InvalidData && format!("{e}") == LINE_TOO_LONG
+}
+
+/// What one bounded line read produced.
+pub(crate) enum RawLine {
+    Eof,
+    /// A complete line (without its newline) is in the caller's buffer.
+    Line,
+    /// The line exceeded the byte bound; its bytes were discarded up to
+    /// (and including) the next newline.
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into `buf`, never buffering more than
+/// `max` content bytes: once a line exceeds the bound, the remainder is
+/// consumed and discarded chunk-by-chunk. A final unterminated line is
+/// returned like `read_line` would.
+pub(crate) fn read_bounded_line<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<RawLine> {
+    let mut too_long = false;
+    loop {
+        let avail = match r.fill_buf() {
+            Ok(a) => a,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if avail.is_empty() {
+            return Ok(if too_long {
+                RawLine::TooLong
+            } else if buf.is_empty() {
+                RawLine::Eof
+            } else {
+                RawLine::Line
+            });
+        }
+        match avail.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if !too_long && buf.len() + i > max {
+                    too_long = true;
+                    buf.clear();
+                }
+                if !too_long {
+                    buf.extend_from_slice(&avail[..i]);
+                }
+                r.consume(i + 1);
+                return Ok(if too_long { RawLine::TooLong } else { RawLine::Line });
+            }
+            None => {
+                let n = avail.len();
+                if !too_long && buf.len() + n > max {
+                    too_long = true;
+                    buf.clear();
+                }
+                if !too_long {
+                    buf.extend_from_slice(avail);
+                }
+                r.consume(n);
+            }
+        }
+    }
+}
+
 /// Spawn a detached thread reading raw lines into a bounded channel —
-/// the select-able form of a blocking reader the budget wait needs. The
-/// channel closes at EOF or on the first read error.
+/// the select-able form of a blocking reader the budget wait needs.
+/// Lines longer than `max_line_bytes` are reported as an `InvalidData`
+/// error with message `line_too_long` (the loop answers them in
+/// position); the channel closes at EOF or on the first real read error.
 pub fn spawn_line_reader<R: BufRead + Send + 'static>(
     mut r: R,
+    max_line_bytes: usize,
 ) -> Receiver<std::io::Result<String>> {
     let (tx, rx) = sync_channel(READER_BACKLOG);
-    std::thread::spawn(move || loop {
-        let mut line = String::new();
-        match r.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                if tx.send(Ok(line)).is_err() {
+    std::thread::spawn(move || {
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            match read_bounded_line(&mut r, max_line_bytes, &mut buf) {
+                Ok(RawLine::Eof) => break,
+                Ok(RawLine::Line) => {
+                    let line = String::from_utf8_lossy(&buf).into_owned();
+                    if tx.send(Ok(line)).is_err() {
+                        break;
+                    }
+                }
+                Ok(RawLine::TooLong) => {
+                    let e =
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, LINE_TOO_LONG);
+                    if tx.send(Err(e)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Err(e));
                     break;
                 }
-            }
-            Err(e) => {
-                let _ = tx.send(Err(e));
-                break;
             }
         }
     });
@@ -302,15 +593,19 @@ pub fn spawn_line_reader<R: BufRead + Send + 'static>(
 }
 
 /// Drive one NDJSON session to completion (EOF or `shutdown`); the core
-/// the stdin, TCP and test front-ends share.
+/// the stdin, sequential-TCP and test front-ends share.
 pub fn run_loop(
     backend: &mut dyn Serving,
     cfg: &ServerCfg,
     rx: &Receiver<std::io::Result<String>>,
     out: &mut dyn Write,
 ) -> Result<LoopStats> {
-    let mut batcher: CrossBatcher<Pending> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
+    let mut batcher: CrossBatcher<Queued> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
     let mut stats = LoopStats::default();
+    let mut lat = LatencyWindow::new(LATENCY_WINDOW);
+    let mut slot = 0u64;
+    let n_nodes = backend.n_nodes();
+    let owned = backend.owned_range();
     loop {
         let msg = if batcher.is_empty() {
             match rx.recv() {
@@ -323,53 +618,120 @@ pub fn run_loop(
             match rx.recv_timeout(wait) {
                 Ok(m) => Some(m),
                 Err(RecvTimeoutError::Timeout) => {
-                    flush(backend, &mut batcher, FlushTrigger::Budget, out, &mut stats)?;
+                    flush_to_writer(
+                        backend,
+                        &mut batcher,
+                        FlushTrigger::Budget,
+                        cfg,
+                        &mut stats,
+                        &mut lat,
+                        out,
+                    )?;
                     continue;
                 }
                 Err(RecvTimeoutError::Disconnected) => None,
             }
         };
-        let line = match msg {
+        let parsed = match msg {
             None => {
-                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                flush_to_writer(
+                    backend,
+                    &mut batcher,
+                    FlushTrigger::Drain,
+                    cfg,
+                    &mut stats,
+                    &mut lat,
+                    out,
+                )?;
                 break;
             }
+            Some(Err(e)) if is_line_too_long(&e) => {
+                // Oversized line: an in-position error, not a session end.
+                stats.requests += 1;
+                Line::Item(Pending::Fail { msg: LINE_TOO_LONG.into(), echo: None })
+            }
             Some(Err(e)) => {
-                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                flush_to_writer(
+                    backend,
+                    &mut batcher,
+                    FlushTrigger::Drain,
+                    cfg,
+                    &mut stats,
+                    &mut lat,
+                    out,
+                )?;
                 return Err(e.into());
             }
-            Some(Ok(line)) => line,
+            Some(Ok(line)) => {
+                let line = line.trim().to_string();
+                if line.is_empty() {
+                    continue;
+                }
+                stats.requests += 1;
+                parse_line(&line, n_nodes, owned)
+            }
         };
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        stats.requests += 1;
-        match parse_line(line, backend.n_nodes()) {
+        match parsed {
             Line::Item(item) => {
-                let ids = match &item {
-                    Pending::Req { req, .. } => req.node_ids(),
-                    Pending::Fail { .. } => Vec::new(),
-                };
-                let full = batcher.push(item, &ids, Instant::now());
+                let item = admit(item, batcher.len(), cfg.queue_cap, &mut stats);
+                let ids = item_ids(&item);
+                let s = slot;
+                slot += 1;
+                let q = Queued { conn: 0, slot: s, at: Instant::now(), item };
+                let full = batcher.push(q, &ids, Instant::now());
                 if full {
-                    flush(backend, &mut batcher, FlushTrigger::Fill, out, &mut stats)?;
+                    flush_to_writer(
+                        backend,
+                        &mut batcher,
+                        FlushTrigger::Fill,
+                        cfg,
+                        &mut stats,
+                        &mut lat,
+                        out,
+                    )?;
                 } else if batcher.should_flush(Instant::now()) {
                     // Continuous traffic must still honor the budget even
                     // though recv_timeout never got to expire.
-                    flush(backend, &mut batcher, FlushTrigger::Budget, out, &mut stats)?;
+                    flush_to_writer(
+                        backend,
+                        &mut batcher,
+                        FlushTrigger::Budget,
+                        cfg,
+                        &mut stats,
+                        &mut lat,
+                        out,
+                    )?;
                 }
             }
             Line::Stats(echo) => {
-                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                let depth = batcher.len();
+                flush_to_writer(
+                    backend,
+                    &mut batcher,
+                    FlushTrigger::Drain,
+                    cfg,
+                    &mut stats,
+                    &mut lat,
+                    out,
+                )?;
                 stats.responses += 1;
-                let resp =
-                    with_echo(stats_response(backend, &stats, batcher.stats()), echo);
+                let resp = with_echo(
+                    stats_response(backend, &stats, batcher.stats(), &lat, depth, 1),
+                    echo,
+                );
                 writeln!(out, "{}", ser::to_string_compact(&resp))?;
                 out.flush()?;
             }
             Line::Shutdown(echo) => {
-                flush(backend, &mut batcher, FlushTrigger::Drain, out, &mut stats)?;
+                flush_to_writer(
+                    backend,
+                    &mut batcher,
+                    FlushTrigger::Drain,
+                    cfg,
+                    &mut stats,
+                    &mut lat,
+                    out,
+                )?;
                 stats.responses += 1;
                 let resp = with_echo(
                     Json::obj(vec![("op", Json::str("shutdown")), ("ok", Json::Bool(true))]),
@@ -393,22 +755,23 @@ pub fn run_ndjson<R: BufRead + Send + 'static>(
     input: R,
     out: &mut dyn Write,
 ) -> Result<LoopStats> {
-    let rx = spawn_line_reader(input);
+    let rx = spawn_line_reader(input, cfg.max_line_bytes);
     run_loop(backend, cfg, &rx, out)
 }
 
 /// `hashgnn serve --stdin`: one NDJSON session over stdin/stdout.
 pub fn serve_stdin(backend: &mut dyn Serving, cfg: &ServerCfg) -> Result<LoopStats> {
-    let rx = spawn_line_reader(std::io::BufReader::new(std::io::stdin()));
+    let rx =
+        spawn_line_reader(std::io::BufReader::new(std::io::stdin()), cfg.max_line_bytes);
     let mut out = std::io::BufWriter::new(std::io::stdout());
     run_loop(backend, cfg, &rx, &mut out)
 }
 
-/// `hashgnn serve --listen`: accept NDJSON sessions sequentially over a
-/// bound listener, sharing one backend (and so one warm cache) across
-/// connections. `max_conns = 0` accepts forever; a positive bound makes
-/// the call return aggregate stats after that many connections (the CI
-/// smoke and tests use 1).
+/// Sequential TCP accept loop: one NDJSON session at a time over a
+/// shared backend (and so one warm cache across connections).
+/// `max_conns = 0` accepts forever; a positive bound makes the call
+/// return aggregate stats after that many connections (tests use 1).
+/// The CLI's `--listen` front uses [`serve_concurrent`] instead.
 pub fn serve_listener(
     listener: std::net::TcpListener,
     backend: &mut dyn Serving,
@@ -422,7 +785,7 @@ pub fn serve_listener(
         eprintln!("[serve] connection from {peer}");
         let reader = std::io::BufReader::new(stream.try_clone()?);
         let closer = stream.try_clone()?;
-        let rx = spawn_line_reader(reader);
+        let rx = spawn_line_reader(reader, cfg.max_line_bytes);
         let mut out = std::io::BufWriter::new(stream);
         match run_loop(backend, cfg, &rx, &mut out) {
             Ok(s) => {
@@ -432,12 +795,379 @@ pub fn serve_listener(
             Err(e) => eprintln!("[serve] connection error: {e}"),
         }
         // The reader thread still holds a clone of the socket blocked in
-        // read_line; shut the connection down so the client sees EOF and
+        // its read; shut the connection down so the client sees EOF and
         // the thread unblocks instead of leaking per connection.
         let _ = closer.shutdown(std::net::Shutdown::Both);
         served += 1;
     }
     Ok(total)
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent front: N connections, one engine, one shared CrossBatcher.
+// ---------------------------------------------------------------------------
+
+/// Engine-queue events. Per-connection reader threads produce `Line` /
+/// `TooLong` / `Closed`; the accept thread produces `Open`.
+enum Event {
+    Open { conn: u64, tx: SyncSender<(u64, String)>, peer: String },
+    Line { conn: u64, slot: u64, at: Instant, text: String },
+    TooLong { conn: u64, slot: u64 },
+    Closed { conn: u64 },
+}
+
+fn overloaded_line() -> String {
+    ser::to_string_compact(&error_json("overloaded", None))
+}
+
+/// Write one response line through the (optional) fault plan — the hook
+/// the deterministic degradation tests drive. Returns `Err` on a dead
+/// socket, which ends the writer.
+fn write_response(
+    out: &mut dyn Write,
+    line: &str,
+    fault: &Option<Arc<Mutex<FaultState>>>,
+) -> std::io::Result<()> {
+    match fault {
+        None => {
+            out.write_all(line.as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()
+        }
+        Some(f) => {
+            let decision = f.lock().expect("fault state lock").decide(line);
+            if decision.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(decision.delay_ms));
+            }
+            if let Some(bytes) = &decision.bytes {
+                out.write_all(bytes)?;
+                out.flush()?;
+            }
+            if decision.kill {
+                // kill-after-K: die abruptly, like a crashed worker.
+                std::process::exit(9);
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Per-connection writer: receives `(slot, line)` in any order, writes
+/// strictly in slot order (responses leave in request order no matter
+/// how flushes interleave connections), and shuts the connection down on
+/// exit so the peer — and this connection's blocked reader — see EOF.
+fn spawn_conn_writer(
+    stream: TcpStream,
+    rx: Receiver<(u64, String)>,
+    fault: Option<Arc<Mutex<FaultState>>>,
+) {
+    std::thread::spawn(move || {
+        let mut out = stream;
+        let mut next = 0u64;
+        let mut held: BTreeMap<u64, String> = BTreeMap::new();
+        'recv: for (slot, line) in rx {
+            held.insert(slot, line);
+            while let Some(line) = held.remove(&next) {
+                if write_response(&mut out, &line, &fault).is_err() {
+                    break 'recv;
+                }
+                next += 1;
+            }
+        }
+        let _ = out.shutdown(Shutdown::Both);
+    });
+}
+
+/// Per-connection reader: bounded lines in, slot-stamped events out.
+/// Data lines go through `try_send` against the bounded engine queue — a
+/// full queue sheds the line right here with `{"error": "overloaded"}`
+/// in position (via the writer, so ordering holds).
+#[allow(clippy::too_many_arguments)]
+fn spawn_conn_reader(
+    conn: u64,
+    stream: TcpStream,
+    max_line_bytes: usize,
+    etx: SyncSender<Event>,
+    wtx: SyncSender<(u64, String)>,
+    shed: Arc<AtomicU64>,
+    active: Arc<AtomicUsize>,
+) {
+    std::thread::spawn(move || {
+        let mut r = BufReader::new(stream);
+        let mut slot = 0u64;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            match read_bounded_line(&mut r, max_line_bytes, &mut buf) {
+                Ok(RawLine::Eof) | Err(_) => break,
+                Ok(RawLine::TooLong) => {
+                    let s = slot;
+                    slot += 1;
+                    if etx.send(Event::TooLong { conn, slot: s }).is_err() {
+                        break;
+                    }
+                }
+                Ok(RawLine::Line) => {
+                    let text = String::from_utf8_lossy(&buf).into_owned();
+                    if text.trim().is_empty() {
+                        continue;
+                    }
+                    let s = slot;
+                    slot += 1;
+                    match etx.try_send(Event::Line { conn, slot: s, at: Instant::now(), text })
+                    {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                            if wtx.send((s, overloaded_line())).is_err() {
+                                break;
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => break,
+                    }
+                }
+            }
+        }
+        let _ = etx.send(Event::Closed { conn });
+        active.fetch_sub(1, Ordering::Relaxed);
+    });
+}
+
+/// Cross-connection flush: emit each response into its connection's
+/// writer queue. Returns the connections whose writer buffer was full or
+/// gone (the engine drops them — a client that stops draining responses
+/// must not stall everyone else).
+fn flush_to_conns(
+    backend: &mut dyn Serving,
+    batcher: &mut CrossBatcher<Queued>,
+    trigger: FlushTrigger,
+    cfg: &ServerCfg,
+    stats: &mut LoopStats,
+    lat: &mut LatencyWindow,
+    conns: &HashMap<u64, SyncSender<(u64, String)>>,
+) -> Result<Vec<u64>> {
+    let dead = std::cell::RefCell::new(Vec::new());
+    let mut emit = |conn: u64, slot: u64, line: &Json| -> Result<()> {
+        if let Some(tx) = conns.get(&conn) {
+            if tx.try_send((slot, ser::to_string_compact(line))).is_err() {
+                dead.borrow_mut().push(conn);
+            }
+        }
+        Ok(())
+    };
+    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, &mut emit)?;
+    Ok(dead.into_inner())
+}
+
+/// `hashgnn serve --listen`: the concurrent front. Accepts up to
+/// `max_conns` connections at once (0 = unbounded), funnels every
+/// connection's lines through one bounded engine queue into the ONE
+/// shared [`CrossBatcher`] — so deduplication coalesces across
+/// connections — and answers each connection in its own request order
+/// via a slot-reordering writer thread. The backend never leaves the
+/// calling thread. Returns after a `shutdown` control op from any
+/// connection (drain, answer, exit) or when the listener dies.
+///
+/// `fault` injects the deterministic failure plan into every writer
+/// (shard workers use this; `None` serves cleanly).
+pub fn serve_concurrent(
+    listener: TcpListener,
+    backend: &mut dyn Serving,
+    cfg: &ServerCfg,
+    max_conns: usize,
+    fault: Option<FaultPlan>,
+) -> Result<LoopStats> {
+    let addr = listener.local_addr()?;
+    let fault = fault
+        .filter(|p| !p.is_empty())
+        .map(|p| Arc::new(Mutex::new(FaultState::new(p))));
+    let (etx, erx) = sync_channel::<Event>(cfg.queue_cap.max(1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let shed_io = Arc::new(AtomicU64::new(0));
+    let active = Arc::new(AtomicUsize::new(0));
+
+    // Accept thread: owns the listener, spawns a reader + writer pair
+    // per connection, registers it with the engine. The engine wakes it
+    // at shutdown with a dummy connection so `accept` observes `stop`.
+    {
+        let etx = etx.clone();
+        let stop = Arc::clone(&stop);
+        let shed = Arc::clone(&shed_io);
+        let active = Arc::clone(&active);
+        let fault = fault.clone();
+        let max_line = cfg.max_line_bytes;
+        std::thread::spawn(move || {
+            let mut next_conn = 0u64;
+            loop {
+                let (stream, peer) = match listener.accept() {
+                    Ok(x) => x,
+                    Err(_) => break,
+                };
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if max_conns > 0 && active.load(Ordering::Relaxed) >= max_conns {
+                    // Connection cap: shed loudly with one line, then close.
+                    shed.fetch_add(1, Ordering::Relaxed);
+                    let mut s = stream;
+                    let _ = writeln!(s, "{}", overloaded_line());
+                    let _ = s.shutdown(Shutdown::Both);
+                    continue;
+                }
+                let wstream = match stream.try_clone() {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                };
+                next_conn += 1;
+                let conn = next_conn;
+                active.fetch_add(1, Ordering::Relaxed);
+                let (wtx, wrx) = sync_channel::<(u64, String)>(WRITER_BACKLOG);
+                spawn_conn_writer(wstream, wrx, fault.clone());
+                if etx
+                    .send(Event::Open { conn, tx: wtx.clone(), peer: peer.to_string() })
+                    .is_err()
+                {
+                    break;
+                }
+                spawn_conn_reader(
+                    conn,
+                    stream,
+                    max_line,
+                    etx.clone(),
+                    wtx,
+                    Arc::clone(&shed),
+                    Arc::clone(&active),
+                );
+            }
+        });
+    }
+    drop(etx); // engine sees Disconnected once the accept thread and every reader are gone
+
+    let mut batcher: CrossBatcher<Queued> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
+    let mut stats = LoopStats::default();
+    let mut lat = LatencyWindow::new(LATENCY_WINDOW);
+    let mut conns: HashMap<u64, SyncSender<(u64, String)>> = HashMap::new();
+    let n_nodes = backend.n_nodes();
+    let owned = backend.owned_range();
+
+    macro_rules! engine_flush {
+        ($trigger:expr) => {{
+            let dead =
+                flush_to_conns(backend, &mut batcher, $trigger, cfg, &mut stats, &mut lat, &conns)?;
+            for c in dead {
+                if conns.remove(&c).is_some() {
+                    stats.dropped_conns += 1;
+                }
+            }
+        }};
+    }
+
+    'engine: loop {
+        let msg = if batcher.is_empty() {
+            match erx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => None,
+            }
+        } else {
+            let deadline = batcher.deadline().expect("non-empty queue has a deadline");
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match erx.recv_timeout(wait) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    engine_flush!(FlushTrigger::Budget);
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => None,
+            }
+        };
+        let (conn, slot, at, parsed) = match msg {
+            None => {
+                // Listener gone and every reader exited: drain and stop.
+                engine_flush!(FlushTrigger::Drain);
+                break;
+            }
+            Some(Event::Open { conn, tx, peer }) => {
+                eprintln!("[serve] connection {conn} from {peer}");
+                conns.insert(conn, tx);
+                continue;
+            }
+            Some(Event::Closed { conn }) => {
+                // Answer everything this connection still has in flight
+                // before its writer channel is dropped.
+                engine_flush!(FlushTrigger::Drain);
+                conns.remove(&conn);
+                continue;
+            }
+            Some(Event::TooLong { conn, slot }) => {
+                stats.requests += 1;
+                (
+                    conn,
+                    slot,
+                    Instant::now(),
+                    Line::Item(Pending::Fail { msg: LINE_TOO_LONG.into(), echo: None }),
+                )
+            }
+            Some(Event::Line { conn, slot, at, text }) => {
+                stats.requests += 1;
+                (conn, slot, at, parse_line(text.trim(), n_nodes, owned))
+            }
+        };
+        match parsed {
+            Line::Item(item) => {
+                let item = admit(item, batcher.len(), cfg.queue_cap, &mut stats);
+                let ids = item_ids(&item);
+                let full = batcher.push(Queued { conn, slot, at, item }, &ids, Instant::now());
+                if full {
+                    engine_flush!(FlushTrigger::Fill);
+                } else if batcher.should_flush(Instant::now()) {
+                    engine_flush!(FlushTrigger::Budget);
+                }
+            }
+            Line::Stats(echo) => {
+                let depth = batcher.len();
+                engine_flush!(FlushTrigger::Drain);
+                stats.responses += 1;
+                // Reader-side sheds live in the shared counter; fold them
+                // into the reported view (and the final return value).
+                let mut view = stats;
+                view.shed_overload += shed_io.load(Ordering::Relaxed);
+                let resp = with_echo(
+                    stats_response(backend, &view, batcher.stats(), &lat, depth, conns.len()),
+                    echo,
+                );
+                let lost = conns
+                    .get(&conn)
+                    .map(|tx| tx.try_send((slot, ser::to_string_compact(&resp))).is_err())
+                    .unwrap_or(false);
+                if lost && conns.remove(&conn).is_some() {
+                    stats.dropped_conns += 1;
+                }
+            }
+            Line::Shutdown(echo) => {
+                engine_flush!(FlushTrigger::Drain);
+                stats.responses += 1;
+                let resp = with_echo(
+                    Json::obj(vec![("op", Json::str("shutdown")), ("ok", Json::Bool(true))]),
+                    echo,
+                );
+                if let Some(tx) = conns.get(&conn) {
+                    let _ = tx.try_send((slot, ser::to_string_compact(&resp)));
+                }
+                break 'engine;
+            }
+        }
+    }
+
+    // Graceful teardown: stop accepting (nudge the blocked accept with a
+    // throwaway connection), drop every writer sender — each writer
+    // drains its buffered responses, then shuts its connection down,
+    // which also unblocks that connection's reader.
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    drop(conns);
+    stats.shed_overload += shed_io.load(Ordering::Relaxed);
+    stats.batch = batcher.stats();
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -446,27 +1176,35 @@ mod tests {
 
     #[test]
     fn parse_line_classifies_requests_controls_and_errors() {
-        match parse_line(r#"{"op": "embed", "nodes": [1, 2], "id": 7}"#, 10) {
+        let all = (0u32, 10u32);
+        match parse_line(r#"{"op": "embed", "nodes": [1, 2], "id": 7}"#, 10, all) {
             Line::Item(Pending::Req { req, echo }) => {
                 assert_eq!(req, Request::Embed(vec![1, 2]));
                 assert_eq!(echo, Some(Json::num(7.0)));
             }
             _ => panic!("expected a request"),
         }
-        assert!(matches!(parse_line(r#"{"op": "stats"}"#, 10), Line::Stats(None)));
-        assert!(matches!(parse_line(r#"{"op": "shutdown"}"#, 10), Line::Shutdown(None)));
+        assert!(matches!(parse_line(r#"{"op": "stats"}"#, 10, all), Line::Stats(None)));
+        assert!(matches!(parse_line(r#"{"op": "shutdown"}"#, 10, all), Line::Shutdown(None)));
         // Out-of-range id fails its own line at parse time.
-        match parse_line(r#"{"op": "embed", "nodes": [99]}"#, 10) {
+        match parse_line(r#"{"op": "embed", "nodes": [99]}"#, 10, all) {
             Line::Item(Pending::Fail { msg, .. }) => assert!(msg.contains("out of range")),
+            _ => panic!("expected a deferred failure"),
+        }
+        // A shard worker rejects ids outside its owned range per line.
+        match parse_line(r#"{"op": "embed", "nodes": [7]}"#, 10, (0, 5)) {
+            Line::Item(Pending::Fail { msg, .. }) => {
+                assert!(msg.contains("owned range"), "{msg}")
+            }
             _ => panic!("expected a deferred failure"),
         }
         // Malformed JSON and unknown ops likewise.
         assert!(matches!(
-            parse_line("not json", 10),
+            parse_line("not json", 10, all),
             Line::Item(Pending::Fail { .. })
         ));
         assert!(matches!(
-            parse_line(r#"{"op": "train"}"#, 10),
+            parse_line(r#"{"op": "train"}"#, 10, all),
             Line::Item(Pending::Fail { .. })
         ));
     }
@@ -477,5 +1215,56 @@ mod tests {
         assert_eq!(v.get("id").unwrap(), &Json::str("x"));
         let e = error_json("boom", None);
         assert!(e.get("error").is_ok() && e.opt("id").is_none());
+    }
+
+    #[test]
+    fn admit_sheds_data_requests_at_capacity_only() {
+        let mut stats = LoopStats::default();
+        let req = Pending::Req { req: Request::Embed(vec![1]), echo: Some(Json::num(1.0)) };
+        // Below the bound: passes through untouched.
+        match admit(req, 3, 4, &mut stats) {
+            Pending::Req { .. } => {}
+            _ => panic!("under capacity must admit"),
+        }
+        assert_eq!(stats.shed_overload, 0);
+        // At the bound: converted to an in-position overloaded error,
+        // echo preserved.
+        let req = Pending::Req { req: Request::Embed(vec![1]), echo: Some(Json::num(1.0)) };
+        match admit(req, 4, 4, &mut stats) {
+            Pending::Fail { msg, echo } => {
+                assert_eq!(msg, "overloaded");
+                assert_eq!(echo, Some(Json::num(1.0)));
+            }
+            _ => panic!("at capacity must shed"),
+        }
+        assert_eq!(stats.shed_overload, 1);
+        // Deferred failures pass through even at capacity.
+        let fail = Pending::Fail { msg: "x".into(), echo: None };
+        match admit(fail, 100, 4, &mut stats) {
+            Pending::Fail { msg, .. } => assert_eq!(msg, "x"),
+            _ => panic!("failures are never converted"),
+        }
+        assert_eq!(stats.shed_overload, 1);
+    }
+
+    #[test]
+    fn bounded_line_reader_discards_oversized_lines_in_position() {
+        let input = b"short\n0123456789ABCDEF_too_long\nnext\nlast".to_vec();
+        let mut r = std::io::BufReader::with_capacity(4, std::io::Cursor::new(input));
+        let mut buf = Vec::new();
+        assert!(matches!(read_bounded_line(&mut r, 8, &mut buf).unwrap(), RawLine::Line));
+        assert_eq!(buf, b"short");
+        buf.clear();
+        assert!(matches!(read_bounded_line(&mut r, 8, &mut buf).unwrap(), RawLine::TooLong));
+        assert!(buf.is_empty(), "oversized bytes are discarded, not buffered");
+        buf.clear();
+        assert!(matches!(read_bounded_line(&mut r, 8, &mut buf).unwrap(), RawLine::Line));
+        assert_eq!(buf, b"next", "the line after an oversized one survives");
+        buf.clear();
+        // Final unterminated line comes back like read_line's would.
+        assert!(matches!(read_bounded_line(&mut r, 8, &mut buf).unwrap(), RawLine::Line));
+        assert_eq!(buf, b"last");
+        buf.clear();
+        assert!(matches!(read_bounded_line(&mut r, 8, &mut buf).unwrap(), RawLine::Eof));
     }
 }

@@ -1,0 +1,490 @@
+//! Failure paths of the fault-tolerant serving stack, in-process:
+//!
+//! 1. load-shed responses arrive **in position** with exact counters —
+//!    over-long lines (`line_too_long`), blown per-request deadlines
+//!    (`deadline`), and admission-queue overflow (`overloaded`) — and
+//!    none of them ends the session;
+//! 2. graceful shutdown drains the pending cross-batcher (every queued
+//!    request is answered before the ack) and reports the drain count;
+//! 3. the concurrent TCP front answers N simultaneous connections
+//!    byte-identically to N sequential piped sessions, per connection,
+//!    in per-connection request order;
+//! 4. a [`RemoteRouter`] over worker sockets degrades to *partial*
+//!    service when one worker dies mid-flight — dead-shard ids answer
+//!    exactly `shard_unavailable`, live-shard ids keep serving
+//!    bit-identical bytes — and re-admits the worker after a passing
+//!    health probe;
+//! 5. corrupted and truncated worker responses (deterministic
+//!    [`FaultPlan`] injection) are retried on a fresh connection and
+//!    never served — damaged bytes cannot poison the session.
+//!
+//! Real `kill -9` process tests live in `tests/serve_workers.rs`; these
+//! use in-process workers (threads running [`serve_concurrent`]) so
+//! every ordinal in a fault plan is exactly reproducible.
+
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use hashgnn::cfg::{Coder, CodingCfg, GnnKind, OptimCfg};
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
+use hashgnn::runtime::native::spec::{FullBatchBuild, ReconBuild, SageMbBuild};
+use hashgnn::ser;
+use hashgnn::serve::server::{run_ndjson, serve_concurrent};
+use hashgnn::serve::{
+    FaultPlan, LoopStats, RemoteCfg, RemoteRouter, ServeOpts, ServeSession, ServerCfg, Serving,
+    ServingBundle,
+};
+use hashgnn::tasks::coding::{make_codes, Aux};
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn opts(threads: usize) -> ServeOpts {
+    ServeOpts { threads, cache_capacity: 64, seed: 5 }
+}
+
+fn recon_bundle() -> ServingBundle {
+    let m = ReconBuild {
+        name: "fp_recon".into(),
+        c: 4,
+        m: 3,
+        d_c: 5,
+        d_m: 6,
+        d_e: 2,
+        l: 2,
+        light: false,
+        batch: 3,
+        optim: OptimCfg::adamw_default(),
+    }
+    .manifest();
+    let store = ParamStore::init(&m, 4);
+    let graph = sbm(SbmCfg::new(30, 3, 6.0, 2.0), 11).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 3).unwrap(), 11).unwrap();
+    ServingBundle::new(m, &store, Some(codes), vec![], 30).unwrap()
+}
+
+fn sage_bundle() -> ServingBundle {
+    let build = SageMbBuild {
+        name: "fp_mb".into(),
+        coded: true,
+        link: false,
+        n: 60,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 3).unwrap(), 9).unwrap();
+    let store = ParamStore::init(&manifest, 13);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+fn fb_bundle() -> ServingBundle {
+    let build = FullBatchBuild {
+        name: "fp_fb".into(),
+        gnn: GnnKind::Gcn,
+        coded: true,
+        link: false,
+        n: 60,
+        n_classes: 4,
+        d_e: 6,
+        hidden: 8,
+        c: 4,
+        m: 5,
+        d_c: 6,
+        d_m: 7,
+        l: 2,
+        light: false,
+        e_train: 32,
+        e_pred: 48,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 4, 8.0, 2.0), 3).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 5).unwrap(), 3).unwrap();
+    let store = ParamStore::init(&manifest, 21);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+/// One piped session; responses as raw lines plus the exact counters.
+fn run_session_raw(
+    backend: &mut dyn Serving,
+    cfg: &ServerCfg,
+    input: &str,
+) -> (Vec<String>, LoopStats) {
+    let mut out: Vec<u8> = Vec::new();
+    let stats =
+        run_ndjson(backend, cfg, Cursor::new(input.as_bytes().to_vec()), &mut out).unwrap();
+    (String::from_utf8(out).unwrap().lines().map(String::from).collect(), stats)
+}
+
+/// One flush for the whole session (huge fill + huge budget): every
+/// response lands at a control-op drain, so counters are deterministic.
+fn one_flush_cfg() -> ServerCfg {
+    ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60), ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Load-shed responses in position, exact counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_line_is_shed_in_position_and_session_survives() {
+    let mut session = ServeSession::new(recon_bundle(), opts(1)).unwrap();
+    let cfg = ServerCfg { max_line_bytes: 64, ..one_flush_cfg() };
+    let input = format!(
+        "{}\n{}\n{}\n{}\n",
+        r#"{"op": "embed", "nodes": [1]}"#,
+        "x".repeat(200),
+        r#"{"op": "embed", "nodes": [3]}"#,
+        r#"{"op": "shutdown"}"#,
+    );
+    let (lines, stats) = run_session_raw(&mut session, &cfg, &input);
+    assert_eq!(lines.len(), 4, "one response per input line: {lines:?}");
+    let l0 = ser::parse(&lines[0]).unwrap();
+    assert!(l0.get("embeddings").is_ok(), "line before the oversized one serves normally");
+    let l1 = ser::parse(&lines[1]).unwrap();
+    assert_eq!(l1.get("error").unwrap().as_str().unwrap(), "line_too_long");
+    let l2 = ser::parse(&lines[2]).unwrap();
+    assert!(l2.get("embeddings").is_ok(), "line after the oversized one serves normally");
+    let l3 = ser::parse(&lines[3]).unwrap();
+    assert!(l3.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.responses, 3);
+    assert_eq!(stats.drained, 3, "both embeds and the shed answer at the shutdown drain");
+}
+
+#[test]
+fn zero_deadline_sheds_every_data_request_with_exact_counters() {
+    let mut session = ServeSession::new(recon_bundle(), opts(1)).unwrap();
+    let cfg = ServerCfg { deadline: Some(Duration::ZERO), ..one_flush_cfg() };
+    let input = concat!(
+        "{\"op\": \"embed\", \"nodes\": [1, 2]}\n",
+        "{\"op\": \"score\", \"edges\": [[0, 1]]}\n",
+        "{\"op\": \"stats\"}\n",
+        "{\"op\": \"shutdown\"}\n",
+    );
+    let (lines, stats) = run_session_raw(&mut session, &cfg, input);
+    assert_eq!(lines.len(), 4);
+    for line in &lines[..2] {
+        let v = ser::parse(line).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "deadline", "{line}");
+    }
+    let s = ser::parse(&lines[2]).unwrap();
+    assert_eq!(s.get("shed_deadline").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s.get("errors").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(s.get("drained_requests").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(stats.shed_deadline, 2);
+    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.responses, 2, "stats + shutdown still answer");
+}
+
+#[test]
+fn queue_overflow_sheds_overloaded_in_position() {
+    let mut session = ServeSession::new(recon_bundle(), opts(1)).unwrap();
+    let cfg = ServerCfg { queue_cap: 2, ..one_flush_cfg() };
+    let input = concat!(
+        "{\"op\": \"embed\", \"nodes\": [1]}\n",
+        "{\"op\": \"embed\", \"nodes\": [2]}\n",
+        "{\"op\": \"embed\", \"nodes\": [3]}\n",
+        "{\"op\": \"embed\", \"nodes\": [4]}\n",
+        "{\"op\": \"stats\"}\n",
+        "{\"op\": \"shutdown\"}\n",
+    );
+    let (lines, stats) = run_session_raw(&mut session, &cfg, input);
+    assert_eq!(lines.len(), 6);
+    assert!(ser::parse(&lines[0]).unwrap().get("embeddings").is_ok());
+    assert!(ser::parse(&lines[1]).unwrap().get("embeddings").is_ok());
+    for line in &lines[2..4] {
+        let v = ser::parse(line).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().as_str().unwrap(),
+            "overloaded",
+            "requests over the cap shed in their own position: {line}"
+        );
+    }
+    let s = ser::parse(&lines[4]).unwrap();
+    assert_eq!(s.get("shed_overload").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(
+        s.get("queue_depth").unwrap().as_usize().unwrap(),
+        4,
+        "stats snapshots the depth before its own drain"
+    );
+    assert_eq!(stats.shed_overload, 2);
+    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.responses, 4, "two embeds + stats + shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Graceful shutdown drains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shutdown_answers_pending_requests_before_the_ack() {
+    let mut session = ServeSession::new(recon_bundle(), opts(1)).unwrap();
+    let cfg = one_flush_cfg();
+    let input = "{\"op\": \"embed\", \"nodes\": [1, 2]}\n{\"op\": \"shutdown\"}\n";
+    let (lines, stats) = run_session_raw(&mut session, &cfg, input);
+    assert_eq!(lines.len(), 2);
+    assert!(
+        ser::parse(&lines[0]).unwrap().get("embeddings").is_ok(),
+        "the queued embed answers BEFORE the ack"
+    );
+    assert!(ser::parse(&lines[1]).unwrap().get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(stats.drained, 1);
+    assert_eq!(stats.batch.drain_flushes, 1);
+    assert_eq!(stats.responses, 2);
+    assert_eq!(stats.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Concurrent front vs sequential sessions: byte parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_connections_answer_byte_identically_to_sequential_sessions() {
+    let bundle = fb_bundle();
+    let cfg = ServerCfg {
+        max_batch: 1000,
+        max_delay: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let inputs: Vec<String> = vec![
+        concat!(
+            "{\"op\": \"embed\", \"nodes\": [0, 1, 2], \"id\": \"c1a\"}\n",
+            "{\"op\": \"score\", \"edges\": [[0, 1], [2, 3]]}\n",
+            "{\"op\": \"embed\", \"nodes\": [3]}\n",
+        )
+        .to_string(),
+        concat!(
+            "{\"op\": \"embed\", \"nodes\": [2, 3, 4]}\n",
+            "{\"op\": \"classes\", \"nodes\": [5, 0]}\n",
+            "{\"op\": \"score\", \"edges\": [[4, 5]]}\n",
+        )
+        .to_string(),
+        concat!(
+            "{\"op\": \"embed\", \"nodes\": [0, 5, 9]}\n",
+            "{\"op\": \"embed\", \"nodes\": [59, 7]}\n",
+        )
+        .to_string(),
+    ];
+    // Reference: each client's stream through a fresh sequential session.
+    let mut expected = Vec::new();
+    for inp in &inputs {
+        let mut s = ServeSession::new(bundle.clone(), opts(1)).unwrap();
+        let (lines, _) = run_session_raw(&mut s, &cfg, inp);
+        expected.push(lines);
+    }
+    let n_data: u64 = inputs.iter().map(|i| i.lines().count() as u64).sum();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Clients race each other; each reads exactly one response per line.
+    let handles: Vec<_> = inputs
+        .iter()
+        .cloned()
+        .map(|inp| {
+            std::thread::spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                sock.write_all(inp.as_bytes()).unwrap();
+                sock.flush().unwrap();
+                let n = inp.lines().count();
+                let mut r = BufReader::new(sock);
+                let mut got = Vec::new();
+                for _ in 0..n {
+                    let mut line = String::new();
+                    assert!(r.read_line(&mut line).unwrap() > 0, "server closed early");
+                    got.push(line.trim_end().to_string());
+                }
+                got
+            })
+        })
+        .collect();
+    // Coordinator: wait for every client, then shut the server down.
+    let coord = std::thread::spawn(move || {
+        let results: Vec<Vec<String>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+        let mut ack = String::new();
+        BufReader::new(sock).read_line(&mut ack).unwrap();
+        (results, ack)
+    });
+    // The engine (and the backend) stay on THIS thread: no Send bound.
+    let mut session = ServeSession::new(bundle, opts(1)).unwrap();
+    let stats = serve_concurrent(listener, &mut session, &cfg, 0, None).unwrap();
+    let (results, ack) = coord.join().unwrap();
+
+    assert!(ser::parse(ack.trim()).unwrap().get("ok").unwrap().as_bool().unwrap());
+    for (got, want) in results.iter().zip(&expected) {
+        assert_eq!(got, want, "concurrent responses must be byte-identical to sequential");
+    }
+    assert_eq!(stats.requests, n_data + 1, "every data line + the shutdown");
+    assert_eq!(stats.responses, n_data + 1);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shed_overload, 0);
+    assert_eq!(stats.dropped_conns, 0);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Remote router: partial service + health-check re-admission
+// ---------------------------------------------------------------------------
+
+fn spawn_worker(
+    listener: TcpListener,
+    bundle: ServingBundle,
+    fault: Option<FaultPlan>,
+) -> std::thread::JoinHandle<LoopStats> {
+    let cfg = ServerCfg {
+        max_batch: 1000,
+        max_delay: Duration::from_millis(2),
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let mut session = ServeSession::new(bundle, opts(1)).unwrap();
+        serve_concurrent(listener, &mut session, &cfg, 0, fault).unwrap()
+    })
+}
+
+fn shutdown_worker(addr: std::net::SocketAddr) {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    let mut ack = String::new();
+    let _ = BufReader::new(sock).read_line(&mut ack);
+}
+
+fn worker_up(router: &RemoteRouter, i: usize) -> bool {
+    router.stats_json().get("workers").unwrap().as_arr().unwrap()[i]
+        .get("up")
+        .unwrap()
+        .as_bool()
+        .unwrap()
+}
+
+#[test]
+fn dead_worker_degrades_to_partial_service_and_readmits_after_health_check() {
+    let bundle = sage_bundle();
+    let shards = bundle.split_shards(2).unwrap(); // [0, 30) and [30, 60)
+    let la = TcpListener::bind("127.0.0.1:0").unwrap();
+    let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+    let (aa, ab) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+    let wa = spawn_worker(la, shards[0].clone(), None);
+    // Worker B's response ordinals: #1 handshake, #2 first embed; then
+    // #3/#4 are DROPPED — with retries=1 that exhausts the budget and
+    // marks B down. #5 (the health probe) and later answer normally.
+    let wb = spawn_worker(
+        lb,
+        shards[1].clone(),
+        Some(FaultPlan::parse("drop:3,drop:4").unwrap()),
+    );
+    let rcfg = RemoteCfg {
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_millis(400),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+        health_every: Duration::ZERO, // re-probe on every routing decision
+        max_line_bytes: 1 << 20,
+    };
+    let mut router = RemoteRouter::connect(&[aa.to_string(), ab.to_string()], rcfg).unwrap();
+    let mut local = ServeSession::new(bundle.clone(), opts(1)).unwrap();
+    let ids: Vec<u32> = vec![0, 29, 30, 59, 15, 45];
+    let d = router.embed_dim();
+
+    // Full fleet: served bytes are identical to the local session —
+    // f32 → shortest-round-trip text → f32 is exact.
+    let want = local.embed_nodes(&ids).unwrap();
+    let got = router.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&got, &want), "remote bytes must equal local bytes");
+
+    // B drops both attempts: partial service. Dead-shard ids answer
+    // exactly `shard_unavailable`; live-shard rows stay bit-identical.
+    let part = router.embed_nodes_partial(&ids).unwrap();
+    for (k, &id) in ids.iter().enumerate() {
+        if id < 30 {
+            assert!(!part.failed.contains_key(&id), "live shard must keep serving id {id}");
+            assert!(bits_equal(&part.rows[k * d..(k + 1) * d], &want[k * d..(k + 1) * d]));
+        } else {
+            assert_eq!(part.failed.get(&id).unwrap(), "shard_unavailable");
+        }
+    }
+    assert!(!worker_up(&router, 1), "exhausted retries must mark the worker down");
+    assert!(worker_up(&router, 0));
+
+    // Next call probes B (health_every = 0), the probe answers, and the
+    // worker is re-admitted: full service, still bit-identical.
+    let again = router.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&again, &want), "re-admitted worker must serve the same bytes");
+    assert!(worker_up(&router, 1), "a passing health check re-admits the worker");
+
+    // Classes route worker-side (the head lives with the parameters).
+    let (_, remote_classes) = router.classes_for_ids(&ids).unwrap();
+    let (_, local_classes) = local.predict_classes(&ids).unwrap();
+    assert_eq!(remote_classes, local_classes);
+
+    shutdown_worker(aa);
+    shutdown_worker(ab);
+    wa.join().unwrap();
+    wb.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Damaged responses are retried, never served
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_and_truncated_responses_are_retried_on_a_fresh_connection() {
+    let bundle = sage_bundle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // #1 handshake; #2 corrupted (unparseable JSON, framing intact);
+    // #4 truncated (half a line, no newline — the client read times out).
+    let w = spawn_worker(
+        listener,
+        bundle.clone(),
+        Some(FaultPlan::parse("corrupt:2,truncate:4").unwrap()),
+    );
+    let rcfg = RemoteCfg {
+        connect_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_millis(400),
+        retries: 2,
+        backoff: Duration::from_millis(5),
+        health_every: Duration::ZERO,
+        max_line_bytes: 1 << 20,
+    };
+    let mut router = RemoteRouter::connect(&[addr.to_string()], rcfg).unwrap();
+    let mut local = ServeSession::new(bundle, opts(1)).unwrap();
+    let ids: Vec<u32> = vec![3, 7, 3, 59];
+    let want = local.embed_nodes(&ids).unwrap();
+
+    // Corrupt response #2 fails the parse, tears down the pooled
+    // connection, and the retry (#3, clean) serves exact bytes.
+    let got = router.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&got, &want), "a corrupted response must never reach the caller");
+
+    // Truncated response #4 has no newline: the bounded read times out,
+    // the retry (#5, clean) serves exact bytes on a fresh connection.
+    let got2 = router.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&got2, &want), "a torn response must never reach the caller");
+
+    assert!(worker_up(&router, 0), "transient damage must not permanently bench the worker");
+    shutdown_worker(addr);
+    w.join().unwrap();
+}

@@ -318,7 +318,7 @@ fn persistent_loop_survives_a_mixed_session_with_exact_counters() {
     let mut session = ServeSession::new(bundle.clone(), opts(1)).unwrap();
     // Huge budget + huge fill: the whole session flushes once, at the
     // stats drain, which makes every counter deterministic.
-    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60) };
+    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60), ..Default::default() };
     let lines = run_session(&mut session, &cfg, SESSION_INPUT);
     assert_eq!(lines.len(), 7, "one response line per input line");
 
@@ -369,7 +369,7 @@ fn persistent_loop_survives_a_mixed_session_with_exact_counters() {
 #[test]
 fn sharded_backend_answers_a_session_byte_identically() {
     let bundle = fb_bundle();
-    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60) };
+    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60), ..Default::default() };
     let mut session = ServeSession::new(bundle.clone(), opts(1)).unwrap();
     let mut router = ShardRouter::new(bundle.split_shards(2).unwrap(), opts(1)).unwrap();
     let a = run_session(&mut session, &cfg, SESSION_INPUT);
@@ -395,7 +395,7 @@ fn fill_trigger_flushes_midstream() {
     let bundle = recon_bundle();
     let mut session = ServeSession::new(bundle, opts(1)).unwrap();
     // 3 distinct pending ids force a fill flush before EOF.
-    let cfg = ServerCfg { max_batch: 3, max_delay: Duration::from_secs(60) };
+    let cfg = ServerCfg { max_batch: 3, max_delay: Duration::from_secs(60), ..Default::default() };
     let input = concat!(
         "{\"op\": \"embed\", \"nodes\": [0, 1, 2]}\n",
         "{\"op\": \"embed\", \"nodes\": [3]}\n",
@@ -414,7 +414,7 @@ fn fill_trigger_flushes_midstream() {
 fn latency_budget_flushes_while_the_connection_stays_open() {
     let bundle = recon_bundle();
     let mut session = ServeSession::new(bundle, opts(1)).unwrap();
-    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_millis(20) };
+    let cfg = ServerCfg { max_batch: 1000, max_delay: Duration::from_millis(20), ..Default::default() };
     let (tx, rx) = channel::<std::io::Result<String>>();
     tx.send(Ok("{\"op\": \"embed\", \"nodes\": [5]}\n".to_string())).unwrap();
     // A slow follower: the first request's budget must expire long before
@@ -443,7 +443,7 @@ fn tcp_listener_serves_one_ndjson_connection() {
 
     let bundle = recon_bundle();
     let mut session = ServeSession::new(bundle, opts(1)).unwrap();
-    let cfg = ServerCfg { max_batch: 8, max_delay: Duration::from_millis(5) };
+    let cfg = ServerCfg { max_batch: 8, max_delay: Duration::from_millis(5), ..Default::default() };
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
 

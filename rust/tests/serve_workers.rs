@@ -1,0 +1,226 @@
+//! Multi-process shard serving against REAL worker processes, end to
+//! end through the shipped binary (`CARGO_BIN_EXE_hashgnn`):
+//!
+//! 1. two `serve --shard-worker` processes over saved `HGNS0001` shard
+//!    files, a [`RemoteRouter`] in front — embeddings and classes are
+//!    **bit-identical** to the unsharded in-process session;
+//! 2. a worker rejects ids outside its owned range per line (the raw
+//!    socket session keeps serving afterwards);
+//! 3. `kill -9` one worker mid-fleet: the router degrades to partial
+//!    service — dead-shard ids answer exactly `shard_unavailable`,
+//!    live-shard ids keep their exact bytes;
+//! 4. restart the dead worker (fresh process, fresh kernel-assigned
+//!    port): a new router over the restarted fleet serves the full id
+//!    space bit-identically again.
+//!
+//! Workers bind `127.0.0.1:0` and advertise via `--port-file`, so the
+//! test never races a fixed port and never trips TIME_WAIT.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use hashgnn::cfg::{Coder, CodingCfg, OptimCfg};
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
+use hashgnn::runtime::native::spec::SageMbBuild;
+use hashgnn::ser;
+use hashgnn::serve::{
+    RemoteCfg, RemoteRouter, ServeOpts, ServeSession, Serving, ServingBundle,
+};
+use hashgnn::tasks::coding::{make_codes, Aux};
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn opts(threads: usize) -> ServeOpts {
+    ServeOpts { threads, cache_capacity: 64, seed: 5 }
+}
+
+fn tmpdir() -> PathBuf {
+    // Unique per process: parallel `cargo test` runs must not collide.
+    let dir = std::env::temp_dir().join(format!("hashgnn_serve_workers_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sage_bundle() -> ServingBundle {
+    let build = SageMbBuild {
+        name: "sw_mb".into(),
+        coded: true,
+        link: false,
+        n: 60,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 3).unwrap(), 9).unwrap();
+    let store = ParamStore::init(&manifest, 13);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+/// Spawn one shard worker on a kernel-assigned port; return the child
+/// and the address it advertised through `--port-file`.
+fn spawn_worker(shard: &Path, tag: &str) -> (Child, String) {
+    let port_file = tmpdir().join(format!("{tag}.port"));
+    let _ = std::fs::remove_file(&port_file);
+    let child = Command::new(env!("CARGO_BIN_EXE_hashgnn"))
+        .args([
+            "serve",
+            "--shard-worker",
+            "--listen",
+            "127.0.0.1:0",
+            "--port-file",
+            port_file.to_str().unwrap(),
+            "--bundle",
+            shard.to_str().unwrap(),
+            "--max-delay-ms",
+            "2",
+            "--threads",
+            "1",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn shard worker");
+    wait_for_port_file(child, &port_file)
+}
+
+/// Block until the worker writes its bound address (or dies trying).
+fn wait_for_port_file(mut child: Child, port_file: &Path) -> (Child, String) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(text) = std::fs::read_to_string(port_file) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() {
+                return (child, addr);
+            }
+        }
+        if let Some(status) = child.try_wait().unwrap() {
+            panic!("shard worker exited before binding: {status}");
+        }
+        assert!(Instant::now() < deadline, "worker never wrote {}", port_file.display());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn rcfg() -> RemoteCfg {
+    RemoteCfg {
+        connect_timeout: Duration::from_secs(5),
+        request_timeout: Duration::from_secs(5),
+        retries: 1,
+        backoff: Duration::from_millis(20),
+        health_every: Duration::ZERO,
+        ..Default::default()
+    }
+}
+
+fn worker_up(router: &RemoteRouter, i: usize) -> bool {
+    router.stats_json().get("workers").unwrap().as_arr().unwrap()[i]
+        .get("up")
+        .unwrap()
+        .as_bool()
+        .unwrap()
+}
+
+/// One raw NDJSON exchange on a fresh socket; returns the response line.
+fn raw_request(addr: &str, line: &str) -> String {
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.write_all(line.as_bytes()).unwrap();
+    sock.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    BufReader::new(sock).read_line(&mut resp).unwrap();
+    resp.trim_end().to_string()
+}
+
+#[test]
+fn real_worker_processes_survive_kill_and_restart() {
+    let bundle = sage_bundle();
+    let dir = tmpdir();
+    let shard_paths: Vec<PathBuf> = bundle
+        .split_shards(2)
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let p = dir.join(format!("sw.shard-{i}-of-2"));
+            s.save(&p).unwrap();
+            p
+        })
+        .collect();
+    let (mut w0, addr0) = spawn_worker(&shard_paths[0], "w0");
+    let (mut w1, addr1) = spawn_worker(&shard_paths[1], "w1");
+
+    let ids: Vec<u32> = vec![0, 29, 30, 59, 15, 45];
+    let mut local = ServeSession::new(bundle.clone(), opts(1)).unwrap();
+    let want = local.embed_nodes(&ids).unwrap();
+    let d = local.embed_dim();
+
+    // --- full fleet: byte parity through two real processes ---
+    let mut router = RemoteRouter::connect(&[addr0.clone(), addr1.clone()], rcfg()).unwrap();
+    let got = router.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&got, &want), "sharded processes must serve the local bytes");
+    let (_, remote_classes) = router.classes_for_ids(&ids).unwrap();
+    let (_, local_classes) = local.predict_classes(&ids).unwrap();
+    assert_eq!(remote_classes, local_classes);
+
+    // --- a worker polices its owned range, and the session survives ---
+    let resp = raw_request(&addr1, r#"{"op": "embed", "nodes": [0]}"#);
+    let msg = ser::parse(&resp).unwrap();
+    let err = msg.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        err.contains("owned range [30, 60)"),
+        "worker 1 must reject id 0 with its owned range, got: {resp}"
+    );
+    let resp = raw_request(&addr1, r#"{"op": "embed", "nodes": [30]}"#);
+    assert!(
+        ser::parse(&resp).unwrap().get("embeddings").is_ok(),
+        "the rejection must not poison the worker: {resp}"
+    );
+
+    // --- kill -9 worker 0: partial service, exact bytes for the rest ---
+    w0.kill().unwrap();
+    w0.wait().unwrap();
+    let part = router.embed_nodes_partial(&ids).unwrap();
+    for (k, &id) in ids.iter().enumerate() {
+        if id < 30 {
+            assert_eq!(part.failed.get(&id).unwrap(), "shard_unavailable");
+        } else {
+            assert!(!part.failed.contains_key(&id), "live shard must keep serving id {id}");
+            assert!(
+                bits_equal(&part.rows[k * d..(k + 1) * d], &want[k * d..(k + 1) * d]),
+                "live-shard bytes must not change while the fleet is degraded"
+            );
+        }
+    }
+    assert!(!worker_up(&router, 0), "killed worker must be marked down");
+    assert!(worker_up(&router, 1));
+
+    // --- restart on a fresh port: a new fleet serves everything again ---
+    let (mut w0b, addr0b) = spawn_worker(&shard_paths[0], "w0b");
+    let mut revived = RemoteRouter::connect(&[addr0b, addr1], rcfg()).unwrap();
+    let again = revived.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&again, &want), "restarted fleet must serve the exact original bytes");
+
+    w0b.kill().unwrap();
+    w0b.wait().unwrap();
+    w1.kill().unwrap();
+    w1.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
