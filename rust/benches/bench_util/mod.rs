@@ -2,15 +2,20 @@
 //! the offline crate set; these binaries use `harness = false` and print
 //! the paper-shaped tables directly).
 //!
-//! `HASHGNN_QUICK=1` shrinks every sweep for smoke runs; the default
-//! settings regenerate the full table/figure shapes.
+//! `HASHGNN_QUICK=1` (or passing `--quick` to the bench binary, e.g.
+//! `cargo bench --bench perf_hotpath -- --quick`) shrinks every sweep
+//! for smoke runs; the default settings regenerate the full
+//! table/figure shapes.
 
 #![allow(dead_code)]
 
 use std::time::Instant;
 
-/// True when `HASHGNN_QUICK=1` (CI / smoke mode).
+/// True when `HASHGNN_QUICK=1` or `--quick` was passed (CI / smoke mode).
 pub fn quick() -> bool {
+    if std::env::args().any(|a| a == "--quick") {
+        return true;
+    }
     std::env::var("HASHGNN_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 

@@ -6,6 +6,13 @@
 //! (quickselect vs full sort), code gathering, neighbor sampling, and the
 //! end-to-end train step with the batch pipeline on vs off.
 //!
+//! Kernel before/after rows (docs/PERFORMANCE.md): scalar-reference vs
+//! register-tiled dense matmul, unfused gather→decode→linear vs the
+//! fused [`ops::codebook_linear_fwd`] kernel, scalar vs column-tiled CSR
+//! SpMM — each pair asserted bit-identical on every run — plus the
+//! sharded serving flush walked sequentially vs fanned out in parallel
+//! (p50/p99 per-flush latency, bytes asserted identical).
+//!
 //! Besides the stdout table, writes machine-readable
 //! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
 //! tracked across PRs. Also asserts the encode engine's determinism
@@ -16,17 +23,44 @@ mod bench_util;
 use std::sync::Arc;
 
 use bench_util::Samples;
-use hashgnn::cfg::{CodingCfg, EncodeCfg};
+use hashgnn::cfg::{CodingCfg, EncodeCfg, OptimCfg};
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::graph::NeighborSampler;
 use hashgnn::lsh::{self, median_in_place, Threshold};
 use hashgnn::params::ParamStore;
 use hashgnn::report::Table;
 use hashgnn::rng::{Rng, Xoshiro256pp};
+use hashgnn::runtime::native::ops;
+use hashgnn::runtime::native::spec::SageMbBuild;
 use hashgnn::runtime::Engine;
 use hashgnn::ser::{self, Json};
+use hashgnn::serve::{ServeOpts, ServingBundle, ShardRouter};
 use hashgnn::tasks::sage::{self, Features, SageTask};
 use hashgnn::train::{self, TrainOpts};
+
+/// Textbook triple-loop matmul with the same ascending-`k` reduction
+/// order as the tiled kernel — the "before" reference the tiled rows are
+/// compared (and bit-checked) against.
+fn scalar_matmul(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
+    for r in 0..n {
+        for o in 0..d_out {
+            let mut acc = 0.0f32;
+            for k in 0..d_in {
+                acc += x[r * d_in + k] * w[k * d_out + o];
+            }
+            out[r * d_out + o] = acc;
+        }
+    }
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Percentile over a sorted sample (nearest-rank on the sorted slice).
+fn percentile(sorted: &[f64], p: usize) -> f64 {
+    sorted[(sorted.len() - 1) * p / 100]
+}
 
 fn main() -> hashgnn::Result<()> {
     bench_util::banner("perf_hotpath", "§Perf microbenches (EXPERIMENTS.md)");
@@ -164,6 +198,185 @@ fn main() -> hashgnn::Result<()> {
         1.0 / s.median(),
     );
 
+    // ---- L3: dense matmul, scalar reference vs register-tiled -----------
+    let (mm_n, d_in, d_out) = (bench_util::pick(1024usize, 256), 128usize, 128usize);
+    let mut krng = Xoshiro256pp::seed_from_u64(21);
+    let x: Vec<f32> = (0..mm_n * d_in).map(|_| krng.normal() as f32).collect();
+    let w: Vec<f32> = (0..d_in * d_out).map(|_| krng.normal() as f32).collect();
+    let gflop = (2 * mm_n * d_in * d_out) as f64 / 1e9;
+    let mut out_ref = vec![0.0f32; mm_n * d_out];
+    let s = Samples::collect(reps, || scalar_matmul(&x, &w, mm_n, d_in, d_out, &mut out_ref));
+    push_row(
+        &mut t,
+        &mut json_rows,
+        &format!("matmul {mm_n}x{d_in}x{d_out} (scalar reference)"),
+        "GFLOP/s",
+        gflop / s.median(),
+    );
+    let mut out_tiled = vec![0.0f32; mm_n * d_out];
+    for &threads in &thread_counts {
+        let s = Samples::collect(reps, || {
+            ops::matmul_fwd(&x, &w, mm_n, d_in, d_out, &mut out_tiled, threads);
+        });
+        push_row(
+            &mut t,
+            &mut json_rows,
+            &format!("matmul {mm_n}x{d_in}x{d_out} (tiled, threads={threads})"),
+            "GFLOP/s",
+            gflop / s.median(),
+        );
+        assert!(
+            bits_equal(&out_ref, &out_tiled),
+            "tiled matmul diverged from the scalar reference at threads={threads}"
+        );
+    }
+
+    // ---- L3: codebook decode, unfused pipeline vs fused kernel ----------
+    let (dn, m, c, d_c, d_dec) = (bench_util::pick(8192usize, 2048), 16usize, 64usize, 64usize, 64usize);
+    let books: Vec<f32> = (0..m * c * d_c).map(|_| krng.normal() as f32).collect();
+    let dcodes: Vec<i32> =
+        (0..dn * m).map(|_| (krng.next_u64() % c as u64) as i32).collect();
+    let dw: Vec<f32> = (0..d_c * d_dec).map(|_| krng.normal() as f32).collect();
+    let db: Vec<f32> = (0..d_dec).map(|_| krng.normal() as f32).collect();
+    let mut gathered = vec![0.0f32; dn * d_c];
+    let mut out_unfused = vec![0.0f32; dn * d_dec];
+    let s = Samples::collect(reps, || {
+        ops::codebook_fwd(&books, &dcodes, dn, m, c, d_c, &mut gathered, 1);
+        ops::linear_fwd(&gathered, &dw, &db, dn, d_c, d_dec, true, &mut out_unfused, 1);
+    });
+    push_row(
+        &mut t,
+        &mut json_rows,
+        &format!("codebook decode {dn}x{m} (unfused gather+linear)"),
+        "Mrows/s",
+        dn as f64 / s.median() / 1e6,
+    );
+    let mut out_fused = vec![0.0f32; dn * d_dec];
+    let s = Samples::collect(reps, || {
+        ops::codebook_linear_fwd(
+            &books, &dcodes, dn, m, c, d_c, None, &dw, &db, d_dec, true, &mut out_fused, 1,
+        );
+    });
+    push_row(
+        &mut t,
+        &mut json_rows,
+        &format!("codebook decode {dn}x{m} (fused kernel)"),
+        "Mrows/s",
+        dn as f64 / s.median() / 1e6,
+    );
+    assert!(
+        bits_equal(&out_unfused, &out_fused),
+        "fused codebook decode diverged from the unfused pipeline"
+    );
+
+    // ---- L3: CSR SpMM, scalar reference vs column-tiled -----------------
+    let spmm_d = 32usize;
+    let sx: Vec<f32> = (0..n * spmm_d).map(|_| krng.normal() as f32).collect();
+    let adj = g.adj();
+    let mut spmm_ref = vec![0.0f32; n * spmm_d];
+    let s = Samples::collect(reps, || {
+        for r in 0..n {
+            let orow = &mut spmm_ref[r * spmm_d..(r + 1) * spmm_d];
+            orow.fill(0.0);
+            for (&j, &v) in adj.row_indices(r).iter().zip(adj.row_values(r)) {
+                let xrow = &sx[j as usize * spmm_d..(j as usize + 1) * spmm_d];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        }
+    });
+    push_row(
+        &mut t,
+        &mut json_rows,
+        &format!("spmm {n}x{spmm_d} (scalar reference)"),
+        "Mrows/s",
+        n as f64 / s.median() / 1e6,
+    );
+    let mut spmm_tiled = vec![0.0f32; n * spmm_d];
+    let s = Samples::collect(reps, || {
+        adj.spmm_row_major(0..n, &sx, spmm_d, &mut spmm_tiled);
+    });
+    push_row(
+        &mut t,
+        &mut json_rows,
+        &format!("spmm {n}x{spmm_d} (column-tiled)"),
+        "Mrows/s",
+        n as f64 / s.median() / 1e6,
+    );
+    assert!(
+        bits_equal(&spmm_ref, &spmm_tiled),
+        "tiled SpMM diverged from the scalar reference"
+    );
+
+    // ---- serving: sharded flush, sequential walk vs parallel fan-out ----
+    // Fresh caches per mode and disjoint ids per flush, so every flush
+    // pays the full miss path through all four shards; the only variable
+    // is the dispatch strategy. Bytes are asserted identical.
+    let sn = bench_util::pick(4096usize, 1024);
+    let fq = bench_util::pick(256usize, 64);
+    let flushes = bench_util::pick(12usize, 6);
+    let n_shards = 4usize;
+    let build = SageMbBuild {
+        name: "ph_fanout".into(),
+        coded: true,
+        link: false,
+        n: sn,
+        n_classes: 8,
+        d_e: 16,
+        hidden: 32,
+        batch: 64,
+        k1: 5,
+        k2: 5,
+        c: 16,
+        m: 32,
+        d_c: 32,
+        d_m: 32,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let sg = sbm(SbmCfg::new(sn, 8, 12.0, 2.0), 13)?;
+    let scodes = lsh::encode_with(sg.adj(), coding, Threshold::Median, 11, EncodeCfg::default())?;
+    let store = ParamStore::init(&manifest, 17);
+    let bundle = ServingBundle::new(manifest, &store, Some(scodes), sg.undirected_edges(), sn)?;
+    let mut seq_bytes: Vec<Vec<u32>> = Vec::new();
+    let mut mode_p50 = [0.0f64; 2];
+    for (mi, fanout) in [false, true].into_iter().enumerate() {
+        let mut router = ShardRouter::new(
+            bundle.split_shards(n_shards)?,
+            ServeOpts { threads: 1, cache_capacity: 2 * fq, seed: 11, fanout },
+        )?;
+        let mut lat_us: Vec<f64> = Vec::with_capacity(flushes);
+        for f in 0..flushes {
+            let fids: Vec<u32> = (0..fq).map(|i| ((f * fq + i) % sn) as u32).collect();
+            let (out, dt) = bench_util::timed(|| router.embed_nodes(&fids));
+            let bits: Vec<u32> = out?.iter().map(|v| v.to_bits()).collect();
+            if fanout {
+                assert_eq!(
+                    bits, seq_bytes[f],
+                    "parallel fan-out served different bytes than the sequential walk"
+                );
+            } else {
+                seq_bytes.push(bits);
+            }
+            lat_us.push(dt * 1e6);
+        }
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mode_p50[mi] = percentile(&lat_us, 50);
+        let mode = if fanout { "parallel" } else { "sequential" };
+        for p in [50usize, 99] {
+            push_row(
+                &mut t,
+                &mut json_rows,
+                &format!("shard flush ({n_shards} shards, {mode})"),
+                &format!("p{p} us/flush"),
+                percentile(&lat_us, p),
+            );
+        }
+    }
+
     // ---- e2e: train step, pipeline on vs off ----------------------------
     // With no artifacts present the Auto backend resolves to the native
     // engine, so this section now always runs offline.
@@ -222,6 +435,10 @@ fn main() -> hashgnn::Result<()> {
         (
             "encode_speedup_engine_vs_bitbybit",
             Json::num(if bitbybit_rate > 0.0 { engine_best / bitbybit_rate } else { 0.0 }),
+        ),
+        (
+            "shard_flush_p50_speedup_par_vs_seq",
+            Json::num(if mode_p50[1] > 0.0 { mode_p50[0] / mode_p50[1] } else { 0.0 }),
         ),
         ("rows", Json::Arr(json_rows)),
     ]);

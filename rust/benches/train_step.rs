@@ -239,7 +239,7 @@ fn main() -> hashgnn::Result<()> {
                     // exactly the configured hit rate (prewarm untimed).
                     let mut session = ServeSession::new(
                         bundle.clone(),
-                        ServeOpts { threads, cache_capacity: 2 * q, seed: 11 },
+                        ServeOpts { threads, cache_capacity: 2 * q, seed: 11, ..Default::default() },
                     )?;
                     let warm = (hit * q as f64).round() as usize;
                     if warm > 0 {

@@ -447,6 +447,11 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
         .opt("threads", "0", "compute threads (0 = all cores; never changes any served bit)")
         .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
         .opt("seed", "7", "fan-out sampling seed (minibatch models)")
+        .flag(
+            "no-fanout",
+            "walk shard sub-requests sequentially instead of in parallel (bytes are \
+             identical either way; only latency changes)",
+        )
         .parse(argv)?;
     let paths = bundle_paths(&a.get("bundle"));
     let mut backend = load_backend(
@@ -455,6 +460,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
             threads: a.get_usize_auto("threads")?,
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
+            fanout: !a.get_bool("no-fanout"),
         },
     )?;
     let session = backend.as_mut();
@@ -605,6 +611,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .opt("threads", "0", "compute threads (0 = all cores)")
     .opt("cache", "4096", "embedding-cache capacity in entries (0 disables)")
     .opt("seed", "7", "fan-out sampling seed (minibatch models)")
+    .flag(
+        "no-fanout",
+        "dispatch shard sub-requests sequentially instead of in parallel (local router) \
+         or unpipelined (--remote); served bytes are identical either way",
+    )
     .parse(argv)?;
     let listen = a.get("listen");
     let n_modes = [a.get_bool("oneshot"), a.get_bool("stdin"), !listen.is_empty()]
@@ -648,6 +659,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             backoff: Duration::from_millis(a.get_u64("backoff-ms")?),
             health_every: Duration::from_millis(a.get_u64("health-every-ms")?),
             max_line_bytes: a.get_usize("max-line-bytes")?,
+            fanout: !a.get_bool("no-fanout"),
         };
         let router = RemoteRouter::connect(&addrs, rcfg)?;
         eprintln!(
@@ -662,6 +674,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             threads: a.get_usize_auto("threads")?,
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
+            fanout: !a.get_bool("no-fanout"),
         };
         if a.get_bool("shard-worker") {
             load_worker_backend(&paths, opts)?

@@ -162,11 +162,17 @@ pub fn forward(
     Ok(DecCache { h0_raw, acts })
 }
 
-/// Inference-only decode: the same kernel sequence as [`forward`] (so the
-/// output is bit-identical for every thread count), but activations are
-/// dropped as soon as the next layer has consumed them — no cache, no
-/// `h0_raw`, nothing the reverse pass would need. This is the decode the
-/// serving path ([`crate::serve`]) runs per request.
+/// Inference-only decode: bit-identical to [`forward`] for every thread
+/// count, but activations are dropped as soon as the next layer has
+/// consumed them — no cache, no `h0_raw`, nothing the reverse pass would
+/// need. The gather-sum, the light variant's `W0` rescale, and the first
+/// MLP layer run as one fused kernel ([`ops::codebook_linear_fwd`]) so
+/// the `(n, d_c)` gathered matrix is never materialized; the fused kernel
+/// repeats the unfused per-element operation order exactly, so fusion
+/// does not change a single bit. This is the decode the serving path
+/// ([`crate::serve`]) runs per request. The training [`forward`] stays
+/// unfused — the reverse pass needs the intermediate activations the
+/// fusion exists to skip.
 pub fn forward_infer(
     dims: &DecoderDims,
     idx: &DecoderIdx,
@@ -183,13 +189,25 @@ pub fn forward_infer(
             dims.m
         )));
     }
-    let mut cur = vec![0.0f32; n * dims.d_c];
-    ops::codebook_fwd(params[idx.books], codes, n, dims.m, dims.c, dims.d_c, &mut cur, threads);
-    if let Some(w0) = idx.w0 {
-        ops::scale_cols(&mut cur, dims.d_c, params[w0], threads);
-    }
     let mlp_dims = dims.mlp_dims();
-    for i in 0..dims.l {
+    let (w1, b1) = idx.mlp[0];
+    let mut cur = vec![0.0f32; n * mlp_dims[1]];
+    ops::codebook_linear_fwd(
+        params[idx.books],
+        codes,
+        n,
+        dims.m,
+        dims.c,
+        dims.d_c,
+        idx.w0.map(|w0| params[w0]),
+        params[w1],
+        params[b1],
+        mlp_dims[1],
+        dims.l > 1,
+        &mut cur,
+        threads,
+    );
+    for i in 1..dims.l {
         let (w, b) = idx.mlp[i];
         let relu = i < dims.l - 1;
         let mut out = vec![0.0f32; n * mlp_dims[i + 1]];

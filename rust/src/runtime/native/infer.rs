@@ -451,7 +451,20 @@ pub fn demux_rows(
 /// call — rebuilding it per request would redo O(unique) work per
 /// pending request on the hot serving path.
 pub fn row_index(unique: &[u32]) -> std::collections::HashMap<u32, usize> {
-    unique.iter().enumerate().map(|(k, &id)| (id, k)).collect()
+    let mut map = std::collections::HashMap::with_capacity(unique.len());
+    row_index_into(unique, &mut map);
+    map
+}
+
+/// [`row_index`] into a caller-owned map — clears and refills, so a
+/// serving session can keep one map (and its grown table) alive across
+/// flushes instead of allocating a fresh one per flush.
+pub fn row_index_into(unique: &[u32], map: &mut std::collections::HashMap<u32, usize>) {
+    map.clear();
+    map.reserve(unique.len());
+    for (k, &id) in unique.iter().enumerate() {
+        map.insert(id, k);
+    }
 }
 
 /// [`demux_rows`] against a prebuilt [`row_index`].

@@ -48,7 +48,7 @@ pub mod gnn;
 pub mod infer;
 pub mod layers;
 pub mod ops;
-mod par;
+pub(crate) mod par;
 pub mod sage;
 pub mod spec;
 
@@ -638,6 +638,51 @@ mod tests {
         let mb = NativeModel::from_manifest(&tiny_clf_manifest()).unwrap();
         let any = Arc::new(crate::sparse::Csr::from_edges(50, &[(0, 1)]).unwrap());
         assert!(mb.bind_adjacency(any).is_err());
+    }
+
+    #[test]
+    fn fullbatch_transpose_is_computed_once_and_shared_across_steps() {
+        let m = spec::FullBatchBuild {
+            name: "t_fb_at".into(),
+            gnn: crate::cfg::GnnKind::Sgc,
+            coded: false,
+            link: false,
+            n: 8,
+            n_classes: 2,
+            d_e: 3,
+            hidden: 4,
+            c: 4,
+            m: 2,
+            d_c: 3,
+            d_m: 3,
+            l: 2,
+            light: false,
+            e_train: 4,
+            e_pred: 4,
+            optim: crate::cfg::OptimCfg::adamw_gnn(),
+        }
+        .manifest();
+        let model = NativeModel::from_manifest(&m).unwrap();
+        let adj = Arc::new(crate::sparse::Csr::from_edges(8, &[(0, 1), (1, 2), (2, 3)]).unwrap());
+        model.bind_adjacency(adj.clone()).unwrap();
+        // The structural transpose is precomputed at bind time and must
+        // be REUSED by every subsequent step — recomputing it per epoch
+        // would redo O(nnz) work on the full-batch hot path. Pointer
+        // identity (not equality) pins that down.
+        let bound = model.adj.get().expect("bound above");
+        assert!(Arc::ptr_eq(&bound.a, &adj), "bound matrix is the caller's Arc, not a copy");
+        let (a0, at0) = (Arc::as_ptr(&bound.a), Arc::as_ptr(&bound.at));
+        let mut store = ParamStore::init(&m, 9);
+        let labels = Tensor::i32(vec![8], vec![0, 1, 0, 1, 0, 1, 0, 1]).unwrap();
+        let mask = Tensor::f32(vec![8], vec![1.0; 8]).unwrap();
+        for _ in 0..3 {
+            let inputs = store.train_inputs(&[labels.clone(), mask.clone()]);
+            let outputs = model.train_step(&inputs, 1).unwrap();
+            store.absorb(outputs).unwrap();
+            let again = model.adj.get().expect("still bound");
+            assert_eq!(Arc::as_ptr(&again.a), a0, "adjacency must not be recomputed");
+            assert_eq!(Arc::as_ptr(&again.at), at0, "transpose must not be recomputed");
+        }
     }
 
     #[test]

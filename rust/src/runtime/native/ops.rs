@@ -8,6 +8,17 @@
 //! axis (weight/bias gradients, losses) partition the *gradient* rows or
 //! run single-threaded — never split the summation itself.
 //!
+//! The hot matmul-family kernels are register-tiled: output columns are
+//! processed in tiles of [`LANES`] with the tile's partial sums held in a
+//! stack accumulator array, so the compiler keeps them in one SIMD
+//! register across the whole reduction loop instead of re-loading the
+//! output row every iteration. Vectorization runs **across output
+//! elements** (different accumulators), never across a single element's
+//! reduction, so the per-element addition order is exactly the scalar
+//! kernel's and results stay bit-identical to the untiled form. The final
+//! `width % LANES` outputs run the same ascending reduction at partial
+//! width — the scalar-tail contract (see `docs/PERFORMANCE.md`).
+//!
 //! Kernels take explicit dims and several buffers; the argument counts
 //! and index-heavy reduction loops are the point, so the corresponding
 //! clippy style lints are allowed file-wide.
@@ -17,13 +28,68 @@ use crate::{Error, Result};
 
 use super::par::{join_all, par_rows};
 
+/// Register-tile width for the matmul-family kernels: 8 × f32 = one
+/// 256-bit vector. A tile's accumulators live in a `[f32; LANES]` array
+/// that never aliases the input slices, which is what lets rustc keep it
+/// in a register and vectorize the `LANES` independent FMA chains.
+pub const LANES: usize = 8;
+
+/// Row-blocking factor for [`grad_w`]: each block of `ROW_BLOCK` batch
+/// rows is swept once per column tile, so the strided `x` column reads
+/// and the `dz` rows stay L1-resident across tiles. Blocking only splits
+/// the ascending-`r` walk into consecutive runs — the per-element
+/// addition order is unchanged.
+const ROW_BLOCK: usize = 64;
+
+/// `orow = init (bias or zeros) + xrow @ w` for one output row — the
+/// shared register-tiled core of [`linear_fwd`] / [`matmul_fwd`] and the
+/// fused [`codebook_linear_fwd`]. `w` is `(d_in, d_out)` row-major with
+/// `d_in == xrow.len()`. Each column tile accumulates over `k` in
+/// ascending order from its init value, exactly like the scalar loop; the
+/// tail columns (`d_out % LANES`) do the same at partial width.
+#[inline]
+fn row_matmul_tiled(xrow: &[f32], w: &[f32], d_out: usize, init: Option<&[f32]>, orow: &mut [f32]) {
+    debug_assert_eq!(w.len(), xrow.len() * d_out);
+    debug_assert_eq!(orow.len(), d_out);
+    let mut o0 = 0;
+    while o0 + LANES <= d_out {
+        let mut acc = [0.0f32; LANES];
+        if let Some(b) = init {
+            acc.copy_from_slice(&b[o0..o0 + LANES]);
+        }
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wtile = &w[k * d_out + o0..k * d_out + o0 + LANES];
+            for j in 0..LANES {
+                acc[j] += xv * wtile[j];
+            }
+        }
+        orow[o0..o0 + LANES].copy_from_slice(&acc);
+        o0 += LANES;
+    }
+    if o0 < d_out {
+        let rem = d_out - o0;
+        let mut acc = [0.0f32; LANES];
+        if let Some(b) = init {
+            acc[..rem].copy_from_slice(&b[o0..]);
+        }
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wtail = &w[k * d_out + o0..k * d_out + d_out];
+            for (a, &wv) in acc[..rem].iter_mut().zip(wtail) {
+                *a += xv * wv;
+            }
+        }
+        orow[o0..].copy_from_slice(&acc[..rem]);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Linear layers
 // ---------------------------------------------------------------------------
 
 /// `out[r] = relu?(x[r] @ w + b)` — `x (n, d_in)`, `w (d_in, d_out)`,
 /// `b (d_out)`, `out (n, d_out)`. Rows are partitioned across threads;
-/// each output row accumulates over `k` in ascending order.
+/// each output element accumulates over `k` in ascending order inside a
+/// [`LANES`]-wide register tile (bit-identical to the scalar form).
 pub fn linear_fwd(
     x: &[f32],
     w: &[f32],
@@ -42,14 +108,8 @@ pub fn linear_fwd(
     par_rows(out, d_out, threads, |row0, rows| {
         for (i, orow) in rows.chunks_mut(d_out).enumerate() {
             let r = row0 + i;
-            orow.copy_from_slice(b);
             let xrow = &x[r * d_in..(r + 1) * d_in];
-            for (k, &xv) in xrow.iter().enumerate() {
-                let wrow = &w[k * d_out..(k + 1) * d_out];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
+            row_matmul_tiled(xrow, w, d_out, Some(b), orow);
             if relu {
                 for o in orow.iter_mut() {
                     if *o < 0.0 {
@@ -78,14 +138,8 @@ pub fn matmul_fwd(
     par_rows(out, d_out, threads, |row0, rows| {
         for (i, orow) in rows.chunks_mut(d_out).enumerate() {
             let r = row0 + i;
-            orow.fill(0.0);
             let xrow = &x[r * d_in..(r + 1) * d_in];
-            for (k, &xv) in xrow.iter().enumerate() {
-                let wrow = &w[k * d_out..(k + 1) * d_out];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
+            row_matmul_tiled(xrow, w, d_out, None, orow);
         }
     });
 }
@@ -162,7 +216,12 @@ pub fn relu_bwd_mask(dy: &mut [f32], y: &[f32], threads: usize) {
 }
 
 /// `dx (n, d_in) =|+= dz (n, d_out) @ wᵀ`. Rows of `dx` are partitioned;
-/// each entry is a sequential dot over `d_out`.
+/// each entry is a dot over `d_out` in ascending order. Entries are
+/// computed [`LANES`] at a time — `LANES` independent accumulator chains
+/// over the shared `dzrow` stream — which overlaps the FMA latency the
+/// one-dot-at-a-time form serializes on, without touching any single
+/// entry's reduction order. The `d_in % LANES` tail runs the same loop at
+/// partial width.
 pub fn matmul_wt(
     dz: &[f32],
     w: &[f32],
@@ -180,17 +239,26 @@ pub fn matmul_wt(
         for (i, xrow) in rows.chunks_mut(d_in).enumerate() {
             let r = row0 + i;
             let dzrow = &dz[r * d_out..(r + 1) * d_out];
-            for (k, xv) in xrow.iter_mut().enumerate() {
-                let wrow = &w[k * d_out..(k + 1) * d_out];
-                let mut acc = 0.0f32;
-                for (&g, &wv) in dzrow.iter().zip(wrow) {
-                    acc += g * wv;
+            let mut k0 = 0;
+            loop {
+                let width = LANES.min(d_in - k0);
+                if width == 0 {
+                    break;
                 }
-                if accumulate {
-                    *xv += acc;
-                } else {
-                    *xv = acc;
+                let mut acc = [0.0f32; LANES];
+                for (o, &g) in dzrow.iter().enumerate() {
+                    for (j, a) in acc[..width].iter_mut().enumerate() {
+                        *a += g * w[(k0 + j) * d_out + o];
+                    }
                 }
+                for (j, a) in acc[..width].iter().enumerate() {
+                    if accumulate {
+                        xrow[k0 + j] += *a;
+                    } else {
+                        xrow[k0 + j] = *a;
+                    }
+                }
+                k0 += width;
             }
         }
     });
@@ -212,16 +280,36 @@ pub fn grad_w(
     debug_assert_eq!(x.len(), n * d_in);
     debug_assert_eq!(dz.len(), n * d_out);
     debug_assert_eq!(dw.len(), d_in * d_out);
+    // Blocked over batch rows (L1 reuse of the strided x column and the
+    // dz rows) and register-tiled over output columns. Per element the
+    // accumulation is still `dw[k][o] += x[r][k]·dz[r][o]` for r
+    // ascending 0..n, with the same `xv != 0.0` skip as the scalar form
+    // (the skip is load-bearing for bit parity: adding a `−0.0` product
+    // would flip a `−0.0` partial sum to `+0.0`).
     par_rows(dw, d_out, threads, |k0, rows| {
         for (i, drow) in rows.chunks_mut(d_out).enumerate() {
             let k = k0 + i;
-            for r in 0..n {
-                let xv = x[r * d_in + k];
-                if xv != 0.0 {
-                    let dzrow = &dz[r * d_out..(r + 1) * d_out];
-                    for (d, &g) in drow.iter_mut().zip(dzrow) {
-                        *d += xv * g;
+            for r0 in (0..n).step_by(ROW_BLOCK) {
+                let r1 = (r0 + ROW_BLOCK).min(n);
+                let mut o0 = 0;
+                loop {
+                    let width = LANES.min(d_out - o0);
+                    if width == 0 {
+                        break;
                     }
+                    let mut acc = [0.0f32; LANES];
+                    acc[..width].copy_from_slice(&drow[o0..o0 + width]);
+                    for r in r0..r1 {
+                        let xv = x[r * d_in + k];
+                        if xv != 0.0 {
+                            let dztile = &dz[r * d_out + o0..r * d_out + o0 + width];
+                            for (a, &g) in acc[..width].iter_mut().zip(dztile) {
+                                *a += xv * g;
+                            }
+                        }
+                    }
+                    drow[o0..o0 + width].copy_from_slice(&acc[..width]);
+                    o0 += width;
                 }
             }
         }
@@ -436,6 +524,75 @@ pub fn codebook_bwd(
                 let brow = &mut book[code * d_c..(code + 1) * d_c];
                 for (b, &g) in brow.iter_mut().zip(drow) {
                     *b += g;
+                }
+            }
+        }
+    });
+}
+
+/// Fused §3.2 decode: `out[r] = relu?(b + (w0 ⊙ Σ_j books[j, codes[r, j], :]) @ w)`
+/// in one pass per row — the code-indexed gather+sum feeds the first MLP
+/// layer straight from a per-worker scratch row instead of materializing
+/// the full `(n, d_c)` gathered matrix and re-reading it in a second
+/// kernel. `w0` is the light decoder's optional per-column rescale.
+///
+/// Bit parity: each scratch element runs the exact ascending-`j` sum of
+/// [`codebook_fwd`], then the exact in-place rescale of
+/// [`super::ops::scale_cols`], and the matmul is the same
+/// [`row_matmul_tiled`] core [`linear_fwd`] uses — so the fused output is
+/// bit-identical to the unfused gather → scale → linear pipeline for
+/// every thread count (asserted in the tests below).
+///
+/// Caller must have validated codes (see [`validate_codes`]).
+pub fn codebook_linear_fwd(
+    books: &[f32],
+    codes: &[i32],
+    n: usize,
+    m: usize,
+    c: usize,
+    d_c: usize,
+    w0: Option<&[f32]>,
+    w: &[f32],
+    b: &[f32],
+    d_out: usize,
+    relu: bool,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(books.len(), m * c * d_c);
+    debug_assert_eq!(codes.len(), n * m);
+    debug_assert_eq!(w.len(), d_c * d_out);
+    debug_assert_eq!(b.len(), d_out);
+    debug_assert_eq!(out.len(), n * d_out);
+    if let Some(s) = w0 {
+        debug_assert_eq!(s.len(), d_c);
+    }
+    par_rows(out, d_out, threads, |row0, rows| {
+        // One gathered row of scratch per worker chunk, reused across all
+        // of the chunk's rows — no per-row (let alone per-batch)
+        // allocation on the serve hot path.
+        let mut e = vec![0.0f32; d_c];
+        for (i, orow) in rows.chunks_mut(d_out).enumerate() {
+            let r = row0 + i;
+            e.fill(0.0);
+            for j in 0..m {
+                let code = codes[r * m + j] as usize;
+                let brow = &books[(j * c + code) * d_c..(j * c + code + 1) * d_c];
+                for (o, &v) in e.iter_mut().zip(brow) {
+                    *o += v;
+                }
+            }
+            if let Some(s) = w0 {
+                for (v, &sv) in e.iter_mut().zip(s) {
+                    *v *= sv;
+                }
+            }
+            row_matmul_tiled(&e, w, d_out, Some(b), orow);
+            if relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
                 }
             }
         }
@@ -1045,6 +1202,178 @@ mod tests {
         assert!((fd - dp[1]).abs() < 1e-3, "fd {fd} vs {}", dp[1]);
     }
 
+    /// Straight-line scalar references for the tiled kernels — the exact
+    /// pre-tiling loops. The tiled forms must match them bit-for-bit at
+    /// every width (full tiles, partial tail, width < LANES).
+    mod reference {
+        pub fn linear_fwd(
+            x: &[f32],
+            w: &[f32],
+            b: &[f32],
+            n: usize,
+            d_in: usize,
+            d_out: usize,
+            relu: bool,
+            out: &mut [f32],
+        ) {
+            for r in 0..n {
+                let orow = &mut out[r * d_out..(r + 1) * d_out];
+                orow.copy_from_slice(b);
+                for k in 0..d_in {
+                    let xv = x[r * d_in + k];
+                    for (o, &wv) in orow.iter_mut().zip(&w[k * d_out..(k + 1) * d_out]) {
+                        *o += xv * wv;
+                    }
+                }
+                if relu {
+                    for o in orow.iter_mut() {
+                        if *o < 0.0 {
+                            *o = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        pub fn matmul_wt(
+            dz: &[f32],
+            w: &[f32],
+            n: usize,
+            d_in: usize,
+            d_out: usize,
+            accumulate: bool,
+            dx: &mut [f32],
+        ) {
+            for r in 0..n {
+                let dzrow = &dz[r * d_out..(r + 1) * d_out];
+                for k in 0..d_in {
+                    let mut acc = 0.0f32;
+                    for (&g, &wv) in dzrow.iter().zip(&w[k * d_out..(k + 1) * d_out]) {
+                        acc += g * wv;
+                    }
+                    if accumulate {
+                        dx[r * d_in + k] += acc;
+                    } else {
+                        dx[r * d_in + k] = acc;
+                    }
+                }
+            }
+        }
+
+        pub fn grad_w(x: &[f32], dz: &[f32], n: usize, d_in: usize, d_out: usize, dw: &mut [f32]) {
+            for k in 0..d_in {
+                let drow = &mut dw[k * d_out..(k + 1) * d_out];
+                for r in 0..n {
+                    let xv = x[r * d_in + k];
+                    if xv != 0.0 {
+                        for (d, &g) in drow.iter_mut().zip(&dz[r * d_out..(r + 1) * d_out]) {
+                            *d += xv * g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn lcg(seed: u64) -> impl FnMut() -> f32 {
+        let mut state = seed;
+        move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        }
+    }
+
+    #[test]
+    fn tiled_kernels_match_scalar_reference_at_all_tail_widths() {
+        // Widths straddling the LANES=8 tile: below one lane, exact
+        // multiples, and every interesting remainder. n=129 also makes
+        // grad_w's ROW_BLOCK=64 blocking hit a partial final block.
+        for &(d_in, d_out) in
+            &[(1usize, 1usize), (3, 5), (8, 8), (7, 9), (11, 16), (16, 23), (9, 24), (5, 31)]
+        {
+            let n = 129;
+            let mut next = lcg(0x5eed ^ (d_in * 100 + d_out) as u64);
+            let x: Vec<f32> = (0..n * d_in).map(|_| next()).collect();
+            let w: Vec<f32> = (0..d_in * d_out).map(|_| next()).collect();
+            let b: Vec<f32> = (0..d_out).map(|_| next()).collect();
+            let dz: Vec<f32> = (0..n * d_out).map(|_| next()).collect();
+
+            let mut want = vec![0.0f32; n * d_out];
+            reference::linear_fwd(&x, &w, &b, n, d_in, d_out, true, &mut want);
+            let mut got = vec![0.0f32; n * d_out];
+            linear_fwd(&x, &w, &b, n, d_in, d_out, true, &mut got, 1);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "linear_fwd tail mismatch at d_in={d_in} d_out={d_out}"
+            );
+            let mut got0 = vec![0.0f32; n * d_out];
+            matmul_fwd(&x, &w, n, d_in, d_out, &mut got0, 1);
+            let zeros = vec![0.0f32; d_out];
+            let mut want0 = vec![0.0f32; n * d_out];
+            reference::linear_fwd(&x, &w, &zeros, n, d_in, d_out, false, &mut want0);
+            assert!(got0.iter().zip(&want0).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let mut want_dx: Vec<f32> = (0..n * d_in).map(|_| next()).collect();
+            let mut got_dx = want_dx.clone();
+            reference::matmul_wt(&dz, &w, n, d_in, d_out, true, &mut want_dx);
+            matmul_wt(&dz, &w, n, d_in, d_out, true, &mut got_dx, 1);
+            assert!(
+                got_dx.iter().zip(&want_dx).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "matmul_wt tail mismatch at d_in={d_in} d_out={d_out}"
+            );
+
+            // Sprinkle exact zeros into x so the xv != 0.0 skip is hit.
+            let xz: Vec<f32> =
+                x.iter().enumerate().map(|(i, &v)| if i % 7 == 0 { 0.0 } else { v }).collect();
+            let mut want_dw = vec![0.0f32; d_in * d_out];
+            let mut got_dw = vec![0.0f32; d_in * d_out];
+            reference::grad_w(&xz, &dz, n, d_in, d_out, &mut want_dw);
+            grad_w(&xz, &dz, n, d_in, d_out, &mut got_dw, 1);
+            assert!(
+                got_dw.iter().zip(&want_dw).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "grad_w tail mismatch at d_in={d_in} d_out={d_out}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_codebook_linear_matches_unfused_pipeline_bitwise() {
+        // fused gather+scale+matmul vs codebook_fwd → scale_cols →
+        // linear_fwd, exact bytes, with and without w0/relu, across
+        // thread counts and a non-multiple-of-LANES d_out.
+        let (n, m, c, d_c, d_out) = (23usize, 4usize, 6usize, 13usize, 11usize);
+        let mut next = lcg(42);
+        let books: Vec<f32> = (0..m * c * d_c).map(|_| next()).collect();
+        let codes: Vec<i32> = (0..n * m).map(|i| ((i * 31 + 7) % c) as i32).collect();
+        let w: Vec<f32> = (0..d_c * d_out).map(|_| next()).collect();
+        let b: Vec<f32> = (0..d_out).map(|_| next()).collect();
+        let w0: Vec<f32> = (0..d_c).map(|_| next() + 1.0).collect();
+        validate_codes(&codes, c).unwrap();
+        for w0_opt in [None, Some(&w0[..])] {
+            for relu in [false, true] {
+                let mut gathered = vec![0.0f32; n * d_c];
+                codebook_fwd(&books, &codes, n, m, c, d_c, &mut gathered, 1);
+                if let Some(s) = w0_opt {
+                    scale_cols(&mut gathered, d_c, s, 1);
+                }
+                let mut want = vec![0.0f32; n * d_out];
+                linear_fwd(&gathered, &w, &b, n, d_c, d_out, relu, &mut want, 1);
+                for threads in [1usize, 2, 8] {
+                    let mut got = vec![0.0f32; n * d_out];
+                    codebook_linear_fwd(
+                        &books, &codes, n, m, c, d_c, w0_opt, &w, &b, d_out, relu, &mut got,
+                        threads,
+                    );
+                    assert!(
+                        got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "fused decode mismatch: w0={} relu={relu} threads={threads}",
+                        w0_opt.is_some()
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn kernels_thread_count_invariant() {
         // Random-ish data; every kernel must produce identical bits for
@@ -1067,7 +1396,7 @@ mod tests {
         linear_fwd(&x, &w, &b, n, d_in, d_out, true, &mut base_out, 1);
         matmul_wt(&dz, &w, n, d_in, d_out, false, &mut base_dx, 1);
         grad_w(&x, &dz, n, d_in, d_out, &mut base_dw, 1);
-        for threads in [2usize, 7] {
+        for threads in [2usize, 7, 8] {
             let mut out = vec![0.0; n * d_out];
             let mut dx = vec![0.0; n * d_in];
             let mut dw = vec![0.0; d_in * d_out];

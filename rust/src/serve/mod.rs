@@ -70,7 +70,7 @@ use std::sync::Arc;
 use crate::codes::CodeTable;
 use crate::graph::{Graph, NeighborSampler};
 use crate::rng::mix64;
-use crate::runtime::native::infer::{row_index, InferModel};
+use crate::runtime::native::infer::{row_index_into, InferModel};
 use crate::runtime::Tensor;
 use crate::ser::Json;
 use crate::{Error, Result};
@@ -84,12 +84,30 @@ pub struct ServeOpts {
     pub cache_capacity: usize,
     /// Seed for the per-node fan-out sampling of minibatch models.
     pub seed: u64,
+    /// Dispatch per-shard sub-requests concurrently inside one flush
+    /// ([`ShardRouter`] via the worker pool, [`RemoteRouter`] via one
+    /// in-flight request per worker socket). Merge order is always by
+    /// ascending shard index, so response bytes are identical with the
+    /// fan-out on or off (`--no-fanout`); only the latency changes.
+    pub fanout: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { threads: 0, cache_capacity: 4096, seed: 7 }
+        Self { threads: 0, cache_capacity: 4096, seed: 7, fanout: true }
     }
+}
+
+/// What a router's most recent shard fan-out looked like — drained by the
+/// persistent loop after each flush ([`Serving::take_fanout_report`]) to
+/// feed the `fanout_width` / `shard_wait_us` stats counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FanoutReport {
+    /// Shard sub-requests dispatched concurrently (1 = sequential walk).
+    pub width: usize,
+    /// Wall time of each dispatched shard's sub-request in microseconds,
+    /// ascending shard index.
+    pub shard_wait_us: Vec<u64>,
 }
 
 /// One parsed serving request (the `hashgnn serve --oneshot` wire form).
@@ -243,6 +261,15 @@ pub trait Serving {
     /// export.
     fn model_name(&self) -> String {
         String::new()
+    }
+
+    /// Drain the fan-out record of the most recent embed call. Routers
+    /// report how wide they dispatched and how long each shard took; a
+    /// single-session backend has no fan-out and returns `None` (the
+    /// default). Draining resets the record so one flush is never
+    /// counted twice.
+    fn take_fanout_report(&mut self) -> Option<FanoutReport> {
+        None
     }
 }
 
@@ -441,6 +468,27 @@ pub struct ServeSession {
     threads: usize,
     seed: u64,
     d: usize,
+    /// Per-session scratch reused across [`ServeSession::embed_nodes`]
+    /// calls so the flush hot path stops allocating per request (§perf:
+    /// the persistent server calls this once per flush, forever).
+    scratch: SessionScratch,
+}
+
+/// Reusable buffers for the embed hot path. Taken (`std::mem::take`) at
+/// the top of a call and put back cleared-by-`clear()` capacity intact;
+/// an error path may drop one, which only costs a warm-up re-allocation.
+#[derive(Default)]
+struct SessionScratch {
+    /// Request slots whose id missed the cache.
+    miss_slots: Vec<usize>,
+    /// Deduplicated missing ids in first-seen order.
+    missing: Vec<u32>,
+    /// Dedup set for `missing`.
+    missing_set: std::collections::HashSet<u32>,
+    /// id → row map over `missing` (the per-flush `row_index`).
+    index: std::collections::HashMap<u32, usize>,
+    /// Gathered integer codes for one coalesced group.
+    codes: Vec<i32>,
 }
 
 impl ServeSession {
@@ -495,6 +543,7 @@ impl ServeSession {
             seed: opts.seed,
             d,
             bundle,
+            scratch: SessionScratch::default(),
         })
     }
 
@@ -579,9 +628,15 @@ impl ServeSession {
         self.check_ids(ids)?;
         let d = self.d;
         let mut out = vec![0.0f32; ids.len() * d];
-        let mut miss_slots: Vec<usize> = Vec::new();
-        let mut missing: Vec<u32> = Vec::new();
-        let mut missing_set = std::collections::HashSet::new();
+        // Session scratch, not per-call allocations: the persistent
+        // server runs this once per flush, so the miss bookkeeping and
+        // the id→row map keep their capacity across the session.
+        let mut miss_slots = std::mem::take(&mut self.scratch.miss_slots);
+        let mut missing = std::mem::take(&mut self.scratch.missing);
+        let mut missing_set = std::mem::take(&mut self.scratch.missing_set);
+        miss_slots.clear();
+        missing.clear();
+        missing_set.clear();
         for (i, &id) in ids.iter().enumerate() {
             if let Some(e) = self.cache.get(id) {
                 out[i * d..(i + 1) * d].copy_from_slice(e);
@@ -592,19 +647,38 @@ impl ServeSession {
                 }
             }
         }
-        if !missing.is_empty() {
-            let fresh = self.compute_unique(&missing)?;
-            debug_assert_eq!(fresh.len(), missing.len() * d);
-            let index = row_index(&missing);
-            for &slot in &miss_slots {
-                let k = index[&ids[slot]];
-                out[slot * d..(slot + 1) * d].copy_from_slice(&fresh[k * d..(k + 1) * d]);
-            }
-            for (k, &id) in missing.iter().enumerate() {
-                self.cache.insert(id, fresh[k * d..(k + 1) * d].to_vec());
-            }
-        }
+        let result = if missing.is_empty() { Ok(()) } else { self.fill_misses(ids, &missing, &miss_slots, &mut out) };
+        self.scratch.miss_slots = miss_slots;
+        self.scratch.missing = missing;
+        self.scratch.missing_set = missing_set;
+        result?;
         Ok(out)
+    }
+
+    /// Compute the deduplicated cache misses and scatter them into the
+    /// response (plus the cache). Split out of [`Self::embed_nodes`] so
+    /// the scratch vectors above can be restored on every return path.
+    fn fill_misses(
+        &mut self,
+        ids: &[u32],
+        missing: &[u32],
+        miss_slots: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let d = self.d;
+        let fresh = self.compute_unique(missing)?;
+        debug_assert_eq!(fresh.len(), missing.len() * d);
+        let mut index = std::mem::take(&mut self.scratch.index);
+        row_index_into(missing, &mut index);
+        for &slot in miss_slots {
+            let k = index[&ids[slot]];
+            out[slot * d..(slot + 1) * d].copy_from_slice(&fresh[k * d..(k + 1) * d]);
+        }
+        self.scratch.index = index;
+        for (k, &id) in missing.iter().enumerate() {
+            self.cache.insert(id, fresh[k * d..(k + 1) * d].to_vec());
+        }
+        Ok(())
     }
 
     /// Serve dot-product scores for `(u, v)` edges, through the embedding
@@ -633,29 +707,38 @@ impl ServeSession {
         }
     }
 
-    fn compute_decoder(&self, unique: &[u32]) -> Result<Vec<f32>> {
+    fn compute_decoder(&mut self, unique: &[u32]) -> Result<Vec<f32>> {
         let codes = self.bundle.codes.as_ref().expect("coded session has codes");
         let m = codes.coding.m;
         let d = self.d;
         let co = self.batcher.coalesce(unique);
         let mut out = Vec::with_capacity(unique.len() * d);
-        let mut buf = Vec::new();
+        // Session code-gather scratch: the buffer moves into the batch
+        // tensor (no copy) and is recovered from it after the forward,
+        // so the per-group gather allocates nothing in steady state.
+        let mut buf = std::mem::take(&mut self.scratch.codes);
         for g in &co.groups {
             self.gather_codes(codes, &g.ids, &mut buf)?;
-            let t = Tensor::i32(vec![g.ids.len(), m], buf.clone())?;
-            let emb = self.model.embed_nodes(&self.bundle.params, &[t], self.threads)?;
+            let t = Tensor::i32(vec![g.ids.len(), m], std::mem::take(&mut buf))?;
+            let emb =
+                self.model.embed_nodes(&self.bundle.params, std::slice::from_ref(&t), self.threads)?;
+            if let Tensor::I32 { data, .. } = t {
+                buf = data;
+            }
             out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
         }
+        self.scratch.codes = buf;
         Ok(out)
     }
 
-    fn compute_sage(&self, unique: &[u32]) -> Result<Vec<f32>> {
+    fn compute_sage(&mut self, unique: &[u32]) -> Result<Vec<f32>> {
         let graph = self.graph.as_ref().expect("sage session has a graph");
         let (k1, k2) = self.model.fanout().expect("sage model has fan-out dims");
         let sampler = NeighborSampler::new(graph, k1, k2);
         let d = self.d;
         let co = self.batcher.coalesce(unique);
         let mut out = Vec::with_capacity(unique.len() * d);
+        let mut buf = std::mem::take(&mut self.scratch.codes);
         for g in &co.groups {
             // Per-node seeded fan-out: node u's neighborhood (and hence
             // its embedding) never depends on the batch it rides in.
@@ -666,32 +749,34 @@ impl ServeSession {
                 hop1.extend_from_slice(&s.hop1);
                 hop2.extend_from_slice(&s.hop2);
             }
-            let tensors = self.node_set_tensors(&g.ids, &hop1, &hop2)?;
+            let tensors = self.node_set_tensors(&g.ids, &hop1, &hop2, &mut buf)?;
             let emb = self.model.embed_nodes(&self.bundle.params, &tensors, self.threads)?;
             out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
         }
+        self.scratch.codes = buf;
         Ok(out)
     }
 
     /// The three node-set tensors one encoder application consumes:
-    /// gathered codes for the coded front-end, raw ids for NC.
+    /// gathered codes for the coded front-end, raw ids for NC. `buf` is
+    /// caller-provided gather scratch (reused across groups and calls).
     fn node_set_tensors(
         &self,
         targets: &[u32],
         hop1: &[u32],
         hop2: &[u32],
+        buf: &mut Vec<i32>,
     ) -> Result<Vec<Tensor>> {
         match (&self.bundle.codes, self.model.code_m()) {
             (Some(codes), Some(m)) => {
-                let mut buf = Vec::new();
                 let gather = |ids: &[u32], buf: &mut Vec<i32>| -> Result<Tensor> {
                     self.gather_codes(codes, ids, buf)?;
                     Tensor::i32(vec![ids.len(), m], buf.clone())
                 };
                 Ok(vec![
-                    gather(targets, &mut buf)?,
-                    gather(hop1, &mut buf)?,
-                    gather(hop2, &mut buf)?,
+                    gather(targets, buf)?,
+                    gather(hop1, buf)?,
+                    gather(hop2, buf)?,
                 ])
             }
             _ => {
@@ -804,8 +889,8 @@ mod tests {
         let store = ParamStore::init(&m, 4);
         let codes = random_codes(10, CodingCfg::new(4, 3).unwrap(), 5);
         let bundle = ServingBundle::new(m, &store, Some(codes), vec![], 10).unwrap();
-        ServeSession::new(bundle, ServeOpts { threads: 1, cache_capacity: cache, seed: 3 })
-            .unwrap()
+        let opts = ServeOpts { threads: 1, cache_capacity: cache, seed: 3, ..Default::default() };
+        ServeSession::new(bundle, opts).unwrap()
     }
 
     #[test]

@@ -44,7 +44,7 @@ use crate::ser::{self, Json};
 use crate::{Error, Result};
 
 use super::server::{read_bounded_line, RawLine};
-use super::Serving;
+use super::{FanoutReport, Serving};
 
 /// Exact wire string for ids owned by an unreachable worker.
 pub const SHARD_UNAVAILABLE: &str = "shard_unavailable";
@@ -65,6 +65,12 @@ pub struct RemoteCfg {
     pub health_every: Duration,
     /// Longest response line the client will buffer.
     pub max_line_bytes: usize,
+    /// Pipeline one flush across the fleet: write every worker's
+    /// sub-request before reading any response (one in-flight request
+    /// per pooled socket), so a K-worker flush waits ~max(worker)
+    /// instead of the sum. Off, workers are walked sequentially; the
+    /// served bytes are identical either way.
+    pub fanout: bool,
 }
 
 impl Default for RemoteCfg {
@@ -76,6 +82,7 @@ impl Default for RemoteCfg {
             backoff: Duration::from_millis(50),
             health_every: Duration::from_millis(1000),
             max_line_bytes: 1 << 20,
+            fanout: true,
         }
     }
 }
@@ -205,7 +212,40 @@ impl RemoteShard {
         r
     }
 
+    /// Pipelined write: one request goes on the wire now, its response
+    /// is collected later by [`Self::finish_request`]. A write failure
+    /// tears the connection down (nothing is in flight afterwards).
+    /// Exactly ONE request may be in flight per shard — the NDJSON
+    /// worker answers strictly in order, so begin/finish pairs on the
+    /// same connection can never interleave responses.
+    fn begin_request(&mut self, line: &str) -> Result<()> {
+        let r = self.write_request(line);
+        if r.is_err() {
+            self.conn = None;
+        }
+        r
+    }
+
+    /// Collect the response to a successful [`Self::begin_request`].
+    /// Any read/parse failure tears the connection down, so a torn
+    /// response can never de-sync framing for the next request.
+    fn finish_request(&mut self) -> Result<Json> {
+        let r = self.read_response();
+        if r.is_err() {
+            self.conn = None;
+        }
+        r
+    }
+
     fn try_round_trip(&mut self, line: &str) -> Result<Json> {
+        self.write_request(line)?;
+        self.read_response()
+    }
+
+    /// Write half of one round trip: establish/reuse the pooled
+    /// connection and put the request line on the wire. No teardown on
+    /// error — callers decide (the retrying paths drop the connection).
+    fn write_request(&mut self, line: &str) -> Result<()> {
         if self.conn.is_none() {
             self.conn = Some(BufReader::new(self.dial()?));
         }
@@ -214,6 +254,15 @@ impl RemoteShard {
         stream.write_all(line.as_bytes())?;
         stream.write_all(b"\n")?;
         stream.flush()?;
+        Ok(())
+    }
+
+    /// Read half: one bounded response line, parsed. No teardown here
+    /// either (see [`Self::write_request`]).
+    fn read_response(&mut self) -> Result<Json> {
+        let conn = self.conn.as_mut().ok_or_else(|| {
+            Error::Runtime(format!("worker {}: no connection to read from", self.addr))
+        })?;
         let mut buf = Vec::new();
         match read_bounded_line(conn, self.cfg.max_line_bytes, &mut buf)? {
             RawLine::Line => {}
@@ -302,6 +351,11 @@ pub struct RemoteRouter {
     d: usize,
     name: String,
     declared: usize,
+    /// Pipeline flushes across the fleet (`RemoteCfg::fanout`).
+    fanout: bool,
+    /// Fan-out telemetry for the most recent flush, drained by
+    /// [`Serving::take_fanout_report`].
+    last_fanout: Option<FanoutReport>,
 }
 
 impl RemoteRouter {
@@ -354,7 +408,16 @@ impl RemoteRouter {
                 "worker ranges cover [0, {expect_lo}) but the export has {n_nodes} nodes"
             )));
         }
-        Ok(Self { shards, ranges, n_nodes, d, name, declared })
+        Ok(Self {
+            shards,
+            ranges,
+            n_nodes,
+            d,
+            name,
+            declared,
+            fanout: cfg.fanout,
+            last_fanout: None,
+        })
     }
 
     /// Owning worker of a (validated) node id.
@@ -412,6 +475,15 @@ impl Serving for RemoteRouter {
     /// errors from a live worker carry through verbatim. Rows that do
     /// arrive are the worker's served f64 text round-tripped back to
     /// f32 — exact, so remote bytes match local bytes.
+    ///
+    /// With fan-out on and more than one worker involved, the flush is
+    /// **pipelined**: every worker's sub-request is written first (one
+    /// in flight per pooled socket), then responses are read in
+    /// ascending shard order. Any worker whose pipelined attempt faults
+    /// falls back to the normal [`RemoteShard::request`] retry/backoff
+    /// path, so the fault model above is unchanged — and so are the
+    /// merged bytes, since each worker computes the exact sub-request
+    /// the sequential walk would send it.
     fn embed_nodes_partial(&mut self, ids: &[u32]) -> Result<super::PartialRows> {
         self.check_ids(ids)?;
         let d = self.d;
@@ -420,32 +492,65 @@ impl Serving for RemoteRouter {
             failed: Default::default(),
         };
         let (per_ids, per_slots) = self.group(ids);
+        let k = self.shards.len();
+        let fail_all = |part: &mut super::PartialRows, shard_ids: &[u32], msg: &str| {
+            for &id in shard_ids {
+                part.failed.insert(id, msg.to_string());
+            }
+        };
+        // Availability + request lines, ascending (health probes happen
+        // here, exactly where the sequential walk ran them).
+        let mut lines: Vec<Option<String>> = (0..k).map(|_| None).collect();
         for (s, shard_ids) in per_ids.iter().enumerate() {
             if shard_ids.is_empty() {
                 continue;
             }
-            let fail_all = |part: &mut super::PartialRows, msg: &str| {
-                for &id in shard_ids {
-                    part.failed.insert(id, msg.to_string());
-                }
-            };
             if !self.shards[s].available() {
-                fail_all(&mut part, SHARD_UNAVAILABLE);
+                fail_all(&mut part, shard_ids, SHARD_UNAVAILABLE);
                 continue;
             }
-            let line = ser::to_string_compact(&Json::obj(vec![
+            lines[s] = Some(ser::to_string_compact(&Json::obj(vec![
                 ("op", Json::str("embed")),
                 ("nodes", ids_json(shard_ids)),
-            ]));
-            let resp = match self.shards[s].request(&line) {
+            ])));
+        }
+        let active = lines.iter().filter(|l| l.is_some()).count();
+        let pipelined = self.fanout && active > 1;
+        // Write phase: put every sub-request on the wire before reading
+        // any response. A failed write just means that worker takes the
+        // sequential fallback below.
+        let mut in_flight = vec![false; k];
+        if pipelined {
+            for s in 0..k {
+                if let Some(line) = &lines[s] {
+                    in_flight[s] = self.shards[s].begin_request(line).is_ok();
+                }
+            }
+        }
+        // Read/merge phase: ascending shard index, same as sequential.
+        let mut waits: Vec<u64> = Vec::with_capacity(active);
+        for s in 0..k {
+            let Some(line) = lines[s].take() else { continue };
+            let shard_ids = &per_ids[s];
+            let t0 = Instant::now();
+            let resp = if in_flight[s] {
+                // One pipelined attempt, then the full retry path — the
+                // retrying request dials a fresh connection, so a torn
+                // pipelined response can't bleed into it.
+                self.shards[s].finish_request().or_else(|_| self.shards[s].request(&line))
+            } else {
+                self.shards[s].request(&line)
+            };
+            waits.push(t0.elapsed().as_micros() as u64);
+            let resp = match resp {
                 Ok(v) => v,
                 Err(_) => {
-                    fail_all(&mut part, SHARD_UNAVAILABLE);
+                    fail_all(&mut part, shard_ids, SHARD_UNAVAILABLE);
                     continue;
                 }
             };
             if let Some(err) = resp.opt("error").and_then(|e| e.as_str().ok()) {
-                fail_all(&mut part, err);
+                fail_all(&mut part, shard_ids, err);
                 continue;
             }
             let parsed: Result<()> = (|| {
@@ -477,9 +582,13 @@ impl Serving for RemoteRouter {
             if parsed.is_err() {
                 // A malformed body from a live worker is a fault, not an
                 // answer: fail its ids rather than serve damaged rows.
-                fail_all(&mut part, SHARD_UNAVAILABLE);
+                fail_all(&mut part, shard_ids, SHARD_UNAVAILABLE);
             }
         }
+        self.last_fanout = Some(FanoutReport {
+            width: if pipelined { active } else { active.min(1) },
+            shard_wait_us: waits,
+        });
         Ok(part)
     }
 
@@ -551,5 +660,9 @@ impl Serving for RemoteRouter {
 
     fn model_name(&self) -> String {
         self.name.clone()
+    }
+
+    fn take_fanout_report(&mut self) -> Option<FanoutReport> {
+        self.last_fanout.take()
     }
 }

@@ -29,13 +29,15 @@
 //! ```
 
 use std::path::PathBuf;
+use std::time::Instant;
 
+use crate::runtime::native::par;
 use crate::ser::Json;
 use crate::{Error, Result};
 
 use super::{
-    predict_classes_on, score_edges_on, CacheStats, ServeOpts, ServeSession, Serving,
-    ServingBundle,
+    predict_classes_on, score_edges_on, CacheStats, FanoutReport, ServeOpts, ServeSession,
+    Serving, ServingBundle,
 };
 
 /// K shard sessions behind one [`Serving`] front; see the module docs.
@@ -51,6 +53,13 @@ pub struct ShardRouter {
     declared: usize,
     n_nodes: usize,
     d: usize,
+    /// Dispatch per-shard sub-requests concurrently (`ServeOpts::fanout`).
+    /// Off, shards are walked sequentially; the served bytes are
+    /// identical either way — only latency changes.
+    fanout: bool,
+    /// Fan-out telemetry for the most recent [`ShardRouter::embed_nodes`]
+    /// call, drained by [`Serving::take_fanout_report`].
+    last_fanout: Option<FanoutReport>,
 }
 
 impl ShardRouter {
@@ -141,7 +150,15 @@ impl ShardRouter {
             (sessions, ranges)
         };
         let d = sessions[0].embed_dim();
-        Ok(Self { sessions, ranges, declared: count, n_nodes, d })
+        Ok(Self {
+            sessions,
+            ranges,
+            declared: count,
+            n_nodes,
+            d,
+            fanout: opts.fanout,
+            last_fanout: None,
+        })
     }
 
     /// Load every shard file of one export and build the router.
@@ -175,6 +192,16 @@ impl ShardRouter {
 
     /// Serve embeddings for `ids`: route each id to its owning shard,
     /// compute per shard, scatter rows back into request order.
+    ///
+    /// With fan-out on, non-empty shards run **concurrently** on the
+    /// shared worker pool, so a K-shard flush costs roughly the slowest
+    /// shard instead of the sum. The merge always walks shards in
+    /// ascending index order, and each shard computes exactly the
+    /// sub-request the sequential walk would hand it, so the output
+    /// bytes — and on failure, which shard's error surfaces — are
+    /// identical in both modes. (Per-shard kernels that reach
+    /// [`par::join_all`] from a pool worker run inline there, which
+    /// keeps every kernel's deterministic chunking intact.)
     pub fn embed_nodes(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
         for &id in ids {
             if id as usize >= self.n_nodes {
@@ -192,13 +219,57 @@ impl ShardRouter {
             per_shard_ids[s].push(id);
             per_shard_slots[s].push(slot);
         }
+        let active = per_shard_ids.iter().filter(|v| !v.is_empty()).count();
+        let mut results: Vec<Option<Result<Vec<f32>>>> = (0..k).map(|_| None).collect();
+        let mut waits: Vec<u64> = vec![0; k];
+        let parallel = self.fanout && active > 1;
+        if parallel {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                .sessions
+                .iter_mut()
+                .zip(per_shard_ids.iter())
+                .zip(results.iter_mut().zip(waits.iter_mut()))
+                .filter(|((_, ids), _)| !ids.is_empty())
+                .map(|((sess, ids), (res, wait))| {
+                    Box::new(move || {
+                        let t0 = Instant::now();
+                        *res = Some(sess.embed_nodes(ids));
+                        *wait = t0.elapsed().as_micros() as u64;
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            par::join_all(jobs);
+        } else {
+            for s in 0..k {
+                if per_shard_ids[s].is_empty() {
+                    continue;
+                }
+                let t0 = Instant::now();
+                let res = self.sessions[s].embed_nodes(&per_shard_ids[s]);
+                waits[s] = t0.elapsed().as_micros() as u64;
+                let failed = res.is_err();
+                results[s] = Some(res);
+                if failed {
+                    break;
+                }
+            }
+        }
+        self.last_fanout = Some(FanoutReport {
+            width: if parallel { active } else { active.min(1) },
+            shard_wait_us: per_shard_ids
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| !v.is_empty())
+                .map(|(s, _)| waits[s])
+                .collect(),
+        });
+        // Deterministic merge: ascending shard index, first error wins —
+        // exactly what the sequential walk produced.
         let d = self.d;
         let mut out = vec![0.0f32; ids.len() * d];
         for s in 0..k {
-            if per_shard_ids[s].is_empty() {
-                continue;
-            }
-            let rows = self.sessions[s].embed_nodes(&per_shard_ids[s])?;
+            let Some(res) = results[s].take() else { continue };
+            let rows = res?;
             for (j, &slot) in per_shard_slots[s].iter().enumerate() {
                 out[slot * d..(slot + 1) * d].copy_from_slice(&rows[j * d..(j + 1) * d]);
             }
@@ -269,5 +340,9 @@ impl Serving for ShardRouter {
 
     fn model_name(&self) -> String {
         self.sessions[0].bundle().manifest.name.clone()
+    }
+
+    fn take_fanout_report(&mut self) -> Option<FanoutReport> {
+        self.last_fanout.take()
     }
 }

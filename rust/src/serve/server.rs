@@ -139,21 +139,38 @@ pub struct LoopStats {
     /// Connections dropped because their writer buffer overflowed (a
     /// client that stopped draining responses).
     pub dropped_conns: u64,
+    /// Widest shard fan-out any flush dispatched (1 = sequential or a
+    /// single shard; 0 = no sharded flush has run yet).
+    pub fanout_width: u64,
     /// Cross-request batching counters.
     pub batch: BatchStats,
 }
 
 impl LoopStats {
     /// Accumulate another session's counters (TCP mode sums sessions).
+    /// Exhaustive destructuring: adding a field without deciding how it
+    /// aggregates is a compile error, not a silently dropped counter.
     pub fn absorb(&mut self, o: &LoopStats) {
-        self.requests += o.requests;
-        self.responses += o.responses;
-        self.errors += o.errors;
-        self.shed_overload += o.shed_overload;
-        self.shed_deadline += o.shed_deadline;
-        self.drained += o.drained;
-        self.dropped_conns += o.dropped_conns;
-        self.batch.absorb(&o.batch);
+        let LoopStats {
+            requests,
+            responses,
+            errors,
+            shed_overload,
+            shed_deadline,
+            drained,
+            dropped_conns,
+            fanout_width,
+            batch,
+        } = o;
+        self.requests += requests;
+        self.responses += responses;
+        self.errors += errors;
+        self.shed_overload += shed_overload;
+        self.shed_deadline += shed_deadline;
+        self.drained += drained;
+        self.dropped_conns += dropped_conns;
+        self.fanout_width = self.fanout_width.max(*fanout_width);
+        self.batch.absorb(batch);
     }
 
     /// One-line human summary (the CLI prints it to stderr).
@@ -313,6 +330,7 @@ fn respond(
 /// order, via `emit(conn, slot, line)`. Handles deadline shedding,
 /// partial shard failures ([`Serving::embed_nodes_partial`]) and the
 /// whole-union error path; records the flush latency.
+#[allow(clippy::too_many_arguments)]
 fn flush_core(
     backend: &mut dyn Serving,
     batcher: &mut CrossBatcher<Queued>,
@@ -320,6 +338,7 @@ fn flush_core(
     deadline: Option<Duration>,
     stats: &mut LoopStats,
     lat: &mut LatencyWindow,
+    shard_lat: &mut LatencyWindow,
     emit: &mut dyn FnMut(u64, u64, &Json) -> Result<()>,
 ) -> Result<()> {
     if batcher.is_empty() {
@@ -335,6 +354,15 @@ fn flush_core(
     } else {
         backend.embed_nodes_partial(&unique)
     };
+    // Sharded backends report how wide this flush fanned out and how
+    // long each shard's sub-request took; fold both into the session's
+    // observability counters.
+    if let Some(report) = backend.take_fanout_report() {
+        stats.fanout_width = stats.fanout_width.max(report.width as u64);
+        for w in report.shard_wait_us {
+            shard_lat.record(w);
+        }
+    }
     let d = backend.embed_dim();
     let now = Instant::now();
     match computed {
@@ -399,6 +427,7 @@ fn flush_core(
 }
 
 /// Single-writer flush: emit responses in queue order onto `out`.
+#[allow(clippy::too_many_arguments)]
 fn flush_to_writer(
     backend: &mut dyn Serving,
     batcher: &mut CrossBatcher<Queued>,
@@ -406,22 +435,25 @@ fn flush_to_writer(
     cfg: &ServerCfg,
     stats: &mut LoopStats,
     lat: &mut LatencyWindow,
+    shard_lat: &mut LatencyWindow,
     out: &mut dyn Write,
 ) -> Result<()> {
     let mut emit = |_conn: u64, _slot: u64, line: &Json| -> Result<()> {
         writeln!(out, "{}", ser::to_string_compact(line))?;
         Ok(())
     };
-    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, &mut emit)?;
+    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, shard_lat, &mut emit)?;
     out.flush()?;
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn stats_response(
     backend: &dyn Serving,
     stats: &LoopStats,
     batch: BatchStats,
     lat: &LatencyWindow,
+    shard_lat: &LatencyWindow,
     queue_depth: usize,
     in_flight: usize,
 ) -> Json {
@@ -444,6 +476,9 @@ fn stats_response(
         ("in_flight", Json::num(in_flight as f64)),
         ("flush_p50_us", Json::num(lat.percentile(50) as f64)),
         ("flush_p99_us", Json::num(lat.percentile(99) as f64)),
+        ("fanout_width", Json::num(stats.fanout_width as f64)),
+        ("shard_wait_p50_us", Json::num(shard_lat.percentile(50) as f64)),
+        ("shard_wait_p99_us", Json::num(shard_lat.percentile(99) as f64)),
         ("n_nodes", Json::num(backend.n_nodes() as f64)),
         ("dim", Json::num(backend.embed_dim() as f64)),
         ("model", Json::str(backend.model_name())),
@@ -603,6 +638,7 @@ pub fn run_loop(
     let mut batcher: CrossBatcher<Queued> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
     let mut stats = LoopStats::default();
     let mut lat = LatencyWindow::new(LATENCY_WINDOW);
+    let mut shard_lat = LatencyWindow::new(LATENCY_WINDOW);
     let mut slot = 0u64;
     let n_nodes = backend.n_nodes();
     let owned = backend.owned_range();
@@ -625,6 +661,7 @@ pub fn run_loop(
                         cfg,
                         &mut stats,
                         &mut lat,
+                        &mut shard_lat,
                         out,
                     )?;
                     continue;
@@ -641,6 +678,7 @@ pub fn run_loop(
                     cfg,
                     &mut stats,
                     &mut lat,
+                    &mut shard_lat,
                     out,
                 )?;
                 break;
@@ -658,6 +696,7 @@ pub fn run_loop(
                     cfg,
                     &mut stats,
                     &mut lat,
+                    &mut shard_lat,
                     out,
                 )?;
                 return Err(e.into());
@@ -687,6 +726,7 @@ pub fn run_loop(
                         cfg,
                         &mut stats,
                         &mut lat,
+                        &mut shard_lat,
                         out,
                     )?;
                 } else if batcher.should_flush(Instant::now()) {
@@ -699,6 +739,7 @@ pub fn run_loop(
                         cfg,
                         &mut stats,
                         &mut lat,
+                        &mut shard_lat,
                         out,
                     )?;
                 }
@@ -712,11 +753,12 @@ pub fn run_loop(
                     cfg,
                     &mut stats,
                     &mut lat,
+                    &mut shard_lat,
                     out,
                 )?;
                 stats.responses += 1;
                 let resp = with_echo(
-                    stats_response(backend, &stats, batcher.stats(), &lat, depth, 1),
+                    stats_response(backend, &stats, batcher.stats(), &lat, &shard_lat, depth, 1),
                     echo,
                 );
                 writeln!(out, "{}", ser::to_string_compact(&resp))?;
@@ -730,6 +772,7 @@ pub fn run_loop(
                     cfg,
                     &mut stats,
                     &mut lat,
+                    &mut shard_lat,
                     out,
                 )?;
                 stats.responses += 1;
@@ -937,6 +980,7 @@ fn spawn_conn_reader(
 /// writer queue. Returns the connections whose writer buffer was full or
 /// gone (the engine drops them — a client that stops draining responses
 /// must not stall everyone else).
+#[allow(clippy::too_many_arguments)]
 fn flush_to_conns(
     backend: &mut dyn Serving,
     batcher: &mut CrossBatcher<Queued>,
@@ -944,6 +988,7 @@ fn flush_to_conns(
     cfg: &ServerCfg,
     stats: &mut LoopStats,
     lat: &mut LatencyWindow,
+    shard_lat: &mut LatencyWindow,
     conns: &HashMap<u64, SyncSender<(u64, String)>>,
 ) -> Result<Vec<u64>> {
     let dead = std::cell::RefCell::new(Vec::new());
@@ -955,7 +1000,7 @@ fn flush_to_conns(
         }
         Ok(())
     };
-    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, &mut emit)?;
+    flush_core(backend, batcher, trigger, cfg.deadline, stats, lat, shard_lat, &mut emit)?;
     Ok(dead.into_inner())
 }
 
@@ -1046,6 +1091,7 @@ pub fn serve_concurrent(
     let mut batcher: CrossBatcher<Queued> = CrossBatcher::new(cfg.max_batch, cfg.max_delay)?;
     let mut stats = LoopStats::default();
     let mut lat = LatencyWindow::new(LATENCY_WINDOW);
+    let mut shard_lat = LatencyWindow::new(LATENCY_WINDOW);
     let mut conns: HashMap<u64, SyncSender<(u64, String)>> = HashMap::new();
     let n_nodes = backend.n_nodes();
     let owned = backend.owned_range();
@@ -1053,7 +1099,10 @@ pub fn serve_concurrent(
     macro_rules! engine_flush {
         ($trigger:expr) => {{
             let dead =
-                flush_to_conns(backend, &mut batcher, $trigger, cfg, &mut stats, &mut lat, &conns)?;
+                flush_to_conns(
+                backend, &mut batcher, $trigger, cfg, &mut stats, &mut lat, &mut shard_lat,
+                &conns,
+            )?;
             for c in dead {
                 if conns.remove(&c).is_some() {
                     stats.dropped_conns += 1;
@@ -1132,7 +1181,7 @@ pub fn serve_concurrent(
                 let mut view = stats;
                 view.shed_overload += shed_io.load(Ordering::Relaxed);
                 let resp = with_echo(
-                    stats_response(backend, &view, batcher.stats(), &lat, depth, conns.len()),
+                    stats_response(backend, &view, batcher.stats(), &lat, &shard_lat, depth, conns.len()),
                     echo,
                 );
                 let lost = conns
@@ -1207,6 +1256,48 @@ mod tests {
             parse_line(r#"{"op": "train"}"#, 10, all),
             Line::Item(Pending::Fail { .. })
         ));
+    }
+
+    #[test]
+    fn loop_stats_absorb_covers_every_field() {
+        // Exhaustive-destructuring absorb: every field must aggregate.
+        // Counters sum; fanout_width is a high-water mark (the widest
+        // dispatch any session saw), so absorb takes the max.
+        let mut a = LoopStats {
+            requests: 1,
+            responses: 2,
+            errors: 3,
+            shed_overload: 4,
+            shed_deadline: 5,
+            drained: 6,
+            dropped_conns: 7,
+            fanout_width: 3,
+            batch: BatchStats::default(),
+        };
+        let b = LoopStats {
+            requests: 10,
+            responses: 20,
+            errors: 30,
+            shed_overload: 40,
+            shed_deadline: 50,
+            drained: 60,
+            dropped_conns: 70,
+            fanout_width: 2,
+            batch: BatchStats::default(),
+        };
+        a.absorb(&b);
+        assert_eq!(a.requests, 11);
+        assert_eq!(a.responses, 22);
+        assert_eq!(a.errors, 33);
+        assert_eq!(a.shed_overload, 44);
+        assert_eq!(a.shed_deadline, 55);
+        assert_eq!(a.drained, 66);
+        assert_eq!(a.dropped_conns, 77);
+        assert_eq!(a.fanout_width, 3, "width is max-aggregated, not summed");
+        // And the max flows the other way too.
+        let wide = LoopStats { fanout_width: 9, ..LoopStats::default() };
+        a.absorb(&wide);
+        assert_eq!(a.fanout_width, 9);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 
 use crate::{Error, Result};
 
+/// Register-tile width for [`Csr::spmm_row_major`]: 8 × f32 = one 256-bit
+/// vector. Tiling runs across output columns (independent accumulators),
+/// never across a single element's reduction, so tiled results are
+/// bit-identical to the scalar walk.
+pub const SPMM_LANES: usize = 8;
+
 /// CSR sparse matrix with `f32` values.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
@@ -220,6 +226,14 @@ impl Csr {
     /// bit-identical to the per-vector path — this is the full-batch GNN
     /// propagation kernel, shaped so callers can partition output rows
     /// across threads under the determinism rule.
+    ///
+    /// Columns run in register tiles of [`SPMM_LANES`]: each tile holds
+    /// its partial sums in a stack array while re-streaming the row's
+    /// stored entries (indices/values are contiguous and L1-resident on
+    /// the second pass), so the gathered `x` rows are the only wide
+    /// memory traffic and the accumulators vectorize. Per output element
+    /// the addition order is still ascending stored-column order; the
+    /// `d % SPMM_LANES` tail runs the same loop at partial width.
     pub fn spmm_row_major(
         &self,
         rows: std::ops::Range<usize>,
@@ -233,15 +247,24 @@ impl Csr {
         let row0 = rows.start;
         for r in rows {
             let orow = &mut out[(r - row0) * d..(r - row0 + 1) * d];
-            orow.fill(0.0);
             let idx = self.row_indices(r);
             let val = self.row_values(r);
-            for k in 0..idx.len() {
-                let a = val[k];
-                let xrow = &x[idx[k] as usize * d..][..d];
-                for (o, &v) in orow.iter_mut().zip(xrow) {
-                    *o += a * v;
+            let mut o0 = 0;
+            loop {
+                let width = SPMM_LANES.min(d - o0);
+                if width == 0 {
+                    break;
                 }
+                let mut acc = [0.0f32; SPMM_LANES];
+                for k in 0..idx.len() {
+                    let a = val[k];
+                    let xtile = &x[idx[k] as usize * d + o0..][..width];
+                    for (o, &v) in acc[..width].iter_mut().zip(xtile) {
+                        *o += a * v;
+                    }
+                }
+                orow[o0..o0 + width].copy_from_slice(&acc[..width]);
+                o0 += width;
             }
         }
     }
@@ -664,6 +687,40 @@ mod tests {
                 assert_eq!(rm[r * d + b].to_bits(), expect.to_bits(), "({r},{b})");
                 assert_eq!(rm_split[r * d + b].to_bits(), expect.to_bits(), "split ({r},{b})");
             }
+        }
+    }
+
+    #[test]
+    fn spmm_row_major_tiled_matches_scalar_reference_at_all_tail_widths() {
+        // d below, at, and straddling the SPMM_LANES=8 tile — the tiled
+        // kernel must match the untiled ascending-nz walk bit for bit.
+        let mut triplets = Vec::new();
+        for r in 0..17u32 {
+            for c in 0..9u32 {
+                if (r * 19 + c * 5) % 4 != 0 {
+                    triplets.push((r, c, (r as f32 * 0.53 - c as f32 * 1.13).sin()));
+                }
+            }
+        }
+        let a = Csr::from_triplets(17, 9, &triplets).unwrap();
+        for d in [1usize, 5, 8, 11, 16, 19] {
+            let x: Vec<f32> = (0..9 * d).map(|i| ((i * 23 + 1) % 13) as f32 * 0.3 - 1.7).collect();
+            let mut want = vec![0.0f32; 17 * d];
+            for r in 0..17 {
+                let orow = &mut want[r * d..(r + 1) * d];
+                for (k, &c) in a.row_indices(r).iter().enumerate() {
+                    let av = a.row_values(r)[k];
+                    for (o, &v) in orow.iter_mut().zip(&x[c as usize * d..(c as usize + 1) * d]) {
+                        *o += av * v;
+                    }
+                }
+            }
+            let mut got = vec![0.0f32; 17 * d];
+            a.spmm_row_major(0..17, &x, d, &mut got);
+            assert!(
+                got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits()),
+                "spmm_row_major tail mismatch at d={d}"
+            );
         }
     }
 

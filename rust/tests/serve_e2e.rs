@@ -58,7 +58,7 @@ fn fb_bundle(link: bool) -> ServingBundle {
 }
 
 fn session(bundle: ServingBundle, threads: usize, cache: usize) -> ServeSession {
-    ServeSession::new(bundle, ServeOpts { threads, cache_capacity: cache, seed: 5 }).unwrap()
+    ServeSession::new(bundle, ServeOpts { threads, cache_capacity: cache, seed: 5, ..Default::default() }).unwrap()
 }
 
 #[test]

@@ -43,7 +43,7 @@ fn bits_equal(a: &[f32], b: &[f32]) -> bool {
 }
 
 fn opts(threads: usize) -> ServeOpts {
-    ServeOpts { threads, cache_capacity: 64, seed: 5 }
+    ServeOpts { threads, cache_capacity: 64, seed: 5, ..Default::default() }
 }
 
 fn recon_bundle() -> ServingBundle {
@@ -402,6 +402,7 @@ fn dead_worker_degrades_to_partial_service_and_readmits_after_health_check() {
         backoff: Duration::from_millis(10),
         health_every: Duration::ZERO, // re-probe on every routing decision
         max_line_bytes: 1 << 20,
+        ..Default::default()
     };
     let mut router = RemoteRouter::connect(&[aa.to_string(), ab.to_string()], rcfg).unwrap();
     let mut local = ServeSession::new(bundle.clone(), opts(1)).unwrap();
@@ -468,6 +469,7 @@ fn corrupt_and_truncated_responses_are_retried_on_a_fresh_connection() {
         backoff: Duration::from_millis(5),
         health_every: Duration::ZERO,
         max_line_bytes: 1 << 20,
+        ..Default::default()
     };
     let mut router = RemoteRouter::connect(&[addr.to_string()], rcfg).unwrap();
     let mut local = ServeSession::new(bundle, opts(1)).unwrap();

@@ -36,7 +36,7 @@ fn bits_equal(a: &[f32], b: &[f32]) -> bool {
 }
 
 fn opts(threads: usize) -> ServeOpts {
-    ServeOpts { threads, cache_capacity: 64, seed: 5 }
+    ServeOpts { threads, cache_capacity: 64, seed: 5, ..Default::default() }
 }
 
 fn tmpdir() -> PathBuf {
@@ -186,6 +186,48 @@ fn sage_nc_shards_serve_bit_identically() {
 #[test]
 fn fullbatch_shards_serve_bit_identically() {
     assert_shard_parity(&fb_bundle(), 2, true);
+}
+
+#[test]
+fn fanout_modes_serve_identical_bytes_and_report_width() {
+    let bundle = sage_bundle(true);
+    let ids = spanning_ids(60);
+    // Same split, same threads — only the dispatch strategy differs.
+    let mut par = ShardRouter::new(bundle.split_shards(3).unwrap(), opts(2)).unwrap();
+    let mut seq = ShardRouter::new(
+        bundle.split_shards(3).unwrap(),
+        ServeOpts { fanout: false, ..opts(2) },
+    )
+    .unwrap();
+    let a = par.embed_nodes(&ids).unwrap();
+    let b = seq.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&a, &b), "parallel fan-out changed served bytes");
+    // The routers report how the flush was dispatched: width = active
+    // shards when parallel, 1 when sequential; one wait per active shard
+    // either way. The report drains on take.
+    let ra = par.take_fanout_report().expect("parallel flush reports");
+    assert_eq!(ra.width, 3);
+    assert_eq!(ra.shard_wait_us.len(), 3);
+    assert!(par.take_fanout_report().is_none(), "report drains on take");
+    let rb = seq.take_fanout_report().expect("sequential flush reports too");
+    assert_eq!(rb.width, 1);
+    assert_eq!(rb.shard_wait_us.len(), 3);
+    // A single-shard sub-request never fans out, whatever the mode.
+    par.embed_nodes(&[0, 1]).unwrap();
+    assert_eq!(par.take_fanout_report().unwrap().width, 1);
+    // The NDJSON stats line surfaces the width and the shard-wait
+    // percentiles the flush recorded.
+    let cfg =
+        ServerCfg { max_batch: 1000, max_delay: Duration::from_secs(60), ..Default::default() };
+    let input = concat!(
+        "{\"op\": \"embed\", \"nodes\": [0, 25, 55]}\n",
+        "{\"op\": \"stats\"}\n",
+        "{\"op\": \"shutdown\"}\n",
+    );
+    let lines = run_session(&mut par, &cfg, input);
+    assert_eq!(lines[1].get("fanout_width").unwrap().as_usize().unwrap(), 3);
+    assert!(lines[1].get("shard_wait_p50_us").is_ok());
+    assert!(lines[1].get("shard_wait_p99_us").is_ok());
 }
 
 /// A 60-node ring sage bundle: the two-hop closure of a 20-node owned

@@ -37,7 +37,7 @@ fn bits_equal(a: &[f32], b: &[f32]) -> bool {
 }
 
 fn opts(threads: usize) -> ServeOpts {
-    ServeOpts { threads, cache_capacity: 64, seed: 5 }
+    ServeOpts { threads, cache_capacity: 64, seed: 5, ..Default::default() }
 }
 
 fn tmpdir() -> PathBuf {
@@ -150,9 +150,73 @@ fn raw_request(addr: &str, line: &str) -> String {
 }
 
 #[test]
+fn pipelined_fanout_matches_sequential_walk_over_real_workers() {
+    let bundle = sage_bundle();
+    // Own subdirectory: the kill/restart test removes its dir when done,
+    // and both tests run in parallel under one `cargo test` process.
+    let dir = tmpdir().join("fanout");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shard_paths: Vec<PathBuf> = bundle
+        .split_shards(3)
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let p = dir.join(format!("fw.shard-{i}-of-3"));
+            s.save(&p).unwrap();
+            p
+        })
+        .collect();
+    let workers: Vec<(Child, String)> = shard_paths
+        .iter()
+        .enumerate()
+        .map(|(i, p)| spawn_worker(p, &format!("fw{i}")))
+        .collect();
+    let addrs: Vec<String> = workers.iter().map(|(_, a)| a.clone()).collect();
+
+    // Ids spanning all three shards, interleaved and repeated.
+    let ids: Vec<u32> = vec![0, 21, 41, 59, 5, 25, 45, 0, 30];
+    let mut local = ServeSession::new(bundle.clone(), opts(1)).unwrap();
+    let want = local.embed_nodes(&ids).unwrap();
+
+    // Pipelined (the default): write all shard requests, then read all.
+    let mut piped = RemoteRouter::connect(&addrs, rcfg()).unwrap();
+    let got = piped.embed_nodes(&ids).unwrap();
+    assert!(bits_equal(&got, &want), "pipelined fan-out must serve the local bytes");
+    let report = piped.take_fanout_report().expect("pipelined flush must record a report");
+    assert_eq!(report.width, 3, "all three shards were in flight at once");
+    assert_eq!(report.shard_wait_us.len(), 3);
+
+    // Sequential walk: one request outstanding at a time.
+    let mut seq =
+        RemoteRouter::connect(&addrs, RemoteCfg { fanout: false, ..rcfg() }).unwrap();
+    let got_seq = seq.embed_nodes(&ids).unwrap();
+    assert!(
+        bits_equal(&got_seq, &got),
+        "sequential and pipelined fan-out must serve identical bytes"
+    );
+    let report = seq.take_fanout_report().expect("sequential flush must record a report");
+    assert_eq!(report.width, 1, "sequential walk keeps one request in flight");
+    assert_eq!(report.shard_wait_us.len(), 3, "every shard is still timed");
+
+    // Classes flow through the same per-shard decode path.
+    let (_, remote_classes) = piped.classes_for_ids(&ids).unwrap();
+    let (_, local_classes) = local.predict_classes(&ids).unwrap();
+    assert_eq!(remote_classes, local_classes);
+
+    for (mut w, _) in workers {
+        w.kill().unwrap();
+        w.wait().unwrap();
+    }
+}
+
+#[test]
 fn real_worker_processes_survive_kill_and_restart() {
     let bundle = sage_bundle();
-    let dir = tmpdir();
+    // Own subdirectory: sibling tests share the per-process tmpdir root,
+    // so removing it wholesale at the end would race them.
+    let dir = tmpdir().join("killrestart");
+    std::fs::create_dir_all(&dir).unwrap();
     let shard_paths: Vec<PathBuf> = bundle
         .split_shards(2)
         .unwrap()
