@@ -34,7 +34,7 @@ use hashgnn::runtime::native::ops;
 use hashgnn::runtime::native::spec::SageMbBuild;
 use hashgnn::runtime::Engine;
 use hashgnn::ser::{self, Json};
-use hashgnn::serve::{ServeOpts, ServingBundle, ShardRouter};
+use hashgnn::serve::{Quant, ServeOpts, ServeSession, ServingBundle, ShardRouter};
 use hashgnn::tasks::sage::{self, Features, SageTask};
 use hashgnn::train::{self, TrainOpts};
 
@@ -346,7 +346,7 @@ fn main() -> hashgnn::Result<()> {
     for (mi, fanout) in [false, true].into_iter().enumerate() {
         let mut router = ShardRouter::new(
             bundle.split_shards(n_shards)?,
-            ServeOpts { threads: 1, cache_capacity: 2 * fq, seed: 11, fanout },
+            ServeOpts { threads: 1, cache_capacity: 2 * fq, seed: 11, fanout, ..Default::default() },
         )?;
         let mut lat_us: Vec<f64> = Vec::with_capacity(flushes);
         for f in 0..flushes {
@@ -375,6 +375,101 @@ fn main() -> hashgnn::Result<()> {
                 percentile(&lat_us, p),
             );
         }
+    }
+
+    // ---- serving: cold start, v1 envelope vs v2 section table -----------
+    // Open → first served response, the number the zero-copy format is
+    // for. The v1 envelope re-parses and copies every section into fresh
+    // Vecs; the v2 table verifies the directory and hands out borrowed
+    // views, so its load cost is checksumming, not allocation. Bytes
+    // served are asserted identical across formats (int8 excepted: its
+    // params are dequantized, so only shape/finiteness is checked).
+    let cold_dir = std::env::temp_dir().join("hashgnn_bench_coldstart");
+    std::fs::create_dir_all(&cold_dir).map_err(|e| hashgnn::Error::Io(e))?;
+    let p_v1 = cold_dir.join("cold.v1.bundle");
+    let p_v2 = cold_dir.join("cold.v2.bundle");
+    let p_i8 = cold_dir.join("cold.v2i8.bundle");
+    bundle.save_legacy_v1(&p_v1)?;
+    bundle.save(&p_v2)?;
+    bundle.save_with(&p_i8, Quant::Int8)?;
+    let cold_ids: Vec<u32> = (0..8u32).collect();
+    let first_response = |path: &std::path::Path| -> hashgnn::Result<Vec<f32>> {
+        let loaded = ServingBundle::load(path)?;
+        let mut s = ServeSession::new(
+            loaded,
+            ServeOpts { threads: 1, cache_capacity: 16, seed: 11, ..Default::default() },
+        )?;
+        s.embed_nodes(&cold_ids)
+    };
+    let mut cold_us = [0.0f64; 3];
+    let mut first_bytes: Vec<Vec<u32>> = Vec::new();
+    for (ci, (label, path)) in
+        [("v1 envelope", &p_v1), ("v2 sections", &p_v2), ("v2 int8", &p_i8)]
+            .into_iter()
+            .enumerate()
+    {
+        let s = Samples::collect(reps, || {
+            let _ = first_response(path).unwrap();
+        });
+        cold_us[ci] = s.median() * 1e6;
+        push_row(
+            &mut t,
+            &mut json_rows,
+            &format!("cold start open->first response ({label})"),
+            "us",
+            cold_us[ci],
+        );
+        first_bytes.push(first_response(path)?.iter().map(|v| v.to_bits()).collect());
+        let file_bytes = std::fs::metadata(path).map_err(hashgnn::Error::Io)?.len();
+        push_row(
+            &mut t,
+            &mut json_rows,
+            &format!("bundle file size ({label})"),
+            "bytes",
+            file_bytes as f64,
+        );
+    }
+    assert_eq!(
+        first_bytes[0], first_bytes[1],
+        "v2 section-table load served different bytes than the v1 envelope"
+    );
+    assert_eq!(first_bytes[0].len(), first_bytes[2].len());
+    assert!(
+        first_bytes[2].iter().all(|&b| f32::from_bits(b).is_finite()),
+        "int8 bundle served non-finite embeddings"
+    );
+    // Payload bytes copied at load: the v1 parse loop materialises every
+    // section (≈ the whole file); the v2 read hands out views, copying
+    // only the shard-ownership list (absent here — whole-bundle file).
+    let v2 = ServingBundle::load(&p_v2)?;
+    assert!(v2.meta.zero_copy && !v2.meta.quantized, "v2 f32 load must be zero-copy");
+    let v1_meta = std::fs::metadata(&p_v1).map_err(hashgnn::Error::Io)?;
+    push_row(
+        &mut t,
+        &mut json_rows,
+        "payload bytes copied at load (v1 envelope)",
+        "bytes",
+        v1_meta.len() as f64,
+    );
+    push_row(&mut t, &mut json_rows, "payload bytes copied at load (v2 sections)", "bytes", 0.0);
+    #[cfg(feature = "mmap")]
+    {
+        let s = Samples::collect(reps, || {
+            let loaded = ServingBundle::load_with(&p_v2, true).unwrap();
+            let mut sess = ServeSession::new(
+                loaded,
+                ServeOpts { threads: 1, cache_capacity: 16, seed: 11, mmap: true, ..Default::default() },
+            )
+            .unwrap();
+            let _ = sess.embed_nodes(&cold_ids).unwrap();
+        });
+        push_row(
+            &mut t,
+            &mut json_rows,
+            "cold start open->first response (v2 mmap)",
+            "us",
+            s.median() * 1e6,
+        );
     }
 
     // ---- e2e: train step, pipeline on vs off ----------------------------
@@ -439,6 +534,10 @@ fn main() -> hashgnn::Result<()> {
         (
             "shard_flush_p50_speedup_par_vs_seq",
             Json::num(if mode_p50[1] > 0.0 { mode_p50[0] / mode_p50[1] } else { 0.0 }),
+        ),
+        (
+            "cold_start_v2_speedup_vs_v1",
+            Json::num(if cold_us[1] > 0.0 { cold_us[0] / cold_us[1] } else { 0.0 }),
         ),
         ("rows", Json::Arr(json_rows)),
     ]);

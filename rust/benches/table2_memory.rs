@@ -1,13 +1,20 @@
 //! Table 2 — memory breakdown (MiB) on ogbn-products at paper scale,
-//! plus a measured breakdown at this repo's artifact scale.
+//! plus a measured breakdown at this repo's artifact scale and the
+//! serving-side bytes-resident before/after rows (legacy v1 envelope
+//! copies every section to the heap; the v2 section table serves views
+//! of one backing buffer, and int8 quantization shrinks the file ~4×
+//! on the parameter sections).
 
 mod bench_util;
 
-use hashgnn::cfg::CodingCfg;
+use hashgnn::cfg::{Coder, CodingCfg};
 use hashgnn::params::ParamStore;
 use hashgnn::report::Table;
+use hashgnn::runtime::native::spec;
 use hashgnn::runtime::Engine;
+use hashgnn::serve::{Quant, ServingBundle};
 use hashgnn::tasks::memory;
+use hashgnn::tasks::serve::{export_bundle, ExportOpts};
 
 fn render(rows: &[memory::MemoryRow], title: &str) {
     let mut t = Table::new(
@@ -79,5 +86,54 @@ fn main() -> hashgnn::Result<()> {
     } else {
         eprintln!("(artifacts not built; measured section skipped)");
     }
+
+    // Serving bytes resident: the same exported bundle written as the
+    // legacy v1 envelope, the v2 section table, and v2 with int8 params.
+    // "Copied at load" is what the parse path materialises into fresh
+    // heap allocations — the whole payload for v1, nothing for v2 f32
+    // (borrowed views), and only the dequantized params for int8.
+    let manifest = spec::builtin("node_fb_sgc_coded")?;
+    let store = ParamStore::init(&manifest, 7);
+    let opts = ExportOpts {
+        coder: Coder::Hash,
+        codes_file: None,
+        seed: 7,
+        quant: Quant::F32,
+        legacy_v1: false,
+    };
+    let bundle = export_bundle(&manifest, &store, &opts)?;
+    let dir = std::env::temp_dir().join("hashgnn_bench_table2");
+    std::fs::create_dir_all(&dir).map_err(hashgnn::Error::Io)?;
+    let mut t = Table::new(
+        "Serving bundle bytes resident (node_fb_sgc_coded, n=1024)",
+        &["format", "file KiB", "payload KiB copied at load"],
+    );
+    for (label, quant, legacy) in [
+        ("v1 envelope (before)", Quant::F32, true),
+        ("v2 sections (after)", Quant::F32, false),
+        ("v2 sections + int8", Quant::Int8, false),
+    ] {
+        let path = dir.join(format!("t2.{}.bundle", if legacy { "v1" } else { "v2" }));
+        if legacy {
+            bundle.save_legacy_v1(&path)?;
+        } else {
+            bundle.save_with(&path, quant)?;
+        }
+        let file_bytes = std::fs::metadata(&path).map_err(hashgnn::Error::Io)?.len();
+        let loaded = ServingBundle::load(&path)?;
+        let copied = if loaded.meta.zero_copy {
+            0
+        } else if loaded.meta.quantized {
+            loaded.param_bytes() as u64
+        } else {
+            file_bytes
+        };
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", file_bytes as f64 / 1024.0),
+            format!("{:.1}", copied as f64 / 1024.0),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }

@@ -11,22 +11,69 @@
 
 use crate::cfg::CodingCfg;
 use crate::rng::{Rng, Xoshiro256pp};
+use crate::ser::section::SharedU64s;
 use crate::{Error, Result};
 
+/// Backing storage for packed code words: an owned `Vec` (the training /
+/// encoding path) or a borrowed view into a serving-bundle section
+/// buffer (`HGNB0002` zero-copy load). Reads see one flat `&[u64]`
+/// either way; the first mutation of a view promotes it to an owned copy
+/// (copy-on-write), so the encoder's in-place word writes keep working
+/// unchanged.
+#[derive(Clone, Debug)]
+enum WordStore {
+    Owned(Vec<u64>),
+    View(SharedU64s),
+}
+
+impl WordStore {
+    #[inline]
+    fn as_slice(&self) -> &[u64] {
+        match self {
+            WordStore::Owned(v) => v,
+            WordStore::View(s) => s.as_slice(),
+        }
+    }
+
+    /// Mutable access; a borrowed view is copied out first (the only
+    /// place a v2-loaded code section is ever duplicated).
+    #[inline]
+    fn make_mut(&mut self) -> &mut Vec<u64> {
+        if let WordStore::View(s) = self {
+            *self = WordStore::Owned(s.as_slice().to_vec());
+        }
+        match self {
+            WordStore::Owned(v) => v,
+            WordStore::View(_) => unreachable!("just promoted"),
+        }
+    }
+}
+
 /// A dense `n × n_bits` bit matrix, rows packed into `u64` words.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct BitMatrix {
     n: usize,
     n_bits: usize,
     words_per_row: usize,
-    words: Vec<u64>,
+    words: WordStore,
+}
+
+/// Equality is by content: two matrices compare equal regardless of
+/// whether their words are owned or borrowed from a bundle buffer.
+impl PartialEq for BitMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.n_bits == other.n_bits
+            && self.words_per_row == other.words_per_row
+            && self.words.as_slice() == other.words.as_slice()
+    }
 }
 
 impl BitMatrix {
     /// All-false matrix (Algorithm 1, line 3).
     pub fn zeros(n: usize, n_bits: usize) -> Self {
         let words_per_row = n_bits.div_ceil(64);
-        Self { n, n_bits, words_per_row, words: vec![0u64; n * words_per_row] }
+        Self { n, n_bits, words_per_row, words: WordStore::Owned(vec![0u64; n * words_per_row]) }
     }
 
     pub fn n(&self) -> usize {
@@ -39,7 +86,13 @@ impl BitMatrix {
 
     /// Storage bytes (the quantity reported in Table 2).
     pub fn storage_bytes(&self) -> usize {
-        self.words.len() * 8
+        self.words.as_slice().len() * 8
+    }
+
+    /// True when the words are a borrowed view into a bundle buffer
+    /// rather than an owned heap `Vec` (zero-copy load diagnostics).
+    pub fn words_borrowed(&self) -> bool {
+        matches!(self.words, WordStore::View(_))
     }
 
     #[inline]
@@ -47,10 +100,11 @@ impl BitMatrix {
         debug_assert!(row < self.n && bit < self.n_bits);
         let w = row * self.words_per_row + bit / 64;
         let mask = 1u64 << (bit % 64);
+        let words = self.words.make_mut();
         if value {
-            self.words[w] |= mask;
+            words[w] |= mask;
         } else {
-            self.words[w] &= !mask;
+            words[w] &= !mask;
         }
     }
 
@@ -58,7 +112,7 @@ impl BitMatrix {
     pub fn get(&self, row: usize, bit: usize) -> bool {
         debug_assert!(row < self.n && bit < self.n_bits);
         let w = row * self.words_per_row + bit / 64;
-        (self.words[w] >> (bit % 64)) & 1 == 1
+        (self.words.as_slice()[w] >> (bit % 64)) & 1 == 1
     }
 
     /// Words per packed row (`ceil(n_bits / 64)`).
@@ -85,12 +139,12 @@ impl BitMatrix {
                 || value >> (self.n_bits % 64) == 0,
             "set_word: nonzero padding bits past n_bits"
         );
-        self.words[row * self.words_per_row + word] = value;
+        self.words.make_mut()[row * self.words_per_row + word] = value;
     }
 
     /// Raw words of one row.
     pub fn row_words(&self, row: usize) -> &[u64] {
-        &self.words[row * self.words_per_row..(row + 1) * self.words_per_row]
+        &self.words.as_slice()[row * self.words_per_row..(row + 1) * self.words_per_row]
     }
 
     /// All packed words, row-major with [`Self::words_per_row`] words per
@@ -99,7 +153,7 @@ impl BitMatrix {
     /// assemble 64 bits per store without going through `&mut self`.
     /// Callers must keep the padding invariant of [`Self::set_word`].
     pub fn words_mut(&mut self) -> &mut [u64] {
-        &mut self.words
+        self.words.make_mut()
     }
 
     /// Number of rows that collide (i.e. `n − #distinct codes`) — the
@@ -146,13 +200,12 @@ impl BitMatrix {
     /// read-only view for serializers (the serving bundle embeds the raw
     /// words verbatim).
     pub fn words(&self) -> &[u64] {
-        &self.words
+        self.words.as_slice()
     }
 
-    /// Rebuild from raw packed words (inverse of [`Self::words`]); the
-    /// word count and the padding invariant of [`Self::set_word`] are
-    /// checked.
-    pub fn from_words(n: usize, n_bits: usize, words: Vec<u64>) -> Result<Self> {
+    /// Shared validation for [`Self::from_words`] / [`Self::from_shared_words`]:
+    /// word count and the padding invariant of [`Self::set_word`].
+    fn check_words(n: usize, n_bits: usize, words: &[u64]) -> Result<usize> {
         let words_per_row = n_bits.div_ceil(64);
         if words.len() != n * words_per_row {
             return Err(Error::Shape(format!(
@@ -171,7 +224,23 @@ impl BitMatrix {
                 }
             }
         }
-        Ok(Self { n, n_bits, words_per_row, words })
+        Ok(words_per_row)
+    }
+
+    /// Rebuild from raw packed words (inverse of [`Self::words`]); the
+    /// word count and the padding invariant of [`Self::set_word`] are
+    /// checked.
+    pub fn from_words(n: usize, n_bits: usize, words: Vec<u64>) -> Result<Self> {
+        let words_per_row = Self::check_words(n, n_bits, &words)?;
+        Ok(Self { n, n_bits, words_per_row, words: WordStore::Owned(words) })
+    }
+
+    /// Zero-copy counterpart of [`Self::from_words`]: the packed words
+    /// stay a borrowed view into a serving-bundle section buffer. Same
+    /// validation; reads are identical; the first mutation copies.
+    pub fn from_shared_words(n: usize, n_bits: usize, words: SharedU64s) -> Result<Self> {
+        let words_per_row = Self::check_words(n, n_bits, words.as_slice())?;
+        Ok(Self { n, n_bits, words_per_row, words: WordStore::View(words) })
     }
 
     /// Serialize to a compact binary file.
@@ -181,10 +250,11 @@ impl BitMatrix {
     /// (`n`, `n_bits`, packed words, all LE) — truncation and bit rot are
     /// caught at [`Self::load`] before any decoding.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        let mut payload = Vec::with_capacity(16 + self.words.len() * 8);
+        let words = self.words.as_slice();
+        let mut payload = Vec::with_capacity(16 + words.len() * 8);
         payload.extend_from_slice(&(self.n as u64).to_le_bytes());
         payload.extend_from_slice(&(self.n_bits as u64).to_le_bytes());
-        for w in &self.words {
+        for w in words {
             payload.extend_from_slice(&w.to_le_bytes());
         }
         std::fs::write(path, crate::ser::write_envelope(b"HGNC0002", &payload))?;
@@ -471,6 +541,29 @@ mod tests {
             BitMatrix::from_words(1, 20, vec![1u64 << 20]).is_err(),
             "padding bit past n_bits"
         );
+    }
+
+    #[test]
+    fn shared_words_view_reads_equal_and_copies_on_write() {
+        use crate::ser::section::SectionBuf;
+        let t = random_codes(9, coding(4, 10), 2); // 20 bits/row → 1 word/row
+        let mut bytes = Vec::new();
+        for w in t.bits.words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let buf = SectionBuf::from_bytes(&bytes);
+        let shared = SharedU64s::new(buf, 0, t.bits.words().len()).unwrap();
+        let view = BitMatrix::from_shared_words(9, 20, shared.clone()).unwrap();
+        assert!(view.words_borrowed());
+        assert_eq!(view, t.bits, "view reads bit-identically");
+        // Mutation promotes to an owned copy; the backing stays untouched.
+        let mut mutated = view.clone();
+        mutated.set(0, 0, !mutated.get(0, 0));
+        assert!(!mutated.words_borrowed());
+        assert_ne!(mutated, t.bits);
+        assert_eq!(shared.as_slice(), t.bits.words(), "backing unchanged");
+        // Validation still applies to views.
+        assert!(BitMatrix::from_shared_words(8, 20, shared).is_err(), "wrong count");
     }
 
     #[test]

@@ -36,6 +36,13 @@ impl Graph {
         Ok(Self { adj, labels: None, n_classes: 0 })
     }
 
+    /// [`Self::from_edges`] over any edge iterator (serving bundles keep
+    /// edges as an in-place flat view; no pair `Vec` is materialized).
+    pub fn from_edge_iter<I: IntoIterator<Item = (u32, u32)>>(n: usize, edges: I) -> Result<Self> {
+        let adj = Csr::from_edge_iter(n, edges)?.symmetrize()?;
+        Ok(Self { adj, labels: None, n_classes: 0 })
+    }
+
     /// Attach node labels in `[0, n_classes)`.
     pub fn with_labels(mut self, labels: Vec<u32>, n_classes: usize) -> Result<Self> {
         if labels.len() != self.n_nodes() {

@@ -380,6 +380,17 @@ fn cmd_export(argv: Vec<String>) -> Result<()> {
             "split the export into K contiguous node-range shard files \
              (<out>.shard-<i>-of-<K>, served together by the shard router)",
         )
+        .opt(
+            "quant",
+            "f32",
+            "parameter encoding: f32 (exact) | int8 (per-row quantization of rank-2 \
+             tensors, ~4x smaller params, dequantized once at load)",
+        )
+        .flag(
+            "legacy-v1",
+            "write the superseded HGNB0001 envelope instead of the v2 section table \
+             (back-compat fixtures / before-after benches; f32 only)",
+        )
         .parse(argv)?;
     // The bundle is a native-serving artifact; the native backend loads
     // (or synthesizes) the manifest without requiring HLO files.
@@ -391,6 +402,8 @@ fn cmd_export(argv: Vec<String>) -> Result<()> {
         coder: Coder::parse(&a.get("coder"))?,
         codes_file: if codes.is_empty() { None } else { Some(codes.into()) },
         seed: a.get_u64("seed")?,
+        quant: hashgnn::serve::Quant::parse(&a.get("quant"))?,
+        legacy_v1: a.get_bool("legacy-v1"),
     };
     let out = a.get("out");
     let shards = a.get_usize("shards")?;
@@ -452,6 +465,11 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
             "walk shard sub-requests sequentially instead of in parallel (bytes are \
              identical either way; only latency changes)",
         )
+        .flag(
+            "mmap",
+            "map bundle file(s) into memory instead of heap-reading them (needs a \
+             build with --features mmap; served bytes are identical)",
+        )
         .parse(argv)?;
     let paths = bundle_paths(&a.get("bundle"));
     let mut backend = load_backend(
@@ -461,6 +479,7 @@ fn cmd_infer(argv: Vec<String>) -> Result<()> {
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
             fanout: !a.get_bool("no-fanout"),
+            mmap: a.get_bool("mmap"),
         },
     )?;
     let session = backend.as_mut();
@@ -616,6 +635,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "dispatch shard sub-requests sequentially instead of in parallel (local router) \
          or unpipelined (--remote); served bytes are identical either way",
     )
+    .flag(
+        "mmap",
+        "map bundle file(s) into memory instead of heap-reading them (needs a build \
+         with --features mmap; served bytes are identical)",
+    )
     .parse(argv)?;
     let listen = a.get("listen");
     let n_modes = [a.get_bool("oneshot"), a.get_bool("stdin"), !listen.is_empty()]
@@ -675,6 +699,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             cache_capacity: a.get_usize("cache")?,
             seed: a.get_u64("seed")?,
             fanout: !a.get_bool("no-fanout"),
+            mmap: a.get_bool("mmap"),
         };
         if a.get_bool("shard-worker") {
             load_worker_backend(&paths, opts)?

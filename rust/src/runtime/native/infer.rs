@@ -39,7 +39,7 @@ use crate::{Error, Result};
 use super::gnn::{self, split_codes, validate_edges};
 use super::layers::FeatSource;
 use super::par::resolve_threads;
-use super::{normalize_manifest, ops, param_slices, resolve_task, sage, Task};
+use super::{check_param_slices, normalize_manifest, ops, param_slices, resolve_task, sage, Task};
 
 /// A manifest compiled for forward-only execution: resolved parameter
 /// indices and dims, with no optimizer or gradient machinery attached.
@@ -186,7 +186,21 @@ impl InferModel {
     /// Node representations for one batch (layout per the module table).
     /// Bit-identical to the training forward's representations.
     pub fn embed_nodes(&self, params: &[Tensor], batch: &[Tensor], threads: usize) -> Result<Tensor> {
-        let slices = self.slices(params)?;
+        self.embed_nodes_with(&self.slices(params)?, batch, threads)
+    }
+
+    /// [`Self::embed_nodes`] over pre-sliced parameter data — the form a
+    /// zero-copy [`crate::serve::ServingBundle`] hands out (borrowed
+    /// `&[f32]` views of its file image, no [`Tensor`] materialized).
+    /// Identical kernels, identical results.
+    pub fn embed_nodes_with(
+        &self,
+        params: &[&[f32]],
+        batch: &[Tensor],
+        threads: usize,
+    ) -> Result<Tensor> {
+        check_param_slices(&self.manifest, params)?;
+        let slices = params;
         let threads = resolve_threads(threads);
         match &self.task {
             Task::Recon { d_e, .. } => {
@@ -216,7 +230,19 @@ impl InferModel {
     /// Edge scores — dot products of the two endpoint representations,
     /// matching the training link heads bit for bit.
     pub fn score_edges(&self, params: &[Tensor], batch: &[Tensor], threads: usize) -> Result<Tensor> {
-        let slices = self.slices(params)?;
+        self.score_edges_with(&self.slices(params)?, batch, threads)
+    }
+
+    /// [`Self::score_edges`] over pre-sliced parameter data (see
+    /// [`Self::embed_nodes_with`]).
+    pub fn score_edges_with(
+        &self,
+        params: &[&[f32]],
+        batch: &[Tensor],
+        threads: usize,
+    ) -> Result<Tensor> {
+        check_param_slices(&self.manifest, params)?;
+        let slices = params;
         let threads = resolve_threads(threads);
         match &self.task {
             Task::Recon { d_e, .. } => {
@@ -270,7 +296,19 @@ impl InferModel {
         batch: &[Tensor],
         threads: usize,
     ) -> Result<Tensor> {
-        let slices = self.slices(params)?;
+        self.predict_classes_with(&self.slices(params)?, batch, threads)
+    }
+
+    /// [`Self::predict_classes`] over pre-sliced parameter data (see
+    /// [`Self::embed_nodes_with`]).
+    pub fn predict_classes_with(
+        &self,
+        params: &[&[f32]],
+        batch: &[Tensor],
+        threads: usize,
+    ) -> Result<Tensor> {
+        check_param_slices(&self.manifest, params)?;
+        let slices = params;
         let threads = resolve_threads(threads);
         match &self.task {
             Task::SageClf { sage, head, n_classes, dims } => {
@@ -310,6 +348,18 @@ impl InferModel {
         rows: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
+        self.head_logits_with(&self.slices(params)?, h, rows, threads)
+    }
+
+    /// [`Self::head_logits`] over pre-sliced parameter data (see
+    /// [`Self::embed_nodes_with`]).
+    pub fn head_logits_with(
+        &self,
+        params: &[&[f32]],
+        h: &[f32],
+        rows: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
         let (head, n_classes, hidden) = match &self.task {
             Task::SageClf { head, n_classes, dims, .. } => (head, *n_classes, dims.hidden),
             Task::FbClf { head, n_classes, dims, .. } => (head, *n_classes, dims.hidden),
@@ -326,7 +376,8 @@ impl InferModel {
                 h.len()
             )));
         }
-        let slices = self.slices(params)?;
+        check_param_slices(&self.manifest, params)?;
+        let slices = params;
         let threads = resolve_threads(threads);
         let mut logits = vec![0.0f32; rows * n_classes];
         head.fwd(&slices, h, rows, false, &mut logits, threads);

@@ -165,6 +165,33 @@ fn normalize_manifest(manifest: &Manifest, task: &Task) -> Manifest {
 
 /// Borrow every parameter tensor as a checked `&[f32]` slice in manifest
 /// order (shared by the train and inference models).
+/// Validate already-sliced parameter data against the manifest — the
+/// entry check for the `*_with` inference paths, where a serving bundle
+/// hands out borrowed `&[f32]` views of its file image instead of owned
+/// [`Tensor`]s. Mirrors [`param_slices`] exactly (count, then per-param
+/// element count), so passing `param_slices(...)?` output always
+/// succeeds.
+pub fn check_param_slices(manifest: &Manifest, slices: &[&[f32]]) -> Result<()> {
+    if slices.len() < manifest.params.len() {
+        return Err(Error::Shape(format!(
+            "got {} param slices, manifest has {}",
+            slices.len(),
+            manifest.params.len()
+        )));
+    }
+    for (spec, data) in manifest.params.iter().zip(slices) {
+        if data.len() != spec.n_elements() {
+            return Err(Error::Shape(format!(
+                "param '{}' has {} elements, spec wants {}",
+                spec.name,
+                data.len(),
+                spec.n_elements()
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn param_slices<'a>(manifest: &Manifest, params: &'a [Tensor]) -> Result<Vec<&'a [f32]>> {
     if params.len() < manifest.params.len() {
         return Err(Error::Shape(format!(

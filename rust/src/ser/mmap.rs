@@ -1,0 +1,116 @@
+//! Read-only file mapping behind the default-off `mmap` cargo feature.
+//!
+//! The crate is zero-dependency, so instead of pulling in `libc` this
+//! module declares the two syscall wrappers it needs directly (they are
+//! part of every Unix libc ABI the crate targets). The feature mirrors
+//! the `xla` pattern: default-off, the heap read in
+//! [`super::section::SectionBuf::read_heap`] stays the portable default,
+//! and nothing outside `ser/` touches a raw pointer.
+//!
+//! Why map at all: K shard-worker processes serving the same bundle file
+//! share its page-cache pages instead of making K heap copies, and a
+//! multi-GB bundle starts serving after reading only the header +
+//! directory + one checksum pass (the kernel pages payloads in on
+//! demand).
+
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+// Stable POSIX constants (identical on linux and macOS for these flags).
+const PROT_READ: i32 = 1;
+const MAP_SHARED: i32 = 1;
+
+extern "C" {
+    fn mmap(
+        addr: *mut core::ffi::c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut core::ffi::c_void;
+    fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+}
+
+/// A read-only, shared, whole-file mapping. Unmapped on drop.
+pub struct Map {
+    ptr: *const u8,
+    len: usize,
+}
+
+// The mapping is PROT_READ for its whole lifetime and never remapped, so
+// concurrent reads from any thread are safe.
+unsafe impl Send for Map {}
+unsafe impl Sync for Map {}
+
+impl Map {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            // mmap of length 0 is EINVAL; an empty artifact can't be a
+            // section file anyway (no header), so surface that directly.
+            return Err(Error::Config(format!(
+                "{}: cannot map an empty file",
+                path.display()
+            )));
+        }
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1.
+        if ptr as isize == -1 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        // `f` closes on return; the mapping keeps the pages alive.
+        Ok(Self { ptr: ptr as *const u8, len })
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.ptr as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_a_file_and_reads_it_back() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hashgnn_mmap_test_{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..=255).cycle().take(1000).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = Map::open(&path).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hashgnn_mmap_empty_{}.bin", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        assert!(Map::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -8,7 +8,10 @@
 //! only carry shapes, names and hyper-parameters — all exactly
 //! representable).
 
+#[cfg(all(feature = "mmap", unix))]
+pub mod mmap;
 mod parse;
+pub mod section;
 mod write;
 
 pub use parse::parse;

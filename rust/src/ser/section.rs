@@ -1,0 +1,747 @@
+//! Fixed-offset section tables — the zero-copy artifact framing behind
+//! the `HGNB0002` / `HGNS0002` serving formats.
+//!
+//! The legacy [`super::write_envelope`] framing (`HGNB0001`, checkpoints,
+//! code files) checksums one opaque payload, which forces loaders to walk
+//! a sequential parse loop and heap-copy every field. A section file
+//! instead publishes a **directory of typed, 64-byte-aligned sections**
+//! up front, so a loader can (a) verify the directory *before* touching a
+//! single payload byte — truncation is reported **by section name**, not
+//! as a generic checksum failure after reading the whole file — and
+//! (b) hand out **borrowed in-place views** (`&[u32]` / `&[u64]` /
+//! `&[f32]`) straight into one backing buffer: no per-section `Vec`
+//! copies, no parse loop, and an identical layout whether the backing is
+//! a heap read or an `mmap` (the default-off `mmap` cargo feature,
+//! [`super::mmap`]).
+//!
+//! # Layout (all little-endian)
+//!
+//! ```text
+//! offset 0    8-byte ASCII magic (format version lives in the magic)
+//! offset 8    u64 section count
+//! offset 16   u64 total file length in bytes
+//! offset 24   u64 FNV-1a of the directory bytes
+//! offset 32   32 zero bytes (reserved)
+//! offset 64   directory: count × 32-byte entries
+//!               { u64 tag (8 ASCII bytes), u64 offset, u64 len,
+//!                 u64 FNV-1a of the payload bytes }
+//! ...         payloads, each starting at a 64-byte-aligned offset, in
+//!             directory order, zero-padded between sections
+//! ```
+//!
+//! The alignment rule is what makes in-place typed views sound: every
+//! payload offset is a multiple of 64, the heap backing is allocated as
+//! `u64` words (8-byte-aligned base) and an `mmap` base is page-aligned,
+//! so a `&[f32]` / `&[u32]` / `&[u64]` view at any section offset is
+//! always correctly aligned. Offsets are absolute file offsets; `len` is
+//! the exact payload byte count (padding is excluded from the checksum).
+//!
+//! Open order is fail-fast: header bounds → magic → declared total
+//! length vs. actual → directory checksum → per-section bounds (named
+//! errors) → per-section checksums (named errors). Only then are views
+//! handed out, so a corrupt file can never be partially served.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+use super::fnv1a64;
+
+// In-place views reinterpret little-endian file bytes as host integers /
+// floats. Every rust_pallas deployment target is little-endian; a
+// big-endian port would need decode-on-read accessors here instead.
+#[cfg(target_endian = "big")]
+compile_error!(
+    "ser::section hands out in-place &[u32]/&[u64]/&[f32] views of little-endian \
+     file bytes and therefore requires a little-endian target"
+);
+
+/// Section payload alignment (bytes). Also the header size.
+pub const ALIGN: usize = 64;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 64;
+/// Directory entry size in bytes.
+pub const DIR_ENTRY_LEN: usize = 32;
+/// Sanity cap on the declared section count (a corrupt header must not
+/// drive a multi-GiB directory allocation).
+pub const MAX_SECTIONS: usize = 4096;
+
+/// An 8-byte ASCII section tag (zero-padded on the right).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Tag(pub [u8; 8]);
+
+impl Tag {
+    /// Human name for error messages: trailing zero bytes stripped.
+    pub fn name(&self) -> String {
+        let end = self.0.iter().position(|&b| b == 0).unwrap_or(8);
+        String::from_utf8_lossy(&self.0[..end]).into_owned()
+    }
+}
+
+impl std::fmt::Debug for Tag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tag({})", self.name())
+    }
+}
+
+fn align_up(v: usize) -> usize {
+    v.div_ceil(ALIGN) * ALIGN
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Assemble a section file: append sections, then [`SectionWriter::finish`]
+/// computes offsets, per-section checksums and the directory checksum.
+#[derive(Default)]
+pub struct SectionWriter {
+    sections: Vec<(Tag, Vec<u8>)>,
+}
+
+impl SectionWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new section and return its payload buffer to fill.
+    /// Sections are written in call order; duplicate tags are a logic
+    /// error caught at `finish`.
+    pub fn section(&mut self, tag: [u8; 8]) -> &mut Vec<u8> {
+        self.sections.push((Tag(tag), Vec::new()));
+        &mut self.sections.last_mut().expect("just pushed").1
+    }
+
+    /// Serialize: header + directory + aligned payloads, checksums filled.
+    pub fn finish(self, magic: &[u8; 8]) -> Result<Vec<u8>> {
+        let n = self.sections.len();
+        if n > MAX_SECTIONS {
+            return Err(Error::Config(format!(
+                "section file would carry {n} sections (cap {MAX_SECTIONS})"
+            )));
+        }
+        for (i, (tag, _)) in self.sections.iter().enumerate() {
+            if self.sections[..i].iter().any(|(t, _)| t == tag) {
+                return Err(Error::Config(format!(
+                    "duplicate section tag '{}' in section file",
+                    tag.name()
+                )));
+            }
+        }
+        let dir_end = HEADER_LEN + n * DIR_ENTRY_LEN;
+        let mut offset = align_up(dir_end);
+        let mut entries = Vec::with_capacity(n);
+        for (tag, payload) in &self.sections {
+            entries.push((*tag, offset, payload.len(), fnv1a64(payload)));
+            offset = align_up(offset + payload.len());
+        }
+        // Total length: end of the last payload (unpadded) — or the padded
+        // directory end when there are no sections.
+        let total = entries
+            .last()
+            .map(|&(_, off, len, _)| off + len)
+            .unwrap_or_else(|| align_up(dir_end));
+
+        let mut dir = Vec::with_capacity(n * DIR_ENTRY_LEN);
+        for &(tag, off, len, sum) in &entries {
+            dir.extend_from_slice(&tag.0);
+            dir.extend_from_slice(&(off as u64).to_le_bytes());
+            dir.extend_from_slice(&(len as u64).to_le_bytes());
+            dir.extend_from_slice(&sum.to_le_bytes());
+        }
+
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(magic);
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        out.extend_from_slice(&(total as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&dir).to_le_bytes());
+        out.resize(HEADER_LEN, 0);
+        out.extend_from_slice(&dir);
+        for ((_, payload), &(_, off, _, _)) in self.sections.iter().zip(&entries) {
+            out.resize(off, 0); // zero pad up to the aligned offset
+            out.extend_from_slice(payload);
+        }
+        debug_assert_eq!(out.len(), total);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backing buffer
+// ---------------------------------------------------------------------------
+
+/// The single backing buffer every borrowed view points into: a heap
+/// read (allocated as `u64` words so the base is 8-byte-aligned) or a
+/// read-only file mapping behind the `mmap` feature. Shared by
+/// `Arc` — views each hold a clone, so a loaded bundle is freely
+/// clonable and `Sync` without self-referential lifetimes.
+pub struct SectionBuf {
+    repr: Repr,
+}
+
+enum Repr {
+    /// `words` holds `len.div_ceil(8)` u64s; the live bytes are the first
+    /// `len` of its byte view.
+    Heap { words: Vec<u64>, len: usize },
+    #[cfg(all(feature = "mmap", unix))]
+    Map(super::mmap::Map),
+}
+
+impl SectionBuf {
+    /// Read a whole file into an 8-byte-aligned heap buffer (one read,
+    /// the zero-dependency default path).
+    pub fn read_heap(path: &Path) -> Result<Arc<Self>> {
+        let mut f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        let mut words = vec![0u64; len.div_ceil(8)];
+        {
+            // &mut [u8] view of the word buffer: u64 → u8 loosens
+            // alignment and both types have no padding, so this is sound.
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len)
+            };
+            std::io::Read::read_exact(&mut f, bytes)?;
+        }
+        Ok(Arc::new(Self { repr: Repr::Heap { words, len } }))
+    }
+
+    /// Map a file read-only (`mmap` feature): K worker processes serving
+    /// the same bundle share the page cache instead of K heap copies.
+    #[cfg(all(feature = "mmap", unix))]
+    pub fn map(path: &Path) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self { repr: Repr::Map(super::mmap::Map::open(path)?) }))
+    }
+
+    /// Wrap an in-memory image (tests; the writer's output can be opened
+    /// without a filesystem round-trip).
+    pub fn from_bytes(bytes: &[u8]) -> Arc<Self> {
+        let len = bytes.len();
+        let mut words = vec![0u64; len.div_ceil(8)];
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len)
+        };
+        dst.copy_from_slice(bytes);
+        Arc::new(Self { repr: Repr::Heap { words, len } })
+    }
+
+    /// The whole backing as bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.repr {
+            Repr::Heap { words, len } => unsafe {
+                std::slice::from_raw_parts(words.as_ptr() as *const u8, *len)
+            },
+            #[cfg(all(feature = "mmap", unix))]
+            Repr::Map(m) => m.bytes(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            Repr::Heap { len, .. } => *len,
+            #[cfg(all(feature = "mmap", unix))]
+            Repr::Map(m) => m.bytes().len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the backing is a file mapping rather than a heap read.
+    pub fn is_mapped(&self) -> bool {
+        match &self.repr {
+            Repr::Heap { .. } => false,
+            #[cfg(all(feature = "mmap", unix))]
+            Repr::Map(_) => true,
+        }
+    }
+
+    fn check_typed(&self, off: usize, byte_len: usize, align: usize, what: &str) -> Result<()> {
+        if off % align != 0 {
+            return Err(Error::Config(format!(
+                "section view: {what} at offset {off} is not {align}-byte aligned"
+            )));
+        }
+        if off + byte_len > self.len() {
+            return Err(Error::Config(format!(
+                "section view: {what} [{off}, {}) exceeds the {}-byte backing",
+                off + byte_len,
+                self.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// A mapped buffer is read-only for its whole lifetime, so sharing
+// references across the serving worker pool is safe. (The heap variant is
+// Send + Sync automatically; the raw-pointer map needs the explicit vouch,
+// which lives on `mmap::Map` itself.)
+
+macro_rules! shared_view {
+    ($name:ident, $ty:ty, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Clone)]
+        pub struct $name {
+            buf: Arc<SectionBuf>,
+            off: usize,
+            n: usize,
+        }
+
+        impl $name {
+            /// Validated construction: `off` (bytes) must be aligned for
+            /// the element type and `n` elements must fit the backing.
+            pub fn new(buf: Arc<SectionBuf>, off: usize, n: usize) -> Result<Self> {
+                let elem = std::mem::size_of::<$ty>();
+                buf.check_typed(off, n * elem, std::mem::align_of::<$ty>(), stringify!($name))?;
+                Ok(Self { buf, off, n })
+            }
+
+            #[inline]
+            pub fn as_slice(&self) -> &[$ty] {
+                // Alignment and bounds were validated at construction and
+                // the backing is immutable and pinned by the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        self.buf.bytes().as_ptr().add(self.off) as *const $ty,
+                        self.n,
+                    )
+                }
+            }
+
+            pub fn len(&self) -> usize {
+                self.n
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.n == 0
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}(off={}, n={})", stringify!($name), self.off, self.n)
+            }
+        }
+    };
+}
+
+shared_view!(SharedU64s, u64, "Borrowed `&[u64]` view into a [`SectionBuf`].");
+shared_view!(SharedU32s, u32, "Borrowed `&[u32]` view into a [`SectionBuf`].");
+shared_view!(SharedF32s, f32, "Borrowed `&[f32]` view into a [`SectionBuf`].");
+shared_view!(SharedBytes, u8, "Borrowed `&[u8]` view into a [`SectionBuf`].");
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// One verified directory entry.
+#[derive(Clone, Copy, Debug)]
+pub struct Entry {
+    pub tag: Tag,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A parsed, fully-verified section file: directory checked first, then
+/// every section's bounds and checksum — all before any view is handed
+/// out. Accessors return borrowed views; nothing is copied.
+pub struct SectionFile {
+    buf: Arc<SectionBuf>,
+    entries: Vec<Entry>,
+    magic_index: usize,
+    kind: String,
+    path: std::path::PathBuf,
+}
+
+impl SectionFile {
+    /// Parse and verify an already-loaded backing. `magics` lists every
+    /// acceptable magic; `kind` names the artifact in errors.
+    pub fn parse(
+        buf: Arc<SectionBuf>,
+        magics: &[&[u8; 8]],
+        kind: &str,
+        path: &Path,
+    ) -> Result<Self> {
+        let bytes = buf.bytes();
+        if bytes.len() < HEADER_LEN {
+            return Err(Error::Config(format!(
+                "{}: not a {kind} ({} bytes is shorter than the {HEADER_LEN}-byte header)",
+                path.display(),
+                bytes.len()
+            )));
+        }
+        let magic_index = magics
+            .iter()
+            .position(|m| bytes[..8] == m[..])
+            .ok_or_else(|| {
+                Error::Config(format!("{}: not a {kind} (bad magic)", path.display()))
+            })?;
+        let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        let count = u64_at(8) as usize;
+        let total = u64_at(16) as usize;
+        let dir_sum = u64_at(24);
+        if count > MAX_SECTIONS {
+            return Err(Error::Config(format!(
+                "{}: {kind} declares {count} sections (cap {MAX_SECTIONS}) — corrupt header?",
+                path.display()
+            )));
+        }
+        if bytes.len() > total {
+            return Err(Error::Config(format!(
+                "{}: {kind} is {} bytes, header says {total} — trailing bytes?",
+                path.display(),
+                bytes.len()
+            )));
+        }
+        // A short file (bytes.len() < total) is NOT rejected here: if the
+        // directory survived, the per-entry bounds walk below names the
+        // first section the cut landed in — far more actionable than a
+        // generic length mismatch.
+        let dir_end = HEADER_LEN + count * DIR_ENTRY_LEN;
+        if dir_end > bytes.len() {
+            return Err(Error::Config(format!(
+                "{}: {kind} section directory ({count} entries) is truncated",
+                path.display()
+            )));
+        }
+        // Directory integrity FIRST — before a single payload byte is
+        // trusted, so every later error can name its section.
+        let dir = &bytes[HEADER_LEN..dir_end];
+        if fnv1a64(dir) != dir_sum {
+            return Err(Error::Config(format!(
+                "{}: {kind} section directory checksum mismatch — refusing to decode",
+                path.display()
+            )));
+        }
+        let mut entries = Vec::with_capacity(count);
+        let mut prev_end = dir_end;
+        for i in 0..count {
+            let e = HEADER_LEN + i * DIR_ENTRY_LEN;
+            let mut tag = [0u8; 8];
+            tag.copy_from_slice(&bytes[e..e + 8]);
+            let tag = Tag(tag);
+            let offset = u64_at(e + 8) as usize;
+            let len = u64_at(e + 16) as usize;
+            if offset % ALIGN != 0 {
+                return Err(Error::Config(format!(
+                    "{}: {kind} section '{}' offset {offset} is not {ALIGN}-byte aligned",
+                    path.display(),
+                    tag.name()
+                )));
+            }
+            if offset < prev_end {
+                return Err(Error::Config(format!(
+                    "{}: {kind} section '{}' overlaps the previous section",
+                    path.display(),
+                    tag.name()
+                )));
+            }
+            // Fail fast, by name: a truncated file is reported against the
+            // first section whose payload falls outside the actual bytes.
+            if offset.checked_add(len).map(|end| end > bytes.len()).unwrap_or(true) {
+                return Err(Error::Config(format!(
+                    "{}: {kind} section '{}' truncated — needs {len} bytes at offset \
+                     {offset}, file has {}",
+                    path.display(),
+                    tag.name(),
+                    bytes.len()
+                )));
+            }
+            prev_end = offset + len;
+            entries.push(Entry { tag, offset, len });
+        }
+        // Every section fit, so a remaining length mismatch means the
+        // header itself lied about the total.
+        if total != bytes.len() {
+            return Err(Error::Config(format!(
+                "{}: {kind} is {} bytes, header says {total} (truncated?)",
+                path.display(),
+                bytes.len()
+            )));
+        }
+        // Payload integrity, still before any decoding — one sequential
+        // hashing pass per section, zero copies.
+        for (i, e) in entries.iter().enumerate() {
+            let d = HEADER_LEN + i * DIR_ENTRY_LEN;
+            let expect = u64_at(d + 24);
+            let got = fnv1a64(&bytes[e.offset..e.offset + e.len]);
+            if got != expect {
+                return Err(Error::Config(format!(
+                    "{}: {kind} section '{}' checksum mismatch \
+                     (stored {expect:#018x}, computed {got:#018x})",
+                    path.display(),
+                    e.tag.name()
+                )));
+            }
+        }
+        Ok(Self {
+            buf,
+            entries,
+            magic_index,
+            kind: kind.to_string(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Read + verify from disk into the heap backing.
+    pub fn open_heap(path: &Path, magics: &[&[u8; 8]], kind: &str) -> Result<Self> {
+        Self::parse(SectionBuf::read_heap(path)?, magics, kind, path)
+    }
+
+    /// Map + verify (`mmap` feature): checksums stream through the
+    /// mapping once; pages stay shared across processes.
+    #[cfg(all(feature = "mmap", unix))]
+    pub fn open_mmap(path: &Path, magics: &[&[u8; 8]], kind: &str) -> Result<Self> {
+        Self::parse(SectionBuf::map(path)?, magics, kind, path)
+    }
+
+    /// Which of the accepted magics matched.
+    pub fn magic_index(&self) -> usize {
+        self.magic_index
+    }
+
+    pub fn backing(&self) -> &Arc<SectionBuf> {
+        &self.buf
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    pub fn find(&self, tag: [u8; 8]) -> Option<Entry> {
+        self.entries.iter().find(|e| e.tag == Tag(tag)).copied()
+    }
+
+    pub fn has(&self, tag: [u8; 8]) -> bool {
+        self.find(tag).is_some()
+    }
+
+    fn require(&self, tag: [u8; 8]) -> Result<Entry> {
+        self.find(tag).ok_or_else(|| {
+            Error::Config(format!(
+                "{}: {} has no '{}' section",
+                self.path.display(),
+                self.kind,
+                Tag(tag).name()
+            ))
+        })
+    }
+
+    fn elems(&self, tag: [u8; 8], elem: usize) -> Result<(Entry, usize)> {
+        let e = self.require(tag)?;
+        if e.len % elem != 0 {
+            return Err(Error::Config(format!(
+                "{}: {} section '{}' holds {} bytes, not a multiple of {elem}",
+                self.path.display(),
+                self.kind,
+                e.tag.name(),
+                e.len
+            )));
+        }
+        Ok((e, e.len / elem))
+    }
+
+    /// Borrowed raw bytes of a section.
+    pub fn bytes(&self, tag: [u8; 8]) -> Result<SharedBytes> {
+        let e = self.require(tag)?;
+        SharedBytes::new(self.buf.clone(), e.offset, e.len)
+    }
+
+    /// Borrowed `&[u64]` view of a section.
+    pub fn u64s(&self, tag: [u8; 8]) -> Result<SharedU64s> {
+        let (e, n) = self.elems(tag, 8)?;
+        SharedU64s::new(self.buf.clone(), e.offset, n)
+    }
+
+    /// Borrowed `&[u32]` view of a section.
+    pub fn u32s(&self, tag: [u8; 8]) -> Result<SharedU32s> {
+        let (e, n) = self.elems(tag, 4)?;
+        SharedU32s::new(self.buf.clone(), e.offset, n)
+    }
+
+    /// Borrowed `&[f32]` view of a section.
+    pub fn f32s(&self, tag: [u8; 8]) -> Result<SharedF32s> {
+        let (e, n) = self.elems(tag, 4)?;
+        SharedF32s::new(self.buf.clone(), e.offset, n)
+    }
+
+    /// UTF-8 text of a section (manifest JSON).
+    pub fn text(&self, tag: [u8; 8]) -> Result<&str> {
+        let e = self.require(tag)?;
+        std::str::from_utf8(&self.buf.bytes()[e.offset..e.offset + e.len]).map_err(|_| {
+            Error::Config(format!(
+                "{}: {} section '{}' is not UTF-8",
+                self.path.display(),
+                self.kind,
+                e.tag.name()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    const MAGIC: &[u8; 8] = b"HGNT0002";
+
+    fn build(sections: &[([u8; 8], Vec<u8>)]) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        for (tag, data) in sections {
+            w.section(*tag).extend_from_slice(data);
+        }
+        w.finish(MAGIC).unwrap()
+    }
+
+    fn parse(bytes: &[u8]) -> Result<SectionFile> {
+        SectionFile::parse(
+            SectionBuf::from_bytes(bytes),
+            &[MAGIC],
+            "test artifact",
+            Path::new("mem"),
+        )
+    }
+
+    #[test]
+    fn roundtrip_views_are_exact_and_aligned() {
+        let a: Vec<u8> = (0..13).collect();
+        let b: Vec<u8> = 100u64.to_le_bytes().into_iter().chain(7u64.to_le_bytes()).collect();
+        let img = build(&[(*b"AAAAAAAA", a.clone()), (*b"BBBB\0\0\0\0", b)]);
+        let f = parse(&img).unwrap();
+        assert_eq!(f.entries().len(), 2);
+        for e in f.entries() {
+            assert_eq!(e.offset % ALIGN, 0, "section '{}' misaligned", e.tag.name());
+        }
+        assert_eq!(f.bytes(*b"AAAAAAAA").unwrap().as_slice(), &a[..]);
+        assert_eq!(f.u64s(*b"BBBB\0\0\0\0").unwrap().as_slice(), &[100, 7]);
+        assert!(f.find(*b"CCCCCCCC").is_none());
+        assert!(f.u64s(*b"CCCCCCCC").is_err());
+        // Odd-length section can't be viewed as u64s.
+        assert!(f.u64s(*b"AAAAAAAA").is_err());
+    }
+
+    #[test]
+    fn alignment_and_padding_roundtrip_property() {
+        // Random section-size vectors: every offset must be 64-aligned,
+        // every payload must come back byte-exact, and the declared total
+        // must equal the file length.
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        for trial in 0..50u64 {
+            let n_sections = 1 + rng.index(6);
+            let sections: Vec<([u8; 8], Vec<u8>)> = (0..n_sections)
+                .map(|i| {
+                    let mut tag = *b"S\0\0\0\0\0\0\0";
+                    tag[1] = b'0' + i as u8;
+                    let len = rng.index(300); // includes 0 and non-multiples of 64
+                    let data: Vec<u8> = (0..len).map(|_| rng.index(256) as u8).collect();
+                    (tag, data)
+                })
+                .collect();
+            let img = build(&sections);
+            let f = parse(&img).unwrap();
+            assert_eq!(f.entries().len(), n_sections, "trial {trial}");
+            let mut prev_end = HEADER_LEN + n_sections * DIR_ENTRY_LEN;
+            for (e, (tag, data)) in f.entries().iter().zip(&sections) {
+                assert_eq!(e.tag, Tag(*tag));
+                assert_eq!(e.offset % ALIGN, 0, "trial {trial}: offset {}", e.offset);
+                assert!(e.offset >= prev_end, "trial {trial}: overlap");
+                // Inter-section padding is zero bytes.
+                assert!(
+                    img[prev_end..e.offset].iter().all(|&b| b == 0),
+                    "trial {trial}: nonzero padding"
+                );
+                assert_eq!(f.bytes(*tag).unwrap().as_slice(), &data[..], "trial {trial}");
+                prev_end = e.offset + e.len;
+            }
+            assert_eq!(img.len(), prev_end, "trial {trial}: total length");
+        }
+    }
+
+    #[test]
+    fn truncation_fails_fast_with_the_section_name() {
+        let img = build(&[
+            (*b"MANIFEST", vec![1; 40]),
+            (*b"EDGES\0\0\0", vec![2; 200]),
+        ]);
+        // Cut inside the second payload: the error must name EDGES and
+        // fire from the directory check, not a whole-file checksum.
+        let cut = &img[..img.len() - 50];
+        let err = parse(cut).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("EDGES"), "{msg}");
+        assert!(msg.contains("truncated") || msg.contains("header says"), "{msg}");
+        // Cut inside the directory itself.
+        let cut = &img[..HEADER_LEN + DIR_ENTRY_LEN / 2];
+        assert!(parse(cut).is_err());
+        // Shorter than the header.
+        assert!(parse(&img[..10]).is_err());
+    }
+
+    #[test]
+    fn corrupt_directory_and_payload_are_distinguished() {
+        let img = build(&[(*b"PARAMF32", vec![9; 64]), (*b"CODEWORD", vec![7; 16])]);
+        // Flip a directory byte → directory checksum error.
+        let mut bad = img.clone();
+        bad[HEADER_LEN + 9] ^= 0x40;
+        // Keep the total-length field honest so we reach the dir check.
+        let err = parse(&bad).unwrap_err();
+        assert!(format!("{err}").contains("directory checksum"), "{err}");
+        // Flip a payload byte → error names the section.
+        let f = parse(&img).unwrap();
+        let e = f.find(*b"CODEWORD").unwrap();
+        let mut bad = img.clone();
+        bad[e.offset + 3] ^= 0x01;
+        let err = parse(&bad).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("CODEWORD") && msg.contains("checksum"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_magic_and_bad_counts_rejected() {
+        let img = build(&[(*b"AAAAAAAA", vec![1, 2, 3])]);
+        let err = SectionFile::parse(
+            SectionBuf::from_bytes(&img),
+            &[b"XXXX0002"],
+            "test artifact",
+            Path::new("mem"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("bad magic"), "{err}");
+        // Absurd section count.
+        let mut bad = img.clone();
+        bad[8..16].copy_from_slice(&(u64::MAX).to_le_bytes());
+        assert!(parse(&bad).is_err());
+    }
+
+    #[test]
+    fn duplicate_tags_rejected_at_write() {
+        let mut w = SectionWriter::new();
+        w.section(*b"AAAAAAAA").push(1);
+        w.section(*b"AAAAAAAA").push(2);
+        assert!(w.finish(MAGIC).is_err());
+    }
+
+    #[test]
+    fn empty_sections_and_empty_files_roundtrip() {
+        let img = build(&[(*b"EMPTY\0\0\0", vec![]), (*b"DATA\0\0\0\0", vec![5])]);
+        let f = parse(&img).unwrap();
+        assert!(f.bytes(*b"EMPTY\0\0\0").unwrap().is_empty());
+        assert_eq!(f.bytes(*b"DATA\0\0\0\0").unwrap().as_slice(), &[5]);
+        let img = build(&[]);
+        let f = parse(&img).unwrap();
+        assert!(f.entries().is_empty());
+    }
+
+    #[test]
+    fn typed_views_reject_misalignment_out_of_band() {
+        // Direct SharedU64s construction with a bad offset must fail even
+        // though SectionFile never produces one.
+        let buf = SectionBuf::from_bytes(&[0u8; 64]);
+        assert!(SharedU64s::new(buf.clone(), 4, 2).is_err());
+        assert!(SharedU64s::new(buf.clone(), 0, 9).is_err(), "out of bounds");
+        assert_eq!(SharedU64s::new(buf, 0, 8).unwrap().as_slice(), &[0u64; 8]);
+    }
+}

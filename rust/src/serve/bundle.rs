@@ -9,25 +9,55 @@
 //! process needs no artifacts directory, no graph generator, and no
 //! training code.
 //!
-//! On-disk format `HGNB0001` (all little-endian): 8-byte magic, payload
-//! byte count (u64), FNV-1a checksum of the payload (u64), then the
-//! payload — manifest JSON (length-prefixed), parameter tensors
-//! (rank + dims + f32 data each), optional codes block (`c, m, n, n_bits`
-//! + packed words), edge list, node count. Load verifies size and
-//! checksum before decoding anything, same policy as the checkpoint and
-//! code-file headers.
+//! # On-disk format v2 (`HGNB0002` whole bundle / `HGNS0002` shard)
 //!
-//! # Shard files (`HGNS0001`)
+//! A fixed-offset section table ([`crate::ser::section`]): 64-byte
+//! header, a checksummed directory of 64-byte-aligned typed sections,
+//! then the payloads. Loading is **zero-copy**: one read (or one `mmap`
+//! with the `mmap` cargo feature) of the file, directory + per-section
+//! checksum verification, and then the packed code words
+//! (`CODEWORD`), the flat edge array (`EDGES`) and the f32 parameters
+//! (`PARAMF32`) are handed out as borrowed in-place slices of that one
+//! backing buffer — no per-section `Vec` copies, no parse loop. Only the
+//! manifest JSON (parsed), the tiny shard header, and the `present` id
+//! list (binary-searched per request) are materialized.
+//!
+//! Sections (presence depends on the bundle):
+//!
+//! | tag        | contents (little-endian)                                |
+//! |------------|---------------------------------------------------------|
+//! | `MANIFEST` | manifest JSON text                                      |
+//! | `SHARD`    | u64 ×4: lo, hi, index, count (shard files only)         |
+//! | `PRESENT`  | ascending u32 global ids (shard files only)             |
+//! | `PARAMDIR` | u64 count, then per param: enc (0=f32, 1=int8), rank, dims |
+//! | `PARAMF32` | f32 data of every f32-encoded param, in param order     |
+//! | `PARAMI8`  | u8 data of every int8-encoded param (quantized exports) |
+//! | `QUANT`    | per int8 param, per row: f32 scale, f32 min             |
+//! | `CODESMET` | u64 ×4: c, m, n, n_bits (coded models only)             |
+//! | `CODEWORD` | packed `BitMatrix` u64 words (coded models only)        |
+//! | `EDGES`    | flat u32 pairs u₀ v₀ u₁ v₁ …                            |
+//! | `META`     | u64: n_nodes                                            |
+//!
+//! **int8 quantization** (`export --quant int8`): every rank-2 parameter
+//! is stored as asymmetric per-row int8 — `q = round((x − min)/scale)`
+//! with `scale = (max − min)/255`, so `|x − (min + q·scale)| ≤ scale/2`.
+//! Rank-1 params (biases, norms) stay f32: they are tiny and their error
+//! is not amortized over a row. A quantized bundle is dequantized ONCE
+//! into an owned param buffer at load (codes and edges stay in-place
+//! views) and serving is bit-identical *to the quantized model*;
+//! `tests/serve_bundle_v2.rs` gates the accuracy delta vs f32 on the
+//! Table-1 analogs.
+//!
+//! **Back-compat:** the v1 envelope formats `HGNB0001`/`HGNS0001`
+//! (sequential parse loop, owned copies) still load; the write path
+//! emits v2 only ([`ServingBundle::save_legacy_v1`] exists for fixtures
+//! and the cold-start before/after benches).
+//!
+//! # Shard files
 //!
 //! `hashgnn export --shards K` splits one bundle into K **contiguous
 //! node-range shards** so a graph larger than one machine's memory can be
 //! served by K processes behind a [`ShardRouter`](crate::serve::ShardRouter).
-//! A shard file carries the same 24-byte `magic + payload-size + FNV-1a`
-//! envelope (each shard is checksummed independently), then a shard
-//! header — owned range `[lo, hi)`, shard index, shard count, and the
-//! `present` id list described below — followed by the ordinary bundle
-//! payload.
-//!
 //! What gets sliced per shard depends on the model family, because
 //! **served bytes must stay bit-identical to the unsharded session**:
 //!
@@ -56,6 +86,7 @@
 //! (`tests/serve_persistent.rs` asserts it).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::cfg::CodingCfg;
 use crate::codes::{BitMatrix, CodeTable};
@@ -63,12 +94,238 @@ use crate::graph::Graph;
 use crate::params::ParamStore;
 use crate::runtime::{Manifest, Tensor};
 use crate::ser;
+use crate::ser::section::{SectionBuf, SectionFile, SectionWriter, SharedF32s, SharedU32s};
 use crate::{Error, Result};
 
-const MAGIC: &[u8; 8] = b"HGNB0001";
-const SHARD_MAGIC: &[u8; 8] = b"HGNS0001";
+const MAGIC_V1: &[u8; 8] = b"HGNB0001";
+const SHARD_MAGIC_V1: &[u8; 8] = b"HGNS0001";
+const MAGIC: &[u8; 8] = b"HGNB0002";
+const SHARD_MAGIC: &[u8; 8] = b"HGNS0002";
 
-/// Shard header of a node-range bundle slice (`HGNS0001` files): which
+const SEC_MANIFEST: [u8; 8] = *b"MANIFEST";
+const SEC_SHARD: [u8; 8] = *b"SHARD\0\0\0";
+const SEC_PRESENT: [u8; 8] = *b"PRESENT\0";
+const SEC_PARAMDIR: [u8; 8] = *b"PARAMDIR";
+const SEC_PARAMF32: [u8; 8] = *b"PARAMF32";
+const SEC_PARAMI8: [u8; 8] = *b"PARAMI8\0";
+const SEC_QUANT: [u8; 8] = *b"QUANT\0\0\0";
+const SEC_CODESMET: [u8; 8] = *b"CODESMET";
+const SEC_CODEWORD: [u8; 8] = *b"CODEWORD";
+const SEC_EDGES: [u8; 8] = *b"EDGES\0\0\0";
+const SEC_META: [u8; 8] = *b"META\0\0\0\0";
+
+/// Parameter encoding selector for [`ServingBundle::save_with`]
+/// (`export --quant {f32,int8}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quant {
+    F32,
+    Int8,
+}
+
+impl Quant {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Quant::F32),
+            "int8" => Ok(Quant::Int8),
+            other => Err(Error::Config(format!(
+                "unknown quantization '{other}' (expected f32 or int8)"
+            ))),
+        }
+    }
+}
+
+/// How a loaded bundle came into memory — serving surfaces these in
+/// `stats` (`bundle_load_us`, `bundle_bytes`, `quantized`). Never
+/// serialized; freshly-assembled (unexported) bundles report zeros.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadMeta {
+    /// Wall-clock µs from open to validated bundle (cold-start cost).
+    pub load_us: u64,
+    /// On-disk artifact size in bytes.
+    pub file_bytes: u64,
+    /// True when the file carried int8 params (dequantized at load).
+    pub quantized: bool,
+    /// True when codes/edges/params are in-place views of the file image
+    /// (v2, non-quantized) rather than per-section heap copies.
+    pub zero_copy: bool,
+}
+
+/// Trained parameter storage: owned tensors (assembly, v1 loads,
+/// dequantized int8 loads) or one borrowed flat f32 view into the bundle
+/// file image sliced by recorded shapes (v2 zero-copy loads). Inference
+/// consumes `&[&[f32]]` either way
+/// ([`InferModel::embed_nodes_with`](crate::runtime::native::infer::InferModel)).
+#[derive(Clone, Debug)]
+pub enum BundleParams {
+    Owned(Vec<Tensor>),
+    View { shapes: Vec<Vec<usize>>, data: SharedF32s },
+}
+
+impl BundleParams {
+    pub fn len(&self) -> usize {
+        match self {
+            BundleParams::Owned(ts) => ts.len(),
+            BundleParams::View { shapes, .. } => shapes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn shape(&self, i: usize) -> &[usize] {
+        match self {
+            BundleParams::Owned(ts) => ts[i].shape(),
+            BundleParams::View { shapes, .. } => &shapes[i],
+        }
+    }
+
+    /// Per-param f32 slices in manifest order — the layout inference
+    /// kernels consume. For the view variant this is pure pointer
+    /// arithmetic over the file image (element counts were validated at
+    /// load).
+    pub fn slices(&self) -> Result<Vec<&[f32]>> {
+        match self {
+            BundleParams::Owned(ts) => ts.iter().map(|t| t.as_f32()).collect(),
+            BundleParams::View { shapes, data } => {
+                let flat = data.as_slice();
+                let mut out = Vec::with_capacity(shapes.len());
+                let mut pos = 0usize;
+                for shape in shapes {
+                    let n: usize = shape.iter().product();
+                    if pos + n > flat.len() {
+                        return Err(Error::Shape(format!(
+                            "param view needs {} f32s, backing holds {}",
+                            pos + n,
+                            flat.len()
+                        )));
+                    }
+                    out.push(&flat[pos..pos + n]);
+                    pos += n;
+                }
+                if pos != flat.len() {
+                    return Err(Error::Shape(format!(
+                        "param view leaves {} trailing f32s",
+                        flat.len() - pos
+                    )));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Materialize owned tensors (training-side interop; copies the view
+    /// variant — not on the serving path).
+    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
+        match self {
+            BundleParams::Owned(ts) => Ok(ts.clone()),
+            BundleParams::View { shapes, .. } => self
+                .slices()?
+                .into_iter()
+                .zip(shapes)
+                .map(|(s, shape)| Ok(Tensor::F32 { shape: shape.clone(), data: s.to_vec() }))
+                .collect(),
+        }
+    }
+
+    /// Total f32 element count across params.
+    pub fn n_elements(&self) -> usize {
+        (0..self.len()).map(|i| self.shape(i).iter().product::<usize>()).sum()
+    }
+
+    /// True when params are an in-place view of the bundle file image.
+    pub fn borrowed(&self) -> bool {
+        matches!(self, BundleParams::View { .. })
+    }
+}
+
+/// Equality is by content (shapes + f32 bit patterns), regardless of
+/// owned-vs-view representation — the shard router uses this to check
+/// that every shard carries the same trained weights.
+impl PartialEq for BundleParams {
+    fn eq(&self, other: &Self) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        if (0..self.len()).any(|i| self.shape(i) != other.shape(i)) {
+            return false;
+        }
+        match (self.slices(), other.slices()) {
+            (Ok(a), Ok(b)) => a.iter().zip(&b).all(|(x, y)| {
+                x.len() == y.len()
+                    && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+            }),
+            _ => false,
+        }
+    }
+}
+
+/// Message-passing edge storage: an owned pair `Vec` (assembly, v1
+/// loads, shard slicing) or a borrowed flat `u₀ v₀ u₁ v₁ …` view into
+/// the bundle file image (v2 loads — `(u32, u32)` tuple layout is not
+/// guaranteed by Rust, so the flat form is what can be viewed in place).
+#[derive(Clone, Debug)]
+pub enum EdgeList {
+    Owned(Vec<(u32, u32)>),
+    View(SharedU32s),
+}
+
+impl EdgeList {
+    pub fn len(&self) -> usize {
+        match self {
+            EdgeList::Owned(v) => v.len(),
+            EdgeList::View(s) => s.len() / 2,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> (u32, u32) {
+        match self {
+            EdgeList::Owned(v) => v[i],
+            EdgeList::View(s) => {
+                let f = s.as_slice();
+                (f[2 * i], f[2 * i + 1])
+            }
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    pub fn to_vec(&self) -> Vec<(u32, u32)> {
+        self.iter().collect()
+    }
+
+    /// True when edges are an in-place view of the bundle file image.
+    pub fn borrowed(&self) -> bool {
+        matches!(self, EdgeList::View(_))
+    }
+}
+
+impl From<Vec<(u32, u32)>> for EdgeList {
+    fn from(v: Vec<(u32, u32)>) -> Self {
+        EdgeList::Owned(v)
+    }
+}
+
+impl PartialEq for EdgeList {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+impl PartialEq<Vec<(u32, u32)>> for EdgeList {
+    fn eq(&self, other: &Vec<(u32, u32)>) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter().copied()).all(|(a, b)| a == b)
+    }
+}
+
+/// Shard header of a node-range bundle slice (`HGNS0002` files): which
 /// contiguous global id range this shard **owns** (serves), where it sits
 /// in the shard set, and which global ids its row-compacted code table
 /// retains.
@@ -109,18 +366,20 @@ impl ShardInfo {
 pub struct ServingBundle {
     pub manifest: Manifest,
     /// Trained parameters in manifest order (shapes validated at
-    /// construction and load).
-    pub params: Vec<Tensor>,
+    /// construction and load); in-place views after a v2 f32 load.
+    pub params: BundleParams,
     /// Bit-packed compositional codes for the coded front-ends; `None`
-    /// for the NC baseline.
+    /// for the NC baseline. Words are in-place views after a v2 load.
     pub codes: Option<CodeTable>,
     /// Undirected message-passing edges (empty for the plain decoder,
     /// whose inference needs no graph).
-    pub edges: Vec<(u32, u32)>,
+    pub edges: EdgeList,
     pub n_nodes: usize,
     /// `Some` when this bundle is one node-range shard of a split export
     /// ([`ServingBundle::split_shards`]); `None` for a whole-graph bundle.
     pub shard: Option<ShardInfo>,
+    /// How this bundle was loaded (zeros for assembled-in-memory bundles).
+    pub meta: LoadMeta,
 }
 
 impl ServingBundle {
@@ -135,8 +394,15 @@ impl ServingBundle {
         edges: Vec<(u32, u32)>,
         n_nodes: usize,
     ) -> Result<Self> {
-        let bundle =
-            Self { manifest, params: store.params.clone(), codes, edges, n_nodes, shard: None };
+        let bundle = Self {
+            manifest,
+            params: BundleParams::Owned(store.params.clone()),
+            codes,
+            edges: EdgeList::Owned(edges),
+            n_nodes,
+            shard: None,
+            meta: LoadMeta::default(),
+        };
         bundle.validate()?;
         Ok(bundle)
     }
@@ -150,17 +416,19 @@ impl ServingBundle {
                 self.manifest.params.len()
             )));
         }
-        for (t, spec) in self.params.iter().zip(&self.manifest.params) {
-            if t.shape() != spec.shape.as_slice() {
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            if self.params.shape(i) != spec.shape.as_slice() {
                 return Err(Error::Shape(format!(
                     "bundle param '{}' has shape {:?}, manifest says {:?}",
                     spec.name,
-                    t.shape(),
+                    self.params.shape(i),
                     spec.shape
                 )));
             }
-            t.as_f32()?;
         }
+        // Data must be reachable as f32 (rejects non-f32 owned tensors
+        // and size-inconsistent views in one pass).
+        self.params.slices()?;
         if let Some(s) = &self.shard {
             if s.lo >= s.hi || s.hi as usize > self.n_nodes {
                 return Err(Error::Shape(format!(
@@ -222,7 +490,7 @@ impl ServingBundle {
                 }
             }
         }
-        for &(u, v) in &self.edges {
+        for (u, v) in self.edges.iter() {
             if u as usize >= self.n_nodes || v as usize >= self.n_nodes {
                 return Err(Error::Shape(format!(
                     "bundle edge ({u}, {v}) out of range for {} nodes",
@@ -235,7 +503,7 @@ impl ServingBundle {
 
     /// Serialized parameter footprint in bytes (f32).
     pub fn param_bytes(&self) -> usize {
-        self.params.iter().map(|t| t.len() * 4).sum()
+        self.params.n_elements() * 4
     }
 
     /// Packed-code footprint in bytes (the Table-2 accounting unit).
@@ -243,7 +511,102 @@ impl ServingBundle {
         self.codes.as_ref().map(|c| c.bits.storage_bytes()).unwrap_or(0)
     }
 
+    /// Write the v2 section-table format (f32 params). See the module
+    /// docs for the layout; [`Self::save_with`] selects int8.
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_with(path, Quant::F32)
+    }
+
+    /// Write the v2 format with the chosen parameter encoding.
+    pub fn save_with(&self, path: &Path, quant: Quant) -> Result<()> {
+        let magic = if self.shard.is_some() { SHARD_MAGIC } else { MAGIC };
+        let mut w = SectionWriter::new();
+        w.section(SEC_MANIFEST)
+            .extend_from_slice(ser::to_string_pretty(&self.manifest.to_json()).as_bytes());
+        if let Some(sh) = &self.shard {
+            let s = w.section(SEC_SHARD);
+            for v in [sh.lo as u64, sh.hi as u64, sh.index as u64, sh.count as u64] {
+                s.extend_from_slice(&v.to_le_bytes());
+            }
+            let s = w.section(SEC_PRESENT);
+            for &id in &sh.present {
+                s.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        // Params: directory first, then the f32 pool, then (for int8)
+        // the quantized pool + per-row scales.
+        let slices = self.params.slices()?;
+        let quantize = |i: usize| quant == Quant::Int8 && self.params.shape(i).len() == 2;
+        {
+            let d = w.section(SEC_PARAMDIR);
+            d.extend_from_slice(&(slices.len() as u64).to_le_bytes());
+            for i in 0..slices.len() {
+                let shape = self.params.shape(i);
+                d.extend_from_slice(&(quantize(i) as u64).to_le_bytes());
+                d.extend_from_slice(&(shape.len() as u64).to_le_bytes());
+                for &dim in shape {
+                    d.extend_from_slice(&(dim as u64).to_le_bytes());
+                }
+            }
+        }
+        {
+            let f = w.section(SEC_PARAMF32);
+            for (i, s) in slices.iter().enumerate() {
+                if !quantize(i) {
+                    for &x in *s {
+                        f.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        if quant == Quant::Int8 {
+            let mut qdata: Vec<u8> = Vec::new();
+            let mut qmeta: Vec<u8> = Vec::new();
+            for (i, s) in slices.iter().enumerate() {
+                if quantize(i) {
+                    let cols = self.params.shape(i)[1];
+                    let (q, rows_meta) = quantize_rows(s, cols);
+                    qdata.extend_from_slice(&q);
+                    for &x in &rows_meta {
+                        qmeta.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+            w.section(SEC_PARAMI8).extend_from_slice(&qdata);
+            w.section(SEC_QUANT).extend_from_slice(&qmeta);
+        }
+        if let Some(codes) = &self.codes {
+            let s = w.section(SEC_CODESMET);
+            for v in [
+                codes.coding.c as u64,
+                codes.coding.m as u64,
+                codes.bits.n() as u64,
+                codes.bits.n_bits() as u64,
+            ] {
+                s.extend_from_slice(&v.to_le_bytes());
+            }
+            let s = w.section(SEC_CODEWORD);
+            for &word in codes.bits.words() {
+                s.extend_from_slice(&word.to_le_bytes());
+            }
+        }
+        {
+            let s = w.section(SEC_EDGES);
+            for (u, v) in self.edges.iter() {
+                s.extend_from_slice(&u.to_le_bytes());
+                s.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        w.section(SEC_META).extend_from_slice(&(self.n_nodes as u64).to_le_bytes());
+        std::fs::write(path, w.finish(magic)?)?;
+        Ok(())
+    }
+
+    /// Write the superseded v1 envelope format (sequential parse loop,
+    /// per-section copies on load). Kept for back-compat fixtures and
+    /// the cold-start before/after benches; the CLI export path emits
+    /// v2 only.
+    pub fn save_legacy_v1(&self, path: &Path) -> Result<()> {
         let mut p: Vec<u8> = Vec::new();
         let magic = match &self.shard {
             Some(s) => {
@@ -255,30 +618,22 @@ impl ServingBundle {
                 for &id in &s.present {
                     p.extend_from_slice(&id.to_le_bytes());
                 }
-                SHARD_MAGIC
+                SHARD_MAGIC_V1
             }
-            None => MAGIC,
+            None => MAGIC_V1,
         };
-        self.encode_core(&mut p)?;
-        std::fs::write(path, ser::write_envelope(magic, &p))?;
-        Ok(())
-    }
-
-    /// Encode manifest + params + codes + edges + node count (the part of
-    /// the payload shared by whole bundles and shards) onto `p`.
-    fn encode_core(&self, p: &mut Vec<u8>) -> Result<()> {
         let manifest_json = ser::to_string_pretty(&self.manifest.to_json());
         p.extend_from_slice(&(manifest_json.len() as u64).to_le_bytes());
         p.extend_from_slice(manifest_json.as_bytes());
-        p.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
-        for t in &self.params {
-            let data = t.as_f32()?;
-            let shape = t.shape();
+        let slices = self.params.slices()?;
+        p.extend_from_slice(&(slices.len() as u64).to_le_bytes());
+        for (i, data) in slices.iter().enumerate() {
+            let shape = self.params.shape(i);
             p.extend_from_slice(&(shape.len() as u64).to_le_bytes());
             for &d in shape {
                 p.extend_from_slice(&(d as u64).to_le_bytes());
             }
-            for &x in data {
+            for &x in *data {
                 p.extend_from_slice(&x.to_le_bytes());
             }
         }
@@ -290,26 +645,262 @@ impl ServingBundle {
                 p.extend_from_slice(&(codes.coding.m as u64).to_le_bytes());
                 p.extend_from_slice(&(codes.bits.n() as u64).to_le_bytes());
                 p.extend_from_slice(&(codes.bits.n_bits() as u64).to_le_bytes());
-                for &w in codes.bits.words() {
-                    p.extend_from_slice(&w.to_le_bytes());
+                for &word in codes.bits.words() {
+                    p.extend_from_slice(&word.to_le_bytes());
                 }
             }
         }
         p.extend_from_slice(&(self.edges.len() as u64).to_le_bytes());
-        for &(u, v) in &self.edges {
+        for (u, v) in self.edges.iter() {
             p.extend_from_slice(&u.to_le_bytes());
             p.extend_from_slice(&v.to_le_bytes());
         }
         p.extend_from_slice(&(self.n_nodes as u64).to_le_bytes());
+        std::fs::write(path, ser::write_envelope(magic, &p))?;
         Ok(())
     }
 
-    /// Load either a whole bundle (`HGNB0001`) or one shard (`HGNS0001`);
-    /// [`ServingBundle::shard`] distinguishes them after the fact.
+    /// Load a whole bundle or one shard, any format version, heap-read
+    /// backing. [`ServingBundle::shard`] distinguishes bundle vs shard
+    /// after the fact; [`ServingBundle::meta`] records how the load went.
     pub fn load(path: &Path) -> Result<Self> {
-        let buf = std::fs::read(path)?;
-        let (which, p) =
-            ser::read_envelope(&buf, &[MAGIC, SHARD_MAGIC], "serving bundle or shard", path)?;
+        Self::load_with(path, false)
+    }
+
+    /// [`Self::load`] with an explicit backing choice. `use_mmap` maps
+    /// the file instead of heap-reading it (v2 views then point at
+    /// shared pages) and requires the `mmap` cargo feature.
+    pub fn load_with(path: &Path, use_mmap: bool) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        let buf: Arc<SectionBuf> = if use_mmap {
+            #[cfg(all(feature = "mmap", unix))]
+            {
+                SectionBuf::map(path)?
+            }
+            #[cfg(not(all(feature = "mmap", unix)))]
+            {
+                return Err(Error::Config(
+                    "mmap bundle loading requires building with `--features mmap` \
+                     (heap loading serves byte-identically without it)"
+                        .into(),
+                ));
+            }
+        } else {
+            SectionBuf::read_heap(path)?
+        };
+        let file_bytes = buf.len() as u64;
+        let is_v1 = {
+            let bytes = buf.bytes();
+            bytes.len() >= 8 && (&bytes[..8] == MAGIC_V1 || &bytes[..8] == SHARD_MAGIC_V1)
+        };
+        let mut bundle = if is_v1 {
+            Self::decode_v1(buf.bytes(), path)?
+        } else {
+            let sf = SectionFile::parse(buf, &[MAGIC, SHARD_MAGIC], "serving bundle or shard", path)?;
+            Self::decode_v2(&sf, sf.magic_index() == 1, path)?
+        };
+        bundle.validate()?;
+        bundle.meta.load_us = t0.elapsed().as_micros() as u64;
+        bundle.meta.file_bytes = file_bytes;
+        Ok(bundle)
+    }
+
+    /// v2 read path: every section is already checksum-verified; codes,
+    /// edges and f32 params become in-place views of the file image —
+    /// zero payload copies. int8 params are dequantized once into owned
+    /// tensors (the only decode work a quantized bundle does).
+    fn decode_v2(sf: &SectionFile, sharded: bool, path: &Path) -> Result<Self> {
+        let manifest = Manifest::from_json(&ser::parse(sf.text(SEC_MANIFEST)?)?)?;
+        let shard = if sharded {
+            let h = sf.u64s(SEC_SHARD)?;
+            let h = h.as_slice();
+            if h.len() != 4 {
+                return Err(Error::Config(format!(
+                    "{}: SHARD section holds {} u64s, expected 4",
+                    path.display(),
+                    h.len()
+                )));
+            }
+            let lo = u32::try_from(h[0])
+                .map_err(|_| Error::Config("shard lo exceeds u32 range".into()))?;
+            let hi = u32::try_from(h[1])
+                .map_err(|_| Error::Config("shard hi exceeds u32 range".into()))?;
+            // The present list is owned: it is tiny relative to payloads
+            // and ShardInfo binary-searches it per request.
+            let present = sf.u32s(SEC_PRESENT)?.as_slice().to_vec();
+            Some(ShardInfo { lo, hi, index: h[2] as usize, count: h[3] as usize, present })
+        } else {
+            None
+        };
+
+        // Param directory: count, then (enc, rank, dims…) per param.
+        let dir = sf.u64s(SEC_PARAMDIR)?;
+        let dir = dir.as_slice();
+        let mut pos = 0usize;
+        let next = |pos: &mut usize| -> Result<u64> {
+            let v = dir.get(*pos).copied().ok_or_else(|| {
+                Error::Config(format!("{}: PARAMDIR section ends early", path.display()))
+            })?;
+            *pos += 1;
+            Ok(v)
+        };
+        let n_params = next(&mut pos)? as usize;
+        if n_params > dir.len() {
+            return Err(Error::Config(format!(
+                "{}: PARAMDIR declares {n_params} params, section too small",
+                path.display()
+            )));
+        }
+        let mut encs = Vec::with_capacity(n_params);
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            let enc = next(&mut pos)?;
+            if enc > 1 {
+                return Err(Error::Config(format!(
+                    "{}: unknown param encoding {enc} (expected 0=f32, 1=int8)",
+                    path.display()
+                )));
+            }
+            let rank = next(&mut pos)? as usize;
+            if rank > 8 {
+                return Err(Error::Config(format!(
+                    "{}: param rank {rank} exceeds the sanity cap",
+                    path.display()
+                )));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(next(&mut pos)? as usize);
+            }
+            encs.push(enc);
+            shapes.push(shape);
+        }
+        let quantized = encs.iter().any(|&e| e == 1);
+        let f32_pool = sf.f32s(SEC_PARAMF32)?;
+        let params = if !quantized {
+            // Pure view: one flat f32 slice of the image, split by shape
+            // at access time. Element-count consistency checked here so
+            // `slices()` is infallible in practice.
+            let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+            if total != f32_pool.len() {
+                return Err(Error::Config(format!(
+                    "{}: PARAMF32 holds {} f32s, directory shapes need {total}",
+                    path.display(),
+                    f32_pool.len()
+                )));
+            }
+            BundleParams::View { shapes, data: f32_pool }
+        } else {
+            // Dequantize once into owned tensors; codes/edges below stay
+            // views regardless.
+            let f32_pool = f32_pool.as_slice();
+            let qdata = sf.bytes(SEC_PARAMI8)?;
+            let qdata = qdata.as_slice();
+            let qmeta = sf.f32s(SEC_QUANT)?;
+            let qmeta = qmeta.as_slice();
+            let (mut fpos, mut qpos, mut mpos) = (0usize, 0usize, 0usize);
+            let mut tensors = Vec::with_capacity(n_params);
+            for (shape, &enc) in shapes.iter().zip(&encs) {
+                let n: usize = shape.iter().product();
+                let data = if enc == 0 {
+                    if fpos + n > f32_pool.len() {
+                        return Err(Error::Config(format!(
+                            "{}: PARAMF32 section ends early",
+                            path.display()
+                        )));
+                    }
+                    let d = f32_pool[fpos..fpos + n].to_vec();
+                    fpos += n;
+                    d
+                } else {
+                    let (rows, cols) = (shape[0], shape[1]);
+                    if qpos + n > qdata.len() || mpos + rows * 2 > qmeta.len() {
+                        return Err(Error::Config(format!(
+                            "{}: PARAMI8/QUANT sections end early",
+                            path.display()
+                        )));
+                    }
+                    let d = dequantize_rows(
+                        &qdata[qpos..qpos + n],
+                        &qmeta[mpos..mpos + rows * 2],
+                        cols,
+                    );
+                    qpos += n;
+                    mpos += rows * 2;
+                    d
+                };
+                tensors.push(Tensor::F32 { shape: shape.clone(), data });
+            }
+            if fpos != f32_pool.len() || qpos != qdata.len() || mpos != qmeta.len() {
+                return Err(Error::Config(format!(
+                    "{}: param sections carry trailing bytes",
+                    path.display()
+                )));
+            }
+            BundleParams::Owned(tensors)
+        };
+
+        let codes = if sf.has(SEC_CODESMET) {
+            let met = sf.u64s(SEC_CODESMET)?;
+            let met = met.as_slice();
+            if met.len() != 4 {
+                return Err(Error::Config(format!(
+                    "{}: CODESMET section holds {} u64s, expected 4",
+                    path.display(),
+                    met.len()
+                )));
+            }
+            let (c, m, n, n_bits) =
+                (met[0] as usize, met[1] as usize, met[2] as usize, met[3] as usize);
+            let bits = BitMatrix::from_shared_words(n, n_bits, sf.u64s(SEC_CODEWORD)?)?;
+            Some(CodeTable::new(bits, CodingCfg::new(c, m)?)?)
+        } else {
+            None
+        };
+
+        let edge_view = sf.u32s(SEC_EDGES)?;
+        if edge_view.len() % 2 != 0 {
+            return Err(Error::Config(format!(
+                "{}: EDGES section holds {} u32s (odd — not u,v pairs)",
+                path.display(),
+                edge_view.len()
+            )));
+        }
+        let edges = EdgeList::View(edge_view);
+
+        let meta_sec = sf.u64s(SEC_META)?;
+        let meta_sec = meta_sec.as_slice();
+        if meta_sec.is_empty() {
+            return Err(Error::Config(format!("{}: META section is empty", path.display())));
+        }
+        let n_nodes = meta_sec[0] as usize;
+
+        Ok(Self {
+            manifest,
+            params,
+            codes,
+            edges,
+            n_nodes,
+            shard,
+            meta: LoadMeta {
+                load_us: 0,
+                file_bytes: 0,
+                quantized,
+                zero_copy: !quantized,
+            },
+        })
+    }
+
+    /// v1 read path (`HGNB0001`/`HGNS0001`): the original sequential
+    /// parse loop — every section heap-copied. Kept verbatim for
+    /// back-compat; new exports never produce it.
+    fn decode_v1(buf: &[u8], path: &Path) -> Result<Self> {
+        let (which, p) = ser::read_envelope(
+            buf,
+            &[MAGIC_V1, SHARD_MAGIC_V1],
+            "serving bundle or shard",
+            path,
+        )?;
         let sharded = which == 1;
 
         let mut pos = 0usize;
@@ -406,9 +997,15 @@ impl ServingBundle {
         }
         let n_nodes = read_u64(p, &mut pos)? as usize;
 
-        let bundle = Self { manifest, params, codes, edges, n_nodes, shard };
-        bundle.validate()?;
-        Ok(bundle)
+        Ok(Self {
+            manifest,
+            params: BundleParams::Owned(params),
+            codes,
+            edges: EdgeList::Owned(edges),
+            n_nodes,
+            shard,
+            meta: LoadMeta::default(),
+        })
     }
 
     /// Split a whole-graph bundle into `k` contiguous node-range shards
@@ -433,7 +1030,7 @@ impl ServingBundle {
         // Neighbor closure for the minibatch family (global neighbor lists
         // come from the same symmetrized CSR the serving session rebuilds).
         let graph = if minibatch {
-            Some(Graph::from_edges(self.n_nodes, &self.edges)?)
+            Some(Graph::from_edge_iter(self.n_nodes, self.edges.iter())?)
         } else {
             None
         };
@@ -443,7 +1040,8 @@ impl ServingBundle {
             let lo = (i * n / k) as u32;
             let hi = ((i + 1) * n / k) as u32;
             let (edges, present) = if fullbatch {
-                // Whole graph replicated; ownership is routing-only.
+                // Whole graph replicated; ownership is routing-only. A
+                // view-backed edge list clones by Arc — shards share it.
                 (self.edges.clone(), Vec::new())
             } else if let Some(g) = &graph {
                 // Edge slice: everything incident to owned ∪ N(owned), so
@@ -468,15 +1066,14 @@ impl ServingBundle {
                 let edges: Vec<(u32, u32)> = self
                     .edges
                     .iter()
-                    .filter(|&&(u, v)| edge_nodes[u as usize] || edge_nodes[v as usize])
-                    .copied()
+                    .filter(|&(u, v)| edge_nodes[u as usize] || edge_nodes[v as usize])
                     .collect();
                 let present: Vec<u32> =
                     (0..n as u32).filter(|&v| closure[v as usize]).collect();
-                (edges, present)
+                (EdgeList::Owned(edges), present)
             } else {
                 // Plain decoder: no graph; a node needs only its own code.
-                (Vec::new(), (lo..hi).collect())
+                (EdgeList::Owned(Vec::new()), (lo..hi).collect())
             };
             let codes = match &self.codes {
                 None => None,
@@ -498,12 +1095,55 @@ impl ServingBundle {
                     // keeps "present" meaning "compacted code rows" only.
                     present: if self.codes.is_some() { present } else { Vec::new() },
                 }),
+                meta: LoadMeta::default(),
             };
             shard.validate()?;
             shards.push(shard);
         }
         Ok(shards)
     }
+}
+
+/// Asymmetric per-row int8 quantization of a row-major `(rows, cols)`
+/// f32 matrix: `q = round((x − min)/scale)` with `scale = (max − min)/255`
+/// (a constant row stores `scale = 0` and quantizes exactly). Returns the
+/// u8 data and the per-row `[scale, min]` pairs, flattened.
+pub fn quantize_rows(data: &[f32], cols: usize) -> (Vec<u8>, Vec<f32>) {
+    debug_assert!(cols > 0 && data.len() % cols == 0);
+    let rows = data.len() / cols;
+    let mut q = Vec::with_capacity(data.len());
+    let mut meta = Vec::with_capacity(rows * 2);
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in row {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+        for &x in row {
+            let v = if scale > 0.0 { ((x - lo) / scale).round() } else { 0.0 };
+            q.push(v.clamp(0.0, 255.0) as u8);
+        }
+        meta.push(scale);
+        meta.push(lo);
+    }
+    (q, meta)
+}
+
+/// Inverse of [`quantize_rows`]: `x̂ = min + q·scale` per row.
+/// `meta` is the flattened `[scale, min]` pair list.
+pub fn dequantize_rows(q: &[u8], meta: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert!(cols > 0 && q.len() % cols == 0);
+    debug_assert_eq!(meta.len(), (q.len() / cols) * 2);
+    let mut out = Vec::with_capacity(q.len());
+    for (r, row) in q.chunks_exact(cols).enumerate() {
+        let (scale, lo) = (meta[r * 2], meta[r * 2 + 1]);
+        for &v in row {
+            out.push(lo + v as f32 * scale);
+        }
+    }
+    out
 }
 
 /// Row-compact a code table to `present` (ascending global ids): shard
@@ -545,7 +1185,7 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip_is_exact() {
+    fn save_load_roundtrip_is_exact_and_zero_copy() {
         let b = tiny_bundle();
         let dir = std::env::temp_dir().join("hashgnn_test_bundle");
         std::fs::create_dir_all(&dir).unwrap();
@@ -561,23 +1201,138 @@ mod tests {
         assert_eq!(back.n_nodes, 12);
         assert_eq!(back.param_bytes(), b.param_bytes());
         assert!(back.code_bytes() > 0);
+        // v2 acceptance: codes/edges/params are slices into the file
+        // image, not copies.
+        assert!(back.meta.zero_copy);
+        assert!(!back.meta.quantized);
+        assert!(back.params.borrowed(), "params must be an in-place view");
+        assert!(back.edges.borrowed(), "edges must be an in-place view");
+        assert!(back.codes.as_ref().unwrap().bits.words_borrowed(), "codes must be views");
+        assert_eq!(back.meta.file_bytes, std::fs::metadata(&path).unwrap().len());
     }
 
     #[test]
-    fn load_rejects_corruption() {
+    fn legacy_v1_keeps_loading() {
+        let b = tiny_bundle();
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle_v1.bin");
+        b.save_legacy_v1(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"HGNB0001");
+        let back = ServingBundle::load(&path).unwrap();
+        assert_eq!(back.params, b.params);
+        assert_eq!(back.edges, b.edges);
+        assert_eq!(back.codes.as_ref().unwrap().bits, b.codes.as_ref().unwrap().bits);
+        assert!(!back.meta.zero_copy, "v1 loads copy every section");
+        assert!(!back.params.borrowed());
+        // Shard files too.
+        let shard_path = dir.join("shard_v1.bin");
+        let shards = b.split_shards(2).unwrap();
+        shards[1].save_legacy_v1(&shard_path).unwrap();
+        let back = ServingBundle::load(&shard_path).unwrap();
+        assert_eq!(back.shard, shards[1].shard);
+    }
+
+    #[test]
+    fn int8_roundtrip_stays_within_scale_bound() {
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let (rows, cols) = (13, 29);
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+        let (q, meta) = quantize_rows(&data, cols);
+        let back = dequantize_rows(&q, &meta, cols);
+        assert_eq!(back.len(), data.len());
+        for r in 0..rows {
+            let scale = meta[r * 2];
+            for c in 0..cols {
+                let err = (data[r * cols + c] - back[r * cols + c]).abs();
+                assert!(err <= scale / 2.0 + 1e-6, "row {r} col {c}: err {err} > {}", scale / 2.0);
+            }
+        }
+        // Constant rows quantize exactly.
+        let (q, meta) = quantize_rows(&[3.25; 8], 4);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(dequantize_rows(&q, &meta, 4), vec![3.25; 8]);
+    }
+
+    #[test]
+    fn quantized_save_load_dequantizes_once_and_bounds_param_error() {
+        let b = tiny_bundle();
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle_q.bin");
+        b.save_with(&path, Quant::Int8).unwrap();
+        let back = ServingBundle::load(&path).unwrap();
+        assert!(back.meta.quantized);
+        assert!(!back.meta.zero_copy, "quantized params live in an owned buffer");
+        // Codes and edges still load as views even when params dequantize.
+        assert!(back.edges.borrowed());
+        assert!(back.codes.as_ref().unwrap().bits.words_borrowed());
+        // Rank-1 params are carried f32-exact; rank-2 within the per-row
+        // scale bound.
+        let orig = b.params.slices().unwrap();
+        let deq = back.params.slices().unwrap();
+        for (i, (o, d)) in orig.iter().zip(&deq).enumerate() {
+            let shape = b.params.shape(i);
+            if shape.len() != 2 {
+                assert_eq!(*o, *d, "param {i} (rank {}) must be exact", shape.len());
+                continue;
+            }
+            let cols = shape[1];
+            for (r, (orow, drow)) in o.chunks(cols).zip(d.chunks(cols)).enumerate() {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &x in orow {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                let bound = (hi - lo) / 255.0 / 2.0 + 1e-6;
+                for (x, y) in orow.iter().zip(drow) {
+                    assert!((x - y).abs() <= bound, "param {i} row {r}");
+                }
+            }
+        }
+        // A quantized file re-saved as f32 roundtrips its own params
+        // exactly (serving is deterministic w.r.t. the quantized model).
+        let path2 = dir.join("bundle_q2.bin");
+        back.save(&path2).unwrap();
+        let again = ServingBundle::load(&path2).unwrap();
+        assert_eq!(again.params, back.params);
+    }
+
+    #[test]
+    fn load_rejects_corruption_by_section_name() {
         let b = tiny_bundle();
         let dir = std::env::temp_dir().join("hashgnn_test_bundle");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("corrupt.bin");
         b.save(&path).unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
-        let mid = 24 + (bytes.len() - 24) / 2;
+        let clean = std::fs::read(&path).unwrap();
+        // Flip a byte inside the last section's payload: the error names
+        // a section and mentions the checksum.
+        let mut bytes = clean.clone();
+        let mid = bytes.len() - 4;
         bytes[mid] ^= 0x55;
         std::fs::write(&path, &bytes).unwrap();
         let err = ServingBundle::load(&path).unwrap_err();
         assert!(format!("{err}").contains("checksum"), "{err}");
+        // Truncation names the section the cut landed in.
+        std::fs::write(&path, &clean[..clean.len() - 8]).unwrap();
+        let err = ServingBundle::load(&path).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("truncated"), "{msg}");
         std::fs::write(&path, b"nope").unwrap();
         assert!(ServingBundle::load(&path).is_err());
+        // v1 corruption still caught by the envelope checksum.
+        let path_v1 = dir.join("corrupt_v1.bin");
+        b.save_legacy_v1(&path_v1).unwrap();
+        let mut bytes = std::fs::read(&path_v1).unwrap();
+        let mid = 24 + (bytes.len() - 24) / 2;
+        bytes[mid] ^= 0x55;
+        std::fs::write(&path_v1, &bytes).unwrap();
+        let err = ServingBundle::load(&path_v1).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
     }
 
     #[test]
@@ -605,11 +1360,13 @@ mod tests {
             assert_eq!(s.n_nodes, 12, "ids stay global");
         }
         assert_eq!(covered, 12, "ranges tile the node space");
-        // Shard save/load roundtrip through the HGNS0001 header.
+        // Shard save/load roundtrip through the HGNS0002 section table.
         let dir = std::env::temp_dir().join("hashgnn_test_bundle");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("shard.bin");
         shards[1].save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"HGNS0002");
         let back = ServingBundle::load(&path).unwrap();
         assert_eq!(back.shard, shards[1].shard);
         assert_eq!(back.codes.as_ref().unwrap().bits, shards[1].codes.as_ref().unwrap().bits);
@@ -643,7 +1400,10 @@ mod tests {
         let b = tiny_bundle();
         // Codes with the wrong coding format.
         let bad_codes = random_codes(12, CodingCfg::new(2, 6).unwrap(), 1);
-        let store = ParamStore { params: b.params.clone(), ..ParamStore::init(&b.manifest, 1) };
+        let store = ParamStore {
+            params: b.params.to_tensors().unwrap(),
+            ..ParamStore::init(&b.manifest, 1)
+        };
         assert!(ServingBundle::new(
             b.manifest.clone(),
             &store,

@@ -58,7 +58,7 @@ pub mod server;
 pub use batcher::{
     BatchGroup, BatchStats, Batcher, Coalesced, CrossBatcher, FlushTrigger, LatencyWindow,
 };
-pub use bundle::{ServingBundle, ShardInfo};
+pub use bundle::{BundleParams, EdgeList, LoadMeta, Quant, ServingBundle, ShardInfo};
 pub use cache::{CacheStats, EmbedCache};
 pub use fault::{FaultAction, FaultPlan, FaultState};
 pub use remote::{RemoteCfg, RemoteRouter, RemoteShard};
@@ -90,11 +90,16 @@ pub struct ServeOpts {
     /// ascending shard index, so response bytes are identical with the
     /// fan-out on or off (`--no-fanout`); only the latency changes.
     pub fanout: bool,
+    /// `mmap` the bundle file(s) instead of heap-reading them (requires
+    /// the `mmap` cargo feature; served bytes are identical either way —
+    /// only residency changes: mapped pages are shared across worker
+    /// processes and reclaimable under pressure).
+    pub mmap: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { threads: 0, cache_capacity: 4096, seed: 7, fanout: true }
+        Self { threads: 0, cache_capacity: 4096, seed: 7, fanout: true, mmap: false }
     }
 }
 
@@ -271,6 +276,17 @@ pub trait Serving {
     fn take_fanout_report(&mut self) -> Option<FanoutReport> {
         None
     }
+
+    /// `(load_us, file_bytes, quantized)` of the served bundle(s) — the
+    /// cold-start cost, on-disk footprint, and whether int8 params were
+    /// dequantized at load. Routers aggregate over their shard set (max
+    /// load, summed bytes, any-quantized); backends without a local
+    /// bundle ([`RemoteRouter`]) return `None` (the default). Surfaced
+    /// by the persistent loop's `stats` op as `bundle_load_us` /
+    /// `bundle_bytes` / `quantized`.
+    fn bundle_meta(&self) -> Option<(u64, u64, bool)> {
+        None
+    }
 }
 
 /// Score `(u, v)` edges on any backend: embed both endpoints, then a
@@ -414,7 +430,7 @@ pub fn load_backend(paths: &[std::path::PathBuf], opts: ServeOpts) -> Result<Box
         return Err(Error::Config("no bundle paths given".into()));
     }
     if paths.len() == 1 {
-        let bundle = ServingBundle::load(&paths[0])?;
+        let bundle = ServingBundle::load_with(&paths[0], opts.mmap)?;
         if let Some(s) = &bundle.shard {
             if s.count > 1 {
                 return Err(Error::Config(format!(
@@ -442,7 +458,7 @@ pub fn load_worker_backend(
     opts: ServeOpts,
 ) -> Result<Box<dyn Serving>> {
     if paths.len() == 1 {
-        let bundle = ServingBundle::load(&paths[0])?;
+        let bundle = ServingBundle::load_with(&paths[0], opts.mmap)?;
         return Ok(Box::new(ServeSession::new(bundle, opts)?));
     }
     load_backend(paths, opts)
@@ -512,7 +528,9 @@ impl ServeSession {
             }
         }
         let graph = if model.is_fullbatch() || model.is_minibatch_sage() {
-            Some(Graph::from_edges(bundle.n_nodes, &bundle.edges)?)
+            // The edge list may be an in-place view of the bundle file;
+            // the CSR is built straight off its iterator — no pair Vec.
+            Some(Graph::from_edge_iter(bundle.n_nodes, bundle.edges.iter())?)
         } else {
             None
         };
@@ -716,12 +734,15 @@ impl ServeSession {
         // Session code-gather scratch: the buffer moves into the batch
         // tensor (no copy) and is recovered from it after the forward,
         // so the per-group gather allocates nothing in steady state.
+        // Params go straight to the kernels as borrowed slices — for a
+        // v2 bundle these point into the load-time file image.
+        let pslices = self.bundle.params.slices()?;
         let mut buf = std::mem::take(&mut self.scratch.codes);
         for g in &co.groups {
             self.gather_codes(codes, &g.ids, &mut buf)?;
             let t = Tensor::i32(vec![g.ids.len(), m], std::mem::take(&mut buf))?;
             let emb =
-                self.model.embed_nodes(&self.bundle.params, std::slice::from_ref(&t), self.threads)?;
+                self.model.embed_nodes_with(&pslices, std::slice::from_ref(&t), self.threads)?;
             if let Tensor::I32 { data, .. } = t {
                 buf = data;
             }
@@ -738,6 +759,7 @@ impl ServeSession {
         let d = self.d;
         let co = self.batcher.coalesce(unique);
         let mut out = Vec::with_capacity(unique.len() * d);
+        let pslices = self.bundle.params.slices()?;
         let mut buf = std::mem::take(&mut self.scratch.codes);
         for g in &co.groups {
             // Per-node seeded fan-out: node u's neighborhood (and hence
@@ -750,7 +772,7 @@ impl ServeSession {
                 hop2.extend_from_slice(&s.hop2);
             }
             let tensors = self.node_set_tensors(&g.ids, &hop1, &hop2, &mut buf)?;
-            let emb = self.model.embed_nodes(&self.bundle.params, &tensors, self.threads)?;
+            let emb = self.model.embed_nodes_with(&pslices, &tensors, self.threads)?;
             out.extend_from_slice(&emb.as_f32()?[..g.real * d]);
         }
         self.scratch.codes = buf;
@@ -789,8 +811,9 @@ impl ServeSession {
 
     fn compute_fullbatch(&mut self, unique: &[u32]) -> Result<Vec<f32>> {
         if self.fb_h.is_none() {
-            let emb =
-                self.model.embed_nodes(&self.bundle.params, &self.fb_batch, self.threads)?;
+            let emb = self
+                .model
+                .embed_nodes_with(&self.bundle.params.slices()?, &self.fb_batch, self.threads)?;
             let data = match emb {
                 Tensor::F32 { data, .. } => data,
                 Tensor::I32 { .. } => {
@@ -841,7 +864,8 @@ impl Serving for ServeSession {
                 self.bundle.manifest.name
             ))
         })?;
-        let logits = self.model.head_logits(&self.bundle.params, h, rows, self.threads)?;
+        let logits =
+            self.model.head_logits_with(&self.bundle.params.slices()?, h, rows, self.threads)?;
         let argmax = argmax_rows(&logits, k);
         Ok((logits, argmax))
     }
@@ -860,6 +884,11 @@ impl Serving for ServeSession {
 
     fn model_name(&self) -> String {
         self.bundle.manifest.name.clone()
+    }
+
+    fn bundle_meta(&self) -> Option<(u64, u64, bool)> {
+        let m = &self.bundle.meta;
+        Some((m.load_us, m.file_bytes, m.quantized))
     }
 }
 

@@ -161,10 +161,13 @@ impl ShardRouter {
         })
     }
 
-    /// Load every shard file of one export and build the router.
+    /// Load every shard file of one export and build the router
+    /// (`ServeOpts::mmap` selects mapped vs heap-read backing per file).
     pub fn load(paths: &[PathBuf], opts: ServeOpts) -> Result<Self> {
-        let bundles: Vec<ServingBundle> =
-            paths.iter().map(|p| ServingBundle::load(p)).collect::<Result<_>>()?;
+        let bundles: Vec<ServingBundle> = paths
+            .iter()
+            .map(|p| ServingBundle::load_with(p, opts.mmap))
+            .collect::<Result<_>>()?;
         Self::new(bundles, opts)
     }
 
@@ -344,5 +347,18 @@ impl Serving for ShardRouter {
 
     fn take_fanout_report(&mut self) -> Option<FanoutReport> {
         self.last_fanout.take()
+    }
+
+    fn bundle_meta(&self) -> Option<(u64, u64, bool)> {
+        // Shards load independently (possibly in parallel workers), so
+        // cold start is the slowest load; footprint is the summed files.
+        let mut agg: Option<(u64, u64, bool)> = None;
+        for s in &self.sessions {
+            if let Some((us, bytes, q)) = s.bundle_meta() {
+                let (aus, abytes, aq) = agg.unwrap_or((0, 0, false));
+                agg = Some((aus.max(us), abytes + bytes, aq || q));
+            }
+        }
+        agg
     }
 }

@@ -484,6 +484,16 @@ fn stats_response(
         ("model", Json::str(backend.model_name())),
         ("cache", backend.stats_json()),
     ]);
+    // Cold-start telemetry of the served artifact(s): load wall time,
+    // on-disk footprint, and whether int8 params were dequantized.
+    // Absent for backends with no local bundle (the remote router).
+    if let Some((load_us, bytes, quantized)) = backend.bundle_meta() {
+        if let Json::Obj(o) = &mut resp {
+            o.insert("bundle_load_us".to_string(), Json::num(load_us as f64));
+            o.insert("bundle_bytes".to_string(), Json::num(bytes as f64));
+            o.insert("quantized".to_string(), Json::Bool(quantized));
+        }
+    }
     // Shard workers advertise their owned range so the remote router can
     // validate the set in its stats-ping handshake.
     if let Some((lo, hi, index, count)) = backend.shard_info() {

@@ -91,7 +91,15 @@ impl Csr {
     /// Build an unweighted adjacency from an edge list (weight 1 per edge,
     /// duplicates collapse to their multiplicity).
     pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Result<Self> {
-        let triplets: Vec<(u32, u32, f32)> = edges.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        Self::from_edge_iter(n, edges.iter().copied())
+    }
+
+    /// [`Self::from_edges`] over any edge iterator — lets callers holding
+    /// edges in a non-`Vec` layout (e.g. a serving bundle's in-place flat
+    /// `u32` view) build the CSR without materializing a pair `Vec` first.
+    pub fn from_edge_iter<I: IntoIterator<Item = (u32, u32)>>(n: usize, edges: I) -> Result<Self> {
+        let triplets: Vec<(u32, u32, f32)> =
+            edges.into_iter().map(|(a, b)| (a, b, 1.0)).collect();
         Self::from_triplets(n, n, &triplets)
     }
 

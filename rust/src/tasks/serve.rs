@@ -17,7 +17,7 @@ use crate::graph::generate::{sbm, SbmCfg};
 use crate::graph::Graph;
 use crate::params::ParamStore;
 use crate::runtime::Manifest;
-use crate::serve::ServingBundle;
+use crate::serve::{Quant, ServingBundle};
 use crate::tasks::coding::{make_codes, Aux};
 use crate::tasks::linkpred::split_edges;
 use crate::tasks::T1Dataset;
@@ -78,6 +78,14 @@ pub struct ExportOpts {
     pub codes_file: Option<std::path::PathBuf>,
     /// The training run's seed (graph, split and codes all derive from it).
     pub seed: u64,
+    /// Parameter encoding of the written file(s): `f32` (exact) or
+    /// `int8` (per-row asymmetric quantization of every rank-2 tensor,
+    /// ~4× smaller params, dequantized once at load).
+    pub quant: Quant,
+    /// Write the superseded `HGNB0001`/`HGNS0001` envelope format
+    /// instead of the v2 section table — back-compat fixtures and
+    /// cold-start before/after benches only. Incompatible with int8.
+    pub legacy_v1: bool,
 }
 
 /// Assemble a [`ServingBundle`] for a trained checkpoint: regenerate the
@@ -139,8 +147,25 @@ pub fn export_bundle_to(
     out: &Path,
 ) -> Result<ServingBundle> {
     let bundle = export_bundle(manifest, store, opts)?;
-    bundle.save(out)?;
+    write_bundle(&bundle, opts, out)?;
     Ok(bundle)
+}
+
+/// One save dispatch for every export path: v2 section table with the
+/// chosen quantization, or the legacy v1 envelope (f32 only).
+fn write_bundle(bundle: &ServingBundle, opts: &ExportOpts, out: &Path) -> Result<()> {
+    if opts.legacy_v1 {
+        if opts.quant != Quant::F32 {
+            return Err(Error::Config(
+                "--legacy-v1 writes the HGNB0001 envelope, which has no quantized \
+                 section — drop --quant int8 or the legacy flag"
+                    .into(),
+            ));
+        }
+        bundle.save_legacy_v1(out)
+    } else {
+        bundle.save_with(out, opts.quant)
+    }
 }
 
 /// Shard file naming: `bundle.bin` + (0, 2) → `bundle.bin.shard-0-of-2`.
@@ -155,7 +180,7 @@ pub fn shard_path(base: &Path, index: usize, count: usize) -> std::path::PathBuf
 /// `hashgnn export --shards K`: assemble the full bundle, split it into
 /// K contiguous node-range shards
 /// ([`ServingBundle::split_shards`]), and write one checksummed
-/// `HGNS0001` file per shard next to `out_base`. Returns the written
+/// `HGNS0002` file per shard next to `out_base`. Returns the written
 /// paths with their bundles for reporting.
 pub fn export_sharded_to(
     manifest: &Manifest,
@@ -170,7 +195,7 @@ pub fn export_sharded_to(
     for shard in split {
         let info = shard.shard.as_ref().expect("split_shards tags every shard");
         let path = shard_path(out_base, info.index, info.count);
-        shard.save(&path)?;
+        write_bundle(&shard, opts, &path)?;
         out.push((path, shard));
     }
     Ok(out)
@@ -212,7 +237,13 @@ mod tests {
     fn export_regenerates_codes_deterministically() {
         let m = spec::builtin("node_fb_sgc_coded").unwrap();
         let store = ParamStore::init(&m, 7);
-        let opts = ExportOpts { coder: Coder::Hash, codes_file: None, seed: 7 };
+        let opts = ExportOpts {
+            coder: Coder::Hash,
+            codes_file: None,
+            seed: 7,
+            quant: Quant::F32,
+            legacy_v1: false,
+        };
         let a = export_bundle(&m, &store, &opts).unwrap();
         let b = export_bundle(&m, &store, &opts).unwrap();
         assert_eq!(a.codes.as_ref().unwrap().bits, b.codes.as_ref().unwrap().bits);

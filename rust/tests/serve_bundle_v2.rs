@@ -1,0 +1,319 @@
+//! Zero-copy bundle format (PR 8) — the load-path parity matrix and the
+//! int8 quantization accuracy gate.
+//!
+//! Every way of getting a bundle into memory must serve bit-identical
+//! bytes: the in-memory bundle handed to `ServingBundle::new`, the v2
+//! section table read back from disk (borrowed views, zero payload
+//! copies), the superseded v1 envelope (owned copies), and — when the
+//! crate is built with `--features mmap` — the mapped file. The matrix
+//! runs all four model families (plain decoder, minibatch SAGE,
+//! full-batch node classification, full-batch link prediction), sharded
+//! and unsharded, at threads 1 and 8.
+//!
+//! The int8 gate trains a real full-batch cell on the Table-1 SBM
+//! analog, exports it both ways, and asserts the quantized bundle's
+//! serving accuracy lands within the documented tolerance (5 points)
+//! of f32.
+
+use std::path::PathBuf;
+
+use hashgnn::cfg::{Coder, CodingCfg, GnnKind, OptimCfg};
+use hashgnn::codes::random_codes;
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
+use hashgnn::runtime::native::spec::{FullBatchBuild, ReconBuild, SageMbBuild};
+use hashgnn::runtime::Model;
+use hashgnn::serve::{Quant, ServeOpts, ServeSession, ServingBundle, ShardRouter};
+use hashgnn::tasks::coding::{make_codes, Aux};
+use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hashgnn_bundle_v2").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn opts(threads: usize) -> ServeOpts {
+    ServeOpts { threads, cache_capacity: 32, seed: 5, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// The four families
+// ---------------------------------------------------------------------------
+
+fn recon_bundle() -> ServingBundle {
+    let m = ReconBuild {
+        name: "v2_recon".into(),
+        c: 4,
+        m: 3,
+        d_c: 5,
+        d_m: 6,
+        d_e: 2,
+        l: 2,
+        light: false,
+        batch: 4,
+        optim: OptimCfg::adamw_default(),
+    }
+    .manifest();
+    let store = ParamStore::init(&m, 4);
+    let codes = random_codes(12, CodingCfg::new(4, 3).unwrap(), 5);
+    ServingBundle::new(m, &store, Some(codes), vec![], 12).unwrap()
+}
+
+fn sage_bundle() -> ServingBundle {
+    let build = SageMbBuild {
+        name: "v2_mb".into(),
+        coded: true,
+        link: false,
+        n: 60,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 3).unwrap(), 9).unwrap();
+    let store = ParamStore::init(&manifest, 13);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+fn fb_bundle(link: bool) -> ServingBundle {
+    let build = FullBatchBuild {
+        name: "v2_fb".into(),
+        gnn: GnnKind::Gcn,
+        coded: true,
+        link,
+        n: 60,
+        n_classes: 4,
+        d_e: 6,
+        hidden: 8,
+        c: 4,
+        m: 5,
+        d_c: 6,
+        d_m: 7,
+        l: 2,
+        light: false,
+        e_train: 32,
+        e_pred: 48,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let graph = sbm(SbmCfg::new(60, 4, 8.0, 2.0), 3).unwrap();
+    let codes =
+        make_codes(&Aux::Graph(&graph), Coder::Hash, CodingCfg::new(4, 5).unwrap(), 3).unwrap();
+    let store = ParamStore::init(&manifest, 21);
+    ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), 60).unwrap()
+}
+
+fn families() -> Vec<(&'static str, ServingBundle, Vec<u32>, Vec<(u32, u32)>)> {
+    vec![
+        ("recon", recon_bundle(), vec![0, 7, 11, 3, 7], vec![(0, 7), (3, 11)]),
+        ("sage_mb", sage_bundle(), vec![0, 7, 59, 13, 7], vec![(7, 0), (59, 59)]),
+        ("node_fb", fb_bundle(false), vec![0, 7, 59, 13, 7], vec![(7, 0), (59, 59)]),
+        ("link_fb", fb_bundle(true), vec![0, 7, 59, 13, 7], vec![(7, 0), (59, 59)]),
+    ]
+}
+
+/// Everything a session can serve for this family, as exact bits:
+/// embeddings, edge scores, and (where a head exists) logits + classes.
+fn fingerprint(
+    bundle: ServingBundle,
+    threads: usize,
+    query: &[u32],
+    edges: &[(u32, u32)],
+) -> Vec<u32> {
+    let mut s = ServeSession::new(bundle, opts(threads)).unwrap();
+    let mut bits: Vec<u32> = s.embed_nodes(query).unwrap().iter().map(|v| v.to_bits()).collect();
+    bits.extend(s.score_edges(edges).unwrap().iter().map(|v| v.to_bits()));
+    if let Ok((logits, classes)) = s.predict_classes(&query[..2]) {
+        bits.extend(logits.iter().map(|v| v.to_bits()));
+        bits.extend(classes.iter().map(|&c| c as u32));
+    }
+    bits
+}
+
+// ---------------------------------------------------------------------------
+// Unsharded matrix: in-memory vs v2 heap vs v1 legacy (vs mmap)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_families_serve_identical_bytes_across_load_paths() {
+    let dir = tmp_dir("matrix");
+    for (name, bundle, query, edges) in families() {
+        let p_v2 = dir.join(format!("{name}.v2.bundle"));
+        let p_v1 = dir.join(format!("{name}.v1.bundle"));
+        bundle.save(&p_v2).unwrap();
+        bundle.save_legacy_v1(&p_v1).unwrap();
+
+        let v2 = ServingBundle::load(&p_v2).unwrap();
+        assert!(v2.meta.zero_copy, "{name}: v2 f32 load must be zero-copy");
+        assert!(!v2.meta.quantized, "{name}: f32 load must not report quantized");
+        assert!(v2.params.borrowed(), "{name}: v2 params must be views");
+        assert!(v2.edges.borrowed(), "{name}: v2 edges must be views");
+        if let Some(codes) = &v2.codes {
+            assert!(codes.bits.words_borrowed(), "{name}: v2 code words must be views");
+        }
+        assert!(v2.meta.load_us > 0 || v2.meta.file_bytes > 0, "{name}: load meta filled");
+
+        let v1 = ServingBundle::load(&p_v1).unwrap();
+        assert!(!v1.meta.zero_copy, "{name}: the v1 envelope copies every section");
+        assert!(!v1.params.borrowed() && !v1.edges.borrowed());
+
+        for threads in [1usize, 8] {
+            let reference = fingerprint(bundle.clone(), threads, &query, &edges);
+            let from_v2 = fingerprint(v2.clone(), threads, &query, &edges);
+            let from_v1 = fingerprint(v1.clone(), threads, &query, &edges);
+            assert_eq!(
+                reference, from_v2,
+                "{name} (threads={threads}): v2 section-table load changed served bytes"
+            );
+            assert_eq!(
+                reference, from_v1,
+                "{name} (threads={threads}): legacy v1 load changed served bytes"
+            );
+            #[cfg(feature = "mmap")]
+            {
+                let mapped = ServingBundle::load_with(&p_v2, true).unwrap();
+                assert!(mapped.meta.zero_copy);
+                let from_map = fingerprint(mapped, threads, &query, &edges);
+                assert_eq!(
+                    reference, from_map,
+                    "{name} (threads={threads}): mmap load changed served bytes"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded matrix: split → files → router, per format
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_sets_serve_identical_bytes_across_formats() {
+    let dir = tmp_dir("shards");
+    for (name, bundle, query, edges) in families() {
+        let shards = bundle.split_shards(3).unwrap();
+        for threads in [1usize, 8] {
+            // Unsharded session is the reference for the routed answers.
+            let mut whole = ServeSession::new(bundle.clone(), opts(threads)).unwrap();
+            let ref_embed: Vec<u32> =
+                whole.embed_nodes(&query).unwrap().iter().map(|v| v.to_bits()).collect();
+            let ref_scores: Vec<u32> =
+                whole.score_edges(&edges).unwrap().iter().map(|v| v.to_bits()).collect();
+            for legacy in [false, true] {
+                let mut loaded = Vec::new();
+                for (i, shard) in shards.iter().enumerate() {
+                    let tag = if legacy { "v1" } else { "v2" };
+                    let p = dir.join(format!("{name}.{tag}.shard{i}"));
+                    if legacy {
+                        shard.save_legacy_v1(&p).unwrap();
+                    } else {
+                        shard.save(&p).unwrap();
+                    }
+                    loaded.push(ServingBundle::load(&p).unwrap());
+                }
+                let mut router = ShardRouter::new(loaded, opts(threads)).unwrap();
+                let got: Vec<u32> =
+                    router.embed_nodes(&query).unwrap().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_embed, got,
+                    "{name} (threads={threads}, legacy={legacy}): routed embeddings diverged"
+                );
+                let got_scores: Vec<u32> =
+                    router.score_edges(&edges).unwrap().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_scores, got_scores,
+                    "{name} (threads={threads}, legacy={legacy}): routed scores diverged"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 accuracy gate on the Table-1 SBM analog
+// ---------------------------------------------------------------------------
+
+/// Documented tolerance for the int8 export: serving accuracy on the
+/// strong-community SBM may move at most this much against f32
+/// (docs/SERVING.md "cold start & memory").
+const INT8_ACC_TOLERANCE: f64 = 0.05;
+
+#[test]
+fn int8_export_keeps_table1_accuracy_within_tolerance() {
+    let n = 300usize;
+    let graph = sbm(SbmCfg::new(n, 4, 16.0, 2.0), 11).unwrap();
+    let build = FullBatchBuild {
+        name: "v2_int8_gate".into(),
+        gnn: GnnKind::Sgc,
+        coded: true,
+        link: false,
+        n,
+        n_classes: 4,
+        d_e: 16,
+        hidden: 16,
+        c: 8,
+        m: 8,
+        d_c: 16,
+        d_m: 16,
+        l: 2,
+        light: false,
+        e_train: 64,
+        e_pred: 128,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest();
+    let run = RunOpts { epochs: 15, eval_every: 5, seed: 7 };
+    let model = Model::native(manifest.clone(), 0).unwrap();
+    let (out, store) = nodeclf::run_fullbatch_model(&model, Frontend::Hash, &graph, run).unwrap();
+    assert!(out.final_loss.is_finite());
+
+    // Same code derivation as the training run, frozen into the bundle.
+    let coding = CodingCfg::new(8, 8).unwrap();
+    let codes = make_codes(&Aux::Graph(&graph), Coder::Hash, coding, run.seed).unwrap();
+    let bundle =
+        ServingBundle::new(manifest, &store, Some(codes), graph.undirected_edges(), n).unwrap();
+
+    let dir = tmp_dir("int8_gate");
+    let p_f32 = dir.join("gate.f32.bundle");
+    let p_i8 = dir.join("gate.i8.bundle");
+    bundle.save_with(&p_f32, Quant::F32).unwrap();
+    bundle.save_with(&p_i8, Quant::Int8).unwrap();
+    assert!(
+        std::fs::metadata(&p_i8).unwrap().len() < std::fs::metadata(&p_f32).unwrap().len(),
+        "int8 file must be smaller than f32"
+    );
+
+    let labels = graph.labels().unwrap();
+    let all: Vec<u32> = (0..n as u32).collect();
+    let accuracy = |path: &std::path::Path| -> (f64, bool) {
+        let loaded = ServingBundle::load(path).unwrap();
+        let quantized = loaded.meta.quantized;
+        let mut s = ServeSession::new(loaded, opts(1)).unwrap();
+        let (_logits, classes) = s.predict_classes(&all).unwrap();
+        let hits = classes.iter().zip(labels).filter(|&(&c, &y)| c as u32 == y).count();
+        (hits as f64 / n as f64, quantized)
+    };
+    let (acc_f32, q_f32) = accuracy(&p_f32);
+    let (acc_i8, q_i8) = accuracy(&p_i8);
+    assert!(!q_f32 && q_i8, "meta.quantized must reflect the written encoding");
+    // The trained cell must actually have learned something, or the gate
+    // would pass vacuously at chance level.
+    assert!(acc_f32 > 0.5, "trained f32 accuracy too low to gate against ({acc_f32:.3})");
+    assert!(
+        (acc_f32 - acc_i8).abs() <= INT8_ACC_TOLERANCE,
+        "int8 accuracy {acc_i8:.3} drifted more than {INT8_ACC_TOLERANCE} from f32 {acc_f32:.3}"
+    );
+}

@@ -65,7 +65,7 @@ fn session(bundle: ServingBundle, threads: usize, cache: usize) -> ServeSession 
 fn fullbatch_session_matches_infer_model_bitwise() {
     let bundle = fb_bundle(false);
     // Reference: the InferModel over the same rebuilt adjacency + codes.
-    let rebuilt = Graph::from_edges(bundle.n_nodes, &bundle.edges).unwrap();
+    let rebuilt = Graph::from_edge_iter(bundle.n_nodes, bundle.edges.iter()).unwrap();
     let adj = Arc::new(
         rebuilt.adj().normalized(bundle.manifest.hyper_str("adj").unwrap()).unwrap(),
     );
@@ -76,7 +76,8 @@ fn fullbatch_session_matches_infer_model_bitwise() {
     let mut buf = Vec::new();
     codes.gather_int_codes(&ids_all, &mut buf);
     let codes_t = Tensor::i32(vec![60, 5], buf).unwrap();
-    let h_ref = im.embed_nodes(&bundle.params, &[codes_t.clone()], 1).unwrap();
+    let params = bundle.params.to_tensors().unwrap();
+    let h_ref = im.embed_nodes(&params, &[codes_t.clone()], 1).unwrap();
     let h_ref = h_ref.as_f32().unwrap();
     let d = im.embed_dim();
 
@@ -105,7 +106,7 @@ fn fullbatch_session_matches_infer_model_bitwise() {
         assert_eq!(scores[k].to_bits(), acc.to_bits());
     }
     // Class predictions equal the full-batch head over the same rows.
-    let logits_ref = im.predict_classes(&bundle.params, &[codes_t], 1).unwrap();
+    let logits_ref = im.predict_classes(&params, &[codes_t], 1).unwrap();
     let logits_ref = logits_ref.as_f32().unwrap();
     let k = 4usize;
     let (logits, classes) = s.predict_classes(&query).unwrap();
@@ -252,7 +253,13 @@ fn sage_session_embeddings_are_request_grouping_invariant() {
 fn export_roundtrip_serves_registry_model() {
     let manifest = spec::builtin("node_fb_sgc_coded").unwrap();
     let store = ParamStore::init(&manifest, 7);
-    let opts = ExportOpts { coder: Coder::Hash, codes_file: None, seed: 7 };
+    let opts = ExportOpts {
+        coder: Coder::Hash,
+        codes_file: None,
+        seed: 7,
+        quant: hashgnn::serve::Quant::F32,
+        legacy_v1: false,
+    };
     let bundle = export_bundle(&manifest, &store, &opts).unwrap();
     assert_eq!(bundle.n_nodes, 1024);
     assert!(bundle.code_bytes() > 0);
