@@ -5,10 +5,14 @@
 //! (GCN / GIN over CSR adjacency, node-count × thread sweep) so the SpMM
 //! propagation's scaling is tracked, plus the serving path
 //! (`ServeSession::embed_nodes` batch × thread × cache-hit-rate sweep,
-//! `rows_infer`). Also asserts the backend's determinism contract
-//! (bit-identical loss and served bytes across thread counts) on every
-//! run, and emits machine-readable `BENCH_train_step.json` at the repo
-//! root.
+//! `rows_infer`), plus three before/after comparisons for the training
+//! pipeline: pooled vs sequential neighbor sampling (`rows_sampler`),
+//! step-scratch reuse vs fresh allocation (`rows_scratch`), and a
+//! pipeline-depth sweep (`rows_pipeline`). Also asserts the backend's
+//! determinism contract (bit-identical loss and served bytes across
+//! thread counts, pooled samples == sequential, scratch reuse == fresh
+//! alloc, loss curves identical across pipeline depths) on every run,
+//! and emits machine-readable `BENCH_train_step.json` at the repo root.
 
 mod bench_util;
 
@@ -24,8 +28,9 @@ use hashgnn::runtime::native::spec::{FullBatchBuild, SageMbBuild};
 use hashgnn::runtime::{Model, Tensor};
 use hashgnn::ser::{self, Json};
 use hashgnn::serve::{ServeOpts, ServeSession, ServingBundle};
+use hashgnn::graph::NeighborSampler;
 use hashgnn::tasks::sage::{Features, SageBatcher, SageTask};
-use hashgnn::train::{self, BatchSource};
+use hashgnn::train::{self, BatchSource, TrainOpts};
 
 fn build_for(batch: usize, n: usize) -> SageMbBuild {
     SageMbBuild {
@@ -284,6 +289,183 @@ fn main() -> hashgnn::Result<()> {
     }
     println!("{}", ti.render());
 
+    // Before/after: sequential single-stream sampling vs the pooled
+    // per-position seed-stream sampler. threads == 1 IS the sequential
+    // reference (`sample_streams_par` falls back to `sample_streams`);
+    // every pooled row's output is asserted bit-equal to it.
+    let mut tsmp = Table::new(
+        "pooled neighbor sampling (bit-identical to sequential reference)",
+        &["mode", "threads", "batches/s", "us/batch", "speedup"],
+    );
+    let mut sampler_rows: Vec<Json> = Vec::new();
+    {
+        let sampler = NeighborSampler::new(&g, 5, 5);
+        let sbatch: Vec<u32> = (0..256).map(|i| (i * (n / 256)) as u32).collect();
+        let sreps = bench_util::pick(100usize, 20);
+        let reference = sampler.sample_streams(&sbatch, 0xBEEF);
+        let mut seq_secs: Option<f64> = None;
+        for &threads in &thread_counts {
+            let mode = if threads == 1 { "sequential" } else { "pooled" };
+            let sample = sampler.sample_streams_par(&sbatch, 0xBEEF, threads);
+            if sample.hop1 != reference.hop1 || sample.hop2 != reference.hop2 {
+                determinism_ok = false;
+            }
+            let s = Samples::collect(reps, || {
+                for _ in 0..sreps {
+                    std::hint::black_box(sampler.sample_streams_par(&sbatch, 0xBEEF, threads));
+                }
+            });
+            let secs = s.median() / sreps as f64;
+            let base = *seq_secs.get_or_insert(secs);
+            tsmp.row(vec![
+                mode.into(),
+                threads.to_string(),
+                format!("{:.0}", 1.0 / secs),
+                format!("{:.1}", secs * 1e6),
+                format!("{:.2}x", base / secs),
+            ]);
+            sampler_rows.push(Json::obj(vec![
+                ("mode", Json::str(mode)),
+                ("threads", Json::num(threads as f64)),
+                ("batch", Json::num(sbatch.len() as f64)),
+                ("batches_per_s", Json::num(1.0 / secs)),
+                ("us_per_batch", Json::num(secs * 1e6)),
+                ("speedup_vs_sequential", Json::num(base / secs)),
+            ]));
+        }
+    }
+    println!("{}", tsmp.render());
+
+    // Before/after: fresh-alloc steps vs step-scratch reuse, on
+    // pre-produced batches so only step execution is measured. The loss
+    // bits of both modes must match — reuse is structurally a zero-fill.
+    let mut tscr = Table::new(
+        "step-scratch reuse (bit-identical to fresh alloc)",
+        &["mode", "threads", "steps/s", "ns/step"],
+    );
+    let mut scratch_rows: Vec<Json> = Vec::new();
+    {
+        let manifest = build_for(128, n).manifest();
+        let probe = Model::native(manifest.clone(), 1)?;
+        let task = SageTask {
+            graph: g.clone(),
+            labels: labels.clone(),
+            features: Features::Codes(codes.clone()),
+            train_nodes: Arc::new((0..n as u32).collect()),
+        };
+        let mut batcher = SageBatcher::new(task, &probe, 9)?;
+        let batches: Vec<_> = (0..steps).map(|s| batcher.next_batch(s)).collect();
+        let mut reference: Option<Vec<u32>> = None;
+        for &threads in &thread_counts {
+            for (mode, reuse) in [("fresh_alloc", false), ("scratch_reuse", true)] {
+                let model = Model::native(manifest.clone(), threads)?;
+                model.set_scratch_reuse(reuse)?;
+                let mut losses: Vec<f32> = Vec::new();
+                let s = Samples::collect(reps, || {
+                    let mut store = ParamStore::init(&model.manifest, 1);
+                    losses.clear();
+                    for b in &batches {
+                        losses.push(train::run_step(&model, &mut store, b).expect("scratch step"));
+                    }
+                });
+                let secs_per_step = s.median() / steps as f64;
+                tscr.row(vec![
+                    mode.into(),
+                    threads.to_string(),
+                    format!("{:.2}", 1.0 / secs_per_step),
+                    format!("{:.0}", secs_per_step * 1e9),
+                ]);
+                scratch_rows.push(Json::obj(vec![
+                    ("mode", Json::str(mode)),
+                    ("threads", Json::num(threads as f64)),
+                    ("steps_per_s", Json::num(1.0 / secs_per_step)),
+                    ("ns_per_step", Json::num(secs_per_step * 1e9)),
+                ]));
+                let bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(r) => {
+                        if *r != bits {
+                            determinism_ok = false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!("{}", tscr.render());
+
+    // Pipeline depth sweep: serial reference vs pipelined producer at
+    // prefetch {1, 2, 4}, end-to-end (sampling + step). Loss curves must
+    // be bit-identical — depth only moves where time is spent.
+    let mut tpipe = Table::new(
+        "pipelined training end-to-end (loss bit-identical across depths)",
+        &["mode", "prefetch", "sample threads", "steps/s"],
+    );
+    let mut pipeline_rows: Vec<Json> = Vec::new();
+    {
+        let manifest = build_for(128, n).manifest();
+        let model = Model::native(manifest.clone(), avail)?;
+        let psteps = bench_util::pick(24u64, 6);
+        let sample_threads = avail.min(4);
+        let mut configs: Vec<(&str, bool, usize, usize)> = vec![("serial", false, 1, 1)];
+        for &pf in &[1usize, 2, 4] {
+            configs.push(("pipelined", true, pf, sample_threads));
+        }
+        let mut reference: Option<Vec<u32>> = None;
+        for (mode, pipeline, prefetch, st) in configs {
+            let mut secs = Vec::with_capacity(reps);
+            let mut bits: Vec<u32> = Vec::new();
+            for _ in 0..reps {
+                let batcher = SageBatcher::new(
+                    SageTask {
+                        graph: g.clone(),
+                        labels: labels.clone(),
+                        features: Features::Codes(codes.clone()),
+                        train_nodes: Arc::new((0..n as u32).collect()),
+                    },
+                    &model,
+                    9,
+                )?
+                .with_sample_threads(st);
+                let mut opts = TrainOpts::new(psteps);
+                opts.pipeline = pipeline;
+                opts.prefetch = prefetch;
+                let mut store = ParamStore::init(&model.manifest, 1);
+                let (log, dt) = bench_util::timed(|| train::train(&model, &mut store, batcher, opts));
+                let log = log?;
+                secs.push(dt);
+                if bits.is_empty() {
+                    bits = log.losses.iter().map(|l| l.to_bits()).collect();
+                }
+            }
+            secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let sec = secs[secs.len() / 2];
+            let steps_per_s = psteps as f64 / sec;
+            tpipe.row(vec![
+                mode.into(),
+                prefetch.to_string(),
+                st.to_string(),
+                format!("{steps_per_s:.2}"),
+            ]);
+            pipeline_rows.push(Json::obj(vec![
+                ("mode", Json::str(mode)),
+                ("prefetch", Json::num(prefetch as f64)),
+                ("sample_threads", Json::num(st as f64)),
+                ("steps_per_s", Json::num(steps_per_s)),
+            ]));
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => {
+                    if *r != bits {
+                        determinism_ok = false;
+                    }
+                }
+            }
+        }
+    }
+    println!("{}", tpipe.render());
+
     assert!(determinism_ok, "native train step diverged across thread counts");
     t.row(vec![
         "determinism (loss bits across thread counts)".into(),
@@ -305,6 +487,9 @@ fn main() -> hashgnn::Result<()> {
         ("rows", Json::Arr(rows)),
         ("rows_fullbatch", Json::Arr(fb_rows)),
         ("rows_infer", Json::Arr(infer_rows)),
+        ("rows_sampler", Json::Arr(sampler_rows)),
+        ("rows_scratch", Json::Arr(scratch_rows)),
+        ("rows_pipeline", Json::Arr(pipeline_rows)),
     ]);
     let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

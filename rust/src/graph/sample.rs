@@ -7,15 +7,31 @@
 //! requirement for the AOT-compiled executables.
 //!
 //! Isolated nodes self-loop: a node with no neighbors samples itself.
+//!
+//! Two sampling modes share the per-node draw logic:
+//!
+//! - [`NeighborSampler::sample`] / [`sample_seeded`]: one RNG walks the
+//!   whole batch (the original sequential order — still used by serving's
+//!   per-node fan-out and by old tests).
+//! - [`NeighborSampler::sample_streams`] / [`sample_streams_par`]: batch
+//!   position `i` gets its own RNG stream derived from `(seed, i)` via
+//!   [`crate::rng::derive_stream_seed`] — the same per-stream trick the
+//!   LSH encoder uses per bit. Because every position's draws are
+//!   self-contained, the batch can be partitioned across worker threads
+//!   and the result is bit-identical for any thread count and equal to
+//!   the single-threaded stream walk.
+//!
+//! [`sample_seeded`]: NeighborSampler::sample_seeded
+//! [`sample_streams_par`]: NeighborSampler::sample_streams_par
 
 use super::Graph;
 use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::native::par;
 
-/// Two-hop fan-out sample for one batch.
+/// Two-hop fan-out sample for one batch. Target nodes are not stored —
+/// the caller already owns them; this only holds what sampling produced.
 #[derive(Clone, Debug)]
 pub struct FanoutSample {
-    /// Target nodes, length `b`.
-    pub batch: Vec<u32>,
     /// First neighbors, row-major `(b, k1)`.
     pub hop1: Vec<u32>,
     /// Second neighbors, row-major `(b, k1, k2)`.
@@ -46,27 +62,104 @@ impl<'g> NeighborSampler<'g> {
         }
     }
 
-    /// Sample the two-hop neighborhood of `batch`.
-    pub fn sample<R: Rng>(&self, batch: &[u32], rng: &mut R) -> FanoutSample {
-        let b = batch.len();
-        let mut hop1 = Vec::with_capacity(b * self.k1);
-        let mut hop2 = Vec::with_capacity(b * self.k1 * self.k2);
-        for &u in batch {
-            for _ in 0..self.k1 {
-                let n1 = self.sample_neighbor(u, rng);
-                hop1.push(n1);
-                for _ in 0..self.k2 {
-                    hop2.push(self.sample_neighbor(n1, rng));
-                }
+    /// The two-hop draws for one target node, written into that node's
+    /// rows of the hop tensors. `h1` has length `k1`, `h2` length `k1*k2`;
+    /// draw order (n1 then its k2 seconds) matches [`Self::sample`].
+    #[inline]
+    fn sample_node_into<R: Rng>(&self, u: u32, rng: &mut R, h1: &mut [u32], h2: &mut [u32]) {
+        for j in 0..self.k1 {
+            let n1 = self.sample_neighbor(u, rng);
+            h1[j] = n1;
+            for l in 0..self.k2 {
+                h2[j * self.k2 + l] = self.sample_neighbor(n1, rng);
             }
         }
-        FanoutSample { batch: batch.to_vec(), hop1, hop2, k1: self.k1, k2: self.k2 }
+    }
+
+    /// Sample the two-hop neighborhood of `batch` with one sequential RNG.
+    pub fn sample<R: Rng>(&self, batch: &[u32], rng: &mut R) -> FanoutSample {
+        let b = batch.len();
+        let mut hop1 = vec![0u32; b * self.k1];
+        let mut hop2 = vec![0u32; b * self.k1 * self.k2];
+        for (i, &u) in batch.iter().enumerate() {
+            let (k1, kk) = (self.k1, self.k1 * self.k2);
+            self.sample_node_into(
+                u,
+                rng,
+                &mut hop1[i * k1..(i + 1) * k1],
+                &mut hop2[i * kk..(i + 1) * kk],
+            );
+        }
+        FanoutSample { hop1, hop2, k1: self.k1, k2: self.k2 }
     }
 
     /// Convenience: deterministic sample with an explicit seed.
     pub fn sample_seeded(&self, batch: &[u32], seed: u64) -> FanoutSample {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         self.sample(batch, &mut rng)
+    }
+
+    /// Per-position seed streams, sequential reference: batch position `i`
+    /// draws from its own RNG stream `(seed, i)`. Bit-identical to
+    /// [`Self::sample_streams_par`] at every thread count.
+    pub fn sample_streams(&self, batch: &[u32], seed: u64) -> FanoutSample {
+        let b = batch.len();
+        let (k1, kk) = (self.k1, self.k1 * self.k2);
+        let mut hop1 = vec![0u32; b * k1];
+        let mut hop2 = vec![0u32; b * kk];
+        for (i, &u) in batch.iter().enumerate() {
+            let mut rng = Xoshiro256pp::seed_for_stream(seed, i as u64);
+            self.sample_node_into(
+                u,
+                &mut rng,
+                &mut hop1[i * k1..(i + 1) * k1],
+                &mut hop2[i * kk..(i + 1) * kk],
+            );
+        }
+        FanoutSample { hop1, hop2, k1: self.k1, k2: self.k2 }
+    }
+
+    /// Pooled variant of [`Self::sample_streams`]: batch positions are
+    /// partitioned into contiguous chunks, one worker each; every position
+    /// still draws from the RNG stream keyed by its *global* index, so the
+    /// output never depends on the thread count — only who computes it.
+    pub fn sample_streams_par(&self, batch: &[u32], seed: u64, threads: usize) -> FanoutSample {
+        let b = batch.len();
+        let t = par::resolve_threads(threads);
+        if b == 0 || t <= 1 || self.k1 == 0 || self.k2 == 0 {
+            return self.sample_streams(batch, seed);
+        }
+        let t = t.min(b);
+        let chunk = b.div_ceil(t);
+        let (k1, kk) = (self.k1, self.k1 * self.k2);
+        let mut hop1 = vec![0u32; b * k1];
+        let mut hop2 = vec![0u32; b * kk];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = hop1
+                .chunks_mut(chunk * k1)
+                .zip(hop2.chunks_mut(chunk * kk))
+                .enumerate()
+                .map(|(ci, (h1c, h2c))| {
+                    let node0 = ci * chunk;
+                    let rows = h1c.len() / k1;
+                    let targets = &batch[node0..node0 + rows];
+                    Box::new(move || {
+                        for (j, &u) in targets.iter().enumerate() {
+                            let mut rng =
+                                Xoshiro256pp::seed_for_stream(seed, (node0 + j) as u64);
+                            self.sample_node_into(
+                                u,
+                                &mut rng,
+                                &mut h1c[j * k1..(j + 1) * k1],
+                                &mut h2c[j * kk..(j + 1) * kk],
+                            );
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            par::join_all(jobs);
+        }
+        FanoutSample { hop1, hop2, k1: self.k1, k2: self.k2 }
     }
 }
 
@@ -124,5 +217,51 @@ mod tests {
         assert_eq!(a.hop2, b.hop2);
         let c = s.sample_seeded(&[1, 2, 3], 8);
         assert_ne!(a.hop1, c.hop1);
+    }
+
+    #[test]
+    fn stream_sampling_matches_pooled_at_any_thread_count() {
+        let g = barabasi_albert(300, 3, 11).unwrap();
+        let s = NeighborSampler::new(&g, 5, 3);
+        // Batch sizes straddling chunk boundaries, incl. b < threads.
+        for b in [1usize, 3, 7, 16, 65] {
+            let batch: Vec<u32> = (0..b as u32).map(|i| (i * 37) % 300).collect();
+            let reference = s.sample_streams(&batch, 0xFEED);
+            for t in [1usize, 2, 8] {
+                let pooled = s.sample_streams_par(&batch, 0xFEED, t);
+                assert_eq!(reference.hop1, pooled.hop1, "hop1 b={b} t={t}");
+                assert_eq!(reference.hop2, pooled.hop2, "hop2 b={b} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_samples_are_valid_neighbors() {
+        let g = erdos_renyi(120, 6.0, 4).unwrap();
+        let s = NeighborSampler::new(&g, 4, 2);
+        let batch: Vec<u32> = (0..30).collect();
+        let sample = s.sample_streams_par(&batch, 5, 8);
+        for (i, &u) in batch.iter().enumerate() {
+            for j in 0..4 {
+                let n1 = sample.hop1[i * 4 + j];
+                assert!(g.neighbors(u as usize).contains(&n1) || n1 == u);
+                for l in 0..2 {
+                    let n2 = sample.hop2[(i * 4 + j) * 2 + l];
+                    assert!(g.neighbors(n1 as usize).contains(&n2) || n2 == n1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_position_is_the_stream_key() {
+        // The same node at a different batch position draws a different
+        // neighborhood; the same position always draws the same one.
+        let g = barabasi_albert(100, 3, 2).unwrap();
+        let s = NeighborSampler::new(&g, 6, 2);
+        let a = s.sample_streams(&[5, 5], 1);
+        assert_eq!(&a.hop1[..6], s.sample_streams(&[5], 1).hop1.as_slice());
+        let differs = a.hop1[..6] != a.hop1[6..] || a.hop2[..12] != a.hop2[12..];
+        assert!(differs, "independent streams drew identical neighborhoods");
     }
 }

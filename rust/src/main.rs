@@ -176,6 +176,16 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "native-backend compute threads (0 = all cores; loss curves are bit-identical across counts)",
         )
         .opt(
+            "sample-threads",
+            "1",
+            "minibatch sampler threads (0 = all cores; per-position seed streams keep batches bit-identical across counts)",
+        )
+        .opt(
+            "prefetch",
+            "2",
+            "producer→trainer channel depth for pipelined minibatch training (batches buffered ahead)",
+        )
+        .opt(
             "ckpt-out",
             "",
             "save the trained ParamStore checkpoint here (feeds `hashgnn export`)",
@@ -228,7 +238,13 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     };
     let epochs = a.get_usize("epochs")?;
     eprintln!("[train] {epochs} epochs ...");
-    let run = sage::train_sage(&model, task, epochs, &split.val, seed, a.get_u64("log-every")?)?;
+    let cfg = hashgnn::train::PipeCfg {
+        sample_threads: a.get_usize_auto("sample-threads")?,
+        prefetch: a.get_usize("prefetch")?.max(1),
+        pipeline: true,
+    };
+    let run =
+        sage::train_sage_cfg(&model, task, epochs, &split.val, seed, a.get_u64("log-every")?, cfg)?;
     let batcher = sage::SageBatcher::new(
         sage::SageTask {
             graph: g.clone(),

@@ -243,6 +243,24 @@ impl Model {
     pub fn backend_name(&self) -> &'static str {
         self.train.backend_name()
     }
+
+    /// Toggle the native backend's step-scratch buffer reuse (on by
+    /// default). Reuse is structurally bit-identical to fresh allocation;
+    /// turning it off exists for the train-step bench and parity tests.
+    /// Errors on the HLO backend, which manages its own buffers.
+    pub fn set_scratch_reuse(&self, on: bool) -> Result<()> {
+        match &self.train {
+            Executable::Native(e) => {
+                e.model().set_scratch_reuse(on);
+                Ok(())
+            }
+            Executable::Hlo(_) => Err(Error::Runtime(
+                "scratch reuse is a native-backend knob — the HLO backend manages its own \
+                 buffers"
+                    .into(),
+            )),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ use crate::runtime::Manifest;
 use crate::{Error, Result};
 
 use super::ops;
+use super::scratch::StepScratch;
 
 /// Decoder hyper-dimensions (`c, m` coding; `d_c → d_m → … → d_e` MLP).
 #[derive(Clone, Copy, Debug)]
@@ -111,9 +112,19 @@ impl DecCache {
     pub fn output(&self) -> &[f32] {
         self.acts.last().expect("decoder cache has >= 1 activation")
     }
+
+    /// Retire the cache, returning its buffers to the arena for the next
+    /// step.
+    pub fn recycle(self, scratch: &mut StepScratch) {
+        if let Some(h0) = self.h0_raw {
+            scratch.give(h0);
+        }
+        scratch.give_all(self.acts);
+    }
 }
 
 /// Decode `codes (n, m)` into embeddings `(n, d_e)`, caching activations.
+/// Buffers come from `scratch` (bit-identical to fresh allocation).
 pub fn forward(
     dims: &DecoderDims,
     idx: &DecoderIdx,
@@ -121,6 +132,7 @@ pub fn forward(
     codes: &[i32],
     n: usize,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<DecCache> {
     ops::validate_codes(codes, dims.c)?;
     if codes.len() != n * dims.m {
@@ -130,10 +142,10 @@ pub fn forward(
             dims.m
         )));
     }
-    let mut h0 = vec![0.0f32; n * dims.d_c];
+    let mut h0 = scratch.take(n * dims.d_c);
     ops::codebook_fwd(params[idx.books], codes, n, dims.m, dims.c, dims.d_c, &mut h0, threads);
     let (h0_raw, first) = if let Some(w0) = idx.w0 {
-        let mut scaled = h0.clone();
+        let mut scaled = scratch.take_copy(&h0);
         ops::scale_cols(&mut scaled, dims.d_c, params[w0], threads);
         (Some(h0), scaled)
     } else {
@@ -145,7 +157,7 @@ pub fn forward(
     for i in 0..dims.l {
         let (w, b) = idx.mlp[i];
         let relu = i < dims.l - 1;
-        let mut out = vec![0.0f32; n * mlp_dims[i + 1]];
+        let mut out = scratch.take(n * mlp_dims[i + 1]);
         ops::linear_fwd(
             &acts[i],
             params[w],
@@ -242,11 +254,12 @@ pub fn backward(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) {
     let n = codes.len() / dims.m;
     let mlp_dims = dims.mlp_dims();
     debug_assert_eq!(d_out.len(), n * dims.d_e);
-    let mut cur = d_out.to_vec();
+    let mut cur = scratch.take_copy(d_out);
     for i in (0..dims.l).rev() {
         let (w, b) = idx.mlp[i];
         if i < dims.l - 1 {
@@ -254,9 +267,9 @@ pub fn backward(
         }
         ops::grad_w(&cache.acts[i], &cur, n, mlp_dims[i], mlp_dims[i + 1], &mut grads[w], threads);
         ops::grad_b(&cur, n, mlp_dims[i + 1], &mut grads[b]);
-        let mut prev = vec![0.0f32; n * mlp_dims[i]];
+        let mut prev = scratch.take(n * mlp_dims[i]);
         ops::matmul_wt(&cur, params[w], n, mlp_dims[i], mlp_dims[i + 1], false, &mut prev, threads);
-        cur = prev;
+        scratch.give(std::mem::replace(&mut cur, prev));
     }
     // cur = gradient w.r.t. the (possibly rescaled) gather-sum (n, d_c).
     if let Some(w0) = idx.w0 {
@@ -285,6 +298,7 @@ pub fn backward(
             threads,
         );
     }
+    scratch.give(cur);
 }
 
 #[cfg(test)]
@@ -328,15 +342,27 @@ mod tests {
         let store = ParamStore::init(&m, 7);
         let params: Vec<&[f32]> = store.params.iter().map(|t| t.as_f32().unwrap()).collect();
         let codes = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3]; // (4, 3)
-        let c1 = forward(&dims, &idx, &params, &codes, 4, 1).unwrap();
-        let c8 = forward(&dims, &idx, &params, &codes, 4, 8).unwrap();
+        let mut sc = StepScratch::new();
+        let c1 = forward(&dims, &idx, &params, &codes, 4, 1, &mut sc).unwrap();
+        let c8 = forward(&dims, &idx, &params, &codes, 4, 8, &mut sc).unwrap();
         assert_eq!(c1.output().len(), 4 * 2);
         assert!(c1
             .output()
             .iter()
             .zip(c8.output())
             .all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(forward(&dims, &idx, &params, &[0, 1, 4], 1, 1).is_err(), "code 4 out of range");
+        // Recycled-buffer forward stays bit-identical to the fresh one.
+        c1.recycle(&mut sc);
+        let c1b = forward(&dims, &idx, &params, &codes, 4, 1, &mut sc).unwrap();
+        assert!(c1b
+            .output()
+            .iter()
+            .zip(c8.output())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(
+            forward(&dims, &idx, &params, &[0, 1, 4], 1, 1, &mut sc).is_err(),
+            "code 4 out of range"
+        );
     }
 
     #[test]
@@ -360,7 +386,8 @@ mod tests {
             let store = ParamStore::init(&m, 11);
             let params: Vec<&[f32]> = store.params.iter().map(|t| t.as_f32().unwrap()).collect();
             let codes = vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3];
-            let cached = forward(&dims, &idx, &params, &codes, 4, 1).unwrap();
+            let cached =
+                forward(&dims, &idx, &params, &codes, 4, 1, &mut StepScratch::new()).unwrap();
             for threads in [1usize, 8] {
                 let lean = forward_infer(&dims, &idx, &params, &codes, 4, threads).unwrap();
                 assert!(

@@ -30,6 +30,7 @@ use super::decoder::find_param;
 use super::layers::{spmm_par, FeatCache, FeatSource, LinearIdx};
 use super::ops;
 use super::par::par_rows;
+use super::scratch::StepScratch;
 
 /// Full-batch model dims.
 #[derive(Clone, Copy, Debug)]
@@ -144,6 +145,22 @@ pub struct FbCache {
     pub h: Vec<f32>,
 }
 
+impl FbCache {
+    /// Return every cached buffer to `scratch` once the step's backward
+    /// pass has consumed the cache.
+    pub fn recycle(self, scratch: &mut StepScratch) {
+        let FbCache { feat, gnn, h } = self;
+        feat.recycle(scratch);
+        match gnn {
+            GnnCache::Gcn { h1 } => scratch.give(h1),
+            GnnCache::Sgc { a2x } => scratch.give(a2x),
+            GnnCache::Gin { z1, u1, h1, z2, u2 } => scratch.give_all([z1, u1, h1, z2, u2]),
+            GnnCache::Sage { cat1, h1, cat2 } => scratch.give_all([cat1, h1, cat2]),
+        }
+        scratch.give(h);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Per-architecture layers
 // ---------------------------------------------------------------------------
@@ -155,15 +172,18 @@ fn gcn_layer_fwd(
     x: &[f32],
     n: usize,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Vec<f32> {
-    let mut xw = vec![0.0f32; n * l.d_out];
+    let mut xw = scratch.take(n * l.d_out);
     ops::matmul_fwd(x, params[l.w], n, l.d_in, l.d_out, &mut xw, threads);
-    let mut axw = vec![0.0f32; n * l.d_out];
+    let mut axw = scratch.take(n * l.d_out);
     spmm_par(adj, &xw, l.d_out, &mut axw, threads);
+    scratch.give(xw);
     // z = (x s + b) + Â(x w), then ReLU — fixed summand order per element.
-    let mut z = vec![0.0f32; n * l.d_out];
+    let mut z = scratch.take(n * l.d_out);
     ops::linear_fwd(x, params[l.s], params[l.b], n, l.d_in, l.d_out, false, &mut z, threads);
     ops::add_assign(&mut z, &axw, threads);
+    scratch.give(axw);
     ops::relu_inplace(&mut z, threads);
     z
 }
@@ -181,13 +201,14 @@ fn gcn_layer_bwd(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Vec<f32> {
     ops::relu_bwd_mask(&mut dz, out_post, threads);
     if trainable[l.b] {
         ops::grad_b(&dz, n, l.d_out, &mut grads[l.b]);
     }
     // Propagated branch: d(xw) = Âᵀ dz.
-    let mut dq = vec![0.0f32; n * l.d_out];
+    let mut dq = scratch.take(n * l.d_out);
     spmm_par(adj_t, &dz, l.d_out, &mut dq, threads);
     if trainable[l.w] {
         ops::grad_w(x, &dq, n, l.d_in, l.d_out, &mut grads[l.w], threads);
@@ -195,9 +216,11 @@ fn gcn_layer_bwd(
     if trainable[l.s] {
         ops::grad_w(x, &dz, n, l.d_in, l.d_out, &mut grads[l.s], threads);
     }
-    let mut dx = vec![0.0f32; n * l.d_in];
+    let mut dx = scratch.take(n * l.d_in);
     ops::matmul_wt(&dq, params[l.w], n, l.d_in, l.d_out, false, &mut dx, threads);
     ops::matmul_wt(&dz, params[l.s], n, l.d_in, l.d_out, true, &mut dx, threads);
+    scratch.give(dq);
+    scratch.give(dz);
     dx
 }
 
@@ -214,16 +237,18 @@ fn gin_layer_fwd(
     h_in: &[f32],
     n: usize,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> GinFwd {
     let din = l.a.d_in;
     let eps = params[l.eps][0];
-    let mut ah = vec![0.0f32; n * din];
+    let mut ah = scratch.take(n * din);
     spmm_par(adj, h_in, din, &mut ah, threads);
-    let mut z = vec![0.0f32; n * din];
+    let mut z = scratch.take(n * din);
     ops::scale_add(h_in, 1.0 + eps, &ah, &mut z, threads);
-    let mut u = vec![0.0f32; n * l.a.d_out];
+    scratch.give(ah);
+    let mut u = scratch.take(n * l.a.d_out);
     l.a.fwd(params, &z, n, true, &mut u, threads);
-    let mut out = vec![0.0f32; n * l.b.d_out];
+    let mut out = scratch.take(n * l.b.d_out);
     l.b.fwd(params, &u, n, true, &mut out, threads);
     GinFwd { z, u, out }
 }
@@ -242,23 +267,28 @@ fn gin_layer_bwd(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Vec<f32> {
     let din = l.a.d_in;
     let eps = params[l.eps][0];
     ops::relu_bwd_mask(&mut dout, out_post, threads);
-    let mut du = vec![0.0f32; n * l.b.d_in];
+    let mut du = scratch.take(n * l.b.d_in);
     l.b.bwd(params, u, &dout, n, trainable, grads, Some(&mut du), false, threads);
+    scratch.give(dout);
     ops::relu_bwd_mask(&mut du, u, threads);
-    let mut dz = vec![0.0f32; n * din];
+    let mut dz = scratch.take(n * din);
     l.a.bwd(params, z, &du, n, trainable, grads, Some(&mut dz), false, threads);
+    scratch.give(du);
     // z = (1 + ε) h + A h  ⇒  dε = ⟨dz, h⟩, dh = (1 + ε) dz + Aᵀ dz.
     if trainable[l.eps] {
         grads[l.eps][0] += ops::dot_all(&dz, h_in);
     }
-    let mut adz = vec![0.0f32; n * din];
+    let mut adz = scratch.take(n * din);
     spmm_par(adj_t, &dz, din, &mut adz, threads);
-    let mut dh = vec![0.0f32; n * din];
+    let mut dh = scratch.take(n * din);
     ops::scale_add(&dz, 1.0 + eps, &adz, &mut dh, threads);
+    scratch.give(dz);
+    scratch.give(adz);
     dh
 }
 
@@ -302,6 +332,7 @@ pub fn encode_fwd(
     adj: &Csr,
     codes: Option<&Tensor>,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<FbCache> {
     let (n, d, h) = (dims.n, dims.d_e, dims.hidden);
     if adj.n_rows() != n || adj.n_cols() != n {
@@ -311,45 +342,48 @@ pub fn encode_fwd(
             adj.n_cols()
         )));
     }
-    let feat_cache = feat.fwd_full(params, codes, n, threads)?;
+    let feat_cache = feat.fwd_full(params, codes, n, threads, scratch)?;
     let x = feat.output_full(&feat_cache, params);
     let (gnn_cache, hfin) = match gnn {
         FbGnn::Gcn { l1, l2 } => {
-            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads);
-            let h2 = gcn_layer_fwd(l2, params, adj, &h1, n, threads);
+            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads, scratch);
+            let h2 = gcn_layer_fwd(l2, params, adj, &h1, n, threads, scratch);
             (GnnCache::Gcn { h1 }, h2)
         }
         FbGnn::Sgc { lin } => {
-            let mut ax = vec![0.0f32; n * d];
+            let mut ax = scratch.take(n * d);
             spmm_par(adj, x, d, &mut ax, threads);
-            let mut a2x = vec![0.0f32; n * d];
+            let mut a2x = scratch.take(n * d);
             spmm_par(adj, &ax, d, &mut a2x, threads);
-            let mut out = vec![0.0f32; n * h];
+            scratch.give(ax);
+            let mut out = scratch.take(n * h);
             lin.fwd(params, &a2x, n, false, &mut out, threads);
             (GnnCache::Sgc { a2x }, out)
         }
         FbGnn::Gin { l1, l2 } => {
-            let f1 = gin_layer_fwd(l1, params, adj, x, n, threads);
-            let f2 = gin_layer_fwd(l2, params, adj, &f1.out, n, threads);
+            let f1 = gin_layer_fwd(l1, params, adj, x, n, threads, scratch);
+            let f2 = gin_layer_fwd(l2, params, adj, &f1.out, n, threads, scratch);
             (
                 GnnCache::Gin { z1: f1.z, u1: f1.u, h1: f1.out, z2: f2.z, u2: f2.u },
                 f2.out,
             )
         }
         FbGnn::Sage { l1, l2 } => {
-            let mut ax = vec![0.0f32; n * d];
+            let mut ax = scratch.take(n * d);
             spmm_par(adj, x, d, &mut ax, threads);
-            let mut cat1 = vec![0.0f32; n * 2 * d];
+            let mut cat1 = scratch.take(n * 2 * d);
             ops::scatter_cols(x, n, 2 * d, 0, d, &mut cat1, threads);
             ops::scatter_cols(&ax, n, 2 * d, d, d, &mut cat1, threads);
-            let mut h1 = vec![0.0f32; n * h];
+            scratch.give(ax);
+            let mut h1 = scratch.take(n * h);
             l1.fwd(params, &cat1, n, true, &mut h1, threads);
-            let mut ah1 = vec![0.0f32; n * h];
+            let mut ah1 = scratch.take(n * h);
             spmm_par(adj, &h1, h, &mut ah1, threads);
-            let mut cat2 = vec![0.0f32; n * 2 * h];
+            let mut cat2 = scratch.take(n * 2 * h);
             ops::scatter_cols(&h1, n, 2 * h, 0, h, &mut cat2, threads);
             ops::scatter_cols(&ah1, n, 2 * h, h, h, &mut cat2, threads);
-            let mut h2 = vec![0.0f32; n * h];
+            scratch.give(ah1);
+            let mut h2 = scratch.take(n * h);
             l2.fwd(params, &cat2, n, true, &mut h2, threads);
             (GnnCache::Sage { cat1, h1, cat2 }, h2)
         }
@@ -381,10 +415,13 @@ pub fn encode_infer(
     }
     let feats = feat.infer_full(params, codes, n, threads)?;
     let x = feats.as_slice();
+    // Inference allocates fresh (a disabled scratch never pools), keeping
+    // the no-cache / drop-as-consumed property of this path.
+    let mut fresh = StepScratch::disabled();
     let hfin = match gnn {
         FbGnn::Gcn { l1, l2 } => {
-            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads);
-            gcn_layer_fwd(l2, params, adj, &h1, n, threads)
+            let h1 = gcn_layer_fwd(l1, params, adj, x, n, threads, &mut fresh);
+            gcn_layer_fwd(l2, params, adj, &h1, n, threads, &mut fresh)
         }
         FbGnn::Sgc { lin } => {
             let mut ax = vec![0.0f32; n * d];
@@ -441,59 +478,77 @@ pub fn encode_bwd(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let (n, d, h) = (dims.n, dims.d_e, dims.hidden);
     debug_assert_eq!(dh.len(), n * h);
     let x = feat.output_full(&cache.feat, params);
     let dx: Vec<f32> = match (gnn, &cache.gnn) {
         (FbGnn::Gcn { l1, l2 }, GnnCache::Gcn { h1 }) => {
-            let dh1 =
-                gcn_layer_bwd(l2, params, adj_t, h1, &cache.h, dh, n, trainable, grads, threads);
-            gcn_layer_bwd(l1, params, adj_t, x, h1, dh1, n, trainable, grads, threads)
+            let dh1 = gcn_layer_bwd(
+                l2, params, adj_t, h1, &cache.h, dh, n, trainable, grads, threads, scratch,
+            );
+            gcn_layer_bwd(l1, params, adj_t, x, h1, dh1, n, trainable, grads, threads, scratch)
         }
         (FbGnn::Sgc { lin }, GnnCache::Sgc { a2x }) => {
-            let mut da2x = vec![0.0f32; n * d];
+            let mut da2x = scratch.take(n * d);
             lin.bwd(params, a2x, &dh, n, trainable, grads, Some(&mut da2x), false, threads);
-            let mut dax = vec![0.0f32; n * d];
+            scratch.give(dh);
+            let mut dax = scratch.take(n * d);
             spmm_par(adj_t, &da2x, d, &mut dax, threads);
-            let mut dx = vec![0.0f32; n * d];
+            scratch.give(da2x);
+            let mut dx = scratch.take(n * d);
             spmm_par(adj_t, &dax, d, &mut dx, threads);
+            scratch.give(dax);
             dx
         }
         (FbGnn::Gin { l1, l2 }, GnnCache::Gin { z1, u1, h1, z2, u2 }) => {
             let dh1 = gin_layer_bwd(
                 l2, params, adj_t, h1, z2, u2, &cache.h, dh, n, trainable, grads, threads,
+                scratch,
             );
-            gin_layer_bwd(l1, params, adj_t, x, z1, u1, h1, dh1, n, trainable, grads, threads)
+            gin_layer_bwd(
+                l1, params, adj_t, x, z1, u1, h1, dh1, n, trainable, grads, threads, scratch,
+            )
         }
         (FbGnn::Sage { l1, l2 }, GnnCache::Sage { cat1, h1, cat2 }) => {
             let mut dz2 = dh;
             ops::relu_bwd_mask(&mut dz2, &cache.h, threads);
-            let mut dcat2 = vec![0.0f32; n * 2 * h];
+            let mut dcat2 = scratch.take(n * 2 * h);
             l2.bwd(params, cat2, &dz2, n, trainable, grads, Some(&mut dcat2), false, threads);
+            scratch.give(dz2);
             // dh1 = dcat2[:, :h] + Âᵀ dcat2[:, h:].
-            let mut dh1 = vec![0.0f32; n * h];
+            let mut dh1 = scratch.take(n * h);
             ops::gather_cols(&dcat2, n, 2 * h, 0, h, false, &mut dh1, threads);
-            let mut dah1 = vec![0.0f32; n * h];
+            let mut dah1 = scratch.take(n * h);
             ops::gather_cols(&dcat2, n, 2 * h, h, h, false, &mut dah1, threads);
-            let mut tmp = vec![0.0f32; n * h];
+            scratch.give(dcat2);
+            let mut tmp = scratch.take(n * h);
             spmm_par(adj_t, &dah1, h, &mut tmp, threads);
+            scratch.give(dah1);
             ops::add_assign(&mut dh1, &tmp, threads);
+            scratch.give(tmp);
             ops::relu_bwd_mask(&mut dh1, h1, threads);
-            let mut dcat1 = vec![0.0f32; n * 2 * d];
+            let mut dcat1 = scratch.take(n * 2 * d);
             l1.bwd(params, cat1, &dh1, n, trainable, grads, Some(&mut dcat1), false, threads);
-            let mut dx = vec![0.0f32; n * d];
+            scratch.give(dh1);
+            let mut dx = scratch.take(n * d);
             ops::gather_cols(&dcat1, n, 2 * d, 0, d, false, &mut dx, threads);
-            let mut dax = vec![0.0f32; n * d];
+            let mut dax = scratch.take(n * d);
             ops::gather_cols(&dcat1, n, 2 * d, d, d, false, &mut dax, threads);
-            let mut tmp = vec![0.0f32; n * d];
+            scratch.give(dcat1);
+            let mut tmp = scratch.take(n * d);
             spmm_par(adj_t, &dax, d, &mut tmp, threads);
+            scratch.give(dax);
             ops::add_assign(&mut dx, &tmp, threads);
+            scratch.give(tmp);
             dx
         }
         _ => return Err(Error::Runtime("full-batch cache/model mismatch".into())),
     };
-    feat.bwd_full(params, codes, &cache.feat, &dx, trainable, grads, threads)
+    feat.bwd_full(params, codes, &cache.feat, &dx, trainable, grads, threads, scratch)?;
+    scratch.give(dx);
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -595,19 +650,25 @@ pub fn clf_grads(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<f32> {
     let (n, h) = (dims.n, dims.hidden);
     let (codes, rest) = split_codes(coded, batch);
     let labels = rest[0].as_i32()?;
     let mask = rest[1].as_f32()?;
-    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads)?;
-    let mut logits = vec![0.0f32; n * n_classes];
+    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads, scratch)?;
+    let mut logits = scratch.take(n * n_classes);
     head.fwd(params, &cache.h, n, false, &mut logits, threads);
-    let mut dlogits = vec![0.0f32; n * n_classes];
+    let mut dlogits = scratch.take(n * n_classes);
     let loss = ops::masked_softmax_ce(&logits, labels, mask, n, n_classes, &mut dlogits, threads)?;
-    let mut dh = vec![0.0f32; n * h];
+    scratch.give(logits);
+    let mut dh = scratch.take(n * h);
     head.bwd(params, &cache.h, &dlogits, n, trainable, grads, Some(&mut dh), false, threads);
-    encode_bwd(feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads)?;
+    scratch.give(dlogits);
+    encode_bwd(
+        feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads, scratch,
+    )?;
+    cache.recycle(scratch);
     Ok(loss)
 }
 
@@ -647,6 +708,7 @@ pub fn link_grads(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<f32> {
     let (n, h) = (dims.n, dims.hidden);
     let (codes, rest) = split_codes(coded, batch);
@@ -655,19 +717,24 @@ pub fn link_grads(
     validate_edges(pos, n)?;
     validate_edges(neg, n)?;
     let e = pos.len() / 2;
-    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads)?;
-    let mut pos_s = vec![0.0f32; e];
-    let mut neg_s = vec![0.0f32; e];
+    let cache = encode_fwd(feat, gnn, dims, params, &adj.a, codes, threads, scratch)?;
+    let mut pos_s = scratch.take(e);
+    let mut neg_s = scratch.take(e);
     edge_dot(&cache.h, pos, h, &mut pos_s, threads);
     edge_dot(&cache.h, neg, h, &mut neg_s, threads);
-    let mut dpos = vec![0.0f32; e];
-    let mut dneg = vec![0.0f32; e];
+    let mut dpos = scratch.take(e);
+    let mut dneg = scratch.take(e);
     let loss = ops::bce_pair_loss(&pos_s, &neg_s, &mut dpos, &mut dneg);
-    let mut dh = vec![0.0f32; n * h];
+    scratch.give_all([pos_s, neg_s]);
+    let mut dh = scratch.take(n * h);
     // Fixed order: positive edges, then negative.
     edge_dot_bwd(&cache.h, pos, &dpos, h, &mut dh, threads);
     edge_dot_bwd(&cache.h, neg, &dneg, h, &mut dh, threads);
-    encode_bwd(feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads)?;
+    scratch.give_all([dpos, dneg]);
+    encode_bwd(
+        feat, gnn, dims, params, &adj.at, codes, &cache, dh, trainable, grads, threads, scratch,
+    )?;
+    cache.recycle(scratch);
     Ok(loss)
 }
 

@@ -21,6 +21,7 @@ use crate::{Error, Result};
 use super::decoder::{self, find_param, DecCache, DecoderDims, DecoderIdx};
 use super::ops;
 use super::par::par_rows;
+use super::scratch::StepScratch;
 
 // ---------------------------------------------------------------------------
 // Feature front-end
@@ -59,6 +60,17 @@ pub enum FeatCache {
     Full,
 }
 
+impl FeatCache {
+    /// Retire the cache, returning its buffers to the step arena.
+    pub fn recycle(self, scratch: &mut StepScratch) {
+        match self {
+            FeatCache::Dec(c) => c.recycle(scratch),
+            FeatCache::Table { x } => scratch.give(x),
+            FeatCache::Full => {}
+        }
+    }
+}
+
 impl FeatSource {
     /// Resolve the coded front-end from manifest hyper-parameters.
     pub fn resolve_decoder(manifest: &Manifest) -> Result<FeatSource> {
@@ -93,17 +105,25 @@ impl FeatSource {
 
     /// Forward one node set (`t` is the codes `(rows, m)` or ids `(rows,)`
     /// tensor); returns the cache whose [`Self::output`] is `(rows, d)`.
-    pub fn fwd(&self, params: &[&[f32]], t: &Tensor, threads: usize) -> Result<FeatCache> {
+    pub fn fwd(
+        &self,
+        params: &[&[f32]],
+        t: &Tensor,
+        threads: usize,
+        scratch: &mut StepScratch,
+    ) -> Result<FeatCache> {
         match self {
             FeatSource::Decoder { dims, idx } => {
                 let codes = t.as_i32()?;
                 let rows = codes.len() / dims.m;
-                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, codes, rows, threads)?))
+                Ok(FeatCache::Dec(decoder::forward(
+                    dims, idx, params, codes, rows, threads, scratch,
+                )?))
             }
             FeatSource::Table { idx, n, d } => {
                 let ids = t.as_i32()?;
                 ops::validate_ids(ids, *n)?;
-                let mut x = vec![0.0f32; ids.len() * d];
+                let mut x = scratch.take(ids.len() * d);
                 ops::table_gather(params[*idx], ids, *d, &mut x, threads);
                 Ok(FeatCache::Table { x })
             }
@@ -188,10 +208,22 @@ impl FeatSource {
         trainable: &[bool],
         grads: &mut [Vec<f32>],
         threads: usize,
+        scratch: &mut StepScratch,
     ) -> Result<()> {
         match (self, cache) {
             (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
-                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
+                decoder::backward(
+                    dims,
+                    idx,
+                    params,
+                    t.as_i32()?,
+                    c,
+                    dx,
+                    trainable,
+                    grads,
+                    threads,
+                    scratch,
+                );
                 Ok(())
             }
             (FeatSource::Table { idx, d, .. }, FeatCache::Table { .. }) => {
@@ -213,6 +245,7 @@ impl FeatSource {
         codes: Option<&Tensor>,
         n: usize,
         threads: usize,
+        scratch: &mut StepScratch,
     ) -> Result<FeatCache> {
         match self {
             FeatSource::Decoder { dims, idx } => {
@@ -227,7 +260,7 @@ impl FeatSource {
                         dims.m
                     )));
                 }
-                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, c, n, threads)?))
+                Ok(FeatCache::Dec(decoder::forward(dims, idx, params, c, n, threads, scratch)?))
             }
             FeatSource::Table { n: nt, .. } => {
                 if codes.is_some() {
@@ -261,12 +294,24 @@ impl FeatSource {
         trainable: &[bool],
         grads: &mut [Vec<f32>],
         threads: usize,
+        scratch: &mut StepScratch,
     ) -> Result<()> {
         match (self, cache) {
             (FeatSource::Decoder { dims, idx }, FeatCache::Dec(c)) => {
                 let t = codes
                     .ok_or_else(|| Error::Shape("coded full-batch backward needs codes".into()))?;
-                decoder::backward(dims, idx, params, t.as_i32()?, c, dx, trainable, grads, threads);
+                decoder::backward(
+                    dims,
+                    idx,
+                    params,
+                    t.as_i32()?,
+                    c,
+                    dx,
+                    trainable,
+                    grads,
+                    threads,
+                    scratch,
+                );
                 Ok(())
             }
             (FeatSource::Table { idx, .. }, FeatCache::Full) => {

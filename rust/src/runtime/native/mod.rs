@@ -50,9 +50,10 @@ pub mod layers;
 pub mod ops;
 pub(crate) mod par;
 pub mod sage;
+pub mod scratch;
 pub mod spec;
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::runtime::{Manifest, Tensor, TensorSpec};
 use crate::sparse::Csr;
@@ -63,6 +64,7 @@ use gnn::{FbAdj, FbDims, FbGnn};
 use layers::{FeatSource, LinearIdx};
 use par::resolve_threads;
 use sage::{SageDims, SageIdx};
+use scratch::StepScratch;
 
 /// Which model family a manifest describes.
 enum Task {
@@ -229,6 +231,10 @@ pub struct NativeModel {
     trainable: Vec<bool>,
     /// Sparse adjacency for the full-batch tasks, bound once per model.
     adj: OnceLock<FbAdj>,
+    /// Step-scratch arena: activation/gradient/gather buffers recycled
+    /// across train steps (see [`scratch`]). Buffer reuse is structurally
+    /// bit-identical to fresh allocation, so it cannot change results.
+    scratch: Mutex<StepScratch>,
 }
 
 impl NativeModel {
@@ -242,7 +248,29 @@ impl NativeModel {
         let optim = AdamHyper::from_json(manifest.hyper.get("optim")?)?;
         let trainable = manifest.params.iter().map(|p| p.trainable).collect();
         let manifest = normalize_manifest(manifest, &task);
-        Ok(Self { manifest, task, feat, optim, trainable, adj: OnceLock::new() })
+        Ok(Self {
+            manifest,
+            task,
+            feat,
+            optim,
+            trainable,
+            adj: OnceLock::new(),
+            scratch: Mutex::new(StepScratch::new()),
+        })
+    }
+
+    /// Lock the step-scratch arena. A poisoned lock is recovered — the
+    /// pool only ever holds dead zero-fill buffers, so a panicking step
+    /// cannot leave it in a state that affects later steps.
+    fn scratch(&self) -> MutexGuard<'_, StepScratch> {
+        self.scratch.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Toggle step-scratch buffer reuse (on by default). With reuse off
+    /// every temporary is a fresh allocation — the before-side of the
+    /// train-step bench and the parity tests.
+    pub fn set_scratch_reuse(&self, on: bool) {
+        self.scratch().set_reuse(on);
     }
 
     pub fn n_params(&self) -> usize {
@@ -329,8 +357,12 @@ impl NativeModel {
         let out = &self.manifest.pred_output;
         let data = match &self.task {
             Task::Recon { .. } => {
-                let cache = self.feat.fwd(&slices, &batch[0], threads)?;
-                self.feat.output(&cache).to_vec()
+                let mut guard = self.scratch();
+                let scratch = &mut *guard;
+                let cache = self.feat.fwd(&slices, &batch[0], threads, scratch)?;
+                let data = self.feat.output(&cache).to_vec();
+                cache.recycle(scratch);
+                data
             }
             Task::SageClf { sage, head, n_classes, dims } => {
                 sage::clf_pred(&self.feat, sage, head, *n_classes, dims, &slices, batch, threads)?
@@ -405,6 +437,9 @@ impl NativeModel {
                 out_v.push(inputs[2 * p + i].clone());
             }
         }
+        // Gradient buffers came from the scratch arena (`grads_inner`);
+        // retire them now that the update has consumed them.
+        self.scratch().give_all(grads);
         let mut out = out_p;
         out.append(&mut out_m);
         out.append(&mut out_v);
@@ -422,14 +457,16 @@ impl NativeModel {
         batch: &[Tensor],
         threads: usize,
     ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let mut guard = self.scratch();
+        let scratch = &mut *guard;
         let mut grads: Vec<Vec<f32>> =
-            self.manifest.params.iter().map(|s| vec![0.0f32; s.n_elements()]).collect();
+            self.manifest.params.iter().map(|s| scratch.take(s.n_elements())).collect();
         let loss = match &self.task {
             Task::Recon { batch: b, d_e } => {
-                let cache = self.feat.fwd(params, &batch[0], threads)?;
+                let cache = self.feat.fwd(params, &batch[0], threads, scratch)?;
                 let out = self.feat.output(&cache);
                 let target = batch[1].as_f32()?;
-                let mut dout = vec![0.0f32; b * d_e];
+                let mut dout = scratch.take(b * d_e);
                 let loss = ops::mse(out, target, &mut dout, threads);
                 self.feat.bwd(
                     params,
@@ -439,7 +476,10 @@ impl NativeModel {
                     &self.trainable,
                     &mut grads,
                     threads,
+                    scratch,
                 )?;
+                scratch.give(dout);
+                cache.recycle(scratch);
                 loss
             }
             Task::SageClf { sage, head, n_classes, dims } => sage::clf_grads(
@@ -453,6 +493,7 @@ impl NativeModel {
                 &self.trainable,
                 &mut grads,
                 threads,
+                scratch,
             )?,
             Task::SageLink { sage, dims } => sage::link_grads(
                 &self.feat,
@@ -463,6 +504,7 @@ impl NativeModel {
                 &self.trainable,
                 &mut grads,
                 threads,
+                scratch,
             )?,
             Task::FbClf { gnn, head, n_classes, dims, coded } => gnn::clf_grads(
                 &self.feat,
@@ -477,6 +519,7 @@ impl NativeModel {
                 &self.trainable,
                 &mut grads,
                 threads,
+                scratch,
             )?,
             Task::FbLink { gnn, dims, coded } => gnn::link_grads(
                 &self.feat,
@@ -489,6 +532,7 @@ impl NativeModel {
                 &self.trainable,
                 &mut grads,
                 threads,
+                scratch,
             )?,
         };
         if !loss.is_finite() {

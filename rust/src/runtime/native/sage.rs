@@ -20,6 +20,7 @@ use crate::{Error, Result};
 use super::layers::{FeatCache, FeatSource, LinearIdx};
 use super::ops;
 use super::par::par_rows;
+use super::scratch::StepScratch;
 
 /// GraphSAGE encoder dims (one minibatch).
 #[derive(Clone, Copy, Debug)]
@@ -78,7 +79,18 @@ pub struct EncCache {
     pub hfin: Vec<f32>,
 }
 
+impl EncCache {
+    /// Retire the cache, returning every buffer to the step arena.
+    pub fn recycle(self, scratch: &mut StepScratch) {
+        self.fc_b.recycle(scratch);
+        self.fc_h1.recycle(scratch);
+        self.fc_h2.recycle(scratch);
+        scratch.give_all([self.cat_h1, self.l1_h1, self.cat_b, self.l1_b, self.cat2, self.hfin]);
+    }
+}
+
 /// Encode one node set (targets + two fan-out hops) to `(batch, hidden)`.
+/// Buffers come from `scratch` (bit-identical to fresh allocation).
 pub fn encode_fwd(
     feat: &FeatSource,
     sage: &SageIdx,
@@ -88,11 +100,12 @@ pub fn encode_fwd(
     t_h1: &Tensor,
     t_h2: &Tensor,
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<EncCache> {
     let (b, k1, k2, d, h) = (dims.batch, dims.k1, dims.k2, dims.d_e, dims.hidden);
-    let fc_b = feat.fwd(params, t_b, threads)?;
-    let fc_h1 = feat.fwd(params, t_h1, threads)?;
-    let fc_h2 = feat.fwd(params, t_h2, threads)?;
+    let fc_b = feat.fwd(params, t_b, threads, scratch)?;
+    let fc_h1 = feat.fwd(params, t_h1, threads, scratch)?;
+    let fc_h2 = feat.fwd(params, t_h2, threads, scratch)?;
     let xb = feat.output(&fc_b);
     let xh1 = feat.output(&fc_h1);
     let xh2 = feat.output(&fc_h2);
@@ -108,30 +121,33 @@ pub fn encode_fwd(
     }
 
     // Layer 1 on the hop-1 nodes (their neighbors are the hop-2 nodes).
-    let mut agg_h2 = vec![0.0f32; b * k1 * d];
+    let mut agg_h2 = scratch.take(b * k1 * d);
     ops::mean_rows_fwd(xh2, b * k1, k2, d, &mut agg_h2, threads);
-    let mut cat_h1 = vec![0.0f32; b * k1 * 2 * d];
+    let mut cat_h1 = scratch.take(b * k1 * 2 * d);
     ops::scatter_cols(xh1, b * k1, 2 * d, 0, d, &mut cat_h1, threads);
     ops::scatter_cols(&agg_h2, b * k1, 2 * d, d, d, &mut cat_h1, threads);
-    let mut l1_h1 = vec![0.0f32; b * k1 * h];
+    scratch.give(agg_h2);
+    let mut l1_h1 = scratch.take(b * k1 * h);
     sage.l1.fwd(params, &cat_h1, b * k1, true, &mut l1_h1, threads);
 
     // Layer 1 on the targets (their neighbors are the hop-1 nodes).
-    let mut agg_h1 = vec![0.0f32; b * d];
+    let mut agg_h1 = scratch.take(b * d);
     ops::mean_rows_fwd(xh1, b, k1, d, &mut agg_h1, threads);
-    let mut cat_b = vec![0.0f32; b * 2 * d];
+    let mut cat_b = scratch.take(b * 2 * d);
     ops::scatter_cols(xb, b, 2 * d, 0, d, &mut cat_b, threads);
     ops::scatter_cols(&agg_h1, b, 2 * d, d, d, &mut cat_b, threads);
-    let mut l1_b = vec![0.0f32; b * h];
+    scratch.give(agg_h1);
+    let mut l1_b = scratch.take(b * h);
     sage.l1.fwd(params, &cat_b, b, true, &mut l1_b, threads);
 
     // Layer 2: aggregate the layer-1 neighbor representations.
-    let mut agg2 = vec![0.0f32; b * h];
+    let mut agg2 = scratch.take(b * h);
     ops::mean_rows_fwd(&l1_h1, b, k1, h, &mut agg2, threads);
-    let mut cat2 = vec![0.0f32; b * 2 * h];
+    let mut cat2 = scratch.take(b * 2 * h);
     ops::scatter_cols(&l1_b, b, 2 * h, 0, h, &mut cat2, threads);
     ops::scatter_cols(&agg2, b, 2 * h, h, h, &mut cat2, threads);
-    let mut hfin = vec![0.0f32; b * h];
+    scratch.give(agg2);
+    let mut hfin = scratch.take(b * h);
     sage.l2.fwd(params, &cat2, b, true, &mut hfin, threads);
 
     Ok(EncCache { fc_b, fc_h1, fc_h2, cat_h1, l1_h1, cat_b, l1_b, cat2, hfin })
@@ -224,36 +240,43 @@ pub fn encode_bwd(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let (b, k1, k2, d, h) = (dims.batch, dims.k1, dims.k2, dims.d_e, dims.hidden);
     debug_assert_eq!(dh.len(), b * h);
 
     // Layer 2.
-    let mut dz2 = dh.to_vec();
+    let mut dz2 = scratch.take_copy(dh);
     ops::relu_bwd_mask(&mut dz2, &cache.hfin, threads);
-    let mut dcat2 = vec![0.0f32; b * 2 * h];
+    let mut dcat2 = scratch.take(b * 2 * h);
     sage.l2.bwd(params, &cache.cat2, &dz2, b, trainable, grads, Some(&mut dcat2), false, threads);
-    let mut dl1_b = vec![0.0f32; b * h];
+    scratch.give(dz2);
+    let mut dl1_b = scratch.take(b * h);
     ops::gather_cols(&dcat2, b, 2 * h, 0, h, false, &mut dl1_b, threads);
-    let mut dagg2 = vec![0.0f32; b * h];
+    let mut dagg2 = scratch.take(b * h);
     ops::gather_cols(&dcat2, b, 2 * h, h, h, false, &mut dagg2, threads);
-    let mut dl1_h1 = vec![0.0f32; b * k1 * h];
+    scratch.give(dcat2);
+    let mut dl1_h1 = scratch.take(b * k1 * h);
     ops::mean_rows_bwd(&dagg2, b, k1, h, false, &mut dl1_h1, threads);
+    scratch.give(dagg2);
 
     // Layer 1, target application.
     ops::relu_bwd_mask(&mut dl1_b, &cache.l1_b, threads);
-    let mut dcat_b = vec![0.0f32; b * 2 * d];
+    let mut dcat_b = scratch.take(b * 2 * d);
     sage.l1.bwd(params, &cache.cat_b, &dl1_b, b, trainable, grads, Some(&mut dcat_b), false, threads);
-    let mut dxb = vec![0.0f32; b * d];
+    scratch.give(dl1_b);
+    let mut dxb = scratch.take(b * d);
     ops::gather_cols(&dcat_b, b, 2 * d, 0, d, false, &mut dxb, threads);
-    let mut dagg_h1 = vec![0.0f32; b * d];
+    let mut dagg_h1 = scratch.take(b * d);
     ops::gather_cols(&dcat_b, b, 2 * d, d, d, false, &mut dagg_h1, threads);
-    let mut dxh1 = vec![0.0f32; b * k1 * d];
+    scratch.give(dcat_b);
+    let mut dxh1 = scratch.take(b * k1 * d);
     ops::mean_rows_bwd(&dagg_h1, b, k1, d, false, &mut dxh1, threads);
+    scratch.give(dagg_h1);
 
     // Layer 1, hop-1 application (second contribution to w1/b1 and xh1).
     ops::relu_bwd_mask(&mut dl1_h1, &cache.l1_h1, threads);
-    let mut dcat_h1 = vec![0.0f32; b * k1 * 2 * d];
+    let mut dcat_h1 = scratch.take(b * k1 * 2 * d);
     sage.l1.bwd(
         params,
         &cache.cat_h1,
@@ -265,16 +288,20 @@ pub fn encode_bwd(
         false,
         threads,
     );
+    scratch.give(dl1_h1);
     ops::gather_cols(&dcat_h1, b * k1, 2 * d, 0, d, true, &mut dxh1, threads);
-    let mut dagg_h2 = vec![0.0f32; b * k1 * d];
+    let mut dagg_h2 = scratch.take(b * k1 * d);
     ops::gather_cols(&dcat_h1, b * k1, 2 * d, d, d, false, &mut dagg_h2, threads);
-    let mut dxh2 = vec![0.0f32; b * k1 * k2 * d];
+    scratch.give(dcat_h1);
+    let mut dxh2 = scratch.take(b * k1 * k2 * d);
     ops::mean_rows_bwd(&dagg_h2, b * k1, k2, d, false, &mut dxh2, threads);
+    scratch.give(dagg_h2);
 
     // Feature front-end, fixed order: targets, hop 1, hop 2.
-    feat.bwd(params, t_b, &cache.fc_b, &dxb, trainable, grads, threads)?;
-    feat.bwd(params, t_h1, &cache.fc_h1, &dxh1, trainable, grads, threads)?;
-    feat.bwd(params, t_h2, &cache.fc_h2, &dxh2, trainable, grads, threads)?;
+    feat.bwd(params, t_b, &cache.fc_b, &dxb, trainable, grads, threads, scratch)?;
+    feat.bwd(params, t_h1, &cache.fc_h1, &dxh1, trainable, grads, threads, scratch)?;
+    feat.bwd(params, t_h2, &cache.fc_h2, &dxh2, trainable, grads, threads, scratch)?;
+    scratch.give_all([dxb, dxh1, dxh2]);
     Ok(())
 }
 
@@ -291,20 +318,26 @@ pub fn clf_grads(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<f32> {
     let (b, h) = (dims.batch, dims.hidden);
-    let cache = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
+    let cache =
+        encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads, scratch)?;
     let labels = batch[3].as_i32()?;
-    let mut logits = vec![0.0f32; b * n_classes];
+    let mut logits = scratch.take(b * n_classes);
     head.fwd(params, &cache.hfin, b, false, &mut logits, threads);
-    let mut dlogits = vec![0.0f32; b * n_classes];
+    let mut dlogits = scratch.take(b * n_classes);
     let loss = ops::softmax_ce(&logits, labels, b, n_classes, &mut dlogits, threads)?;
-    let mut dh = vec![0.0f32; b * h];
+    scratch.give(logits);
+    let mut dh = scratch.take(b * h);
     head.bwd(params, &cache.hfin, &dlogits, b, trainable, grads, Some(&mut dh), false, threads);
+    scratch.give(dlogits);
     encode_bwd(
         feat, sage, dims, params, &batch[0], &batch[1], &batch[2], &cache, &dh, trainable, grads,
-        threads,
+        threads, scratch,
     )?;
+    cache.recycle(scratch);
+    scratch.give(dh);
     Ok(loss)
 }
 
@@ -339,22 +372,28 @@ pub fn link_grads(
     trainable: &[bool],
     grads: &mut [Vec<f32>],
     threads: usize,
+    scratch: &mut StepScratch,
 ) -> Result<f32> {
     let (b, h) = (dims.batch, dims.hidden);
-    let cu = encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads)?;
-    let cv = encode_fwd(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads)?;
-    let cw = encode_fwd(feat, sage, dims, params, &batch[6], &batch[7], &batch[8], threads)?;
-    let mut pos = vec![0.0f32; b];
-    let mut neg = vec![0.0f32; b];
+    let cu =
+        encode_fwd(feat, sage, dims, params, &batch[0], &batch[1], &batch[2], threads, scratch)?;
+    let cv =
+        encode_fwd(feat, sage, dims, params, &batch[3], &batch[4], &batch[5], threads, scratch)?;
+    let cw =
+        encode_fwd(feat, sage, dims, params, &batch[6], &batch[7], &batch[8], threads, scratch)?;
+    let mut pos = scratch.take(b);
+    let mut neg = scratch.take(b);
     ops::dot_rows(&cu.hfin, &cv.hfin, b, h, &mut pos, threads);
     ops::dot_rows(&cu.hfin, &cw.hfin, b, h, &mut neg, threads);
-    let mut dpos = vec![0.0f32; b];
-    let mut dneg = vec![0.0f32; b];
+    let mut dpos = scratch.take(b);
+    let mut dneg = scratch.take(b);
     let loss = ops::bpr_loss(&pos, &neg, &mut dpos, &mut dneg);
+    scratch.give(pos);
+    scratch.give(neg);
     // Score gradients back to the three representation sets.
-    let mut dhu = vec![0.0f32; b * h];
-    let mut dhv = vec![0.0f32; b * h];
-    let mut dhw = vec![0.0f32; b * h];
+    let mut dhu = scratch.take(b * h);
+    let mut dhv = scratch.take(b * h);
+    let mut dhw = scratch.take(b * h);
     {
         let (hu, hv, hw) = (&cu.hfin, &cv.hfin, &cw.hfin);
         par_rows(&mut dhu, h, threads, |row0, rows| {
@@ -382,6 +421,8 @@ pub fn link_grads(
             }
         });
     }
+    scratch.give(dpos);
+    scratch.give(dneg);
     // Fixed order: u, v, w.
     encode_bwd(
         feat,
@@ -396,6 +437,7 @@ pub fn link_grads(
         trainable,
         grads,
         threads,
+        scratch,
     )?;
     encode_bwd(
         feat,
@@ -410,6 +452,7 @@ pub fn link_grads(
         trainable,
         grads,
         threads,
+        scratch,
     )?;
     encode_bwd(
         feat,
@@ -424,7 +467,12 @@ pub fn link_grads(
         trainable,
         grads,
         threads,
+        scratch,
     )?;
+    cu.recycle(scratch);
+    cv.recycle(scratch);
+    cw.recycle(scratch);
+    scratch.give_all([dhu, dhv, dhw]);
     Ok(loss)
 }
 

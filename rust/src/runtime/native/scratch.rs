@@ -1,0 +1,148 @@
+//! Step-scratch arena: the training analog of serving's `SessionScratch`.
+//!
+//! A train step allocates dozens of activation / gradient / gather
+//! buffers (`vec![0.0f32; …]` per layer per step) whose shapes are
+//! identical every step. [`StepScratch`] is a small free-list of `Vec<f32>`
+//! buffers owned by `NativeModel`: the forward/backward passes [`take`]
+//! buffers from it and [`give`] them back when a temporary dies or a
+//! step's caches are retired, so steady-state training performs no
+//! per-step heap allocation on those paths.
+//!
+//! **Bit parity is structural, not asserted-away:** [`take`] returns a
+//! buffer that is `clear()`ed and `resize(len, 0.0)`ed — element-for-
+//! element identical to a fresh `vec![0.0f32; len]` — so reuse cannot
+//! change a single trained bit. The test suite still asserts reuse-on ==
+//! reuse-off loss curves end-to-end (`tests/train_pipeline.rs`).
+//!
+//! [`take`]: StepScratch::take
+//! [`give`]: StepScratch::give
+
+/// Upper bound on pooled buffers: enough for every live temporary of the
+/// deepest backward pass (full-batch GIN), small enough that an
+/// anomalous step cannot pin unbounded memory.
+const MAX_POOLED: usize = 64;
+
+/// Free-list of reusable `f32` buffers (see module docs).
+pub struct StepScratch {
+    reuse: bool,
+    pool: Vec<Vec<f32>>,
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self { reuse: true, pool: Vec::new() }
+    }
+
+    /// A scratch that never pools — every [`Self::take`] is a fresh
+    /// allocation (the before-side of the bench comparison).
+    pub fn disabled() -> Self {
+        Self { reuse: false, pool: Vec::new() }
+    }
+
+    /// Turn pooling on/off. Turning it off drops all pooled buffers.
+    pub fn set_reuse(&mut self, on: bool) {
+        self.reuse = on;
+        if !on {
+            self.pool.clear();
+        }
+    }
+
+    pub fn reuse(&self) -> bool {
+        self.reuse
+    }
+
+    /// A zeroed buffer of `len` elements — bit-identical to
+    /// `vec![0.0f32; len]`, pooled when reuse is on.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if self.reuse {
+            if let Some(mut v) = self.pool.pop() {
+                v.clear();
+                v.resize(len, 0.0);
+                return v;
+            }
+        }
+        vec![0.0f32; len]
+    }
+
+    /// A buffer holding a copy of `src` — the pooled replacement for
+    /// `src.to_vec()` / `src.clone()`.
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.take(src.len());
+        v.copy_from_slice(src);
+        v
+    }
+
+    /// Return a dead buffer to the pool (dropped when reuse is off or the
+    /// pool is full).
+    pub fn give(&mut self, v: Vec<f32>) {
+        if self.reuse && v.capacity() > 0 && self.pool.len() < MAX_POOLED {
+            self.pool.push(v);
+        }
+    }
+
+    /// [`Self::give`] a whole batch of buffers (retiring a step's caches).
+    pub fn give_all<I: IntoIterator<Item = Vec<f32>>>(&mut self, vs: I) {
+        for v in vs {
+            self.give(v);
+        }
+    }
+
+    /// Buffers currently pooled (observability / tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_bitwise_a_fresh_zero_vec() {
+        let mut s = StepScratch::new();
+        let mut v = s.take(4);
+        v.copy_from_slice(&[1.0, -2.0, 3.0, f32::NAN]);
+        s.give(v);
+        let v2 = s.take(6); // longer than the recycled buffer
+        assert_eq!(v2, vec![0.0f32; 6]);
+        s.give(v2);
+        let v3 = s.take(2); // shorter
+        assert_eq!(v3, vec![0.0f32; 2]);
+    }
+
+    #[test]
+    fn disabled_scratch_never_pools() {
+        let mut s = StepScratch::disabled();
+        let v = s.take(8);
+        s.give(v);
+        assert_eq!(s.pooled(), 0);
+        let mut on = StepScratch::new();
+        on.give(vec![0.0; 8]);
+        assert_eq!(on.pooled(), 1);
+        on.set_reuse(false);
+        assert_eq!(on.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut s = StepScratch::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            s.give(vec![0.0; 4]);
+        }
+        assert_eq!(s.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn take_copy_matches_to_vec() {
+        let mut s = StepScratch::new();
+        s.give(vec![9.0; 16]);
+        let src = [1.0f32, 2.0, 3.0];
+        assert_eq!(s.take_copy(&src), src.to_vec());
+    }
+}

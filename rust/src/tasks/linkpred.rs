@@ -22,11 +22,12 @@ use crate::codes::CodeTable;
 use crate::eval::link_hits_at_k;
 use crate::graph::{split::split_items, Graph};
 use crate::params::ParamStore;
-use crate::rng::{Rng, Xoshiro256pp};
+use crate::rng::{derive_stream_seed, Rng, Xoshiro256pp};
+use crate::runtime::native::par;
 use crate::runtime::{Engine, Model, Tensor};
 use crate::tasks::nodeclf::{adj_input, all_codes_tensor, AdjInput, Frontend, RunOpts};
 use crate::tasks::sage;
-use crate::train::{self, BatchSource, TrainLog, TrainOpts};
+use crate::train::{self, BatchSource, PipeCfg, TrainLog, TrainOpts};
 use crate::{Error, Result};
 
 /// Outcome of one link-prediction cell.
@@ -185,6 +186,9 @@ pub struct SageLinkBatcher {
     k2: usize,
     m: usize,
     seed: u64,
+    /// Worker threads for per-position edge drawing + fan-out sampling.
+    /// Never changes the produced tensors, only producer wall time.
+    sample_threads: usize,
 }
 
 impl SageLinkBatcher {
@@ -210,45 +214,100 @@ impl SageLinkBatcher {
             codes,
             pos_edges,
             seed,
+            sample_threads: 1,
         })
     }
 
+    /// Pool the per-batch edge drawing + neighbor sampling across `t`
+    /// workers (0 = all cores). Output tensors are bit-identical for any
+    /// `t`.
+    pub fn with_sample_threads(mut self, t: usize) -> Self {
+        self.sample_threads = t;
+        self
+    }
+
     /// Fan-out sample + code gather for one node set → three tensors
-    /// (shared contract with the classification batcher).
-    fn node_set_tensors(&self, targets: &[u32], rng: &mut Xoshiro256pp) -> Result<Vec<Tensor>> {
-        sage::coded_fanout_tensors(&self.graph, &self.codes, self.k1, self.k2, self.m, targets, rng)
+    /// (shared contract with the classification batcher). `seed` keys the
+    /// per-position sampling streams.
+    fn node_set_tensors(&self, targets: &[u32], seed: u64) -> Result<Vec<Tensor>> {
+        sage::coded_fanout_tensors(
+            &self.graph,
+            &self.codes,
+            self.k1,
+            self.k2,
+            self.m,
+            targets,
+            seed,
+            self.sample_threads,
+        )
+    }
+
+    /// Draw batch position `i`'s training triple on its own RNG stream:
+    /// one positive edge `(u, v)` and a bounded-rejection negative `w`
+    /// with `(u, w)` not an edge. `None` = no non-edge found (too dense).
+    fn draw_triple(&self, root: u64, i: usize, n: usize) -> Option<(u32, u32, u32)> {
+        let mut rng = Xoshiro256pp::seed_for_stream(root, i as u64);
+        let (u, v) = self.pos_edges[rng.index(self.pos_edges.len())];
+        // Bounded rejection sampling: a full-degree hub (or a complete
+        // graph) must error instead of hanging the producer thread.
+        for _ in 0..10_000 {
+            let w = rng.index(n);
+            if w != u as usize && !self.graph.has_edge(u as usize, w) {
+                return Some((u, v, w as u32));
+            }
+        }
+        None
     }
 
     fn train_batch(&self, step: u64) -> Result<Vec<Tensor>> {
-        let mut rng = Xoshiro256pp::seed_from_u64(
-            self.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1),
-        );
+        let step_seed = self.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
         let n = self.graph.n_nodes();
-        let mut us = Vec::with_capacity(self.batch);
-        let mut vs = Vec::with_capacity(self.batch);
-        let mut ws = Vec::with_capacity(self.batch);
-        for _ in 0..self.batch {
-            let (u, v) = self.pos_edges[rng.index(self.pos_edges.len())];
-            // Bounded rejection sampling: a full-degree hub (or a complete
-            // graph) must error instead of hanging the producer thread.
-            let mut neg = None;
-            for _ in 0..10_000 {
-                let w = rng.index(n);
-                if w != u as usize && !self.graph.has_edge(u as usize, w) {
-                    neg = Some(w as u32);
-                    break;
-                }
+        let b = self.batch;
+        // Stream roots under this step: 0 = edge/negative draws,
+        // 1/2/3 = the u/v/w fan-outs. Each batch position then gets its
+        // own sub-stream, so the drawing can be partitioned across
+        // workers without any position seeing another's RNG state.
+        let neg_root = derive_stream_seed(step_seed, 0);
+        let mut triples: Vec<Option<(u32, u32, u32)>> = vec![None; b];
+        let t = par::resolve_threads(self.sample_threads).min(b.max(1));
+        if t <= 1 {
+            for (i, slot) in triples.iter_mut().enumerate() {
+                *slot = self.draw_triple(neg_root, i, n);
             }
-            let w = neg.ok_or_else(|| {
+        } else {
+            let chunk = b.div_ceil(t);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = triples
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(ci, slots)| {
+                    let pos0 = ci * chunk;
+                    Box::new(move || {
+                        for (j, slot) in slots.iter_mut().enumerate() {
+                            *slot = self.draw_triple(neg_root, pos0 + j, n);
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            par::join_all(jobs);
+        }
+        let mut us = Vec::with_capacity(b);
+        let mut vs = Vec::with_capacity(b);
+        let mut ws = Vec::with_capacity(b);
+        for (i, trip) in triples.iter().enumerate() {
+            let (u, v, w) = trip.ok_or_else(|| {
+                // Re-derive the failing position's positive edge for the
+                // error message (rare path, one cheap draw).
+                let mut rng = Xoshiro256pp::seed_for_stream(neg_root, i as u64);
+                let (u, _) = self.pos_edges[rng.index(self.pos_edges.len())];
                 Error::Config(format!("no non-edge negative found for node {u} (graph too dense)"))
             })?;
             us.push(u);
             vs.push(v);
             ws.push(w);
         }
-        let mut tensors = self.node_set_tensors(&us, &mut rng)?;
-        tensors.extend(self.node_set_tensors(&vs, &mut rng)?);
-        tensors.extend(self.node_set_tensors(&ws, &mut rng)?);
+        let mut tensors = self.node_set_tensors(&us, derive_stream_seed(step_seed, 1))?;
+        tensors.extend(self.node_set_tensors(&vs, derive_stream_seed(step_seed, 2))?);
+        tensors.extend(self.node_set_tensors(&ws, derive_stream_seed(step_seed, 3))?);
         Ok(tensors)
     }
 }
@@ -269,10 +328,29 @@ pub fn train_sage_link(
     seed: u64,
     log_every: u64,
 ) -> Result<(ParamStore, TrainLog)> {
-    let batcher = SageLinkBatcher::new(graph, codes, pos_edges, model, seed)?;
+    train_sage_link_cfg(model, graph, codes, pos_edges, n_steps, seed, log_every, PipeCfg::default())
+}
+
+/// [`train_sage_link`] with explicit pipeline knobs. The loss curve and
+/// final params are bit-identical for every `cfg` — only wall time moves.
+#[allow(clippy::too_many_arguments)]
+pub fn train_sage_link_cfg(
+    model: &Model,
+    graph: Arc<Graph>,
+    codes: Arc<CodeTable>,
+    pos_edges: Arc<Vec<(u32, u32)>>,
+    n_steps: u64,
+    seed: u64,
+    log_every: u64,
+    cfg: PipeCfg,
+) -> Result<(ParamStore, TrainLog)> {
+    let batcher = SageLinkBatcher::new(graph, codes, pos_edges, model, seed)?
+        .with_sample_threads(cfg.sample_threads);
     let mut store = ParamStore::init(&model.manifest, seed);
     let mut opts = TrainOpts::new(n_steps);
     opts.log_every = log_every;
+    opts.pipeline = cfg.pipeline;
+    opts.prefetch = cfg.prefetch;
     let log = train::train(model, &mut store, batcher, opts)?;
     Ok((store, log))
 }
@@ -298,16 +376,20 @@ pub fn score_edges_mb(
         seed,
     )?;
     let b = batcher.batch;
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let mut out = Vec::with_capacity(edges.len());
     let mut start = 0usize;
+    let mut batch_idx = 0u64;
     while start < edges.len() {
         let us: Vec<u32> =
             (0..b).map(|i| edges[(start + i).min(edges.len() - 1)].0).collect();
         let vs: Vec<u32> =
             (0..b).map(|i| edges[(start + i).min(edges.len() - 1)].1).collect();
-        let mut tensors = batcher.node_set_tensors(&us, &mut rng)?;
-        tensors.extend(batcher.node_set_tensors(&vs, &mut rng)?);
+        // Per-batch derived seeds (streams 2i / 2i+1), so a batch's
+        // sample never depends on how many batches preceded it.
+        let mut tensors = batcher.node_set_tensors(&us, derive_stream_seed(seed, 2 * batch_idx))?;
+        tensors
+            .extend(batcher.node_set_tensors(&vs, derive_stream_seed(seed, 2 * batch_idx + 1))?);
+        batch_idx += 1;
         let scores = train::predict(model, store, &tensors)?;
         let vals = scores.as_f32()?;
         let take = (edges.len() - start).min(b);
@@ -390,5 +472,20 @@ mod tests {
         assert_eq!(b[8], again[8]);
         let different = batcher.next_batch(1);
         assert_ne!(b[0], different[0]);
+        // Pooled edge drawing + sampling produces the exact same tensors.
+        for t in [2usize, 8] {
+            let mut pooled = SageLinkBatcher::new(
+                batcher.graph.clone(),
+                batcher.codes.clone(),
+                batcher.pos_edges.clone(),
+                &model,
+                11,
+            )
+            .unwrap()
+            .with_sample_threads(t);
+            for step in [0u64, 1, 3] {
+                assert_eq!(batcher.next_batch(step), pooled.next_batch(step), "t={t}");
+            }
+        }
     }
 }

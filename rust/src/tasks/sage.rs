@@ -15,9 +15,9 @@ use crate::codes::CodeTable;
 use crate::eval::{accuracy_from_logits, hits_at_k_from_logits};
 use crate::graph::{Graph, NeighborSampler};
 use crate::params::ParamStore;
-use crate::rng::{Rng, Xoshiro256pp};
+use crate::rng::{derive_stream_seed, Rng, Xoshiro256pp};
 use crate::runtime::{Model, Tensor};
-use crate::train::{self, BatchSource, TrainOpts};
+use crate::train::{self, BatchSource, PipeCfg, TrainOpts};
 use crate::{Error, Result};
 
 /// Feature source for the minibatch pipeline.
@@ -48,6 +48,10 @@ pub struct SageBatcher {
     k2: usize,
     m: usize,
     seed: u64,
+    /// Worker threads for the fan-out sampling inside each batch. Never
+    /// changes the produced tensors (per-position seed streams), only how
+    /// fast the producer runs.
+    sample_threads: usize,
 }
 
 impl SageBatcher {
@@ -59,11 +63,20 @@ impl SageBatcher {
             m: model.manifest.hyper_usize("m")?,
             task,
             seed,
+            sample_threads: 1,
         })
     }
 
+    /// Pool the per-batch neighbor sampling across `t` workers
+    /// (0 = all cores). Output tensors are bit-identical for any `t`.
+    pub fn with_sample_threads(mut self, t: usize) -> Self {
+        self.sample_threads = t;
+        self
+    }
+
     /// Node tensors for an explicit list of target nodes (used by eval).
-    pub fn node_tensors(&self, targets: &[u32], rng: &mut Xoshiro256pp) -> Result<Vec<Tensor>> {
+    /// `seed` keys the per-position fan-out streams.
+    pub fn node_tensors(&self, targets: &[u32], seed: u64) -> Result<Vec<Tensor>> {
         assert_eq!(targets.len(), self.batch);
         match &self.task.features {
             Features::Codes(table) => coded_fanout_tensors(
@@ -73,26 +86,30 @@ impl SageBatcher {
                 self.k2,
                 self.m,
                 targets,
-                rng,
+                seed,
+                self.sample_threads,
             ),
             Features::Ids => {
                 let sampler = NeighborSampler::new(&self.task.graph, self.k1, self.k2);
-                let sample = sampler.sample(targets, rng);
+                let sample = sampler.sample_streams_par(targets, seed, self.sample_threads);
                 let ids =
                     |v: &[u32]| Tensor::i32(vec![v.len()], v.iter().map(|&x| x as i32).collect());
-                Ok(vec![ids(&sample.batch)?, ids(&sample.hop1)?, ids(&sample.hop2)?])
+                Ok(vec![ids(targets)?, ids(&sample.hop1)?, ids(&sample.hop2)?])
             }
         }
     }
 
     fn train_batch(&self, step: u64) -> Vec<Tensor> {
-        let mut rng = Xoshiro256pp::seed_from_u64(
-            self.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1),
-        );
+        let step_seed = self.seed ^ step.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        // Target draws stay on one sequential stream (b cheap draws);
+        // the fan-out gets its own derived root so per-position streams
+        // can never collide with the target stream.
+        let mut rng = Xoshiro256pp::seed_from_u64(step_seed);
         let pool = &self.task.train_nodes;
         let targets: Vec<u32> =
             (0..self.batch).map(|_| pool[rng.index(pool.len())]).collect();
-        let mut tensors = self.node_tensors(&targets, &mut rng).expect("batch tensors");
+        let fanout_seed = derive_stream_seed(step_seed, 1);
+        let mut tensors = self.node_tensors(&targets, fanout_seed).expect("batch tensors");
         let labels: Vec<i32> =
             targets.iter().map(|&t| self.task.labels[t as usize] as i32).collect();
         tensors.push(Tensor::i32(vec![self.batch], labels).expect("labels tensor"));
@@ -110,7 +127,9 @@ impl BatchSource for SageBatcher {
 /// `(rows, m)` tensors one encoder application consumes. Shared by the
 /// classification batcher above and the link batcher in
 /// [`crate::tasks::linkpred`], so the fan-out tensor contract lives in
-/// one place.
+/// one place. `seed` keys the per-position sampling streams;
+/// `sample_threads` only partitions them (bit-identical for any count).
+#[allow(clippy::too_many_arguments)]
 pub fn coded_fanout_tensors(
     graph: &Graph,
     codes: &CodeTable,
@@ -118,17 +137,18 @@ pub fn coded_fanout_tensors(
     k2: usize,
     m: usize,
     targets: &[u32],
-    rng: &mut Xoshiro256pp,
+    seed: u64,
+    sample_threads: usize,
 ) -> Result<Vec<Tensor>> {
     let sampler = NeighborSampler::new(graph, k1, k2);
-    let sample = sampler.sample(targets, rng);
+    let sample = sampler.sample_streams_par(targets, seed, sample_threads);
     let mut buf = Vec::new();
     let gather = |ids: &[u32], buf: &mut Vec<i32>| -> Result<Tensor> {
         codes.gather_int_codes(ids, buf);
         Tensor::i32(vec![ids.len(), m], buf.clone())
     };
     Ok(vec![
-        gather(&sample.batch, &mut buf)?,
+        gather(targets, &mut buf)?,
         gather(&sample.hop1, &mut buf)?,
         gather(&sample.hop2, &mut buf)?,
     ])
@@ -157,13 +177,16 @@ pub fn evaluate(
     }
     let b = batcher.batch;
     let k = model.manifest.hyper_usize("n_classes")?;
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let mut all_logits: Vec<f32> = Vec::with_capacity(nodes.len() * k);
     let mut start = 0usize;
+    let mut batch_idx = 0u64;
     while start < nodes.len() {
         let targets: Vec<u32> =
             (0..b).map(|i| nodes[(start + i).min(nodes.len() - 1)]).collect();
-        let tensors = batcher.node_tensors(&targets, &mut rng)?;
+        // Per-batch derived seed (not one rng carried across batches), so
+        // a batch's sample never depends on how many batches preceded it.
+        let tensors = batcher.node_tensors(&targets, derive_stream_seed(seed, batch_idx))?;
+        batch_idx += 1;
         let logits = train::predict(model, store, &tensors)?;
         let vals = logits.as_f32()?;
         let take = (nodes.len() - start).min(b);
@@ -198,6 +221,22 @@ pub fn train_sage(
     seed: u64,
     log_every: u64,
 ) -> Result<SageRun> {
+    train_sage_cfg(model, task, epochs, val_nodes, seed, log_every, PipeCfg::default())
+}
+
+/// [`train_sage`] with explicit pipeline knobs (`--sample-threads`,
+/// `--prefetch`, serial vs pipelined). The loss curve and final params
+/// are bit-identical for every `cfg` — only wall time moves.
+#[allow(clippy::too_many_arguments)]
+pub fn train_sage_cfg(
+    model: &Model,
+    task: SageTask,
+    epochs: usize,
+    val_nodes: &[u32],
+    seed: u64,
+    log_every: u64,
+    cfg: PipeCfg,
+) -> Result<SageRun> {
     let batcher = SageBatcher::new(
         SageTask {
             graph: task.graph.clone(),
@@ -207,7 +246,8 @@ pub fn train_sage(
         },
         model,
         seed,
-    )?;
+    )?
+    .with_sample_threads(cfg.sample_threads);
     let steps_per_epoch = (task.train_nodes.len().div_ceil(batcher.batch)).max(1) as u64;
     let mut store = ParamStore::init(&model.manifest, seed);
     let mut best_store = store.clone();
@@ -223,9 +263,12 @@ pub fn train_sage(
             },
             model,
             seed ^ ((epoch as u64 + 1) << 32),
-        )?;
+        )?
+        .with_sample_threads(cfg.sample_threads);
         let mut opts = TrainOpts::new(steps_per_epoch);
         opts.log_every = log_every;
+        opts.pipeline = cfg.pipeline;
+        opts.prefetch = cfg.prefetch;
         let log = train::train(model, &mut store, epoch_batcher, opts)?;
         losses.extend(log.losses);
         if val_nodes.is_empty() {
@@ -296,6 +339,7 @@ mod tests {
             k2: 3,
             m: 8,
             seed: 9,
+            sample_threads: 1,
         };
         let tensors = batcher.next_batch(0);
         assert_eq!(tensors.len(), 4);
@@ -308,5 +352,25 @@ mod tests {
         assert_eq!(tensors[0], again[0]);
         let different = batcher.next_batch(1);
         assert_ne!(tensors[0], different[0]);
+        // Pooled sampling produces the exact same batch tensors.
+        for t in [2usize, 8] {
+            let mut pooled = SageBatcher {
+                task: SageTask {
+                    graph: batcher.task.graph.clone(),
+                    labels: batcher.task.labels.clone(),
+                    features: batcher.task.features.clone(),
+                    train_nodes: batcher.task.train_nodes.clone(),
+                },
+                batch: 16,
+                k1: 4,
+                k2: 3,
+                m: 8,
+                seed: 9,
+                sample_threads: t,
+            };
+            for step in [0u64, 1, 5] {
+                assert_eq!(batcher.next_batch(step), pooled.next_batch(step), "t={t}");
+            }
+        }
     }
 }

@@ -58,19 +58,45 @@ impl TrainLog {
 #[derive(Clone, Copy, Debug)]
 pub struct TrainOpts {
     pub n_steps: u64,
-    /// Overlap batch production with execution (bounded channel depth 2).
+    /// Overlap batch production with execution (bounded producer channel).
     pub pipeline: bool,
     /// Print a progress line every `log_every` steps (0 = silent).
     pub log_every: u64,
+    /// Producer channel depth when pipelined: the producer runs at most
+    /// this many batches ahead of the consumer. Depth never changes the
+    /// math (batches are seeded by step index and applied in send order),
+    /// only how much sampling latency the pipeline can hide.
+    pub prefetch: usize,
 }
 
 impl TrainOpts {
     pub fn new(n_steps: u64) -> Self {
-        Self { n_steps, pipeline: true, log_every: 0 }
+        Self { n_steps, pipeline: true, log_every: 0, prefetch: 2 }
     }
 
     pub fn silent(n_steps: u64) -> Self {
-        Self { n_steps, pipeline: true, log_every: 0 }
+        Self::new(n_steps)
+    }
+}
+
+/// Pipeline knobs the CLI exposes on `hashgnn train` and the task-level
+/// drivers (`train_sage_cfg`, `train_sage_link_cfg`) thread through to
+/// [`TrainOpts`] and the batchers. None of these change a single trained
+/// bit — they only move where time is spent.
+#[derive(Clone, Copy, Debug)]
+pub struct PipeCfg {
+    /// Worker threads for deterministic neighbor sampling / negative
+    /// drawing inside the batch producer (1 = sequential reference).
+    pub sample_threads: usize,
+    /// Producer channel depth (see [`TrainOpts::prefetch`]).
+    pub prefetch: usize,
+    /// Overlap batch production with step execution.
+    pub pipeline: bool,
+}
+
+impl Default for PipeCfg {
+    fn default() -> Self {
+        Self { sample_threads: 1, prefetch: 2, pipeline: true }
     }
 }
 
@@ -111,9 +137,9 @@ fn train_pipelined(
     opts: TrainOpts,
 ) -> Result<TrainLog> {
     let n_steps = opts.n_steps;
-    // Depth-2 bounded channel: producer stays at most 2 batches ahead, so
-    // memory is bounded and the consumer never waits on a cold producer.
-    let (tx, rx) = mpsc::sync_channel::<(u64, Vec<Tensor>)>(2);
+    // Bounded channel: the producer stays at most `prefetch` batches ahead,
+    // so memory is bounded and the consumer never waits on a cold producer.
+    let (tx, rx) = mpsc::sync_channel::<(u64, Vec<Tensor>)>(opts.prefetch.max(1));
     let producer = std::thread::spawn(move || {
         for step in 0..n_steps {
             let batch = source.next_batch(step);
@@ -185,7 +211,9 @@ fn validate_batch(model: &Model, batch: &[Tensor]) -> Result<()> {
 }
 
 fn maybe_log(step: u64, loss: f32, log_every: u64) {
-    if log_every > 0 && step % log_every == 0 {
+    // Step 0's loss is pre-training noise; only print it when the user
+    // asked for every step (`log_every == 1`).
+    if log_every > 0 && step % log_every == 0 && (step > 0 || log_every == 1) {
         eprintln!("[train] step {step:>6}  loss {loss:.5}");
     }
 }

@@ -1,0 +1,240 @@
+//! Deterministic parallel training pipeline (PR 9 tier-1 proof).
+//!
+//! Three invariants, all bitwise and all on the native backend (no
+//! artifacts needed):
+//!
+//! 1. **Pipeline knobs move time, not math** — the loss curve and final
+//!    parameters of `train_sage_cfg` / `train_sage_link_cfg` are
+//!    bit-identical across `sample_threads` ∈ {1, 2, 8}, `prefetch` ∈
+//!    {1, 2, 4}, and pipelined vs serial, for both the §4 classification
+//!    head and the link head.
+//! 2. **Pooled sampling == single-stream reference** — a batcher with
+//!    `sample_threads = t` emits the same tensors as `t = 1`, because
+//!    each batch position draws from its own seed stream keyed by
+//!    `(step, position)`, never by worker identity.
+//! 3. **Scratch reuse == fresh allocation** — training with the
+//!    step-scratch arena enabled (default) matches reuse-off runs
+//!    bit-for-bit, on the minibatch decoder path and the full-batch GIN
+//!    path (the deepest scratch user).
+
+use std::sync::Arc;
+
+use hashgnn::cfg::{CodingCfg, GnnKind, OptimCfg};
+use hashgnn::codes::random_codes;
+use hashgnn::graph::generate::{sbm, SbmCfg};
+use hashgnn::params::ParamStore;
+use hashgnn::runtime::native::spec::{FullBatchBuild, SageMbBuild};
+use hashgnn::runtime::{Model, Tensor};
+use hashgnn::tasks::linkpred;
+use hashgnn::tasks::sage::{self, Features, SageTask};
+use hashgnn::train::PipeCfg;
+
+const N: usize = 48;
+const C: usize = 4;
+const M: usize = 3;
+
+fn sage_build(link: bool) -> SageMbBuild {
+    SageMbBuild {
+        name: "t_pipe".into(),
+        coded: true,
+        link,
+        n: N,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: C,
+        m: M,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    }
+}
+
+fn graph_and_codes(seed: u64) -> (Arc<hashgnn::graph::Graph>, Arc<hashgnn::codes::CodeTable>) {
+    let g = Arc::new(sbm(SbmCfg::new(N, 3, 8.0, 2.0), seed).unwrap());
+    let coding = CodingCfg::new(C, M).unwrap();
+    let codes = Arc::new(random_codes(N, coding, seed ^ 0xC0DE));
+    (g, codes)
+}
+
+fn clf_task(g: &Arc<hashgnn::graph::Graph>, codes: &Arc<hashgnn::codes::CodeTable>) -> SageTask {
+    SageTask {
+        graph: g.clone(),
+        labels: Arc::new(g.labels().unwrap().to_vec()),
+        features: Features::Codes(codes.clone()),
+        train_nodes: Arc::new((0..N as u32).collect()),
+    }
+}
+
+/// The full knob grid the acceptance criteria name: threads {1,2,8} ×
+/// prefetch {1,2,4}, all pipelined, plus the serial reference.
+fn knob_grid() -> Vec<PipeCfg> {
+    let mut grid = Vec::new();
+    for &t in &[1usize, 2, 8] {
+        for &pf in &[1usize, 2, 4] {
+            grid.push(PipeCfg { sample_threads: t, prefetch: pf, pipeline: true });
+        }
+    }
+    grid
+}
+
+fn assert_bitwise_eq(reference: &[f32], got: &[f32], what: &str) {
+    assert_eq!(reference.len(), got.len(), "{what}: length mismatch");
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: step {i} diverged ({a} vs {b})");
+    }
+}
+
+#[test]
+fn clf_loss_curve_is_bit_identical_across_all_pipeline_knobs() {
+    let build = sage_build(false);
+    let model = Model::native(build.manifest(), 2).unwrap();
+    let (g, codes) = graph_and_codes(11);
+    let serial = PipeCfg { sample_threads: 1, prefetch: 1, pipeline: false };
+    let reference =
+        sage::train_sage_cfg(&model, clf_task(&g, &codes), 1, &[], 5, 0, serial).unwrap();
+    assert!(!reference.losses.is_empty());
+    assert!(reference.losses.iter().all(|l| l.is_finite()));
+    for cfg in knob_grid() {
+        let run = sage::train_sage_cfg(&model, clf_task(&g, &codes), 1, &[], 5, 0, cfg).unwrap();
+        assert_bitwise_eq(&reference.losses, &run.losses, &format!("clf losses {cfg:?}"));
+        assert_eq!(reference.store.params, run.store.params, "clf params {cfg:?}");
+        assert_eq!(reference.store.step, run.store.step);
+    }
+}
+
+#[test]
+fn link_loss_curve_is_bit_identical_across_all_pipeline_knobs() {
+    let build = sage_build(true);
+    let model = Model::native(build.manifest(), 2).unwrap();
+    let (g, codes) = graph_and_codes(13);
+    let edges = Arc::new(g.undirected_edges());
+    let serial = PipeCfg { sample_threads: 1, prefetch: 1, pipeline: false };
+    let (ref_store, ref_log) = linkpred::train_sage_link_cfg(
+        &model,
+        g.clone(),
+        codes.clone(),
+        edges.clone(),
+        8,
+        7,
+        0,
+        serial,
+    )
+    .unwrap();
+    assert_eq!(ref_log.losses.len(), 8);
+    for cfg in knob_grid() {
+        let (store, log) = linkpred::train_sage_link_cfg(
+            &model,
+            g.clone(),
+            codes.clone(),
+            edges.clone(),
+            8,
+            7,
+            0,
+            cfg,
+        )
+        .unwrap();
+        assert_bitwise_eq(&ref_log.losses, &log.losses, &format!("link losses {cfg:?}"));
+        assert_eq!(ref_store.params, store.params, "link params {cfg:?}");
+    }
+}
+
+#[test]
+fn pooled_batcher_emits_the_single_stream_reference_tensors() {
+    let build = sage_build(false);
+    let model = Model::native(build.manifest(), 1).unwrap();
+    let (g, codes) = graph_and_codes(17);
+    let targets: Vec<u32> = (0..build.batch as u32).map(|i| i * 3 % N as u32).collect();
+    let reference = sage::SageBatcher::new(clf_task(&g, &codes), &model, 3)
+        .unwrap()
+        .node_tensors(&targets, 0xFEED)
+        .unwrap();
+    for t in [2usize, 8, 0] {
+        let pooled = sage::SageBatcher::new(clf_task(&g, &codes), &model, 3)
+            .unwrap()
+            .with_sample_threads(t)
+            .node_tensors(&targets, 0xFEED)
+            .unwrap();
+        assert_eq!(reference, pooled, "sample_threads={t} changed the sampled batch");
+    }
+}
+
+#[test]
+fn scratch_reuse_matches_fresh_alloc_on_minibatch_paths() {
+    let build = sage_build(false);
+    let (g, codes) = graph_and_codes(19);
+    let reuse = Model::native(build.manifest(), 2).unwrap();
+    let fresh = Model::native(build.manifest(), 2).unwrap();
+    fresh.set_scratch_reuse(false).unwrap();
+    let cfg = PipeCfg::default();
+    let a = sage::train_sage_cfg(&reuse, clf_task(&g, &codes), 1, &[], 9, 0, cfg).unwrap();
+    let b = sage::train_sage_cfg(&fresh, clf_task(&g, &codes), 1, &[], 9, 0, cfg).unwrap();
+    assert_bitwise_eq(&a.losses, &b.losses, "clf scratch parity");
+    assert_eq!(a.store.params, b.store.params);
+    assert_eq!(a.store.adam_m, b.store.adam_m);
+    assert_eq!(a.store.adam_v, b.store.adam_v);
+}
+
+#[test]
+fn scratch_reuse_matches_fresh_alloc_on_fullbatch_gin() {
+    // GIN is the deepest scratch user (MLP per layer, ε-scaled skip); a
+    // take/give imbalance or stale-buffer bug shows up here first.
+    let m = FullBatchBuild {
+        name: "t_fb_gin".into(),
+        gnn: GnnKind::Gin,
+        coded: false,
+        link: false,
+        n: 12,
+        n_classes: 2,
+        d_e: 3,
+        hidden: 4,
+        c: 4,
+        m: 2,
+        d_c: 3,
+        d_m: 3,
+        l: 2,
+        light: false,
+        e_train: 4,
+        e_pred: 4,
+        optim: OptimCfg::adamw_gnn(),
+    }
+    .manifest();
+    let adj = Arc::new(
+        hashgnn::sparse::Csr::from_edges(
+            12,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (6, 7), (8, 9), (10, 11), (0, 6)],
+        )
+        .unwrap(),
+    );
+    let labels = Tensor::i32(vec![12], (0..12).map(|i| i % 2).collect()).unwrap();
+    let mask = Tensor::f32(vec![12], vec![1.0; 12]).unwrap();
+    let run = |reuse: bool| -> ParamStore {
+        let model = Model::native(m.clone(), 3).unwrap();
+        model.bind_adjacency(adj.clone()).unwrap();
+        model.set_scratch_reuse(reuse).unwrap();
+        let mut store = ParamStore::init(&m, 23);
+        for _ in 0..4 {
+            hashgnn::train::run_step(&model, &mut store, &[labels.clone(), mask.clone()])
+                .unwrap();
+        }
+        store
+    };
+    let a = run(true);
+    let b = run(false);
+    assert_eq!(a.params, b.params, "scratch reuse changed full-batch GIN training");
+    assert_eq!(a.adam_m, b.adam_m);
+    assert_eq!(a.adam_v, b.adam_v);
+}
+
+#[test]
+fn scratch_reuse_toggle_is_native_only() {
+    let build = sage_build(false);
+    let model = Model::native(build.manifest(), 1).unwrap();
+    assert!(model.set_scratch_reuse(false).is_ok());
+    assert!(model.set_scratch_reuse(true).is_ok());
+}

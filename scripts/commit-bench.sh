@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Pull the latest bench-quick artifact JSONs from CI into the repo root.
+#
+# The `bench-quick` CI job runs every bench with --quick and uploads the
+# emitted JSON files as the `bench-json` artifact. This script downloads
+# that artifact from the most recent successful run on the current branch
+# and drops the files where the benches would have written them locally,
+# so they can be committed as the measured baseline.
+#
+# Usage:
+#   bash scripts/commit-bench.sh [run-id]
+#
+# With no argument, the latest successful CI run for the current branch is
+# used. Requires the GitHub CLI (`gh`) authenticated against the repo.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+run_id="${1:-}"
+if [[ -z "$run_id" ]]; then
+    branch="$(git rev-parse --abbrev-ref HEAD)"
+    run_id="$(gh run list --branch "$branch" --status success --limit 1 \
+        --json databaseId --jq '.[0].databaseId')"
+    if [[ -z "$run_id" || "$run_id" == "null" ]]; then
+        echo "no successful CI run found for branch '$branch'" >&2
+        exit 1
+    fi
+fi
+
+echo "downloading bench-json artifact from run $run_id"
+gh run download "$run_id" --name bench-json --dir .
+
+for f in BENCH_perf_hotpath.json BENCH_train_step.json; do
+    [[ -f "$f" ]] || { echo "artifact missing $f" >&2; exit 1; }
+done
+
+git add BENCH_perf_hotpath.json BENCH_train_step.json
+git status --short BENCH_perf_hotpath.json BENCH_train_step.json
+echo "bench JSONs staged; review and commit."
