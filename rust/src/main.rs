@@ -4,7 +4,11 @@
 //!   encode      generate a synthetic graph and produce compositional codes
 //!   train       end-to-end GNN training — minibatch GraphSAGE (§4) or the
 //!               full-batch Table-1 grid (--model node_fb_{gcn,sgc,gin,sage},
-//!               link_fb_*), coded or NC; --ckpt-out saves the trained store
+//!               link_fb_*); --coder picks the feature front-end (hash /
+//!               random / nc / multihash / bloom / poshash); --ckpt-out
+//!               saves the trained store
+//!   frontier    accuracy-vs-bytes sweep: train the same GNN once per
+//!               front-end at matched byte budgets, emit frontier JSON
 //!   export      freeze a trained checkpoint + packed codes + edges into a
 //!               self-contained serving bundle (--shards K splits it into
 //!               K node-range shard files)
@@ -44,7 +48,7 @@ use hashgnn::serve::{
 };
 use hashgnn::tasks::nodeclf::{self, Frontend, RunOpts};
 use hashgnn::tasks::serve as serve_task;
-use hashgnn::tasks::{coding, collisions, linkpred, memory, merchant, sage, T1Dataset};
+use hashgnn::tasks::{coding, collisions, frontier, linkpred, memory, merchant, sage, T1Dataset};
 use hashgnn::{embed, ser, Error, Result};
 
 fn main() {
@@ -54,6 +58,7 @@ fn main() {
     let outcome = match cmd.as_str() {
         "encode" => cmd_encode(rest),
         "train" => cmd_train(rest),
+        "frontier" => cmd_frontier(rest),
         "export" => cmd_export(rest),
         "infer" => cmd_infer(rest),
         "serve" => cmd_serve(rest),
@@ -84,7 +89,11 @@ fn print_help() {
          \x20 encode      generate graph, run Algorithm 1, save/report codes\n\
          \x20 train       end-to-end GNN training (--model sage_mb |\n\
          \x20             node_fb_{{gcn,sgc,gin,sage}} | link_fb_...);\n\
-         \x20             --ckpt-out saves the trained parameters\n\
+         \x20             --ckpt-out saves the trained parameters; --coder\n\
+         \x20             {{hash,random,nc,multihash,bloom,poshash}} picks the\n\
+         \x20             feature front-end\n\
+         \x20 frontier    accuracy-vs-bytes sweep over the front-end family\n\
+         \x20             (--coders hash,nc,multihash,bloom,poshash --out f.json)\n\
          \x20 export      freeze checkpoint + codes + edges into a serving bundle\n\
          \x20             (--shards K writes K node-range shard files)\n\
          \x20 infer       embed/score/classify from a bundle or shard set\n\
@@ -161,7 +170,11 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "sage_mb",
             "sage_mb (minibatch §4) | node_fb_{gcn,sgc,gin,sage} | link_fb_{gcn,sgc,gin,sage} (full-batch grid; one step per epoch)",
         )
-        .opt("coder", "hash", "feature front-end: hash | random | nc")
+        .opt(
+            "coder",
+            "hash",
+            "feature front-end: hash | random | nc | multihash | bloom | poshash",
+        )
         .opt("epochs", "5", "training epochs")
         .opt("seed", "7", "rng seed")
         .opt("log-every", "10", "loss log interval (steps)")
@@ -203,15 +216,24 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             "unknown --model '{model_name}' (expected sage_mb | node_fb_<gnn> | link_fb_<gnn>)"
         )));
     }
-    let coded = a.get("coder") != "nc";
-    let name = if coded { "sage_mb_coded" } else { "sage_mb_nc" };
-    let model = engine.load(name)?;
+    let coder_s = a.get("coder");
+    let frontend = Frontend::parse_coder(&coder_s).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown --coder '{coder_s}' (expected hash | random | nc | multihash | bloom | poshash)"
+        ))
+    })?;
+    let coded = frontend.artifact_tag() == "coded";
+    let name = format!("sage_mb_{}", frontend.artifact_tag());
+    let model = engine.load(&name)?;
     eprintln!("[train] backend: {}", model.backend_name());
     let n = model.manifest.hyper_usize("n")?;
     let k = model.manifest.hyper_usize("n_classes")?;
     let seed = a.get_u64("seed")?;
     eprintln!("[train] generating SBM graph n={n}, {k} classes ...");
     let g = Arc::new(sbm(SbmCfg::new(n, k, 12.0, 2.0), seed)?);
+    if model.needs_pos_map() {
+        model.bind_pos_map(nodeclf::pos_map_for(&model.manifest, &g)?)?;
+    }
     let labels = Arc::new(g.labels().expect("sbm labels").to_vec());
     let make_features = || -> Result<sage::Features> {
         if coded {
@@ -281,18 +303,35 @@ fn save_ckpt(a: &Args, store: &hashgnn::params::ParamStore) -> Result<()> {
 /// artifacts and never allocates a dense adjacency.
 fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
     // Accept bare "node_fb_gin" or full registry names "node_fb_gin_coded";
-    // an explicit _coded/_nc suffix wins over --coder.
-    let mut frontend = match a.get("coder").as_str() {
-        "nc" => Frontend::Nc,
-        "random" | "rand" | "alone" => Frontend::Rand,
-        _ => Frontend::Hash,
+    // an explicit front-end suffix wins over --coder.
+    let coder_s = a.get("coder");
+    let mut frontend = match coder_s.as_str() {
+        "rand" | "alone" => Frontend::Rand,
+        s => Frontend::parse_coder(s).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown --coder '{s}' (expected hash | random | nc | multihash | bloom | poshash)"
+            ))
+        })?,
     };
-    if model.ends_with("_nc") {
-        frontend = Frontend::Nc;
-    } else if model.ends_with("_coded") && frontend == Frontend::Nc {
+    for (suffix, fe) in [
+        ("_nc", Frontend::Nc),
+        ("_multihash", Frontend::MultiHash),
+        ("_bloom", Frontend::Bloom),
+        ("_poshash", Frontend::PosHash),
+    ] {
+        if model.ends_with(suffix) {
+            frontend = fe;
+        }
+    }
+    if model.ends_with("_coded") && frontend.artifact_tag() != "coded" {
         frontend = Frontend::Hash;
     }
-    let base = model.trim_end_matches("_coded").trim_end_matches("_nc");
+    let base = model
+        .trim_end_matches("_coded")
+        .trim_end_matches("_nc")
+        .trim_end_matches("_multihash")
+        .trim_end_matches("_bloom")
+        .trim_end_matches("_poshash");
     let (link, gnn_s) = if let Some(r) = base.strip_prefix("node_fb_") {
         (false, r)
     } else if let Some(r) = base.strip_prefix("link_fb_") {
@@ -341,6 +380,80 @@ fn cmd_train_fullbatch(a: &Args, engine: &Engine, model: &str) -> Result<()> {
             out.val, out.test, out.final_loss
         );
         save_ckpt(a, &store)?;
+    }
+    Ok(())
+}
+
+/// `hashgnn frontier`: the accuracy-vs-bytes sweep over the feature
+/// front-end family — the paper's LSH coding, the NC baseline, and the
+/// three hash-embedding competitors, all sized bytes-fair against the
+/// §3.2 coded front-end budget.
+fn cmd_frontier(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "hashgnn frontier",
+        "accuracy-vs-bytes sweep over the feature front-end family",
+    )
+    .opt(
+        "coders",
+        "hash,nc,multihash,bloom,poshash",
+        "comma-separated front-ends to sweep (hash | nc | random | multihash | bloom | poshash)",
+    )
+    .opt("gnn", "gin", "full-batch GNN architecture: gcn | sgc | gin | sage")
+    .opt("dataset", "arxiv", "Table-1 node-classification analog: arxiv | mag | products")
+    .opt("epochs", "60", "training epochs per coder")
+    .opt("eval-every", "5", "validation interval (epochs)")
+    .opt("seed", "7", "rng seed (graph, split, init and hash streams)")
+    .opt("threads", "0", "native-backend compute threads (0 = all cores; results are thread-count independent)")
+    .opt("out", "", "write the frontier JSON artifact here (optional)")
+    .flag(
+        "quick",
+        "CI smoke: two coders (nc, bloom) for 10 epochs — overrides --coders / --epochs / --eval-every",
+    )
+    .parse(argv)?;
+    let quick = a.get_bool("quick");
+    let mut opts =
+        if quick { frontier::FrontierOpts::quick() } else { frontier::FrontierOpts::default() };
+    let seed = a.get_u64("seed")?;
+    if quick {
+        opts.run.seed = seed;
+    } else {
+        opts.coders = frontier::parse_coders(&a.get("coders"))?;
+        let epochs = a.get_usize("epochs")?.max(1);
+        opts.run = RunOpts { epochs, eval_every: a.get_usize("eval-every")?.max(1).min(epochs), seed };
+    }
+    opts.gnn = GnnKind::parse(&a.get("gnn"))?;
+    opts.dataset = match a.get("dataset").as_str() {
+        "arxiv" => T1Dataset::Arxiv,
+        "mag" => T1Dataset::Mag,
+        "products" => T1Dataset::Products,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown --dataset '{other}' (expected arxiv | mag | products)"
+            )))
+        }
+    };
+    opts.threads = a.get_usize_auto("threads")?;
+    eprintln!(
+        "[frontier] {} on {}: {} coder(s), {} epochs each ...",
+        opts.gnn.as_str(),
+        opts.dataset.name(),
+        opts.coders.len(),
+        opts.run.epochs
+    );
+    let rows = frontier::run_frontier(&opts)?;
+    for r in &rows {
+        println!(
+            "{:>9} coder: {:>9} front-end bytes | test acc {:.4} | val {:.4} | loss {:.4}",
+            r.coder, r.bytes, r.acc, r.val, r.loss
+        );
+    }
+    let json = frontier::rows_to_json(&rows, &opts);
+    let out = a.get("out");
+    if out.is_empty() {
+        println!("{}", ser::to_string_compact(&json));
+    } else {
+        std::fs::write(&out, ser::to_string_pretty(&json))?;
+        eprintln!("[frontier] JSON written to {out}");
     }
     Ok(())
 }

@@ -239,6 +239,29 @@ impl Model {
         }
     }
 
+    /// Bind the poshash front-end's degree-rank bucket map for a native
+    /// model (see `tasks::nodeclf::pos_map_for`); train and pred share the
+    /// binding. Errors on the HLO backend, which has no hash front-ends.
+    pub fn bind_pos_map(&self, map: Arc<Vec<u32>>) -> Result<()> {
+        match &self.train {
+            Executable::Native(e) => e.model().bind_pos_map(map),
+            Executable::Hlo(_) => Err(Error::Runtime(
+                "hash-embedding front-ends are native-backend models — the HLO backend \
+                 takes no position map"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Does this model's front-end need [`Model::bind_pos_map`] before it
+    /// can run? (Only the native poshash front-end does.)
+    pub fn needs_pos_map(&self) -> bool {
+        match &self.train {
+            Executable::Native(e) => e.model().needs_pos_map(),
+            Executable::Hlo(_) => false,
+        }
+    }
+
     /// Backend of the train executable (`"hlo"` / `"native"`).
     pub fn backend_name(&self) -> &'static str {
         self.train.backend_name()

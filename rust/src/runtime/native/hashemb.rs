@@ -1,0 +1,527 @@
+//! Hash-compressed embedding front-ends — the related-work baselines the
+//! paper's §3.2 coded decoder competes against, as native
+//! [`super::layers::FeatSource`] variants:
+//!
+//! - **multihash** (Svenstrup-style hash embeddings): K hash functions map
+//!   each node id into one shared `(B, d_e)` pool; the node's embedding is
+//!   the importance-weighted sum `e(v) = Σ_k imp[v,k] · pool[h_k(v)]`,
+//!   with the `(n, K)` importance weights trained per node.
+//! - **bloom** (bloom-filter-style bucket embeddings): the unweighted
+//!   multi-probe sum with a post-aggregation nonlinearity,
+//!   `e(v) = relu(Σ_k pool[h_k(v)])`.
+//! - **poshash** (position-based hash embeddings): the multi-probe sum
+//!   plus a *graph-structure-aware* term — nodes are ranked by degree and
+//!   the rank is quantized into a small `(Bp, d_e)` position table,
+//!   `e(v) = Σ_k pool[h_k(v)] + pos[pos_map[v]]`, so structurally similar
+//!   nodes share a learned position row. The `(n,)` bucket map is data
+//!   (derived from the training graph, see [`degree_pos_map`]), bound to
+//!   the model like the full-batch adjacency and shipped in serving
+//!   bundles.
+//!
+//! Buckets are computed on the fly from a manifest-recorded `hash_seed`
+//! (one [`crate::rng::derive_stream_seed`] stream per probe, then a
+//! [`mix64`] avalanche over the id) — no stored index, so training,
+//! inference, and serving always agree.
+//!
+//! Everything follows the determinism rule of [`super::ops`]: threads
+//! partition only output elements (forward: embedding rows; backward:
+//! *parameter* rows, each worker scanning all batch rows in ascending
+//! order exactly like [`super::ops::table_scatter_grad`]), and every
+//! reduction is a fixed-order sequential sum — bit-identical for any
+//! thread count.
+#![allow(clippy::too_many_arguments)]
+
+use crate::rng::{derive_stream_seed, mix64};
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+use super::decoder::find_param;
+use super::ops;
+use super::par::par_rows;
+use super::scratch::StepScratch;
+
+/// Which hash-embedding scheme a front-end runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashKind {
+    /// Svenstrup-style: shared pool + per-node learned importance weights.
+    Multi,
+    /// Bloom-filter-style: multi-probe bucket sum + post-sum ReLU.
+    Bloom,
+    /// Kalantzi & Karypis: multi-probe sum + degree-rank position table.
+    Pos,
+}
+
+impl HashKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HashKind::Multi => "multihash",
+            HashKind::Bloom => "bloom",
+            HashKind::Pos => "poshash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HashKind> {
+        match s {
+            "multihash" => Some(HashKind::Multi),
+            "bloom" => Some(HashKind::Bloom),
+            "poshash" => Some(HashKind::Pos),
+            _ => None,
+        }
+    }
+}
+
+/// Resolved dimensions of one hash-embedding front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct HashEmbDims {
+    pub kind: HashKind,
+    /// Id space (number of nodes).
+    pub n: usize,
+    /// Hash probes per id.
+    pub k: usize,
+    /// Shared pool rows (`hemb.pool (b, d_e)`).
+    pub b: usize,
+    /// Position-table rows (`hemb.pos (bp, d_e)`; [`HashKind::Pos`] only,
+    /// 0 otherwise).
+    pub bp: usize,
+    pub d_e: usize,
+    /// Root seed of the probe hash streams (manifest hyper `hash_seed`).
+    pub seed: u64,
+}
+
+impl HashEmbDims {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("n", self.n), ("k", self.k), ("b", self.b), ("d_e", self.d_e)] {
+            if v == 0 {
+                return Err(Error::Config(format!("hashemb {name} must be positive")));
+            }
+        }
+        if (self.kind == HashKind::Pos) != (self.bp > 0) {
+            return Err(Error::Config(format!(
+                "hashemb bp = {} but kind is {} — the position table exists exactly for \
+                 poshash",
+                self.bp,
+                self.kind.as_str()
+            )));
+        }
+        Ok(())
+    }
+
+    /// One derived seed per hash probe, hoisted out of the id loops.
+    pub fn probe_seeds(&self) -> Vec<u64> {
+        (0..self.k).map(|j| derive_stream_seed(self.seed, j as u64)).collect()
+    }
+}
+
+/// Pool bucket of `id` under one probe's stream seed: a [`mix64`]
+/// avalanche over the id (offset so id 0 still mixes), reduced mod `b`.
+#[inline]
+pub fn bucket(stream_seed: u64, id: usize, b: usize) -> usize {
+    (mix64(stream_seed ^ (id as u64).wrapping_add(1)) % b as u64) as usize
+}
+
+/// Degree-rank position map for [`HashKind::Pos`]: nodes sorted by degree
+/// descending (ties by id ascending, so the map is deterministic), rank
+/// `r` of `n` quantized to bucket `r·bp/n`. High-degree nodes land in the
+/// low buckets, so nodes of similar structural role share a position row.
+pub fn degree_pos_map(degrees: &[usize], bp: usize) -> Vec<u32> {
+    let n = degrees.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(degrees[v as usize]), v));
+    let mut map = vec![0u32; n];
+    for (rank, &v) in order.iter().enumerate() {
+        map[v as usize] = (rank * bp / n.max(1)) as u32;
+    }
+    map
+}
+
+/// Resolved parameter indices of one hash-embedding front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct HashEmbIdx {
+    /// `hemb.pool (b, d_e)`.
+    pub pool: usize,
+    /// `hemb.imp (n, k)` — [`HashKind::Multi`] only.
+    pub imp: Option<usize>,
+    /// `hemb.pos (bp, d_e)` — [`HashKind::Pos`] only.
+    pub pos: Option<usize>,
+}
+
+impl HashEmbIdx {
+    pub fn resolve(manifest: &Manifest, dims: &HashEmbDims) -> Result<Self> {
+        dims.validate()?;
+        let pool = find_param(manifest, "hemb.pool", &[dims.b, dims.d_e])?;
+        let imp = match dims.kind {
+            HashKind::Multi => Some(find_param(manifest, "hemb.imp", &[dims.n, dims.k])?),
+            _ => None,
+        };
+        let pos = match dims.kind {
+            HashKind::Pos => Some(find_param(manifest, "hemb.pos", &[dims.bp, dims.d_e])?),
+            _ => None,
+        };
+        Ok(Self { pool, imp, pos })
+    }
+}
+
+/// The node sets a front-end call covers: an explicit id tensor
+/// (minibatch fan-out) or the whole graph `0..n` (full batch) — one code
+/// path for both, nothing materialized for the full-graph case.
+#[derive(Clone, Copy)]
+pub enum Ids<'a> {
+    Slice(&'a [i32]),
+    /// All ids `0..n` in order.
+    All(usize),
+}
+
+impl Ids<'_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Ids::Slice(s) => s.len(),
+            Ids::All(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn get(&self, r: usize) -> usize {
+        match self {
+            Ids::Slice(s) => s[r] as usize,
+            Ids::All(_) => r,
+        }
+    }
+
+    fn validate(&self, n: usize) -> Result<()> {
+        match self {
+            Ids::Slice(s) => ops::validate_ids(s, n),
+            Ids::All(rows) => {
+                if *rows != n {
+                    return Err(Error::Shape(format!(
+                        "hashemb full-graph forward over {rows} rows, front-end id space \
+                         is {n}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Forward cache: the front-end output `(rows, d_e)`. For bloom it doubles
+/// as the ReLU mask the backward pass applies; multihash and poshash need
+/// nothing but the parameters to differentiate.
+pub struct HashCache {
+    y: Vec<f32>,
+}
+
+impl HashCache {
+    pub fn output(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Retire the cache, returning its buffer to the step arena.
+    pub fn recycle(self, scratch: &mut StepScratch) {
+        scratch.give(self.y);
+    }
+}
+
+/// Forward one node set into a cache (buffers from `scratch`, bit-identical
+/// to fresh allocation).
+pub fn forward(
+    dims: &HashEmbDims,
+    idx: &HashEmbIdx,
+    params: &[&[f32]],
+    ids: Ids<'_>,
+    pos_map: Option<&[u32]>,
+    threads: usize,
+    scratch: &mut StepScratch,
+) -> Result<HashCache> {
+    let mut y = scratch.take(ids.len() * dims.d_e);
+    forward_into(dims, idx, params, ids, pos_map, &mut y, threads)?;
+    Ok(HashCache { y })
+}
+
+/// Inference-only forward: the `(rows, d_e)` embedding matrix with no
+/// cache behind it. Runs the same loops as [`forward`], so the output is
+/// bit-identical to the training forward at every thread count.
+pub fn forward_infer(
+    dims: &HashEmbDims,
+    idx: &HashEmbIdx,
+    params: &[&[f32]],
+    ids: Ids<'_>,
+    pos_map: Option<&[u32]>,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let mut y = vec![0.0f32; ids.len() * dims.d_e];
+    forward_into(dims, idx, params, ids, pos_map, &mut y, threads)?;
+    Ok(y)
+}
+
+fn forward_into(
+    dims: &HashEmbDims,
+    idx: &HashEmbIdx,
+    params: &[&[f32]],
+    ids: Ids<'_>,
+    pos_map: Option<&[u32]>,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    ids.validate(dims.n)?;
+    let d = dims.d_e;
+    debug_assert_eq!(y.len(), ids.len() * d);
+    let seeds = dims.probe_seeds();
+    let pool = params[idx.pool];
+    let imp = idx.imp.map(|i| params[i]);
+    let pos = idx.pos.map(|i| params[i]);
+    if dims.kind == HashKind::Pos {
+        let pm = pos_map.ok_or_else(|| {
+            Error::Runtime("poshash forward needs the bound position map".into())
+        })?;
+        if pm.len() != dims.n {
+            return Err(Error::Shape(format!(
+                "position map has {} entries, front-end id space is {}",
+                pm.len(),
+                dims.n
+            )));
+        }
+    }
+    // Threads partition output rows; each row is one worker's fixed-order
+    // sum over the probes (ascending j, then +pos row), so the bits never
+    // depend on the thread count.
+    par_rows(y, d, threads, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(d).enumerate() {
+            let id = ids.get(row0 + r);
+            for (j, &sj) in seeds.iter().enumerate() {
+                let prow = &pool[bucket(sj, id, dims.b) * d..][..d];
+                match imp {
+                    Some(imp) => {
+                        let w = imp[id * dims.k + j];
+                        for (o, &p) in orow.iter_mut().zip(prow) {
+                            *o += w * p;
+                        }
+                    }
+                    None => {
+                        for (o, &p) in orow.iter_mut().zip(prow) {
+                            *o += p;
+                        }
+                    }
+                }
+            }
+            match dims.kind {
+                HashKind::Bloom => {
+                    for o in orow.iter_mut() {
+                        *o = o.max(0.0);
+                    }
+                }
+                HashKind::Pos => {
+                    let pm = pos_map.expect("validated above");
+                    let pos = pos.expect("resolved for poshash");
+                    let prow = &pos[pm[id] as usize * d..][..d];
+                    for (o, &p) in orow.iter_mut().zip(prow) {
+                        *o += p;
+                    }
+                }
+                HashKind::Multi => {}
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Backward one node set: accumulate front-end parameter gradients for
+/// `dx (rows, d_e)`. Threads partition *parameter* rows
+/// ([`super::ops::table_scatter_grad`]-style): every worker scans all
+/// batch rows in ascending order and accumulates only the buckets (pool /
+/// position grads) or ids (importance grads) in its range — deterministic
+/// for any thread count, no scatter races. Bloom's post-sum ReLU is
+/// differentiated by masking each read of `dx` with the cached output.
+pub fn backward(
+    dims: &HashEmbDims,
+    idx: &HashEmbIdx,
+    params: &[&[f32]],
+    ids: Ids<'_>,
+    pos_map: Option<&[u32]>,
+    cache: &HashCache,
+    dx: &[f32],
+    trainable: &[bool],
+    grads: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<()> {
+    ids.validate(dims.n)?;
+    let d = dims.d_e;
+    let n_rows = ids.len();
+    if dx.len() != n_rows * d || cache.y.len() != n_rows * d {
+        return Err(Error::Shape(format!(
+            "hashemb backward: dx has {} elements, cache {}, want rows·d = {}",
+            dx.len(),
+            cache.y.len(),
+            n_rows * d
+        )));
+    }
+    let seeds = dims.probe_seeds();
+    let bloom = dims.kind == HashKind::Bloom;
+    let y = cache.y.as_slice();
+    // d(relu(s))/ds masks on the cached *output*: y > 0 ⇔ pre-sum > 0.
+    let dz = |r: usize, c: usize| {
+        let v = dx[r * d + c];
+        if bloom && y[r * d + c] <= 0.0 {
+            0.0
+        } else {
+            v
+        }
+    };
+
+    if trainable[idx.pool] {
+        let imp = idx.imp.map(|i| params[i]);
+        par_rows(&mut grads[idx.pool], d, threads, |row0, rows| {
+            let hi = row0 + rows.len() / d;
+            for r in 0..n_rows {
+                let id = ids.get(r);
+                for (j, &sj) in seeds.iter().enumerate() {
+                    let bkt = bucket(sj, id, dims.b);
+                    if bkt < row0 || bkt >= hi {
+                        continue;
+                    }
+                    let grow = &mut rows[(bkt - row0) * d..][..d];
+                    match imp {
+                        Some(imp) => {
+                            let w = imp[id * dims.k + j];
+                            for (c, g) in grow.iter_mut().enumerate() {
+                                *g += w * dz(r, c);
+                            }
+                        }
+                        None => {
+                            for (c, g) in grow.iter_mut().enumerate() {
+                                *g += dz(r, c);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    if let Some(imp_idx) = idx.imp {
+        if trainable[imp_idx] {
+            // d imp[v,j] = ⟨dx_row, pool[h_j(v)]⟩, accumulated over every
+            // batch row carrying id v (ascending r — ids repeat in a
+            // batch, so this is a scatter too).
+            let pool = params[idx.pool];
+            let k = dims.k;
+            par_rows(&mut grads[imp_idx], k, threads, |row0, rows| {
+                let hi = row0 + rows.len() / k;
+                for r in 0..n_rows {
+                    let id = ids.get(r);
+                    if id < row0 || id >= hi {
+                        continue;
+                    }
+                    let grow = &mut rows[(id - row0) * k..][..k];
+                    for (j, &sj) in seeds.iter().enumerate() {
+                        let prow = &pool[bucket(sj, id, dims.b) * d..][..d];
+                        let mut acc = 0.0f32;
+                        for (c, &p) in prow.iter().enumerate() {
+                            acc += dz(r, c) * p;
+                        }
+                        grow[j] += acc;
+                    }
+                }
+            });
+        }
+    }
+
+    if let Some(pos_idx) = idx.pos {
+        if trainable[pos_idx] {
+            let pm = pos_map.ok_or_else(|| {
+                Error::Runtime("poshash backward needs the bound position map".into())
+            })?;
+            par_rows(&mut grads[pos_idx], d, threads, |row0, rows| {
+                let hi = row0 + rows.len() / d;
+                for r in 0..n_rows {
+                    let bkt = pm[ids.get(r)] as usize;
+                    if bkt < row0 || bkt >= hi {
+                        continue;
+                    }
+                    let grow = &mut rows[(bkt - row0) * d..][..d];
+                    for (c, g) in grow.iter_mut().enumerate() {
+                        *g += dz(r, c);
+                    }
+                }
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_in_range_and_probe_dependent() {
+        let dims = HashEmbDims {
+            kind: HashKind::Bloom,
+            n: 100,
+            k: 4,
+            b: 13,
+            bp: 0,
+            d_e: 3,
+            seed: 9,
+        };
+        let seeds = dims.probe_seeds();
+        assert_eq!(seeds.len(), 4);
+        let mut differs = false;
+        for id in 0..100 {
+            let buckets: Vec<usize> = seeds.iter().map(|&s| bucket(s, id, dims.b)).collect();
+            assert!(buckets.iter().all(|&b| b < 13));
+            if buckets.windows(2).any(|w| w[0] != w[1]) {
+                differs = true;
+            }
+            // Stable across calls (pure function of seed/id).
+            assert_eq!(buckets, seeds.iter().map(|&s| bucket(s, id, dims.b)).collect::<Vec<_>>());
+        }
+        assert!(differs, "probes must not all collide on every id");
+    }
+
+    #[test]
+    fn degree_pos_map_ranks_by_degree_then_id() {
+        // degrees: node1 highest, nodes 0/3 tie (id ascending), node2 last.
+        let map = degree_pos_map(&[5, 9, 1, 5], 4);
+        assert_eq!(map, vec![1, 0, 3, 2]);
+        // Quantized: 4 nodes → 2 buckets, two ranks per bucket.
+        let map = degree_pos_map(&[5, 9, 1, 5], 2);
+        assert_eq!(map, vec![0, 0, 1, 1]);
+        assert!(degree_pos_map(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn bloom_forward_is_relu_of_probe_sum() {
+        let dims =
+            HashEmbDims { kind: HashKind::Bloom, n: 6, k: 2, b: 4, bp: 0, d_e: 2, seed: 3 };
+        let pool: Vec<f32> = vec![1.0, -1.0, 0.5, -0.5, -2.0, 2.0, 0.25, -0.25];
+        let idx = HashEmbIdx { pool: 0, imp: None, pos: None };
+        let params: Vec<&[f32]> = vec![&pool];
+        let y = forward_infer(&dims, &idx, &params, Ids::Slice(&[2, 5]), None, 1).unwrap();
+        let seeds = dims.probe_seeds();
+        for (r, &id) in [2usize, 5].iter().enumerate() {
+            for c in 0..2 {
+                let s: f32 =
+                    seeds.iter().map(|&sj| pool[bucket(sj, id, 4) * 2 + c]).sum();
+                assert_eq!(y[r * 2 + c], s.max(0.0), "row {r} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_graph_ids_must_match_n() {
+        let dims =
+            HashEmbDims { kind: HashKind::Multi, n: 5, k: 2, b: 3, bp: 0, d_e: 2, seed: 1 };
+        let pool = vec![0.0f32; 6];
+        let imp = vec![1.0f32; 10];
+        let idx = HashEmbIdx { pool: 0, imp: Some(1), pos: None };
+        let params: Vec<&[f32]> = vec![&pool, &imp];
+        assert!(forward_infer(&dims, &idx, &params, Ids::All(5), None, 1).is_ok());
+        assert!(forward_infer(&dims, &idx, &params, Ids::All(4), None, 1).is_err());
+        assert!(forward_infer(&dims, &idx, &params, Ids::Slice(&[5]), None, 1).is_err());
+    }
+}

@@ -118,8 +118,21 @@ impl InferModel {
     pub fn code_m(&self) -> Option<usize> {
         match &self.feat {
             FeatSource::Decoder { dims, .. } => Some(dims.m),
-            FeatSource::Table { .. } => None,
+            FeatSource::Table { .. } | FeatSource::HashEmb { .. } => None,
         }
+    }
+
+    /// Does this model's front-end need [`Self::bind_pos_map`] before it
+    /// can run? (Only the poshash hash front-end does.)
+    pub fn needs_pos_map(&self) -> bool {
+        self.feat.needs_pos_map()
+    }
+
+    /// Bind the poshash front-end's degree-rank bucket map — same contract
+    /// as the training model's bind (rebind-equal is a no-op, other
+    /// front-ends refuse).
+    pub fn bind_pos_map(&self, map: Arc<Vec<u32>>) -> Result<()> {
+        self.feat.bind_pos_map(map)
     }
 
     /// Classes of the classification head, when the task has one.

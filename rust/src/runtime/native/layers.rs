@@ -14,11 +14,14 @@
 //! partition output elements, reductions stay sequential per element.
 #![allow(clippy::too_many_arguments)]
 
+use std::sync::{Arc, OnceLock};
+
 use crate::runtime::{Manifest, Tensor};
 use crate::sparse::Csr;
 use crate::{Error, Result};
 
 use super::decoder::{self, find_param, DecCache, DecoderDims, DecoderIdx};
+use super::hashemb::{self, HashCache, HashEmbDims, HashEmbIdx, HashKind, Ids};
 use super::ops;
 use super::par::par_rows;
 use super::scratch::StepScratch;
@@ -27,11 +30,20 @@ use super::scratch::StepScratch;
 // Feature front-end
 // ---------------------------------------------------------------------------
 
-/// Feature front-end: decoder over integer codes, or an explicit
-/// `embed.table` (the NC baseline).
+/// Feature front-end: decoder over integer codes, an explicit
+/// `embed.table` (the NC baseline), or one of the hash-embedding family
+/// ([`super::hashemb`]: multihash / bloom / poshash over node ids).
 pub enum FeatSource {
     Decoder { dims: DecoderDims, idx: DecoderIdx },
     Table { idx: usize, n: usize, d: usize },
+    HashEmb {
+        dims: HashEmbDims,
+        idx: HashEmbIdx,
+        /// Degree-rank bucket map for poshash, bound once per model like
+        /// the full-batch adjacency (see [`FeatSource::bind_pos_map`]);
+        /// unused (never set) for multihash/bloom.
+        pos_map: OnceLock<Arc<Vec<u32>>>,
+    },
 }
 
 /// A feature matrix produced by the inference-only front-end: owned for
@@ -56,6 +68,8 @@ pub enum FeatCache {
     Dec(DecCache),
     /// Minibatch NC: gathered rows.
     Table { x: Vec<f32> },
+    /// Hash-embedding front-ends: the computed rows (both forms).
+    Hash(HashCache),
     /// Full batch NC: the features *are* the table parameter — no copy.
     Full,
 }
@@ -66,6 +80,7 @@ impl FeatCache {
         match self {
             FeatCache::Dec(c) => c.recycle(scratch),
             FeatCache::Table { x } => scratch.give(x),
+            FeatCache::Hash(c) => c.recycle(scratch),
             FeatCache::Full => {}
         }
     }
@@ -95,11 +110,98 @@ impl FeatSource {
         Ok(FeatSource::Table { idx, n, d })
     }
 
+    /// Resolve a hash-embedding front-end (`front_end` hyper `multihash` /
+    /// `bloom` / `poshash`; dims from `hemb_k`, `hemb_b`, `hemb_bp`,
+    /// `hash_seed`).
+    pub fn resolve_hashemb(manifest: &Manifest, kind: &str) -> Result<FeatSource> {
+        let kind = HashKind::parse(kind).ok_or_else(|| {
+            Error::Config(format!("unknown hash-embedding front-end '{kind}'"))
+        })?;
+        let dims = HashEmbDims {
+            kind,
+            n: manifest.hyper_usize("n")?,
+            k: manifest.hyper_usize("hemb_k")?,
+            b: manifest.hyper_usize("hemb_b")?,
+            bp: if kind == HashKind::Pos { manifest.hyper_usize("hemb_bp")? } else { 0 },
+            d_e: manifest.hyper_usize("d_e")?,
+            seed: manifest.hyper_usize("hash_seed")? as u64,
+        };
+        let idx = HashEmbIdx::resolve(manifest, &dims)?;
+        Ok(FeatSource::HashEmb { dims, idx, pos_map: OnceLock::new() })
+    }
+
     /// Output embedding width.
     pub fn d_out(&self) -> usize {
         match self {
             FeatSource::Decoder { dims, .. } => dims.d_e,
             FeatSource::Table { d, .. } => *d,
+            FeatSource::HashEmb { dims, .. } => dims.d_e,
+        }
+    }
+
+    /// Does this front-end need a bound position map before it can run?
+    pub fn needs_pos_map(&self) -> bool {
+        matches!(self, FeatSource::HashEmb { dims, .. } if dims.kind == HashKind::Pos)
+    }
+
+    /// Bind the poshash degree-rank bucket map (`(n,)` values `< bp`).
+    /// Same contract as the full-batch adjacency bind: rebinding an equal
+    /// map is a no-op, a different one is rejected, and any other
+    /// front-end refuses the call.
+    pub fn bind_pos_map(&self, map: Arc<Vec<u32>>) -> Result<()> {
+        match self {
+            FeatSource::HashEmb { dims, pos_map, .. } if dims.kind == HashKind::Pos => {
+                if map.len() != dims.n {
+                    return Err(Error::Shape(format!(
+                        "position map has {} entries, front-end id space is {}",
+                        map.len(),
+                        dims.n
+                    )));
+                }
+                if let Some(&mx) = map.iter().max() {
+                    if mx as usize >= dims.bp {
+                        return Err(Error::Shape(format!(
+                            "position map bucket {mx} out of range [0, {})",
+                            dims.bp
+                        )));
+                    }
+                }
+                if let Some(existing) = pos_map.get() {
+                    if Arc::ptr_eq(existing, &map) || **existing == *map {
+                        return Ok(());
+                    }
+                    return Err(Error::Runtime(
+                        "front-end already has a different bound position map".into(),
+                    ));
+                }
+                pos_map.set(map).map_err(|_| {
+                    Error::Runtime(
+                        "concurrent position-map binds raced — bind once before training"
+                            .into(),
+                    )
+                })
+            }
+            _ => Err(Error::Runtime(
+                "only the poshash front-end takes a position map".into(),
+            )),
+        }
+    }
+
+    /// The bound poshash map (`Ok(None)` for the kinds that need none).
+    fn pos_map(&self) -> Result<Option<&[u32]>> {
+        match self {
+            FeatSource::HashEmb { dims, pos_map, .. } if dims.kind == HashKind::Pos => {
+                match pos_map.get() {
+                    Some(m) => Ok(Some(m.as_slice())),
+                    None => Err(Error::Runtime(
+                        "poshash front-end has no position map bound — call \
+                         Model::bind_pos_map with the degree-rank map before \
+                         train/predict"
+                            .into(),
+                    )),
+                }
+            }
+            _ => Ok(None),
         }
     }
 
@@ -127,6 +229,13 @@ impl FeatSource {
                 ops::table_gather(params[*idx], ids, *d, &mut x, threads);
                 Ok(FeatCache::Table { x })
             }
+            FeatSource::HashEmb { dims, idx, .. } => {
+                let ids = Ids::Slice(t.as_i32()?);
+                let pm = self.pos_map()?;
+                Ok(FeatCache::Hash(hashemb::forward(
+                    dims, idx, params, ids, pm, threads, scratch,
+                )?))
+            }
         }
     }
 
@@ -134,6 +243,7 @@ impl FeatSource {
         match cache {
             FeatCache::Dec(c) => c.output(),
             FeatCache::Table { x } => x,
+            FeatCache::Hash(c) => c.output(),
             FeatCache::Full => panic!("full-graph cache has no owned output — use output_full"),
         }
     }
@@ -156,6 +266,10 @@ impl FeatSource {
                 let mut x = vec![0.0f32; ids.len() * d];
                 ops::table_gather(params[*idx], ids, *d, &mut x, threads);
                 Ok(x)
+            }
+            FeatSource::HashEmb { dims, idx, .. } => {
+                let ids = Ids::Slice(t.as_i32()?);
+                hashemb::forward_infer(dims, idx, params, ids, self.pos_map()?, threads)
             }
         }
     }
@@ -195,6 +309,21 @@ impl FeatSource {
                 }
                 Ok(Feats::Borrowed(params[*idx]))
             }
+            FeatSource::HashEmb { dims, idx, .. } => {
+                if codes.is_some() {
+                    return Err(Error::Shape(
+                        "hash-embedding full-batch front-end takes no codes".into(),
+                    ));
+                }
+                Ok(Feats::Owned(hashemb::forward_infer(
+                    dims,
+                    idx,
+                    params,
+                    Ids::All(n),
+                    self.pos_map()?,
+                    threads,
+                )?))
+            }
         }
     }
 
@@ -232,6 +361,18 @@ impl FeatSource {
                 }
                 Ok(())
             }
+            (FeatSource::HashEmb { dims, idx, .. }, FeatCache::Hash(c)) => hashemb::backward(
+                dims,
+                idx,
+                params,
+                Ids::Slice(t.as_i32()?),
+                self.pos_map()?,
+                c,
+                dx,
+                trainable,
+                grads,
+                threads,
+            ),
             _ => Err(Error::Runtime("feature cache/source mismatch".into())),
         }
     }
@@ -271,6 +412,22 @@ impl FeatSource {
                 }
                 Ok(FeatCache::Full)
             }
+            FeatSource::HashEmb { dims, idx, .. } => {
+                if codes.is_some() {
+                    return Err(Error::Shape(
+                        "hash-embedding full-batch front-end takes no codes".into(),
+                    ));
+                }
+                Ok(FeatCache::Hash(hashemb::forward(
+                    dims,
+                    idx,
+                    params,
+                    Ids::All(n),
+                    self.pos_map()?,
+                    threads,
+                    scratch,
+                )?))
+            }
         }
     }
 
@@ -279,6 +436,7 @@ impl FeatSource {
         match (self, cache) {
             (FeatSource::Decoder { .. }, FeatCache::Dec(c)) => c.output(),
             (FeatSource::Table { idx, .. }, FeatCache::Full) => params[*idx],
+            (FeatSource::HashEmb { .. }, FeatCache::Hash(c)) => c.output(),
             _ => panic!("full-graph feature cache/source mismatch"),
         }
     }
@@ -319,6 +477,25 @@ impl FeatSource {
                     ops::add_assign(&mut grads[*idx], dx, threads);
                 }
                 Ok(())
+            }
+            (FeatSource::HashEmb { dims, idx, .. }, FeatCache::Hash(c)) => {
+                if codes.is_some() {
+                    return Err(Error::Shape(
+                        "hash-embedding full-batch backward takes no codes".into(),
+                    ));
+                }
+                hashemb::backward(
+                    dims,
+                    idx,
+                    params,
+                    Ids::All(dims.n),
+                    self.pos_map()?,
+                    c,
+                    dx,
+                    trainable,
+                    grads,
+                    threads,
+                )
             }
             _ => Err(Error::Runtime("full-graph feature cache/source mismatch".into())),
         }

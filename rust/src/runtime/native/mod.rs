@@ -45,6 +45,7 @@
 pub mod adam;
 pub mod decoder;
 pub mod gnn;
+pub mod hashemb;
 pub mod infer;
 pub mod layers;
 pub mod ops;
@@ -86,6 +87,39 @@ impl Task {
     }
 }
 
+/// The manifest's feature front-end name: the explicit `front_end` hyper
+/// key when present (`coded` / `nc` / `multihash` / `bloom` / `poshash`),
+/// else derived from the legacy `coded` bool — so pre-existing manifests
+/// keep resolving unchanged.
+pub fn front_end_name(manifest: &Manifest) -> Result<&str> {
+    let coded = manifest.hyper_bool("coded")?;
+    let Ok(name) = manifest.hyper_str("front_end") else {
+        return Ok(if coded { "coded" } else { "nc" });
+    };
+    if coded != (name == "coded") {
+        return Err(Error::Config(format!(
+            "manifest '{}' declares front_end '{name}' but coded = {coded}",
+            manifest.name
+        )));
+    }
+    Ok(name)
+}
+
+/// Resolve the feature front-end named by [`front_end_name`].
+fn resolve_front_end(manifest: &Manifest) -> Result<FeatSource> {
+    match front_end_name(manifest)? {
+        "coded" => FeatSource::resolve_decoder(manifest),
+        "nc" => FeatSource::resolve_table(manifest),
+        kind @ ("multihash" | "bloom" | "poshash") => {
+            FeatSource::resolve_hashemb(manifest, kind)
+        }
+        other => Err(Error::Config(format!(
+            "unknown front_end '{other}' (expected coded / nc / multihash / bloom / \
+             poshash)"
+        ))),
+    }
+}
+
 /// Resolve a manifest's task string into typed parameter indices + dims —
 /// the shared front half of both the train/bwd model ([`NativeModel`])
 /// and the inference-only model ([`infer::InferModel`]).
@@ -99,12 +133,7 @@ fn resolve_task(manifest: &Manifest) -> Result<(Task, FeatSource)> {
             Ok((Task::Recon { batch, d_e }, feat))
         }
         "sage_minibatch" | "sage_minibatch_link" => {
-            let coded = manifest.hyper_bool("coded")?;
-            let feat = if coded {
-                FeatSource::resolve_decoder(manifest)?
-            } else {
-                FeatSource::resolve_table(manifest)?
-            };
+            let feat = resolve_front_end(manifest)?;
             let dims = SageDims {
                 batch: manifest.hyper_usize("batch")?,
                 k1: manifest.hyper_usize("k1")?,
@@ -126,11 +155,7 @@ fn resolve_task(manifest: &Manifest) -> Result<(Task, FeatSource)> {
         }
         "nodeclf_fullbatch" | "linkpred_fullbatch" => {
             let coded = manifest.hyper_bool("coded")?;
-            let feat = if coded {
-                FeatSource::resolve_decoder(manifest)?
-            } else {
-                FeatSource::resolve_table(manifest)?
-            };
+            let feat = resolve_front_end(manifest)?;
             let dims = FbDims {
                 n: manifest.hyper_usize("n")?,
                 d_e: manifest.hyper_usize("d_e")?,
@@ -321,6 +346,19 @@ impl NativeModel {
                 self.manifest.name
             ))
         })
+    }
+
+    /// Bind the poshash front-end's degree-rank bucket map. Same contract
+    /// as [`Self::bind_adjacency`]: bind once before train/predict,
+    /// rebinding an equal map is a no-op, any other front-end refuses.
+    pub fn bind_pos_map(&self, map: Arc<Vec<u32>>) -> Result<()> {
+        self.feat.bind_pos_map(map)
+    }
+
+    /// Does this model's front-end need [`Self::bind_pos_map`] before it
+    /// can run?
+    pub fn needs_pos_map(&self) -> bool {
+        self.feat.needs_pos_map()
     }
 
     fn fb_adj(&self) -> Result<&FbAdj> {

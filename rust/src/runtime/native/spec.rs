@@ -17,6 +17,7 @@ use crate::runtime::{InitKind, Manifest, ParamSpec, TensorSpec};
 use crate::ser::Json;
 
 use super::decoder::DecoderDims;
+use super::hashemb::HashKind;
 
 fn param(name: String, shape: Vec<usize>, init: InitKind, trainable: bool) -> ParamSpec {
     ParamSpec { name, shape, init, trainable }
@@ -133,6 +134,141 @@ pub fn head_param_specs(hidden: usize, n_out: usize) -> Vec<ParamSpec> {
 /// NC baseline's explicit embedding table.
 pub fn embed_table_spec(n: usize, d_e: usize) -> ParamSpec {
     param("embed.table".to_string(), vec![n, d_e], InitKind::Normal { std: 0.1 }, true)
+}
+
+// ---------------------------------------------------------------------------
+// Hash-embedding front-ends (multihash / bloom / poshash)
+// ---------------------------------------------------------------------------
+
+/// f32 element count of the §3.2 decoder front-end's parameters at these
+/// dims — one term of the coded byte budget the hash front-ends are sized
+/// against.
+pub fn decoder_frontend_f32s(
+    c: usize,
+    m: usize,
+    d_c: usize,
+    d_m: usize,
+    d_e: usize,
+    l: usize,
+    light: bool,
+) -> usize {
+    decoder_param_specs(c, m, d_c, d_m, d_e, l, light)
+        .iter()
+        .map(|p| p.shape.iter().product::<usize>())
+        .sum()
+}
+
+/// Total bytes of the coded front-end for an `n`-node graph: 4 bytes per
+/// parameter f32 plus the packed `(n, m)` code words at `⌈log₂ c⌉` bits
+/// per code — the bytes-fair budget every hash front-end is sized to
+/// match.
+pub fn coded_frontend_bytes(
+    n: usize,
+    c: usize,
+    m: usize,
+    d_c: usize,
+    d_m: usize,
+    d_e: usize,
+    l: usize,
+    light: bool,
+) -> usize {
+    let code_bits = (usize::BITS - (c.max(2) - 1).leading_zeros()) as usize;
+    4 * decoder_frontend_f32s(c, m, d_c, d_m, d_e, l, light) + (n * m * code_bits).div_ceil(8)
+}
+
+/// Pool rows giving a hash front-end the target byte budget after
+/// `fixed_f32s` non-pool parameters are paid for:
+/// `4·(rows·d_e + fixed_f32s) ≈ budget_bytes`, at least 1.
+pub fn hemb_rows_for_budget(budget_bytes: usize, d_e: usize, fixed_f32s: usize) -> usize {
+    ((budget_bytes / 4).saturating_sub(fixed_f32s) / d_e).max(1)
+}
+
+/// One hash-embedding front-end configuration (see
+/// [`super::hashemb`]): kind, probe count, pool rows, position-table rows
+/// (poshash only) and the hash-stream seed. Plugs into the SAGE and
+/// full-batch builds via [`SageMbBuild::manifest_hash`] /
+/// [`FullBatchBuild::manifest_hash`].
+#[derive(Clone, Copy, Debug)]
+pub struct HashFrontEnd {
+    pub kind: HashKind,
+    pub k: usize,
+    pub b: usize,
+    /// Position-table rows; must be 0 unless `kind` is poshash.
+    pub bp: usize,
+    pub seed: u64,
+}
+
+impl HashFrontEnd {
+    /// Bytes-fair configuration: pool rows solved so the front-end's total
+    /// parameter bytes match `budget_bytes` (normally
+    /// [`coded_frontend_bytes`] at the same scales). Multihash pays the
+    /// `(n, k)` importance weights out of the budget first; poshash
+    /// reserves an `n/8`-row position table (capped at 256 rows).
+    pub fn budget_matched(
+        kind: HashKind,
+        n: usize,
+        d_e: usize,
+        k: usize,
+        seed: u64,
+        budget_bytes: usize,
+    ) -> HashFrontEnd {
+        let (bp, fixed) = match kind {
+            HashKind::Multi => (0, n * k),
+            HashKind::Bloom => (0, 0),
+            HashKind::Pos => {
+                let bp = (n / 8).clamp(1, 256);
+                (bp, bp * d_e)
+            }
+        };
+        let b = hemb_rows_for_budget(budget_bytes, d_e, fixed);
+        HashFrontEnd { kind, k, b, bp, seed }
+    }
+
+    /// Front-end parameter list (replaces `embed.table` in the NC builds).
+    /// The importance weights start at 1 so multihash begins as the plain
+    /// probe sum; both tables init like the NC table.
+    pub fn param_specs(&self, n: usize, d_e: usize) -> Vec<ParamSpec> {
+        let mut specs = vec![param(
+            "hemb.pool".to_string(),
+            vec![self.b, d_e],
+            InitKind::Normal { std: 0.1 },
+            true,
+        )];
+        if self.kind == HashKind::Multi {
+            specs.push(param("hemb.imp".to_string(), vec![n, self.k], InitKind::Ones, true));
+        }
+        if self.kind == HashKind::Pos {
+            specs.push(param(
+                "hemb.pos".to_string(),
+                vec![self.bp, d_e],
+                InitKind::Normal { std: 0.1 },
+                true,
+            ));
+        }
+        specs
+    }
+
+    /// f32 element count of [`Self::param_specs`].
+    pub fn f32s(&self, n: usize, d_e: usize) -> usize {
+        self.param_specs(n, d_e).iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    /// Rewrite an NC-shaped manifest in place: swap `embed.table` (always
+    /// params[0]) for this front-end's parameters and record the
+    /// `front_end` / `hemb_*` / `hash_seed` hyper keys the resolver reads.
+    fn apply(&self, m: &mut Manifest, n: usize, d_e: usize) {
+        debug_assert_eq!(m.params[0].name, "embed.table");
+        let mut params = self.param_specs(n, d_e);
+        params.extend(m.params.split_off(1));
+        m.params = params;
+        if let Json::Obj(o) = &mut m.hyper {
+            o.insert("front_end".to_string(), Json::str(self.kind.as_str()));
+            o.insert("hemb_k".to_string(), Json::num(self.k as f64));
+            o.insert("hemb_b".to_string(), Json::num(self.b as f64));
+            o.insert("hemb_bp".to_string(), Json::num(self.bp as f64));
+            o.insert("hash_seed".to_string(), Json::num(self.seed as f64));
+        }
+    }
 }
 
 /// One §5.1 reconstruction-decoder build.
@@ -274,6 +410,25 @@ impl SageMbBuild {
         };
         Manifest { name: self.name.clone(), params, train_inputs, pred_inputs, pred_output, hyper }
     }
+
+    /// Manifest with a hash-embedding front-end in place of the NC table.
+    /// Requires `coded = false` (the input tensors are node ids, exactly
+    /// the NC shapes); the front-end params replace `embed.table` and the
+    /// `front_end`/`hemb_*`/`hash_seed` hyper keys are recorded.
+    pub fn manifest_hash(&self, fe: &HashFrontEnd) -> Manifest {
+        assert!(!self.coded, "hash front-ends build on the NC (ids-input) shape");
+        let mut m = self.manifest();
+        fe.apply(&mut m, self.n, self.d_e);
+        m
+    }
+
+    /// The §3.2 coded front-end's byte budget at this build's scales —
+    /// what [`HashFrontEnd::budget_matched`] sizes against.
+    pub fn coded_budget_bytes(&self) -> usize {
+        coded_frontend_bytes(
+            self.n, self.c, self.m, self.d_c, self.d_m, self.d_e, self.l, self.light,
+        )
+    }
 }
 
 /// One §5.2 full-batch build (Table-1 cell): GCN / SGC / GIN / SAGE over
@@ -367,6 +522,24 @@ impl FullBatchBuild {
             hyper: Json::obj(hyper),
         }
     }
+
+    /// Manifest with a hash-embedding front-end in place of the NC table
+    /// (requires `coded = false`; full-batch hash models take no input
+    /// tensors for the front-end — ids are implicitly `0..n`).
+    pub fn manifest_hash(&self, fe: &HashFrontEnd) -> Manifest {
+        assert!(!self.coded, "hash front-ends build on the NC (no-codes) shape");
+        let mut m = self.manifest();
+        fe.apply(&mut m, self.n, self.d_e);
+        m
+    }
+
+    /// The §3.2 coded front-end's byte budget at this build's scales —
+    /// what [`HashFrontEnd::budget_matched`] sizes against.
+    pub fn coded_budget_bytes(&self) -> usize {
+        coded_frontend_bytes(
+            self.n, self.c, self.m, self.d_c, self.d_m, self.d_e, self.l, self.light,
+        )
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -443,8 +616,22 @@ fn fb_build(gnn: GnnKind, coded: bool, link: bool) -> FullBatchBuild {
     }
 }
 
-/// Parse a `node_fb_{gnn}_{coded|nc}` / `link_fb_{gnn}_{coded|nc}` name.
-fn parse_fb_name(name: &str) -> Option<FullBatchBuild> {
+/// Default hash-front-end knobs for registry builds: 2 probes per id
+/// (the Svenstrup setting) and a fixed hash-stream seed, both overridable
+/// by custom builds via [`HashFrontEnd`] directly.
+pub const HASH_FE_K: usize = 2;
+pub const HASH_FE_SEED: u64 = 17;
+
+/// Registry-default hash front-end for an `n`-node build: bytes-fair vs
+/// the coded front-end at the build's own scales.
+fn registry_hash_fe(kind: HashKind, n: usize, d_e: usize, budget: usize) -> HashFrontEnd {
+    HashFrontEnd::budget_matched(kind, n, d_e, HASH_FE_K, HASH_FE_SEED, budget)
+}
+
+/// Parse a `node_fb_{gnn}_{tag}` / `link_fb_{gnn}_{tag}` name, where
+/// `tag` is `coded`, `nc`, or a hash front-end kind (`multihash` /
+/// `bloom` / `poshash`).
+fn parse_fb_name(name: &str) -> Option<Manifest> {
     let (link, rest) = if let Some(r) = name.strip_prefix("node_fb_") {
         (false, r)
     } else if let Some(r) = name.strip_prefix("link_fb_") {
@@ -453,13 +640,18 @@ fn parse_fb_name(name: &str) -> Option<FullBatchBuild> {
         return None;
     };
     let (gnn_s, tag) = rest.rsplit_once('_')?;
-    let coded = match tag {
-        "coded" => true,
-        "nc" => false,
-        _ => return None,
-    };
     let gnn = GnnKind::parse(gnn_s).ok()?;
-    Some(fb_build(gnn, coded, link))
+    match tag {
+        "coded" => Some(fb_build(gnn, true, link).manifest()),
+        "nc" => Some(fb_build(gnn, false, link).manifest()),
+        _ => {
+            let kind = HashKind::parse(tag)?;
+            let mut b = fb_build(gnn, false, link);
+            b.name = name.to_string();
+            let fe = registry_hash_fe(kind, b.n, b.d_e, b.coded_budget_bytes());
+            Some(b.manifest_hash(&fe))
+        }
+    }
 }
 
 fn recon_build(name: &str, c: usize, m: usize, light: bool) -> ReconBuild {
@@ -483,6 +675,10 @@ pub fn builtin_names() -> &'static [&'static str] {
         "sage_mb_coded",
         "sage_mb_nc",
         "sage_mb_link",
+        // Hash-embedding front-ends, bytes-fair vs sage_mb_coded.
+        "sage_mb_multihash",
+        "sage_mb_bloom",
+        "sage_mb_poshash",
         "merchant",
         "recon_c2_m128",
         "recon_c4_m64",
@@ -498,6 +694,11 @@ pub fn builtin_names() -> &'static [&'static str] {
         "node_fb_gin_nc",
         "node_fb_sage_coded",
         "node_fb_sage_nc",
+        // Hash front-ends run the same grid (any gnn × {node, link});
+        // the GIN rows are the listed representatives.
+        "node_fb_gin_multihash",
+        "node_fb_gin_bloom",
+        "node_fb_gin_poshash",
         "link_fb_gcn_coded",
         "link_fb_gcn_nc",
         "link_fb_sgc_coded",
@@ -511,8 +712,15 @@ pub fn builtin_names() -> &'static [&'static str] {
 
 /// Synthesize the manifest for a registry name (`None` if unknown).
 pub fn builtin(name: &str) -> Option<Manifest> {
-    if let Some(fb) = parse_fb_name(name) {
-        return Some(fb.manifest());
+    if let Some(m) = parse_fb_name(name) {
+        return Some(m);
+    }
+    if let Some(tag) = name.strip_prefix("sage_mb_") {
+        if let Some(kind) = HashKind::parse(tag) {
+            let b = mb_build(name, false, false);
+            let fe = registry_hash_fe(kind, b.n, b.d_e, b.coded_budget_bytes());
+            return Some(b.manifest_hash(&fe));
+        }
     }
     match name {
         "sage_mb_coded" => Some(mb_build(name, true, false).manifest()),
@@ -585,6 +793,56 @@ mod tests {
         }
         assert!(builtin("node_fb_gat_coded").is_none(), "unknown gnn kinds stay unknown");
         assert!(builtin("node_fb_gcn").is_none(), "tag is required");
+    }
+
+    #[test]
+    fn hash_front_end_manifests_are_bytes_fair() {
+        let budget = coded_frontend_bytes(10_000, 16, 32, 128, 128, 64, 3, false);
+        for (name, extra) in [
+            ("sage_mb_multihash", Some("hemb.imp")),
+            ("sage_mb_bloom", None),
+            ("sage_mb_poshash", Some("hemb.pos")),
+        ] {
+            let m = builtin(name).unwrap();
+            let tag = name.strip_prefix("sage_mb_").unwrap();
+            assert_eq!(m.hyper_str("front_end").unwrap(), tag);
+            assert!(!m.hyper_bool("coded").unwrap(), "{name} must not claim codes");
+            assert_eq!(m.hyper_usize("hemb_k").unwrap(), HASH_FE_K);
+            assert_eq!(m.hyper_usize("hash_seed").unwrap() as u64, HASH_FE_SEED);
+            assert_eq!(m.params[0].name, "hemb.pool");
+            match extra {
+                Some(p) => assert_eq!(m.params[1].name, p, "{name}"),
+                None => assert!(m.params[1].name.starts_with("gnn."), "{name}"),
+            }
+            // Input tensors are the NC id shapes, not code matrices.
+            assert_eq!(m.train_inputs[0].shape, vec![256]);
+            // Bytes-fair: front-end parameter bytes fill the coded budget
+            // to within one pool row.
+            let fe_bytes: usize = 4 * m
+                .params
+                .iter()
+                .filter(|p| p.name.starts_with("hemb."))
+                .map(|p| p.shape.iter().product::<usize>())
+                .sum::<usize>();
+            assert!(fe_bytes <= budget, "{name}: {fe_bytes} > {budget}");
+            assert!(fe_bytes + 4 * 65 > budget, "{name}: {fe_bytes} undershoots {budget}");
+            // The resolver accepts it (registry → native model contract).
+            assert!(super::super::NativeModel::from_manifest(&m).is_ok(), "{name}");
+        }
+        // The full-batch grid takes the same tags for every gnn × head.
+        for name in ["node_fb_gin_multihash", "node_fb_sage_bloom", "link_fb_gcn_poshash"] {
+            let m = builtin(name).unwrap();
+            assert_eq!(m.name, name);
+            assert!(m.params.iter().any(|p| p.name == "hemb.pool"), "{name}");
+            assert!(
+                !m.train_inputs.iter().any(|t| t.name == "codes"),
+                "{name} must not take a codes tensor"
+            );
+        }
+        assert!(builtin("node_fb_gin_nope").is_none());
+        for name in builtin_names() {
+            assert!(builtin(name).is_some(), "{name} must synthesize");
+        }
     }
 
     #[test]

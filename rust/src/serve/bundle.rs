@@ -35,6 +35,7 @@
 //! | `QUANT`    | per int8 param, per row: f32 scale, f32 min             |
 //! | `CODESMET` | u64 ×4: c, m, n, n_bits (coded models only)             |
 //! | `CODEWORD` | packed `BitMatrix` u64 words (coded models only)        |
+//! | `POSMAP`   | u32 per node: degree-rank position bucket (poshash only)|
 //! | `EDGES`    | flat u32 pairs u₀ v₀ u₁ v₁ …                            |
 //! | `META`     | u64: n_nodes                                            |
 //!
@@ -111,6 +112,7 @@ const SEC_PARAMI8: [u8; 8] = *b"PARAMI8\0";
 const SEC_QUANT: [u8; 8] = *b"QUANT\0\0\0";
 const SEC_CODESMET: [u8; 8] = *b"CODESMET";
 const SEC_CODEWORD: [u8; 8] = *b"CODEWORD";
+const SEC_POSMAP: [u8; 8] = *b"POSMAP\0\0";
 const SEC_EDGES: [u8; 8] = *b"EDGES\0\0\0";
 const SEC_META: [u8; 8] = *b"META\0\0\0\0";
 
@@ -374,6 +376,10 @@ pub struct ServingBundle {
     /// Undirected message-passing edges (empty for the plain decoder,
     /// whose inference needs no graph).
     pub edges: EdgeList,
+    /// Degree-rank position buckets (one u32 per node) for the poshash
+    /// hash-embedding front-end — computed from the *training* graph at
+    /// export so serving never has to re-rank; `None` otherwise.
+    pub pos_map: Option<Vec<u32>>,
     pub n_nodes: usize,
     /// `Some` when this bundle is one node-range shard of a split export
     /// ([`ServingBundle::split_shards`]); `None` for a whole-graph bundle.
@@ -399,12 +405,21 @@ impl ServingBundle {
             params: BundleParams::Owned(store.params.clone()),
             codes,
             edges: EdgeList::Owned(edges),
+            pos_map: None,
             n_nodes,
             shard: None,
             meta: LoadMeta::default(),
         };
         bundle.validate()?;
         Ok(bundle)
+    }
+
+    /// Attach the degree-rank position map a poshash front-end serves
+    /// with (one bucket per node, validated against `n_nodes`).
+    pub fn with_pos_map(mut self, map: Vec<u32>) -> Result<Self> {
+        self.pos_map = Some(map);
+        self.validate()?;
+        Ok(self)
     }
 
     fn validate(&self) -> Result<()> {
@@ -486,6 +501,25 @@ impl ServingBundle {
                     return Err(Error::Shape(format!(
                         "bundle codes are (c={}, m={}), manifest '{}' wants (c={c}, m={m})",
                         codes.coding.c, codes.coding.m, self.manifest.name
+                    )));
+                }
+            }
+        }
+        if let Some(pm) = &self.pos_map {
+            if pm.len() != self.n_nodes {
+                return Err(Error::Shape(format!(
+                    "bundle position map covers {} nodes, expected {}",
+                    pm.len(),
+                    self.n_nodes
+                )));
+            }
+            // When the manifest records the position-table height, every
+            // bucket must be addressable.
+            if let Ok(bp) = self.manifest.hyper_usize("hemb_bp") {
+                if let Some(&bad) = pm.iter().find(|&&b| b as usize >= bp) {
+                    return Err(Error::Shape(format!(
+                        "bundle position map bucket {bad} out of range for a \
+                         {bp}-row position table"
                     )));
                 }
             }
@@ -590,6 +624,12 @@ impl ServingBundle {
                 s.extend_from_slice(&word.to_le_bytes());
             }
         }
+        if let Some(pm) = &self.pos_map {
+            let s = w.section(SEC_POSMAP);
+            for &b in pm {
+                s.extend_from_slice(&b.to_le_bytes());
+            }
+        }
         {
             let s = w.section(SEC_EDGES);
             for (u, v) in self.edges.iter() {
@@ -607,6 +647,13 @@ impl ServingBundle {
     /// the cold-start before/after benches; the CLI export path emits
     /// v2 only.
     pub fn save_legacy_v1(&self, path: &Path) -> Result<()> {
+        if self.pos_map.is_some() {
+            return Err(Error::Config(
+                "the legacy v1 envelope has no POSMAP section — export poshash \
+                 bundles in the default v2 format"
+                    .into(),
+            ));
+        }
         let mut p: Vec<u8> = Vec::new();
         let magic = match &self.shard {
             Some(s) => {
@@ -858,6 +905,14 @@ impl ServingBundle {
             None
         };
 
+        let pos_map = if sf.has(SEC_POSMAP) {
+            // Owned: tiny (one u32 per node) and consumed as an
+            // `Arc<Vec<u32>>` by the model binding anyway.
+            Some(sf.u32s(SEC_POSMAP)?.as_slice().to_vec())
+        } else {
+            None
+        };
+
         let edge_view = sf.u32s(SEC_EDGES)?;
         if edge_view.len() % 2 != 0 {
             return Err(Error::Config(format!(
@@ -880,6 +935,7 @@ impl ServingBundle {
             params,
             codes,
             edges,
+            pos_map,
             n_nodes,
             shard,
             meta: LoadMeta {
@@ -1002,6 +1058,7 @@ impl ServingBundle {
             params: BundleParams::Owned(params),
             codes,
             edges: EdgeList::Owned(edges),
+            pos_map: None,
             n_nodes,
             shard,
             meta: LoadMeta::default(),
@@ -1085,6 +1142,10 @@ impl ServingBundle {
                 params: self.params.clone(),
                 codes,
                 edges,
+                // Position buckets are a per-node lookup like parameters:
+                // replicated so every shard embeds its owned ids
+                // bit-identically to the unsharded session.
+                pos_map: self.pos_map.clone(),
                 n_nodes: n,
                 shard: Some(ShardInfo {
                     lo,
@@ -1299,6 +1360,25 @@ mod tests {
         back.save(&path2).unwrap();
         let again = ServingBundle::load(&path2).unwrap();
         assert_eq!(again.params, back.params);
+    }
+
+    #[test]
+    fn pos_map_roundtrips_validates_and_replicates_to_shards() {
+        let b = tiny_bundle();
+        assert!(b.clone().with_pos_map(vec![0; 5]).is_err(), "wrong length must be rejected");
+        let b = b.with_pos_map((0..12u32).map(|i| i % 3).collect()).unwrap();
+        let dir = std::env::temp_dir().join("hashgnn_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bundle_posmap.bin");
+        b.save(&path).unwrap();
+        let back = ServingBundle::load(&path).unwrap();
+        assert_eq!(back.pos_map, b.pos_map);
+        // The v1 envelope has no POSMAP section and must refuse.
+        assert!(b.save_legacy_v1(&dir.join("bundle_posmap_v1.bin")).is_err());
+        // Shards replicate the map (per-node lookup, like params).
+        for s in b.split_shards(3).unwrap() {
+            assert_eq!(s.pos_map, b.pos_map);
+        }
     }
 
     #[test]

@@ -539,6 +539,18 @@ impl ServeSession {
             let adj = Arc::new(g.adj().normalized(bundle.manifest.hyper_str("adj")?)?);
             model.bind_adjacency(adj)?;
         }
+        if model.needs_pos_map() {
+            // The poshash front-end serves with the exported degree-rank
+            // buckets — never recomputed from the serving edge list, which
+            // may be a shard slice with different degrees.
+            let pm = bundle.pos_map.clone().ok_or_else(|| {
+                Error::Config(format!(
+                    "bundle for poshash model '{}' carries no POSMAP section — re-export it",
+                    bundle.manifest.name
+                ))
+            })?;
+            model.bind_pos_map(Arc::new(pm))?;
+        }
         let fb_batch = if model.is_fullbatch() && model.coded() {
             let codes = bundle.codes.as_ref().expect("checked above");
             let ids: Vec<u32> = (0..bundle.n_nodes as u32).collect();

@@ -1,0 +1,217 @@
+//! Accuracy-vs-bytes frontier over the compressed embedding front-ends.
+//!
+//! Trains the same full-batch GNN on the same Table-1 SBM analog once per
+//! front-end — the paper's LSH coding (`hash`), the uncompressed `nc`
+//! baseline, and the three hash-embedding competitors (`multihash`,
+//! `bloom`, `poshash`) — at **matched byte budgets** (every hash
+//! front-end is sized bytes-fair against the §3.2 coded front-end, see
+//! [`crate::runtime::native::spec::HashFrontEnd::budget_matched`]). Emits
+//! one `(coder, bytes, acc)` row per front-end: the accuracy-per-byte
+//! frontier the `hashgnn frontier` verb writes as JSON.
+
+use crate::cfg::GnnKind;
+use crate::runtime::native::{front_end_name, spec};
+use crate::runtime::{Manifest, Model};
+use crate::ser::Json;
+use crate::tasks::nodeclf::{self, Frontend, RunOpts};
+use crate::tasks::T1Dataset;
+use crate::{Error, Result};
+
+/// One frontier sweep: which coders, which GNN, which Table-1 analog,
+/// and the shared training protocol.
+#[derive(Clone, Debug)]
+pub struct FrontierOpts {
+    /// Front-ends to sweep, in output order.
+    pub coders: Vec<Frontend>,
+    pub gnn: GnnKind,
+    pub dataset: T1Dataset,
+    pub run: RunOpts,
+    pub threads: usize,
+}
+
+impl Default for FrontierOpts {
+    fn default() -> Self {
+        Self {
+            coders: Frontend::frontier().to_vec(),
+            gnn: GnnKind::Gin,
+            dataset: T1Dataset::Arxiv,
+            run: RunOpts::default(),
+            threads: 1,
+        }
+    }
+}
+
+impl FrontierOpts {
+    /// CI smoke configuration: two coders (one table-based, one hashed),
+    /// a short epoch budget, everything else at defaults.
+    pub fn quick() -> Self {
+        Self {
+            coders: vec![Frontend::Nc, Frontend::Bloom],
+            run: RunOpts { epochs: 10, eval_every: 5, seed: 7 },
+            ..Self::default()
+        }
+    }
+}
+
+/// One frontier point: a trained front-end's byte cost and accuracy.
+#[derive(Clone, Debug)]
+pub struct FrontierRow {
+    /// CLI coder label (`hash` / `nc` / `multihash` / …).
+    pub coder: String,
+    /// The manifest's `front_end` hyper (`coded` for hash/random).
+    pub front_end: String,
+    /// Front-end bytes: 4·(front-end f32 params) + packed code bytes.
+    pub bytes: usize,
+    /// Test accuracy at the best-validation epoch.
+    pub acc: f64,
+    /// Best validation accuracy.
+    pub val: f64,
+    /// Final training loss.
+    pub loss: f32,
+}
+
+/// The CLI-facing `--coders` label for a frontend (inverse of
+/// [`Frontend::parse_coder`]'s canonical spellings).
+pub fn coder_label(fe: Frontend) -> &'static str {
+    match fe {
+        Frontend::Nc => "nc",
+        Frontend::Rand => "random",
+        Frontend::Hash => "hash",
+        Frontend::MultiHash => "multihash",
+        Frontend::Bloom => "bloom",
+        Frontend::PosHash => "poshash",
+    }
+}
+
+/// Parse a comma-separated `--coders` list (e.g. `hash,nc,bloom`).
+pub fn parse_coders(s: &str) -> Result<Vec<Frontend>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            Frontend::parse_coder(t).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown coder '{t}' (expected nc / hash / random / multihash / bloom / poshash)"
+                ))
+            })
+        })
+        .collect()
+}
+
+/// Bytes a trained model's feature front-end costs at serving time:
+/// 4 bytes per front-end f32 parameter (`embed.table`, `dec.*`,
+/// `hemb.*`), plus the bit-packed `(n, m)` code table for the coded
+/// front-end. GNN/head parameters are excluded — they are identical
+/// across the sweep.
+pub fn frontend_bytes(manifest: &Manifest) -> Result<usize> {
+    let fe = front_end_name(manifest)?;
+    let f32s: usize = manifest
+        .params
+        .iter()
+        .filter(|p| {
+            p.name == "embed.table" || p.name.starts_with("dec.") || p.name.starts_with("hemb.")
+        })
+        .map(|p| p.n_elements())
+        .sum();
+    let mut bytes = 4 * f32s;
+    if fe == "coded" {
+        let n = manifest.hyper_usize("n")?;
+        let m = manifest.hyper_usize("m")?;
+        let c = manifest.hyper_usize("c")?;
+        let code_bits = (usize::BITS - (c.max(2) - 1).leading_zeros()) as usize;
+        bytes += (n * m * code_bits).div_ceil(8);
+    }
+    Ok(bytes)
+}
+
+/// Run the sweep: one full-batch training run per coder on a shared
+/// graph, returning rows in the requested coder order.
+pub fn run_frontier(opts: &FrontierOpts) -> Result<Vec<FrontierRow>> {
+    if opts.coders.is_empty() {
+        return Err(Error::Config("frontier sweep needs at least one coder".into()));
+    }
+    if opts.dataset.is_linkpred() {
+        return Err(Error::Config(format!(
+            "frontier sweeps the node-classification analogs; '{}' is a link-prediction graph",
+            opts.dataset.name()
+        )));
+    }
+    let graph = opts.dataset.generate(opts.run.seed)?;
+    let mut rows = Vec::with_capacity(opts.coders.len());
+    for &fe in &opts.coders {
+        let name = format!("node_fb_{}_{}", opts.gnn.as_str(), fe.artifact_tag());
+        let manifest = spec::builtin(&name)
+            .ok_or_else(|| Error::Config(format!("no builtin model '{name}'")))?;
+        let bytes = frontend_bytes(&manifest)?;
+        let model = Model::native(manifest, opts.threads)?;
+        let (out, _store) = nodeclf::run_fullbatch_model(&model, fe, &graph, opts.run)?;
+        rows.push(FrontierRow {
+            coder: coder_label(fe).to_string(),
+            front_end: fe.artifact_tag().to_string(),
+            bytes,
+            acc: out.test,
+            val: out.val,
+            loss: out.final_loss,
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize a sweep as the `frontier` JSON artifact: run metadata plus
+/// one row object per coder.
+pub fn rows_to_json(rows: &[FrontierRow], opts: &FrontierOpts) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("frontier")),
+        ("dataset", Json::str(opts.dataset.name())),
+        ("gnn", Json::str(opts.gnn.as_str())),
+        ("epochs", Json::num(opts.run.epochs as f64)),
+        ("seed", Json::num(opts.run.seed as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("coder", Json::str(r.coder.as_str())),
+                            ("front_end", Json::str(r.front_end.as_str())),
+                            ("bytes", Json::num(r.bytes as f64)),
+                            ("acc", Json::num(r.acc)),
+                            ("val", Json::num(r.val)),
+                            ("loss", Json::num(r.loss as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_coders_accepts_the_full_frontier_list() {
+        let coders = parse_coders("hash, nc,multihash,bloom,poshash").unwrap();
+        assert_eq!(coders.len(), 5);
+        assert_eq!(coders[0], Frontend::Hash);
+        assert_eq!(coders[4], Frontend::PosHash);
+        assert!(parse_coders("hash,quantum").is_err());
+        assert!(parse_coders("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn frontend_bytes_are_budget_matched_across_the_family() {
+        // The coded front-end sets the budget; every hash front-end must
+        // land at or (by at most one pool row) under it. NC is just the
+        // raw `n·d_e` table.
+        let coded = frontend_bytes(&spec::builtin("node_fb_gin_coded").unwrap()).unwrap();
+        let nc = frontend_bytes(&spec::builtin("node_fb_gin_nc").unwrap()).unwrap();
+        assert_eq!(nc, 4 * 1024 * 64);
+        for tag in ["multihash", "bloom", "poshash"] {
+            let b = frontend_bytes(&spec::builtin(&format!("node_fb_gin_{tag}")).unwrap()).unwrap();
+            assert!(b <= coded, "{tag}: {b} > coded budget {coded}");
+            assert!(b > coded / 2, "{tag}: {b} wastes more than half the budget {coded}");
+        }
+    }
+}

@@ -25,7 +25,7 @@ use crate::params::ParamStore;
 use crate::rng::{derive_stream_seed, Rng, Xoshiro256pp};
 use crate::runtime::native::par;
 use crate::runtime::{Engine, Model, Tensor};
-use crate::tasks::nodeclf::{adj_input, all_codes_tensor, AdjInput, Frontend, RunOpts};
+use crate::tasks::nodeclf::{adj_input, all_codes_tensor, pos_map_for, AdjInput, Frontend, RunOpts};
 use crate::tasks::sage;
 use crate::train::{self, BatchSource, PipeCfg, TrainLog, TrainOpts};
 use crate::{Error, Result};
@@ -128,6 +128,11 @@ pub fn run_fullbatch_model(
     match &adj {
         AdjInput::Csr(a) => model.bind_adjacency(a.clone())?,
         AdjInput::Dense(t) => base.push(t.clone()),
+    }
+    if model.needs_pos_map() {
+        // Degree ranks come from the message-passing (training-edge)
+        // graph — the same adjacency the model propagates over.
+        model.bind_pos_map(pos_map_for(&model.manifest, &train_graph)?)?;
     }
 
     let mut best = LinkOutcome { val_hits: f64::MIN, test_hits: 0.0, final_loss: f32::NAN };

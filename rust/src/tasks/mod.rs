@@ -8,12 +8,14 @@
 //! | [`nodeclf`]    | Table 1 node-classification rows |
 //! | [`linkpred`]   | Table 1 link-prediction rows |
 //! | [`sage`]       | minibatch GraphSAGE pipeline (§4, e2e example) |
+//! | [`frontier`]   | accuracy-vs-bytes sweep over the front-end family |
 //! | [`merchant`]   | Table 3 (§5.3 merchant-category identification) |
 //! | [`memory`]     | Tables 2, 4 and 6 (memory accounting) |
 //! | [`serve`]      | serving-bundle export (§1/§4 deployment payoff) |
 
 pub mod coding;
 pub mod collisions;
+pub mod frontier;
 pub mod linkpred;
 pub mod memory;
 pub mod merchant;

@@ -25,7 +25,8 @@ use crate::tasks::coding::{make_codes, Aux};
 use crate::train;
 use crate::{Error, Result};
 
-/// Which feature front-end (Table 1 columns).
+/// Which feature front-end (Table 1 columns, plus the hash-embedding
+/// family the accuracy-vs-bytes frontier compares against).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Frontend {
     /// "NC": explicit trainable embedding table (no compression).
@@ -34,6 +35,13 @@ pub enum Frontend {
     Rand,
     /// "Hash": the paper's LSH coding over the adjacency matrix.
     Hash,
+    /// Svenstrup-style multi-hash pool + learned importance weights.
+    MultiHash,
+    /// Bloom-filter-style multi-hash bucket sum + ReLU.
+    Bloom,
+    /// Kalantzi & Karypis position-based hash embeddings (degree-rank
+    /// bucket map bound to the model).
+    PosHash,
 }
 
 impl Frontend {
@@ -42,27 +50,67 @@ impl Frontend {
             Frontend::Nc => "NC",
             Frontend::Rand => "Rand",
             Frontend::Hash => "Hash",
+            Frontend::MultiHash => "MultiHash",
+            Frontend::Bloom => "Bloom",
+            Frontend::PosHash => "PosHash",
         }
     }
 
+    /// The original Table-1 columns (the paper's own grid).
     pub fn all() -> [Frontend; 3] {
         [Frontend::Nc, Frontend::Rand, Frontend::Hash]
     }
 
+    /// The frontier sweep's coder set: the paper's LSH front-end, the
+    /// uncompressed baseline, and the three hash-embedding competitors.
+    pub fn frontier() -> [Frontend; 5] {
+        [Frontend::Hash, Frontend::Nc, Frontend::MultiHash, Frontend::Bloom, Frontend::PosHash]
+    }
+
+    /// The registry-name tag (`node_fb_{gnn}_{tag}`) and `front_end`
+    /// hyper value this frontend trains.
     pub fn artifact_tag(&self) -> &'static str {
         match self {
             Frontend::Nc => "nc",
-            _ => "coded",
+            Frontend::Rand | Frontend::Hash => "coded",
+            Frontend::MultiHash => "multihash",
+            Frontend::Bloom => "bloom",
+            Frontend::PosHash => "poshash",
+        }
+    }
+
+    /// Parse a `--coders` entry (`hash`/`random`/`nc`/`multihash`/…).
+    pub fn parse_coder(s: &str) -> Option<Frontend> {
+        match s {
+            "nc" | "none" => Some(Frontend::Nc),
+            "hash" | "lsh" => Some(Frontend::Hash),
+            "random" | "rand" => Some(Frontend::Rand),
+            "multihash" => Some(Frontend::MultiHash),
+            "bloom" => Some(Frontend::Bloom),
+            "poshash" => Some(Frontend::PosHash),
+            _ => None,
         }
     }
 
     fn coder(&self) -> Option<Coder> {
         match self {
-            Frontend::Nc => None,
             Frontend::Rand => Some(Coder::Random),
             Frontend::Hash => Some(Coder::Hash),
+            _ => None,
         }
     }
+}
+
+/// Degree-rank position map for a poshash model over this graph (bucket
+/// count from the manifest's `hemb_bp`), ready for
+/// [`crate::runtime::Model::bind_pos_map`].
+pub fn pos_map_for(
+    manifest: &crate::runtime::Manifest,
+    graph: &Graph,
+) -> Result<Arc<Vec<u32>>> {
+    let bp = manifest.hyper_usize("hemb_bp")?;
+    let degrees: Vec<usize> = (0..graph.n_nodes()).map(|v| graph.degree(v)).collect();
+    Ok(Arc::new(crate::runtime::native::hashemb::degree_pos_map(&degrees, bp)))
 }
 
 /// Run options for one Table-1 cell.
@@ -174,12 +222,14 @@ pub fn run_fullbatch_model(
             graph.n_nodes()
         )));
     }
-    if model.manifest.hyper_bool("coded")? != (frontend != Frontend::Nc) {
+    let model_fe = crate::runtime::native::front_end_name(&model.manifest)?;
+    if model_fe != frontend.artifact_tag() {
         return Err(Error::Config(format!(
-            "frontend {} does not match model '{}' (coded = {})",
+            "frontend {} (front_end '{}') does not match model '{}' (front_end '{}')",
             frontend.name(),
+            frontend.artifact_tag(),
             model.manifest.name,
-            model.manifest.hyper_bool("coded")?
+            model_fe
         )));
     }
     let labels = graph
@@ -205,6 +255,9 @@ pub fn run_fullbatch_model(
     match &adj {
         AdjInput::Csr(a) => model.bind_adjacency(a.clone())?,
         AdjInput::Dense(t) => batch.push(t.clone()),
+    }
+    if model.needs_pos_map() {
+        model.bind_pos_map(pos_map_for(&model.manifest, graph)?)?;
     }
     batch.push(labels_t);
     batch.push(mask_t);

@@ -136,7 +136,23 @@ pub fn export_bundle(
             return Err(Error::Config("bundle would carry neither graph nor codes".into()))
         }
     };
-    ServingBundle::new(manifest.clone(), store, codes, edges, n_nodes)
+    let mut bundle = ServingBundle::new(manifest.clone(), store, codes, edges, n_nodes)?;
+    if task != "recon" && crate::runtime::native::front_end_name(manifest)? == "poshash" {
+        // Freeze the degree-rank position map from the same graph
+        // training ranked: the train-edge graph for link prediction (the
+        // bound message-passing adjacency), the full graph otherwise.
+        let g = graph.as_ref().ok_or_else(|| {
+            Error::Config("poshash export needs a training graph to rank degrees".into())
+        })?;
+        let map = if task == "linkpred_fullbatch" {
+            let train_graph = Graph::from_edge_iter(g.n_nodes(), bundle.edges.iter())?;
+            crate::tasks::nodeclf::pos_map_for(manifest, &train_graph)?
+        } else {
+            crate::tasks::nodeclf::pos_map_for(manifest, g)?
+        };
+        bundle = bundle.with_pos_map(map.as_ref().clone())?;
+    }
+    Ok(bundle)
 }
 
 /// Export and write to disk; returns the bundle for reporting.

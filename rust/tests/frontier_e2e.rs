@@ -1,0 +1,89 @@
+//! End-to-end frontier sweep: train every front-end in the family —
+//! coded (`hash`), uncompressed (`nc`), and the three hash-embedding
+//! competitors — on the same Table-1 SBM analog at matched byte budgets,
+//! and check the emitted accuracy-vs-bytes frontier is complete.
+
+use hashgnn::ser;
+use hashgnn::tasks::frontier::{self, FrontierOpts};
+use hashgnn::tasks::nodeclf::{Frontend, RunOpts};
+use hashgnn::tasks::T1Dataset;
+
+#[test]
+fn frontier_sweep_is_complete_and_every_coder_learns() {
+    // Products is the strongest-community analog — every front-end that
+    // works at all clears chance comfortably in few epochs.
+    let opts = FrontierOpts {
+        coders: Frontend::frontier().to_vec(),
+        dataset: T1Dataset::Products,
+        run: RunOpts { epochs: 20, eval_every: 5, seed: 7 },
+        threads: 0,
+        ..FrontierOpts::default()
+    };
+    let rows = frontier::run_frontier(&opts).unwrap();
+
+    // Monotone-complete: one row per requested coder, in request order.
+    assert_eq!(rows.len(), opts.coders.len());
+    for (row, &fe) in rows.iter().zip(&opts.coders) {
+        assert_eq!(row.coder, frontier::coder_label(fe));
+        assert_eq!(row.front_end, fe.artifact_tag());
+        assert!(row.bytes > 0, "{}: empty byte cost", row.coder);
+        assert!(row.loss.is_finite(), "{}: non-finite loss", row.coder);
+        // 8-class SBM → chance is 0.125; every front-end must beat it
+        // with margin on the easiest analog.
+        assert!(
+            row.acc > 1.5 / 8.0,
+            "{}: acc {:.3} does not clear 1.5× chance",
+            row.coder,
+            row.acc
+        );
+    }
+
+    // Bytes-fair: no hash front-end exceeds the coded budget it was
+    // matched against, and nc reports the raw table.
+    let coded = rows.iter().find(|r| r.coder == "hash").unwrap().bytes;
+    let nc = rows.iter().find(|r| r.coder == "nc").unwrap().bytes;
+    assert_eq!(nc, 4 * 1024 * 64);
+    for r in rows.iter().filter(|r| r.front_end != "coded" && r.front_end != "nc") {
+        assert!(r.bytes <= coded, "{}: {} > coded budget {coded}", r.coder, r.bytes);
+    }
+
+    // The JSON artifact carries every row with non-empty fields.
+    let json = frontier::rows_to_json(&rows, &opts);
+    let text = ser::to_string_compact(&json);
+    assert!(text.contains("\"bench\":\"frontier\""), "{text}");
+    for fe in Frontend::frontier() {
+        assert!(
+            text.contains(&format!("\"coder\":\"{}\"", frontier::coder_label(fe))),
+            "missing row for {} in {text}",
+            frontier::coder_label(fe)
+        );
+    }
+    assert!(text.contains("\"bytes\":"), "{text}");
+    assert!(text.contains("\"acc\":"), "{text}");
+}
+
+#[test]
+fn frontier_quick_smoke_matches_ci_contract() {
+    // The `--quick` config CI runs: two coders, short budget. Keep this
+    // test a faithful mirror of scripts/ci wiring.
+    let mut opts = FrontierOpts::quick();
+    opts.threads = 0;
+    assert_eq!(opts.coders, vec![Frontend::Nc, Frontend::Bloom]);
+    let rows = frontier::run_frontier(&opts).unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert!(row.acc > 1.0 / 8.0, "{}: quick run below chance", row.coder);
+        assert!(row.bytes > 0);
+    }
+}
+
+#[test]
+fn frontier_rejects_empty_and_linkpred_configs() {
+    let mut opts = FrontierOpts::default();
+    opts.coders.clear();
+    assert!(frontier::run_frontier(&opts).is_err());
+    let mut opts = FrontierOpts::quick();
+    opts.dataset = T1Dataset::Collab;
+    let err = frontier::run_frontier(&opts).unwrap_err();
+    assert!(format!("{err}").contains("link-prediction"), "{err}");
+}

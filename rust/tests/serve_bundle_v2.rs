@@ -21,7 +21,8 @@ use hashgnn::cfg::{Coder, CodingCfg, GnnKind, OptimCfg};
 use hashgnn::codes::random_codes;
 use hashgnn::graph::generate::{sbm, SbmCfg};
 use hashgnn::params::ParamStore;
-use hashgnn::runtime::native::spec::{FullBatchBuild, ReconBuild, SageMbBuild};
+use hashgnn::runtime::native::hashemb::HashKind;
+use hashgnn::runtime::native::spec::{FullBatchBuild, HashFrontEnd, ReconBuild, SageMbBuild};
 use hashgnn::runtime::Model;
 use hashgnn::serve::{Quant, ServeOpts, ServeSession, ServingBundle, ShardRouter};
 use hashgnn::tasks::coding::{make_codes, Aux};
@@ -240,6 +241,202 @@ fn sharded_sets_serve_identical_bytes_across_formats() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Hash-embedding front-end bundles (multihash / bloom / poshash)
+// ---------------------------------------------------------------------------
+
+const HASH_KINDS: [HashKind; 3] = [HashKind::Multi, HashKind::Bloom, HashKind::Pos];
+
+fn hash_fe(kind: HashKind) -> HashFrontEnd {
+    HashFrontEnd {
+        kind,
+        k: 2,
+        b: 9,
+        bp: if kind == HashKind::Pos { 4 } else { 0 },
+        seed: 77,
+    }
+}
+
+/// Minibatch SAGE bundle on a hash front-end: no codes, ids-input
+/// encoder; poshash freezes the training graph's degree-rank map.
+fn hash_mb_bundle(kind: HashKind) -> ServingBundle {
+    let build = SageMbBuild {
+        name: format!("v2_mb_{}", kind.as_str()),
+        coded: false,
+        link: false,
+        n: 60,
+        n_classes: 3,
+        d_e: 4,
+        hidden: 5,
+        batch: 4,
+        k1: 2,
+        k2: 2,
+        c: 4,
+        m: 3,
+        d_c: 4,
+        d_m: 6,
+        l: 2,
+        light: false,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest_hash(&hash_fe(kind));
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let store = ParamStore::init(&manifest, 13);
+    let bundle =
+        ServingBundle::new(manifest.clone(), &store, None, graph.undirected_edges(), 60).unwrap();
+    if kind == HashKind::Pos {
+        let map = nodeclf::pos_map_for(&manifest, &graph).unwrap();
+        bundle.with_pos_map(map.as_ref().clone()).unwrap()
+    } else {
+        bundle
+    }
+}
+
+/// Full-batch GIN bundle on a hash front-end (exercises the empty
+/// fb_batch + bound-CSR serving path).
+fn hash_fb_bundle(kind: HashKind) -> ServingBundle {
+    let build = FullBatchBuild {
+        name: format!("v2_fb_{}", kind.as_str()),
+        gnn: GnnKind::Gin,
+        coded: false,
+        link: false,
+        n: 60,
+        n_classes: 4,
+        d_e: 6,
+        hidden: 8,
+        c: 4,
+        m: 5,
+        d_c: 6,
+        d_m: 7,
+        l: 2,
+        light: false,
+        e_train: 32,
+        e_pred: 48,
+        optim: OptimCfg::adamw_gnn(),
+    };
+    let manifest = build.manifest_hash(&hash_fe(kind));
+    let graph = sbm(SbmCfg::new(60, 4, 8.0, 2.0), 3).unwrap();
+    let store = ParamStore::init(&manifest, 21);
+    let bundle =
+        ServingBundle::new(manifest.clone(), &store, None, graph.undirected_edges(), 60).unwrap();
+    if kind == HashKind::Pos {
+        let map = nodeclf::pos_map_for(&manifest, &graph).unwrap();
+        bundle.with_pos_map(map.as_ref().clone()).unwrap()
+    } else {
+        bundle
+    }
+}
+
+#[test]
+fn hash_frontend_bundles_serve_identical_bytes_across_load_paths() {
+    let dir = tmp_dir("hashemb");
+    let query = [0u32, 7, 59, 13, 7];
+    let edges = [(7u32, 0u32), (59, 59)];
+    for kind in HASH_KINDS {
+        for (name, bundle) in [
+            (format!("mb_{}", kind.as_str()), hash_mb_bundle(kind)),
+            (format!("fb_{}", kind.as_str()), hash_fb_bundle(kind)),
+        ] {
+            let p = dir.join(format!("{name}.v2.bundle"));
+            bundle.save(&p).unwrap();
+            let loaded = ServingBundle::load(&p).unwrap();
+            assert!(loaded.meta.zero_copy, "{name}: v2 load must be zero-copy");
+            assert_eq!(
+                loaded.pos_map.is_some(),
+                kind == HashKind::Pos,
+                "{name}: POSMAP section presence must track the front-end kind"
+            );
+            for threads in [1usize, 8] {
+                let reference = fingerprint(bundle.clone(), threads, &query, &edges);
+                let from_disk = fingerprint(loaded.clone(), threads, &query, &edges);
+                assert_eq!(
+                    reference, from_disk,
+                    "{name} (threads={threads}): v2 roundtrip changed served bytes"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_hash_frontend_bundles_route_identically() {
+    let dir = tmp_dir("hashemb_shards");
+    let query = [0u32, 7, 59, 13, 7];
+    let edges = [(7u32, 0u32), (59, 59)];
+    for kind in HASH_KINDS {
+        for (name, bundle) in [
+            (format!("mb_{}", kind.as_str()), hash_mb_bundle(kind)),
+            (format!("fb_{}", kind.as_str()), hash_fb_bundle(kind)),
+        ] {
+            let shards = bundle.split_shards(3).unwrap();
+            for s in &shards {
+                assert_eq!(
+                    s.pos_map, bundle.pos_map,
+                    "{name}: shards must replicate the position map verbatim"
+                );
+            }
+            for threads in [1usize, 8] {
+                let mut whole = ServeSession::new(bundle.clone(), opts(threads)).unwrap();
+                let ref_embed: Vec<u32> =
+                    whole.embed_nodes(&query).unwrap().iter().map(|v| v.to_bits()).collect();
+                let ref_scores: Vec<u32> =
+                    whole.score_edges(&edges).unwrap().iter().map(|v| v.to_bits()).collect();
+                let mut loaded = Vec::new();
+                for (i, shard) in shards.iter().enumerate() {
+                    let p = dir.join(format!("{name}.shard{i}"));
+                    shard.save(&p).unwrap();
+                    loaded.push(ServingBundle::load(&p).unwrap());
+                }
+                let mut router = ShardRouter::new(loaded, opts(threads)).unwrap();
+                let got: Vec<u32> =
+                    router.embed_nodes(&query).unwrap().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_embed, got,
+                    "{name} (threads={threads}): routed hash-frontend embeddings diverged"
+                );
+                let got_scores: Vec<u32> =
+                    router.score_edges(&edges).unwrap().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_scores, got_scores,
+                    "{name} (threads={threads}): routed hash-frontend scores diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn poshash_bundle_without_posmap_is_refused_at_session_open() {
+    let manifest = {
+        let b = SageMbBuild {
+            name: "v2_pos_missing".into(),
+            coded: false,
+            link: false,
+            n: 60,
+            n_classes: 3,
+            d_e: 4,
+            hidden: 5,
+            batch: 4,
+            k1: 2,
+            k2: 2,
+            c: 4,
+            m: 3,
+            d_c: 4,
+            d_m: 6,
+            l: 2,
+            light: false,
+            optim: OptimCfg::adamw_gnn(),
+        };
+        b.manifest_hash(&hash_fe(HashKind::Pos))
+    };
+    let graph = sbm(SbmCfg::new(60, 3, 8.0, 2.0), 9).unwrap();
+    let store = ParamStore::init(&manifest, 13);
+    let bundle =
+        ServingBundle::new(manifest, &store, None, graph.undirected_edges(), 60).unwrap();
+    let err = ServeSession::new(bundle, opts(1)).unwrap_err();
+    assert!(format!("{err}").contains("POSMAP"), "{err}");
 }
 
 // ---------------------------------------------------------------------------

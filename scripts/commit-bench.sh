@@ -19,6 +19,14 @@ cd "$(dirname "$0")/.."
 run_id="${1:-}"
 if [[ -z "$run_id" ]]; then
     branch="$(git rev-parse --abbrev-ref HEAD)"
+    # CI checkouts are detached; fall back to the ref GitHub Actions exports.
+    if [[ "$branch" == "HEAD" ]]; then
+        branch="${GITHUB_REF_NAME:-}"
+        if [[ -z "$branch" ]]; then
+            echo "detached HEAD and no GITHUB_REF_NAME — pass a run id" >&2
+            exit 1
+        fi
+    fi
     run_id="$(gh run list --branch "$branch" --status success --limit 1 \
         --json databaseId --jq '.[0].databaseId')"
     if [[ -z "$run_id" || "$run_id" == "null" ]]; then
